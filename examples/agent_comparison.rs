@@ -1,0 +1,58 @@
+//! Agent comparison: every LLM profile and classifier head to head on one
+//! dataset (a compact version of Tables 2/4).
+//!
+//! ```bash
+//! cargo run --release --example agent_comparison [dataset]
+//! ```
+
+use rudder::agent::profiles;
+use rudder::classifier::ALL_KINDS;
+use rudder::eval::harness::offline_training_set;
+use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, Table};
+use rudder::eval::{pass_at_1, Quality};
+use rudder::sim::{build_cluster, run_on, ControllerSpec, RunConfig};
+
+fn main() -> anyhow::Result<()> {
+    let dataset = std::env::args().nth(1).unwrap_or_else(|| "products".into());
+    let cfg0 = RunConfig {
+        dataset: dataset.clone(),
+        scale: 0.25,
+        num_trainers: 4,
+        buffer_pct: 0.25,
+        epochs: 8,
+        ..Default::default()
+    };
+    let (ds, part) = build_cluster(&cfg0)?;
+    println!("agent comparison on {dataset} ({} nodes)\n", ds.csr.num_nodes());
+
+    println!("collecting offline traces for classifier pretraining...");
+    let offline = offline_training_set(Quality::Quick);
+    println!("  {} labelled examples\n", offline.len());
+
+    let mut t = Table::new(
+        &format!("LLM agents vs ML classifiers — {dataset}"),
+        &["controller", "epoch_time", "steady_hits", "comm", "r", "valid%", "pass@1"],
+    );
+    let mut specs: Vec<String> = profiles::ALL
+        .iter()
+        .map(|p| format!("llm:{}", p.name))
+        .collect();
+    specs.extend(ALL_KINDS.iter().map(|k| format!("clf:{}", k.name().to_lowercase())));
+    for spec in specs {
+        let mut cfg = cfg0.clone();
+        cfg.controller = ControllerSpec::parse(&spec)?;
+        let r = run_on(&ds, &part, &cfg, Some(&offline));
+        let p = pass_at_1(&r.per_trainer);
+        t.row(vec![
+            r.label.clone(),
+            fmt_secs(r.mean_epoch_time),
+            fmt_pct(r.steady_hits_pct),
+            fmt_count(r.total_comm_nodes),
+            format!("{:.0}", r.replacement_interval),
+            format!("{:.0}", r.valid_response_pct),
+            if p.trials > 0 { p.format() } else { "-".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

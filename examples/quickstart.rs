@@ -1,0 +1,57 @@
+//! Quickstart: the three §5 variants side by side on one small graph.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, Table};
+use rudder::sim::{build_cluster, run_on, ControllerSpec, RunConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig {
+        dataset: "products".into(),
+        scale: 0.2,
+        num_trainers: 4,
+        buffer_pct: 0.25,
+        epochs: 6,
+        ..Default::default()
+    };
+    println!(
+        "quickstart: {} (scale {}), {} trainers, {:.0}% buffer, {} epochs\n",
+        cfg.dataset, cfg.scale, cfg.num_trainers, cfg.buffer_pct * 100.0, cfg.epochs
+    );
+    let (ds, part) = build_cluster(&cfg)?;
+    println!(
+        "graph: {} nodes / {} edges; edge cut {:.1}%\n",
+        ds.csr.num_nodes(),
+        ds.csr.num_arcs() / 2,
+        part.edge_cut(&ds.csr) as f64 / (ds.csr.num_arcs() / 2) as f64 * 100.0
+    );
+
+    let mut table = Table::new(
+        "DistDGL vs DistDGL+fixed vs DistDGL+Rudder",
+        &["variant", "epoch_time", "steady_hits", "comm_nodes", "comm_reduction"],
+    );
+    let mut base_comm = None;
+    for spec in ["none", "fixed", "llm:gemma3-4b"] {
+        cfg.controller = ControllerSpec::parse(spec)?;
+        let r = run_on(&ds, &part, &cfg, None);
+        let comm = r.total_comm_nodes;
+        let reduction = base_comm
+            .map(|b: u64| format!("{:.1}%", (1.0 - comm as f64 / b as f64) * 100.0))
+            .unwrap_or_else(|| "-".into());
+        if base_comm.is_none() {
+            base_comm = Some(comm);
+        }
+        table.row(vec![
+            r.label.clone(),
+            fmt_secs(r.mean_epoch_time),
+            fmt_pct(r.steady_hits_pct),
+            fmt_count(comm),
+            reduction,
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(see `rudder experiment all` for the full paper reproduction)");
+    Ok(())
+}

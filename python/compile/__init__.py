@@ -1,0 +1,2 @@
+"""Rudder build-time python package: L1 Pallas kernels + L2 JAX models,
+AOT-lowered to HLO text by compile.aot. Never imported at runtime."""

@@ -1,0 +1,191 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + a JSON manifest.
+
+Run once by ``make artifacts`` (python is never on the request path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every lowered module is described in ``manifest.json`` -- input/output names,
+shapes and dtypes in positional order -- which is the ABI the Rust runtime
+(``rust/src/runtime/artifacts.rs``) packs literals against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.score import score_update
+
+# Canonical artifact shapes.  The Rust sampler pads every minibatch to these;
+# see DESIGN.md §2 (datasets use their own feature dims for *communication*
+# accounting, compute runs through this canonical module).
+DEFAULTS = dict(
+    batch=128,      # B  target nodes per minibatch (padded)
+    fanout1=10,     # K1 hop-1 fanout   (paper: fanout {10, 25})
+    fanout2=25,     # K2 hop-2 fanout
+    feat_dim=100,   # D  products-like feature width
+    hidden=128,     # H
+    classes=32,     # C  community pseudo-label space
+    mlp_feats=12,   # F  decision-classifier feature vector (classifier/features.rs)
+    mlp_hidden=32,  # HM
+    mlp_batch=64,   # finetune minibatch
+    score_block=4096,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for stable ABI)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _desc(name, spec):
+    return {"name": name, "shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def build_entries(cfg: dict) -> dict[str, dict]:
+    """entry name -> {fn, in_specs: [(name, spec)...], out_names: [...]}"""
+    b, k1, k2 = cfg["batch"], cfg["fanout1"], cfg["fanout2"]
+    d, h, c = cfg["feat_dim"], cfg["hidden"], cfg["classes"]
+    f, hm, mb = cfg["mlp_feats"], cfg["mlp_hidden"], cfg["mlp_batch"]
+    sb = cfg["score_block"]
+
+    sage_params = [
+        ("w1_self", _spec((d, h))),
+        ("w1_neigh", _spec((d, h))),
+        ("b1", _spec((h,))),
+        ("w2_self", _spec((h, c))),
+        ("w2_neigh", _spec((h, c))),
+        ("b2", _spec((c,))),
+    ]
+    sage_batch = [
+        ("x_self", _spec((b, d))),
+        ("x_h1", _spec((b, k1, d))),
+        ("x_h2", _spec((b, k1, k2, d))),
+    ]
+    mlp_params = [
+        ("w1", _spec((f, hm))),
+        ("b1", _spec((hm,))),
+        ("w2", _spec((hm, 2))),
+        ("b2", _spec((2,))),
+    ]
+
+    def sage_train_fn(*args):
+        p = model.SageParams(*args[:6])
+        new, loss = model.sage_train_step(p, *args[6:])
+        return (*new, loss)
+
+    def sage_fwd_fn(*args):
+        p = model.SageParams(*args[:6])
+        return (model.sage_forward(p, *args[6:]),)
+
+    def mlp_infer_fn(*args):
+        p = model.MlpParams(*args[:4])
+        return (model.mlp_infer(p, args[4]),)
+
+    def mlp_train_fn(*args):
+        p = model.MlpParams(*args[:4])
+        new, loss = model.mlp_train_step(p, *args[4:])
+        return (*new, loss)
+
+    def score_fn(scores, accessed):
+        new, stale = score_update(scores, accessed, block=sb)
+        return (new, stale)
+
+    return {
+        "sage_train_step": dict(
+            fn=sage_train_fn,
+            inputs=sage_params
+            + sage_batch
+            + [
+                ("labels", _spec((b,), jnp.int32)),
+                ("mask", _spec((b,))),
+                ("lr", _spec(())),
+            ],
+            outputs=[f"new_{n}" for n, _ in sage_params] + ["loss"],
+        ),
+        "sage_fwd": dict(
+            fn=sage_fwd_fn,
+            inputs=sage_params + sage_batch,
+            outputs=["logits"],
+        ),
+        "mlp_infer": dict(
+            fn=mlp_infer_fn,
+            inputs=mlp_params + [("feats", _spec((1, f)))],
+            outputs=["replace_prob"],
+        ),
+        "mlp_train_step": dict(
+            fn=mlp_train_fn,
+            inputs=mlp_params
+            + [
+                ("feats", _spec((mb, f))),
+                ("labels", _spec((mb,), jnp.int32)),
+                ("lr", _spec(())),
+            ],
+            outputs=[f"new_{n}" for n, _ in mlp_params] + ["loss"],
+        ),
+        "score_update": dict(
+            fn=score_fn,
+            inputs=[("scores", _spec((sb,))), ("accessed", _spec((sb,)))],
+            outputs=["new_scores", "stale_mask"],
+        ),
+    }
+
+
+def lower_entry(name: str, entry: dict) -> str:
+    specs = [s for _, s in entry["inputs"]]
+    lowered = jax.jit(entry["fn"]).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    for key, val in DEFAULTS.items():
+        ap.add_argument(f"--{key}", type=int, default=val)
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    cfg = {k: getattr(args, k) for k in DEFAULTS}
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = build_entries(cfg)
+    wanted = set(args.only.split(",")) if args.only else set(entries)
+    manifest = {"config": cfg, "entries": {}}
+    for name, entry in entries.items():
+        if name not in wanted:
+            continue
+        text = lower_entry(name, entry)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_desc(n, s) for n, s in entry["inputs"]],
+            "outputs": entry["outputs"],
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

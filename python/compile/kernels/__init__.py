@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for Rudder.
+
+Every kernel here runs under ``interpret=True`` (the CPU PJRT plugin cannot
+execute real-TPU Mosaic custom-calls; see DESIGN.md §3).  Each kernel has a
+pure-jnp oracle in :mod:`compile.kernels.ref` and a pytest/hypothesis sweep in
+``python/tests/test_kernels.py``.
+"""
+
+from compile.kernels.matmul import matmul
+from compile.kernels.sage_agg import sage_layer
+from compile.kernels.score import score_update
+
+__all__ = ["matmul", "sage_layer", "score_update"]

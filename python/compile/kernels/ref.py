@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are the reference semantics the kernels are tested against in
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes/dtypes and
+asserts allclose) and mirrored bit-for-bit by the Rust fallback compute
+model in ``rust/src/gnn/``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DECAY = 0.95
+STALE_THRESHOLD = 0.95
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def sage_layer_ref(
+    x_self: jax.Array,
+    x_neigh: jax.Array,
+    w_self: jax.Array,
+    w_neigh: jax.Array,
+    bias: jax.Array,
+    *,
+    relu: bool = True,
+) -> jax.Array:
+    agg = jnp.mean(x_neigh.astype(jnp.float32), axis=1)
+    h = (
+        x_self.astype(jnp.float32) @ w_self.astype(jnp.float32)
+        + agg @ w_neigh.astype(jnp.float32)
+        + bias.astype(jnp.float32)
+    )
+    if relu:
+        h = jnp.maximum(h, 0.0)
+    return h.astype(x_self.dtype)
+
+
+def score_update_ref(
+    scores: jax.Array, accessed: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    s = scores.astype(jnp.float32)
+    acc = accessed.astype(jnp.float32) > 0.0
+    new = jnp.where(acc, s + 1.0, s * DECAY)
+    stale = jnp.where(new < STALE_THRESHOLD, 1.0, 0.0)
+    return new, stale

@@ -1,0 +1,73 @@
+"""Persistent-buffer score-update Pallas kernel (the Fig 4 policy).
+
+Rudder's scoring policy (paper §2.1): an accessed item's frequency score is
+incremented by 1; an item not accessed during the current minibatch-sampling
+epoch is penalised by x0.95; scores falling below 0.95 mark the node "stale"
+(evictable).  The buffer holds up to pct x |halo| scores per trainer, so the
+update is a pure elementwise streaming op -- VPU work, one (block,) tile per
+grid step, arithmetic intensity ~2 flops/float so the kernel is bandwidth
+bound; the only optimisation that matters is a contiguous layout (the Rust
+buffer keeps scores as a dense SoA column for exactly this reason).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DECAY = 0.95
+STALE_THRESHOLD = 0.95
+
+
+def _score_kernel(s_ref, a_ref, o_ref, stale_ref):
+    s = s_ref[...]
+    accessed = a_ref[...] > 0.0
+    new = jnp.where(accessed, s + 1.0, s * DECAY)
+    o_ref[...] = new
+    stale_ref[...] = jnp.where(new < STALE_THRESHOLD, 1.0, 0.0)
+
+
+def score_update(
+    scores: jax.Array, accessed: jax.Array, *, block: int = 4096
+) -> tuple[jax.Array, jax.Array]:
+    """Apply one epoch of the scoring policy.
+
+    Args:
+      scores:   (N,) f32 current frequency scores.
+      accessed: (N,) f32 0/1 mask -- was the slot touched this minibatch.
+      block:    tile width.
+
+    Returns:
+      (new_scores, stale_mask) -- stale_mask[i] == 1.0 where the slot became
+      evictable (score < 0.95).
+    """
+    if scores.shape != accessed.shape or scores.ndim != 1:
+        raise ValueError(f"bad shapes: {scores.shape} vs {accessed.shape}")
+    n = scores.shape[0]
+    blk = min(block, n)
+    pad = (-n) % blk
+    if pad:
+        scores = jnp.pad(scores, (0, pad), constant_values=1.0)
+        accessed = jnp.pad(accessed, (0, pad), constant_values=1.0)
+    np_ = scores.shape[0]
+    new, stale = pl.pallas_call(
+        _score_kernel,
+        grid=(np_ // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=True,
+    )(scores.astype(jnp.float32), accessed.astype(jnp.float32))
+    return new[:n], stale[:n]

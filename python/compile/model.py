@@ -1,0 +1,171 @@
+"""Layer-2: JAX compute graphs for Rudder, calling the L1 Pallas kernels.
+
+Two model families, both AOT-lowered to HLO text by :mod:`compile.aot` and
+executed from the Rust coordinator via PJRT:
+
+* **GraphSAGE** -- the paper's GNN workload (2-layer mean-aggregator, fanout
+  {10, 25}, node classification).  The distributed sampler (Rust, L3) hands
+  each trainer a *padded dense* 2-hop sample; the train step here is the
+  T_DDP hot loop the prefetcher overlaps with.
+* **MLP decision classifier** -- one of Rudder's ML-classifier controllers
+  (§4.4).  Inference and the online-finetune step (decision head update) are
+  exported so the L3 inference daemon can run them through XLA.
+
+Everything is pure-functional over flat parameter tuples so the HLO
+signature is stable and the Rust side can pack literals positionally.
+Parameters are donated in the train steps (no aliasing surprises: the AOT
+module returns the new parameters as outputs).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+from compile.kernels.sage_agg import sage_layer
+
+# ---------------------------------------------------------------------------
+# GraphSAGE
+
+
+class SageParams(NamedTuple):
+    """2-layer GraphSAGE parameters (flat, positional order is the ABI)."""
+
+    w1_self: jax.Array   # (D, H)
+    w1_neigh: jax.Array  # (D, H)
+    b1: jax.Array        # (H,)
+    w2_self: jax.Array   # (H, C)
+    w2_neigh: jax.Array  # (H, C)
+    b2: jax.Array        # (C,)
+
+
+def sage_init(key: jax.Array, d: int, h: int, c: int) -> SageParams:
+    """Glorot-ish init, deterministic in the key."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s1 = jnp.sqrt(2.0 / (d + h))
+    s2 = jnp.sqrt(2.0 / (h + c))
+    return SageParams(
+        w1_self=jax.random.normal(k1, (d, h), jnp.float32) * s1,
+        w1_neigh=jax.random.normal(k2, (d, h), jnp.float32) * s1,
+        b1=jnp.zeros((h,), jnp.float32),
+        w2_self=jax.random.normal(k3, (h, c), jnp.float32) * s2,
+        w2_neigh=jax.random.normal(k4, (h, c), jnp.float32) * s2,
+        b2=jnp.zeros((c,), jnp.float32),
+    )
+
+
+def sage_forward(
+    params: SageParams,
+    x_self: jax.Array,  # (B, D)   features of target nodes
+    x_h1: jax.Array,    # (B, K1, D)  hop-1 neighbor features
+    x_h2: jax.Array,    # (B, K1, K2, D)  hop-2 neighbor features
+) -> jax.Array:
+    """Two fused SAGE layers -> logits (B, C)."""
+    b, k1, k2, d = x_h2.shape
+    h = params.w1_self.shape[1]
+    # Layer 1 on the hop-1 frontier: each hop-1 node aggregates its K2 sample.
+    h1_frontier = sage_layer(
+        x_h1.reshape(b * k1, d),
+        x_h2.reshape(b * k1, k2, d),
+        params.w1_self,
+        params.w1_neigh,
+        params.b1,
+        relu=True,
+    ).reshape(b, k1, h)
+    # Layer 1 on the targets: aggregate the hop-1 sample.
+    h1_self = sage_layer(
+        x_self, x_h1, params.w1_self, params.w1_neigh, params.b1, relu=True
+    )
+    # Layer 2: targets aggregate their (now hidden-space) hop-1 frontier.
+    return sage_layer(
+        h1_self,
+        h1_frontier,
+        params.w2_self,
+        params.w2_neigh,
+        params.b2,
+        relu=False,
+    )
+
+
+def sage_loss(
+    params: SageParams,
+    x_self: jax.Array,
+    x_h1: jax.Array,
+    x_h2: jax.Array,
+    labels: jax.Array,  # (B,) int32
+    mask: jax.Array,    # (B,) f32 -- 0 for padding rows
+) -> jax.Array:
+    """Masked mean softmax cross-entropy."""
+    logits = sage_forward(params, x_self, x_h1, x_h2)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def sage_train_step(
+    params: SageParams,
+    x_self: jax.Array,
+    x_h1: jax.Array,
+    x_h2: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array,
+    lr: jax.Array,  # scalar f32
+) -> tuple[SageParams, jax.Array]:
+    """One SGD step; returns (new_params, loss).  fwd+bwd+update fused in HLO."""
+    loss, grads = jax.value_and_grad(sage_loss)(
+        params, x_self, x_h1, x_h2, labels, mask
+    )
+    new = SageParams(*(p - lr * g for p, g in zip(params, grads)))
+    return new, loss
+
+
+# ---------------------------------------------------------------------------
+# MLP decision classifier (binary replace / skip)
+
+
+class MlpParams(NamedTuple):
+    w1: jax.Array  # (F, HM)
+    b1: jax.Array  # (HM,)
+    w2: jax.Array  # (HM, 2)
+    b2: jax.Array  # (2,)
+
+
+def mlp_init(key: jax.Array, f: int, hm: int) -> MlpParams:
+    k1, k2 = jax.random.split(key)
+    return MlpParams(
+        w1=jax.random.normal(k1, (f, hm), jnp.float32) * jnp.sqrt(2.0 / f),
+        b1=jnp.zeros((hm,), jnp.float32),
+        w2=jax.random.normal(k2, (hm, 2), jnp.float32) * jnp.sqrt(2.0 / hm),
+        b2=jnp.zeros((2,), jnp.float32),
+    )
+
+
+def mlp_forward(params: MlpParams, feats: jax.Array) -> jax.Array:
+    """(B, F) -> logits (B, 2), hidden matmuls through the Pallas kernel."""
+    h = jnp.maximum(matmul(feats, params.w1) + params.b1, 0.0)
+    return matmul(h, params.w2) + params.b2
+
+
+def mlp_infer(params: MlpParams, feats: jax.Array) -> jax.Array:
+    """(B, F) -> replace-probability (B,)."""
+    return jax.nn.softmax(mlp_forward(params, feats), axis=-1)[:, 1]
+
+
+def _mlp_loss(params: MlpParams, feats: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = mlp_forward(params, feats)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def mlp_train_step(
+    params: MlpParams, feats: jax.Array, labels: jax.Array, lr: jax.Array
+) -> tuple[MlpParams, jax.Array]:
+    """One SGD step on the decision head (used by online finetuning)."""
+    loss, grads = jax.value_and_grad(_mlp_loss)(params, feats, labels)
+    new = MlpParams(*(p - lr * g for p, g in zip(params, grads)))
+    return new, loss

@@ -1,0 +1,1 @@
+"""pytest package for the Rudder compile path."""

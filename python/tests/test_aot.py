@@ -1,0 +1,106 @@
+"""AOT pipeline checks: lowering, manifest ABI, HLO properties.
+
+Uses tiny shape overrides so the full pipeline runs in seconds.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = dict(
+    aot.DEFAULTS,
+    batch=4, fanout1=2, fanout2=3, feat_dim=5, hidden=6, classes=3,
+    mlp_feats=4, mlp_hidden=5, mlp_batch=8, score_block=16,
+)
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return aot.build_entries(TINY)
+
+
+def test_all_five_entries_present(entries):
+    assert set(entries) == {
+        "sage_train_step", "sage_fwd", "mlp_infer", "mlp_train_step", "score_update",
+    }
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["sage_train_step", "sage_fwd", "mlp_infer", "mlp_train_step", "score_update"],
+)
+def test_entry_lowers_to_hlo_text(entries, name):
+    text = aot.lower_entry(name, entries[name])
+    assert "HloModule" in text
+    # interpret=True pallas must lower to plain HLO: no Mosaic custom-calls.
+    assert "custom-call" not in text or "mosaic" not in text.lower()
+
+
+def test_manifest_abi_matches_execution(entries):
+    """Executing the jitted fn with manifest-shaped zeros yields outputs
+    matching the declared output arity -- the contract the Rust runtime
+    relies on."""
+    for name, entry in entries.items():
+        args = [
+            jnp.zeros(tuple(s.shape), s.dtype) for _, s in entry["inputs"]
+        ]
+        out = jax.jit(entry["fn"])(*args)
+        assert len(out) == len(entry["outputs"]), name
+
+
+def test_train_step_abi_roundtrip(entries):
+    """new-params outputs have identical shapes to the param inputs."""
+    entry = entries["sage_train_step"]
+    in_shapes = {n: s.shape for n, s in entry["inputs"]}
+    args = [jnp.zeros(tuple(s.shape), s.dtype) for _, s in entry["inputs"]]
+    out = jax.jit(entry["fn"])(*args)
+    for i, out_name in enumerate(entry["outputs"][:-1]):  # last is loss
+        pname = out_name.removeprefix("new_")
+        assert out[i].shape == in_shapes[pname]
+    assert out[-1].shape == ()
+
+
+def test_cli_writes_artifacts_and_manifest(tmp_path):
+    cmd = [
+        sys.executable, "-m", "compile.aot", "--out", str(tmp_path),
+        "--batch", "4", "--fanout1", "2", "--fanout2", "3", "--feat_dim", "5",
+        "--hidden", "6", "--classes", "3", "--mlp_feats", "4",
+        "--mlp_hidden", "5", "--mlp_batch", "8", "--score_block", "16",
+        "--only", "score_update,mlp_infer",
+    ]
+    env = dict(os.environ, PYTHONPATH=os.path.dirname(os.path.dirname(__file__)))
+    subprocess.run(cmd, check=True, cwd=os.path.dirname(os.path.dirname(__file__)), env=env)
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert set(manifest["entries"]) == {"score_update", "mlp_infer"}
+    for e in manifest["entries"].values():
+        assert (tmp_path / e["file"]).exists()
+        for inp in e["inputs"]:
+            assert inp["dtype"] in ("float32", "int32")
+
+
+def test_checked_in_manifest_consistent_if_present():
+    """If `make artifacts` has run, the manifest must describe real files
+    whose HLO entry computation matches the recorded config shapes."""
+    art = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(__file__))), "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    manifest = json.loads(open(mpath).read())
+    cfg = manifest["config"]
+    for name, e in manifest["entries"].items():
+        text = open(os.path.join(art, e["file"])).read()
+        assert "HloModule" in text
+    b, d = cfg["batch"], cfg["feat_dim"]
+    sage = manifest["entries"]["sage_train_step"]
+    x_self = next(i for i in sage["inputs"] if i["name"] == "x_self")
+    assert x_self["shape"] == [b, d]

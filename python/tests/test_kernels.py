@@ -1,0 +1,207 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/block sizes; assert_allclose against ref.py.
+This is the core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul
+from compile.kernels.sage_agg import sage_layer
+from compile.kernels.score import score_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=96)
+BLOCKS = st.sampled_from([8, 16, 32, 128])
+
+
+def _rand(key, shape, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(key)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, bm=BLOCKS, bn=BLOCKS, bk=BLOCKS, seed=st.integers(0, 2**31))
+def test_matmul_matches_ref_shapes(m, k, n, bm, bn, bk, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    got = matmul(jnp.asarray(x), jnp.asarray(w), block_m=bm, block_n=bn, block_k=bk)
+    want = ref.matmul_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 8e-2)])
+def test_matmul_dtypes(dtype, tol):
+    x = jnp.asarray(_rand(7, (33, 17))).astype(dtype)
+    w = jnp.asarray(_rand(8, (17, 29))).astype(dtype)
+    got = np.asarray(matmul(x, w), dtype=np.float32)
+    want = np.asarray(ref.matmul_ref(x, w), dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_matmul_identity():
+    x = jnp.asarray(_rand(3, (40, 40)))
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, jnp.eye(40))), np.asarray(x), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_zero():
+    x = jnp.asarray(_rand(4, (12, 8)))
+    out = matmul(x, jnp.zeros((8, 5)))
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((3, 4)), jnp.zeros((5, 6)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((3,)), jnp.zeros((3, 2)))
+
+
+def test_matmul_grad_matches_ref():
+    x = jnp.asarray(_rand(11, (9, 7)))
+    w = jnp.asarray(_rand(12, (7, 5)))
+    g_x = jax.grad(lambda a: matmul(a, w).sum())(x)
+    g_x_ref = jax.grad(lambda a: ref.matmul_ref(a, w).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_x), np.asarray(g_x_ref), rtol=1e-4, atol=1e-4)
+    g_w = jax.grad(lambda b: (matmul(x, b) ** 2).sum())(w)
+    g_w_ref = jax.grad(lambda b: (ref.matmul_ref(x, b) ** 2).sum())(w)
+    np.testing.assert_allclose(np.asarray(g_w), np.asarray(g_w_ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sage_layer
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 70),
+    k=st.integers(1, 12),
+    d=st.integers(1, 40),
+    h=st.integers(1, 40),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_sage_layer_matches_ref(b, k, d, h, relu, seed):
+    xs = jnp.asarray(_rand(seed, (b, d)))
+    xn = jnp.asarray(_rand(seed + 1, (b, k, d)))
+    ws = jnp.asarray(_rand(seed + 2, (d, h)))
+    wn = jnp.asarray(_rand(seed + 3, (d, h)))
+    bias = jnp.asarray(_rand(seed + 4, (h,)))
+    got = sage_layer(xs, xn, ws, wn, bias, relu=relu)
+    want = ref.sage_layer_ref(xs, xn, ws, wn, bias, relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_sage_layer_grads_match_ref():
+    b, k, d, h = 13, 4, 9, 6
+    xs = jnp.asarray(_rand(1, (b, d)))
+    xn = jnp.asarray(_rand(2, (b, k, d)))
+    ws = jnp.asarray(_rand(3, (d, h)))
+    wn = jnp.asarray(_rand(4, (d, h)))
+    bias = jnp.asarray(_rand(5, (h,)))
+
+    def loss(fn):
+        def inner(args):
+            return (fn(*args) ** 2).sum()
+
+        return inner
+
+    args = (xs, xn, ws, wn, bias)
+    g = jax.grad(loss(lambda *a: sage_layer(*a)))(args)
+    g_ref = jax.grad(loss(lambda *a: ref.sage_layer_ref(*a)))(args)
+    for gi, gr in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(gi), np.asarray(gr), rtol=1e-3, atol=1e-3)
+
+
+def test_sage_layer_relu_clamps():
+    xs = -10.0 * jnp.ones((4, 3))
+    xn = -10.0 * jnp.ones((4, 2, 3))
+    ws = jnp.eye(3)
+    wn = jnp.eye(3)
+    bias = jnp.zeros((3,))
+    out = sage_layer(xs, xn, ws, wn, bias, relu=True)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_sage_layer_mean_aggregation():
+    # With w_self = 0 and w_neigh = I the output is exactly the neighbor mean.
+    b, k, d = 5, 3, 4
+    xn = jnp.asarray(_rand(9, (b, k, d)))
+    out = sage_layer(
+        jnp.zeros((b, d)), xn, jnp.zeros((d, d)), jnp.eye(d), jnp.zeros((d,)), relu=False
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(jnp.mean(xn, axis=1)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_sage_layer_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        sage_layer(
+            jnp.zeros((4, 3)), jnp.zeros((5, 2, 3)), jnp.zeros((3, 2)),
+            jnp.zeros((3, 2)), jnp.zeros((2,)),
+        )
+    with pytest.raises(ValueError):
+        sage_layer(
+            jnp.zeros((4, 3)), jnp.zeros((4, 2, 7)), jnp.zeros((3, 2)),
+            jnp.zeros((3, 2)), jnp.zeros((2,)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# score_update
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    block=st.sampled_from([1, 7, 64, 4096]),
+    seed=st.integers(0, 2**31),
+)
+def test_score_update_matches_ref(n, block, seed):
+    rng = np.random.default_rng(seed)
+    scores = (rng.random(n) * 4).astype(np.float32)
+    accessed = (rng.random(n) > 0.5).astype(np.float32)
+    got_s, got_m = score_update(jnp.asarray(scores), jnp.asarray(accessed), block=block)
+    want_s, want_m = ref.score_update_ref(jnp.asarray(scores), jnp.asarray(accessed))
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+
+
+def test_score_update_semantics():
+    scores = jnp.asarray([1.0, 1.0, 0.99, 10.0], dtype=jnp.float32)
+    accessed = jnp.asarray([1.0, 0.0, 0.0, 0.0], dtype=jnp.float32)
+    new, stale = score_update(scores, accessed, block=4)
+    np.testing.assert_allclose(np.asarray(new), [2.0, 0.95, 0.9405, 9.5], rtol=1e-6)
+    # 0.95 is NOT < 0.95, so slot 1 survives; slot 2 fell below.
+    np.testing.assert_array_equal(np.asarray(stale), [0.0, 0.0, 1.0, 0.0])
+
+
+def test_score_update_never_accessed_decays_to_stale():
+    s = jnp.ones((1,), jnp.float32)
+    a = jnp.zeros((1,), jnp.float32)
+    steps = 0
+    while steps < 10:
+        s, stale = score_update(s, a, block=1)
+        steps += 1
+        if np.asarray(stale)[0] == 1.0:
+            break
+    # 1.0 * 0.95 = 0.95 (not stale); 0.95 * 0.95 = 0.9025 < 0.95 -> stale at 2.
+    assert steps == 2
+
+
+def test_score_update_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        score_update(jnp.zeros((3,)), jnp.zeros((4,)))

@@ -1,0 +1,126 @@
+"""L2 correctness: GraphSAGE + MLP classifier compute graphs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, K1, K2, D, H, C = 8, 3, 4, 10, 16, 6
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.standard_normal((B, D)), jnp.float32),
+        jnp.asarray(rng.standard_normal((B, K1, D)), jnp.float32),
+        jnp.asarray(rng.standard_normal((B, K1, K2, D)), jnp.float32),
+        jnp.asarray(rng.integers(0, C, B), jnp.int32),
+        jnp.ones((B,), jnp.float32),
+    )
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.sage_init(jax.random.PRNGKey(0), D, H, C)
+
+
+def test_forward_shape(params):
+    x_self, x_h1, x_h2, _, _ = _batch()
+    logits = model.sage_forward(params, x_self, x_h1, x_h2)
+    assert logits.shape == (B, C)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_loss_positive_and_finite(params):
+    loss = model.sage_loss(params, *_batch())
+    assert np.isfinite(float(loss)) and float(loss) > 0.0
+
+
+def test_mask_excludes_padding(params):
+    x_self, x_h1, x_h2, labels, _ = _batch()
+    mask_half = jnp.asarray([1.0] * (B // 2) + [0.0] * (B // 2))
+    # Corrupt the masked-out labels; loss must not change.
+    labels_bad = labels.at[B // 2 :].set((labels[B // 2 :] + 1) % C)
+    l1 = model.sage_loss(params, x_self, x_h1, x_h2, labels, mask_half)
+    l2 = model.sage_loss(params, x_self, x_h1, x_h2, labels_bad, mask_half)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_train_step_decreases_loss(params):
+    batch = _batch(7)
+    p = params
+    lr = jnp.asarray(0.05, jnp.float32)
+    first = float(model.sage_loss(p, *batch))
+    for _ in range(30):
+        p, loss = model.sage_train_step(p, *batch, lr)
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_train_step_grad_matches_numerical(params):
+    # Spot-check d(loss)/d(b2) against central differences.
+    batch = _batch(3)
+    eps = 1e-3
+    grads = jax.grad(model.sage_loss)(params, *batch)
+    idx = 2
+    bumped = params._replace(b2=params.b2.at[idx].add(eps))
+    dipped = params._replace(b2=params.b2.at[idx].add(-eps))
+    num = (float(model.sage_loss(bumped, *batch)) - float(model.sage_loss(dipped, *batch))) / (
+        2 * eps
+    )
+    np.testing.assert_allclose(float(grads.b2[idx]), num, rtol=5e-2, atol=1e-4)
+
+
+def test_train_step_zero_lr_is_identity(params):
+    batch = _batch(5)
+    new, _ = model.sage_train_step(params, *batch, jnp.asarray(0.0))
+    for a, b in zip(new, params):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_init_deterministic():
+    a = model.sage_init(jax.random.PRNGKey(42), D, H, C)
+    b = model.sage_init(jax.random.PRNGKey(42), D, H, C)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier
+
+
+def test_mlp_learns_linearly_separable():
+    f, hm, n = 6, 16, 256
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    y = (x[:, 0] + 0.5 * x[:, 1] > 0).astype(np.int32)
+    p = model.mlp_init(jax.random.PRNGKey(1), f, hm)
+    lr = jnp.asarray(0.5, jnp.float32)
+    for _ in range(150):
+        p, loss = model.mlp_train_step(p, jnp.asarray(x), jnp.asarray(y), lr)
+    probs = np.asarray(model.mlp_infer(p, jnp.asarray(x)))
+    acc = float(np.mean((probs > 0.5) == (y == 1)))
+    assert acc > 0.95, acc
+
+
+def test_mlp_infer_is_probability():
+    p = model.mlp_init(jax.random.PRNGKey(2), 4, 8)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((10, 4)), jnp.float32)
+    probs = np.asarray(model.mlp_infer(p, x))
+    assert probs.shape == (10,)
+    assert np.all((probs >= 0.0) & (probs <= 1.0))
+
+
+def test_mlp_train_reduces_loss():
+    f, hm = 5, 8
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((64, f)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, 64), jnp.int32)
+    p = model.mlp_init(jax.random.PRNGKey(3), f, hm)
+    _, l0 = model.mlp_train_step(p, x, y, jnp.asarray(0.0))
+    for _ in range(60):
+        p, loss = model.mlp_train_step(p, x, y, jnp.asarray(0.3))
+    assert float(loss) < float(l0)

@@ -1,0 +1,55 @@
+//! `cargo bench --bench paper_benches` — regenerates every table and
+//! figure of the paper's evaluation (§5) at Quick quality, printing the
+//! same rows/series the paper reports plus wall time per experiment.
+//!
+//! Absolute numbers come from the simulated testbed (DESIGN.md §2); the
+//! *shape* — who wins, by what factor, where crossovers fall — is the
+//! reproduction target.  CSVs are written under `results/`.
+//!
+//! Run one experiment: `cargo bench --bench paper_benches -- fig12`
+
+use rudder::eval::harness::{run_experiment_id, EXPERIMENTS};
+use rudder::eval::Quality;
+
+fn main() {
+    let filter: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let quality = if std::env::var("RUDDER_BENCH_FULL").is_ok() {
+        Quality::Full
+    } else {
+        Quality::Quick
+    };
+    let ids: Vec<&str> = EXPERIMENTS
+        .iter()
+        .copied()
+        .filter(|id| filter.is_empty() || filter.iter().any(|f| id.contains(f.as_str())))
+        .collect();
+    println!("paper-reproduction bench: {} experiments at {quality:?}\n", ids.len());
+    let mut failures = 0;
+    let t_all = std::time::Instant::now();
+    for id in ids {
+        println!("───────────────────────────────────────────────────────────");
+        let t0 = std::time::Instant::now();
+        match run_experiment_id(id, quality) {
+            Ok(tables) => {
+                for t in tables {
+                    t.emit(&format!("bench_{id}"));
+                }
+                println!("[{id}: {:.1}s]", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("[{id} FAILED: {e}]");
+                failures += 1;
+            }
+        }
+    }
+    println!(
+        "\nall experiments done in {:.1}s ({failures} failures)",
+        t_all.elapsed().as_secs_f64()
+    );
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,205 @@
+//! `cargo bench --bench perf_hotpath` — L3 hot-path microbenchmarks.
+//!
+//! The §Perf targets (EXPERIMENTS.md): the coordinator must never be the
+//! bottleneck — per-minibatch L3 work (sample + lookup + score pass +
+//! prompt build) must stay ≪ 1 ms, i.e. orders of magnitude below T_DDP.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use rudder::agent::{prompt, Observation};
+use rudder::buffer::scoring::Policy;
+use rudder::buffer::PersistentBuffer;
+use rudder::graph::rmat::{densify_isolated, generate, RmatParams};
+use rudder::graph::Dataset;
+use rudder::partition::{partition, Method};
+use rudder::sampler::Sampler;
+use rudder::util::json::Json;
+use rudder::util::rng::Pcg32;
+
+struct Bench {
+    rows: Vec<(String, f64, u64)>,
+}
+
+impl Bench {
+    fn run<T>(&mut self, name: &str, iters: u64, mut f: impl FnMut() -> T) {
+        // Warmup.
+        for _ in 0..iters / 10 + 1 {
+            black_box(f());
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        self.rows.push((name.to_string(), per, iters));
+    }
+
+    fn report(&self) {
+        println!("\n== L3 hot-path microbenchmarks ==");
+        println!("{:<44} {:>12} {:>10}", "benchmark", "per-op", "iters");
+        println!("{}", "-".repeat(70));
+        for (name, per, iters) in &self.rows {
+            let t = if *per >= 1e-3 {
+                format!("{:.3} ms", per * 1e3)
+            } else if *per >= 1e-6 {
+                format!("{:.2} µs", per * 1e6)
+            } else {
+                format!("{:.0} ns", per * 1e9)
+            };
+            println!("{name:<44} {t:>12} {iters:>10}");
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bench { rows: Vec::new() };
+
+    // --- graph + partition setup (not timed) -----------------------------
+    let mut rng = Pcg32::new(1);
+    let csr = generate(
+        &RmatParams {
+            a: 0.57, b: 0.19, c: 0.19,
+            num_nodes: 20_000,
+            num_edges: 200_000,
+            permute: true,
+        },
+        &mut rng,
+    );
+    let csr = densify_isolated(&csr, &mut rng);
+    let part = partition(&csr, 4, Method::MetisLike, 1);
+
+    // --- sampler ---------------------------------------------------------
+    let sampler = Sampler::new(0, 256, 10, 25, 7);
+    let train = part.local_nodes[0].clone();
+    let order = sampler.epoch_order(&train, 0);
+    let mut mb_i = 0usize;
+    b.run("sampler: 2-hop minibatch (256×10×25)", 200, || {
+        mb_i = (mb_i + 1) % sampler.minibatches_per_epoch(train.len());
+        sampler.sample(&csr, &part, &order, 0, mb_i)
+    });
+    let mb = sampler.sample(&csr, &part, &order, 0, 0);
+
+    // --- buffer ----------------------------------------------------------
+    let mut buf = PersistentBuffer::new(4096, Policy::FreqDecay);
+    buf.prepopulate(&mb.unique_remote);
+    b.run("buffer: lookup (sampled remote set)", 2_000, || {
+        buf.lookup(&mb.unique_remote)
+    });
+    b.run("buffer: score pass (end_round, 4096 slots)", 2_000, || buf.end_round());
+    b.run("buffer: replacement round", 500, || {
+        buf.lookup(&mb.unique_remote);
+        buf.end_round();
+        buf.replace()
+    });
+
+    // --- agent path --------------------------------------------------------
+    let obs = Observation {
+        hits_pct: 63.2,
+        buffer_occupancy_pct: 88.0,
+        stale_pct: 7.5,
+        comm_nodes_last: 1800,
+        comm_nodes_ema: 1750.0,
+        minibatches_done: 120,
+        minibatches_pending: 360,
+        graph_nodes: 20_000,
+        graph_edges: 100_000,
+        halo_nodes: 4_000,
+        buffer_capacity: 1_000,
+        ..Default::default()
+    };
+    let history: Vec<_> = (0..16)
+        .map(|i| rudder::agent::context::HistoryEntry {
+            minibatch: i,
+            action: rudder::agent::Action::Skip,
+            predicted: Some(rudder::metrics::HitsPrediction::Unchanged),
+            hits_before: 60.0,
+            hits_after: Some(61.0),
+            comm_before: 1800.0,
+            comm_after: Some(1700.0),
+            outcome_pass: Some(true),
+        })
+        .collect();
+    b.run("agent: prompt build (16-entry history)", 2_000, || {
+        prompt::build(&obs, &history)
+    });
+    let prompt_text = prompt::build(&obs, &history);
+    b.run("agent: simulated-LLM decision", 2_000, || {
+        use rudder::agent::backend::{LlmBackend, SimulatedLlm};
+        let mut llm = SimulatedLlm::new(
+            rudder::agent::profiles::by_name("gemma3-4b").unwrap(),
+            1,
+            false,
+        );
+        llm.complete(&prompt_text)
+    });
+    let reply = r#"{"action": "replace", "expected_hits": "increase", "reason": "low hits"}"#;
+    b.run("agent: response parse", 20_000, || {
+        rudder::agent::parser::parse(reply)
+    });
+
+    // --- classifier inference ---------------------------------------------
+    let (xs, ys) = {
+        let mut rng = Pcg32::new(9);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..400 {
+            let x: [f32; rudder::classifier::F] = std::array::from_fn(|_| rng.f32());
+            ys.push(x[0] > 0.5);
+            xs.push(x);
+        }
+        (xs, ys)
+    };
+    for kind in rudder::classifier::ALL_KINDS {
+        let mut m = kind.build(1);
+        m.fit(&xs, &ys);
+        b.run(&format!("classifier: {} inference", kind.name()), 20_000, || {
+            m.predict(&xs[0])
+        });
+    }
+
+    // --- util substrates ---------------------------------------------------
+    let doc = Json::obj(vec![
+        ("hits", Json::num(63.2)),
+        ("history", Json::Arr((0..16).map(|i| Json::num(i as f64)).collect())),
+    ])
+    .to_string_pretty();
+    b.run("json: parse observation-sized doc", 50_000, || Json::parse(&doc));
+
+    // --- full simulation throughput ---------------------------------------
+    let spec = rudder::graph::datasets::by_name("ogbn-arxiv").unwrap();
+    let ds = Dataset::build(spec, 0.1, 1);
+    let cfg = rudder::sim::RunConfig {
+        dataset: "ogbn-arxiv".into(),
+        scale: 0.1,
+        num_trainers: 4,
+        batch_size: 32,
+        fanout1: 5,
+        fanout2: 5,
+        epochs: 2,
+        controller: rudder::sim::ControllerSpec::parse("llm:gemma3-4b").unwrap(),
+        ..Default::default()
+    };
+    let part2 = partition(&ds.csr, 4, Method::MetisLike, 1);
+    b.run("sim: full 2-epoch 4-trainer run", 10, || {
+        rudder::sim::run_on(&ds, &part2, &cfg, None)
+    });
+
+    b.report();
+
+    // Per-minibatch L3 budget check (the §Perf target).
+    let l3_per_mb: f64 = b
+        .rows
+        .iter()
+        .filter(|(n, _, _)| {
+            n.starts_with("sampler") || n.starts_with("buffer: lookup")
+                || n.starts_with("buffer: score")
+        })
+        .map(|(_, per, _)| per)
+        .sum();
+    println!(
+        "\nL3 per-minibatch critical path ≈ {:.1} µs ({}× under the 1 ms budget)",
+        l3_per_mb * 1e6,
+        (1e-3 / l3_per_mb) as u64
+    );
+}

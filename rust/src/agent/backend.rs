@@ -1,0 +1,346 @@
+//! LLM backends: the token generators behind the agent loop.
+//!
+//! [`LlmBackend`] is the only seam between the fully-real agent machinery
+//! (prompts, parsing, queues, Pass@1) and the model:
+//!
+//! * [`SimulatedLlm`] — profile-driven stand-in (DESIGN.md §2): parses the
+//!   *actual prompt text* (only what a real model would see), applies a
+//!   profile-weighted mixture of {sound reasoning, noise, replacement
+//!   bias}, and renders a JSON response — or a malformed one, at the
+//!   profile's measured invalid rate.  Latency follows the profile's
+//!   prefill/decode rates on the shared GPU.
+//! * [`ExternalCommandBackend`] — pipes the prompt to any local command
+//!   (e.g. `ollama run gemma3:4b`) for plugging a real model in; latency is
+//!   measured wall-clock.
+
+use std::io::Write;
+use std::process::{Command, Stdio};
+
+use super::prompt;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+use super::profiles::LlmProfile;
+
+#[derive(Debug, Clone)]
+pub struct BackendReply {
+    pub text: String,
+    /// Response latency in seconds (virtual for simulated backends,
+    /// wall-clock for external ones).
+    pub latency: f64,
+}
+
+pub trait LlmBackend: Send {
+    fn complete(&mut self, prompt_text: &str) -> BackendReply;
+    fn name(&self) -> String;
+}
+
+// ---------------------------------------------------------------------------
+// Simulated backend
+
+pub struct SimulatedLlm {
+    pub profile: LlmProfile,
+    pub cot: bool,
+    rng: Pcg32,
+}
+
+/// The metric fields the simulated model reads out of the prompt.
+#[derive(Debug, Default, Clone)]
+struct PromptView {
+    hits_pct: f64,
+    stale_pct: f64,
+    occupancy_pct: f64,
+    pending: f64,
+    done: f64,
+    delta_hits: f64,
+    delta_comm: f64,
+    last_outcome_pass: Option<bool>,
+    last_action_replace: Option<bool>,
+}
+
+impl SimulatedLlm {
+    pub fn new(profile: &LlmProfile, seed: u64, cot: bool) -> SimulatedLlm {
+        SimulatedLlm { profile: profile.clone(), cot, rng: Pcg32::new(seed) }
+    }
+
+    /// Extract the CURRENT METRICS block + newest history entry from the
+    /// prompt — string work only, exactly what a real model conditions on.
+    fn read_prompt(text: &str) -> PromptView {
+        let mut v = PromptView::default();
+        if let Some(pos) = text.find("CURRENT METRICS:") {
+            if let Some(j) = Json::extract_object(&text[pos..]) {
+                let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                v.hits_pct = f("hits_pct");
+                v.stale_pct = f("stale_pct");
+                v.occupancy_pct = f("buffer_occupancy_pct");
+                v.pending = f("minibatches_pending");
+                v.done = f("minibatches_done");
+                v.delta_hits = f("delta_hits");
+                v.delta_comm = f("delta_comm");
+            }
+        }
+        if let Some(pos) = text.find("RECENT DECISIONS") {
+            if let Some(j) = Json::extract_object(&text[pos..]) {
+                v.last_outcome_pass =
+                    j.get("outcome").and_then(Json::as_str).map(|s| s == "pass");
+                v.last_action_replace =
+                    j.get("action").and_then(Json::as_str).map(|s| s == "replace");
+            }
+        }
+        v
+    }
+
+    /// The sound decision policy (what a strong reasoner concludes from the
+    /// prompt).  Returns (replace?, expected_hits, reason).
+    fn sound_policy(v: &PromptView) -> (bool, &'static str, &'static str) {
+        let total = v.done + v.pending;
+        let progress_left = if total > 0.0 { v.pending / total } else { 1.0 };
+        // Progress awareness: no replacements near completion.
+        if progress_left < 0.05 {
+            return (false, "unchanged", "training nearly complete, avoid churn");
+        }
+        // Cold buffer: admit missed nodes aggressively — hits will rise.
+        if v.occupancy_pct < 99.0 && v.hits_pct < 35.0 {
+            return (true, "increase", "buffer cold; admit missed nodes");
+        }
+        // Last replacement did not move hits: back off (diminishing
+        // returns — the trajectory behaviour of Fig 20).
+        if v.last_action_replace == Some(true) && v.delta_hits <= 1.0 {
+            return (false, "unchanged", "last replacement showed no hits gain");
+        }
+        // Healthy buffer: leave it alone.
+        if v.hits_pct >= 85.0 {
+            return (false, "unchanged", "hit rate already high");
+        }
+        // Degrading state with stale inventory to evict: refresh.
+        if v.hits_pct < 70.0 && v.stale_pct > 2.0 && v.delta_hits < -1.0 {
+            return (true, "increase", "hits falling and stale slots available");
+        }
+        // Rising communication trend with churnable inventory: refresh.
+        if v.delta_comm > 0.0 && v.stale_pct > 10.0 {
+            return (true, "increase", "communication rising; refresh stale slots");
+        }
+        (false, "unchanged", "metrics stable; hold")
+    }
+
+    /// Gemma3-1B-style pathology: reads a *rising* hit rate as decline and
+    /// keeps replacing, predicting improvement every time (paper §5.3).
+    fn biased_policy(v: &PromptView) -> (bool, &'static str, &'static str) {
+        let _ = v;
+        (true, "increase", "hit rate trend suggests decline; refresh buffer")
+    }
+
+    fn noise_policy(&mut self) -> (bool, &'static str, &'static str) {
+        let replace = self.rng.chance(0.5);
+        // Weak models over-predict movement (they pattern-match "my action
+        // changes things"); "unchanged" is rarely volunteered.
+        let r = self.rng.f64();
+        let pred = if r < 0.5 {
+            "increase"
+        } else if r < 0.9 {
+            "decrease"
+        } else {
+            "unchanged"
+        };
+        (replace, pred, "heuristic guess")
+    }
+
+    fn render_invalid(&mut self) -> String {
+        match self.rng.below(4) {
+            0 => "I think the buffer should probably be refreshed soon, but it \
+                  depends on the communication pattern."
+                .to_string(),
+            1 => "{\"action\": \"replace\", \"expected_hits\": \"incre".to_string(),
+            2 => "<think>The hits percentage is low so...</think> maybe replace?".to_string(),
+            _ => "{\"decision\": true}".to_string(),
+        }
+    }
+}
+
+impl LlmBackend for SimulatedLlm {
+    fn complete(&mut self, prompt_text: &str) -> BackendReply {
+        let tokens = prompt::estimate_tokens(prompt_text);
+        let latency = self.profile.latency(tokens, self.cot);
+        // Invalid response?
+        if self.rng.chance(self.profile.invalid_rate) {
+            return BackendReply { text: self.render_invalid(), latency };
+        }
+        let view = Self::read_prompt(prompt_text);
+        // CoT slightly lifts effective reasoning quality (paper §4.3.2).
+        let quality =
+            (self.profile.reasoning_quality + if self.cot { 0.04 } else { 0.0 }).min(1.0);
+        let (replace, pred, reason) = if self.rng.chance(self.profile.replace_bias) {
+            Self::biased_policy(&view)
+        } else if self.rng.chance(quality) {
+            Self::sound_policy(&view)
+        } else {
+            self.noise_policy()
+        };
+        let j = Json::obj(vec![
+            ("action", Json::str(if replace { "replace" } else { "skip" })),
+            ("expected_hits", Json::str(pred)),
+            ("reason", Json::str(reason)),
+        ]);
+        BackendReply { text: j.to_string_compact(), latency }
+    }
+
+    fn name(&self) -> String {
+        self.profile.name.to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// External command backend (real local LLMs, e.g. Ollama)
+
+pub struct ExternalCommandBackend {
+    pub command: String,
+    pub args: Vec<String>,
+}
+
+impl LlmBackend for ExternalCommandBackend {
+    fn complete(&mut self, prompt_text: &str) -> BackendReply {
+        let start = std::time::Instant::now();
+        let text = (|| -> anyhow::Result<String> {
+            let mut child = Command::new(&self.command)
+                .args(&self.args)
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::null())
+                .spawn()?;
+            child
+                .stdin
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("no stdin"))?
+                .write_all(prompt_text.as_bytes())?;
+            let out = child.wait_with_output()?;
+            Ok(String::from_utf8_lossy(&out.stdout).into_owned())
+        })()
+        .unwrap_or_default();
+        BackendReply { text, latency: start.elapsed().as_secs_f64() }
+    }
+
+    fn name(&self) -> String {
+        format!("external:{}", self.command)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::context::HistoryEntry;
+    use crate::agent::profiles::by_name;
+    use crate::agent::{Action, Observation};
+    use crate::metrics::HitsPrediction;
+
+    fn prompt_with(hits: f64, occ: f64, stale: f64, pending: f64) -> String {
+        let obs = Observation {
+            hits_pct: hits,
+            buffer_occupancy_pct: occ,
+            stale_pct: stale,
+            minibatches_done: 100,
+            minibatches_pending: pending as u64,
+            ..Default::default()
+        };
+        prompt::build(&obs, &[])
+    }
+
+    #[test]
+    fn strong_model_replaces_when_buffer_cold() {
+        let mut llm = SimulatedLlm::new(by_name("gemma3-4b").unwrap(), 1, false);
+        let reply = llm.complete(&prompt_with(5.0, 40.0, 0.0, 500.0));
+        let j = Json::extract_object(&reply.text).unwrap();
+        assert_eq!(j.get("action").unwrap().as_str(), Some("replace"));
+        assert_eq!(j.get("expected_hits").unwrap().as_str(), Some("increase"));
+    }
+
+    #[test]
+    fn strong_model_skips_when_healthy() {
+        let mut llm = SimulatedLlm::new(by_name("gemma3-4b").unwrap(), 2, false);
+        let reply = llm.complete(&prompt_with(92.0, 100.0, 0.5, 500.0));
+        let j = Json::extract_object(&reply.text).unwrap();
+        assert_eq!(j.get("action").unwrap().as_str(), Some("skip"));
+    }
+
+    #[test]
+    fn strong_model_respects_progress_awareness() {
+        let mut llm = SimulatedLlm::new(by_name("gemma3-4b").unwrap(), 3, false);
+        // 100 done, 2 pending -> near completion.
+        let reply = llm.complete(&prompt_with(30.0, 50.0, 10.0, 2.0));
+        let j = Json::extract_object(&reply.text).unwrap();
+        assert_eq!(j.get("action").unwrap().as_str(), Some("skip"));
+    }
+
+    #[test]
+    fn gemma1b_always_replaces() {
+        let mut llm = SimulatedLlm::new(by_name("gemma3-1b").unwrap(), 4, false);
+        for _ in 0..20 {
+            let reply = llm.complete(&prompt_with(95.0, 100.0, 0.0, 500.0));
+            let j = Json::extract_object(&reply.text).unwrap();
+            assert_eq!(j.get("action").unwrap().as_str(), Some("replace"));
+        }
+    }
+
+    #[test]
+    fn qwen_emits_invalid_responses() {
+        let mut llm = SimulatedLlm::new(by_name("qwen-1.5b").unwrap(), 5, false);
+        let mut invalid = 0;
+        for _ in 0..200 {
+            let reply = llm.complete(&prompt_with(50.0, 80.0, 5.0, 100.0));
+            let parsed = crate::agent::parser::parse(&reply.text);
+            if parsed.is_none() {
+                invalid += 1;
+            }
+        }
+        // invalid_rate 0.56 ± sampling noise.
+        assert!((80..=140).contains(&invalid), "invalid {invalid}/200");
+    }
+
+    #[test]
+    fn latency_reflects_profile() {
+        let p = prompt_with(50.0, 80.0, 5.0, 100.0);
+        let mut fast = SimulatedLlm::new(by_name("smollm2-360m").unwrap(), 6, false);
+        let mut slow = SimulatedLlm::new(by_name("mixtral-8x22b").unwrap(), 6, false);
+        assert!(fast.complete(&p).latency * 5.0 < slow.complete(&p).latency);
+    }
+
+    #[test]
+    fn backs_off_after_failed_replacement() {
+        // History says: replaced, hits did not move.
+        let obs = Observation {
+            hits_pct: 75.0,
+            buffer_occupancy_pct: 100.0,
+            stale_pct: 10.0,
+            minibatches_done: 50,
+            minibatches_pending: 200,
+            delta_hits: -0.5,
+            ..Default::default()
+        };
+        let hist = vec![HistoryEntry {
+            minibatch: 49,
+            action: Action::Replace,
+            predicted: Some(HitsPrediction::Increase),
+            hits_before: 75.5,
+            hits_after: Some(75.0),
+            comm_before: 100.0,
+            comm_after: Some(110.0),
+            outcome_pass: Some(false),
+        }];
+        let text = prompt::build(&obs, &hist);
+        let mut llm = SimulatedLlm::new(by_name("gemma3-4b").unwrap(), 7, false);
+        let reply = llm.complete(&text);
+        let j = Json::extract_object(&reply.text).unwrap();
+        assert_eq!(
+            j.get("action").unwrap().as_str(),
+            Some("skip"),
+            "should back off after ineffective replacement"
+        );
+    }
+
+    #[test]
+    fn external_backend_runs_command() {
+        let mut b = ExternalCommandBackend { command: "cat".into(), args: vec![] };
+        let reply = b.complete("{\"echo\": true}");
+        assert!(reply.text.contains("echo"));
+        assert!(reply.latency >= 0.0);
+    }
+}

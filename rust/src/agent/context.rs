@@ -1,0 +1,207 @@
+//! ContextBuilder (paper §4.2): tracks past replacement decisions and their
+//! outcomes, evaluating each decision once the next metrics arrive — the
+//! temporal context that lets the LLM reason about whether its last
+//! intervention helped.
+
+use super::{Action, Observation};
+use crate::metrics::HitsPrediction;
+use crate::util::json::Json;
+
+/// Tolerance (percentage points) under which a %-Hits movement counts as
+/// "unchanged" for outcome evaluation and Pass@1.  Sized to the sampling
+/// noise of per-minibatch %-Hits at the scaled batch sizes.
+pub const HITS_TOLERANCE: f64 = 2.5;
+
+#[derive(Debug, Clone)]
+pub struct HistoryEntry {
+    pub minibatch: u64,
+    pub action: Action,
+    pub predicted: Option<HitsPrediction>,
+    pub hits_before: f64,
+    pub hits_after: Option<f64>,
+    pub comm_before: f64,
+    pub comm_after: Option<f64>,
+    /// Did the observed outcome match the prediction (§4.6 pass/fail)?
+    pub outcome_pass: Option<bool>,
+}
+
+impl HistoryEntry {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("minibatch", Json::num(self.minibatch as f64)),
+            (
+                "action",
+                Json::str(match self.action {
+                    Action::Replace => "replace",
+                    Action::Skip => "skip",
+                }),
+            ),
+            ("hits_before", Json::num(self.hits_before)),
+        ];
+        if let Some(p) = self.predicted {
+            pairs.push((
+                "expected_hits",
+                Json::str(match p {
+                    HitsPrediction::Increase => "increase",
+                    HitsPrediction::Decrease => "decrease",
+                    HitsPrediction::Unchanged => "unchanged",
+                }),
+            ));
+        }
+        if let Some(h) = self.hits_after {
+            pairs.push(("hits_after", Json::num(h)));
+            pairs.push((
+                "delta_hits",
+                Json::num(((h - self.hits_before) * 100.0).round() / 100.0),
+            ));
+        }
+        if let (Some(ca), cb) = (self.comm_after, self.comm_before) {
+            pairs.push(("delta_comm", Json::num(ca - cb)));
+        }
+        if let Some(p) = self.outcome_pass {
+            pairs.push(("outcome", Json::str(if p { "pass" } else { "fail" })));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Maintains the decision history and closes the loop on outcomes.
+#[derive(Debug, Clone, Default)]
+pub struct ContextBuilder {
+    history: Vec<HistoryEntry>,
+    /// Maximum entries retained (prompt building trims further by tokens).
+    pub max_entries: usize,
+    /// How many of the newest entries are *not yet applied* when the next
+    /// observation arrives (async mode: the just-polled decision acts now,
+    /// so its outcome lags one poll; sync mode: 0).
+    pub eval_lag: usize,
+}
+
+impl ContextBuilder {
+    pub fn new() -> ContextBuilder {
+        ContextBuilder { history: Vec::new(), max_entries: 32, eval_lag: 0 }
+    }
+
+    /// Record a fresh decision (pre-decision metrics captured).
+    pub fn record_decision(
+        &mut self,
+        minibatch: u64,
+        action: Action,
+        predicted: Option<HitsPrediction>,
+        obs: &Observation,
+    ) {
+        self.history.push(HistoryEntry {
+            minibatch,
+            action,
+            predicted,
+            hits_before: obs.hits_pct,
+            hits_after: None,
+            comm_before: obs.comm_nodes_last as f64,
+            comm_after: None,
+            outcome_pass: None,
+        });
+        if self.history.len() > self.max_entries {
+            let excess = self.history.len() - self.max_entries;
+            self.history.drain(..excess);
+        }
+    }
+
+    /// When the next metrics arrive, evaluate the previous decision's
+    /// effectiveness (step 7 in Fig 9).  Returns the pass/fail outcome if a
+    /// prediction existed.
+    pub fn evaluate_previous(&mut self, obs: &Observation) -> Option<bool> {
+        if self.history.len() <= self.eval_lag {
+            return None;
+        }
+        let idx = self.history.len() - 1 - self.eval_lag;
+        let entry = &mut self.history[idx];
+        if entry.hits_after.is_some() {
+            return entry.outcome_pass;
+        }
+        entry.hits_after = Some(obs.hits_pct);
+        entry.comm_after = Some(obs.comm_nodes_last as f64);
+        let delta = obs.hits_pct - entry.hits_before;
+        entry.outcome_pass = entry.predicted.map(|p| p.matches(delta, HITS_TOLERANCE));
+        entry.outcome_pass
+    }
+
+    pub fn history(&self) -> &[HistoryEntry] {
+        &self.history
+    }
+
+    pub fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(hits: f64, comm: u64) -> Observation {
+        Observation { hits_pct: hits, comm_nodes_last: comm, ..Default::default() }
+    }
+
+    #[test]
+    fn records_and_evaluates() {
+        let mut ctx = ContextBuilder::new();
+        ctx.record_decision(5, Action::Replace, Some(HitsPrediction::Increase), &obs(40.0, 100));
+        assert_eq!(ctx.len(), 1);
+        assert!(ctx.history()[0].hits_after.is_none());
+        // Next metrics: hits rose by 5 -> prediction passes.
+        let pass = ctx.evaluate_previous(&obs(45.0, 80));
+        assert_eq!(pass, Some(true));
+        let e = &ctx.history()[0];
+        assert_eq!(e.hits_after, Some(45.0));
+        assert_eq!(e.comm_after, Some(80.0));
+    }
+
+    #[test]
+    fn failed_prediction() {
+        let mut ctx = ContextBuilder::new();
+        ctx.record_decision(1, Action::Replace, Some(HitsPrediction::Increase), &obs(40.0, 100));
+        assert_eq!(ctx.evaluate_previous(&obs(40.2, 100)), Some(false));
+    }
+
+    #[test]
+    fn unchanged_prediction_uses_tolerance() {
+        let mut ctx = ContextBuilder::new();
+        ctx.record_decision(1, Action::Skip, Some(HitsPrediction::Unchanged), &obs(40.0, 100));
+        assert_eq!(ctx.evaluate_previous(&obs(40.5, 100)), Some(true));
+    }
+
+    #[test]
+    fn double_evaluate_is_idempotent() {
+        let mut ctx = ContextBuilder::new();
+        ctx.record_decision(1, Action::Replace, Some(HitsPrediction::Increase), &obs(40.0, 100));
+        assert_eq!(ctx.evaluate_previous(&obs(50.0, 90)), Some(true));
+        // Second call must not overwrite with new metrics.
+        assert_eq!(ctx.evaluate_previous(&obs(0.0, 0)), Some(true));
+        assert_eq!(ctx.history()[0].hits_after, Some(50.0));
+    }
+
+    #[test]
+    fn bounded_history() {
+        let mut ctx = ContextBuilder::new();
+        ctx.max_entries = 4;
+        for i in 0..10 {
+            ctx.record_decision(i, Action::Skip, None, &obs(10.0, 1));
+        }
+        assert_eq!(ctx.len(), 4);
+        assert_eq!(ctx.history()[0].minibatch, 6);
+    }
+
+    #[test]
+    fn json_rendering_includes_outcome() {
+        let mut ctx = ContextBuilder::new();
+        ctx.record_decision(2, Action::Replace, Some(HitsPrediction::Increase), &obs(30.0, 50));
+        ctx.evaluate_previous(&obs(35.0, 40));
+        let j = ctx.history()[0].to_json().to_string_compact();
+        assert!(j.contains("\"outcome\":\"pass\""), "{j}");
+        assert!(j.contains("\"delta_hits\":5"), "{j}");
+    }
+}

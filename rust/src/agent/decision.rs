@@ -1,0 +1,103 @@
+//! DecisionMaker (paper §4.2, step 8 in Fig 9): assembles the prompt from
+//! the MetricsCollector snapshot + ContextBuilder history, invokes the
+//! backend, validates the response, and records the decision.
+
+use super::backend::LlmBackend;
+use super::context::ContextBuilder;
+use super::{parser, prompt, Action, AgentStep, Observation};
+
+pub struct DecisionMaker {
+    pub backend: Box<dyn LlmBackend>,
+    pub context: ContextBuilder,
+}
+
+impl DecisionMaker {
+    pub fn new(backend: Box<dyn LlmBackend>) -> DecisionMaker {
+        DecisionMaker { backend, context: ContextBuilder::new() }
+    }
+
+    /// One full agent step: evaluate the previous decision against the new
+    /// observation, build the prompt, query the model, parse and record.
+    pub fn decide(&mut self, minibatch: u64, obs: &Observation) -> AgentStep {
+        self.context.evaluate_previous(obs);
+        let prompt_text = prompt::build(obs, self.context.history());
+        let reply = self.backend.complete(&prompt_text);
+        let parsed = parser::parse(&reply.text);
+        let (action, prediction, valid) = match parsed {
+            Some(p) => (p.action, p.prediction, true),
+            // Invalid response ⇒ no action (skip), no prediction.
+            None => (Action::Skip, None, false),
+        };
+        self.context.record_decision(minibatch, action, prediction, obs);
+        AgentStep {
+            action,
+            prediction,
+            latency: reply.latency,
+            valid_response: valid,
+            raw_response: reply.text,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::backend::SimulatedLlm;
+    use crate::agent::profiles::by_name;
+
+    fn obs(hits: f64, occ: f64, pending: u64) -> Observation {
+        Observation {
+            hits_pct: hits,
+            buffer_occupancy_pct: occ,
+            stale_pct: 5.0,
+            minibatches_done: 10,
+            minibatches_pending: pending,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn full_loop_records_history_and_outcomes() {
+        let backend = SimulatedLlm::new(by_name("gemma3-4b").unwrap(), 1, false);
+        let mut dm = DecisionMaker::new(Box::new(backend));
+        let s1 = dm.decide(0, &obs(0.0, 10.0, 100));
+        assert!(s1.valid_response);
+        assert_eq!(s1.action, Action::Replace); // cold buffer
+        assert_eq!(dm.context.len(), 1);
+        // Second decision evaluates the first.
+        let _s2 = dm.decide(5, &obs(40.0, 60.0, 95));
+        assert_eq!(dm.context.len(), 2);
+        let first = &dm.context.history()[0];
+        assert_eq!(first.hits_after, Some(40.0));
+        assert_eq!(first.outcome_pass, Some(true), "hits rose as predicted");
+    }
+
+    #[test]
+    fn invalid_response_becomes_skip() {
+        struct Garbage;
+        impl LlmBackend for Garbage {
+            fn complete(&mut self, _p: &str) -> super::super::backend::BackendReply {
+                super::super::backend::BackendReply {
+                    text: "no json at all".into(),
+                    latency: 0.5,
+                }
+            }
+            fn name(&self) -> String {
+                "garbage".into()
+            }
+        }
+        let mut dm = DecisionMaker::new(Box::new(Garbage));
+        let s = dm.decide(0, &obs(50.0, 80.0, 50));
+        assert!(!s.valid_response);
+        assert_eq!(s.action, Action::Skip);
+        assert_eq!(s.prediction, None);
+    }
+
+    #[test]
+    fn latency_propagates() {
+        let backend = SimulatedLlm::new(by_name("mixtral-8x22b").unwrap(), 2, false);
+        let mut dm = DecisionMaker::new(Box::new(backend));
+        let s = dm.decide(0, &obs(50.0, 80.0, 50));
+        assert!(s.latency > 1.0, "22B model must be slow: {}", s.latency);
+    }
+}

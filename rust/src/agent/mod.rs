@@ -1,0 +1,62 @@
+//! The LLM-agent workflow (paper §4.2–4.3): MetricsCollector →
+//! ContextBuilder → DecisionMaker, over a pluggable [`backend::LlmBackend`].
+//!
+//! The agent is *zero-shot ICL*: every decision is one structured JSON
+//! prompt carrying (a) static graph/training metadata, (b) the latest
+//! runtime metrics, (c) the decision history with observed outcomes.  The
+//! response is parsed ([`parser`]) and validated; invalid responses are
+//! tallied (Table 2's Valid/Invalid column) and treated as skip.
+
+pub mod backend;
+pub mod context;
+pub mod decision;
+pub mod parser;
+pub mod profiles;
+pub mod prompt;
+
+use crate::metrics::HitsPrediction;
+
+/// The agent-visible observation snapshot (paper §4.3's metric classes).
+#[derive(Debug, Clone, Default)]
+pub struct Observation {
+    // Persistent buffer.
+    pub hits_pct: f64,
+    pub buffer_occupancy_pct: f64,
+    pub stale_pct: f64,
+    pub replaced_pct_last: f64,
+    // Training progress.
+    pub comm_nodes_last: u64,
+    pub comm_nodes_ema: f64,
+    pub minibatches_done: u64,
+    pub minibatches_pending: u64,
+    pub epoch: usize,
+    pub epochs_total: usize,
+    // Trends (vs the previous observation the agent saw).
+    pub delta_hits: f64,
+    pub delta_comm: f64,
+    // Static graph metadata.
+    pub graph_nodes: u64,
+    pub graph_edges: u64,
+    pub partition_nodes: u64,
+    pub halo_nodes: u64,
+    pub buffer_capacity: u64,
+}
+
+/// What the controller tells the prefetcher to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    Replace,
+    Skip,
+}
+
+/// A fully processed agent step.
+#[derive(Debug, Clone)]
+pub struct AgentStep {
+    pub action: Action,
+    pub prediction: Option<HitsPrediction>,
+    /// Inference latency in (virtual) seconds.
+    pub latency: f64,
+    pub valid_response: bool,
+    /// Raw response text (kept for tracing / failure analysis).
+    pub raw_response: String,
+}

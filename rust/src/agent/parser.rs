@@ -1,0 +1,91 @@
+//! Response validation: LLM text → structured decision, or `None`
+//! (Table 2's Invalid-Response accounting).
+//!
+//! A response is *valid* iff it contains a JSON object whose `action` is
+//! exactly `"replace"` or `"skip"`.  `expected_hits` is optional but, when
+//! present, must parse into a [`HitsPrediction`] — a well-formed action
+//! with a garbage prediction still counts as valid (matches the paper's
+//! IFEVAL-style compliance criterion on the answer format).
+
+use super::Action;
+use crate::metrics::HitsPrediction;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedResponse {
+    pub action: Action,
+    pub prediction: Option<HitsPrediction>,
+    pub reason: Option<String>,
+}
+
+/// Parse an LLM response; `None` = invalid (non-compliant) response.
+pub fn parse(text: &str) -> Option<ParsedResponse> {
+    let j = Json::extract_object(text)?;
+    let action = match j.get("action")?.as_str()? {
+        "replace" => Action::Replace,
+        "skip" => Action::Skip,
+        _ => return None,
+    };
+    let prediction = j
+        .get("expected_hits")
+        .and_then(Json::as_str)
+        .and_then(HitsPrediction::parse);
+    let reason = j.get("reason").and_then(Json::as_str).map(str::to_string);
+    Some(ParsedResponse { action, prediction, reason })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_clean_response() {
+        let r = parse(
+            r#"{"action": "replace", "expected_hits": "increase", "reason": "low hits"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.action, Action::Replace);
+        assert_eq!(r.prediction, Some(HitsPrediction::Increase));
+        assert_eq!(r.reason.as_deref(), Some("low hits"));
+    }
+
+    #[test]
+    fn parses_json_wrapped_in_prose() {
+        let r = parse(
+            "Sure, here's my analysis:\n```json\n{\"action\": \"skip\", \
+             \"expected_hits\": \"unchanged\"}\n```\nLet me know!",
+        )
+        .unwrap();
+        assert_eq!(r.action, Action::Skip);
+        assert_eq!(r.prediction, Some(HitsPrediction::Unchanged));
+    }
+
+    #[test]
+    fn rejects_wrong_action_enum() {
+        assert!(parse(r#"{"action": "maybe"}"#).is_none());
+        assert!(parse(r#"{"decision": true}"#).is_none());
+    }
+
+    #[test]
+    fn rejects_truncated_json() {
+        assert!(parse(r#"{"action": "replace", "expected_hits": "incre"#).is_none());
+    }
+
+    #[test]
+    fn rejects_plain_prose() {
+        assert!(parse("I would probably replace the buffer contents now.").is_none());
+    }
+
+    #[test]
+    fn action_without_prediction_is_valid() {
+        let r = parse(r#"{"action": "skip"}"#).unwrap();
+        assert_eq!(r.action, Action::Skip);
+        assert_eq!(r.prediction, None);
+    }
+
+    #[test]
+    fn garbage_prediction_tolerated() {
+        let r = parse(r#"{"action": "replace", "expected_hits": "banana"}"#).unwrap();
+        assert_eq!(r.prediction, None);
+    }
+}

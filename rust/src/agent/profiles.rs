@@ -1,0 +1,201 @@
+//! LLM model profiles (paper Table 1b + Fig 6).
+//!
+//! Substitution (DESIGN.md §2): the sandbox cannot serve real quantized
+//! LLMs, so each model the paper deployed via Ollama is represented by a
+//! profile — serving characteristics (prefill/decode rates derived from
+//! model size and quantization on an A100-class device), benchmark scores
+//! (MATH-500 / IFEVAL, Fig 6), and *behavioural* parameters (reasoning
+//! quality, JSON-compliance, replacement bias) calibrated against the
+//! paper's measured failure modes (Table 2: Gemma3-1B's always-replace
+//! bias, Qwen's 44% valid-response rate, SmolLM noise, MoE latency).
+//! The agent loop, prompts, parsing and evaluation are fully real; only the
+//! token generator is simulated.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LlmKind {
+    Base,
+    Slm,
+    Distill,
+    Moe,
+}
+
+#[derive(Debug, Clone)]
+pub struct LlmProfile {
+    pub name: &'static str,
+    pub kind: LlmKind,
+    /// Model / KV-cache size (GB), Table 1b.
+    pub size_gb: f64,
+    pub kv_gb: f64,
+    pub quant: &'static str,
+    /// Serving rates (tokens/s) on the shared A100.
+    pub prefill_tps: f64,
+    pub decode_tps: f64,
+    /// Mean response length (tokens) without CoT.
+    pub out_tokens: f64,
+    /// Benchmark scores (0–100) for the Fig 6 spider chart.
+    pub math500: f64,
+    pub ifeval: f64,
+    /// Probability a decision follows the sound reasoning policy (vs noise).
+    pub reasoning_quality: f64,
+    /// Probability of emitting a malformed / non-compliant response.
+    pub invalid_rate: f64,
+    /// Probability of forcing "replace" regardless of reasoning (the
+    /// paper's "replacement bias", §5.3).
+    pub replace_bias: f64,
+}
+
+/// All models evaluated in the paper (Tables 1b, 2, 5).
+pub const ALL: &[LlmProfile] = &[
+    LlmProfile {
+        name: "gemma3-4b", kind: LlmKind::Base,
+        size_gb: 3.3, kv_gb: 0.27, quant: "Q4_K_M",
+        prefill_tps: 3000.0, decode_tps: 110.0, out_tokens: 58.0,
+        math500: 76.0, ifeval: 90.0,
+        reasoning_quality: 0.97, invalid_rate: 0.0, replace_bias: 0.0,
+    },
+    LlmProfile {
+        name: "gemma3-1b", kind: LlmKind::Base,
+        size_gb: 0.8, kv_gb: 0.05, quant: "Q4_K_M",
+        prefill_tps: 5200.0, decode_tps: 90.0, out_tokens: 46.0,
+        math500: 45.0, ifeval: 80.0,
+        // High compliance, but pathological policy: infers decline from
+        // rising %-Hits and replaces aggressively (paper §5.3).
+        reasoning_quality: 0.85, invalid_rate: 0.0, replace_bias: 1.0,
+    },
+    LlmProfile {
+        name: "llama3.2-3b", kind: LlmKind::Base,
+        size_gb: 2.0, kv_gb: 0.22, quant: "Q4_K_M",
+        prefill_tps: 6000.0, decode_tps: 120.0, out_tokens: 42.0,
+        math500: 51.0, ifeval: 77.0,
+        reasoning_quality: 0.80, invalid_rate: 0.01, replace_bias: 0.0,
+    },
+    LlmProfile {
+        name: "smollm2-360m", kind: LlmKind::Slm,
+        size_gb: 0.38, kv_gb: 0.08, quant: "Q4_K_M",
+        prefill_tps: 12000.0, decode_tps: 140.0, out_tokens: 38.0,
+        math500: 19.0, ifeval: 41.0,
+        reasoning_quality: 0.12, invalid_rate: 0.13, replace_bias: 0.0,
+    },
+    LlmProfile {
+        name: "smollm2-1.7b", kind: LlmKind::Slm,
+        size_gb: 1.06, kv_gb: 0.38, quant: "Q4_K_M",
+        prefill_tps: 8000.0, decode_tps: 140.0, out_tokens: 44.0,
+        math500: 31.0, ifeval: 56.0,
+        reasoning_quality: 0.28, invalid_rate: 0.08, replace_bias: 0.45,
+    },
+    LlmProfile {
+        name: "qwen-1.5b", kind: LlmKind::Distill,
+        // DeepSeek-R1-Distill-Qwen-1.5B at F16: 10 GB, reasoning-style long
+        // outputs, poor format compliance (44% valid, Table 2).
+        size_gb: 10.0, kv_gb: 0.05, quant: "F16",
+        prefill_tps: 1500.0, decode_tps: 150.0, out_tokens: 240.0,
+        math500: 83.0, ifeval: 35.0,
+        reasoning_quality: 0.55, invalid_rate: 0.56, replace_bias: 0.30,
+    },
+    LlmProfile {
+        name: "mixtral-8x7b", kind: LlmKind::Moe,
+        size_gb: 24.0, kv_gb: 0.26, quant: "Q3_K_L",
+        prefill_tps: 1600.0, decode_tps: 50.0, out_tokens: 60.0,
+        math500: 42.0, ifeval: 62.0,
+        reasoning_quality: 0.58, invalid_rate: 0.06, replace_bias: 0.18,
+    },
+    LlmProfile {
+        name: "mixtral-8x22b", kind: LlmKind::Moe,
+        // Q2_K low-bit quantization degrades reasoning in large models
+        // (paper §5.6) — quality below its size class, massive latency.
+        size_gb: 52.0, kv_gb: 0.45, quant: "Q2_K",
+        prefill_tps: 700.0, decode_tps: 35.0, out_tokens: 70.0,
+        math500: 38.0, ifeval: 70.0,
+        reasoning_quality: 0.62, invalid_rate: 0.0, replace_bias: 0.55,
+    },
+    LlmProfile {
+        name: "granite3.1-3b", kind: LlmKind::Moe,
+        size_gb: 6.6, kv_gb: 0.13, quant: "F16",
+        prefill_tps: 1800.0, decode_tps: 45.0, out_tokens: 55.0,
+        math500: 40.0, ifeval: 66.0,
+        reasoning_quality: 0.52, invalid_rate: 0.01, replace_bias: 0.25,
+    },
+];
+
+pub fn by_name(name: &str) -> Option<&'static LlmProfile> {
+    ALL.iter().find(|p| p.name == name)
+}
+
+pub fn names() -> String {
+    ALL.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+}
+
+/// The models of Table 2 (non-MoE evaluation set).
+pub fn table2_models() -> Vec<&'static LlmProfile> {
+    ALL.iter().filter(|p| p.kind != LlmKind::Moe).collect()
+}
+
+/// The MoE set of Table 5 / Fig 21.
+pub fn moe_models() -> Vec<&'static LlmProfile> {
+    ALL.iter().filter(|p| p.kind == LlmKind::Moe).collect()
+}
+
+impl LlmProfile {
+    /// Response latency for a prompt of `prompt_tokens`, optionally with
+    /// chain-of-thought (4–5× response length, paper §4.3.2).
+    pub fn latency(&self, prompt_tokens: usize, cot: bool) -> f64 {
+        let out = if cot { self.out_tokens * 4.5 } else { self.out_tokens };
+        prompt_tokens as f64 / self.prefill_tps + out / self.decode_tps
+    }
+
+    /// GPU memory residency (GB) — model + KV cache (Table 1b).
+    pub fn memory_gb(&self) -> f64 {
+        self.size_gb + self.kv_gb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_table_1b() {
+        assert_eq!(ALL.len(), 9);
+        assert_eq!(by_name("gemma3-4b").unwrap().size_gb, 3.3);
+        assert_eq!(by_name("mixtral-8x22b").unwrap().quant, "Q2_K");
+        assert!(by_name("gpt4").is_none());
+        assert_eq!(table2_models().len(), 6);
+        assert_eq!(moe_models().len(), 3);
+    }
+
+    #[test]
+    fn latency_ordering_matches_paper() {
+        // Llama3.2-3B: "least latency"; Qwen/Mixtral-22B slowest.
+        let prompt = 1500;
+        let llama = by_name("llama3.2-3b").unwrap().latency(prompt, false);
+        let gemma4 = by_name("gemma3-4b").unwrap().latency(prompt, false);
+        let qwen = by_name("qwen-1.5b").unwrap().latency(prompt, false);
+        let mixtral22 = by_name("mixtral-8x22b").unwrap().latency(prompt, false);
+        assert!(llama < gemma4, "llama {llama} vs gemma4 {gemma4}");
+        assert!(gemma4 < qwen, "gemma4 {gemma4} vs qwen {qwen}");
+        assert!(qwen < mixtral22, "qwen {qwen} vs mixtral22 {mixtral22}");
+    }
+
+    #[test]
+    fn cot_multiplies_latency() {
+        let p = by_name("gemma3-4b").unwrap();
+        let plain = p.latency(1500, false);
+        let cot = p.latency(1500, true);
+        assert!(cot / plain > 2.0 && cot / plain < 6.0, "ratio {}", cot / plain);
+    }
+
+    #[test]
+    fn behavioural_params_in_range() {
+        for p in ALL {
+            assert!((0.0..=1.0).contains(&p.reasoning_quality), "{}", p.name);
+            assert!((0.0..=1.0).contains(&p.invalid_rate), "{}", p.name);
+            assert!((0.0..=1.0).contains(&p.replace_bias), "{}", p.name);
+            assert!(p.memory_gb() > p.size_gb);
+        }
+    }
+
+    #[test]
+    fn gemma1b_has_total_replace_bias() {
+        assert_eq!(by_name("gemma3-1b").unwrap().replace_bias, 1.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Prompt engineering (paper §4.3.2, Fig 10).
+//!
+//! Zero-shot ICL: a structured task definition with the system description,
+//! objective, metric explanations, static graph metadata, the latest
+//! observations, and the recent decision history — ending with a strict
+//! JSON answer schema.  The prompt embeds the observation as a JSON block,
+//! which is also what the [`super::backend::SimulatedLlm`] parses (it sees
+//! only this text, exactly like a real model would).
+
+use super::context::HistoryEntry;
+use super::Observation;
+use crate::util::json::Json;
+
+/// Context-window budget (paper fixes < 2048 tokens); history is trimmed
+/// to fit.  We approximate 4 chars/token.
+pub const MAX_TOKENS: usize = 2048;
+
+pub fn estimate_tokens(text: &str) -> usize {
+    text.len() / 4
+}
+
+/// Observation → the JSON block embedded in the prompt.
+pub fn observation_json(o: &Observation) -> Json {
+    Json::obj(vec![
+        ("hits_pct", Json::num(round2(o.hits_pct))),
+        ("buffer_occupancy_pct", Json::num(round2(o.buffer_occupancy_pct))),
+        ("stale_pct", Json::num(round2(o.stale_pct))),
+        ("replaced_pct_last", Json::num(round2(o.replaced_pct_last))),
+        ("comm_nodes_last", Json::num(o.comm_nodes_last as f64)),
+        ("comm_nodes_ema", Json::num(round2(o.comm_nodes_ema))),
+        ("minibatches_done", Json::num(o.minibatches_done as f64)),
+        ("minibatches_pending", Json::num(o.minibatches_pending as f64)),
+        ("epoch", Json::num(o.epoch as f64)),
+        ("epochs_total", Json::num(o.epochs_total as f64)),
+        ("delta_hits", Json::num(round2(o.delta_hits))),
+        ("delta_comm", Json::num(round2(o.delta_comm))),
+    ])
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
+/// Build the full decision prompt.
+pub fn build(o: &Observation, history: &[HistoryEntry]) -> String {
+    let mut s = String::with_capacity(4096);
+    s.push_str(
+        "You are a prefetching controller embedded in a distributed GNN \
+         training system (DistDGL). Each trainer keeps a fixed-size persistent \
+         buffer of remote node features. A scoring policy marks rarely used \
+         nodes stale; your job is to decide WHEN to run a replacement round \
+         (evict stale nodes, admit recently sampled remote nodes).\n\n\
+         OBJECTIVE: maximize hits_pct (fraction of sampled remote nodes served \
+         from the buffer) while keeping communication (comm_nodes) low. \
+         Replacements cost communication now to save communication later; \
+         avoid replacements when training is nearly done \
+         (minibatches_pending low) or when the buffer is already effective \
+         (hits_pct high and rising).\n\n",
+    );
+    s.push_str("METRICS (meaning):\n\
+         - hits_pct: % of sampled remote nodes found in the buffer (higher is better)\n\
+         - stale_pct: % of buffer slots whose score decayed below the stale threshold\n\
+         - comm_nodes_last / comm_nodes_ema: remote nodes fetched last minibatch / trend\n\
+         - delta_hits / delta_comm: change since your previous decision\n\
+         - replaced_pct_last: % of buffer replaced by your last replacement\n\n");
+    s.push_str("GRAPH (static):\n");
+    let meta = Json::obj(vec![
+        ("graph_nodes", Json::num(o.graph_nodes as f64)),
+        ("graph_edges", Json::num(o.graph_edges as f64)),
+        ("partition_nodes", Json::num(o.partition_nodes as f64)),
+        ("halo_nodes", Json::num(o.halo_nodes as f64)),
+        ("buffer_capacity", Json::num(o.buffer_capacity as f64)),
+    ]);
+    s.push_str(&meta.to_string_pretty());
+    s.push_str("\n\nCURRENT METRICS:\n");
+    s.push_str(&observation_json(o).to_string_pretty());
+
+    // History, newest first, trimmed to the token budget.
+    s.push_str("\n\nRECENT DECISIONS (newest first):\n");
+    let budget_chars = MAX_TOKENS * 4;
+    for h in history.iter().rev() {
+        let line = h.to_json().to_string_compact();
+        if s.len() + line.len() + 512 > budget_chars {
+            break;
+        }
+        s.push_str(&line);
+        s.push('\n');
+    }
+
+    s.push_str(
+        "\nRespond with ONLY a JSON object:\n\
+         {\"action\": \"replace\" | \"skip\", \
+         \"expected_hits\": \"increase\" | \"decrease\" | \"unchanged\", \
+         \"reason\": \"<one sentence>\"}\n",
+    );
+    debug_assert!(estimate_tokens(&s) <= MAX_TOKENS + 256, "prompt over budget");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::Action;
+    use crate::metrics::HitsPrediction;
+
+    fn obs() -> Observation {
+        Observation {
+            hits_pct: 42.5,
+            buffer_occupancy_pct: 80.0,
+            stale_pct: 12.0,
+            replaced_pct_last: 5.0,
+            comm_nodes_last: 1234,
+            comm_nodes_ema: 1100.0,
+            minibatches_done: 10,
+            minibatches_pending: 90,
+            epoch: 1,
+            epochs_total: 5,
+            delta_hits: 3.0,
+            delta_comm: -50.0,
+            graph_nodes: 60000,
+            graph_edges: 770000,
+            partition_nodes: 15000,
+            halo_nodes: 9000,
+            buffer_capacity: 450,
+        }
+    }
+
+    fn hist(n: usize) -> Vec<HistoryEntry> {
+        (0..n)
+            .map(|i| HistoryEntry {
+                minibatch: i as u64,
+                action: if i % 2 == 0 { Action::Replace } else { Action::Skip },
+                predicted: Some(HitsPrediction::Increase),
+                hits_before: 30.0 + i as f64,
+                hits_after: Some(31.0 + i as f64),
+                comm_before: 1000.0,
+                comm_after: Some(900.0),
+                outcome_pass: Some(true),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prompt_contains_all_sections() {
+        let p = build(&obs(), &hist(3));
+        for needle in [
+            "OBJECTIVE", "GRAPH (static)", "CURRENT METRICS", "RECENT DECISIONS",
+            "\"hits_pct\": 42.5", "\"action\"", "buffer_capacity",
+        ] {
+            assert!(p.contains(needle), "missing '{needle}'");
+        }
+    }
+
+    #[test]
+    fn observation_json_roundtrips() {
+        let j = observation_json(&obs());
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("comm_nodes_last").unwrap().as_i64(), Some(1234));
+        assert_eq!(parsed.get("delta_hits").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn long_history_respects_token_budget() {
+        let p = build(&obs(), &hist(500));
+        assert!(
+            estimate_tokens(&p) <= MAX_TOKENS + 256,
+            "prompt {} tokens",
+            estimate_tokens(&p)
+        );
+    }
+
+    #[test]
+    fn newest_history_survives_trimming() {
+        let h = hist(500);
+        let p = build(&obs(), &h);
+        // The newest entry (minibatch 499) must be present.
+        assert!(p.contains("\"minibatch\":499"), "newest history entry trimmed");
+    }
+}

@@ -1,0 +1,421 @@
+//! The persistent buffer: Rudder's per-trainer cache of remote-node features.
+//!
+//! Fixed capacity (`pct × |halo|`, paper §5.1), starts empty, and is
+//! refreshed by *replacement rounds*: evict stale nodes (score < 0.95 under
+//! the [`scoring`] policy) and admit recently sampled remote nodes that
+//! missed.  The *when* of those rounds is the controller's decision (LLM
+//! agent / ML classifier / fixed / never); the *what* is decided here.
+//!
+//! Layout is SoA (ids / scores / accessed / live columns) so the
+//! per-minibatch score pass is a linear sweep — the same access pattern the
+//! `score_update` Pallas kernel implements for the XLA path.
+
+pub mod scoring;
+
+use crate::util::fasthash::FastMap;
+
+use scoring::{Policy, DECAY, INITIAL_SCORE, STALE_THRESHOLD};
+
+/// Result of a buffer lookup for one minibatch.
+#[derive(Debug, Clone, Default)]
+pub struct LookupResult {
+    pub hits: usize,
+    pub misses: usize,
+    /// Missed node ids (to fetch remotely this minibatch).
+    pub missed_nodes: Vec<u32>,
+}
+
+impl LookupResult {
+    /// The paper's %-Hits metric: sampled remote nodes found in the buffer.
+    pub fn hits_pct(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            100.0
+        } else {
+            self.hits as f64 / total as f64 * 100.0
+        }
+    }
+}
+
+/// Outcome of a replacement round.
+#[derive(Debug, Clone, Default)]
+pub struct ReplaceOutcome {
+    pub evicted: usize,
+    pub inserted: usize,
+    /// Nodes newly admitted (their features must be fetched).
+    pub fetched_nodes: Vec<u32>,
+    /// True when no stale node existed, so replacement was skipped.
+    pub skipped: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct PersistentBuffer {
+    capacity: usize,
+    policy: Policy,
+    /// node id per slot (u32::MAX = free).
+    ids: Vec<u32>,
+    scores: Vec<f32>,
+    accessed: Vec<bool>,
+    live: Vec<bool>,
+    /// LRU clock per slot (policy == Lru).
+    last_used: Vec<u64>,
+    clock: u64,
+    index: FastMap<u32, u32>,
+    free: Vec<u32>,
+    /// Decayed miss-frequency of remote nodes (admission candidates).
+    miss_freq: FastMap<u32, f32>,
+    rounds: u64,
+}
+
+impl PersistentBuffer {
+    pub fn new(capacity: usize, policy: Policy) -> PersistentBuffer {
+        PersistentBuffer {
+            capacity,
+            policy,
+            ids: vec![u32::MAX; capacity],
+            scores: vec![0.0; capacity],
+            accessed: vec![false; capacity],
+            live: vec![false; capacity],
+            last_used: vec![0; capacity],
+            clock: 0,
+            index: FastMap::with_capacity_and_hasher(capacity, Default::default()),
+            free: (0..capacity as u32).rev().collect(),
+            miss_freq: FastMap::default(),
+            rounds: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            self.len() as f64 / self.capacity as f64
+        }
+    }
+
+    pub fn contains(&self, node: u32) -> bool {
+        self.index.contains_key(&node)
+    }
+
+    /// Look up this minibatch's sampled remote nodes; marks hits accessed
+    /// and records misses as admission candidates.
+    pub fn lookup(&mut self, remote_nodes: &[u32]) -> LookupResult {
+        self.clock += 1;
+        let mut res = LookupResult::default();
+        for &v in remote_nodes {
+            match self.index.get(&v) {
+                Some(&slot) => {
+                    res.hits += 1;
+                    self.accessed[slot as usize] = true;
+                    self.last_used[slot as usize] = self.clock;
+                }
+                None => {
+                    res.misses += 1;
+                    res.missed_nodes.push(v);
+                    *self.miss_freq.entry(v).or_insert(0.0) += 1.0;
+                }
+            }
+        }
+        res
+    }
+
+    /// End-of-minibatch score pass (the Fig 4 policy / Pallas kernel).
+    /// Returns the number of stale slots.
+    pub fn end_round(&mut self) -> usize {
+        self.rounds += 1;
+        let stale = match self.policy {
+            Policy::FreqDecay => {
+                scoring::apply_round(&mut self.scores, &mut self.accessed, &self.live)
+            }
+            Policy::Lfu => {
+                // Counts only grow; staleness = anything (eviction ranks).
+                for i in 0..self.capacity {
+                    if self.live[i] && self.accessed[i] {
+                        self.scores[i] += 1.0;
+                        self.accessed[i] = false;
+                    }
+                }
+                self.len()
+            }
+            Policy::Lru => self.len(),
+        };
+        // Decay miss-frequency so admission prefers *recent* misses.
+        self.miss_freq.retain(|_, f| {
+            *f *= DECAY;
+            *f > 0.05
+        });
+        stale
+    }
+
+    /// Stale slot count without mutating (controller metric).
+    pub fn stale_count(&self) -> usize {
+        match self.policy {
+            Policy::FreqDecay => (0..self.capacity)
+                .filter(|&i| self.live[i] && self.scores[i] < STALE_THRESHOLD)
+                .count(),
+            _ => self.len(),
+        }
+    }
+
+    /// Execute a replacement round: evict stale slots, admit the
+    /// highest-miss-frequency candidates (paper: "recently sampled remote
+    /// nodes").  No stale nodes ⇒ skipped (when the buffer is full).
+    pub fn replace(&mut self) -> ReplaceOutcome {
+        let mut out = ReplaceOutcome::default();
+        // 1. Evict.
+        match self.policy {
+            Policy::FreqDecay => {
+                for slot in 0..self.capacity {
+                    if self.live[slot] && self.scores[slot] < STALE_THRESHOLD {
+                        self.evict_slot(slot as u32);
+                        out.evicted += 1;
+                    }
+                }
+            }
+            Policy::Lfu | Policy::Lru => {
+                // Evict the bottom quartile by count / recency.
+                let mut liveslots: Vec<u32> = (0..self.capacity as u32)
+                    .filter(|&s| self.live[s as usize])
+                    .collect();
+                let keyfn = |s: &u32| match self.policy {
+                    Policy::Lfu => self.scores[*s as usize] as u64,
+                    _ => self.last_used[*s as usize],
+                };
+                liveslots.sort_by_key(keyfn);
+                let evict_n = liveslots.len() / 4;
+                for &s in &liveslots[..evict_n] {
+                    self.evict_slot(s);
+                    out.evicted += 1;
+                }
+            }
+        }
+        if out.evicted == 0 && self.free.is_empty() {
+            out.skipped = true;
+            return out;
+        }
+        // 2. Admit by descending miss frequency.
+        let mut candidates: Vec<(u32, f32)> = self
+            .miss_freq
+            .iter()
+            .filter(|(v, _)| !self.index.contains_key(v))
+            .map(|(&v, &f)| (v, f))
+            .collect();
+        candidates.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        for (v, _) in candidates {
+            let Some(slot) = self.free.pop() else { break };
+            self.insert_at(slot, v);
+            out.inserted += 1;
+            out.fetched_nodes.push(v);
+            self.miss_freq.remove(&v);
+        }
+        out
+    }
+
+    /// Pre-populate (MassiveGNN-style warm start); fills up to capacity.
+    pub fn prepopulate(&mut self, nodes: &[u32]) -> usize {
+        let mut inserted = 0;
+        for &v in nodes {
+            if self.index.contains_key(&v) {
+                continue;
+            }
+            let Some(slot) = self.free.pop() else { break };
+            self.insert_at(slot, v);
+            inserted += 1;
+        }
+        inserted
+    }
+
+    fn insert_at(&mut self, slot: u32, node: u32) {
+        let s = slot as usize;
+        self.ids[s] = node;
+        self.scores[s] = INITIAL_SCORE;
+        self.accessed[s] = false;
+        self.live[s] = true;
+        self.last_used[s] = self.clock;
+        self.index.insert(node, slot);
+    }
+
+    fn evict_slot(&mut self, slot: u32) {
+        let s = slot as usize;
+        debug_assert!(self.live[s]);
+        self.index.remove(&self.ids[s]);
+        self.ids[s] = u32::MAX;
+        self.live[s] = false;
+        self.scores[s] = 0.0;
+        self.accessed[s] = false;
+        self.free.push(slot);
+    }
+
+    /// Internal consistency check (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.index.len() + self.free.len() != self.capacity {
+            return Err(format!(
+                "index {} + free {} != capacity {}",
+                self.index.len(),
+                self.free.len(),
+                self.capacity
+            ));
+        }
+        for (&node, &slot) in &self.index {
+            let s = slot as usize;
+            if !self.live[s] || self.ids[s] != node {
+                return Err(format!("index broken for node {node} slot {slot}"));
+            }
+        }
+        for &slot in &self.free {
+            if self.live[slot as usize] {
+                return Err(format!("free slot {slot} is live"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(cap: usize) -> PersistentBuffer {
+        PersistentBuffer::new(cap, Policy::FreqDecay)
+    }
+
+    #[test]
+    fn starts_empty_all_misses() {
+        let mut b = buf(8);
+        let r = b.lookup(&[1, 2, 3]);
+        assert_eq!(r.hits, 0);
+        assert_eq!(r.misses, 3);
+        assert_eq!(r.hits_pct(), 0.0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn replace_admits_missed_nodes() {
+        let mut b = buf(4);
+        b.lookup(&[10, 11, 12]);
+        b.end_round();
+        let out = b.replace();
+        assert_eq!(out.inserted, 3);
+        assert!(!out.skipped);
+        assert_eq!(out.fetched_nodes.len(), 3);
+        let r = b.lookup(&[10, 11, 12]);
+        assert_eq!(r.hits, 3);
+        assert_eq!(r.hits_pct(), 100.0);
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_prefers_frequent_misses() {
+        let mut b = buf(1);
+        b.lookup(&[5]);
+        b.lookup(&[5]);
+        b.lookup(&[9]);
+        b.end_round();
+        let out = b.replace();
+        assert_eq!(out.inserted, 1);
+        assert!(b.contains(5), "5 missed twice, 9 once");
+    }
+
+    #[test]
+    fn skip_when_no_stale_and_full() {
+        let mut b = buf(2);
+        b.lookup(&[1, 2]);
+        b.end_round();
+        b.replace();
+        // Keep both hot.
+        b.lookup(&[1, 2, 3]);
+        b.end_round();
+        let out = b.replace();
+        assert!(out.skipped);
+        assert_eq!(out.inserted, 0);
+        assert!(b.contains(1) && b.contains(2));
+    }
+
+    #[test]
+    fn stale_nodes_evicted_after_decay() {
+        let mut b = buf(2);
+        b.lookup(&[1, 2]);
+        b.end_round();
+        b.replace();
+        // Node 1 stays hot; node 2 idles for two rounds -> stale.
+        for _ in 0..2 {
+            b.lookup(&[1, 7]);
+            b.end_round();
+        }
+        assert_eq!(b.stale_count(), 1);
+        let out = b.replace();
+        assert_eq!(out.evicted, 1);
+        assert!(!b.contains(2));
+        assert!(b.contains(7), "recent miss admitted");
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut b = buf(3);
+        for round in 0..20u32 {
+            let nodes: Vec<u32> = (round * 5..round * 5 + 5).collect();
+            b.lookup(&nodes);
+            b.end_round();
+            b.replace();
+            assert!(b.len() <= 3);
+            b.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn prepopulate_fills_to_capacity() {
+        let mut b = buf(3);
+        assert_eq!(b.prepopulate(&[1, 2, 3, 4, 5]), 3);
+        assert_eq!(b.len(), 3);
+        assert!(b.contains(1) && b.contains(2) && b.contains(3));
+        assert_eq!(b.prepopulate(&[9]), 0);
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hits_pct_empty_lookup_is_100() {
+        let mut b = buf(2);
+        assert_eq!(b.lookup(&[]).hits_pct(), 100.0);
+    }
+
+    #[test]
+    fn lru_policy_evicts_oldest() {
+        let mut b = PersistentBuffer::new(4, Policy::Lru);
+        b.lookup(&[1, 2, 3, 4]);
+        b.end_round();
+        b.replace();
+        // Touch 2,3,4 but not 1.
+        b.lookup(&[2, 3, 4]);
+        b.end_round();
+        b.lookup(&[5]);
+        b.end_round();
+        let out = b.replace();
+        assert!(out.evicted >= 1);
+        assert!(!b.contains(1), "LRU must evict node 1 first");
+    }
+
+    #[test]
+    fn zero_capacity_buffer_is_inert() {
+        let mut b = buf(0);
+        let r = b.lookup(&[1, 2]);
+        assert_eq!(r.misses, 2);
+        b.end_round();
+        let out = b.replace();
+        assert_eq!(out.inserted, 0);
+        assert!(out.skipped);
+        b.check_invariants().unwrap();
+    }
+}

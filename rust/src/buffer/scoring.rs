@@ -1,0 +1,111 @@
+//! The Fig 4 scoring policy, mirrored bit-for-bit by the Pallas
+//! `score_update` kernel (python/compile/kernels/score.py).
+//!
+//! Access ⇒ `score += 1`.  Not accessed during the minibatch-sampling epoch
+//! ⇒ `score *= 0.95`.  `score < 0.95` ⇒ the node is **stale** (evictable).
+//! More aggressive than LFU: long-unused items decay geometrically instead
+//! of persisting on historical counts (the paper's anti-cache-pollution
+//! argument, §2.1).
+
+pub const DECAY: f32 = 0.95;
+pub const STALE_THRESHOLD: f32 = 0.95;
+/// Score granted to a freshly inserted node (one access).
+pub const INITIAL_SCORE: f32 = 1.0;
+
+/// Apply one round of the policy to dense score/accessed columns.
+/// Returns the number of stale slots.  `live[i] == false` slots are skipped.
+pub fn apply_round(scores: &mut [f32], accessed: &mut [bool], live: &[bool]) -> usize {
+    debug_assert_eq!(scores.len(), accessed.len());
+    debug_assert_eq!(scores.len(), live.len());
+    let mut stale = 0usize;
+    for i in 0..scores.len() {
+        if !live[i] {
+            continue;
+        }
+        if accessed[i] {
+            scores[i] += 1.0;
+            accessed[i] = false;
+        } else {
+            scores[i] *= DECAY;
+        }
+        if scores[i] < STALE_THRESHOLD {
+            stale += 1;
+        }
+    }
+    stale
+}
+
+/// Alternative policies for the replacement-strategy ablation (Fig 3 bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's frequency-decay policy.
+    FreqDecay,
+    /// Classic LFU: counts only grow; eviction picks the minimum count.
+    Lfu,
+    /// LRU: evict the least-recently-accessed slot.
+    Lru,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> anyhow::Result<Policy> {
+        match s {
+            "freq_decay" | "rudder" => Ok(Policy::FreqDecay),
+            "lfu" => Ok(Policy::Lfu),
+            "lru" => Ok(Policy::Lru),
+            _ => anyhow::bail!("unknown scoring policy '{s}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessed_increment_unaccessed_decay() {
+        let mut scores = vec![1.0, 1.0, 2.0];
+        let mut accessed = vec![true, false, false];
+        let live = vec![true, true, true];
+        let stale = apply_round(&mut scores, &mut accessed, &live);
+        assert_eq!(scores, vec![2.0, 0.95, 1.9]);
+        assert_eq!(stale, 0); // 0.95 is not < 0.95
+        assert_eq!(accessed, vec![false, false, false]);
+    }
+
+    #[test]
+    fn stale_detection_matches_kernel_semantics() {
+        // Mirror python/tests/test_kernels.py::test_score_update_semantics.
+        let mut scores = vec![1.0, 1.0, 0.99, 10.0];
+        let mut accessed = vec![true, false, false, false];
+        let live = vec![true; 4];
+        let stale = apply_round(&mut scores, &mut accessed, &live);
+        assert!((scores[2] - 0.9405).abs() < 1e-6);
+        assert_eq!(stale, 1);
+    }
+
+    #[test]
+    fn two_idle_rounds_to_stale_from_fresh() {
+        let mut scores = vec![INITIAL_SCORE];
+        let mut accessed = vec![false];
+        let live = vec![true];
+        assert_eq!(apply_round(&mut scores, &mut accessed, &live), 0);
+        assert_eq!(apply_round(&mut scores, &mut accessed, &live), 1);
+    }
+
+    #[test]
+    fn dead_slots_skipped() {
+        let mut scores = vec![0.5, 0.5];
+        let mut accessed = vec![false, false];
+        let live = vec![false, true];
+        let stale = apply_round(&mut scores, &mut accessed, &live);
+        assert_eq!(stale, 1);
+        assert_eq!(scores[0], 0.5); // untouched
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(Policy::parse("rudder").unwrap(), Policy::FreqDecay);
+        assert_eq!(Policy::parse("lfu").unwrap(), Policy::Lfu);
+        assert!(Policy::parse("fifo").is_err());
+    }
+}

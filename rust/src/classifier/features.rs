@@ -1,0 +1,100 @@
+//! Observation → fixed feature vector (the classifier input ABI; `F` must
+//! match the `mlp_feats` the XLA MLP artifact was built with).
+
+use crate::agent::Observation;
+
+use super::{FeatureVec, F};
+
+/// Normalized, bounded features — stateless, exactly what §4.4 feeds the
+/// classifiers (%-Hits, communication latency proxies, buffer occupancy,
+//  progress, graph scale).
+pub fn extract(o: &Observation) -> FeatureVec {
+    let total_mb = (o.minibatches_done + o.minibatches_pending) as f64;
+    let progress = if total_mb > 0.0 { o.minibatches_done as f64 / total_mb } else { 0.0 };
+    let epoch_frac = if o.epochs_total > 0 {
+        o.epoch as f64 / o.epochs_total as f64
+    } else {
+        0.0
+    };
+    let halo_frac = if o.graph_nodes > 0 {
+        o.halo_nodes as f64 / o.graph_nodes as f64
+    } else {
+        0.0
+    };
+    let cap_frac = if o.halo_nodes > 0 {
+        o.buffer_capacity as f64 / o.halo_nodes as f64
+    } else {
+        0.0
+    };
+    let mut x = [0.0f32; F];
+    x[0] = (o.hits_pct / 100.0) as f32;
+    x[1] = (o.buffer_occupancy_pct / 100.0) as f32;
+    x[2] = (o.stale_pct / 100.0) as f32;
+    x[3] = (o.replaced_pct_last / 100.0) as f32;
+    x[4] = ((o.comm_nodes_last as f64).ln_1p() / 12.0) as f32;
+    x[5] = (o.comm_nodes_ema.max(0.0).ln_1p() / 12.0) as f32;
+    x[6] = progress as f32;
+    x[7] = (o.delta_hits / 100.0) as f32;
+    x[8] = (o.delta_comm.signum() * o.delta_comm.abs().ln_1p() / 12.0) as f32;
+    x[9] = halo_frac as f32;
+    x[10] = cap_frac.min(1.0) as f32;
+    x[11] = epoch_frac as f32;
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs() -> Observation {
+        Observation {
+            hits_pct: 55.0,
+            buffer_occupancy_pct: 80.0,
+            stale_pct: 10.0,
+            replaced_pct_last: 4.0,
+            comm_nodes_last: 1500,
+            comm_nodes_ema: 1400.0,
+            minibatches_done: 25,
+            minibatches_pending: 75,
+            epoch: 2,
+            epochs_total: 10,
+            delta_hits: -2.0,
+            delta_comm: 120.0,
+            graph_nodes: 60_000,
+            graph_edges: 770_000,
+            partition_nodes: 15_000,
+            halo_nodes: 9_000,
+            buffer_capacity: 450,
+        }
+    }
+
+    #[test]
+    fn features_bounded() {
+        let x = extract(&obs());
+        for (i, &v) in x.iter().enumerate() {
+            assert!((-1.0..=1.5).contains(&v), "feature {i} out of range: {v}");
+        }
+        assert!((x[0] - 0.55).abs() < 1e-6);
+        assert!((x[6] - 0.25).abs() < 1e-6);
+        assert!((x[11] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(extract(&obs()), extract(&obs()));
+    }
+
+    #[test]
+    fn zero_observation_safe() {
+        let x = extract(&Observation::default());
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn negative_delta_comm_sign_preserved() {
+        let mut o = obs();
+        o.delta_comm = -120.0;
+        let x = extract(&o);
+        assert!(x[8] < 0.0);
+    }
+}

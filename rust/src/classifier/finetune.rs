@@ -1,0 +1,107 @@
+//! Online finetuning (paper §4.4, §5.4): periodically update the decision
+//! head on labels derived from recently observed (state, outcome) pairs,
+//! weights otherwise frozen.
+//!
+//! The finetuner buffers [`labeling::TraceStep`]s as they stream in from
+//! the live run, labels consecutive pairs with the S′ rule, and triggers a
+//! `finetune` pass every `interval` minibatches — the "5/25/50" selected
+//! empirically in §5.4.
+
+use super::labeling::{label_trace, TraceStep};
+use super::DecisionModel;
+
+pub struct OnlineFinetuner {
+    pub interval: usize,
+    pub window: Vec<TraceStep>,
+    pub max_window: usize,
+    steps_since: usize,
+    pub finetune_count: usize,
+    /// Cumulative simulated finetune overhead (seconds) charged to the run.
+    pub overhead: f64,
+    /// Cost per finetune pass (simulated seconds).
+    pub pass_cost: f64,
+}
+
+impl OnlineFinetuner {
+    pub fn new(interval: usize) -> OnlineFinetuner {
+        OnlineFinetuner {
+            interval,
+            window: Vec::new(),
+            max_window: 256,
+            steps_since: 0,
+            finetune_count: 0,
+            overhead: 0.0,
+            pass_cost: 8e-3,
+        }
+    }
+
+    /// Feed one observed step; maybe run a finetune pass.  Returns the
+    /// simulated overhead incurred now (0 unless a pass triggered).
+    pub fn observe(&mut self, step: TraceStep, model: &mut dyn DecisionModel) -> f64 {
+        self.window.push(step);
+        if self.window.len() > self.max_window {
+            let excess = self.window.len() - self.max_window;
+            self.window.drain(..excess);
+        }
+        self.steps_since += 1;
+        if self.steps_since < self.interval || self.window.len() < 2 {
+            return 0.0;
+        }
+        self.steps_since = 0;
+        let labeled = label_trace(&self.window);
+        if labeled.is_empty() {
+            return 0.0;
+        }
+        let xs: Vec<_> = labeled.iter().map(|e| e.x).collect();
+        let ys: Vec<_> = labeled.iter().map(|e| e.y).collect();
+        model.finetune(&xs, &ys);
+        self.finetune_count += 1;
+        self.overhead += self.pass_cost;
+        self.pass_cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::{Kind, F};
+
+    fn step(hits: f64, replaced: bool) -> TraceStep {
+        TraceStep { x: [0.1; F], hits_pct: hits, comm_time: 0.05, replaced }
+    }
+
+    #[test]
+    fn triggers_every_interval() {
+        let mut ft = OnlineFinetuner::new(5);
+        let mut model = Kind::LogReg.build(1);
+        let mut triggered = 0;
+        for i in 0..20 {
+            let cost = ft.observe(step(40.0 + i as f64, i % 2 == 0), model.as_mut());
+            if cost > 0.0 {
+                triggered += 1;
+            }
+        }
+        assert_eq!(triggered, 4);
+        assert_eq!(ft.finetune_count, 4);
+        assert!((ft.overhead - 4.0 * ft.pass_cost).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_bounded() {
+        let mut ft = OnlineFinetuner::new(1000);
+        ft.max_window = 10;
+        let mut model = Kind::LogReg.build(1);
+        for i in 0..50 {
+            ft.observe(step(i as f64, false), model.as_mut());
+        }
+        assert_eq!(ft.window.len(), 10);
+    }
+
+    #[test]
+    fn no_trigger_with_single_step() {
+        let mut ft = OnlineFinetuner::new(1);
+        let mut model = Kind::LogReg.build(1);
+        assert_eq!(ft.observe(step(1.0, false), model.as_mut()), 0.0);
+        assert!(ft.observe(step(2.0, true), model.as_mut()) > 0.0);
+    }
+}

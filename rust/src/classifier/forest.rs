@@ -1,0 +1,104 @@
+//! Random forest: bagged CART trees with per-tree feature subsampling.
+
+use super::tree::{Tree, TreeParams};
+use super::{DecisionModel, FeatureVec, F};
+use crate::util::rng::Pcg32;
+
+pub struct RandomForest {
+    pub trees: Vec<Tree>,
+    pub n_trees: usize,
+    pub params: TreeParams,
+    seed: u64,
+}
+
+impl RandomForest {
+    pub fn new(seed: u64) -> RandomForest {
+        RandomForest {
+            trees: Vec::new(),
+            n_trees: 30,
+            params: TreeParams { max_depth: 6, min_leaf: 3, feature_subsample: 6 },
+            seed,
+        }
+    }
+}
+
+impl DecisionModel for RandomForest {
+    fn name(&self) -> String {
+        "RF".into()
+    }
+
+    fn predict(&self, x: &FeatureVec) -> f64 {
+        if self.trees.is_empty() {
+            return 0.5;
+        }
+        self.trees.iter().map(|t| t.predict(x)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    fn latency(&self) -> f64 {
+        0.8e-3
+    }
+
+    fn fit(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        let targets: Vec<f64> = ys.iter().map(|&y| if y { 1.0 } else { 0.0 }).collect();
+        let mut rng = Pcg32::new(self.seed);
+        self.trees.clear();
+        for t in 0..self.n_trees {
+            let mut tree_rng = rng.fork(t as u64);
+            // Bootstrap sample.
+            let n = xs.len();
+            let (bx, bt): (Vec<FeatureVec>, Vec<f64>) = (0..n)
+                .map(|_| {
+                    let i = tree_rng.below(n as u64) as usize;
+                    (xs[i], targets[i])
+                })
+                .unzip();
+            // Random feature order; tree looks at the first
+            // `feature_subsample` entries.
+            let mut order: Vec<usize> = (0..F).collect();
+            tree_rng.shuffle(&mut order);
+            self.trees.push(Tree::fit(&bx, &bt, self.params, &order));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::testdata::synthetic;
+
+    #[test]
+    fn ensemble_beats_chance() {
+        let (xs, ys) = synthetic(500, 20);
+        let mut m = RandomForest::new(1);
+        m.fit(&xs, &ys);
+        assert!(m.accuracy(&xs, &ys) > 0.85, "{}", m.accuracy(&xs, &ys));
+    }
+
+    #[test]
+    fn unfitted_predicts_half() {
+        let m = RandomForest::new(1);
+        assert_eq!(m.predict(&[0.0; F]), 0.5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (xs, ys) = synthetic(200, 21);
+        let mut a = RandomForest::new(7);
+        let mut b = RandomForest::new(7);
+        a.fit(&xs, &ys);
+        b.fit(&xs, &ys);
+        let x = xs[0];
+        assert_eq!(a.predict(&x), b.predict(&x));
+    }
+
+    #[test]
+    fn averaged_probabilities_in_unit_interval() {
+        let (xs, ys) = synthetic(300, 22);
+        let mut m = RandomForest::new(2);
+        m.fit(&xs, &ys);
+        for x in &xs {
+            let p = m.predict(x);
+            assert!((0.0..=1.0).contains(&p));
+        }
+    }
+}

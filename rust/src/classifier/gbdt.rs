@@ -1,0 +1,114 @@
+//! Gradient-boosted decision trees (XGBoost-lite): logistic loss, shallow
+//! regression trees on the gradient, shrinkage.
+
+use super::logreg::sigmoid;
+use super::tree::{Tree, TreeParams};
+use super::{DecisionModel, FeatureVec, F};
+
+pub struct Gbdt {
+    pub trees: Vec<Tree>,
+    pub base: f64,
+    pub n_rounds: usize,
+    pub learning_rate: f64,
+    pub params: TreeParams,
+}
+
+impl Gbdt {
+    pub fn new() -> Gbdt {
+        Gbdt {
+            trees: Vec::new(),
+            base: 0.0,
+            n_rounds: 40,
+            learning_rate: 0.3,
+            params: TreeParams { max_depth: 3, min_leaf: 5, feature_subsample: F },
+        }
+    }
+
+    fn raw(&self, x: &FeatureVec) -> f64 {
+        self.base
+            + self
+                .trees
+                .iter()
+                .map(|t| self.learning_rate * t.predict(x))
+                .sum::<f64>()
+    }
+}
+
+impl Default for Gbdt {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecisionModel for Gbdt {
+    fn name(&self) -> String {
+        "XGB".into()
+    }
+
+    fn predict(&self, x: &FeatureVec) -> f64 {
+        sigmoid(self.raw(x))
+    }
+
+    fn latency(&self) -> f64 {
+        0.6e-3
+    }
+
+    fn fit(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        self.trees.clear();
+        let n = xs.len().max(1);
+        let pos = ys.iter().filter(|&&y| y).count() as f64;
+        let p0 = (pos / n as f64).clamp(1e-3, 1.0 - 1e-3);
+        self.base = (p0 / (1.0 - p0)).ln();
+        let order: Vec<usize> = (0..F).collect();
+        let mut raw: Vec<f64> = vec![self.base; n];
+        for _ in 0..self.n_rounds {
+            // Negative gradient of logloss: y − σ(raw).
+            let grad: Vec<f64> = raw
+                .iter()
+                .zip(ys)
+                .map(|(&r, &y)| (if y { 1.0 } else { 0.0 }) - sigmoid(r))
+                .collect();
+            let tree = Tree::fit(xs, &grad, self.params, &order);
+            for (i, x) in xs.iter().enumerate() {
+                raw[i] += self.learning_rate * tree.predict(x);
+            }
+            self.trees.push(tree);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::testdata::synthetic;
+
+    #[test]
+    fn boosting_fits_synthetic() {
+        let (xs, ys) = synthetic(500, 30);
+        let mut m = Gbdt::new();
+        m.fit(&xs, &ys);
+        assert!(m.accuracy(&xs, &ys) > 0.85, "{}", m.accuracy(&xs, &ys));
+    }
+
+    #[test]
+    fn base_rate_respected_before_trees() {
+        let xs = vec![[0.0f32; F]; 100];
+        let ys: Vec<bool> = (0..100).map(|i| i < 80).collect();
+        let mut m = Gbdt::new();
+        m.n_rounds = 0;
+        m.fit(&xs, &ys);
+        assert!((m.predict(&[0.0; F]) - 0.8).abs() < 0.02);
+    }
+
+    #[test]
+    fn more_rounds_fit_tighter() {
+        let (xs, ys) = synthetic(400, 31);
+        let mut small = Gbdt::new();
+        small.n_rounds = 3;
+        small.fit(&xs, &ys);
+        let mut big = Gbdt::new();
+        big.n_rounds = 40;
+        big.fit(&xs, &ys);
+        assert!(big.accuracy(&xs, &ys) >= small.accuracy(&xs, &ys));
+    }
+}

@@ -1,0 +1,103 @@
+//! Offline label assignment (paper §4.4).
+//!
+//! Execution traces are unlabelled; a replacement instance is labelled
+//! "good" iff the %-Hits improvement outweighs the communication-cost
+//! increase across successive minibatches:
+//!
+//! ```text
+//! S' = Δ%Hits − ΔT_COMM > 0   →  good (1),  else bad (0)
+//! ```
+//!
+//! The paper notes the scenarios that compromise label integrity (delayed
+//! effects, stateless views, undersampled configuration space) — which the
+//! classifier evaluation then surfaces as the ~50% accuracies of Table 4.
+
+use super::FeatureVec;
+
+/// A (feature, label) pair assembled from a trace.
+#[derive(Debug, Clone)]
+pub struct LabeledExample {
+    pub x: FeatureVec,
+    pub y: bool,
+}
+
+/// One raw trace step the labeller consumes.
+#[derive(Debug, Clone)]
+pub struct TraceStep {
+    pub x: FeatureVec,
+    pub hits_pct: f64,
+    /// Communication *time* for this minibatch (the T_COMM of S').
+    pub comm_time: f64,
+    /// Was a replacement executed on this step?
+    pub replaced: bool,
+}
+
+/// Normalisation constant: 1 percentage point of hits is traded against
+/// this many seconds of communication.
+pub const COMM_WEIGHT: f64 = 100.0;
+
+/// Label every decision point in a trace.  For a step at `t`, compare
+/// metrics at `t+1` vs `t`: `Δ%Hits − COMM_WEIGHT × ΔT_comm > 0`.
+pub fn label_trace(steps: &[TraceStep]) -> Vec<LabeledExample> {
+    let mut out = Vec::new();
+    for w in steps.windows(2) {
+        let (cur, next) = (&w[0], &w[1]);
+        let d_hits = next.hits_pct - cur.hits_pct;
+        let d_comm = next.comm_time - cur.comm_time;
+        let s_prime = d_hits - COMM_WEIGHT * d_comm;
+        // The label answers "was replacing at this state good?".  For steps
+        // that replaced, the observed outcome is direct; for steps that
+        // skipped, the counterfactual is inverted (skipping was good iff
+        // the state did not degrade).
+        let y = if cur.replaced { s_prime > 0.0 } else { s_prime <= 0.0 };
+        out.push(LabeledExample { x: cur.x, y });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(hits: f64, comm: f64, replaced: bool) -> TraceStep {
+        TraceStep { x: [0.0; super::super::F], hits_pct: hits, comm_time: comm, replaced }
+    }
+
+    #[test]
+    fn replacement_that_helps_is_good() {
+        let trace = vec![step(40.0, 0.10, true), step(48.0, 0.10, false)];
+        let labels = label_trace(&trace);
+        assert_eq!(labels.len(), 1);
+        assert!(labels[0].y, "hits +8, comm flat -> good");
+    }
+
+    #[test]
+    fn replacement_whose_comm_cost_dominates_is_bad() {
+        let trace = vec![step(40.0, 0.10, true), step(42.0, 0.15, false)];
+        // ΔHits = 2, ΔT_comm = 0.05 × 100 = 5 -> S' < 0.
+        assert!(!label_trace(&trace)[0].y);
+    }
+
+    #[test]
+    fn skip_during_stable_state_is_good() {
+        let trace = vec![step(70.0, 0.10, false), step(70.0, 0.10, false)];
+        assert!(label_trace(&trace)[0].y);
+    }
+
+    #[test]
+    fn skip_while_state_improves_anyway_is_bad_label() {
+        // Hits rose without a replacement: the labeller credits "replace
+        // would have been good" -> skip gets labelled bad.  This is exactly
+        // the label-integrity hazard §4.4 describes.
+        let trace = vec![step(40.0, 0.10, false), step(55.0, 0.10, false)];
+        assert!(!label_trace(&trace)[0].y);
+    }
+
+    #[test]
+    fn trace_of_n_steps_yields_n_minus_1_labels() {
+        let trace: Vec<TraceStep> = (0..10).map(|i| step(i as f64, 0.1, i % 2 == 0)).collect();
+        assert_eq!(label_trace(&trace).len(), 9);
+        assert!(label_trace(&[]).is_empty());
+        assert!(label_trace(&trace[..1]).is_empty());
+    }
+}

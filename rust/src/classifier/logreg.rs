@@ -1,0 +1,106 @@
+//! Logistic regression (SGD, L2) — the simplest §4.4 classifier.
+
+use super::{DecisionModel, FeatureVec, F};
+
+#[derive(Debug, Clone)]
+pub struct LogReg {
+    pub w: [f64; F],
+    pub b: f64,
+    pub lr: f64,
+    pub l2: f64,
+    pub epochs: usize,
+}
+
+impl LogReg {
+    pub fn new() -> LogReg {
+        LogReg { w: [0.0; F], b: 0.0, lr: 0.3, l2: 1e-4, epochs: 60 }
+    }
+
+    fn margin(&self, x: &FeatureVec) -> f64 {
+        self.b + self.w.iter().zip(x).map(|(w, &v)| w * v as f64).sum::<f64>()
+    }
+
+    fn sgd_pass(&mut self, xs: &[FeatureVec], ys: &[bool], lr: f64) {
+        for (x, &y) in xs.iter().zip(ys) {
+            let p = sigmoid(self.margin(x));
+            let g = p - if y { 1.0 } else { 0.0 };
+            for (w, &v) in self.w.iter_mut().zip(x) {
+                *w -= lr * (g * v as f64 + self.l2 * *w);
+            }
+            self.b -= lr * g;
+        }
+    }
+}
+
+impl Default for LogReg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl DecisionModel for LogReg {
+    fn name(&self) -> String {
+        "LR".into()
+    }
+
+    fn predict(&self, x: &FeatureVec) -> f64 {
+        sigmoid(self.margin(x))
+    }
+
+    fn latency(&self) -> f64 {
+        0.3e-3
+    }
+
+    fn fit(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        self.w = [0.0; F];
+        self.b = 0.0;
+        for e in 0..self.epochs {
+            let lr = self.lr / (1.0 + e as f64 * 0.05);
+            self.sgd_pass(xs, ys, lr);
+        }
+    }
+
+    fn finetune(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        self.sgd_pass(xs, ys, self.lr * 0.1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::testdata::synthetic;
+
+    #[test]
+    fn learns_synthetic() {
+        let (xs, ys) = synthetic(500, 1);
+        let mut m = LogReg::new();
+        m.fit(&xs, &ys);
+        assert!(m.accuracy(&xs, &ys) > 0.8);
+    }
+
+    #[test]
+    fn untrained_predicts_half() {
+        let m = LogReg::new();
+        assert!((m.predict(&[0.0; F]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finetune_shifts_decisions() {
+        let (xs, ys) = synthetic(400, 2);
+        let mut m = LogReg::new();
+        m.fit(&xs, &ys);
+        // Finetune on inverted labels nudges predictions.
+        let inv: Vec<bool> = ys.iter().map(|&y| !y).collect();
+        let before = m.predict(&xs[0]);
+        for _ in 0..30 {
+            m.finetune(&xs, &inv);
+        }
+        let after = m.predict(&xs[0]);
+        assert!((before - after).abs() > 1e-3);
+    }
+}

@@ -1,0 +1,268 @@
+//! MLP decision classifier.
+//!
+//! Two implementations sharing the same architecture (F → 32 → 2, ReLU,
+//! softmax — mirroring `model.py::MlpParams`):
+//!
+//! * [`RustMlp`] — native backprop, used for offline training and sweeps.
+//! * [`XlaMlp`] — runs inference and finetune steps through the
+//!   `mlp_infer` / `mlp_train_step` AOT artifacts on PJRT, proving the
+//!   classifier path composes with the XLA runtime (weights live host-side
+//!   between calls, exactly like the GNN runner).
+
+use std::sync::Arc;
+
+use super::{DecisionModel, FeatureVec, F};
+use crate::runtime::{literal as lit, Engine};
+use crate::util::rng::Pcg32;
+
+pub const HIDDEN: usize = 32;
+
+/// Shared parameter block (row-major, matching the artifact ABI).
+#[derive(Debug, Clone)]
+pub struct MlpWeights {
+    pub w1: Vec<f32>, // F × HIDDEN
+    pub b1: Vec<f32>, // HIDDEN
+    pub w2: Vec<f32>, // HIDDEN × 2
+    pub b2: Vec<f32>, // 2
+}
+
+impl MlpWeights {
+    pub fn init(seed: u64) -> MlpWeights {
+        let mut rng = Pcg32::new(seed);
+        let s1 = (2.0 / F as f64).sqrt();
+        let s2 = (2.0 / HIDDEN as f64).sqrt();
+        MlpWeights {
+            w1: (0..F * HIDDEN).map(|_| (rng.normal() * s1) as f32).collect(),
+            b1: vec![0.0; HIDDEN],
+            w2: (0..HIDDEN * 2).map(|_| (rng.normal() * s2) as f32).collect(),
+            b2: vec![0.0; 2],
+        }
+    }
+
+    /// Forward pass; returns (hidden activations, logits).
+    pub fn forward(&self, x: &FeatureVec) -> ([f32; HIDDEN], [f32; 2]) {
+        let mut h = [0.0f32; HIDDEN];
+        for j in 0..HIDDEN {
+            let mut acc = self.b1[j];
+            for i in 0..F {
+                acc += x[i] * self.w1[i * HIDDEN + j];
+            }
+            h[j] = acc.max(0.0);
+        }
+        let mut logits = [0.0f32; 2];
+        for c in 0..2 {
+            let mut acc = self.b2[c];
+            for j in 0..HIDDEN {
+                acc += h[j] * self.w2[j * 2 + c];
+            }
+            logits[c] = acc;
+        }
+        (h, logits)
+    }
+
+    pub fn replace_prob(&self, x: &FeatureVec) -> f64 {
+        let (_, logits) = self.forward(x);
+        let m = logits[0].max(logits[1]);
+        let e0 = (logits[0] - m).exp();
+        let e1 = (logits[1] - m).exp();
+        (e1 / (e0 + e1)) as f64
+    }
+
+    /// One SGD step on a batch (cross-entropy).  Returns mean loss.
+    pub fn sgd_step(&mut self, xs: &[FeatureVec], ys: &[bool], lr: f32) -> f32 {
+        let n = xs.len().max(1) as f32;
+        let mut gw1 = vec![0.0f32; F * HIDDEN];
+        let mut gb1 = vec![0.0f32; HIDDEN];
+        let mut gw2 = vec![0.0f32; HIDDEN * 2];
+        let mut gb2 = vec![0.0f32; 2];
+        let mut loss = 0.0f32;
+        for (x, &y) in xs.iter().zip(ys) {
+            let (h, logits) = self.forward(x);
+            let m = logits[0].max(logits[1]);
+            let e0 = (logits[0] - m).exp();
+            let e1 = (logits[1] - m).exp();
+            let z = e0 + e1;
+            let p = [e0 / z, e1 / z];
+            let t = [if y { 0.0 } else { 1.0 }, if y { 1.0 } else { 0.0 }];
+            loss -= (if y { p[1] } else { p[0] }).max(1e-9).ln();
+            let dlogits = [p[0] - t[0], p[1] - t[1]];
+            for c in 0..2 {
+                gb2[c] += dlogits[c];
+                for j in 0..HIDDEN {
+                    gw2[j * 2 + c] += h[j] * dlogits[c];
+                }
+            }
+            for j in 0..HIDDEN {
+                if h[j] <= 0.0 {
+                    continue;
+                }
+                let dh = dlogits[0] * self.w2[j * 2] + dlogits[1] * self.w2[j * 2 + 1];
+                gb1[j] += dh;
+                for i in 0..F {
+                    gw1[i * HIDDEN + j] += x[i] * dh;
+                }
+            }
+        }
+        let step = lr / n;
+        for (w, g) in self.w1.iter_mut().zip(&gw1) {
+            *w -= step * g;
+        }
+        for (w, g) in self.b1.iter_mut().zip(&gb1) {
+            *w -= step * g;
+        }
+        for (w, g) in self.w2.iter_mut().zip(&gw2) {
+            *w -= step * g;
+        }
+        for (w, g) in self.b2.iter_mut().zip(&gb2) {
+            *w -= step * g;
+        }
+        loss / n
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct RustMlp {
+    pub weights: MlpWeights,
+    pub epochs: usize,
+    pub lr: f32,
+    seed: u64,
+}
+
+impl RustMlp {
+    pub fn new(seed: u64) -> RustMlp {
+        RustMlp { weights: MlpWeights::init(seed), epochs: 120, lr: 0.5, seed }
+    }
+}
+
+impl DecisionModel for RustMlp {
+    fn name(&self) -> String {
+        "MLP".into()
+    }
+
+    fn predict(&self, x: &FeatureVec) -> f64 {
+        self.weights.replace_prob(x)
+    }
+
+    fn latency(&self) -> f64 {
+        1.2e-3
+    }
+
+    fn fit(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        self.weights = MlpWeights::init(self.seed);
+        for e in 0..self.epochs {
+            let lr = self.lr / (1.0 + e as f32 * 0.02);
+            self.weights.sgd_step(xs, ys, lr);
+        }
+    }
+
+    fn finetune(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        self.weights.sgd_step(xs, ys, self.lr * 0.05);
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// XLA-backed MLP: inference via the `mlp_infer` artifact, finetuning via
+/// `mlp_train_step` (padding/truncating the batch to the artifact's
+/// `mlp_batch`).
+pub struct XlaMlp {
+    pub engine: Arc<Engine>,
+    pub weights: MlpWeights,
+}
+
+impl XlaMlp {
+    pub fn new(engine: Arc<Engine>, seed: u64) -> anyhow::Result<XlaMlp> {
+        let c = &engine.manifest.config;
+        anyhow::ensure!(
+            c.mlp_feats == F && c.mlp_hidden == HIDDEN,
+            "artifact MLP shape ({}, {}) != classifier ({F}, {HIDDEN}); \
+             rebuild artifacts",
+            c.mlp_feats,
+            c.mlp_hidden
+        );
+        Ok(XlaMlp { engine, weights: MlpWeights::init(seed) })
+    }
+
+    fn param_literals(&self) -> anyhow::Result<Vec<xla::Literal>> {
+        Ok(vec![
+            lit::lit_f32(&[F, HIDDEN], &self.weights.w1)?,
+            lit::lit_f32(&[HIDDEN], &self.weights.b1)?,
+            lit::lit_f32(&[HIDDEN, 2], &self.weights.w2)?,
+            lit::lit_f32(&[2], &self.weights.b2)?,
+        ])
+    }
+
+    /// Replace-probability through the PJRT path.
+    pub fn predict_xla(&self, x: &FeatureVec) -> anyhow::Result<f64> {
+        let mut inputs = self.param_literals()?;
+        inputs.push(lit::lit_f32(&[1, F], x)?);
+        let out = self.engine.execute("mlp_infer", &inputs)?;
+        Ok(lit::to_f32(&out[0])?[0] as f64)
+    }
+
+    /// One finetune step through the PJRT path; returns the loss.
+    pub fn finetune_xla(&mut self, xs: &[FeatureVec], ys: &[bool], lr: f32) -> anyhow::Result<f32> {
+        let mb = self.engine.manifest.config.mlp_batch;
+        let mut feats = vec![0.0f32; mb * F];
+        let mut labels = vec![0i32; mb];
+        for i in 0..mb {
+            let src = i % xs.len().max(1);
+            feats[i * F..(i + 1) * F].copy_from_slice(&xs[src]);
+            labels[i] = ys[src] as i32;
+        }
+        let mut inputs = self.param_literals()?;
+        inputs.push(lit::lit_f32(&[mb, F], &feats)?);
+        inputs.push(lit::lit_i32(&[mb], &labels)?);
+        inputs.push(lit::lit_scalar_f32(lr)?);
+        let out = self.engine.execute("mlp_train_step", &inputs)?;
+        self.weights.w1 = lit::to_f32(&out[0])?;
+        self.weights.b1 = lit::to_f32(&out[1])?;
+        self.weights.w2 = lit::to_f32(&out[2])?;
+        self.weights.b2 = lit::to_f32(&out[3])?;
+        Ok(lit::to_f32(&out[4])?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::testdata::synthetic;
+
+    #[test]
+    fn learns_synthetic() {
+        let (xs, ys) = synthetic(500, 7);
+        let mut m = RustMlp::new(1);
+        m.fit(&xs, &ys);
+        assert!(m.accuracy(&xs, &ys) > 0.85, "{}", m.accuracy(&xs, &ys));
+    }
+
+    #[test]
+    fn sgd_reduces_loss() {
+        let (xs, ys) = synthetic(200, 8);
+        let mut w = MlpWeights::init(3);
+        let first = w.sgd_step(&xs, &ys, 0.5);
+        let mut last = first;
+        for _ in 0..50 {
+            last = w.sgd_step(&xs, &ys, 0.5);
+        }
+        assert!(last < first * 0.9, "first {first} last {last}");
+    }
+
+    #[test]
+    fn probabilities_valid() {
+        let w = MlpWeights::init(4);
+        let (xs, _) = synthetic(50, 9);
+        for x in &xs {
+            let p = w.replace_prob(x);
+            assert!((0.0..=1.0).contains(&p));
+        }
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = MlpWeights::init(5);
+        let b = MlpWeights::init(5);
+        assert_eq!(a.w1, b.w1);
+    }
+}

@@ -1,0 +1,172 @@
+//! ML-classifier controllers (paper §4.4): stateless discriminative models
+//! mapping the current buffer/runtime statistics to a binary
+//! replace/skip decision.
+//!
+//! Six families, all trained offline on labelled traces (the `S'` rule in
+//! [`labeling`]) and optionally finetuned online:
+//! MLP ([`mlp`], with an XLA-artifact variant running through PJRT), logistic
+//! regression ([`logreg`]), CART decision trees ([`tree`]), random forests
+//! ([`forest`]), gradient-boosted trees ([`gbdt`], XGBoost-lite), linear SVM
+//! ([`svm`]), and a TabNet-lite with sparse feature gating ([`tabnet`]).
+
+pub mod features;
+pub mod finetune;
+pub mod forest;
+pub mod gbdt;
+pub mod labeling;
+pub mod logreg;
+pub mod mlp;
+pub mod svm;
+pub mod tabnet;
+pub mod trainer;
+pub mod tree;
+
+/// Input feature dimensionality (must match aot.py `mlp_feats`... the XLA
+/// MLP artifact is built for this F).
+pub const F: usize = 12;
+
+pub type FeatureVec = [f32; F];
+
+/// A trainable binary decision model.
+pub trait DecisionModel: Send {
+    fn name(&self) -> String;
+    /// Probability that replacing now is beneficial.
+    fn predict(&self, x: &FeatureVec) -> f64;
+    /// Inference latency in (virtual) seconds.
+    fn latency(&self) -> f64;
+    /// Full (re)fit on a labelled set.
+    fn fit(&mut self, xs: &[FeatureVec], ys: &[bool]);
+    /// Online finetune on a small fresh batch (default: head refit is a
+    /// no-op for models without incremental training).
+    fn finetune(&mut self, _xs: &[FeatureVec], _ys: &[bool]) {}
+    /// Supervised accuracy on a labelled set.
+    fn accuracy(&self, xs: &[FeatureVec], ys: &[bool]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let correct = xs
+            .iter()
+            .zip(ys)
+            .filter(|(x, &y)| (self.predict(x) > 0.5) == y)
+            .count();
+        correct as f64 / xs.len() as f64
+    }
+}
+
+/// Classifier selector used by configs and the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Mlp,
+    LogReg,
+    RandomForest,
+    Svm,
+    Xgb,
+    TabNet,
+}
+
+pub const ALL_KINDS: &[Kind] =
+    &[Kind::Mlp, Kind::LogReg, Kind::RandomForest, Kind::Svm, Kind::Xgb, Kind::TabNet];
+
+impl Kind {
+    pub fn parse(s: &str) -> anyhow::Result<Kind> {
+        match s.to_ascii_lowercase().as_str() {
+            "mlp" => Ok(Kind::Mlp),
+            "lr" | "logreg" => Ok(Kind::LogReg),
+            "rf" | "forest" => Ok(Kind::RandomForest),
+            "svm" => Ok(Kind::Svm),
+            "xgb" | "xgboost" => Ok(Kind::Xgb),
+            "tabnet" => Ok(Kind::TabNet),
+            _ => anyhow::bail!("unknown classifier '{s}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::Mlp => "MLP",
+            Kind::LogReg => "LR",
+            Kind::RandomForest => "RF",
+            Kind::Svm => "SVM",
+            Kind::Xgb => "XGB",
+            Kind::TabNet => "TabNet",
+        }
+    }
+
+    /// Instantiate an untrained model with a deterministic seed.
+    pub fn build(&self, seed: u64) -> Box<dyn DecisionModel> {
+        match self {
+            Kind::Mlp => Box::new(mlp::RustMlp::new(seed)),
+            Kind::LogReg => Box::new(logreg::LogReg::new()),
+            Kind::RandomForest => Box::new(forest::RandomForest::new(seed)),
+            Kind::Svm => Box::new(svm::LinearSvm::new()),
+            Kind::Xgb => Box::new(gbdt::Gbdt::new()),
+            Kind::TabNet => Box::new(tabnet::TabNetLite::new(seed)),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testdata {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Separable-ish synthetic task: replace is beneficial when hits are low
+    /// and occupancy below 1 (mirrors the real decision geometry).
+    pub fn synthetic(n: usize, seed: u64) -> (Vec<FeatureVec>, Vec<bool>) {
+        let mut rng = Pcg32::new(seed);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut x = [0.0f32; F];
+            for v in x.iter_mut() {
+                *v = rng.f32();
+            }
+            let score = (1.0 - x[0]) + (1.0 - x[1]) * 0.5 + x[2] * 0.3 - 0.9;
+            let noisy = score + (rng.f32() - 0.5) * 0.2;
+            xs.push(x);
+            ys.push(noisy > 0.0);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in ALL_KINDS {
+            let parsed = Kind::parse(&k.name().to_ascii_lowercase()).unwrap();
+            assert_eq!(parsed, *k);
+        }
+        assert!(Kind::parse("nope").is_err());
+        assert_eq!(Kind::parse("xgboost").unwrap(), Kind::Xgb);
+    }
+
+    #[test]
+    fn every_kind_learns_the_synthetic_task() {
+        let (xs, ys) = testdata::synthetic(600, 42);
+        let (txs, tys) = testdata::synthetic(200, 43);
+        let base_rate = tys.iter().filter(|&&y| y).count() as f64 / tys.len() as f64;
+        let majority = base_rate.max(1.0 - base_rate);
+        for kind in ALL_KINDS {
+            let mut m = kind.build(1);
+            m.fit(&xs, &ys);
+            let acc = m.accuracy(&txs, &tys);
+            assert!(
+                acc > majority.max(0.70),
+                "{} only reached {acc:.3} (majority {majority:.3})",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn latencies_are_small_and_positive() {
+        for kind in ALL_KINDS {
+            let m = kind.build(1);
+            let l = m.latency();
+            assert!(l > 0.0 && l < 0.05, "{}: {l}", kind.name());
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Linear SVM (hinge loss, SGD / Pegasos-style).
+
+use super::{DecisionModel, FeatureVec, F};
+
+#[derive(Debug, Clone)]
+pub struct LinearSvm {
+    pub w: [f64; F],
+    pub b: f64,
+    pub lambda: f64,
+    pub epochs: usize,
+}
+
+impl LinearSvm {
+    pub fn new() -> LinearSvm {
+        LinearSvm { w: [0.0; F], b: 0.0, lambda: 1e-3, epochs: 80 }
+    }
+
+    fn margin(&self, x: &FeatureVec) -> f64 {
+        self.b + self.w.iter().zip(x).map(|(w, &v)| w * v as f64).sum::<f64>()
+    }
+}
+
+impl Default for LinearSvm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecisionModel for LinearSvm {
+    fn name(&self) -> String {
+        "SVM".into()
+    }
+
+    fn predict(&self, x: &FeatureVec) -> f64 {
+        // Squash the margin for a probability-ish output.
+        super::logreg::sigmoid(2.0 * self.margin(x))
+    }
+
+    fn latency(&self) -> f64 {
+        0.3e-3
+    }
+
+    fn fit(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        self.w = [0.0; F];
+        self.b = 0.0;
+        let mut t = 1.0f64;
+        for _ in 0..self.epochs {
+            for (x, &y) in xs.iter().zip(ys) {
+                let lr = 1.0 / (self.lambda * t);
+                t += 1.0;
+                let yy = if y { 1.0 } else { -1.0 };
+                let m = yy * self.margin(x);
+                for w in self.w.iter_mut() {
+                    *w *= 1.0 - lr * self.lambda;
+                }
+                if m < 1.0 {
+                    for (w, &v) in self.w.iter_mut().zip(x) {
+                        *w += lr * yy * v as f64;
+                    }
+                    self.b += lr * yy * 0.1;
+                }
+            }
+        }
+    }
+
+    fn finetune(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        for (x, &y) in xs.iter().zip(ys) {
+            let yy = if y { 1.0 } else { -1.0 };
+            if yy * self.margin(x) < 1.0 {
+                for (w, &v) in self.w.iter_mut().zip(x) {
+                    *w += 0.01 * yy * v as f64;
+                }
+                self.b += 0.001 * yy;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::testdata::synthetic;
+
+    #[test]
+    fn learns_synthetic() {
+        let (xs, ys) = synthetic(500, 3);
+        let mut m = LinearSvm::new();
+        m.fit(&xs, &ys);
+        assert!(m.accuracy(&xs, &ys) > 0.78, "{}", m.accuracy(&xs, &ys));
+    }
+
+    #[test]
+    fn margins_translate_to_confidence() {
+        let (xs, ys) = synthetic(500, 4);
+        let mut m = LinearSvm::new();
+        m.fit(&xs, &ys);
+        let probs: Vec<f64> = xs.iter().map(|x| m.predict(x)).collect();
+        assert!(probs.iter().any(|&p| p > 0.8));
+        assert!(probs.iter().any(|&p| p < 0.2));
+    }
+}

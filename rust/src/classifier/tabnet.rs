@@ -1,0 +1,175 @@
+//! TabNet-lite: sequential-attention feature selection + a small decision
+//! head.
+//!
+//! Captures the architectural property the paper discusses (§5.3): a
+//! *sparse gating mechanism* that hard-selects a feature subset per
+//! decision step.  Gates are learned (softmax over feature logits,
+//! sharpened to top-k at inference), so useful features can be — and under
+//! distribution shift often are — discarded, which is exactly the failure
+//! mode Table 2 shows for TabNet in synchronous mode.
+
+use super::logreg::sigmoid;
+use super::{DecisionModel, FeatureVec, F};
+use crate::util::rng::Pcg32;
+
+pub const STEPS: usize = 2;
+pub const TOP_K: usize = 5;
+
+pub struct TabNetLite {
+    /// Per-step gate logits over features.
+    pub gate_logits: Vec<[f64; F]>,
+    /// Per-step linear head on the gated features.
+    pub head_w: Vec<[f64; F]>,
+    pub head_b: Vec<f64>,
+    pub epochs: usize,
+    pub lr: f64,
+    seed: u64,
+}
+
+impl TabNetLite {
+    pub fn new(seed: u64) -> TabNetLite {
+        let mut rng = Pcg32::new(seed);
+        let mut init = || {
+            let mut a = [0.0f64; F];
+            for v in a.iter_mut() {
+                *v = rng.normal() * 0.1;
+            }
+            a
+        };
+        TabNetLite {
+            gate_logits: (0..STEPS).map(|_| init()).collect(),
+            head_w: (0..STEPS).map(|_| init()).collect(),
+            head_b: vec![0.0; STEPS],
+            epochs: 150,
+            lr: 0.25,
+            seed,
+        }
+    }
+
+    /// Soft gates during training; hard top-k at inference.
+    fn gates(&self, step: usize, hard: bool) -> [f64; F] {
+        let logits = &self.gate_logits[step];
+        let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut g = [0.0f64; F];
+        let mut z = 0.0;
+        for i in 0..F {
+            g[i] = ((logits[i] - m) / 0.5).exp();
+            z += g[i];
+        }
+        for v in g.iter_mut() {
+            *v /= z;
+        }
+        if hard {
+            // Keep top-k gates, renormalized; zero the rest (sparse mask).
+            let mut idx: Vec<usize> = (0..F).collect();
+            idx.sort_by(|&a, &b| g[b].partial_cmp(&g[a]).unwrap());
+            let mut hardg = [0.0f64; F];
+            let kept: f64 = idx[..TOP_K].iter().map(|&i| g[i]).sum();
+            for &i in &idx[..TOP_K] {
+                hardg[i] = g[i] / kept;
+            }
+            return hardg;
+        }
+        g
+    }
+
+    fn raw(&self, x: &FeatureVec, hard: bool) -> f64 {
+        let mut acc = 0.0;
+        for s in 0..STEPS {
+            let g = self.gates(s, hard);
+            let mut dot = self.head_b[s];
+            for i in 0..F {
+                dot += self.head_w[s][i] * g[i] * x[i] as f64;
+            }
+            acc += dot;
+        }
+        acc
+    }
+
+    fn sgd_pass(&mut self, xs: &[FeatureVec], ys: &[bool], lr: f64) {
+        for (x, &y) in xs.iter().zip(ys) {
+            let p = sigmoid(self.raw(x, false));
+            let err = p - if y { 1.0 } else { 0.0 };
+            for s in 0..STEPS {
+                let g = self.gates(s, false);
+                for i in 0..F {
+                    let xi = x[i] as f64;
+                    // Head gradient.
+                    let gw = err * g[i] * xi;
+                    self.head_w[s][i] -= lr * gw;
+                    // Gate gradient (through the softmax, diagonal approx).
+                    let ggate = err * self.head_w[s][i] * xi * g[i] * (1.0 - g[i]) / 0.5;
+                    self.gate_logits[s][i] -= lr * ggate;
+                }
+                self.head_b[s] -= lr * err;
+            }
+        }
+    }
+}
+
+impl DecisionModel for TabNetLite {
+    fn name(&self) -> String {
+        "TabNet".into()
+    }
+
+    fn predict(&self, x: &FeatureVec) -> f64 {
+        sigmoid(self.raw(x, true))
+    }
+
+    fn latency(&self) -> f64 {
+        1.8e-3
+    }
+
+    fn fit(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        *self = TabNetLite::new(self.seed);
+        for e in 0..self.epochs {
+            let lr = self.lr / (1.0 + e as f64 * 0.01);
+            self.sgd_pass(xs, ys, lr);
+        }
+    }
+
+    fn finetune(&mut self, xs: &[FeatureVec], ys: &[bool]) {
+        self.sgd_pass(xs, ys, self.lr * 0.05);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::testdata::synthetic;
+
+    #[test]
+    fn learns_synthetic() {
+        let (xs, ys) = synthetic(500, 40);
+        let mut m = TabNetLite::new(1);
+        m.fit(&xs, &ys);
+        assert!(m.accuracy(&xs, &ys) > 0.75, "{}", m.accuracy(&xs, &ys));
+    }
+
+    #[test]
+    fn inference_mask_is_sparse() {
+        let (xs, ys) = synthetic(300, 41);
+        let mut m = TabNetLite::new(2);
+        m.fit(&xs, &ys);
+        for s in 0..STEPS {
+            let g = m.gates(s, true);
+            let nonzero = g.iter().filter(|&&v| v > 0.0).count();
+            assert_eq!(nonzero, TOP_K);
+            assert!((g.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gating_selects_informative_features() {
+        // Targets depend on features 0..3 only (see testdata::synthetic).
+        let (xs, ys) = synthetic(600, 42);
+        let mut m = TabNetLite::new(3);
+        m.fit(&xs, &ys);
+        let g = m.gates(0, true);
+        let informative: f64 = g[..3].iter().sum();
+        assert!(
+            informative > 3.0 * (TOP_K as f64 / F as f64) * 0.5,
+            "gates ignore informative features: {g:?}"
+        );
+    }
+}

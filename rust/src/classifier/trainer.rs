@@ -1,0 +1,153 @@
+//! Offline classifier training pipeline (paper §4.4 / Eqn 1).
+//!
+//! The paper collects execution traces in *trace-only mode* (training
+//! disabled) across datasets × partitions × buffer sizes, labels them with
+//! the S′ rule, and fits each classifier once — "hundreds to thousands of
+//! node-hours" of offline cost that LLM agents avoid (Corollary 2.1).
+//! Here, [`OfflineTrainer`] consumes traces produced by
+//! `sim::run::trace_only` and manages the train/validation split.
+
+use super::labeling::LabeledExample;
+use super::{DecisionModel, FeatureVec, Kind};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainingSet {
+    pub xs: Vec<FeatureVec>,
+    pub ys: Vec<bool>,
+    /// Offline collection cost in simulated node-seconds (Eqn 1's
+    /// |S| × T_sampling term), accumulated by the trace producer.
+    pub collection_cost: f64,
+}
+
+impl TrainingSet {
+    pub fn push_examples(&mut self, examples: &[LabeledExample], cost: f64) {
+        for e in examples {
+            self.xs.push(e.x);
+            self.ys.push(e.y);
+        }
+        self.collection_cost += cost;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Deterministic shuffled train/val split.
+    pub fn split(&self, val_frac: f64, seed: u64) -> (TrainingSet, TrainingSet) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        Pcg32::new(seed).shuffle(&mut idx);
+        let n_val = (self.len() as f64 * val_frac) as usize;
+        let mut train = TrainingSet::default();
+        let mut val = TrainingSet::default();
+        for (i, &j) in idx.iter().enumerate() {
+            let dst = if i < n_val { &mut val } else { &mut train };
+            dst.xs.push(self.xs[j]);
+            dst.ys.push(self.ys[j]);
+        }
+        train.collection_cost = self.collection_cost;
+        (train, val)
+    }
+
+    pub fn positive_rate(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.ys.iter().filter(|&&y| y).count() as f64 / self.len() as f64
+    }
+}
+
+/// Result of one offline fit.
+pub struct TrainedClassifier {
+    pub kind: Kind,
+    pub model: Box<dyn DecisionModel>,
+    pub train_accuracy: f64,
+    pub val_accuracy: f64,
+    /// Simulated training wall time (the T_train(Θ) term of Eqn 1).
+    pub train_cost: f64,
+}
+
+pub struct OfflineTrainer {
+    pub data: TrainingSet,
+    pub seed: u64,
+}
+
+impl OfflineTrainer {
+    pub fn new(data: TrainingSet, seed: u64) -> OfflineTrainer {
+        OfflineTrainer { data, seed }
+    }
+
+    /// Fit one classifier kind; returns the model plus bookkeeping.
+    pub fn train(&self, kind: Kind) -> TrainedClassifier {
+        let (train, val) = self.data.split(0.2, self.seed);
+        let mut model = kind.build(self.seed);
+        let t0 = std::time::Instant::now();
+        if !train.is_empty() {
+            model.fit(&train.xs, &train.ys);
+        }
+        let train_cost = t0.elapsed().as_secs_f64();
+        let train_accuracy = model.accuracy(&train.xs, &train.ys);
+        let val_accuracy = model.accuracy(&val.xs, &val.ys);
+        TrainedClassifier { kind, model, train_accuracy, val_accuracy, train_cost }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::testdata::synthetic;
+    use crate::classifier::ALL_KINDS;
+
+    fn set(n: usize) -> TrainingSet {
+        let (xs, ys) = synthetic(n, 50);
+        let mut s = TrainingSet::default();
+        for (x, y) in xs.into_iter().zip(ys) {
+            s.xs.push(x);
+            s.ys.push(y);
+        }
+        s.collection_cost = 123.0;
+        s
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let s = set(100);
+        let (train, val) = s.split(0.25, 1);
+        assert_eq!(train.len() + val.len(), 100);
+        assert_eq!(val.len(), 25);
+    }
+
+    #[test]
+    fn trains_all_kinds_with_sane_accuracy() {
+        let trainer = OfflineTrainer::new(set(500), 2);
+        for &kind in ALL_KINDS {
+            let out = trainer.train(kind);
+            assert!(
+                out.val_accuracy > 0.6,
+                "{:?} val acc {}",
+                kind,
+                out.val_accuracy
+            );
+            assert!(out.train_cost >= 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_training_set_survives() {
+        let trainer = OfflineTrainer::new(TrainingSet::default(), 3);
+        let out = trainer.train(Kind::LogReg);
+        assert_eq!(out.val_accuracy, 0.0);
+    }
+
+    #[test]
+    fn positive_rate() {
+        let mut s = TrainingSet::default();
+        s.xs = vec![[0.0; crate::classifier::F]; 4];
+        s.ys = vec![true, true, true, false];
+        assert!((s.positive_rate() - 0.75).abs() < 1e-12);
+    }
+}

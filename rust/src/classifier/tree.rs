@@ -1,0 +1,205 @@
+//! CART decision tree (gini impurity, depth/size-limited) — the base
+//! learner for [`super::forest`] and [`super::gbdt`].
+
+use super::{FeatureVec, F};
+
+#[derive(Debug, Clone)]
+pub enum Node {
+    Leaf {
+        /// Mean target (probability for classification, residual for GBDT).
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f32,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct Tree {
+    pub root: Node,
+    pub max_depth: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    /// Features considered per split (`F` = all; smaller for forests).
+    pub feature_subsample: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { max_depth: 5, min_leaf: 5, feature_subsample: F }
+    }
+}
+
+impl Tree {
+    /// Fit a regression tree on (xs, targets) minimizing squared error —
+    /// with 0/1 targets this is equivalent to gini-driven classification.
+    pub fn fit(
+        xs: &[FeatureVec],
+        targets: &[f64],
+        params: TreeParams,
+        feature_order: &[usize],
+    ) -> Tree {
+        let idx: Vec<u32> = (0..xs.len() as u32).collect();
+        let root = build(xs, targets, &idx, params, feature_order, 0);
+        Tree { root, max_depth: params.max_depth }
+    }
+
+    pub fn predict(&self, x: &FeatureVec) -> f64 {
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    node = if x[*feature] <= *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(n: &Node) -> usize {
+            match n {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + d(left).max(d(right)),
+            }
+        }
+        d(&self.root)
+    }
+}
+
+fn mean(targets: &[f64], idx: &[u32]) -> f64 {
+    if idx.is_empty() {
+        return 0.0;
+    }
+    idx.iter().map(|&i| targets[i as usize]).sum::<f64>() / idx.len() as f64
+}
+
+fn build(
+    xs: &[FeatureVec],
+    targets: &[f64],
+    idx: &[u32],
+    params: TreeParams,
+    feature_order: &[usize],
+    depth: usize,
+) -> Node {
+    let m = mean(targets, idx);
+    if depth >= params.max_depth || idx.len() < 2 * params.min_leaf {
+        return Node::Leaf { value: m };
+    }
+    // Find the best (feature, threshold) by SSE reduction.
+    let mut best: Option<(usize, f32, f64)> = None;
+    let base_sse: f64 = idx.iter().map(|&i| (targets[i as usize] - m).powi(2)).sum();
+    for &f in feature_order.iter().take(params.feature_subsample) {
+        // Candidate thresholds: sorted unique values (sampled).
+        let mut vals: Vec<f32> = idx.iter().map(|&i| xs[i as usize][f]).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        if vals.len() < 2 {
+            continue;
+        }
+        let step = (vals.len() / 16).max(1);
+        for w in vals.windows(2).step_by(step) {
+            let thr = (w[0] + w[1]) / 2.0;
+            let (mut sl, mut nl, mut sr, mut nr) = (0.0f64, 0usize, 0.0f64, 0usize);
+            for &i in idx {
+                let t = targets[i as usize];
+                if xs[i as usize][f] <= thr {
+                    sl += t;
+                    nl += 1;
+                } else {
+                    sr += t;
+                    nr += 1;
+                }
+            }
+            if nl < params.min_leaf || nr < params.min_leaf {
+                continue;
+            }
+            // SSE after split = Σ t² − nl·ml² − nr·mr²; Σ t² is constant,
+            // so maximize nl·ml² + nr·mr².
+            let ml = sl / nl as f64;
+            let mr = sr / nr as f64;
+            let gain = nl as f64 * ml * ml + nr as f64 * mr * mr;
+            if best.map_or(true, |(_, _, g)| gain > g) {
+                best = Some((f, thr, gain));
+            }
+        }
+    }
+    let Some((f, thr, gain)) = best else {
+        return Node::Leaf { value: m };
+    };
+    // Require a real improvement over the unsplit node.
+    let unsplit_gain = idx.len() as f64 * m * m;
+    if gain <= unsplit_gain + 1e-12 && base_sse > 0.0 {
+        return Node::Leaf { value: m };
+    }
+    let (mut li, mut ri) = (Vec::new(), Vec::new());
+    for &i in idx {
+        if xs[i as usize][f] <= thr {
+            li.push(i);
+        } else {
+            ri.push(i);
+        }
+    }
+    Node::Split {
+        feature: f,
+        threshold: thr,
+        left: Box::new(build(xs, targets, &li, params, feature_order, depth + 1)),
+        right: Box::new(build(xs, targets, &ri, params, feature_order, depth + 1)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::testdata::synthetic;
+
+    fn to_targets(ys: &[bool]) -> Vec<f64> {
+        ys.iter().map(|&y| if y { 1.0 } else { 0.0 }).collect()
+    }
+
+    #[test]
+    fn fits_separable_data() {
+        let (xs, ys) = synthetic(400, 10);
+        let order: Vec<usize> = (0..F).collect();
+        let t = Tree::fit(&xs, &to_targets(&ys), TreeParams::default(), &order);
+        let acc = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(x, &y)| (t.predict(x) > 0.5) == y)
+            .count() as f64
+            / xs.len() as f64;
+        assert!(acc > 0.8, "{acc}");
+    }
+
+    #[test]
+    fn respects_depth_limit() {
+        let (xs, ys) = synthetic(400, 11);
+        let order: Vec<usize> = (0..F).collect();
+        let params = TreeParams { max_depth: 3, ..Default::default() };
+        let t = Tree::fit(&xs, &to_targets(&ys), params, &order);
+        assert!(t.depth() <= 3);
+    }
+
+    #[test]
+    fn pure_node_becomes_leaf() {
+        let xs = vec![[0.5f32; F]; 20];
+        let targets = vec![1.0; 20];
+        let order: Vec<usize> = (0..F).collect();
+        let t = Tree::fit(&xs, &targets, TreeParams::default(), &order);
+        assert!(matches!(t.root, Node::Leaf { value } if (value - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn single_example() {
+        let xs = vec![[0.1f32; F]];
+        let t = Tree::fit(&xs, &[1.0], TreeParams::default(), &(0..F).collect::<Vec<_>>());
+        assert_eq!(t.predict(&[0.9; F]), 1.0);
+    }
+}

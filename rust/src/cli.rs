@@ -1,0 +1,130 @@
+//! Hand-rolled CLI argument parser (clap is not mirrored offline).
+//!
+//! Grammar: `rudder <subcommand> [--key value]... [--flag]... [positional]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.iter().peekable();
+        if let Some(sub) = iter.next() {
+            args.subcommand = sub.clone();
+        }
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                anyhow::ensure!(!key.is_empty(), "empty option name");
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                {
+                    args.options
+                        .insert(key.to_string(), iter.next().unwrap().clone());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("cannot parse --{key} value '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+pub const USAGE: &str = "\
+rudder — LLM-agent-steered prefetching for distributed GNN training (ICS'26 reproduction)
+
+USAGE: rudder <command> [options]
+
+COMMANDS:
+  train        run one training experiment
+               --dataset <name> --trainers <n> --buffer <pct 0-1>
+               --controller <none|fixed|llm:MODEL|clf:KIND[:finetune=N]|massivegnn[:r]>
+               --mode <async|sync> --epochs <n> --batch <n> --scale <f>
+               --seed <n> --config <file.toml> --xla (use AOT artifacts)
+  experiment   regenerate a paper table/figure: rudder experiment <id> [--full]
+               ids: fig01 fig03 fig06 fig12 fig13 fig14 fig15 fig16 fig17
+                    table2 fig18 table4 fig20 fig21 | all
+  trace        trace-only mode: collect labelled classifier training data
+               --dataset <name> --out <file.json>
+  calibrate    measure real PJRT step latency, write configs/calibration.toml
+  datasets     list dataset stand-ins (Table 1a)
+  models       list LLM agent profiles (Table 1b)
+  partition-stats  partition quality: --dataset <name> --trainers <n> [--method metis|ldg|random]
+  help         this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse(&["train", "--dataset", "reddit", "--xla", "--epochs=5", "extra"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.opt("dataset"), Some("reddit"));
+        assert_eq!(a.opt("epochs"), Some("5"));
+        assert!(a.flag("xla"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn opt_parse_types() {
+        let a = parse(&["x", "--n", "42", "--f", "0.5"]);
+        assert_eq!(a.opt_parse::<usize>("n").unwrap(), Some(42));
+        assert_eq!(a.opt_parse::<f64>("f").unwrap(), Some(0.5));
+        assert_eq!(a.opt_parse::<usize>("missing").unwrap(), None);
+        assert!(a.opt_parse::<usize>("f").is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["x", "--verbose", "--out", "file"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("out"), Some("file"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["y"]);
+        assert_eq!(a.opt_or("k", "d"), "d");
+        assert!(!a.flag("nope"));
+    }
+}

@@ -1,0 +1,153 @@
+//! Config system: TOML files → [`RunConfig`] (plus CLI overrides).
+//!
+//! Example (`configs/quickstart.toml`):
+//!
+//! ```toml
+//! dataset = "products"
+//! scale = 0.1
+//! trainers = 8
+//! batch_size = 256
+//! buffer_pct = 0.25
+//! epochs = 6
+//! controller = "llm:gemma3-4b"
+//! mode = "async"
+//! [net]
+//! alpha = 0.001
+//! [compute]
+//! base_overhead = 0.1
+//! ```
+
+use std::path::Path;
+
+use crate::partition::Method;
+use crate::sim::{ControllerSpec, Mode, RunConfig};
+use crate::util::json::Json;
+use crate::util::tomlite;
+
+/// Apply a parsed TOML document over a base config.
+pub fn apply(doc: &Json, mut cfg: RunConfig) -> anyhow::Result<RunConfig> {
+    let gets = |k: &str| doc.get(k).and_then(Json::as_str);
+    let getf = |k: &str| doc.get(k).and_then(Json::as_f64);
+    let getu = |k: &str| doc.get(k).and_then(Json::as_usize);
+    if let Some(v) = gets("dataset") {
+        cfg.dataset = v.to_string();
+    }
+    if let Some(v) = getf("scale") {
+        cfg.scale = v;
+    }
+    if let Some(v) = getu("seed") {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = getu("trainers") {
+        anyhow::ensure!(v >= 1, "trainers must be >= 1");
+        cfg.num_trainers = v;
+    }
+    if let Some(v) = getu("batch_size") {
+        cfg.batch_size = v;
+    }
+    if let Some(v) = getu("fanout1") {
+        cfg.fanout1 = v;
+    }
+    if let Some(v) = getu("fanout2") {
+        cfg.fanout2 = v;
+    }
+    if let Some(v) = getf("buffer_pct") {
+        anyhow::ensure!((0.0..=1.0).contains(&v), "buffer_pct in [0,1]");
+        cfg.buffer_pct = v;
+    }
+    if let Some(v) = getu("epochs") {
+        cfg.epochs = v;
+    }
+    if let Some(v) = getu("hidden") {
+        cfg.hidden = v;
+    }
+    if let Some(v) = gets("controller") {
+        cfg.controller = ControllerSpec::parse(v)?;
+    }
+    if let Some(v) = gets("mode") {
+        cfg.mode = Mode::parse(v)?;
+    }
+    if let Some(v) = gets("partition") {
+        cfg.partition_method = Method::parse(v)?;
+    }
+    if let Some(net) = doc.get("net") {
+        let f = |k: &str, d: f64| net.get(k).and_then(Json::as_f64).unwrap_or(d);
+        cfg.net.alpha = f("alpha", cfg.net.alpha);
+        cfg.net.beta = f("beta", cfg.net.beta);
+        cfg.net.contention = f("contention", cfg.net.contention);
+        cfg.net.beta_allreduce = f("beta_allreduce", cfg.net.beta_allreduce);
+        cfg.net.alpha_allreduce = f("alpha_allreduce", cfg.net.alpha_allreduce);
+    }
+    if let Some(c) = doc.get("compute") {
+        let f = |k: &str, d: f64| c.get(k).and_then(Json::as_f64).unwrap_or(d);
+        cfg.compute.device_flops = f("device_flops", cfg.compute.device_flops);
+        cfg.compute.base_overhead = f("base_overhead", cfg.compute.base_overhead);
+        cfg.compute.train_multiplier = f("train_multiplier", cfg.compute.train_multiplier);
+    }
+    Ok(cfg)
+}
+
+/// Load a TOML config file over the defaults.
+pub fn load(path: &Path) -> anyhow::Result<RunConfig> {
+    let doc = tomlite::parse_file(path)?;
+    apply(&doc, RunConfig::default())
+}
+
+/// Load calibration constants (written by `rudder calibrate`) if present.
+pub fn load_calibration(cfg: &mut RunConfig) {
+    let path = Path::new("configs/calibration.toml");
+    if let Ok(doc) = tomlite::parse_file(path) {
+        if let Ok(updated) = apply(&doc, cfg.clone()) {
+            *cfg = updated;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applies_overrides() {
+        let doc = tomlite::parse(
+            r#"
+dataset = "reddit"
+trainers = 16
+buffer_pct = 0.05
+controller = "llm:llama3.2-3b"
+mode = "sync"
+partition = "ldg"
+[net]
+alpha = 0.002
+[compute]
+base_overhead = 0.2
+"#,
+        )
+        .unwrap();
+        let cfg = apply(&doc, RunConfig::default()).unwrap();
+        assert_eq!(cfg.dataset, "reddit");
+        assert_eq!(cfg.num_trainers, 16);
+        assert_eq!(cfg.buffer_pct, 0.05);
+        assert_eq!(cfg.mode, Mode::Sync);
+        assert_eq!(cfg.net.alpha, 0.002);
+        assert_eq!(cfg.compute.base_overhead, 0.2);
+        assert_eq!(cfg.partition_method, Method::Ldg);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let doc = tomlite::parse("buffer_pct = 1.5").unwrap();
+        assert!(apply(&doc, RunConfig::default()).is_err());
+        let doc = tomlite::parse("controller = \"llm:nonexistent\"").unwrap();
+        assert!(apply(&doc, RunConfig::default()).is_err());
+        let doc = tomlite::parse("trainers = 0").unwrap();
+        assert!(apply(&doc, RunConfig::default()).is_err());
+    }
+
+    #[test]
+    fn empty_doc_keeps_defaults() {
+        let doc = tomlite::parse("").unwrap();
+        let cfg = apply(&doc, RunConfig::default()).unwrap();
+        assert_eq!(cfg.dataset, "products");
+    }
+}

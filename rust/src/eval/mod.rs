@@ -1,0 +1,10 @@
+//! Evaluation: Pass@1 scoring (§4.6), the per-figure experiment harness
+//! (§5), and paper-style report rendering.
+
+pub mod harness;
+pub mod passk;
+pub mod report;
+
+pub use harness::{run_experiment_id, Quality, EXPERIMENTS};
+pub use passk::{pass_at_1, PassAtK};
+pub use report::Table;

@@ -1,0 +1,119 @@
+//! Reference-free functional-correctness evaluation (paper §4.6).
+//!
+//! Ground truth for "was this replacement decision *correct*" does not
+//! exist, so the paper scores the agent by self-consistency: the agent
+//! predicts the %-Hits direction; once the environment transitions, the
+//! observed movement either matches (pass) or not (fail).  Pass@1 is the
+//! pass rate over predicted decisions, reported with the chi-square-driven
+//! 95% Wilson interval (Table 4).
+
+use crate::agent::context::HITS_TOLERANCE;
+use crate::metrics::{DecisionRecord, RunMetrics};
+use crate::util::stats::wilson_ci95;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PassAtK {
+    pub passes: u64,
+    pub trials: u64,
+    /// Pass@1 in percent.
+    pub score: f64,
+    /// 95% CI offsets below/above the score (percentage points).
+    pub ci_lo: f64,
+    pub ci_hi: f64,
+}
+
+impl PassAtK {
+    pub fn format(&self) -> String {
+        format!("{:.0} (-{:.0}/{:.0})", self.score, self.ci_lo, self.ci_hi)
+    }
+}
+
+/// Score one decision: did the observed %-Hits movement match the
+/// prediction?  Decisions without predictions or outcomes are skipped.
+fn judge(d: &DecisionRecord) -> Option<bool> {
+    let pred = d.prediction?;
+    let after = d.hits_after?;
+    Some(pred.matches(after - d.hits_before, HITS_TOLERANCE))
+}
+
+/// Pass@1 across all trainers of a run.
+pub fn pass_at_1(per_trainer: &[RunMetrics]) -> PassAtK {
+    let mut passes = 0u64;
+    let mut trials = 0u64;
+    for m in per_trainer {
+        for d in &m.decisions {
+            if let Some(ok) = judge(d) {
+                trials += 1;
+                if ok {
+                    passes += 1;
+                }
+            }
+        }
+    }
+    let score = if trials > 0 {
+        passes as f64 / trials as f64 * 100.0
+    } else {
+        0.0
+    };
+    let (ci_lo, ci_hi) = wilson_ci95(passes, trials);
+    PassAtK { passes, trials, score, ci_lo, ci_hi }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::HitsPrediction;
+
+    fn dec(pred: Option<HitsPrediction>, before: f64, after: Option<f64>) -> DecisionRecord {
+        DecisionRecord {
+            minibatch: 0,
+            replace: true,
+            prediction: pred,
+            valid_response: pred.is_some(),
+            hits_before: before,
+            hits_after: after,
+            latency: 0.1,
+        }
+    }
+
+    #[test]
+    fn scores_matching_predictions() {
+        let mut m = RunMetrics::default();
+        m.decisions.push(dec(Some(HitsPrediction::Increase), 40.0, Some(50.0))); // pass
+        m.decisions.push(dec(Some(HitsPrediction::Increase), 40.0, Some(40.0))); // fail
+        m.decisions.push(dec(Some(HitsPrediction::Unchanged), 40.0, Some(40.5))); // pass
+        m.decisions.push(dec(Some(HitsPrediction::Decrease), 40.0, Some(30.0))); // pass
+        let p = pass_at_1(&[m]);
+        assert_eq!(p.trials, 4);
+        assert_eq!(p.passes, 3);
+        assert!((p.score - 75.0).abs() < 1e-9);
+        assert!(p.ci_lo > 0.0 && p.ci_hi > 0.0);
+    }
+
+    #[test]
+    fn skips_unjudgeable_decisions() {
+        let mut m = RunMetrics::default();
+        m.decisions.push(dec(None, 40.0, Some(50.0)));
+        m.decisions.push(dec(Some(HitsPrediction::Increase), 40.0, None));
+        let p = pass_at_1(&[m]);
+        assert_eq!(p.trials, 0);
+        assert_eq!(p.score, 0.0);
+    }
+
+    #[test]
+    fn aggregates_across_trainers() {
+        let mut a = RunMetrics::default();
+        a.decisions.push(dec(Some(HitsPrediction::Increase), 0.0, Some(10.0)));
+        let mut b = RunMetrics::default();
+        b.decisions.push(dec(Some(HitsPrediction::Increase), 10.0, Some(5.0)));
+        let p = pass_at_1(&[a, b]);
+        assert_eq!(p.trials, 2);
+        assert_eq!(p.passes, 1);
+    }
+
+    #[test]
+    fn format_matches_table4_style() {
+        let p = PassAtK { passes: 76, trials: 100, score: 76.0, ci_lo: 9.0, ci_hi: 11.0 };
+        assert_eq!(p.format(), "76 (-9/11)");
+    }
+}

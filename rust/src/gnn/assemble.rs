@@ -1,0 +1,135 @@
+//! Minibatch → literal packing for the `sage_*` artifacts.
+//!
+//! The sampler emits padded dense node-id tensors; this module synthesizes
+//! the corresponding feature tensors ([`crate::graph::features`]) and packs
+//! them (plus labels and the padding mask) into XLA literals matching the
+//! artifact ABI.  Short minibatches zero-pad the batch axis and zero the
+//! mask so the loss ignores padding rows (verified against model.py by
+//! `python/tests/test_model.py::test_mask_excludes_padding`).
+
+use xla::Literal;
+
+use super::SageShape;
+use crate::graph::features::fill_features;
+use crate::runtime::literal as lit;
+use crate::sampler::Minibatch;
+
+pub struct PackedBatch {
+    pub x_self: Literal,
+    pub x_h1: Literal,
+    pub x_h2: Literal,
+    pub labels: Literal,
+    pub mask: Literal,
+}
+
+/// Pack one sampled minibatch.  `labels` is the dataset's full label vector
+/// (values are taken mod `shape.classes` — the canonical artifact class
+/// space, DESIGN.md §2).
+pub fn pack_minibatch(
+    shape: &SageShape,
+    mb: &Minibatch,
+    feature_seed: u64,
+    labels: &[u16],
+) -> anyhow::Result<PackedBatch> {
+    let (b, k1, k2, d) = (shape.batch, shape.fanout1, shape.fanout2, shape.feat_dim);
+    let rows = mb.targets.len();
+    anyhow::ensure!(rows <= b, "minibatch {rows} rows > artifact batch {b}");
+    anyhow::ensure!(
+        mb.fanout1 == k1 && mb.fanout2 == k2,
+        "sampler fanout ({}, {}) != artifact fanout ({k1}, {k2})",
+        mb.fanout1,
+        mb.fanout2
+    );
+    anyhow::ensure!(mb.hop1.len() == rows * k1, "hop1 len mismatch");
+    anyhow::ensure!(mb.hop2.len() == rows * k1 * k2, "hop2 len mismatch");
+
+    let mut x_self = vec![0.0f32; b * d];
+    for (i, &v) in mb.targets.iter().enumerate() {
+        fill_features(feature_seed, v, &mut x_self[i * d..(i + 1) * d]);
+    }
+    let mut x_h1 = vec![0.0f32; b * k1 * d];
+    for (i, &v) in mb.hop1.iter().enumerate() {
+        fill_features(feature_seed, v, &mut x_h1[i * d..(i + 1) * d]);
+    }
+    let mut x_h2 = vec![0.0f32; b * k1 * k2 * d];
+    for (i, &v) in mb.hop2.iter().enumerate() {
+        fill_features(feature_seed, v, &mut x_h2[i * d..(i + 1) * d]);
+    }
+    let mut label_ids = vec![0i32; b];
+    let mut mask = vec![0.0f32; b];
+    for (i, &v) in mb.targets.iter().enumerate() {
+        label_ids[i] = (labels[v as usize] as usize % shape.classes) as i32;
+        mask[i] = 1.0;
+    }
+    Ok(PackedBatch {
+        x_self: lit::lit_f32(&[b, d], &x_self)?,
+        x_h1: lit::lit_f32(&[b, k1, d], &x_h1)?,
+        x_h2: lit::lit_f32(&[b, k1, k2, d], &x_h2)?,
+        labels: lit::lit_i32(&[b], &label_ids)?,
+        mask: lit::lit_f32(&[b], &mask)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_shape() -> SageShape {
+        SageShape { batch: 4, fanout1: 2, fanout2: 3, feat_dim: 5, hidden: 6, classes: 3 }
+    }
+
+    fn mb(rows: usize) -> Minibatch {
+        Minibatch {
+            targets: (0..rows as u32).collect(),
+            hop1: (0..(rows * 2) as u32).collect(),
+            hop2: (0..(rows * 6) as u32).collect(),
+            fanout1: 2,
+            fanout2: 3,
+            unique_remote: vec![],
+            unique_local: vec![],
+        }
+    }
+
+    #[test]
+    fn packs_full_batch() {
+        let labels = vec![1u16; 64];
+        let p = pack_minibatch(&tiny_shape(), &mb(4), 7, &labels).unwrap();
+        let xs = lit::to_f32(&p.x_self).unwrap();
+        assert_eq!(xs.len(), 4 * 5);
+        let m = lit::to_f32(&p.mask).unwrap();
+        assert_eq!(m, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn short_batch_padded_and_masked() {
+        let labels = vec![2u16; 64];
+        let p = pack_minibatch(&tiny_shape(), &mb(2), 7, &labels).unwrap();
+        let m = lit::to_f32(&p.mask).unwrap();
+        assert_eq!(m, vec![1.0, 1.0, 0.0, 0.0]);
+        let xs = lit::to_f32(&p.x_self).unwrap();
+        assert!(xs[2 * 5..].iter().all(|&x| x == 0.0), "padding rows must be zero");
+        let l = p.labels.to_vec::<i32>().unwrap();
+        assert_eq!(l, vec![2, 2, 0, 0]);
+    }
+
+    #[test]
+    fn labels_mod_classes() {
+        let labels = vec![7u16; 64]; // 7 mod 3 = 1
+        let p = pack_minibatch(&tiny_shape(), &mb(1), 7, &labels).unwrap();
+        assert_eq!(p.labels.to_vec::<i32>().unwrap()[0], 1);
+    }
+
+    #[test]
+    fn rejects_oversized_minibatch() {
+        let labels = vec![0u16; 64];
+        assert!(pack_minibatch(&tiny_shape(), &mb(5), 7, &labels).is_err());
+    }
+
+    #[test]
+    fn rejects_fanout_mismatch() {
+        let labels = vec![0u16; 64];
+        let mut bad = mb(2);
+        bad.fanout1 = 3;
+        assert!(pack_minibatch(&tiny_shape(), &bad, 7, &labels).is_err());
+    }
+}

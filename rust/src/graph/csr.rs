@@ -1,0 +1,143 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! The whole pipeline (generation → partitioning → sampling) runs on this
+//! structure.  Node ids are `u32` (the scaled stand-in datasets stay under
+//! 4B nodes by a wide margin); adjacency is a flat `offsets`/`targets` pair
+//! so neighbor walks are cache-linear — the sampler's hot path.
+
+/// A directed graph in CSR form (undirected graphs store both arcs).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    /// `offsets[v]..offsets[v+1]` indexes `targets` for v's out-neighbors.
+    pub offsets: Vec<u64>,
+    pub targets: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an edge list (dedup + self-loop removal optional).
+    pub fn from_edges(num_nodes: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut degree = vec![0u64; num_nodes];
+        for &(s, _) in edges {
+            degree[s as usize] += 1;
+        }
+        let mut offsets = vec![0u64; num_nodes + 1];
+        for v in 0..num_nodes {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let mut cursor = offsets[..num_nodes].to_vec();
+        let mut targets = vec![0u32; edges.len()];
+        for &(s, t) in edges {
+            let c = &mut cursor[s as usize];
+            targets[*c as usize] = t;
+            *c += 1;
+        }
+        Csr { offsets, targets }
+    }
+
+    /// Build an *undirected* CSR: every `(s, t)` contributes both arcs;
+    /// duplicate arcs and self-loops are removed.
+    pub fn undirected_from_edges(num_nodes: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut both: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * 2);
+        for &(s, t) in edges {
+            if s == t {
+                continue;
+            }
+            both.push((s, t));
+            both.push((t, s));
+        }
+        both.sort_unstable();
+        both.dedup();
+        Self::from_edges(num_nodes, &both)
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn num_arcs(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.targets[lo..hi]
+    }
+
+    /// Nodes sorted by descending degree (MassiveGNN-style prefetch order).
+    pub fn nodes_by_degree_desc(&self) -> Vec<u32> {
+        let mut nodes: Vec<u32> = (0..self.num_nodes() as u32).collect();
+        nodes.sort_by_key(|&v| std::cmp::Reverse(self.degree(v)));
+        nodes
+    }
+
+    /// Memory footprint in bytes (offsets + targets).
+    pub fn bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.targets.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Csr {
+        // 0-1, 0-2, 1-3, 2-3 undirected.
+        Csr::undirected_from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn csr_construction() {
+        let g = diamond();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_arcs(), 8);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[1, 2]);
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn removes_self_loops_and_duplicates() {
+        let g = Csr::undirected_from_edges(3, &[(0, 0), (0, 1), (1, 0), (0, 1)]);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.num_arcs(), 2);
+    }
+
+    #[test]
+    fn directed_preserves_multiplicity_order() {
+        let g = Csr::from_edges(3, &[(0, 2), (0, 1), (2, 0)]);
+        assert_eq!(g.neighbors(0), &[2, 1]);
+        assert_eq!(g.neighbors(1), &[] as &[u32]);
+        assert_eq!(g.neighbors(2), &[0]);
+    }
+
+    #[test]
+    fn degree_ordering() {
+        let g = Csr::undirected_from_edges(4, &[(0, 1), (0, 2), (0, 3), (1, 2)]);
+        let order = g.nodes_by_degree_desc();
+        assert_eq!(order[0], 0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(0, &[]);
+        assert_eq!(g.num_nodes(), 0);
+        assert_eq!(g.num_arcs(), 0);
+    }
+
+    #[test]
+    fn isolated_nodes() {
+        let g = Csr::undirected_from_edges(5, &[(0, 1)]);
+        assert_eq!(g.degree(4), 0);
+        assert_eq!(g.neighbors(4), &[] as &[u32]);
+    }
+}

@@ -1,0 +1,206 @@
+//! Dataset registry: scaled stand-ins for the paper's Table 1a graphs.
+//!
+//! Each spec preserves the *relative* characteristics that drive prefetching
+//! behaviour — average degree, degree skew (R-MAT `a`), feature width (comm
+//! bytes per node), and train-set fraction — at 20×–2000× reduced node
+//! counts so experiments run on one machine.  DESIGN.md §2 records the
+//! substitution rationale.
+
+use crate::graph::csr::Csr;
+use crate::graph::labels::propagate_labels;
+use crate::graph::rmat::{densify_isolated, generate, RmatParams};
+use crate::util::rng::{derive_seed, Pcg32};
+
+/// Static description of a dataset stand-in.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Paper-reported size (for reporting only).
+    pub paper_nodes: &'static str,
+    pub paper_edges: &'static str,
+    /// Stand-in scale.
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    /// R-MAT top-left quadrant probability (skew; b = c = (1-a-d)/2).
+    pub skew_a: f64,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    /// Fraction of nodes in the training split.
+    pub train_frac: f64,
+    /// Excluded from classifier offline training (§5.4 unseen studies).
+    pub unseen: bool,
+}
+
+impl DatasetSpec {
+    fn rmat(&self, scale: f64) -> RmatParams {
+        let a = self.skew_a;
+        let rest = (1.0 - a) / 3.0;
+        RmatParams {
+            a,
+            b: rest,
+            c: rest,
+            num_nodes: ((self.num_nodes as f64 * scale) as usize).max(64),
+            num_edges: ((self.num_edges as f64 * scale) as usize).max(256),
+            permute: true,
+        }
+    }
+}
+
+/// All seven datasets of Table 1a.
+pub const ALL: &[DatasetSpec] = &[
+    DatasetSpec {
+        name: "products",
+        paper_nodes: "2.4M", paper_edges: "61.85M",
+        num_nodes: 60_000, num_edges: 770_000,
+        skew_a: 0.57, feat_dim: 100, num_classes: 47,
+        train_frac: 0.08, unseen: false,
+    },
+    DatasetSpec {
+        name: "reddit",
+        paper_nodes: "0.23M", paper_edges: "114.61M",
+        num_nodes: 12_000, num_edges: 600_000,
+        skew_a: 0.55, feat_dim: 602, num_classes: 41,
+        train_frac: 0.66, unseen: false,
+    },
+    DatasetSpec {
+        name: "papers100M",
+        paper_nodes: "111M", paper_edges: "1.6B",
+        num_nodes: 200_000, num_edges: 1_600_000,
+        skew_a: 0.59, feat_dim: 128, num_classes: 64,
+        train_frac: 0.01, unseen: false,
+    },
+    DatasetSpec {
+        name: "orkut",
+        paper_nodes: "3.07M", paper_edges: "117.18M",
+        num_nodes: 75_000, num_edges: 1_400_000,
+        skew_a: 0.55, feat_dim: 8, num_classes: 32,
+        train_frac: 0.05, unseen: false,
+    },
+    DatasetSpec {
+        name: "friendster",
+        paper_nodes: "65.6M", paper_edges: "1.8B",
+        num_nodes: 150_000, num_edges: 1_500_000,
+        skew_a: 0.60, feat_dim: 128, num_classes: 32,
+        train_frac: 0.005, unseen: false,
+    },
+    DatasetSpec {
+        name: "yelp",
+        paper_nodes: "716K", paper_edges: "13.9M",
+        num_nodes: 35_000, num_edges: 680_000,
+        skew_a: 0.54, feat_dim: 300, num_classes: 100,
+        train_frac: 0.5, unseen: true,
+    },
+    DatasetSpec {
+        name: "ogbn-arxiv",
+        paper_nodes: "169K", paper_edges: "1.1M",
+        num_nodes: 17_000, num_edges: 110_000,
+        skew_a: 0.55, feat_dim: 128, num_classes: 40,
+        train_frac: 0.54, unseen: true,
+    },
+];
+
+pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+    ALL.iter().find(|d| d.name == name)
+}
+
+/// A fully materialized dataset: graph + labels + train split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    pub csr: Csr,
+    pub labels: Vec<u16>,
+    pub train_nodes: Vec<u32>,
+    /// Seed for feature synthesis ([`crate::graph::features`]).
+    pub feature_seed: u64,
+}
+
+impl Dataset {
+    /// Build a dataset at `scale` (1.0 = the registry stand-in size; tests
+    /// use ~0.02).  Deterministic in `(name, scale, seed)`.
+    pub fn build(spec: &DatasetSpec, scale: f64, seed: u64) -> Dataset {
+        let root = derive_seed(seed, &[spec.name.len() as u64, (scale * 1e6) as u64]);
+        let mut rng = Pcg32::new(root);
+        let csr = generate(&spec.rmat(scale), &mut rng);
+        let csr = densify_isolated(&csr, &mut rng);
+        let n = csr.num_nodes();
+        let classes = spec.num_classes.min(u16::MAX as usize);
+        let labels = propagate_labels(&csr, classes, 3, derive_seed(root, &[1]));
+        let train_count = ((n as f64 * spec.train_frac) as usize).clamp(1, n);
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut ids);
+        let mut train_nodes: Vec<u32> = ids[..train_count].to_vec();
+        train_nodes.sort_unstable();
+        Dataset {
+            spec: spec.clone(),
+            csr,
+            labels,
+            train_nodes,
+            feature_seed: derive_seed(root, &[2]),
+        }
+    }
+
+    pub fn build_by_name(name: &str, scale: f64, seed: u64) -> anyhow::Result<Dataset> {
+        let spec = by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' (try: {})", names()))?;
+        Ok(Self::build(spec, scale, seed))
+    }
+}
+
+pub fn names() -> String {
+    ALL.iter().map(|d| d.name).collect::<Vec<_>>().join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_complete() {
+        assert_eq!(ALL.len(), 7);
+        for spec in ALL {
+            assert!(spec.num_nodes >= 10_000);
+            assert!(spec.num_edges > spec.num_nodes);
+            assert!(spec.feat_dim >= 8);
+            assert!((0.0..=1.0).contains(&spec.train_frac));
+        }
+        assert_eq!(ALL.iter().filter(|d| d.unseen).count(), 2);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("reddit").unwrap().feat_dim, 602);
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn builds_scaled_dataset() {
+        let ds = Dataset::build(by_name("ogbn-arxiv").unwrap(), 0.05, 1);
+        assert!(ds.csr.num_nodes() >= 64);
+        assert_eq!(ds.labels.len(), ds.csr.num_nodes());
+        assert!(!ds.train_nodes.is_empty());
+        assert!(ds.train_nodes.windows(2).all(|w| w[0] < w[1]));
+        assert!(ds.train_nodes.iter().all(|&v| (v as usize) < ds.csr.num_nodes()));
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let spec = by_name("products").unwrap();
+        let a = Dataset::build(spec, 0.02, 9);
+        let b = Dataset::build(spec, 0.02, 9);
+        assert_eq!(a.csr.targets, b.csr.targets);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.train_nodes, b.train_nodes);
+        assert_eq!(a.feature_seed, b.feature_seed);
+    }
+
+    #[test]
+    fn no_isolated_nodes_after_build() {
+        let ds = Dataset::build(by_name("yelp").unwrap(), 0.02, 3);
+        assert!((0..ds.csr.num_nodes() as u32).all(|v| ds.csr.degree(v) > 0));
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(Dataset::build_by_name("bogus", 1.0, 0).is_err());
+    }
+}

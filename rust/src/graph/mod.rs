@@ -1,0 +1,11 @@
+//! Graph substrate: CSR storage, R-MAT generation, the Table 1a dataset
+//! registry, synthesized features, and pseudo-labels.
+
+pub mod csr;
+pub mod datasets;
+pub mod features;
+pub mod labels;
+pub mod rmat;
+
+pub use csr::Csr;
+pub use datasets::{Dataset, DatasetSpec};

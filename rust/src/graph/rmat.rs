@@ -1,0 +1,182 @@
+//! R-MAT / Kronecker-style graph generator.
+//!
+//! Real-world GNN benchmark graphs (Table 1a) are heavy-tailed; R-MAT with
+//! partition probabilities (a, b, c, d) reproduces the degree skew that
+//! drives prefetching dynamics: a small hot set of high-degree nodes that is
+//! repeatedly sampled (worth persisting) and a long tail of cold nodes
+//! (cache pollution if kept).  Each dataset stand-in in
+//! [`crate::graph::datasets`] picks its own (a, b, c, d) + edge factor.
+
+use crate::graph::csr::Csr;
+use crate::util::rng::Pcg32;
+
+/// R-MAT parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RmatParams {
+    /// Quadrant probabilities; must sum to ~1.  `a` >> rest ⇒ heavier skew.
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Number of nodes is rounded up to the next power of two internally,
+    /// then mapped back down so ids stay `< num_nodes`.
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    /// Shuffle node ids so partitioning cannot exploit generation order.
+    pub permute: bool,
+}
+
+impl RmatParams {
+    pub fn d(&self) -> f64 {
+        1.0 - self.a - self.b - self.c
+    }
+}
+
+/// Generate an undirected CSR graph.
+pub fn generate(params: &RmatParams, rng: &mut Pcg32) -> Csr {
+    assert!(params.num_nodes > 1, "need at least 2 nodes");
+    assert!(
+        params.d() > 0.0 && params.a > 0.0 && params.b >= 0.0 && params.c >= 0.0,
+        "bad quadrant probabilities"
+    );
+    let scale = (params.num_nodes as f64).log2().ceil() as u32;
+    let side = 1usize << scale;
+
+    // Optional id permutation (identity when disabled).
+    let perm: Vec<u32> = if params.permute {
+        let mut p: Vec<u32> = (0..params.num_nodes as u32).collect();
+        rng.shuffle(&mut p);
+        p
+    } else {
+        (0..params.num_nodes as u32).collect()
+    };
+
+    let mut edges = Vec::with_capacity(params.num_edges);
+    let mut attempts = 0usize;
+    let max_attempts = params.num_edges * 8 + 1024;
+    while edges.len() < params.num_edges && attempts < max_attempts {
+        attempts += 1;
+        let (mut s, mut t) = (0usize, 0usize);
+        let mut span = side;
+        while span > 1 {
+            span /= 2;
+            // Noise the quadrant probabilities slightly per level (standard
+            // smoothed R-MAT to avoid exact-power-law artifacts).
+            let jitter = 0.9 + 0.2 * rng.f64();
+            let a = params.a * jitter;
+            let r = rng.f64() * (a + params.b + params.c + params.d());
+            if r < a {
+                // top-left: nothing to add
+            } else if r < a + params.b {
+                t += span;
+            } else if r < a + params.b + params.c {
+                s += span;
+            } else {
+                s += span;
+                t += span;
+            }
+        }
+        // Map the power-of-two grid back into [0, num_nodes).
+        let s = s % params.num_nodes;
+        let t = t % params.num_nodes;
+        if s == t {
+            continue;
+        }
+        edges.push((perm[s], perm[t]));
+    }
+    Csr::undirected_from_edges(params.num_nodes, &edges)
+}
+
+/// Ensure no isolated training nodes: link each zero-degree node to a random
+/// neighbor (GNN samplers require ≥1 neighbor to make progress).
+pub fn densify_isolated(csr: &Csr, rng: &mut Pcg32) -> Csr {
+    let n = csr.num_nodes();
+    let mut extra = Vec::new();
+    for v in 0..n as u32 {
+        if csr.degree(v) == 0 {
+            let mut t = rng.below(n as u64) as u32;
+            if t == v {
+                t = (t + 1) % n as u32;
+            }
+            extra.push((v, t));
+        }
+    }
+    if extra.is_empty() {
+        return csr.clone();
+    }
+    // Rebuild from the union of arcs.
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(csr.num_arcs() / 2 + extra.len());
+    for v in 0..n as u32 {
+        for &t in csr.neighbors(v) {
+            if v < t {
+                edges.push((v, t));
+            }
+        }
+    }
+    edges.extend(extra);
+    Csr::undirected_from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> RmatParams {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19, num_nodes: 1000, num_edges: 8000, permute: true }
+    }
+
+    #[test]
+    fn generates_requested_scale() {
+        let mut rng = Pcg32::new(1);
+        let g = generate(&small(), &mut rng);
+        assert_eq!(g.num_nodes(), 1000);
+        // Undirected dedup loses some arcs; expect most of them.
+        assert!(g.num_arcs() > 8000, "arcs {}", g.num_arcs());
+        assert!(g.num_arcs() <= 16000);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&small(), &mut Pcg32::new(7));
+        let b = generate(&small(), &mut Pcg32::new(7));
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.targets, b.targets);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&small(), &mut Pcg32::new(1));
+        let b = generate(&small(), &mut Pcg32::new(2));
+        assert_ne!(a.targets, b.targets);
+    }
+
+    #[test]
+    fn skewed_params_make_heavy_tail() {
+        let mut rng = Pcg32::new(3);
+        let skewed = RmatParams { a: 0.7, b: 0.12, c: 0.12, ..small() };
+        let g = generate(&skewed, &mut rng);
+        let max_deg = (0..g.num_nodes() as u32).map(|v| g.degree(v)).max().unwrap();
+        let mean_deg = g.num_arcs() as f64 / g.num_nodes() as f64;
+        assert!(
+            max_deg as f64 > 6.0 * mean_deg,
+            "max {max_deg} mean {mean_deg}: degree distribution not heavy-tailed"
+        );
+    }
+
+    #[test]
+    fn all_ids_in_range() {
+        let mut rng = Pcg32::new(5);
+        let g = generate(&small(), &mut rng);
+        assert!(g.targets.iter().all(|&t| (t as usize) < g.num_nodes()));
+    }
+
+    #[test]
+    fn densify_removes_isolation() {
+        let mut rng = Pcg32::new(9);
+        let sparse = RmatParams {
+            a: 0.6, b: 0.15, c: 0.15, num_nodes: 500, num_edges: 300, permute: true,
+        };
+        let g = generate(&sparse, &mut rng);
+        let d = densify_isolated(&g, &mut rng);
+        assert!((0..d.num_nodes() as u32).all(|v| d.degree(v) > 0));
+    }
+}

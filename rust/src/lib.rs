@@ -1,0 +1,39 @@
+//! # Rudder — LLM-agent-steered prefetching for distributed GNN training
+//!
+//! A from-scratch reproduction of *"Rudder: Steering Prefetching in
+//! Distributed GNN Training using LLM Agents"* (ICS 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a discrete-event simulated
+//!   distributed-GNN cluster (partitioned graph, k-hop sampler, RPC network
+//!   model, DDP trainers), the persistent buffer with the paper's
+//!   frequency-decay scoring policy, the prefetcher/inference task pipeline
+//!   of Algorithm 1, the LLM-agent workflow (MetricsCollector →
+//!   ContextBuilder → DecisionMaker), the ML-classifier controllers, and
+//!   the full evaluation harness (every figure and table of §5).
+//! * **Layer 2** — `python/compile/model.py`: GraphSAGE fwd/bwd + the MLP
+//!   decision classifier, AOT-lowered to HLO text.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels (fused SAGE
+//!   aggregate+project, tiled matmul, buffer score update).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so Python never runs on the request path.
+//!
+//! Start with [`sim::run::run_experiment`] or the `examples/` directory.
+
+pub mod agent;
+pub mod cli;
+pub mod buffer;
+pub mod classifier;
+pub mod config;
+pub mod eval;
+pub mod gnn;
+pub mod graph;
+pub mod metrics;
+pub mod massivegnn;
+pub mod net;
+pub mod partition;
+pub mod runtime;
+pub mod sampler;
+pub mod sim;
+pub mod util;

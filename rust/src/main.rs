@@ -1,0 +1,305 @@
+//! `rudder` — leader entrypoint + CLI.
+//!
+//! See `rudder help` (or [`rudder::cli::USAGE`]) for the command surface.
+
+use std::sync::Arc;
+
+use rudder::cli::{Args, USAGE};
+use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, Table};
+use rudder::eval::{harness, pass_at_1, Quality};
+use rudder::gnn::XlaRunner;
+use rudder::graph::datasets;
+use rudder::partition::{self, Method};
+use rudder::runtime::Engine;
+use rudder::sampler::Sampler;
+use rudder::sim::{build_cluster, run_on, trace_only, ControllerSpec, Mode, RunConfig};
+use rudder::util::json::Json;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return;
+    }
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "experiment" => cmd_experiment(&args),
+        "trace" => cmd_trace(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "datasets" => cmd_datasets(),
+        "models" => cmd_models(),
+        "partition-stats" => cmd_partition_stats(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from_args(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.opt("config") {
+        cfg = rudder::config::load(std::path::Path::new(path))?;
+    }
+    rudder::config::load_calibration(&mut cfg);
+    if let Some(v) = args.opt("dataset") {
+        cfg.dataset = v.to_string();
+    }
+    if let Some(v) = args.opt_parse::<f64>("scale")? {
+        cfg.scale = v;
+    }
+    if let Some(v) = args.opt_parse::<usize>("trainers")? {
+        cfg.num_trainers = v;
+    }
+    if let Some(v) = args.opt_parse::<usize>("batch")? {
+        cfg.batch_size = v;
+    }
+    if let Some(v) = args.opt_parse::<f64>("buffer")? {
+        cfg.buffer_pct = v;
+    }
+    if let Some(v) = args.opt_parse::<usize>("epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = args.opt_parse::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.opt("controller") {
+        cfg.controller = ControllerSpec::parse(v)?;
+    }
+    if let Some(v) = args.opt("mode") {
+        cfg.mode = Mode::parse(v)?;
+    }
+    if let Some(v) = args.opt("partition") {
+        cfg.partition_method = Method::parse(v)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    println!(
+        "rudder train: {} scale={} trainers={} buffer={:.0}% epochs={} controller={} mode={:?}",
+        cfg.dataset,
+        cfg.scale,
+        cfg.num_trainers,
+        cfg.buffer_pct * 100.0,
+        cfg.epochs,
+        cfg.controller.label(),
+        cfg.mode,
+    );
+    let (ds, part) = build_cluster(&cfg)?;
+    println!(
+        "graph: {} nodes, {} edges; partition cut={}",
+        ds.csr.num_nodes(),
+        ds.csr.num_arcs() / 2,
+        part.edge_cut(&ds.csr)
+    );
+    let offline = if matches!(cfg.controller, ControllerSpec::Classifier { .. }) {
+        println!("collecting offline classifier traces...");
+        Some(harness::offline_training_set(Quality::Quick))
+    } else {
+        None
+    };
+    let r = run_on(&ds, &part, &cfg, offline.as_ref());
+    let p = pass_at_1(&r.per_trainer);
+    let mut t = Table::new("run summary", &["metric", "value"]);
+    t.row(vec!["variant".into(), r.label.clone()]);
+    t.row(vec!["mean epoch time".into(), fmt_secs(r.mean_epoch_time)]);
+    t.row(vec!["steady %-hits".into(), fmt_pct(r.steady_hits_pct)]);
+    t.row(vec!["total comm (nodes)".into(), fmt_count(r.total_comm_nodes)]);
+    t.row(vec!["total comm (bytes)".into(), fmt_count(r.total_comm_bytes)]);
+    t.row(vec!["p99 comm/mb (nodes)".into(), format!("{:.0}", r.p99_comm_nodes)]);
+    t.row(vec!["replacement interval r".into(), format!("{:.1}", r.replacement_interval)]);
+    t.row(vec![
+        "valid responses".into(),
+        format!("{:.0}%", r.valid_response_pct),
+    ]);
+    if p.trials > 0 {
+        t.row(vec!["Pass@1 %-hits".into(), p.format()]);
+    }
+    t.emit("train_summary");
+    if args.flag("debug-decisions") {
+        for d in &r.per_trainer[0].decisions {
+            println!(
+                "mb={:<4} act={:<7} pred={:?} hits {:.1} -> {:?} lat={:.2}",
+                d.minibatch,
+                if d.replace { "replace" } else { "skip" },
+                d.prediction,
+                d.hits_before,
+                d.hits_after,
+                d.latency
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let q = if args.flag("full") { Quality::Full } else { Quality::Quick };
+    let ids: Vec<&str> = if id == "all" {
+        harness::EXPERIMENTS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        println!("\n### experiment {id} ({q:?}) ###");
+        let t0 = std::time::Instant::now();
+        for table in harness::run_experiment_id(id, q)? {
+            table.emit(&format!("{id}_{}", sanitize(&table.title)));
+        }
+        println!("[{id} done in {:.1}s]", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .take(48)
+        .collect()
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let (ds, part) = build_cluster(&cfg)?;
+    let set = trace_only(&ds, &part, &cfg);
+    println!(
+        "trace-only: {} labelled examples, positive rate {:.2}, collection cost {:.1}s",
+        set.len(),
+        set.positive_rate(),
+        set.collection_cost
+    );
+    if let Some(out) = args.opt("out") {
+        let examples: Vec<Json> = set
+            .xs
+            .iter()
+            .zip(&set.ys)
+            .map(|(x, &y)| {
+                Json::obj(vec![
+                    (
+                        "x",
+                        Json::Arr(x.iter().map(|&v| Json::num(v as f64)).collect()),
+                    ),
+                    ("y", Json::Bool(y)),
+                ])
+            })
+            .collect();
+        std::fs::write(out, Json::Arr(examples).to_string_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(_args: &Args) -> anyhow::Result<()> {
+    let Some(engine) = Engine::try_load_default() else {
+        anyhow::bail!("artifacts not found — run `make artifacts` first");
+    };
+    let engine = Arc::new(engine);
+    println!("platform: {}", engine.platform());
+    // Measure the real sage_train_step on a synthetic minibatch.
+    let cfg = RunConfig { scale: 0.05, ..Default::default() };
+    let (ds, part) = build_cluster(&cfg)?;
+    let c = engine.manifest.config.clone();
+    let sampler = Sampler::new(0, c.batch, c.fanout1, c.fanout2, 1);
+    let train = part.train_nodes_of(0, &ds.train_nodes);
+    let order = sampler.epoch_order(&train, 0);
+    let mut runner = XlaRunner::new(engine.clone(), 7, 0.05);
+    let mut times = Vec::new();
+    for mb in 0..5 {
+        let b = sampler.sample(&ds.csr, &part, &order, 0, mb % 2);
+        if b.targets.is_empty() {
+            break;
+        }
+        let (loss, dt) = runner.train_step(&b, ds.feature_seed, &ds.labels)?;
+        println!("  step {mb}: loss={loss:.4} dt={}", fmt_secs(dt));
+        if mb > 0 {
+            times.push(dt); // skip compile-inclusive first step
+        }
+    }
+    let mean = rudder::util::stats::mean(&times);
+    // Scale measured (artifact batch) step to the simulation batch.
+    let body = format!(
+        "# written by `rudder calibrate` — measured on {}\n[compute]\nbase_overhead = {:.6}\n",
+        engine.platform(),
+        mean,
+    );
+    std::fs::create_dir_all("configs")?;
+    std::fs::write("configs/calibration.toml", &body)?;
+    println!("wrote configs/calibration.toml (mean step {})", fmt_secs(mean));
+    Ok(())
+}
+
+fn cmd_datasets() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "datasets (Table 1a stand-ins)",
+        &["name", "paper_size", "standin_nodes", "standin_edges", "feat_dim", "classes", "unseen"],
+    );
+    for d in datasets::ALL {
+        t.row(vec![
+            d.name.to_string(),
+            format!("{} / {}", d.paper_nodes, d.paper_edges),
+            d.num_nodes.to_string(),
+            d.num_edges.to_string(),
+            d.feat_dim.to_string(),
+            d.num_classes.to_string(),
+            if d.unseen { "yes".into() } else { "".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_models() -> anyhow::Result<()> {
+    for table in harness::fig06(Quality::Quick) {
+        println!("{}", table.render());
+    }
+    Ok(())
+}
+
+fn cmd_partition_stats(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let method = args
+        .opt("method")
+        .map(Method::parse)
+        .transpose()?
+        .unwrap_or(cfg.partition_method);
+    let ds = rudder::graph::Dataset::build_by_name(&cfg.dataset, cfg.scale, cfg.seed)?;
+    let mut t = Table::new(
+        &format!("partition quality — {} (scale {})", cfg.dataset, cfg.scale),
+        &["method", "parts", "cut%", "imbalance", "mean_halo", "remote_ratio"],
+    );
+    for m in [method, Method::Ldg, Method::Random] {
+        let part = partition::partition(&ds.csr, cfg.num_trainers, m, cfg.seed);
+        let s = partition::stats::compute(&ds.csr, &part);
+        t.row(vec![
+            format!("{m:?}"),
+            s.num_parts.to_string(),
+            format!("{:.1}", s.cut_fraction * 100.0),
+            format!("{:.3}", s.imbalance),
+            format!("{:.0}", s.mean_halo),
+            format!("{:.2}", s.mean_remote_ratio),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

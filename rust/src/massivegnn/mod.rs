@@ -1,0 +1,62 @@
+//! MassiveGNN comparator (Sarkar et al., CLUSTER'24 — the paper's §5.1
+//! baseline).
+//!
+//! MassiveGNN prefetches *high-degree remote nodes before training starts*
+//! (Rudder starts empty) and replaces on a fixed interval chosen by
+//! exhaustive hyperparameter search (the paper uses its best-reported
+//! interval, 32).  The replacement candidates use the same scoring policy;
+//! only the warm start and the fixed cadence differ.
+
+use crate::graph::Csr;
+use crate::partition::Partition;
+
+/// Degree-ordered prefetch candidates for part `p`: its 2-hop halo sorted
+/// by descending degree, truncated to `limit`.
+pub fn prefetch_order(csr: &Csr, part: &Partition, p: usize, limit: usize) -> Vec<u32> {
+    let mut halo = part.halo_k(csr, p, 2);
+    halo.sort_by_key(|&v| std::cmp::Reverse(csr.degree(v)));
+    halo.truncate(limit);
+    halo
+}
+
+/// The best-reported fixed replacement interval (paper Fig 15).
+pub const DEFAULT_INTERVAL: u64 = 32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{densify_isolated, generate, RmatParams};
+    use crate::partition::{partition, Method};
+    use crate::util::rng::Pcg32;
+
+    fn setup() -> (Csr, Partition) {
+        let mut rng = Pcg32::new(6);
+        let csr = generate(
+            &RmatParams {
+                a: 0.57, b: 0.19, c: 0.19, num_nodes: 1200, num_edges: 8000, permute: true,
+            },
+            &mut rng,
+        );
+        let csr = densify_isolated(&csr, &mut rng);
+        let part = partition(&csr, 4, Method::MetisLike, 1);
+        (csr, part)
+    }
+
+    #[test]
+    fn orders_by_degree_desc() {
+        let (csr, part) = setup();
+        let order = prefetch_order(&csr, &part, 0, 100);
+        assert!(order.len() <= 100);
+        for w in order.windows(2) {
+            assert!(csr.degree(w[0]) >= csr.degree(w[1]));
+        }
+        // All candidates are remote to part 0.
+        assert!(order.iter().all(|&v| part.owner_of(v) != 0));
+    }
+
+    #[test]
+    fn truncates_to_limit() {
+        let (csr, part) = setup();
+        assert_eq!(prefetch_order(&csr, &part, 1, 5).len(), 5);
+    }
+}

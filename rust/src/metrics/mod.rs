@@ -1,0 +1,247 @@
+//! Metrics: per-minibatch records, run-level series, and the agent-visible
+//! observation snapshot.
+//!
+//! Everything the paper plots flows through [`RunMetrics`]: %-Hits and
+//! communication trajectories (Fig 20), epoch times (Fig 12/16/21), p99
+//! communication volume (Fig 14), replacement events and intervals
+//! (Table 2), and the decision log that Pass@1 (§4.6) is computed from.
+
+use crate::util::stats;
+
+/// One trainer-minibatch observation.
+#[derive(Debug, Clone)]
+pub struct MinibatchRecord {
+    pub epoch: usize,
+    pub minibatch: usize,
+    pub trainer: usize,
+    /// %-Hits: sampled remote nodes found in the persistent buffer.
+    pub hits_pct: f64,
+    /// Remote nodes fetched this minibatch (misses + replacement fetches).
+    pub comm_nodes: u64,
+    pub comm_bytes: u64,
+    /// Unique remote nodes sampled (Fig 1 series).
+    pub unique_remote: u64,
+    pub buffer_occupancy: f64,
+    /// Virtual time this minibatch took (T_DDP + exposed comm + stalls).
+    pub step_time: f64,
+    /// Was a replacement executed on this minibatch?
+    pub replaced: bool,
+    /// Nodes replaced as a fraction of buffer capacity.
+    pub replaced_frac: f64,
+}
+
+/// Decision bookkeeping for Pass@1 (§4.6): the agent predicts the %-Hits
+/// direction; we compare against the observed movement at the next
+/// evaluation point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HitsPrediction {
+    Increase,
+    Decrease,
+    Unchanged,
+}
+
+impl HitsPrediction {
+    pub fn parse(s: &str) -> Option<HitsPrediction> {
+        match s {
+            "increase" | "up" | "improve" => Some(HitsPrediction::Increase),
+            "decrease" | "down" | "degrade" => Some(HitsPrediction::Decrease),
+            "unchanged" | "same" | "stable" => Some(HitsPrediction::Unchanged),
+            _ => None,
+        }
+    }
+
+    /// Does an observed %-Hits delta match this prediction?
+    /// Movements under `tol` percentage points count as "unchanged".
+    pub fn matches(&self, delta_hits: f64, tol: f64) -> bool {
+        match self {
+            HitsPrediction::Increase => delta_hits > tol,
+            HitsPrediction::Decrease => delta_hits < -tol,
+            HitsPrediction::Unchanged => delta_hits.abs() <= tol,
+        }
+    }
+}
+
+/// One controller decision, enriched once the outcome is observable.
+#[derive(Debug, Clone)]
+pub struct DecisionRecord {
+    pub minibatch: usize,
+    /// true = replace, false = skip.
+    pub replace: bool,
+    pub prediction: Option<HitsPrediction>,
+    pub valid_response: bool,
+    /// %-Hits at decision time.
+    pub hits_before: f64,
+    /// %-Hits at the next evaluation point (filled in later).
+    pub hits_after: Option<f64>,
+    /// Agent/classifier inference latency (virtual seconds).
+    pub latency: f64,
+}
+
+/// Full per-trainer run series.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub minibatches: Vec<MinibatchRecord>,
+    pub decisions: Vec<DecisionRecord>,
+    pub epoch_times: Vec<f64>,
+}
+
+impl RunMetrics {
+    pub fn mean_epoch_time(&self) -> f64 {
+        stats::mean(&self.epoch_times)
+    }
+
+    pub fn mean_hits_pct(&self) -> f64 {
+        stats::mean(&self.minibatches.iter().map(|m| m.hits_pct).collect::<Vec<_>>())
+    }
+
+    /// Steady-state %-Hits: mean over the last half of the run.
+    pub fn steady_hits_pct(&self) -> f64 {
+        let n = self.minibatches.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let tail: Vec<f64> = self.minibatches[n / 2..].iter().map(|m| m.hits_pct).collect();
+        stats::mean(&tail)
+    }
+
+    pub fn total_comm_nodes(&self) -> u64 {
+        self.minibatches.iter().map(|m| m.comm_nodes).sum()
+    }
+
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.minibatches.iter().map(|m| m.comm_bytes).sum()
+    }
+
+    /// p-th percentile of per-minibatch communication (Fig 14 is p99).
+    pub fn comm_nodes_percentile(&self, p: f64) -> f64 {
+        stats::percentile(
+            &self.minibatches.iter().map(|m| m.comm_nodes as f64).collect::<Vec<_>>(),
+            p,
+        )
+    }
+
+    /// The paper's replacement interval `r` (§4.5.1): mean gap in
+    /// minibatches between *processed decisions* (r = 1 in sync mode, the
+    /// agent's effective cadence in async mode).  Controllers without an
+    /// inference loop (fixed / MassiveGNN) fall back to the gap between
+    /// executed replacements.
+    pub fn replacement_interval(&self) -> f64 {
+        let points: Vec<usize> = if self.decisions.len() >= 2 {
+            self.decisions.iter().map(|d| d.minibatch).collect()
+        } else {
+            self.minibatches
+                .iter()
+                .filter(|m| m.replaced)
+                .map(|m| m.minibatch)
+                .collect()
+        };
+        if points.len() < 2 {
+            return self.minibatches.len().max(1) as f64;
+        }
+        let gaps: Vec<f64> = points.windows(2).map(|w| (w[1] - w[0]) as f64).collect();
+        stats::mean(&gaps)
+    }
+
+    /// (valid, invalid) response counts.
+    pub fn response_counts(&self) -> (u64, u64) {
+        let valid = self.decisions.iter().filter(|d| d.valid_response).count() as u64;
+        (valid, self.decisions.len() as u64 - valid)
+    }
+
+    /// (+ve, −ve) decision fractions: replace vs skip among valid decisions.
+    pub fn decision_split(&self) -> (f64, f64) {
+        let valid: Vec<_> = self.decisions.iter().filter(|d| d.valid_response).collect();
+        if valid.is_empty() {
+            return (0.0, 0.0);
+        }
+        let pos = valid.iter().filter(|d| d.replace).count() as f64 / valid.len() as f64;
+        (pos * 100.0, (1.0 - pos) * 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(mb: usize, hits: f64, comm: u64, replaced: bool) -> MinibatchRecord {
+        MinibatchRecord {
+            epoch: 0,
+            minibatch: mb,
+            trainer: 0,
+            hits_pct: hits,
+            comm_nodes: comm,
+            comm_bytes: comm * 400,
+            unique_remote: comm,
+            buffer_occupancy: 0.5,
+            step_time: 0.01,
+            replaced,
+            replaced_frac: if replaced { 0.1 } else { 0.0 },
+        }
+    }
+
+    #[test]
+    fn prediction_parse_and_match() {
+        assert_eq!(HitsPrediction::parse("increase"), Some(HitsPrediction::Increase));
+        assert_eq!(HitsPrediction::parse("same"), Some(HitsPrediction::Unchanged));
+        assert_eq!(HitsPrediction::parse("???"), None);
+        assert!(HitsPrediction::Increase.matches(5.0, 1.0));
+        assert!(!HitsPrediction::Increase.matches(0.5, 1.0));
+        assert!(HitsPrediction::Unchanged.matches(0.5, 1.0));
+        assert!(HitsPrediction::Decrease.matches(-3.0, 1.0));
+    }
+
+    #[test]
+    fn replacement_interval_mean_gap() {
+        let mut rm = RunMetrics::default();
+        for i in 0..20 {
+            rm.minibatches.push(rec(i, 50.0, 10, i % 5 == 0));
+        }
+        assert!((rm.replacement_interval() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replacement_interval_degenerate() {
+        let mut rm = RunMetrics::default();
+        rm.minibatches.push(rec(0, 10.0, 5, false));
+        rm.minibatches.push(rec(1, 10.0, 5, true));
+        assert_eq!(rm.replacement_interval(), 2.0);
+    }
+
+    #[test]
+    fn steady_hits_uses_tail() {
+        let mut rm = RunMetrics::default();
+        for i in 0..10 {
+            rm.minibatches.push(rec(i, if i < 5 { 0.0 } else { 80.0 }, 1, false));
+        }
+        assert!((rm.steady_hits_pct() - 80.0).abs() < 1e-9);
+        assert!((rm.mean_hits_pct() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_percentiles() {
+        let mut rm = RunMetrics::default();
+        for i in 0..100 {
+            rm.minibatches.push(rec(i, 50.0, i as u64, false));
+        }
+        assert!(rm.comm_nodes_percentile(99.0) >= 97.0);
+        assert_eq!(rm.total_comm_nodes(), (0..100).sum::<u64>());
+    }
+
+    #[test]
+    fn response_counts_and_split() {
+        let mut rm = RunMetrics::default();
+        for i in 0..10 {
+            rm.decisions.push(DecisionRecord {
+                minibatch: i,
+                replace: i % 2 == 0,
+                prediction: None,
+                valid_response: i != 9,
+                hits_before: 0.0,
+                hits_after: None,
+                latency: 0.01,
+            });
+        }
+        let (v, inv) = rm.response_counts();
+        assert_eq!((v, inv), (9, 1));
+    }
+}

@@ -1,0 +1,153 @@
+//! Network cost model: the simulated Slingshot fabric + DistDGL RPC layer.
+//!
+//! An α–β (latency–bandwidth) model with a contention term:
+//!
+//! * **Feature fetch** (DistDGL RPC with sender-side aggregation): one
+//!   message per *owner partition* involved (not per node) + payload bytes
+//!   at the effective per-trainer bandwidth.  Contention grows with the
+//!   number of trainers sharing the fabric (log-factor, matching the
+//!   paper's observation that communication rises under strong scaling).
+//! * **Gradient allreduce** (DDP sync): ring allreduce, `2(p-1)/p × bytes`.
+//!
+//! Constants are config-overridable (`[net]` section) and were picked so
+//! that scaled-down datasets land in the paper's regime: communication is
+//! the dominant term for no-prefetch baselines and shrinks below compute
+//! when the buffer absorbs most remote traffic.
+
+/// Seconds, as used by the virtual clock.
+pub type SimTime = f64;
+
+#[derive(Debug, Clone)]
+pub struct NetParams {
+    /// Per-message latency (s) — RPC + transport setup.
+    pub alpha: f64,
+    /// Per-byte time (s/B) — inverse effective bandwidth per trainer.
+    pub beta: f64,
+    /// Contention growth per log2(trainers).
+    pub contention: f64,
+    /// Allreduce per-byte time (s/B) on the NCCL-like path.
+    pub beta_allreduce: f64,
+    /// Allreduce base latency per round (s).
+    pub alpha_allreduce: f64,
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        // beta is *scale-compensated*: the stand-in graphs are ~40x smaller
+        // than the paper's, so per-minibatch fetches carry ~40x fewer nodes.
+        // To preserve the paper's T_COMM/T_DDP ratio (communication
+        // comparable to compute for no-prefetch baselines), the effective
+        // per-trainer RPC throughput is divided by the same factor:
+        // 600 MB/s raw DistDGL-RPC-over-TCP => ~15 MB/s compensated.
+        NetParams {
+            alpha: 1e-3,         // per aggregated RPC (python RPC stack)
+            beta: 1.0 / 15e6,    // scale-compensated effective throughput
+            contention: 0.18,
+            beta_allreduce: 1.0 / 8e9,
+            alpha_allreduce: 25e-6,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub params: NetParams,
+    pub num_trainers: usize,
+}
+
+impl Network {
+    pub fn new(params: NetParams, num_trainers: usize) -> Network {
+        assert!(num_trainers >= 1);
+        Network { params, num_trainers }
+    }
+
+    /// Contention multiplier for the current job size.
+    #[inline]
+    pub fn contention_factor(&self) -> f64 {
+        1.0 + self.params.contention * (self.num_trainers as f64).log2().max(0.0)
+    }
+
+    /// Time to fetch `node_count` remote node features spread over
+    /// `owner_parts` distinct partitions, each feature `feat_bytes` bytes.
+    pub fn fetch_time(&self, node_count: usize, owner_parts: usize, feat_bytes: u64) -> SimTime {
+        if node_count == 0 {
+            return 0.0;
+        }
+        let msgs = owner_parts.max(1) as f64;
+        let bytes = node_count as f64 * feat_bytes as f64;
+        self.params.alpha * msgs + self.params.beta * bytes * self.contention_factor()
+    }
+
+    /// Same accounting, but only byte volume (for Fig 14 / Fig 20 series).
+    pub fn fetch_bytes(&self, node_count: usize, feat_bytes: u64) -> u64 {
+        node_count as u64 * feat_bytes
+    }
+
+    /// Ring-allreduce time for one gradient sync of `model_bytes`.
+    pub fn allreduce_time(&self, model_bytes: u64) -> SimTime {
+        let p = self.num_trainers as f64;
+        if self.num_trainers == 1 {
+            return 0.0;
+        }
+        let volume = 2.0 * (p - 1.0) / p * model_bytes as f64;
+        let rounds = 2.0 * (p - 1.0);
+        self.params.alpha_allreduce * rounds + self.params.beta_allreduce * volume
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(t: usize) -> Network {
+        Network::new(NetParams::default(), t)
+    }
+
+    #[test]
+    fn zero_nodes_zero_time() {
+        assert_eq!(net(4).fetch_time(0, 0, 400), 0.0);
+    }
+
+    #[test]
+    fn fetch_scales_with_nodes_and_bytes() {
+        let n = net(4);
+        let t1 = n.fetch_time(100, 3, 400);
+        let t2 = n.fetch_time(200, 3, 400);
+        let t3 = n.fetch_time(100, 3, 800);
+        assert!(t2 > t1 && t3 > t1);
+        assert!((t2 - t1) > 0.9 * (t3 - t1) && (t2 - t1) < 1.1 * (t3 - t1));
+    }
+
+    #[test]
+    fn aggregation_beats_per_node_messages() {
+        let n = net(4);
+        let aggregated = n.fetch_time(1000, 3, 4);
+        let per_node = 1000.0 * n.params.alpha + n.fetch_time(1000, 0, 4);
+        assert!(aggregated < per_node / 10.0);
+    }
+
+    #[test]
+    fn contention_grows_with_trainers() {
+        assert!(net(64).contention_factor() > net(4).contention_factor());
+        assert!((net(1).contention_factor() - 1.0).abs() < 1e-12);
+        let t_small = net(4).fetch_time(500, 3, 400);
+        let t_big = net(256).fetch_time(500, 3, 400);
+        assert!(t_big > t_small);
+    }
+
+    #[test]
+    fn allreduce_single_trainer_free() {
+        assert_eq!(net(1).allreduce_time(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn allreduce_grows_sublinearly_in_p() {
+        let b = 4u64 << 20;
+        let t4 = net(4).allreduce_time(b);
+        let t64 = net(64).allreduce_time(b);
+        assert!(t64 > t4);
+        // Volume term saturates at 2×bytes; growth beyond that is the
+        // per-round latency term, linear in p: bounded by ~16x here.
+        assert!(t64 < t4 * 16.0, "t4={t4} t64={t64}");
+    }
+}

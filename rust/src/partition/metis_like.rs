@@ -1,0 +1,306 @@
+//! Multilevel k-way partitioner in the METIS mold.
+//!
+//! Three phases (Karypis–Kumar):
+//! 1. **Coarsening** — repeated heavy-edge matching merges endpoint pairs of
+//!    heavy edges until the graph is small (≤ `COARSE_TARGET` × parts).
+//! 2. **Initial partitioning** — greedy BFS region growing on the coarsest
+//!    graph, seeded round-robin from high-degree nodes.
+//! 3. **Uncoarsening + refinement** — project owners back up; at each level
+//!    run boundary refinement (positive-gain moves with balance guardrails,
+//!    a light Kernighan–Lin).
+//!
+//! Not a bit-for-bit METIS clone, but produces the properties the paper's
+//! pipeline depends on: low edge cut (≫ better than random/hash) and
+//! bounded imbalance, so per-part halos are realistic.
+
+use super::Partition;
+use crate::graph::Csr;
+use crate::util::rng::Pcg32;
+
+const COARSE_TARGET: usize = 30;
+const MAX_IMBALANCE: f64 = 1.1;
+
+/// Weighted graph used during coarsening.
+struct WGraph {
+    /// adjacency: (neighbor, edge weight)
+    adj: Vec<Vec<(u32, u32)>>,
+    node_weight: Vec<u32>,
+}
+
+impl WGraph {
+    fn from_csr(csr: &Csr) -> WGraph {
+        let n = csr.num_nodes();
+        let mut adj = Vec::with_capacity(n);
+        for v in 0..n as u32 {
+            adj.push(csr.neighbors(v).iter().map(|&u| (u, 1u32)).collect());
+        }
+        WGraph { adj, node_weight: vec![1; n] }
+    }
+
+    fn len(&self) -> usize {
+        self.adj.len()
+    }
+}
+
+/// One round of heavy-edge matching; returns (coarse graph, fine→coarse map).
+fn coarsen(g: &WGraph, rng: &mut Pcg32) -> (WGraph, Vec<u32>) {
+    let n = g.len();
+    let mut matched = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut coarse_count = 0u32;
+    for &v in &order {
+        if matched[v as usize] != u32::MAX {
+            continue;
+        }
+        // Heaviest unmatched neighbor.
+        let mut best: Option<(u32, u32)> = None;
+        for &(u, w) in &g.adj[v as usize] {
+            if u != v && matched[u as usize] == u32::MAX {
+                if best.map_or(true, |(_, bw)| w > bw) {
+                    best = Some((u, w));
+                }
+            }
+        }
+        let c = coarse_count;
+        coarse_count += 1;
+        matched[v as usize] = c;
+        if let Some((u, _)) = best {
+            matched[u as usize] = c;
+        }
+    }
+    // Build coarse adjacency with aggregated weights.
+    let cn = coarse_count as usize;
+    let mut node_weight = vec![0u32; cn];
+    for v in 0..n {
+        node_weight[matched[v] as usize] += g.node_weight[v];
+    }
+    let mut agg: Vec<std::collections::HashMap<u32, u32>> =
+        vec![std::collections::HashMap::new(); cn];
+    for v in 0..n {
+        let cv = matched[v];
+        for &(u, w) in &g.adj[v] {
+            let cu = matched[u as usize];
+            if cu != cv {
+                *agg[cv as usize].entry(cu).or_insert(0) += w;
+            }
+        }
+    }
+    let adj = agg
+        .into_iter()
+        .map(|m| {
+            let mut v: Vec<(u32, u32)> = m.into_iter().collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    (WGraph { adj, node_weight }, matched)
+}
+
+/// Greedy BFS region growing on the coarsest graph.
+fn initial_partition(g: &WGraph, k: usize, rng: &mut Pcg32) -> Vec<u16> {
+    let n = g.len();
+    let total_weight: u64 = g.node_weight.iter().map(|&w| w as u64).sum();
+    let target = (total_weight as f64 / k as f64).ceil() as u64;
+    let mut owner = vec![u16::MAX; n];
+    let mut part_weight = vec![0u64; k];
+
+    // Seeds: spread across high-degree nodes.
+    let mut by_degree: Vec<u32> = (0..n as u32).collect();
+    by_degree.sort_by_key(|&v| std::cmp::Reverse(g.adj[v as usize].len()));
+
+    let mut queues: Vec<std::collections::VecDeque<u32>> =
+        (0..k).map(|_| Default::default()).collect();
+    let mut seed_iter = by_degree.iter();
+    for p in 0..k {
+        if let Some(&s) = seed_iter.next() {
+            queues[p].push_back(s);
+        }
+    }
+    let mut remaining = n;
+    while remaining > 0 {
+        let mut progressed = false;
+        for p in 0..k {
+            if part_weight[p] >= target {
+                continue;
+            }
+            // Pop until an unassigned node appears.
+            while let Some(v) = queues[p].pop_front() {
+                if owner[v as usize] != u16::MAX {
+                    continue;
+                }
+                owner[v as usize] = p as u16;
+                part_weight[p] += g.node_weight[v as usize] as u64;
+                remaining -= 1;
+                progressed = true;
+                for &(u, _) in &g.adj[v as usize] {
+                    if owner[u as usize] == u16::MAX {
+                        queues[p].push_back(u);
+                    }
+                }
+                break;
+            }
+            if queues[p].is_empty() {
+                // Re-seed from any unassigned node.
+                if let Some(v) = (0..n as u32).find(|&v| owner[v as usize] == u16::MAX) {
+                    queues[p].push_back(v);
+                }
+            }
+        }
+        if !progressed {
+            // Assign stragglers to the lightest part.
+            for v in 0..n {
+                if owner[v] == u16::MAX {
+                    let p = (0..k).min_by_key(|&p| part_weight[p]).unwrap();
+                    owner[v] = p as u16;
+                    part_weight[p] += g.node_weight[v] as u64;
+                    remaining -= 1;
+                }
+            }
+        }
+        let _ = rng; // seeds only influence shuffle order upstream
+    }
+    owner
+}
+
+/// Boundary refinement: greedy positive-gain moves with balance guardrails.
+fn refine(g: &WGraph, owner: &mut [u16], k: usize, passes: usize) {
+    let n = g.len();
+    let mut part_weight = vec![0u64; k];
+    for v in 0..n {
+        part_weight[owner[v] as usize] += g.node_weight[v] as u64;
+    }
+    let total: u64 = part_weight.iter().sum();
+    let cap = ((total as f64 / k as f64) * MAX_IMBALANCE).ceil() as u64;
+
+    for _ in 0..passes {
+        let mut moved = 0usize;
+        for v in 0..n {
+            let home = owner[v] as usize;
+            // Connectivity to each part.
+            let mut conn = vec![0i64; k];
+            for &(u, w) in &g.adj[v] {
+                conn[owner[u as usize] as usize] += w as i64;
+            }
+            let mut best = home;
+            let mut best_gain = 0i64;
+            for p in 0..k {
+                if p == home {
+                    continue;
+                }
+                let gain = conn[p] - conn[home];
+                let fits = part_weight[p] + g.node_weight[v] as u64 <= cap;
+                let frees = part_weight[home] > g.node_weight[v] as u64;
+                if gain > best_gain && fits && frees {
+                    best = p;
+                    best_gain = gain;
+                }
+            }
+            if best != home {
+                owner[v] = best as u16;
+                part_weight[home] -= g.node_weight[v] as u64;
+                part_weight[best] += g.node_weight[v] as u64;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+/// Multilevel k-way partition.
+pub fn partition(csr: &Csr, k: usize, seed: u64) -> Partition {
+    let n = csr.num_nodes();
+    if n == 0 {
+        return Partition::from_owner(csr, k, vec![]);
+    }
+    let mut rng = Pcg32::new(seed ^ 0x4D45_5449_53); // "METIS"
+    // Coarsen.
+    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new();
+    let mut cur = WGraph::from_csr(csr);
+    while cur.len() > COARSE_TARGET * k && levels.len() < 24 {
+        let (coarse, map) = coarsen(&cur, &mut rng);
+        if coarse.len() as f64 > cur.len() as f64 * 0.95 {
+            // Matching stalled (e.g. star graphs) — stop coarsening.
+            levels.push((std::mem::replace(&mut cur, coarse), map));
+            break;
+        }
+        levels.push((std::mem::replace(&mut cur, coarse), map));
+    }
+    // Initial partition on the coarsest graph.
+    let mut owner = initial_partition(&cur, k, &mut rng);
+    refine(&cur, &mut owner, k, 10);
+    // Uncoarsen with refinement at each level.
+    for (fine, map) in levels.iter().rev() {
+        let mut fine_owner = vec![0u16; fine.len()];
+        for v in 0..fine.len() {
+            fine_owner[v] = owner[map[v] as usize];
+        }
+        owner = fine_owner;
+        refine(fine, &mut owner, k, 5);
+    }
+    Partition::from_owner(csr, k, owner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{generate, RmatParams};
+    use crate::partition::{partition as part_by, Method};
+
+    fn g(n: usize, m: usize, seed: u64) -> Csr {
+        generate(
+            &RmatParams { a: 0.57, b: 0.19, c: 0.19, num_nodes: n, num_edges: m, permute: true },
+            &mut Pcg32::new(seed),
+        )
+    }
+
+    #[test]
+    fn produces_valid_partition() {
+        let csr = g(2000, 12000, 1);
+        let part = partition(&csr, 4, 42);
+        assert_eq!(part.num_parts, 4);
+        let total: usize = part.local_nodes.iter().map(Vec::len).sum();
+        assert_eq!(total, csr.num_nodes());
+        assert!(part.local_nodes.iter().all(|l| !l.is_empty()));
+    }
+
+    #[test]
+    fn beats_random_on_edge_cut() {
+        let csr = g(3000, 20000, 2);
+        let metis = partition(&csr, 8, 1);
+        let random = part_by(&csr, 8, Method::Random, 1);
+        let mc = metis.edge_cut(&csr);
+        let rc = random.edge_cut(&csr);
+        assert!(
+            (mc as f64) < 0.85 * rc as f64,
+            "metis-like cut {mc} not clearly better than random {rc}"
+        );
+    }
+
+    #[test]
+    fn respects_balance() {
+        let csr = g(2500, 15000, 3);
+        for k in [2, 4, 8] {
+            let part = partition(&csr, k, 5);
+            assert!(part.imbalance() < 1.4, "k={k} imbalance {}", part.imbalance());
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let csr = g(800, 5000, 4);
+        let a = partition(&csr, 4, 9);
+        let b = partition(&csr, 4, 9);
+        assert_eq!(a.owner, b.owner);
+    }
+
+    #[test]
+    fn handles_tiny_graphs() {
+        let csr = g(70, 200, 5);
+        let part = partition(&csr, 4, 1);
+        let total: usize = part.local_nodes.iter().map(Vec::len).sum();
+        assert_eq!(total, csr.num_nodes());
+    }
+}

@@ -1,0 +1,227 @@
+//! Graph partitioning substrate (the paper partitions with METIS).
+//!
+//! Two partitioners:
+//! * [`metis_like`] — multilevel: heavy-edge-matching coarsening, greedy
+//!   BFS-grow initial partitioning, boundary Kernighan–Lin-style refinement.
+//! * [`streaming`] — Linear Deterministic Greedy (LDG), one pass, used as a
+//!   fast baseline and in partitioner ablations.
+//!
+//! The output [`Partition`] carries everything the distributed runtime
+//! needs: per-node owner, each part's local nodes, and the *halo* — the set
+//! of remote nodes adjacent to a part, which is the persistent buffer's
+//! universe (buffer capacity = pct × halo size, paper §5.1).
+
+pub mod metis_like;
+pub mod stats;
+pub mod streaming;
+
+use crate::graph::Csr;
+
+/// A k-way node partition of a graph.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub num_parts: usize,
+    /// `owner[v]` = part id of node v.
+    pub owner: Vec<u16>,
+    /// Nodes owned by each part (sorted).
+    pub local_nodes: Vec<Vec<u32>>,
+    /// For each part: sorted remote nodes adjacent to its local nodes.
+    pub halo: Vec<Vec<u32>>,
+}
+
+impl Partition {
+    /// Assemble from an owner vector (computes locals + halos).
+    pub fn from_owner(csr: &Csr, num_parts: usize, owner: Vec<u16>) -> Partition {
+        assert_eq!(owner.len(), csr.num_nodes());
+        let mut local_nodes = vec![Vec::new(); num_parts];
+        for (v, &p) in owner.iter().enumerate() {
+            assert!((p as usize) < num_parts, "owner out of range");
+            local_nodes[p as usize].push(v as u32);
+        }
+        let mut halo = vec![Vec::new(); num_parts];
+        for (p, locals) in local_nodes.iter().enumerate() {
+            let h = &mut halo[p];
+            for &v in locals {
+                for &u in csr.neighbors(v) {
+                    if owner[u as usize] as usize != p {
+                        h.push(u);
+                    }
+                }
+            }
+            h.sort_unstable();
+            h.dedup();
+        }
+        Partition { num_parts, owner, local_nodes, halo }
+    }
+
+    #[inline]
+    pub fn owner_of(&self, v: u32) -> usize {
+        self.owner[v as usize] as usize
+    }
+
+    #[inline]
+    pub fn is_local(&self, part: usize, v: u32) -> bool {
+        self.owner_of(v) == part
+    }
+
+    /// The k-hop halo of part `p`: remote nodes reachable within `k` hops
+    /// of its local nodes.  With 2-hop sampling (fanout {10, 25}) the
+    /// persistent buffer's universe is `halo_k(csr, p, 2)` — every node the
+    /// sampler can ever fetch remotely (paper §5.1 sizes buffers as a
+    /// percentage of this set).
+    pub fn halo_k(&self, csr: &Csr, p: usize, k: usize) -> Vec<u32> {
+        let mut frontier: Vec<u32> = self.local_nodes[p].clone();
+        let mut seen: std::collections::HashSet<u32> = frontier.iter().copied().collect();
+        let mut remote: Vec<u32> = Vec::new();
+        for _ in 0..k {
+            let mut next = Vec::new();
+            for &v in &frontier {
+                for &u in csr.neighbors(v) {
+                    if seen.insert(u) {
+                        next.push(u);
+                        if self.owner_of(u) != p {
+                            remote.push(u);
+                        }
+                    }
+                }
+            }
+            frontier = next;
+        }
+        remote.sort_unstable();
+        remote
+    }
+
+    /// Edge cut: number of (undirected) edges crossing parts.
+    pub fn edge_cut(&self, csr: &Csr) -> u64 {
+        let mut cut = 0u64;
+        for v in 0..csr.num_nodes() as u32 {
+            for &u in csr.neighbors(v) {
+                if v < u && self.owner[v as usize] != self.owner[u as usize] {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+
+    /// Load imbalance: max part size / ideal part size.
+    pub fn imbalance(&self) -> f64 {
+        let n: usize = self.local_nodes.iter().map(Vec::len).sum();
+        if n == 0 {
+            return 1.0;
+        }
+        let ideal = n as f64 / self.num_parts as f64;
+        let max = self.local_nodes.iter().map(Vec::len).max().unwrap_or(0) as f64;
+        max / ideal
+    }
+
+    /// Split a part's train nodes: which training seeds live in part `p`.
+    pub fn train_nodes_of(&self, p: usize, train_nodes: &[u32]) -> Vec<u32> {
+        train_nodes
+            .iter()
+            .copied()
+            .filter(|&v| self.owner_of(v) == p)
+            .collect()
+    }
+}
+
+/// Partitioning method selector (config-driven).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    MetisLike,
+    Ldg,
+    /// Hash partition — worst-case locality, used in ablations.
+    Random,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        match s {
+            "metis" | "metis_like" => Ok(Method::MetisLike),
+            "ldg" | "streaming" => Ok(Method::Ldg),
+            "random" | "hash" => Ok(Method::Random),
+            _ => anyhow::bail!("unknown partition method '{s}'"),
+        }
+    }
+}
+
+/// Partition `csr` into `num_parts` with the given method.
+pub fn partition(csr: &Csr, num_parts: usize, method: Method, seed: u64) -> Partition {
+    assert!(num_parts >= 1);
+    if num_parts == 1 {
+        return Partition::from_owner(csr, 1, vec![0; csr.num_nodes()]);
+    }
+    match method {
+        Method::MetisLike => metis_like::partition(csr, num_parts, seed),
+        Method::Ldg => streaming::partition_ldg(csr, num_parts, seed),
+        Method::Random => {
+            let owner: Vec<u16> = (0..csr.num_nodes() as u32)
+                .map(|v| {
+                    (crate::util::rng::derive_seed(seed, &[v as u64]) % num_parts as u64)
+                        as u16
+                })
+                .collect();
+            Partition::from_owner(csr, num_parts, owner)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{generate, RmatParams};
+    use crate::util::rng::Pcg32;
+
+    fn g(n: usize, m: usize) -> Csr {
+        generate(
+            &RmatParams { a: 0.57, b: 0.19, c: 0.19, num_nodes: n, num_edges: m, permute: true },
+            &mut Pcg32::new(3),
+        )
+    }
+
+    #[test]
+    fn from_owner_invariants() {
+        let csr = g(500, 3000);
+        let part = partition(&csr, 4, Method::Random, 1);
+        // Every node in exactly one part.
+        let total: usize = part.local_nodes.iter().map(Vec::len).sum();
+        assert_eq!(total, csr.num_nodes());
+        // Halo nodes are remote and adjacent.
+        for (p, h) in part.halo.iter().enumerate() {
+            for &v in h {
+                assert_ne!(part.owner_of(v), p);
+            }
+            assert!(h.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn single_part_has_empty_halo() {
+        let csr = g(200, 1000);
+        let part = partition(&csr, 1, Method::MetisLike, 0);
+        assert_eq!(part.halo[0], Vec::<u32>::new());
+        assert_eq!(part.edge_cut(&csr), 0);
+    }
+
+    #[test]
+    fn methods_parse() {
+        assert_eq!(Method::parse("metis").unwrap(), Method::MetisLike);
+        assert_eq!(Method::parse("ldg").unwrap(), Method::Ldg);
+        assert_eq!(Method::parse("random").unwrap(), Method::Random);
+        assert!(Method::parse("zzz").is_err());
+    }
+
+    #[test]
+    fn train_nodes_split() {
+        let csr = g(300, 2000);
+        let part = partition(&csr, 3, Method::Random, 7);
+        let train: Vec<u32> = (0..100).collect();
+        let mut count = 0;
+        for p in 0..3 {
+            let tn = part.train_nodes_of(p, &train);
+            assert!(tn.iter().all(|&v| part.owner_of(v) == p));
+            count += tn.len();
+        }
+        assert_eq!(count, 100);
+    }
+}

@@ -1,0 +1,96 @@
+//! Partition quality metrics used by `rudder partition-stats` and the
+//! partitioner ablation bench.
+
+use super::Partition;
+use crate::graph::Csr;
+
+#[derive(Debug, Clone)]
+pub struct PartitionStats {
+    pub num_parts: usize,
+    pub edge_cut: u64,
+    pub cut_fraction: f64,
+    pub imbalance: f64,
+    pub min_part: usize,
+    pub max_part: usize,
+    /// Mean halo size across parts (the persistent-buffer universe).
+    pub mean_halo: f64,
+    pub max_halo: usize,
+    /// Mean fraction of a part's sampled frontier expected to be remote —
+    /// approximated by halo / (halo + local).
+    pub mean_remote_ratio: f64,
+}
+
+pub fn compute(csr: &Csr, part: &Partition) -> PartitionStats {
+    let edge_cut = part.edge_cut(csr);
+    let total_edges = (csr.num_arcs() / 2).max(1) as f64;
+    let halos: Vec<usize> = part.halo.iter().map(Vec::len).collect();
+    let sizes: Vec<usize> = part.local_nodes.iter().map(Vec::len).collect();
+    let remote_ratios: Vec<f64> = (0..part.num_parts)
+        .map(|p| {
+            let h = halos[p] as f64;
+            let l = sizes[p] as f64;
+            if h + l == 0.0 {
+                0.0
+            } else {
+                h / (h + l)
+            }
+        })
+        .collect();
+    PartitionStats {
+        num_parts: part.num_parts,
+        edge_cut,
+        cut_fraction: edge_cut as f64 / total_edges,
+        imbalance: part.imbalance(),
+        min_part: sizes.iter().copied().min().unwrap_or(0),
+        max_part: sizes.iter().copied().max().unwrap_or(0),
+        mean_halo: crate::util::stats::mean(
+            &halos.iter().map(|&h| h as f64).collect::<Vec<_>>(),
+        ),
+        max_halo: halos.iter().copied().max().unwrap_or(0),
+        mean_remote_ratio: crate::util::stats::mean(&remote_ratios),
+    }
+}
+
+impl std::fmt::Display for PartitionStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "parts={} cut={} ({:.1}%) imbalance={:.3} sizes=[{}..{}] halo(mean={:.0}, max={}) remote_ratio={:.2}",
+            self.num_parts,
+            self.edge_cut,
+            self.cut_fraction * 100.0,
+            self.imbalance,
+            self.min_part,
+            self.max_part,
+            self.mean_halo,
+            self.max_halo,
+            self.mean_remote_ratio
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{generate, RmatParams};
+    use crate::partition::{partition, Method};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn stats_consistent() {
+        let csr = generate(
+            &RmatParams {
+                a: 0.57, b: 0.19, c: 0.19, num_nodes: 1000, num_edges: 6000, permute: true,
+            },
+            &mut Pcg32::new(5),
+        );
+        let part = partition(&csr, 4, Method::MetisLike, 1);
+        let s = compute(&csr, &part);
+        assert_eq!(s.num_parts, 4);
+        assert!(s.cut_fraction >= 0.0 && s.cut_fraction <= 1.0);
+        assert!(s.imbalance >= 1.0);
+        assert!(s.min_part <= s.max_part);
+        assert!(s.mean_remote_ratio > 0.0 && s.mean_remote_ratio < 1.0);
+        let _ = format!("{s}");
+    }
+}

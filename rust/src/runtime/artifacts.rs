@@ -1,0 +1,230 @@
+//! AOT artifact manifest: the ABI between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.json` records, for every lowered HLO module, the
+//! positional input tensor specs (name/shape/dtype) and output names.  The
+//! engine validates every execute call against these specs — shape bugs
+//! surface as errors at the call site instead of garbage numerics.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            _ => anyhow::bail!("unsupported dtype '{s}'"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// Shapes baked into the artifacts (aot.py `DEFAULTS`, possibly overridden).
+#[derive(Debug, Clone)]
+pub struct ArtifactConfig {
+    pub batch: usize,
+    pub fanout1: usize,
+    pub fanout2: usize,
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub mlp_feats: usize,
+    pub mlp_hidden: usize,
+    pub mlp_batch: usize,
+    pub score_block: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ArtifactConfig,
+    pub entries: Vec<EntrySpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&src)?;
+        let cfg = root
+            .get("config")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'config'"))?;
+        let get = |k: &str| -> anyhow::Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest config missing '{k}'"))
+        };
+        let config = ArtifactConfig {
+            batch: get("batch")?,
+            fanout1: get("fanout1")?,
+            fanout2: get("fanout2")?,
+            feat_dim: get("feat_dim")?,
+            hidden: get("hidden")?,
+            classes: get("classes")?,
+            mlp_feats: get("mlp_feats")?,
+            mlp_hidden: get("mlp_hidden")?,
+            mlp_batch: get("mlp_batch")?,
+            score_block: get("score_block")?,
+        };
+        let mut entries = Vec::new();
+        let entry_map = root
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'entries'"))?;
+        for (name, e) in entry_map {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("entry '{name}' missing file"))?;
+            let mut inputs = Vec::new();
+            for inp in e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("entry '{name}' missing inputs"))?
+            {
+                let iname = inp.get("name").and_then(Json::as_str).unwrap_or("?");
+                let dtype = Dtype::parse(
+                    inp.get("dtype").and_then(Json::as_str).unwrap_or("float32"),
+                )?;
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                inputs.push(TensorSpec { name: iname.to_string(), shape, dtype });
+            }
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default();
+            entries.push(EntrySpec {
+                name: name.clone(),
+                file: dir.join(file),
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), config, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntrySpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Default artifact directory: `$RUDDER_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RUDDER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rudder-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    const SAMPLE: &str = r#"{
+      "config": {"batch": 4, "fanout1": 2, "fanout2": 3, "feat_dim": 5,
+                 "hidden": 6, "classes": 3, "mlp_feats": 4, "mlp_hidden": 5,
+                 "mlp_batch": 8, "score_block": 16},
+      "entries": {
+        "score_update": {
+          "file": "score_update.hlo.txt",
+          "inputs": [
+            {"name": "scores", "shape": [16], "dtype": "float32"},
+            {"name": "accessed", "shape": [16], "dtype": "float32"}
+          ],
+          "outputs": ["new_scores", "stale_mask"]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn loads_manifest() {
+        let dir = tmpdir("ok");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.batch, 4);
+        assert_eq!(m.config.score_block, 16);
+        let e = m.entry("score_update").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![16]);
+        assert_eq!(e.inputs[0].dtype, Dtype::F32);
+        assert_eq!(e.inputs[0].num_elements(), 16);
+        assert_eq!(e.outputs, vec!["new_scores", "stale_mask"]);
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let dir = tmpdir("baddtype");
+        write_manifest(
+            &dir,
+            &SAMPLE.replace("\"float32\"", "\"float64\""),
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("int32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("bfloat16").is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts and runs them.
+//!
+//! The pattern (from /opt/xla-example/load_hlo):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! One engine owns the client plus a compiled-executable cache keyed by
+//! entry name; compilation happens once at load (or lazily on first call),
+//! and the request path is pure execute — Python never runs at runtime.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::{EntrySpec, Manifest};
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    /// Lazily compiled executables (interior mutability: callers hold &self
+    /// from multiple sim components).
+    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    /// Cumulative execute() wall time per entry (perf accounting).
+    timings: Mutex<HashMap<String, (u64, f64)>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Engine({} entries)", self.manifest.entries.len())
+    }
+}
+
+impl Engine {
+    /// Load the manifest and create the PJRT CPU client.  Executables are
+    /// compiled lazily on first use (keeps startup fast for sims that only
+    /// touch one entry).
+    pub fn load(dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Engine {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            timings: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load if artifacts exist; `None` otherwise (analytic fallback mode).
+    pub fn try_load_default() -> Option<Engine> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            match Engine::load(&dir) {
+                Ok(e) => Some(e),
+                Err(err) => {
+                    eprintln!("warning: artifacts present but unloadable: {err}");
+                    None
+                }
+            }
+        } else {
+            None
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_entry(&self, entry: &EntrySpec) -> anyhow::Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)?;
+        let comp = XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Ensure `name` is compiled (warm-up; also used by `rudder calibrate`).
+    pub fn warm(&self, name: &str) -> anyhow::Result<()> {
+        let entry = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact entry '{name}'"))?;
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(name) {
+            let exe = self.compile_entry(entry)?;
+            cache.insert(name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with positional inputs; returns the output tuple as
+    /// individual literals (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        let entry = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact entry '{name}'"))?;
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "entry '{name}': {} inputs given, ABI wants {}",
+            inputs.len(),
+            entry.inputs.len()
+        );
+        self.warm(name)?;
+        let start = std::time::Instant::now();
+        let result = {
+            let cache = self.cache.lock().unwrap();
+            let exe = cache.get(name).unwrap();
+            let mut bufs = exe.execute::<Literal>(inputs)?;
+            bufs.pop()
+                .and_then(|mut row| if row.is_empty() { None } else { Some(row.remove(0)) })
+                .ok_or_else(|| anyhow::anyhow!("entry '{name}': empty result"))?
+                .to_literal_sync()?
+        };
+        let dt = start.elapsed().as_secs_f64();
+        {
+            let mut t = self.timings.lock().unwrap();
+            let e = t.entry(name.to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += dt;
+        }
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == entry.outputs.len(),
+            "entry '{name}': {} outputs, ABI wants {}",
+            parts.len(),
+            entry.outputs.len()
+        );
+        Ok(parts)
+    }
+
+    /// (calls, total seconds) per entry since load.
+    pub fn timing(&self, name: &str) -> (u64, f64) {
+        self.timings
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or((0, 0.0))
+    }
+
+    /// Mean execute latency for an entry, if it ever ran.
+    pub fn mean_latency(&self, name: &str) -> Option<f64> {
+        let (n, total) = self.timing(name);
+        if n == 0 {
+            None
+        } else {
+            Some(total / n as f64)
+        }
+    }
+}
+
+// PJRT CPU client usage here is externally synchronized via the Mutex-held
+// executable cache; literals are host buffers.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}

@@ -1,0 +1,124 @@
+//! Literal packing helpers: Rust buffers ⇄ XLA literals.
+//!
+//! All artifact tensors are f32 or i32 (see `aot.py`); these helpers pack
+//! flat slices into shaped literals (with optional zero-padding up to the
+//! artifact's canonical shape) and unpack results.
+
+use xla::{ElementType, Literal};
+
+use super::artifacts::{Dtype, TensorSpec};
+
+/// Pack an f32 slice into a literal of `shape` (row-major).
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> anyhow::Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(
+        data.len() == n,
+        "lit_f32: {} elements for shape {shape:?} (want {n})",
+        data.len()
+    );
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Pack an i32 slice into a literal of `shape`.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> anyhow::Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(
+        data.len() == n,
+        "lit_i32: {} elements for shape {shape:?} (want {n})",
+        data.len()
+    );
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Scalar f32 literal (shape `()`).
+pub fn lit_scalar_f32(v: f32) -> anyhow::Result<Literal> {
+    lit_f32(&[], std::slice::from_ref(&v))
+}
+
+/// Pack `data` into `spec`'s shape, zero-padding the leading axis if `data`
+/// covers only the first `rows` rows (short minibatches).
+pub fn lit_padded_f32(spec: &TensorSpec, data: &[f32]) -> anyhow::Result<Literal> {
+    anyhow::ensure!(spec.dtype == Dtype::F32, "{}: expected f32", spec.name);
+    let n = spec.num_elements();
+    anyhow::ensure!(
+        data.len() <= n,
+        "{}: {} elements exceed shape {:?}",
+        spec.name,
+        data.len(),
+        spec.shape
+    );
+    if data.len() == n {
+        return lit_f32(&spec.shape, data);
+    }
+    let mut padded = vec![0.0f32; n];
+    padded[..data.len()].copy_from_slice(data);
+    lit_f32(&spec.shape, &padded)
+}
+
+/// Unpack a literal to `Vec<f32>`.
+pub fn to_f32(lit: &Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        let lit = lit_f32(&[3, 4], &data).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data: Vec<i32> = vec![-1, 0, 7, 42];
+        let lit = lit_i32(&[4], &data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalar() {
+        let lit = lit_scalar_f32(2.5).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0; 3]).is_err());
+        assert!(lit_i32(&[5], &[1; 4]).is_err());
+    }
+
+    #[test]
+    fn padded_fills_zeros() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![4, 2],
+            dtype: Dtype::F32,
+        };
+        let lit = lit_padded_f32(&spec, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let v = to_f32(&lit).unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn padded_rejects_overflow() {
+        let spec = TensorSpec { name: "x".into(), shape: vec![2], dtype: Dtype::F32 };
+        assert!(lit_padded_f32(&spec, &[0.0; 3]).is_err());
+    }
+}

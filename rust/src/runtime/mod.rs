@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper over the AOT artifacts.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`, per /opt/xla-example/load_hlo.  HLO *text*
+//! is the interchange format (DESIGN.md §3).
+
+pub mod artifacts;
+pub mod engine;
+pub mod literal;
+
+pub use artifacts::{ArtifactConfig, Dtype, EntrySpec, Manifest, TensorSpec};
+pub use engine::Engine;

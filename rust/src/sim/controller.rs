@@ -1,0 +1,279 @@
+//! Replacement controllers: the *when*-to-replace policies under test.
+//!
+//! * [`Controller::NoPrefetch`] — baseline DistDGL (variant 1, §5): no
+//!   buffer, every remote node fetched every minibatch.
+//! * [`Controller::Fixed`] — DistDGL+fixed (variant 2): replacement at
+//!   every minibatch, overlapped.
+//! * [`Controller::Agent`] — Rudder with an LLM agent (§4.3).
+//! * [`Controller::Classifier`] — Rudder with an ML classifier (§4.4),
+//!   optional online finetuning.
+//! * [`Controller::MassiveGnn`] — the MassiveGNN comparator (§5.1):
+//!   degree-prepopulated buffer + fixed replacement interval.
+//! * [`Controller::Random`] — coin-flip controller used by trace-only mode
+//!   to diversify offline training labels.
+
+use crate::agent::backend::{LlmBackend, SimulatedLlm};
+use crate::agent::decision::DecisionMaker;
+use crate::agent::profiles::{self, LlmProfile};
+use crate::agent::{Action, AgentStep, Observation};
+use crate::classifier::finetune::OnlineFinetuner;
+use crate::classifier::{features, DecisionModel, Kind};
+use crate::util::rng::Pcg32;
+
+pub enum Controller {
+    NoPrefetch,
+    Fixed,
+    Agent(DecisionMaker),
+    Classifier {
+        model: Box<dyn DecisionModel>,
+        finetuner: Option<OnlineFinetuner>,
+    },
+    MassiveGnn {
+        interval: u64,
+    },
+    /// Cold-start fixed-interval replacement (Fig 3 cadence ablation) —
+    /// MassiveGNN's cadence without its warm start.
+    Interval {
+        interval: u64,
+    },
+    Random {
+        p: f64,
+        rng: Pcg32,
+    },
+}
+
+/// Controller selection, config-parsable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControllerSpec {
+    NoPrefetch,
+    Fixed,
+    Llm { model: String, cot: bool },
+    Classifier { kind: Kind, finetune_interval: Option<usize> },
+    MassiveGnn { interval: u64 },
+    Interval { interval: u64 },
+    Random { p: f64 },
+}
+
+impl ControllerSpec {
+    /// Parse e.g. "none", "fixed", "llm:gemma3-4b", "clf:mlp",
+    /// "clf:mlp:finetune=25", "massivegnn:32", "random:0.5".
+    pub fn parse(s: &str) -> anyhow::Result<ControllerSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "none" | "distdgl" => Ok(ControllerSpec::NoPrefetch),
+            "fixed" => Ok(ControllerSpec::Fixed),
+            "llm" => {
+                let model = parts.get(1).copied().unwrap_or("gemma3-4b").to_string();
+                anyhow::ensure!(
+                    profiles::by_name(&model).is_some(),
+                    "unknown LLM '{model}' (try: {})",
+                    profiles::names()
+                );
+                let cot = parts.contains(&"cot");
+                Ok(ControllerSpec::Llm { model, cot })
+            }
+            "clf" | "classifier" => {
+                let kind = Kind::parse(parts.get(1).copied().unwrap_or("mlp"))?;
+                let finetune_interval = parts.iter().find_map(|p| {
+                    p.strip_prefix("finetune=").and_then(|v| v.parse().ok())
+                });
+                Ok(ControllerSpec::Classifier { kind, finetune_interval })
+            }
+            "massivegnn" => {
+                let interval = parts.get(1).and_then(|v| v.parse().ok()).unwrap_or(32);
+                Ok(ControllerSpec::MassiveGnn { interval })
+            }
+            "interval" => {
+                let interval = parts.get(1).and_then(|v| v.parse().ok()).unwrap_or(32);
+                Ok(ControllerSpec::Interval { interval })
+            }
+            "random" => {
+                let p = parts.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.5);
+                Ok(ControllerSpec::Random { p })
+            }
+            other => anyhow::bail!("unknown controller '{other}'"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ControllerSpec::NoPrefetch => "DistDGL".into(),
+            ControllerSpec::Fixed => "DistDGL+fixed".into(),
+            ControllerSpec::Llm { model, .. } => format!("Rudder/{model}"),
+            ControllerSpec::Classifier { kind, finetune_interval } => match finetune_interval {
+                Some(i) => format!("Rudder/{}+F{i}", kind.name()),
+                None => format!("Rudder/{}", kind.name()),
+            },
+            ControllerSpec::MassiveGnn { interval } => format!("MassiveGNN(r={interval})"),
+            ControllerSpec::Interval { interval } => format!("Interval(r={interval})"),
+            ControllerSpec::Random { p } => format!("Random(p={p})"),
+        }
+    }
+
+    /// Does this spec use a persistent buffer at all?
+    pub fn uses_buffer(&self) -> bool {
+        !matches!(self, ControllerSpec::NoPrefetch)
+    }
+
+    /// Should the buffer be degree-prepopulated (MassiveGNN warm start)?
+    pub fn prepopulates(&self) -> bool {
+        matches!(self, ControllerSpec::MassiveGnn { .. })
+    }
+
+    /// Instantiate.  `pretrained` supplies the classifier model (offline
+    /// training product); untrained classifiers fall back to a fresh model.
+    pub fn build(
+        &self,
+        seed: u64,
+        pretrained: Option<Box<dyn DecisionModel>>,
+    ) -> Controller {
+        match self {
+            ControllerSpec::NoPrefetch => Controller::NoPrefetch,
+            ControllerSpec::Fixed => Controller::Fixed,
+            ControllerSpec::Llm { model, cot } => {
+                let profile: &LlmProfile = profiles::by_name(model).expect("validated");
+                let backend: Box<dyn LlmBackend> =
+                    Box::new(SimulatedLlm::new(profile, seed, *cot));
+                Controller::Agent(DecisionMaker::new(backend))
+            }
+            ControllerSpec::Classifier { kind, finetune_interval } => Controller::Classifier {
+                model: pretrained.unwrap_or_else(|| kind.build(seed)),
+                finetuner: finetune_interval.map(|i| OnlineFinetuner::new(i)),
+            },
+            ControllerSpec::MassiveGnn { interval } => {
+                Controller::MassiveGnn { interval: *interval }
+            }
+            ControllerSpec::Interval { interval } => {
+                Controller::Interval { interval: *interval }
+            }
+            ControllerSpec::Random { p } => {
+                Controller::Random { p: *p, rng: Pcg32::new(seed) }
+            }
+        }
+    }
+}
+
+impl Controller {
+    /// Configure outcome-evaluation lag (async: 1, sync: 0) — see
+    /// [`crate::agent::context::ContextBuilder::eval_lag`].
+    pub fn set_eval_lag(&mut self, lag: usize) {
+        if let Controller::Agent(dm) = self {
+            dm.context.eval_lag = lag;
+        }
+    }
+
+    /// Is this controller decision-driven (needs the async request/response
+    /// queue machinery), as opposed to unconditional policies?
+    pub fn is_inference_driven(&self) -> bool {
+        matches!(self, Controller::Agent(_) | Controller::Classifier { .. })
+    }
+
+    /// One inference-driven decision.  Only meaningful for agent /
+    /// classifier controllers; others decide structurally in the trainer.
+    pub fn decide(&mut self, minibatch: u64, obs: &Observation) -> AgentStep {
+        match self {
+            Controller::Agent(dm) => dm.decide(minibatch, obs),
+            Controller::Classifier { model, .. } => {
+                let x = features::extract(obs);
+                let p = model.predict(&x);
+                AgentStep {
+                    action: if p > 0.5 { Action::Replace } else { Action::Skip },
+                    prediction: None, // classifiers are stateless: no expectation
+                    latency: model.latency(),
+                    valid_response: true,
+                    raw_response: format!("{{\"p_replace\": {p:.4}}}"),
+                }
+            }
+            Controller::Random { p, rng } => {
+                let replace = rng.chance(*p);
+                AgentStep {
+                    action: if replace { Action::Replace } else { Action::Skip },
+                    prediction: None,
+                    latency: 1e-4,
+                    valid_response: true,
+                    raw_response: String::new(),
+                }
+            }
+            _ => AgentStep {
+                action: Action::Skip,
+                prediction: None,
+                latency: 0.0,
+                valid_response: true,
+                raw_response: String::new(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_all_forms() {
+        assert_eq!(ControllerSpec::parse("none").unwrap(), ControllerSpec::NoPrefetch);
+        assert_eq!(ControllerSpec::parse("fixed").unwrap(), ControllerSpec::Fixed);
+        assert_eq!(
+            ControllerSpec::parse("llm:gemma3-4b").unwrap(),
+            ControllerSpec::Llm { model: "gemma3-4b".into(), cot: false }
+        );
+        assert_eq!(
+            ControllerSpec::parse("llm:llama3.2-3b:cot").unwrap(),
+            ControllerSpec::Llm { model: "llama3.2-3b".into(), cot: true }
+        );
+        assert_eq!(
+            ControllerSpec::parse("clf:rf").unwrap(),
+            ControllerSpec::Classifier { kind: Kind::RandomForest, finetune_interval: None }
+        );
+        assert_eq!(
+            ControllerSpec::parse("clf:mlp:finetune=25").unwrap(),
+            ControllerSpec::Classifier { kind: Kind::Mlp, finetune_interval: Some(25) }
+        );
+        assert_eq!(
+            ControllerSpec::parse("massivegnn:16").unwrap(),
+            ControllerSpec::MassiveGnn { interval: 16 }
+        );
+        assert!(ControllerSpec::parse("llm:gpt5").is_err());
+        assert!(ControllerSpec::parse("banana").is_err());
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        assert_eq!(ControllerSpec::parse("none").unwrap().label(), "DistDGL");
+        assert_eq!(
+            ControllerSpec::parse("clf:mlp:finetune=5").unwrap().label(),
+            "Rudder/MLP+F5"
+        );
+        assert!(ControllerSpec::parse("llm:gemma3-4b").unwrap().label().contains("gemma3-4b"));
+    }
+
+    #[test]
+    fn classifier_controller_decides() {
+        let spec = ControllerSpec::parse("clf:lr").unwrap();
+        let mut c = spec.build(1, None);
+        assert!(c.is_inference_driven());
+        let step = c.decide(0, &Observation::default());
+        assert!(step.valid_response);
+        assert!(step.latency > 0.0);
+    }
+
+    #[test]
+    fn random_controller_mixes_actions() {
+        let mut c = ControllerSpec::parse("random:0.5").unwrap().build(3, None);
+        let mut replaces = 0;
+        for i in 0..100 {
+            if c.decide(i, &Observation::default()).action == Action::Replace {
+                replaces += 1;
+            }
+        }
+        assert!((20..=80).contains(&replaces), "{replaces}");
+    }
+
+    #[test]
+    fn buffer_usage_flags() {
+        assert!(!ControllerSpec::NoPrefetch.uses_buffer());
+        assert!(ControllerSpec::Fixed.uses_buffer());
+        assert!(ControllerSpec::parse("massivegnn").unwrap().prepopulates());
+        assert!(!ControllerSpec::Fixed.prepopulates());
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event simulation of the distributed training cluster.
+//!
+//! Virtual per-trainer clocks advance by the §4.5.3 overlap arithmetic;
+//! the DDP allreduce is a per-minibatch barrier; the inference daemon is a
+//! single-slot pipeline whose responses materialize after the model's
+//! latency ([`queues`]).  Deterministic: same config + seed ⇒ identical
+//! results.
+
+pub mod controller;
+pub mod queues;
+pub mod run;
+pub mod trainer;
+
+pub use controller::{Controller, ControllerSpec};
+pub use run::{build_cluster, run_experiment, run_on, trace_only, ExperimentResult, RunConfig};
+pub use trainer::Mode;

@@ -1,0 +1,108 @@
+//! The shared request/response queue discipline of §4.5.1, in virtual time.
+//!
+//! The inference daemon is modelled as a single-slot pipeline: a submitted
+//! request becomes a response at `ready_at = now + T_A/C`.  The prefetcher
+//! polls non-blocking (Algorithm 1 line 12); while a request is in flight,
+//! newer metrics are dropped (the "stale request" clearing of line 15) —
+//! which is what makes the replacement interval `r` emerge from relative
+//! latencies instead of being a tuned constant.
+
+use crate::agent::AgentStep;
+
+#[derive(Debug, Clone)]
+pub struct Pending {
+    pub issued_mb: u64,
+    pub issued_at: f64,
+    pub ready_at: f64,
+    pub step: AgentStep,
+}
+
+#[derive(Debug, Default)]
+pub struct InferencePipe {
+    pending: Option<Pending>,
+}
+
+impl InferencePipe {
+    pub fn new() -> InferencePipe {
+        InferencePipe { pending: None }
+    }
+
+    /// Is the daemon busy (a request in flight)?
+    pub fn busy(&self) -> bool {
+        self.pending.is_some()
+    }
+
+    /// Non-blocking poll: take the response if it is ready by `now`.
+    pub fn poll(&mut self, now: f64) -> Option<Pending> {
+        if self.pending.as_ref().map_or(false, |p| p.ready_at <= now) {
+            self.pending.take()
+        } else {
+            None
+        }
+    }
+
+    /// Submit a new request (the daemon was notified with fresh metrics).
+    /// Panics if one is already in flight — callers must poll first.
+    pub fn submit(&mut self, p: Pending) {
+        assert!(self.pending.is_none(), "inference pipe already busy");
+        self.pending = Some(p);
+    }
+
+    /// Sync mode: how long the trainer must stall from `now` until the
+    /// in-flight response is ready (0 if idle or already ready).
+    pub fn wait_time(&self, now: f64) -> f64 {
+        self.pending
+            .as_ref()
+            .map_or(0.0, |p| (p.ready_at - now).max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::Action;
+
+    fn pending(ready_at: f64) -> Pending {
+        Pending {
+            issued_mb: 0,
+            issued_at: 0.0,
+            ready_at,
+            step: AgentStep {
+                action: Action::Replace,
+                prediction: None,
+                latency: ready_at,
+                valid_response: true,
+                raw_response: String::new(),
+            },
+        }
+    }
+
+    #[test]
+    fn poll_respects_ready_time() {
+        let mut pipe = InferencePipe::new();
+        pipe.submit(pending(5.0));
+        assert!(pipe.busy());
+        assert!(pipe.poll(4.9).is_none());
+        assert!(pipe.busy(), "unready response must stay queued");
+        let p = pipe.poll(5.0).unwrap();
+        assert_eq!(p.ready_at, 5.0);
+        assert!(!pipe.busy());
+    }
+
+    #[test]
+    fn wait_time_for_sync_mode() {
+        let mut pipe = InferencePipe::new();
+        assert_eq!(pipe.wait_time(1.0), 0.0);
+        pipe.submit(pending(3.0));
+        assert!((pipe.wait_time(1.0) - 2.0).abs() < 1e-12);
+        assert_eq!(pipe.wait_time(7.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already busy")]
+    fn double_submit_panics() {
+        let mut pipe = InferencePipe::new();
+        pipe.submit(pending(1.0));
+        pipe.submit(pending(2.0));
+    }
+}

@@ -1,0 +1,454 @@
+//! Experiment runner: builds the cluster, steps all trainers epoch by
+//! epoch with the per-minibatch DDP barrier, and aggregates results.
+
+use crate::buffer::scoring::Policy;
+use crate::classifier::trainer::TrainingSet;
+use crate::gnn::{AnalyticModel, ComputeParams, SageShape};
+use crate::graph::{datasets, Dataset};
+use crate::massivegnn;
+use crate::metrics::RunMetrics;
+use crate::net::{NetParams, Network};
+use crate::partition::{self, Method, Partition};
+use crate::sampler::Sampler;
+use crate::util::rng::derive_seed;
+use crate::util::stats;
+
+use super::controller::ControllerSpec;
+use super::trainer::{Mode, RunCtx, Trainer};
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub dataset: String,
+    /// Dataset scale multiplier (1.0 = registry stand-in size).
+    pub scale: f64,
+    pub seed: u64,
+    pub num_trainers: usize,
+    pub batch_size: usize,
+    pub fanout1: usize,
+    pub fanout2: usize,
+    /// Buffer capacity as a fraction of the 2-hop halo (paper's 5%/25%).
+    pub buffer_pct: f64,
+    pub epochs: usize,
+    pub controller: ControllerSpec,
+    pub mode: Mode,
+    pub partition_method: Method,
+    pub net: NetParams,
+    pub compute: ComputeParams,
+    pub hidden: usize,
+    /// Buffer scoring policy (FreqDecay = the paper's; Lfu/Lru = Fig 4
+    /// ablation baselines).
+    pub buffer_policy: Policy,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "products".into(),
+            scale: 0.2,
+            seed: 42,
+            num_trainers: 4,
+            batch_size: 32,
+            fanout1: 10,
+            fanout2: 25,
+            buffer_pct: 0.25,
+            epochs: 5,
+            controller: ControllerSpec::Fixed,
+            mode: Mode::Async,
+            partition_method: Method::MetisLike,
+            net: NetParams::default(),
+            compute: ComputeParams::default(),
+            hidden: 128,
+            buffer_policy: Policy::FreqDecay,
+        }
+    }
+}
+
+/// Aggregated outcome of one run.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    pub label: String,
+    pub per_trainer: Vec<RunMetrics>,
+    pub mean_epoch_time: f64,
+    pub mean_hits_pct: f64,
+    pub steady_hits_pct: f64,
+    pub total_comm_nodes: u64,
+    pub total_comm_bytes: u64,
+    pub p99_comm_nodes: f64,
+    pub replacement_interval: f64,
+    pub valid_response_pct: f64,
+    pub positive_decision_pct: f64,
+}
+
+impl ExperimentResult {
+    fn aggregate(label: String, per_trainer: Vec<RunMetrics>, epoch_times: Vec<f64>) -> Self {
+        let mean_hits = stats::mean(
+            &per_trainer.iter().map(RunMetrics::mean_hits_pct).collect::<Vec<_>>(),
+        );
+        let steady = stats::mean(
+            &per_trainer.iter().map(RunMetrics::steady_hits_pct).collect::<Vec<_>>(),
+        );
+        let p99 = stats::mean(
+            &per_trainer
+                .iter()
+                .map(|m| m.comm_nodes_percentile(99.0))
+                .collect::<Vec<_>>(),
+        );
+        let r = stats::mean(
+            &per_trainer
+                .iter()
+                .map(RunMetrics::replacement_interval)
+                .collect::<Vec<_>>(),
+        );
+        let (mut valid, mut invalid) = (0u64, 0u64);
+        let mut pos_samples = Vec::new();
+        for m in &per_trainer {
+            let (v, i) = m.response_counts();
+            valid += v;
+            invalid += i;
+            if v + i > 0 {
+                pos_samples.push(m.decision_split().0);
+            }
+        }
+        ExperimentResult {
+            label,
+            mean_epoch_time: stats::mean(&epoch_times),
+            mean_hits_pct: mean_hits,
+            steady_hits_pct: steady,
+            total_comm_nodes: per_trainer.iter().map(RunMetrics::total_comm_nodes).sum(),
+            total_comm_bytes: per_trainer.iter().map(RunMetrics::total_comm_bytes).sum(),
+            p99_comm_nodes: p99,
+            replacement_interval: r,
+            valid_response_pct: if valid + invalid > 0 {
+                valid as f64 / (valid + invalid) as f64 * 100.0
+            } else {
+                100.0
+            },
+            positive_decision_pct: stats::mean(&pos_samples),
+            per_trainer,
+        }
+    }
+}
+
+/// Build (or rebuild) the dataset + partition for a config.  Exposed so
+/// harnesses can share one graph across variant sweeps.
+pub fn build_cluster(cfg: &RunConfig) -> anyhow::Result<(Dataset, Partition)> {
+    let ds = Dataset::build_by_name(&cfg.dataset, cfg.scale, cfg.seed)?;
+    let part = partition::partition(
+        &ds.csr,
+        cfg.num_trainers,
+        cfg.partition_method,
+        derive_seed(cfg.seed, &[7]),
+    );
+    Ok((ds, part))
+}
+
+/// Run a full experiment (dataset built internally).
+pub fn run_experiment(cfg: &RunConfig) -> anyhow::Result<ExperimentResult> {
+    let (ds, part) = build_cluster(cfg)?;
+    Ok(run_on(&ds, &part, cfg, None))
+}
+
+/// Run on a pre-built cluster.  `offline` supplies classifier training
+/// data (required for meaningful classifier controllers).
+pub fn run_on(
+    ds: &Dataset,
+    part: &Partition,
+    cfg: &RunConfig,
+    offline: Option<&TrainingSet>,
+) -> ExperimentResult {
+    let shape = SageShape {
+        batch: cfg.batch_size,
+        fanout1: cfg.fanout1,
+        fanout2: cfg.fanout2,
+        feat_dim: ds.spec.feat_dim,
+        hidden: cfg.hidden,
+        classes: ds.spec.num_classes,
+    };
+    let net = Network::new(cfg.net.clone(), cfg.num_trainers);
+    let compute = AnalyticModel::new(cfg.compute.clone(), shape);
+    let allreduce = net.allreduce_time(shape.param_bytes());
+
+    // Build trainers.
+    let mut trainers: Vec<Trainer> = (0..cfg.num_trainers)
+        .map(|p| {
+            let train_nodes = part.train_nodes_of(p, &ds.train_nodes);
+            let halo2 = part.halo_k(&ds.csr, p, 2);
+            let capacity = if cfg.controller.uses_buffer() {
+                ((halo2.len() as f64 * cfg.buffer_pct) as usize).max(1)
+            } else {
+                0
+            };
+            let sampler = Sampler::new(
+                p,
+                cfg.batch_size,
+                cfg.fanout1,
+                cfg.fanout2,
+                derive_seed(cfg.seed, &[p as u64, 0x5A]),
+            );
+            let pretrained = offline.map(|set| {
+                if let ControllerSpec::Classifier { kind, .. } = &cfg.controller {
+                    let mut model = kind.build(derive_seed(cfg.seed, &[p as u64, 0xC1]));
+                    if !set.is_empty() {
+                        model.fit(&set.xs, &set.ys);
+                    }
+                    model
+                } else {
+                    crate::classifier::Kind::LogReg.build(0)
+                }
+            });
+            let mut controller = cfg
+                .controller
+                .build(derive_seed(cfg.seed, &[p as u64, 0xA6]), pretrained);
+            controller.set_eval_lag(if cfg.mode == Mode::Async { 1 } else { 0 });
+            let mut t = Trainer::new(p, capacity, halo2.len(), sampler, controller, train_nodes);
+            t.buffer = crate::buffer::PersistentBuffer::new(capacity, cfg.buffer_policy);
+            if cfg.controller.prepopulates() {
+                let order = massivegnn::prefetch_order(&ds.csr, part, p, capacity);
+                t.buffer.prepopulate(&order);
+            }
+            t
+        })
+        .collect();
+
+    let max_mb_per_epoch = trainers
+        .iter()
+        .map(Trainer::minibatches_per_epoch)
+        .max()
+        .unwrap_or(1);
+    let total_minibatches = (max_mb_per_epoch * cfg.epochs) as u64;
+    let ctx = RunCtx {
+        ds,
+        part,
+        net,
+        compute,
+        mode: cfg.mode,
+        epochs_total: cfg.epochs,
+        total_minibatches,
+    };
+
+    let mut epoch_times: Vec<f64> = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let orders: Vec<Vec<u32>> = trainers
+            .iter()
+            .map(|t| t.sampler.epoch_order(&t.train_nodes, epoch))
+            .collect();
+        let epoch_start: Vec<f64> = trainers.iter().map(|t| t.clock).collect();
+        for mb in 0..max_mb_per_epoch {
+            let mut any_active = false;
+            for (t, order) in trainers.iter_mut().zip(&orders) {
+                if t.step_minibatch(&ctx, epoch, mb, order) {
+                    any_active = true;
+                }
+            }
+            if !any_active {
+                break;
+            }
+            // DDP gradient sync: barrier + ring allreduce.
+            let t_bar = trainers.iter().map(|t| t.clock).fold(0.0f64, f64::max);
+            for t in trainers.iter_mut() {
+                t.clock = t_bar + allreduce;
+            }
+        }
+        // Epoch time = wall time of the barrier-synchronized epoch.
+        let epoch_end = trainers.iter().map(|t| t.clock).fold(0.0f64, f64::max);
+        let start = epoch_start.iter().copied().fold(f64::INFINITY, f64::min);
+        epoch_times.push(epoch_end - start);
+        for t in trainers.iter_mut() {
+            t.metrics.epoch_times.push(epoch_end - start);
+        }
+    }
+
+    let per_trainer: Vec<RunMetrics> = trainers.into_iter().map(|t| t.metrics).collect();
+    ExperimentResult::aggregate(cfg.controller.label(), per_trainer, epoch_times)
+}
+
+/// Trace-only mode (§4.4 offline phase): run with the Random controller and
+/// training disabled (compute reduced to the sampling path), recording
+/// labelled examples for classifier pretraining.
+pub fn trace_only(ds: &Dataset, part: &Partition, cfg: &RunConfig) -> TrainingSet {
+    use crate::classifier::labeling::label_trace;
+    let mut tcfg = cfg.clone();
+    tcfg.controller = ControllerSpec::Random { p: 0.5 };
+    // Training disabled: no backprop/optimizer — compute is sampling only.
+    tcfg.compute = ComputeParams {
+        device_flops: f64::INFINITY,
+        base_overhead: 5e-3,
+        train_multiplier: 0.0,
+    };
+    let shape = SageShape {
+        batch: tcfg.batch_size,
+        fanout1: tcfg.fanout1,
+        fanout2: tcfg.fanout2,
+        feat_dim: ds.spec.feat_dim,
+        hidden: tcfg.hidden,
+        classes: ds.spec.num_classes,
+    };
+    let net = Network::new(tcfg.net.clone(), tcfg.num_trainers);
+    let compute = AnalyticModel::new(tcfg.compute.clone(), shape);
+    let allreduce = 0.0;
+
+    let mut trainers: Vec<Trainer> = (0..tcfg.num_trainers)
+        .map(|p| {
+            let train_nodes = part.train_nodes_of(p, &ds.train_nodes);
+            let halo2 = part.halo_k(&ds.csr, p, 2);
+            let capacity = ((halo2.len() as f64 * tcfg.buffer_pct) as usize).max(1);
+            let sampler = Sampler::new(
+                p,
+                tcfg.batch_size,
+                tcfg.fanout1,
+                tcfg.fanout2,
+                derive_seed(tcfg.seed, &[p as u64, 0x5A]),
+            );
+            let controller = tcfg
+                .controller
+                .build(derive_seed(tcfg.seed, &[p as u64, 0xA6]), None);
+            let mut t = Trainer::new(p, capacity, halo2.len(), sampler, controller, train_nodes);
+            t.trace = Some(Vec::new());
+            t
+        })
+        .collect();
+
+    let max_mb = trainers.iter().map(Trainer::minibatches_per_epoch).max().unwrap_or(1);
+    let ctx = RunCtx {
+        ds,
+        part,
+        net,
+        compute,
+        mode: Mode::Async,
+        epochs_total: tcfg.epochs,
+        total_minibatches: (max_mb * tcfg.epochs) as u64,
+    };
+    let mut set = TrainingSet::default();
+    for epoch in 0..tcfg.epochs {
+        let orders: Vec<Vec<u32>> = trainers
+            .iter()
+            .map(|t| t.sampler.epoch_order(&t.train_nodes, epoch))
+            .collect();
+        for mb in 0..max_mb {
+            for (t, order) in trainers.iter_mut().zip(&orders) {
+                t.step_minibatch(&ctx, epoch, mb, order);
+            }
+            let _ = allreduce;
+        }
+    }
+    for t in trainers {
+        let cost = t.clock;
+        if let Some(trace) = t.trace {
+            set.push_examples(&label_trace(&trace), cost);
+        }
+    }
+    set
+}
+
+/// Convenience: list selectable dataset names (CLI help).
+pub fn dataset_names() -> String {
+    datasets::names()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(controller: &str) -> RunConfig {
+        RunConfig {
+            dataset: "ogbn-arxiv".into(),
+            scale: 0.1,
+            seed: 7,
+            num_trainers: 4,
+            batch_size: 32,
+            fanout1: 5,
+            fanout2: 5,
+            buffer_pct: 0.25,
+            epochs: 5,
+            controller: ControllerSpec::parse(controller).unwrap(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn baseline_runs_and_aggregates() {
+        let r = run_experiment(&quick("none")).unwrap();
+        assert_eq!(r.per_trainer.len(), 4);
+        assert!(r.mean_epoch_time > 0.0);
+        assert_eq!(r.mean_hits_pct, 0.0, "no buffer -> all misses");
+        assert!(r.total_comm_nodes > 0);
+    }
+
+    #[test]
+    fn fixed_buffer_gets_hits_and_beats_baseline_comm() {
+        let base = run_experiment(&quick("none")).unwrap();
+        let fixed = run_experiment(&quick("fixed")).unwrap();
+        assert!(fixed.mean_hits_pct > 10.0, "hits {}", fixed.mean_hits_pct);
+        assert!(
+            fixed.total_comm_nodes < base.total_comm_nodes,
+            "fixed {} vs base {}",
+            fixed.total_comm_nodes,
+            base.total_comm_nodes
+        );
+    }
+
+    #[test]
+    fn rudder_llm_runs_with_decisions() {
+        let r = run_experiment(&quick("llm:gemma3-4b")).unwrap();
+        let decisions: usize = r.per_trainer.iter().map(|m| m.decisions.len()).sum();
+        assert!(decisions > 0, "agent must make decisions");
+        assert!(r.valid_response_pct > 90.0);
+        assert!(r.steady_hits_pct > 10.0, "steady hits {}", r.steady_hits_pct);
+    }
+
+    #[test]
+    fn sync_mode_slower_than_async() {
+        let mut async_cfg = quick("llm:qwen-1.5b");
+        async_cfg.epochs = 2;
+        let mut sync_cfg = async_cfg.clone();
+        sync_cfg.mode = Mode::Sync;
+        let a = run_experiment(&async_cfg).unwrap();
+        let s = run_experiment(&sync_cfg).unwrap();
+        assert!(
+            s.mean_epoch_time > 2.0 * a.mean_epoch_time,
+            "sync {} vs async {}",
+            s.mean_epoch_time,
+            a.mean_epoch_time
+        );
+        // Sync mode decides every minibatch: r == 1.
+        assert!(s.replacement_interval <= 2.0, "r={}", s.replacement_interval);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = run_experiment(&quick("llm:gemma3-4b")).unwrap();
+        let b = run_experiment(&quick("llm:gemma3-4b")).unwrap();
+        assert_eq!(a.mean_epoch_time, b.mean_epoch_time);
+        assert_eq!(a.total_comm_nodes, b.total_comm_nodes);
+    }
+
+    #[test]
+    fn trace_only_produces_labeled_data() {
+        let cfg = quick("fixed");
+        let (ds, part) = build_cluster(&cfg).unwrap();
+        let set = trace_only(&ds, &part, &cfg);
+        assert!(set.len() > 50, "only {} examples", set.len());
+        assert!(set.positive_rate() > 0.05 && set.positive_rate() < 0.95);
+        assert!(set.collection_cost > 0.0);
+    }
+
+    #[test]
+    fn classifier_controller_with_offline_data() {
+        let cfg = quick("fixed");
+        let (ds, part) = build_cluster(&cfg).unwrap();
+        let set = trace_only(&ds, &part, &cfg);
+        let mut ccfg = quick("clf:lr");
+        ccfg.epochs = 2;
+        let r = run_on(&ds, &part, &ccfg, Some(&set));
+        assert!(r.per_trainer.iter().map(|m| m.decisions.len()).sum::<usize>() > 0);
+    }
+
+    #[test]
+    fn massivegnn_prepopulates() {
+        let r = run_experiment(&quick("massivegnn:8")).unwrap();
+        // Warm-started buffer: early minibatches should already hit.
+        let first_hits = r.per_trainer[0].minibatches[0].hits_pct;
+        assert!(first_hits > 0.0, "prepopulated buffer gave 0 first hits");
+    }
+}

@@ -1,0 +1,487 @@
+//! Per-trainer state machine: Algorithm 1 in virtual time.
+//!
+//! Each minibatch runs the prefetcher path (sample → buffer lookup →
+//! decision poll/apply → fetch) and the training path (T_DDP), composing
+//! their times per the §4.5.3 overlap model:
+//!
+//! * async (default): `step = T_DDP + max(0, T_prefetch − T_DDP_prev)` —
+//!   the prefetcher prepared this minibatch while the previous one trained;
+//!   only the excess is exposed.
+//! * sync: the trainer additionally stalls for the in-flight decision every
+//!   minibatch (`r = 1`).
+//! * no-prefetch baseline: fully serialized `T_sample + T_COMM + T_DDP`.
+
+use crate::agent::{Action, Observation};
+use crate::buffer::scoring::Policy;
+use crate::buffer::PersistentBuffer;
+use crate::classifier::labeling::TraceStep;
+use crate::classifier::{features, DecisionModel};
+use crate::gnn::{AnalyticModel, XlaRunner};
+use crate::graph::features::feat_bytes;
+use crate::graph::Dataset;
+use crate::metrics::{DecisionRecord, MinibatchRecord, RunMetrics};
+use crate::net::Network;
+use crate::partition::Partition;
+use crate::sampler::Sampler;
+use crate::util::stats::Ema;
+
+use super::controller::Controller;
+use super::queues::{InferencePipe, Pending};
+
+/// Sampling cost per sampled node id (CPU neighbor-sampler path).
+pub const SAMPLE_COST_PER_NODE: f64 = 1.2e-7;
+
+/// Replacement-round execution cost (paper §2.1's "excessive replacements"
+/// penalty): evicting/admitting runs on the trainer host's CPU threads
+/// (ThreadPoolExecutor + NUMBA in the paper), contending with the DDP
+/// dataloader — so it is charged *unhidden*.  Per-node cost scales with the
+/// feature payload copied into the buffer.
+pub const REPLACE_BASE_COST: f64 = 6.0e-3;
+pub const REPLACE_NODE_COST: f64 = 2.0e-6;
+pub const REPLACE_BYTE_COST: f64 = 1.5e-8;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Async,
+    Sync,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> anyhow::Result<Mode> {
+        match s {
+            "async" => Ok(Mode::Async),
+            "sync" => Ok(Mode::Sync),
+            _ => anyhow::bail!("unknown mode '{s}' (async|sync)"),
+        }
+    }
+}
+
+/// Immutable per-run context shared by all trainers.
+pub struct RunCtx<'a> {
+    pub ds: &'a Dataset,
+    pub part: &'a Partition,
+    pub net: Network,
+    pub compute: AnalyticModel,
+    pub mode: Mode,
+    pub epochs_total: usize,
+    /// Total planned minibatches for progress-awareness observations.
+    pub total_minibatches: u64,
+}
+
+/// The MetricsCollector (§4.2): maintains trends and renders observations.
+#[derive(Debug)]
+pub struct MetricsTracker {
+    ema_comm: Ema,
+    ema_hits: Ema,
+    last_sent_hits: f64,
+    last_sent_comm: f64,
+    pub last_hits: f64,
+    pub last_comm_nodes: u64,
+    pub last_replaced_frac: f64,
+}
+
+impl MetricsTracker {
+    pub fn new() -> MetricsTracker {
+        MetricsTracker {
+            ema_comm: Ema::new(0.3),
+            ema_hits: Ema::new(0.4),
+            last_sent_hits: 0.0,
+            last_sent_comm: 0.0,
+            last_hits: 0.0,
+            last_comm_nodes: 0,
+            last_replaced_frac: 0.0,
+        }
+    }
+
+    /// Push the current minibatch's raw %-Hits (called once per minibatch,
+    /// right after the buffer lookup).  The controller sees a short EMA —
+    /// the MetricsCollector aggregation of §4.2 — damping per-minibatch
+    /// sampling noise at the scaled batch sizes (the paper's batch-2000
+    /// signal is naturally smooth).
+    pub fn push_hits(&mut self, hits: f64) {
+        self.last_hits = self.ema_hits.push(hits);
+    }
+
+    pub fn end_minibatch(&mut self, comm_nodes: u64, replaced_frac: f64) {
+        self.last_comm_nodes = comm_nodes;
+        self.ema_comm.push(comm_nodes as f64);
+        if replaced_frac > 0.0 {
+            self.last_replaced_frac = replaced_frac;
+        }
+    }
+
+    /// Build the observation sent to the controller; records what was sent
+    /// so the next observation carries deltas.
+    #[allow(clippy::too_many_arguments)]
+    pub fn observe(
+        &mut self,
+        buffer: &PersistentBuffer,
+        ctx: &RunCtx,
+        epoch: usize,
+        global_mb: u64,
+        halo2_len: usize,
+        part_id: usize,
+    ) -> Observation {
+        let obs = Observation {
+            hits_pct: self.last_hits,
+            buffer_occupancy_pct: buffer.occupancy() * 100.0,
+            stale_pct: if buffer.capacity() > 0 {
+                buffer.stale_count() as f64 / buffer.capacity() as f64 * 100.0
+            } else {
+                0.0
+            },
+            replaced_pct_last: self.last_replaced_frac * 100.0,
+            comm_nodes_last: self.last_comm_nodes,
+            comm_nodes_ema: self.ema_comm.get().unwrap_or(0.0),
+            minibatches_done: global_mb,
+            minibatches_pending: ctx.total_minibatches.saturating_sub(global_mb),
+            epoch,
+            epochs_total: ctx.epochs_total,
+            delta_hits: self.last_hits - self.last_sent_hits,
+            delta_comm: self.last_comm_nodes as f64 - self.last_sent_comm,
+            graph_nodes: ctx.ds.csr.num_nodes() as u64,
+            graph_edges: (ctx.ds.csr.num_arcs() / 2) as u64,
+            partition_nodes: ctx.part.local_nodes[part_id].len() as u64,
+            halo_nodes: halo2_len as u64,
+            buffer_capacity: buffer.capacity() as u64,
+        };
+        self.last_sent_hits = self.last_hits;
+        self.last_sent_comm = self.last_comm_nodes as f64;
+        obs
+    }
+}
+
+pub struct Trainer {
+    pub part_id: usize,
+    pub clock: f64,
+    pub buffer: PersistentBuffer,
+    pub sampler: Sampler,
+    pub controller: Controller,
+    pub pipe: InferencePipe,
+    pub tracker: MetricsTracker,
+    pub metrics: RunMetrics,
+    pub train_nodes: Vec<u32>,
+    /// Optional measured-compute runner (e2e example / calibration).
+    pub xla: Option<XlaRunner>,
+    /// Optional trace-only recording (classifier offline data).
+    pub trace: Option<Vec<TraceStep>>,
+    pub halo2_len: usize,
+    prev_t_ddp: f64,
+    global_mb: u64,
+    /// Record index of the latest *issued* (pending) decision.
+    open_decision: Option<usize>,
+    /// Record index of the latest *applied* decision whose outcome has not
+    /// been measured yet (closed at the next decision-processing point).
+    applied_decision: Option<usize>,
+}
+
+impl Trainer {
+    pub fn new(
+        part_id: usize,
+        buffer_capacity: usize,
+        halo2_len: usize,
+        sampler: Sampler,
+        controller: Controller,
+        train_nodes: Vec<u32>,
+    ) -> Trainer {
+        Trainer {
+            part_id,
+            clock: 0.0,
+            buffer: PersistentBuffer::new(buffer_capacity, Policy::FreqDecay),
+            sampler,
+            controller,
+            pipe: InferencePipe::new(),
+            tracker: MetricsTracker::new(),
+            metrics: RunMetrics::default(),
+            train_nodes,
+            xla: None,
+            trace: None,
+            halo2_len,
+            prev_t_ddp: 0.0,
+            global_mb: 0,
+            open_decision: None,
+            applied_decision: None,
+        }
+    }
+
+    pub fn minibatches_per_epoch(&self) -> usize {
+        self.sampler.minibatches_per_epoch(self.train_nodes.len())
+    }
+
+    fn do_replace(&mut self) -> (bool, usize, f64) {
+        let out = self.buffer.replace();
+        let effective = !out.skipped && (out.evicted + out.inserted) > 0;
+        let frac = if self.buffer.capacity() > 0 {
+            out.inserted as f64 / self.buffer.capacity() as f64
+        } else {
+            0.0
+        };
+        (effective, out.fetched_nodes.len(), frac)
+    }
+
+    /// Close the last *applied* decision record with the current smoothed
+    /// %-Hits — its action has now had a full decision interval to act.
+    fn close_applied(&mut self) {
+        if let Some(i) = self.applied_decision.take() {
+            self.metrics.decisions[i].hits_after = Some(self.tracker.last_hits);
+        }
+    }
+
+    fn issue_decision(&mut self, obs: &Observation, epoch_mb: u64, now: f64) -> Pending {
+        let step = self.controller.decide(self.global_mb, obs);
+        self.metrics.decisions.push(DecisionRecord {
+            minibatch: self.global_mb as usize,
+            replace: step.action == Action::Replace,
+            prediction: step.prediction,
+            valid_response: step.valid_response,
+            hits_before: obs.hits_pct,
+            hits_after: None,
+            latency: step.latency,
+        });
+        self.open_decision = Some(self.metrics.decisions.len() - 1);
+        Pending { issued_mb: epoch_mb, issued_at: now, ready_at: now + step.latency, step }
+    }
+
+    /// Run one minibatch; returns `false` when this trainer has no work at
+    /// this index (short partition).
+    pub fn step_minibatch(
+        &mut self,
+        ctx: &RunCtx,
+        epoch: usize,
+        mb: usize,
+        epoch_order: &[u32],
+    ) -> bool {
+        let mbatch = self.sampler.sample(&ctx.ds.csr, ctx.part, epoch_order, epoch, mb);
+        if mbatch.targets.is_empty() {
+            return false;
+        }
+        self.global_mb += 1;
+        let fb = feat_bytes(ctx.ds.spec.feat_dim);
+        let fb_cost = fb as f64 * REPLACE_BYTE_COST;
+        let t_sample = SAMPLE_COST_PER_NODE * mbatch.num_sampled() as f64;
+
+        // --- prefetcher: buffer lookup ---------------------------------
+        let lookup = self.buffer.lookup(&mbatch.unique_remote);
+        let hits = lookup.hits_pct();
+        self.tracker.push_hits(hits);
+
+        // --- decision machinery -----------------------------------------
+        let mut replaced = false;
+        let mut replace_fetch = 0usize;
+        let mut replaced_frac = 0.0;
+        let mut sync_stall = 0.0;
+        enum Kind {
+            Inert,
+            Fixed,
+            MassiveGnn(u64),
+            Inference,
+        }
+        let kind = match &self.controller {
+            Controller::NoPrefetch => Kind::Inert,
+            Controller::Fixed => Kind::Fixed,
+            Controller::MassiveGnn { interval } | Controller::Interval { interval } => {
+                Kind::MassiveGnn(*interval)
+            }
+            Controller::Agent(_) | Controller::Classifier { .. } | Controller::Random { .. } => {
+                Kind::Inference
+            }
+        };
+        match kind {
+            Kind::Inert => {}
+            Kind::Fixed => {
+                let (r, f, fr) = self.do_replace();
+                replaced = r;
+                replace_fetch = f;
+                replaced_frac = fr;
+            }
+            Kind::MassiveGnn(interval) => {
+                if interval > 0 && self.global_mb % interval == 0 {
+                    let (r, f, fr) = self.do_replace();
+                    replaced = r;
+                    replace_fetch = f;
+                    replaced_frac = fr;
+                }
+            }
+            Kind::Inference => match ctx.mode {
+                Mode::Sync => {
+                    // Trainer waits for the decision every minibatch.  The
+                    // previously applied decision's outcome is now visible.
+                    self.close_applied();
+                    let obs = self.tracker.observe(
+                        &self.buffer, ctx, epoch, self.global_mb, self.halo2_len, self.part_id,
+                    );
+                    let pending = self.issue_decision(&obs, mb as u64, self.clock);
+                    sync_stall = pending.step.latency;
+                    self.applied_decision = self.open_decision.take();
+                    if pending.step.action == Action::Replace {
+                        let (r, f, fr) = self.do_replace();
+                        replaced = r;
+                        replace_fetch = f;
+                        replaced_frac = fr;
+                    }
+                }
+                Mode::Async => {
+                    // Non-blocking poll (Algorithm 1 line 12).
+                    if let Some(p) = self.pipe.poll(self.clock) {
+                        // Outcome of the decision applied at the previous
+                        // poll point is now measurable.
+                        self.close_applied();
+                        if p.step.action == Action::Replace {
+                            let (r, f, fr) = self.do_replace();
+                            replaced = r;
+                            replace_fetch = f;
+                            replaced_frac = fr;
+                        }
+                        // The polled decision is now applied; measure its
+                        // outcome at the next poll.
+                        self.applied_decision = self.open_decision.take();
+                        // Clear stale requests + notify + fresh metrics
+                        // (lines 15-19).
+                        let obs = self.tracker.observe(
+                            &self.buffer, ctx, epoch, self.global_mb, self.halo2_len, self.part_id,
+                        );
+                        let pending = self.issue_decision(&obs, mb as u64, self.clock);
+                        self.pipe.submit(pending);
+                    } else if !self.pipe.busy() {
+                        // Bootstrap: first request of the run.
+                        let obs = self.tracker.observe(
+                            &self.buffer, ctx, epoch, self.global_mb, self.halo2_len, self.part_id,
+                        );
+                        let pending = self.issue_decision(&obs, mb as u64, self.clock);
+                        self.pipe.submit(pending);
+                    }
+                }
+            },
+        }
+
+        // Unhidden replacement-processing cost (CPU contention).
+        let t_replace = if replaced {
+            REPLACE_BASE_COST
+                + replace_fetch as f64 * (REPLACE_NODE_COST + fb_cost)
+        } else {
+            0.0
+        };
+
+        // --- communication ----------------------------------------------
+        let fetch_nodes = lookup.missed_nodes.len() + replace_fetch;
+        let owners = distinct_owners(ctx.part, self.part_id, &lookup.missed_nodes);
+        let t_comm = ctx.net.fetch_time(fetch_nodes, owners.max(1), fb);
+        let comm_bytes = ctx.net.fetch_bytes(fetch_nodes, fb);
+
+        // --- training (T_DDP) -------------------------------------------
+        let t_ddp = if let Some(xla) = self.xla.as_mut() {
+            match xla.train_step(&mbatch, ctx.ds.feature_seed, &ctx.ds.labels) {
+                Ok((_loss, dt)) => dt,
+                Err(e) => {
+                    eprintln!("xla train step failed ({e}); falling back to model");
+                    ctx.compute.step_time(mbatch.targets.len())
+                }
+            }
+        } else {
+            ctx.compute.step_time(mbatch.targets.len())
+        };
+
+        // --- online finetuning (classifier option) ----------------------
+        let mut finetune_overhead = 0.0;
+        if let Controller::Classifier { model, finetuner: Some(ft) } = &mut self.controller {
+            let obs_now = Observation {
+                hits_pct: hits,
+                comm_nodes_last: fetch_nodes as u64,
+                ..Default::default()
+            };
+            let x = features::extract(&obs_now);
+            finetune_overhead = ft.observe(
+                TraceStep { x, hits_pct: hits, comm_time: t_comm, replaced },
+                model.as_mut() as &mut dyn DecisionModel,
+            );
+        }
+
+        // --- trace-only recording ---------------------------------------
+        if let Some(trace) = self.trace.as_mut() {
+            // Cheap observation snapshot for offline features.
+            let occupancy = self.buffer.occupancy() * 100.0;
+            let stale_pct = if self.buffer.capacity() > 0 {
+                self.buffer.stale_count() as f64 / self.buffer.capacity() as f64 * 100.0
+            } else {
+                0.0
+            };
+            let obs_now = Observation {
+                hits_pct: hits,
+                buffer_occupancy_pct: occupancy,
+                stale_pct,
+                comm_nodes_last: fetch_nodes as u64,
+                minibatches_done: self.global_mb,
+                minibatches_pending: ctx.total_minibatches.saturating_sub(self.global_mb),
+                epoch,
+                epochs_total: ctx.epochs_total,
+                graph_nodes: ctx.ds.csr.num_nodes() as u64,
+                halo_nodes: self.halo2_len as u64,
+                buffer_capacity: self.buffer.capacity() as u64,
+                ..Default::default()
+            };
+            trace.push(TraceStep {
+                x: features::extract(&obs_now),
+                hits_pct: hits,
+                comm_time: t_comm,
+                replaced,
+            });
+        }
+
+        // --- compose step time (§4.5.3) ---------------------------------
+        let prefetch_path = t_sample + t_comm;
+        let step_time = match &self.controller {
+            Controller::NoPrefetch => prefetch_path + t_ddp,
+            _ => {
+                let exposed = (prefetch_path - self.prev_t_ddp).max(0.0);
+                t_ddp + exposed + t_replace + sync_stall + finetune_overhead
+            }
+        };
+        self.prev_t_ddp = t_ddp;
+        self.clock += step_time;
+
+        // --- close out the minibatch ------------------------------------
+        let stale = self.buffer.end_round();
+        let _ = stale;
+        self.tracker.end_minibatch(fetch_nodes as u64, replaced_frac);
+        self.metrics.minibatches.push(MinibatchRecord {
+            epoch,
+            minibatch: self.global_mb as usize,
+            trainer: self.part_id,
+            hits_pct: hits,
+            comm_nodes: fetch_nodes as u64,
+            comm_bytes,
+            unique_remote: mbatch.unique_remote.len() as u64,
+            buffer_occupancy: self.buffer.occupancy(),
+            step_time,
+            replaced,
+            replaced_frac,
+        });
+        true
+    }
+}
+
+/// Number of distinct owner partitions among `nodes` (RPC aggregation).
+fn distinct_owners(part: &Partition, me: usize, nodes: &[u32]) -> usize {
+    let mut seen = [false; 1024];
+    let mut count = 0;
+    for &v in nodes {
+        let o = part.owner_of(v);
+        if o != me && !seen[o % 1024] {
+            seen[o % 1024] = true;
+            count += 1;
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(Mode::parse("async").unwrap(), Mode::Async);
+        assert_eq!(Mode::parse("sync").unwrap(), Mode::Sync);
+        assert!(Mode::parse("semi").is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! Fast non-cryptographic hasher for integer keys (std's SipHash costs
+//! ~10× more on the buffer's u32-keyed hot maps — §Perf item L3-2).
+//!
+//! Multiplicative (Fibonacci) hashing: `h = x * 2^64/φ`, finalized with an
+//! xor-shift.  Keys here are node ids (already well-spread by the R-MAT
+//! permutation), so this is collision-safe in practice and ~1ns per hash.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+#[derive(Default)]
+pub struct FastHasher {
+    state: u64,
+}
+
+impl Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        x ^= x >> 33;
+        x
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state = self
+                .state
+                .rotate_left(8)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, x: u32) {
+        self.state = self
+            .state
+            .wrapping_add(x as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        self.state = self.state.wrapping_add(x).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+}
+
+pub type FastBuild = BuildHasherDefault<FastHasher>;
+pub type FastMap<K, V> = std::collections::HashMap<K, V, FastBuild>;
+pub type FastSet<K> = std::collections::HashSet<K, FastBuild>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_for_node_ids() {
+        let mut m: FastMap<u32, u32> = FastMap::default();
+        for i in 0..10_000u32 {
+            m.insert(i * 7 + 1, i);
+        }
+        assert_eq!(m.len(), 10_000);
+        for i in 0..10_000u32 {
+            assert_eq!(m.get(&(i * 7 + 1)), Some(&i));
+        }
+        assert_eq!(m.get(&0), None);
+    }
+
+    #[test]
+    fn hashes_spread() {
+        use std::hash::{BuildHasher, Hash};
+        let b = FastBuild::default();
+        let mut buckets = [0u32; 64];
+        for i in 0..64_000u32 {
+            let mut h = b.build_hasher();
+            i.hash(&mut h);
+            buckets[(h.finish() % 64) as usize] += 1;
+        }
+        for &c in &buckets {
+            assert!((600..1400).contains(&c), "{buckets:?}");
+        }
+    }
+}

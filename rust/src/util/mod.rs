@@ -1,0 +1,12 @@
+//! Shared substrates: deterministic RNG, JSON, TOML-subset configs,
+//! statistics, and the property-testing micro-framework.
+//!
+//! Everything here is hand-rolled because the build sandbox mirrors no
+//! crates beyond the `xla` closure (DESIGN.md §2).
+
+pub mod fasthash;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tomlite;

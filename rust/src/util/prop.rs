@@ -1,0 +1,164 @@
+//! Property-testing micro-framework (proptest is not mirrored offline).
+//!
+//! Size-driven random case generation with automatic shrinking: cases are
+//! generated from a [`Pcg32`] whose "size budget" grows over the run, so the
+//! first failures are naturally small; on failure the runner retries the
+//! failing case at progressively smaller sizes and reports the smallest
+//! size + seed that still fails (rerunnable by construction).
+//!
+//! ```ignore
+//! prop_check("buffer never exceeds capacity", 200, |g| {
+//!     let cap = g.usize(1, 64);
+//!     /* ... build case from g, return Err(msg) on violation ... */
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::{derive_seed, Pcg32};
+
+/// Case-generation handle: a seeded RNG plus a size budget.
+pub struct G {
+    pub rng: Pcg32,
+    pub size: usize,
+}
+
+impl G {
+    /// Integer in `[lo, hi]`, biased toward the low end by the size budget.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = (hi - lo).min(self.size.max(1));
+        lo + self.rng.below(span as u64 + 1) as usize
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.usize(lo as usize, hi as usize) as u64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// A vector of length `[0, max_len]` built by `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut G) -> T) -> Vec<T> {
+        let len = self.usize(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        let i = self.rng.below(xs.len() as u64) as usize;
+        &xs[i]
+    }
+}
+
+/// Outcome of a property run.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`; panic with a reproducible report on
+/// the first (shrunk) failure.  Seed comes from `RUDDER_PROP_SEED` if set so
+/// failures can be replayed exactly.
+pub fn prop_check(name: &str, cases: u32, mut prop: impl FnMut(&mut G) -> PropResult) {
+    let base_seed = std::env::var("RUDDER_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FF_EE00_u64);
+
+    for case in 0..cases {
+        // Size ramps 1 -> 100 across the run.
+        let size = 1 + (case as usize * 100) / cases.max(1) as usize;
+        let seed = derive_seed(base_seed, &[name.len() as u64, case as u64]);
+        if let Err(msg) = run_case(&mut prop, seed, size) {
+            // Shrink: retry the same seed at smaller sizes, keep the
+            // smallest size that still fails.
+            let mut fail_size = size;
+            let mut fail_msg = msg;
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                match run_case(&mut prop, seed, s) {
+                    Err(m) => {
+                        fail_size = s;
+                        fail_msg = m;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, size {fail_size}):\n  {fail_msg}\n\
+                 replay with RUDDER_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+fn run_case(
+    prop: &mut impl FnMut(&mut G) -> PropResult,
+    seed: u64,
+    size: usize,
+) -> PropResult {
+    let mut g = G { rng: Pcg32::new(seed), size };
+    prop(&mut g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        prop_check("reverse twice is identity", 50, |g| {
+            let v = g.vec(32, |g| g.u64(0, 1000));
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            if r == v {
+                Ok(())
+            } else {
+                Err(format!("{v:?} != {r:?}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        prop_check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinks_to_small_size() {
+        // The failing size reported must be small for a property that fails
+        // whenever the vector is non-empty.
+        let result = std::panic::catch_unwind(|| {
+            prop_check("fails on non-empty", 100, |g| {
+                let v = g.vec(64, |g| g.u64(0, 9));
+                if v.is_empty() {
+                    Ok(())
+                } else {
+                    Err("non-empty".into())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Shrinker halves size; a size-1 failure must be found.
+        assert!(msg.contains("size 1"), "{msg}");
+    }
+
+    #[test]
+    fn generator_bounds_respected() {
+        prop_check("usize in bounds", 100, |g| {
+            let lo = g.usize(0, 10);
+            let hi = lo + g.usize(0, 10);
+            let x = g.usize(lo, hi);
+            if x >= lo && x <= hi {
+                Ok(())
+            } else {
+                Err(format!("{x} not in [{lo}, {hi}]"))
+            }
+        });
+    }
+}

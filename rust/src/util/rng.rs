@@ -1,0 +1,256 @@
+//! Deterministic PRNG substrate.
+//!
+//! Every stochastic choice in the system (graph generation, sampling,
+//! simulated-LLM noise, classifier init) flows from [`Pcg32`] streams derived
+//! with [`derive_seed`], keyed by semantic tuples like
+//! `(experiment, dataset, trainer, epoch, minibatch)` — so any run is
+//! bit-reproducible and any component can be replayed in isolation.
+
+/// SplitMix64: used for seeding / key derivation (passes BigCrush as a mixer).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Derive a child seed from a parent seed and a list of stream labels.
+pub fn derive_seed(parent: u64, labels: &[u64]) -> u64 {
+    let mut s = parent ^ 0xA076_1D64_78BD_642F;
+    let mut out = splitmix64(&mut s);
+    for &l in labels {
+        s ^= l.wrapping_mul(0xE703_7ED1_A0B4_28DB);
+        out ^= splitmix64(&mut s).rotate_left((l % 63) as u32 + 1);
+    }
+    out
+}
+
+/// PCG32 (XSH-RR): small, fast, statistically solid.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xDA3E_39CB_94B9_5BDB)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Child RNG on an independent stream, labelled for reproducibility.
+    pub fn fork(&mut self, label: u64) -> Pcg32 {
+        let seed = derive_seed(self.next_u64(), &[label]);
+        Pcg32::with_stream(seed, label.wrapping_mul(2).wrapping_add(1))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's unbiased method).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (bound as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(f64::MIN_POSITIVE).ln() / lambda
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct items from `0..n` (Floyd's algorithm), sorted.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        if k >= n {
+            return (0..n).collect();
+        }
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j as u64 + 1) as usize;
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        let mut out: Vec<usize> = chosen.into_iter().collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Pick one element uniformly.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_clones() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg32::new(7);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Pcg32::new(9);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[rng.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut rng = Pcg32::new(11);
+        for _ in 0..100 {
+            let k = rng.below(20) as usize;
+            let s = rng.sample_indices(50, k);
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn sample_indices_k_ge_n() {
+        let mut rng = Pcg32::new(1);
+        assert_eq!(rng.sample_indices(5, 9), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn derive_seed_sensitivity() {
+        let a = derive_seed(1, &[1, 2, 3]);
+        let b = derive_seed(1, &[1, 2, 4]);
+        let c = derive_seed(2, &[1, 2, 3]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, derive_seed(1, &[1, 2, 3]));
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Pcg32::new(100);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+}

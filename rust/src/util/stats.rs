@@ -1,0 +1,259 @@
+//! Statistics substrate: summary stats, percentiles, confidence intervals.
+//!
+//! The paper reports mean epoch times, p99 communication volumes (Fig 14),
+//! medians-over-configurations (Fig 13), and 95% CIs "computed via
+//! chi-square distribution" on Pass@1 proportions (Table 4).  All of that
+//! lives here.
+
+/// Arithmetic mean (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile in `[0, 100]` with linear interpolation (NIST method).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.len() == 1 {
+        return v[0];
+    }
+    let rank = p.clamp(0.0, 100.0) / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// 95% chi-square quantile for 1 degree of freedom.
+pub const CHI2_95_DF1: f64 = 3.841458820694124;
+
+/// Wilson score interval on a proportion, driven by the chi-square(1)
+/// 95% quantile (z² = χ²₁,₀.₉₅) — this is the "95% CI per run, computed via
+/// chi-square distribution" of Table 4.  Returns `(lo_delta, hi_delta)` as
+/// positive offsets below/above the point estimate, in percent units when
+/// `successes/trials` is interpreted as a rate.
+pub fn wilson_ci95(successes: u64, trials: u64) -> (f64, f64) {
+    if trials == 0 {
+        return (0.0, 0.0);
+    }
+    let n = trials as f64;
+    let p = successes as f64 / n;
+    let z2 = CHI2_95_DF1;
+    let denom = 1.0 + z2 / n;
+    let center = (p + z2 / (2.0 * n)) / denom;
+    let half = (z2 / n * (p * (1.0 - p) + z2 / (4.0 * n))).sqrt() / denom;
+    let lo = (center - half).max(0.0);
+    let hi = (center + half).min(1.0);
+    ((p - lo) * 100.0, (hi - p) * 100.0)
+}
+
+/// Exponential moving average helper.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Online mean/min/max/count accumulator (Welford for variance).
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accumulator {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Simple fixed-bucket histogram for trajectory summaries.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub buckets: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(hi > lo && n > 0);
+        Self { lo, hi, buckets: vec![0; n], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.buckets.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.buckets[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn p99_order_insensitive() {
+        let mut xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        xs.reverse();
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.1);
+    }
+
+    #[test]
+    fn wilson_ci_sane() {
+        // 80/100: CI roughly (71%, 87%).
+        let (lo, hi) = wilson_ci95(80, 100);
+        assert!(lo > 5.0 && lo < 12.0, "lo {lo}");
+        assert!(hi > 5.0 && hi < 12.0, "hi {hi}");
+        // Extreme proportions stay in [0, 100].
+        let (lo0, hi0) = wilson_ci95(0, 10);
+        assert_eq!(lo0, 0.0);
+        assert!(hi0 > 0.0);
+        let (lo1, hi1) = wilson_ci95(10, 10);
+        assert!(lo1 > 0.0);
+        assert_eq!(hi1, 0.0);
+        assert_eq!(wilson_ci95(5, 0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn wilson_ci_narrows_with_n() {
+        let (lo_small, _) = wilson_ci95(8, 10);
+        let (lo_big, _) = wilson_ci95(800, 1000);
+        assert!(lo_big < lo_small);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.get(), None);
+        e.push(0.0);
+        for _ in 0..30 {
+            e.push(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn accumulator_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.5];
+        let mut acc = Accumulator::default();
+        for &x in &xs {
+            acc.push(x);
+        }
+        assert!((acc.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((acc.stddev() - stddev(&xs)).abs() < 1e-12);
+        assert_eq!(acc.min, 1.0);
+        assert_eq!(acc.max, 5.5);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(11.0);
+        assert!(h.buckets.iter().all(|&b| b == 1));
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+}

@@ -1,0 +1,246 @@
+//! TOML-subset config parser (sections, key/value, arrays, comments).
+//!
+//! Experiment configs (`configs/*.toml`) and the calibration file use this.
+//! Supported grammar — the practical subset:
+//!
+//! ```toml
+//! top_level = 1            # comments
+//! [section]
+//! s = "string"
+//! n = 42
+//! f = 1.5
+//! b = true
+//! xs = [1, 2, 3]
+//! names = ["a", "b"]
+//! [section.sub]            # dotted sections
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse into a [`Json`] object tree (sections become nested objects).
+pub fn parse(src: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(ln, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(ln, "empty section name"));
+            }
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            // Materialize the section path.
+            ensure_path(&mut root, &section, ln)?;
+        } else {
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| err(ln, "expected 'key = value'"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err(ln, "empty key"));
+            }
+            let value = parse_value(val.trim(), ln)?;
+            insert_at(&mut root, &section, key, value, ln)?;
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Parse a file from disk.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    Ok(parse(&src)?)
+}
+
+fn err(line: usize, msg: &str) -> TomlError {
+    TomlError { line: line + 1, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<Json, TomlError> {
+    if s.is_empty() {
+        return Err(err(ln, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(ln, "unterminated string"))?;
+        return Ok(Json::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(ln, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), ln)?);
+        }
+        return Ok(Json::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| err(ln, &format!("cannot parse value '{s}'")))
+}
+
+/// Split on commas that are not inside quotes (arrays of strings).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn ensure_path(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    ln: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return Err(err(ln, &format!("'{seg}' is not a section"))),
+        }
+    }
+    Ok(())
+}
+
+fn insert_at(
+    root: &mut BTreeMap<String, Json>,
+    section: &[String],
+    key: &str,
+    value: Json,
+    ln: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for seg in section {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return Err(err(ln, &format!("'{seg}' is not a section"))),
+        }
+    }
+    if cur.insert(key.to_string(), value).is_some() {
+        return Err(err(ln, &format!("duplicate key '{key}'")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let src = r#"
+# experiment config
+name = "fig12"       # inline comment
+trainers = [16, 32, 64]
+[dataset]
+kind = "products"
+scale = 0.05
+[dataset.partition]
+method = "metis"
+parts = 4
+enabled = true
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("fig12"));
+        assert_eq!(v.at("dataset.kind").unwrap().as_str(), Some("products"));
+        assert_eq!(v.at("dataset.partition.parts").unwrap().as_i64(), Some(4));
+        assert_eq!(v.at("dataset.partition.enabled").unwrap().as_bool(), Some(true));
+        let tr = v.get("trainers").unwrap().as_arr().unwrap();
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr[2].as_i64(), Some(64));
+    }
+
+    #[test]
+    fn string_arrays_with_commas() {
+        let v = parse(r#"xs = ["a,b", "c"]"#).unwrap();
+        let xs = v.get("xs").unwrap().as_arr().unwrap();
+        assert_eq!(xs[0].as_str(), Some("a,b"));
+        assert_eq!(xs[1].as_str(), Some("c"));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let v = parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(v.get("k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = what").is_err());
+        assert!(parse("k = 1\nk = 2").is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        let v = parse("\n# just a comment\n\n").unwrap();
+        assert_eq!(v, Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn negative_and_float_numbers() {
+        let v = parse("a = -4\nb = 2.75\nc = 1e2").unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(-4));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.75));
+        assert_eq!(v.get("c").unwrap().as_f64(), Some(100.0));
+    }
+}

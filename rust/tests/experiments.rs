@@ -1,0 +1,83 @@
+//! Experiment-harness smoke tests: every figure/table generator runs at a
+//! micro scale and produces non-degenerate tables.  (The benches produce
+//! the full Quick-quality outputs; these tests guard against harness rot.)
+
+use rudder::eval::harness;
+use rudder::eval::Quality;
+
+/// Micro run of an experiment id; asserts well-formed tables.
+fn check(id: &str) {
+    let tables = harness::run_experiment_id(id, Quality::Quick)
+        .unwrap_or_else(|e| panic!("{id}: {e}"));
+    assert!(!tables.is_empty(), "{id}: no tables");
+    for t in &tables {
+        assert!(!t.headers.is_empty(), "{id}: no headers");
+        assert!(!t.rows.is_empty(), "{id}: no rows in '{}'", t.title);
+        // Render + CSV must not panic and must mention every header.
+        let rendered = t.render();
+        for h in &t.headers {
+            assert!(rendered.contains(h.as_str()), "{id}: header '{h}' missing");
+        }
+        let _ = t.to_csv();
+    }
+}
+
+// The cheap experiments run as individual tests; the heavyweight sweeps
+// (fig12/13/16/18, table2/4 — minutes each at Quick quality) are exercised
+// by `cargo bench` instead.
+
+#[test]
+fn fig01_unique_remote() {
+    check("fig01");
+}
+
+#[test]
+fn fig03_replacement_strategies() {
+    check("fig03");
+}
+
+#[test]
+fn fig06_llm_characteristics() {
+    check("fig06");
+}
+
+#[test]
+fn fig14_buffer_comm() {
+    check("fig14");
+}
+
+#[test]
+fn fig15_massivegnn() {
+    check("fig15");
+}
+
+#[test]
+fn fig17_sync_async() {
+    check("fig17");
+}
+
+#[test]
+fn fig20_trajectories() {
+    check("fig20");
+}
+
+#[test]
+fn fig03_adaptive_wins_on_hits() {
+    // The core §2.1 claim at micro scale: adaptive replacement's steady
+    // %-Hits beats single/infrequent replacement.
+    let tables = harness::run_experiment_id("fig03", Quality::Quick).unwrap();
+    let t = &tables[0];
+    let hits = |name: &str| -> f64 {
+        t.rows
+            .iter()
+            .find(|r| r[0].contains(name))
+            .map(|r| r[2].trim_end_matches('%').parse::<f64>().unwrap())
+            .unwrap()
+    };
+    let adaptive = hits("adaptive");
+    let single = hits("single");
+    assert!(
+        adaptive > single,
+        "adaptive {adaptive} must beat single-replacement {single}"
+    );
+}

@@ -1,0 +1,204 @@
+//! Cross-module integration tests: the full pipeline (graph → partition →
+//! sample → buffer → controller → metrics) under every variant, plus the
+//! paper's qualitative claims at test scale.
+
+use rudder::eval::{pass_at_1, Quality};
+use rudder::partition::Method;
+use rudder::sim::{build_cluster, run_on, trace_only, ControllerSpec, Mode, RunConfig};
+
+fn cfg(controller: &str) -> RunConfig {
+    RunConfig {
+        dataset: "products".into(),
+        scale: 0.15,
+        seed: 11,
+        num_trainers: 4,
+        batch_size: 32,
+        fanout1: 8,
+        fanout2: 10,
+        buffer_pct: 0.25,
+        epochs: 6,
+        controller: ControllerSpec::parse(controller).unwrap(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_variants_run_end_to_end() {
+    let base = cfg("none");
+    let (ds, part) = build_cluster(&base).unwrap();
+    for spec in [
+        "none",
+        "fixed",
+        "llm:gemma3-4b",
+        "llm:smollm2-360m",
+        "clf:lr",
+        "massivegnn:16",
+        "random:0.5",
+    ] {
+        let mut c = cfg(spec);
+        c.epochs = 3;
+        let r = run_on(&ds, &part, &c, None);
+        assert!(r.mean_epoch_time > 0.0, "{spec}");
+        assert!(!r.per_trainer.is_empty(), "{spec}");
+        let mb_count: usize = r.per_trainer.iter().map(|m| m.minibatches.len()).sum();
+        assert!(mb_count > 0, "{spec}: no minibatches");
+    }
+}
+
+#[test]
+fn headline_claim_baseline_slowest_rudder_reduces_comm() {
+    // The paper's headline: prefetching beats no-prefetch DistDGL on epoch
+    // time; Rudder cuts communication by >50% at 25% buffer capacity.
+    let base = cfg("none");
+    let (ds, part) = build_cluster(&base).unwrap();
+    let r_none = run_on(&ds, &part, &base, None);
+    let r_rudder = run_on(&ds, &part, &cfg("llm:gemma3-4b"), None);
+    assert!(
+        r_rudder.mean_epoch_time < r_none.mean_epoch_time,
+        "rudder {} vs baseline {}",
+        r_rudder.mean_epoch_time,
+        r_none.mean_epoch_time
+    );
+    let reduction = 1.0 - r_rudder.total_comm_nodes as f64 / r_none.total_comm_nodes as f64;
+    assert!(reduction > 0.4, "comm reduction only {:.2}", reduction);
+    assert!(r_rudder.steady_hits_pct > 40.0);
+}
+
+#[test]
+fn gemma_beats_weak_models_on_pass_at_1() {
+    let base = cfg("none");
+    let (ds, part) = build_cluster(&base).unwrap();
+    let strong = run_on(&ds, &part, &cfg("llm:gemma3-4b"), None);
+    let weak = run_on(&ds, &part, &cfg("llm:smollm2-360m"), None);
+    let p_strong = pass_at_1(&strong.per_trainer);
+    let p_weak = pass_at_1(&weak.per_trainer);
+    assert!(p_strong.trials > 0 && p_weak.trials > 0);
+    assert!(
+        p_strong.score > p_weak.score,
+        "gemma {} <= smollm {}",
+        p_strong.score,
+        p_weak.score
+    );
+}
+
+#[test]
+fn sync_mode_stalls_and_r_is_1() {
+    let base = cfg("none");
+    let (ds, part) = build_cluster(&base).unwrap();
+    let mut s = cfg("llm:qwen-1.5b");
+    s.mode = Mode::Sync;
+    s.epochs = 2;
+    let mut a = s.clone();
+    a.mode = Mode::Async;
+    let r_sync = run_on(&ds, &part, &s, None);
+    let r_async = run_on(&ds, &part, &a, None);
+    assert!(r_sync.replacement_interval < 1.5);
+    assert!(r_async.replacement_interval > 3.0);
+    assert!(r_sync.mean_epoch_time > 3.0 * r_async.mean_epoch_time);
+}
+
+#[test]
+fn trace_pipeline_feeds_classifiers() {
+    let base = cfg("none");
+    let (ds, part) = build_cluster(&base).unwrap();
+    let set = trace_only(&ds, &part, &base);
+    assert!(set.len() > 100);
+    // Train and deploy an MLP with the collected traces.
+    let mut c = cfg("clf:mlp");
+    c.epochs = 3;
+    let r = run_on(&ds, &part, &c, Some(&set));
+    let decisions: usize = r.per_trainer.iter().map(|m| m.decisions.len()).sum();
+    assert!(decisions > 0);
+    // Classifier cadence is much faster than LLM cadence (paper Table 2).
+    assert!(r.replacement_interval < 4.0, "r={}", r.replacement_interval);
+}
+
+#[test]
+fn finetuned_classifier_runs_on_unseen_dataset() {
+    let base = cfg("none");
+    let (ds_seen, part_seen) = build_cluster(&base).unwrap();
+    let set = trace_only(&ds_seen, &part_seen, &base);
+    let mut c = cfg("clf:mlp:finetune=10");
+    c.dataset = "yelp".into();
+    c.epochs = 3;
+    let (ds, part) = build_cluster(&c).unwrap();
+    let r = run_on(&ds, &part, &c, Some(&set));
+    assert!(r.mean_epoch_time > 0.0);
+}
+
+#[test]
+fn massivegnn_warm_start_beats_cold_start_early() {
+    let base = cfg("none");
+    let (ds, part) = build_cluster(&base).unwrap();
+    let warm = run_on(&ds, &part, &cfg("massivegnn:32"), None);
+    let cold = run_on(&ds, &part, &cfg("fixed"), None);
+    let early_warm = warm.per_trainer[0].minibatches[0].hits_pct;
+    let early_cold = cold.per_trainer[0].minibatches[0].hits_pct;
+    assert!(
+        early_warm > early_cold,
+        "warm {} vs cold {}",
+        early_warm,
+        early_cold
+    );
+}
+
+#[test]
+fn partition_methods_affect_comm() {
+    let mut c_metis = cfg("fixed");
+    c_metis.partition_method = Method::MetisLike;
+    let mut c_rand = cfg("fixed");
+    c_rand.partition_method = Method::Random;
+    let (ds, part_m) = build_cluster(&c_metis).unwrap();
+    let part_r = rudder::partition::partition(&ds.csr, 4, Method::Random, 11);
+    let r_m = run_on(&ds, &part_m, &c_metis, None);
+    let r_r = run_on(&ds, &part_r, &c_rand, None);
+    assert!(
+        r_m.total_comm_nodes < r_r.total_comm_nodes,
+        "metis {} vs random {}",
+        r_m.total_comm_nodes,
+        r_r.total_comm_nodes
+    );
+}
+
+#[test]
+fn buffer_capacity_tradeoff_shape() {
+    // Fig 16 shape: bigger buffers -> higher hits, lower comm.
+    let base = cfg("none");
+    let (ds, part) = build_cluster(&base).unwrap();
+    let mut small = cfg("fixed");
+    small.buffer_pct = 0.05;
+    let mut large = cfg("fixed");
+    large.buffer_pct = 0.25;
+    let r_small = run_on(&ds, &part, &small, None);
+    let r_large = run_on(&ds, &part, &large, None);
+    assert!(r_large.steady_hits_pct > r_small.steady_hits_pct);
+    assert!(r_large.total_comm_nodes < r_small.total_comm_nodes);
+}
+
+#[test]
+fn deterministic_across_identical_runs() {
+    let c = cfg("llm:llama3.2-3b");
+    let (ds, part) = build_cluster(&c).unwrap();
+    let a = run_on(&ds, &part, &c, None);
+    let b = run_on(&ds, &part, &c, None);
+    assert_eq!(a.mean_epoch_time.to_bits(), b.mean_epoch_time.to_bits());
+    assert_eq!(a.total_comm_nodes, b.total_comm_nodes);
+    let da: Vec<_> = a.per_trainer[0].decisions.iter().map(|d| d.replace).collect();
+    let db: Vec<_> = b.per_trainer[0].decisions.iter().map(|d| d.replace).collect();
+    assert_eq!(da, db);
+}
+
+#[test]
+fn strong_scaling_more_trainers_fewer_minibatches_each() {
+    // Remark 1: minibatches per trainer shrink as trainers grow.
+    let c4 = cfg("fixed");
+    let mut c8 = cfg("fixed");
+    c8.num_trainers = 8;
+    let (ds, part4) = build_cluster(&c4).unwrap();
+    let part8 = rudder::partition::partition(&ds.csr, 8, Method::MetisLike, 11);
+    let r4 = run_on(&ds, &part4, &c4, None);
+    let r8 = run_on(&ds, &part8, &c8, None);
+    let mb4: usize = r4.per_trainer.iter().map(|m| m.minibatches.len()).sum::<usize>() / 4;
+    let mb8: usize = r8.per_trainer.iter().map(|m| m.minibatches.len()).sum::<usize>() / 8;
+    assert!(mb8 < mb4, "mb8 {mb8} vs mb4 {mb4}");
+}

@@ -1,0 +1,279 @@
+//! Property-based tests (via the in-tree prop harness): coordinator
+//! invariants that must hold for *every* random workload — buffer state
+//! machine, sampler shapes, partitioner totality, queue discipline, JSON
+//! round-trips.
+
+use rudder::agent::parser;
+use rudder::buffer::scoring::Policy;
+use rudder::buffer::PersistentBuffer;
+use rudder::graph::rmat::{densify_isolated, generate, RmatParams};
+use rudder::partition::{partition, Method, Partition};
+use rudder::sampler::Sampler;
+use rudder::sim::queues::{InferencePipe, Pending};
+use rudder::util::json::Json;
+use rudder::util::prop::{prop_check, G};
+use rudder::util::rng::Pcg32;
+
+#[test]
+fn buffer_invariants_under_random_workloads() {
+    prop_check("buffer invariants", 150, |g| {
+        let cap = g.usize(0, 64);
+        let mut buf = PersistentBuffer::new(cap, Policy::FreqDecay);
+        let rounds = g.usize(1, 40);
+        for _ in 0..rounds {
+            let nodes = g.vec(30, |g| g.u64(0, 200) as u32);
+            let res = buf.lookup(&nodes);
+            if res.hits + res.misses != nodes.len() {
+                return Err("hits + misses != lookups".into());
+            }
+            buf.end_round();
+            if g.bool() {
+                let out = buf.replace();
+                if out.fetched_nodes.len() != out.inserted {
+                    return Err("fetched != inserted".into());
+                }
+            }
+            if buf.len() > cap {
+                return Err(format!("len {} > cap {cap}", buf.len()));
+            }
+            buf.check_invariants()?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn buffer_hits_only_for_present_nodes() {
+    prop_check("lookup hit iff contained", 100, |g| {
+        let cap = g.usize(1, 32);
+        let mut buf = PersistentBuffer::new(cap, Policy::FreqDecay);
+        // Fill with known nodes.
+        let known: Vec<u32> = (0..cap as u32).collect();
+        buf.prepopulate(&known);
+        let probe = g.vec(20, |g| g.u64(0, 2 * cap as u64 + 1) as u32);
+        let contained: Vec<bool> = probe.iter().map(|&v| buf.contains(v)).collect();
+        let res = buf.lookup(&probe);
+        let expected_hits = contained.iter().filter(|&&c| c).count();
+        if res.hits != expected_hits {
+            return Err(format!("hits {} expected {}", res.hits, expected_hits));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_totality_and_halo_disjointness() {
+    prop_check("partition invariants", 25, |g| {
+        let n = g.usize(20, 600) + 10;
+        let edges = n * g.usize(2, 8);
+        let mut rng = Pcg32::new(g.rng.next_u64());
+        let csr = generate(
+            &RmatParams {
+                a: 0.5 + g.f64(0.0, 0.2),
+                b: 0.15,
+                c: 0.15,
+                num_nodes: n,
+                num_edges: edges,
+                permute: true,
+            },
+            &mut rng,
+        );
+        let k = g.usize(1, 8).max(1);
+        let method = *g.pick(&[Method::MetisLike, Method::Ldg, Method::Random]);
+        let part = partition(&csr, k, method, g.rng.next_u64());
+        // Totality.
+        let total: usize = part.local_nodes.iter().map(Vec::len).sum();
+        if total != csr.num_nodes() {
+            return Err(format!("{method:?}: assigned {total}/{}", csr.num_nodes()));
+        }
+        // Owner consistency + halo correctness.
+        for (p, locals) in part.local_nodes.iter().enumerate() {
+            for &v in locals {
+                if part.owner_of(v) != p {
+                    return Err("owner mismatch".into());
+                }
+            }
+            for &h in &part.halo[p] {
+                if part.owner_of(h) == p {
+                    return Err("halo node owned locally".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sampler_always_padded_and_in_range() {
+    prop_check("sampler shapes", 30, |g| {
+        let n = g.usize(50, 400) + 20;
+        let mut rng = Pcg32::new(g.rng.next_u64());
+        let csr = generate(
+            &RmatParams {
+                a: 0.57, b: 0.19, c: 0.19,
+                num_nodes: n,
+                num_edges: n * 5,
+                permute: true,
+            },
+            &mut rng,
+        );
+        let csr = densify_isolated(&csr, &mut rng);
+        let k = g.usize(1, 4).max(1);
+        let part: Partition = partition(&csr, k, Method::Ldg, 3);
+        let p = g.usize(0, k - 1);
+        let f1 = g.usize(1, 6).max(1);
+        let f2 = g.usize(1, 6).max(1);
+        let batch = g.usize(1, 16).max(1);
+        let s = Sampler::new(p, batch, f1, f2, g.rng.next_u64());
+        let train = part.local_nodes[p].clone();
+        if train.is_empty() {
+            return Ok(());
+        }
+        let order = s.epoch_order(&train, 0);
+        for mb in 0..s.minibatches_per_epoch(train.len()) {
+            let m = s.sample(&csr, &part, &order, 0, mb);
+            if m.hop1.len() != m.targets.len() * f1 {
+                return Err("hop1 not dense".into());
+            }
+            if m.hop2.len() != m.targets.len() * f1 * f2 {
+                return Err("hop2 not dense".into());
+            }
+            if m.hop2.iter().any(|&v| v as usize >= csr.num_nodes()) {
+                return Err("sampled id out of range".into());
+            }
+            // local/remote split is a partition of the unique sampled set.
+            for &v in &m.unique_remote {
+                if part.owner_of(v) == p {
+                    return Err("remote node is local".into());
+                }
+            }
+            for &v in &m.unique_local {
+                if part.owner_of(v) != p {
+                    return Err("local node is remote".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn inference_pipe_discipline() {
+    prop_check("pipe state machine", 200, |g| {
+        let mut pipe = InferencePipe::new();
+        let mut now = 0.0f64;
+        let mut in_flight: Option<f64> = None;
+        for _ in 0..g.usize(1, 50) {
+            now += g.f64(0.0, 2.0);
+            if let Some(p) = pipe.poll(now) {
+                let ready = in_flight.take().ok_or("poll returned ghost")?;
+                if p.ready_at != ready {
+                    return Err("wrong pending returned".into());
+                }
+                if ready > now {
+                    return Err("returned before ready".into());
+                }
+            }
+            if !pipe.busy() && g.bool() {
+                let ready_at = now + g.f64(0.0, 3.0);
+                pipe.submit(Pending {
+                    issued_mb: 0,
+                    issued_at: now,
+                    ready_at,
+                    step: rudder::agent::AgentStep {
+                        action: rudder::agent::Action::Skip,
+                        prediction: None,
+                        latency: ready_at - now,
+                        valid_response: true,
+                        raw_response: String::new(),
+                    },
+                });
+                in_flight = Some(ready_at);
+            }
+            if pipe.busy() != in_flight.is_some() {
+                return Err("busy flag out of sync".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_arbitrary_values() {
+    fn gen_json(g: &mut G, depth: usize) -> Json {
+        if depth == 0 || g.rng.chance(0.4) {
+            match g.usize(0, 3) {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+                _ => Json::Str(
+                    (0..g.usize(0, 12))
+                        .map(|_| *g.pick(&['a', '"', '\\', 'é', '\n', '5', ' ']))
+                        .collect(),
+                ),
+            }
+        } else if g.bool() {
+            Json::Arr((0..g.usize(0, 4)).map(|_| gen_json(g, depth - 1)).collect())
+        } else {
+            Json::Obj(
+                (0..g.usize(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+    prop_check("json roundtrip", 300, |g| {
+        let v = gen_json(g, 4);
+        for rendered in [v.to_string_compact(), v.to_string_pretty()] {
+            let back = Json::parse(&rendered)
+                .map_err(|e| format!("parse failed: {e} on {rendered}"))?;
+            if back != v {
+                return Err(format!("roundtrip mismatch: {v} vs {back}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parser_never_panics_on_garbage() {
+    prop_check("parser totality", 300, |g| {
+        let junk: String = (0..g.usize(0, 200))
+            .map(|_| *g.pick(&['{', '}', '"', ':', 'a', '\\', ',', '[', ']', ' ', '\n', '1']))
+            .collect();
+        let _ = parser::parse(&junk); // must not panic
+        Ok(())
+    });
+}
+
+#[test]
+fn scoring_policy_matches_reference_semantics() {
+    // Cross-check the Rust scoring policy against the python oracle's
+    // documented semantics on random access patterns.
+    prop_check("scoring policy", 200, |g| {
+        let n = g.usize(1, 64);
+        let mut scores: Vec<f32> = (0..n).map(|_| g.f64(0.0, 4.0) as f32).collect();
+        let mut accessed: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+        let live = vec![true; n];
+        let before = scores.clone();
+        let was_accessed = accessed.clone();
+        let stale = rudder::buffer::scoring::apply_round(&mut scores, &mut accessed, &live);
+        let mut expect_stale = 0;
+        for i in 0..n {
+            let want = if was_accessed[i] { before[i] + 1.0 } else { before[i] * 0.95 };
+            if (scores[i] - want).abs() > 1e-6 {
+                return Err(format!("slot {i}: {} want {want}", scores[i]));
+            }
+            if scores[i] < 0.95 {
+                expect_stale += 1;
+            }
+        }
+        if stale != expect_stale {
+            return Err(format!("stale {stale} want {expect_stale}"));
+        }
+        if accessed.iter().any(|&a| a) {
+            return Err("accessed flags not cleared".into());
+        }
+        Ok(())
+    });
+}
