@@ -12,7 +12,7 @@ use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, Table};
 use rudder::eval::{pass_at_1, Quality};
 use rudder::sim::{build_cluster, run_on, ControllerSpec, RunConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rudder::error::Result<()> {
     let dataset = std::env::args().nth(1).unwrap_or_else(|| "products".into());
     let cfg0 = RunConfig {
         dataset: dataset.clone(),

@@ -1,31 +1,37 @@
 //! End-to-end driver: REAL GraphSAGE training through the full stack.
 //!
-//! Proves all three layers compose: the Rust coordinator samples
-//! minibatches from a partitioned graph, Rudder's agent steers the
-//! persistent buffer, and every train step executes the AOT-compiled
-//! `sage_train_step` HLO (L2 JAX + L1 Pallas kernels) on the PJRT CPU
-//! client — Python never runs.  Logs the loss curve and eval accuracy.
+//! Proves all layers compose: the Rust coordinator samples minibatches
+//! from a partitioned graph, Rudder's agent steers the persistent buffer,
+//! and every train step executes the AOT `sage_train_step` entry through
+//! the runtime engine — the pure-Rust interpreter by default, or the
+//! PJRT-compiled HLO (L2 JAX + L1 Pallas kernels) with `--features pjrt`
+//! plus built artifacts (`python -m compile.aot`).  Logs the loss curve
+//! and eval accuracy.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_train
+//! cargo run --release --example e2e_train          # interpreter backend
+//! E2E_STEPS=40 cargo run --release --example e2e_train   # shorter run
 //! ```
 
 use std::sync::Arc;
 
 use rudder::eval::report::fmt_secs;
-use rudder::gnn::XlaRunner;
+use rudder::gnn::SageRunner;
 use rudder::runtime::Engine;
 use rudder::sim::{build_cluster, ControllerSpec, RunConfig};
 use rudder::sim::{run_on, Mode};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rudder::error::Result<()> {
     let Some(engine) = Engine::try_load_default() else {
-        anyhow::bail!("AOT artifacts missing — run `make artifacts` first");
+        rudder::bail!(
+            "requested artifacts are unusable — fix or remove ./artifacts (or \
+             $RUDDER_ARTIFACTS), or rebuild them with `python -m compile.aot`"
+        );
     };
     let engine = Arc::new(engine);
     let art = engine.manifest.config.clone();
     println!(
-        "PJRT platform: {}; artifact shapes: batch={} fanout=({},{}) D={} H={} C={}",
+        "runtime backend: {}; artifact shapes: batch={} fanout=({},{}) D={} H={} C={}",
         engine.platform(), art.batch, art.fanout1, art.fanout2, art.feat_dim,
         art.hidden, art.classes
     );
@@ -34,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     let steps_target = std::env::var("E2E_STEPS")
         .ok()
         .and_then(|s| s.parse::<usize>().ok())
-        .unwrap_or(200);
+        .unwrap_or(120);
     let cfg = RunConfig {
         dataset: "ogbn-arxiv".into(),
         scale: 0.5,
@@ -61,7 +67,7 @@ fn main() -> anyhow::Result<()> {
     // --- Phase 1: real XLA training loop with Rudder prefetching ---------
     // One trainer runs measured (real PJRT steps); we drive it manually so
     // the loss curve is logged step by step.
-    let mut runner = XlaRunner::new(engine.clone(), 7, 0.05);
+    let mut runner = SageRunner::new(engine.clone(), 7, 0.05);
     let sampler = rudder::sampler::Sampler::new(
         0, art.batch, art.fanout1, art.fanout2, 1234,
     );
@@ -116,7 +122,7 @@ fn main() -> anyhow::Result<()> {
     let first = first_losses.iter().sum::<f32>() / first_losses.len() as f32;
     let last = last_losses.iter().sum::<f32>() / last_losses.len() as f32;
     println!(
-        "\n{} real XLA steps in {} (compute {}), loss {:.4} -> {:.4} ({:.1}% drop)",
+        "\n{} real runtime steps in {} (compute {}), loss {:.4} -> {:.4} ({:.1}% drop)",
         steps,
         fmt_secs(t_start.elapsed().as_secs_f64()),
         fmt_secs(wall_compute),
@@ -124,7 +130,7 @@ fn main() -> anyhow::Result<()> {
         last,
         (1.0 - last / first) * 100.0
     );
-    anyhow::ensure!(last < first, "loss must decrease over the run");
+    rudder::ensure!(last < first, "loss must decrease over the run");
 
     // Eval accuracy on a held-out sample.
     let eval_order = sampler.epoch_order(&train0, 999);

@@ -7,7 +7,7 @@
 use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, Table};
 use rudder::sim::{build_cluster, run_on, ControllerSpec, RunConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rudder::error::Result<()> {
     let mut cfg = RunConfig {
         dataset: "products".into(),
         scale: 0.2,

@@ -11,7 +11,7 @@ use rudder::eval::report::{fmt_pct, fmt_secs, Table};
 use rudder::eval::Quality;
 use rudder::sim::{build_cluster, run_on, ControllerSpec, RunConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rudder::error::Result<()> {
     println!("pretraining classifiers on SEEN datasets (products traces)...");
     let offline = offline_training_set(Quality::Quick);
     println!("  {} labelled examples (positive rate {:.2})\n", offline.len(),

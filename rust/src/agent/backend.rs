@@ -200,7 +200,7 @@ pub struct ExternalCommandBackend {
 impl LlmBackend for ExternalCommandBackend {
     fn complete(&mut self, prompt_text: &str) -> BackendReply {
         let start = std::time::Instant::now();
-        let text = (|| -> anyhow::Result<String> {
+        let text = (|| -> crate::error::Result<String> {
             let mut child = Command::new(&self.command)
                 .args(&self.args)
                 .stdin(Stdio::piped())
@@ -210,7 +210,7 @@ impl LlmBackend for ExternalCommandBackend {
             child
                 .stdin
                 .as_mut()
-                .ok_or_else(|| anyhow::anyhow!("no stdin"))?
+                .ok_or_else(|| crate::err!("no stdin"))?
                 .write_all(prompt_text.as_bytes())?;
             let out = child.wait_with_output()?;
             Ok(String::from_utf8_lossy(&out.stdout).into_owned())

@@ -47,12 +47,12 @@ pub enum Policy {
 }
 
 impl Policy {
-    pub fn parse(s: &str) -> anyhow::Result<Policy> {
+    pub fn parse(s: &str) -> crate::error::Result<Policy> {
         match s {
             "freq_decay" | "rudder" => Ok(Policy::FreqDecay),
             "lfu" => Ok(Policy::Lfu),
             "lru" => Ok(Policy::Lru),
-            _ => anyhow::bail!("unknown scoring policy '{s}'"),
+            _ => crate::bail!("unknown scoring policy '{s}'"),
         }
     }
 }

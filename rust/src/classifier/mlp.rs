@@ -4,15 +4,17 @@
 //! softmax — mirroring `model.py::MlpParams`):
 //!
 //! * [`RustMlp`] — native backprop, used for offline training and sweeps.
-//! * [`XlaMlp`] — runs inference and finetune steps through the
-//!   `mlp_infer` / `mlp_train_step` AOT artifacts on PJRT, proving the
-//!   classifier path composes with the XLA runtime (weights live host-side
+//! * [`RuntimeMlp`] — runs inference and finetune steps through the
+//!   `mlp_infer` / `mlp_train_step` AOT entries on the runtime engine
+//!   (interpreter by default, PJRT with `--features pjrt`), proving the
+//!   classifier path composes with the runtime (weights live host-side
 //!   between calls, exactly like the GNN runner).
 
 use std::sync::Arc;
 
 use super::{DecisionModel, FeatureVec, F};
-use crate::runtime::{literal as lit, Engine};
+use crate::runtime::tensor::{self as lit, Tensor};
+use crate::runtime::Engine;
 use crate::util::rng::Pcg32;
 
 pub const HIDDEN: usize = 32;
@@ -163,28 +165,28 @@ impl DecisionModel for RustMlp {
 
 // ---------------------------------------------------------------------------
 
-/// XLA-backed MLP: inference via the `mlp_infer` artifact, finetuning via
+/// Engine-backed MLP: inference via the `mlp_infer` entry, finetuning via
 /// `mlp_train_step` (padding/truncating the batch to the artifact's
 /// `mlp_batch`).
-pub struct XlaMlp {
+pub struct RuntimeMlp {
     pub engine: Arc<Engine>,
     pub weights: MlpWeights,
 }
 
-impl XlaMlp {
-    pub fn new(engine: Arc<Engine>, seed: u64) -> anyhow::Result<XlaMlp> {
+impl RuntimeMlp {
+    pub fn new(engine: Arc<Engine>, seed: u64) -> crate::error::Result<RuntimeMlp> {
         let c = &engine.manifest.config;
-        anyhow::ensure!(
+        crate::ensure!(
             c.mlp_feats == F && c.mlp_hidden == HIDDEN,
             "artifact MLP shape ({}, {}) != classifier ({F}, {HIDDEN}); \
              rebuild artifacts",
             c.mlp_feats,
             c.mlp_hidden
         );
-        Ok(XlaMlp { engine, weights: MlpWeights::init(seed) })
+        Ok(RuntimeMlp { engine, weights: MlpWeights::init(seed) })
     }
 
-    fn param_literals(&self) -> anyhow::Result<Vec<xla::Literal>> {
+    fn param_tensors(&self) -> crate::error::Result<Vec<Tensor>> {
         Ok(vec![
             lit::lit_f32(&[F, HIDDEN], &self.weights.w1)?,
             lit::lit_f32(&[HIDDEN], &self.weights.b1)?,
@@ -193,25 +195,36 @@ impl XlaMlp {
         ])
     }
 
-    /// Replace-probability through the PJRT path.
-    pub fn predict_xla(&self, x: &FeatureVec) -> anyhow::Result<f64> {
-        let mut inputs = self.param_literals()?;
+    /// Replace-probability through the runtime path.
+    pub fn predict_rt(&self, x: &FeatureVec) -> crate::error::Result<f64> {
+        let mut inputs = self.param_tensors()?;
         inputs.push(lit::lit_f32(&[1, F], x)?);
         let out = self.engine.execute("mlp_infer", &inputs)?;
         Ok(lit::to_f32(&out[0])?[0] as f64)
     }
 
-    /// One finetune step through the PJRT path; returns the loss.
-    pub fn finetune_xla(&mut self, xs: &[FeatureVec], ys: &[bool], lr: f32) -> anyhow::Result<f32> {
+    /// One finetune step through the runtime path; returns the loss.
+    pub fn finetune_rt(
+        &mut self,
+        xs: &[FeatureVec],
+        ys: &[bool],
+        lr: f32,
+    ) -> crate::error::Result<f32> {
+        crate::ensure!(
+            !xs.is_empty() && xs.len() == ys.len(),
+            "finetune_rt: need matching non-empty features/labels ({} vs {})",
+            xs.len(),
+            ys.len()
+        );
         let mb = self.engine.manifest.config.mlp_batch;
         let mut feats = vec![0.0f32; mb * F];
         let mut labels = vec![0i32; mb];
         for i in 0..mb {
-            let src = i % xs.len().max(1);
+            let src = i % xs.len();
             feats[i * F..(i + 1) * F].copy_from_slice(&xs[src]);
             labels[i] = ys[src] as i32;
         }
-        let mut inputs = self.param_literals()?;
+        let mut inputs = self.param_tensors()?;
         inputs.push(lit::lit_f32(&[mb, F], &feats)?);
         inputs.push(lit::lit_i32(&[mb], &labels)?);
         inputs.push(lit::lit_scalar_f32(lr)?);

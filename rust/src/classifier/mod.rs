@@ -68,7 +68,7 @@ pub const ALL_KINDS: &[Kind] =
     &[Kind::Mlp, Kind::LogReg, Kind::RandomForest, Kind::Svm, Kind::Xgb, Kind::TabNet];
 
 impl Kind {
-    pub fn parse(s: &str) -> anyhow::Result<Kind> {
+    pub fn parse(s: &str) -> crate::error::Result<Kind> {
         match s.to_ascii_lowercase().as_str() {
             "mlp" => Ok(Kind::Mlp),
             "lr" | "logreg" => Ok(Kind::LogReg),
@@ -76,7 +76,7 @@ impl Kind {
             "svm" => Ok(Kind::Svm),
             "xgb" | "xgboost" => Ok(Kind::Xgb),
             "tabnet" => Ok(Kind::TabNet),
-            _ => anyhow::bail!("unknown classifier '{s}'"),
+            _ => crate::bail!("unknown classifier '{s}'"),
         }
     }
 

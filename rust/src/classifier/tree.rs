@@ -126,7 +126,7 @@ fn build(
             let ml = sl / nl as f64;
             let mr = sr / nr as f64;
             let gain = nl as f64 * ml * ml + nr as f64 * mr * mr;
-            if best.map_or(true, |(_, _, g)| gain > g) {
+            if match best { Some((_, _, g)) => gain > g, None => true } {
                 best = Some((f, thr, gain));
             }
         }

@@ -13,7 +13,7 @@ pub struct Args {
 }
 
 impl Args {
-    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+    pub fn parse(argv: &[String]) -> crate::error::Result<Args> {
         let mut args = Args::default();
         let mut iter = argv.iter().peekable();
         if let Some(sub) = iter.next() {
@@ -21,13 +21,13 @@ impl Args {
         }
         while let Some(a) = iter.next() {
             if let Some(key) = a.strip_prefix("--") {
-                anyhow::ensure!(!key.is_empty(), "empty option name");
+                crate::ensure!(!key.is_empty(), "empty option name");
                 // --key=value or --key value or --flag
                 if let Some((k, v)) = key.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
                 } else if iter
                     .peek()
-                    .map_or(false, |n| !n.starts_with("--"))
+                    .is_some_and(|n| !n.starts_with("--"))
                 {
                     args.options
                         .insert(key.to_string(), iter.next().unwrap().clone());
@@ -49,13 +49,13 @@ impl Args {
         self.opt(key).unwrap_or(default).to_string()
     }
 
-    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> crate::error::Result<Option<T>> {
         match self.opt(key) {
             None => Ok(None),
             Some(v) => v
                 .parse::<T>()
                 .map(Some)
-                .map_err(|_| anyhow::anyhow!("cannot parse --{key} value '{v}'")),
+                .map_err(|_| crate::err!("cannot parse --{key} value '{v}'")),
         }
     }
 
@@ -74,7 +74,7 @@ COMMANDS:
                --dataset <name> --trainers <n> --buffer <pct 0-1>
                --controller <none|fixed|llm:MODEL|clf:KIND[:finetune=N]|massivegnn[:r]>
                --mode <async|sync> --epochs <n> --batch <n> --scale <f>
-               --seed <n> --config <file.toml> --xla (use AOT artifacts)
+               --seed <n> --config <file.toml>
   experiment   regenerate a paper table/figure: rudder experiment <id> [--full]
                ids: fig01 fig03 fig06 fig12 fig13 fig14 fig15 fig16 fig17
                     table2 fig18 table4 fig20 fig21 | all

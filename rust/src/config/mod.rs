@@ -25,7 +25,7 @@ use crate::util::json::Json;
 use crate::util::tomlite;
 
 /// Apply a parsed TOML document over a base config.
-pub fn apply(doc: &Json, mut cfg: RunConfig) -> anyhow::Result<RunConfig> {
+pub fn apply(doc: &Json, mut cfg: RunConfig) -> crate::error::Result<RunConfig> {
     let gets = |k: &str| doc.get(k).and_then(Json::as_str);
     let getf = |k: &str| doc.get(k).and_then(Json::as_f64);
     let getu = |k: &str| doc.get(k).and_then(Json::as_usize);
@@ -39,7 +39,7 @@ pub fn apply(doc: &Json, mut cfg: RunConfig) -> anyhow::Result<RunConfig> {
         cfg.seed = v as u64;
     }
     if let Some(v) = getu("trainers") {
-        anyhow::ensure!(v >= 1, "trainers must be >= 1");
+        crate::ensure!(v >= 1, "trainers must be >= 1");
         cfg.num_trainers = v;
     }
     if let Some(v) = getu("batch_size") {
@@ -52,7 +52,7 @@ pub fn apply(doc: &Json, mut cfg: RunConfig) -> anyhow::Result<RunConfig> {
         cfg.fanout2 = v;
     }
     if let Some(v) = getf("buffer_pct") {
-        anyhow::ensure!((0.0..=1.0).contains(&v), "buffer_pct in [0,1]");
+        crate::ensure!((0.0..=1.0).contains(&v), "buffer_pct in [0,1]");
         cfg.buffer_pct = v;
     }
     if let Some(v) = getu("epochs") {
@@ -88,7 +88,7 @@ pub fn apply(doc: &Json, mut cfg: RunConfig) -> anyhow::Result<RunConfig> {
 }
 
 /// Load a TOML config file over the defaults.
-pub fn load(path: &Path) -> anyhow::Result<RunConfig> {
+pub fn load(path: &Path) -> crate::error::Result<RunConfig> {
     let doc = tomlite::parse_file(path)?;
     apply(&doc, RunConfig::default())
 }

@@ -1,0 +1,146 @@
+//! Crate-local error type: the zero-dependency replacement for `anyhow` in
+//! every fallible path (runtime, config, CLI, sim construction).
+//!
+//! [`RudderError`] is a message-carrying error — the crate's failures are
+//! operator-facing ("unknown dataset", "manifest missing 'config'"), not
+//! machine-matched, so a single string-backed type with `From` conversions
+//! for the in-tree parser errors keeps every `?` working.  The [`err!`],
+//! [`bail!`] and [`ensure!`] macros mirror the `anyhow` idioms call sites
+//! were written against.
+
+use std::fmt;
+
+/// The crate-wide error: a human-readable message, optionally prefixed by
+/// the layers it bubbled through.
+pub struct RudderError {
+    msg: String,
+}
+
+impl RudderError {
+    pub fn new(msg: impl Into<String>) -> RudderError {
+        RudderError { msg: msg.into() }
+    }
+
+    /// Prefix with context while propagating (`e.context("loading config")`).
+    pub fn context(self, what: impl fmt::Display) -> RudderError {
+        RudderError { msg: format!("{what}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for RudderError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for RudderError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for RudderError {}
+
+pub type Result<T> = std::result::Result<T, RudderError>;
+
+impl From<std::io::Error> for RudderError {
+    fn from(e: std::io::Error) -> RudderError {
+        RudderError::new(format!("io error: {e}"))
+    }
+}
+
+impl From<crate::util::json::JsonError> for RudderError {
+    fn from(e: crate::util::json::JsonError) -> RudderError {
+        RudderError::new(e.to_string())
+    }
+}
+
+impl From<crate::util::tomlite::TomlError> for RudderError {
+    fn from(e: crate::util::tomlite::TomlError) -> RudderError {
+        RudderError::new(e.to_string())
+    }
+}
+
+impl From<String> for RudderError {
+    fn from(msg: String) -> RudderError {
+        RudderError::new(msg)
+    }
+}
+
+impl From<&str> for RudderError {
+    fn from(msg: &str) -> RudderError {
+        RudderError::new(msg)
+    }
+}
+
+/// Build a [`RudderError`] from a format string: `err!("bad value {v}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::RudderError::new(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`RudderError`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_compose() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+        let e2: RudderError = crate::err!("count {}", 3);
+        assert_eq!(format!("{e2}"), "count 3");
+        assert_eq!(format!("{e2:?}"), "count 3");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f() -> Result<()> {
+            bail!("nope");
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn io_and_parser_conversions() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent-rudder-xyz")?)
+        }
+        assert!(read().unwrap_err().to_string().contains("io error"));
+        fn parse() -> Result<crate::util::json::Json> {
+            Ok(crate::util::json::Json::parse("{bad")?)
+        }
+        assert!(parse().unwrap_err().to_string().contains("json error"));
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = RudderError::new("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}

@@ -761,7 +761,7 @@ pub const EXPERIMENTS: &[&str] = &[
     "abl_policy", "abl_cot", "abl_partition",
 ];
 
-pub fn run_experiment_id(id: &str, q: Quality) -> anyhow::Result<Vec<Table>> {
+pub fn run_experiment_id(id: &str, q: Quality) -> crate::error::Result<Vec<Table>> {
     Ok(match id {
         "fig01" | "fig1" => fig01(q),
         "fig03" | "fig3" => fig03(q),
@@ -780,7 +780,7 @@ pub fn run_experiment_id(id: &str, q: Quality) -> anyhow::Result<Vec<Table>> {
         "abl_policy" => abl_policy(q),
         "abl_cot" => abl_cot(q),
         "abl_partition" => abl_partition(q),
-        _ => anyhow::bail!(
+        _ => crate::bail!(
             "unknown experiment '{id}' (available: {})",
             EXPERIMENTS.join(", ")
         ),

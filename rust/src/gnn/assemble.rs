@@ -1,25 +1,23 @@
-//! Minibatch → literal packing for the `sage_*` artifacts.
+//! Minibatch → tensor packing for the `sage_*` artifacts.
 //!
 //! The sampler emits padded dense node-id tensors; this module synthesizes
 //! the corresponding feature tensors ([`crate::graph::features`]) and packs
-//! them (plus labels and the padding mask) into XLA literals matching the
-//! artifact ABI.  Short minibatches zero-pad the batch axis and zero the
-//! mask so the loss ignores padding rows (verified against model.py by
+//! them (plus labels and the padding mask) into runtime tensors matching
+//! the artifact ABI.  Short minibatches zero-pad the batch axis and zero
+//! the mask so the loss ignores padding rows (verified against model.py by
 //! `python/tests/test_model.py::test_mask_excludes_padding`).
-
-use xla::Literal;
 
 use super::SageShape;
 use crate::graph::features::fill_features;
-use crate::runtime::literal as lit;
+use crate::runtime::tensor::{self as lit, Tensor};
 use crate::sampler::Minibatch;
 
 pub struct PackedBatch {
-    pub x_self: Literal,
-    pub x_h1: Literal,
-    pub x_h2: Literal,
-    pub labels: Literal,
-    pub mask: Literal,
+    pub x_self: Tensor,
+    pub x_h1: Tensor,
+    pub x_h2: Tensor,
+    pub labels: Tensor,
+    pub mask: Tensor,
 }
 
 /// Pack one sampled minibatch.  `labels` is the dataset's full label vector
@@ -30,18 +28,18 @@ pub fn pack_minibatch(
     mb: &Minibatch,
     feature_seed: u64,
     labels: &[u16],
-) -> anyhow::Result<PackedBatch> {
+) -> crate::error::Result<PackedBatch> {
     let (b, k1, k2, d) = (shape.batch, shape.fanout1, shape.fanout2, shape.feat_dim);
     let rows = mb.targets.len();
-    anyhow::ensure!(rows <= b, "minibatch {rows} rows > artifact batch {b}");
-    anyhow::ensure!(
+    crate::ensure!(rows <= b, "minibatch {rows} rows > artifact batch {b}");
+    crate::ensure!(
         mb.fanout1 == k1 && mb.fanout2 == k2,
         "sampler fanout ({}, {}) != artifact fanout ({k1}, {k2})",
         mb.fanout1,
         mb.fanout2
     );
-    anyhow::ensure!(mb.hop1.len() == rows * k1, "hop1 len mismatch");
-    anyhow::ensure!(mb.hop2.len() == rows * k1 * k2, "hop2 len mismatch");
+    crate::ensure!(mb.hop1.len() == rows * k1, "hop1 len mismatch");
+    crate::ensure!(mb.hop2.len() == rows * k1 * k2, "hop2 len mismatch");
 
     let mut x_self = vec![0.0f32; b * d];
     for (i, &v) in mb.targets.iter().enumerate() {
@@ -108,7 +106,7 @@ mod tests {
         assert_eq!(m, vec![1.0, 1.0, 0.0, 0.0]);
         let xs = lit::to_f32(&p.x_self).unwrap();
         assert!(xs[2 * 5..].iter().all(|&x| x == 0.0), "padding rows must be zero");
-        let l = p.labels.to_vec::<i32>().unwrap();
+        let l = lit::to_i32(&p.labels).unwrap();
         assert_eq!(l, vec![2, 2, 0, 0]);
     }
 
@@ -116,7 +114,7 @@ mod tests {
     fn labels_mod_classes() {
         let labels = vec![7u16; 64]; // 7 mod 3 = 1
         let p = pack_minibatch(&tiny_shape(), &mb(1), 7, &labels).unwrap();
-        assert_eq!(p.labels.to_vec::<i32>().unwrap()[0], 1);
+        assert_eq!(lit::to_i32(&p.labels).unwrap()[0], 1);
     }
 
     #[test]

@@ -2,21 +2,23 @@
 //!
 //! Two interchangeable runners:
 //!
-//! * [`XlaRunner`] — the real thing: packs the sampled minibatch into
-//!   literals and executes the AOT `sage_train_step` artifact (L2+L1
-//!   lowered together) on the PJRT CPU client.  Used by the e2e example,
-//!   calibration, and the runtime integration tests.
+//! * [`SageRunner`] — the real thing: packs the sampled minibatch into
+//!   runtime tensors and executes the AOT `sage_train_step` entry through
+//!   the [`Engine`]'s backend (pure-Rust interpreter by default, PJRT with
+//!   `--features pjrt`).  Used by the e2e example, calibration, and the
+//!   runtime integration tests.
 //! * [`AnalyticModel`] — a roofline-style cost model (flops / effective
 //!   device flops + base overhead) for large parameter sweeps where only
 //!   *relative* T_DDP matters.  Its constants are set from `rudder
-//!   calibrate` (which measures the XLA runner) or from the A100-like
+//!   calibrate` (which measures the real runner) or from the A100-like
 //!   defaults in [`ComputeParams`].
 
 pub mod assemble;
 
 use std::sync::Arc;
 
-use crate::runtime::{literal as lit, Engine};
+use crate::runtime::tensor as lit;
+use crate::runtime::Engine;
 use crate::sampler::Minibatch;
 use crate::util::rng::Pcg32;
 
@@ -99,7 +101,7 @@ impl AnalyticModel {
     }
 }
 
-/// GraphSAGE parameter state held host-side between XLA steps.
+/// GraphSAGE parameter state held host-side between runtime steps.
 #[derive(Debug, Clone)]
 pub struct SageState {
     pub w1_self: Vec<f32>,
@@ -132,16 +134,16 @@ impl SageState {
     }
 }
 
-/// Executes real train steps through the PJRT engine.
-pub struct XlaRunner {
+/// Executes real train steps through the runtime engine.
+pub struct SageRunner {
     pub engine: Arc<Engine>,
     pub state: SageState,
     pub lr: f32,
     pub losses: Vec<f32>,
 }
 
-impl XlaRunner {
-    pub fn new(engine: Arc<Engine>, seed: u64, lr: f32) -> XlaRunner {
+impl SageRunner {
+    pub fn new(engine: Arc<Engine>, seed: u64, lr: f32) -> SageRunner {
         let c = &engine.manifest.config;
         let shape = SageShape {
             batch: c.batch,
@@ -152,7 +154,7 @@ impl XlaRunner {
             classes: c.classes,
         };
         let state = SageState::init(shape, seed);
-        XlaRunner { engine, state, lr, losses: Vec::new() }
+        SageRunner { engine, state, lr, losses: Vec::new() }
     }
 
     /// Run one train step on a sampled minibatch.  Returns `(loss, seconds)`.
@@ -161,7 +163,7 @@ impl XlaRunner {
         mb: &Minibatch,
         feature_seed: u64,
         labels: &[u16],
-    ) -> anyhow::Result<(f32, f64)> {
+    ) -> crate::error::Result<(f32, f64)> {
         let batch = assemble::pack_minibatch(&self.state.shape, mb, feature_seed, labels)?;
         let s = &self.state;
         let shp = s.shape;
@@ -182,7 +184,7 @@ impl XlaRunner {
         let t0 = std::time::Instant::now();
         let out = self.engine.execute("sage_train_step", &inputs)?;
         let dt = t0.elapsed().as_secs_f64();
-        anyhow::ensure!(out.len() == 7, "sage_train_step: want 7 outputs");
+        crate::ensure!(out.len() == 7, "sage_train_step: want 7 outputs");
         self.state.w1_self = lit::to_f32(&out[0])?;
         self.state.w1_neigh = lit::to_f32(&out[1])?;
         self.state.b1 = lit::to_f32(&out[2])?;
@@ -201,7 +203,7 @@ impl XlaRunner {
         mb: &Minibatch,
         feature_seed: u64,
         labels: &[u16],
-    ) -> anyhow::Result<f64> {
+    ) -> crate::error::Result<f64> {
         let batch = assemble::pack_minibatch(&self.state.shape, mb, feature_seed, labels)?;
         let s = &self.state;
         let shp = s.shape;

@@ -139,9 +139,9 @@ impl Dataset {
         }
     }
 
-    pub fn build_by_name(name: &str, scale: f64, seed: u64) -> anyhow::Result<Dataset> {
+    pub fn build_by_name(name: &str, scale: f64, seed: u64) -> crate::error::Result<Dataset> {
         let spec = by_name(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' (try: {})", names()))?;
+            .ok_or_else(|| crate::err!("unknown dataset '{name}' (try: {})", names()))?;
         Ok(Self::build(spec, scale, seed))
     }
 }

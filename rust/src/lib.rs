@@ -16,14 +16,21 @@
 //! * **Layer 1** — `python/compile/kernels/`: Pallas kernels (fused SAGE
 //!   aggregate+project, tiled matmul, buffer score update).
 //!
-//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) so Python never runs on the request path.
+//! The [`runtime`] module executes the AOT artifact entries through a
+//! pluggable [`runtime::RuntimeBackend`]: a zero-dependency pure-Rust
+//! interpreter by default, or the PJRT C API (`xla` crate) behind the
+//! `pjrt` cargo feature — either way Python never runs on the request path.
 //!
 //! Start with [`sim::run::run_experiment`] or the `examples/` directory.
+
+// Numeric-kernel style: index loops over multiple parallel buffers are the
+// clearest form for the math here.
+#![allow(clippy::needless_range_loop)]
 
 pub mod agent;
 pub mod cli;
 pub mod buffer;
+pub mod error;
 pub mod classifier;
 pub mod config;
 pub mod eval;

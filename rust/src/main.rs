@@ -7,7 +7,7 @@ use std::sync::Arc;
 use rudder::cli::{Args, USAGE};
 use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, Table};
 use rudder::eval::{harness, pass_at_1, Quality};
-use rudder::gnn::XlaRunner;
+use rudder::gnn::SageRunner;
 use rudder::graph::datasets;
 use rudder::partition::{self, Method};
 use rudder::runtime::Engine;
@@ -51,7 +51,7 @@ fn main() {
     }
 }
 
-fn config_from_args(args: &Args) -> anyhow::Result<RunConfig> {
+fn config_from_args(args: &Args) -> rudder::error::Result<RunConfig> {
     let mut cfg = RunConfig::default();
     if let Some(path) = args.opt("config") {
         cfg = rudder::config::load(std::path::Path::new(path))?;
@@ -90,7 +90,7 @@ fn config_from_args(args: &Args) -> anyhow::Result<RunConfig> {
     Ok(cfg)
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
+fn cmd_train(args: &Args) -> rudder::error::Result<()> {
     let cfg = config_from_args(args)?;
     println!(
         "rudder train: {} scale={} trainers={} buffer={:.0}% epochs={} controller={} mode={:?}",
@@ -149,7 +149,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+fn cmd_experiment(args: &Args) -> rudder::error::Result<()> {
     let id = args
         .positional
         .first()
@@ -179,7 +179,7 @@ fn sanitize(s: &str) -> String {
         .collect()
 }
 
-fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+fn cmd_trace(args: &Args) -> rudder::error::Result<()> {
     let cfg = config_from_args(args)?;
     let (ds, part) = build_cluster(&cfg)?;
     let set = trace_only(&ds, &part, &cfg);
@@ -210,9 +210,12 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_calibrate(_args: &Args) -> anyhow::Result<()> {
+fn cmd_calibrate(_args: &Args) -> rudder::error::Result<()> {
     let Some(engine) = Engine::try_load_default() else {
-        anyhow::bail!("artifacts not found — run `make artifacts` first");
+        rudder::bail!(
+            "requested artifacts are unusable — fix or remove ./artifacts (or \
+             $RUDDER_ARTIFACTS), or rebuild them with `python -m compile.aot`"
+        );
     };
     let engine = Arc::new(engine);
     println!("platform: {}", engine.platform());
@@ -223,7 +226,7 @@ fn cmd_calibrate(_args: &Args) -> anyhow::Result<()> {
     let sampler = Sampler::new(0, c.batch, c.fanout1, c.fanout2, 1);
     let train = part.train_nodes_of(0, &ds.train_nodes);
     let order = sampler.epoch_order(&train, 0);
-    let mut runner = XlaRunner::new(engine.clone(), 7, 0.05);
+    let mut runner = SageRunner::new(engine.clone(), 7, 0.05);
     let mut times = Vec::new();
     for mb in 0..5 {
         let b = sampler.sample(&ds.csr, &part, &order, 0, mb % 2);
@@ -249,7 +252,7 @@ fn cmd_calibrate(_args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_datasets() -> anyhow::Result<()> {
+fn cmd_datasets() -> rudder::error::Result<()> {
     let mut t = Table::new(
         "datasets (Table 1a stand-ins)",
         &["name", "paper_size", "standin_nodes", "standin_edges", "feat_dim", "classes", "unseen"],
@@ -269,14 +272,14 @@ fn cmd_datasets() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_models() -> anyhow::Result<()> {
+fn cmd_models() -> rudder::error::Result<()> {
     for table in harness::fig06(Quality::Quick) {
         println!("{}", table.render());
     }
     Ok(())
 }
 
-fn cmd_partition_stats(args: &Args) -> anyhow::Result<()> {
+fn cmd_partition_stats(args: &Args) -> rudder::error::Result<()> {
     let cfg = config_from_args(args)?;
     let method = args
         .opt("method")

@@ -57,7 +57,7 @@ fn coarsen(g: &WGraph, rng: &mut Pcg32) -> (WGraph, Vec<u32>) {
         let mut best: Option<(u32, u32)> = None;
         for &(u, w) in &g.adj[v as usize] {
             if u != v && matched[u as usize] == u32::MAX {
-                if best.map_or(true, |(_, bw)| w > bw) {
+                if match best { Some((_, bw)) => w > bw, None => true } {
                     best = Some((u, w));
                 }
             }

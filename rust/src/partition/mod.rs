@@ -135,12 +135,12 @@ pub enum Method {
 }
 
 impl Method {
-    pub fn parse(s: &str) -> anyhow::Result<Method> {
+    pub fn parse(s: &str) -> crate::error::Result<Method> {
         match s {
             "metis" | "metis_like" => Ok(Method::MetisLike),
             "ldg" | "streaming" => Ok(Method::Ldg),
             "random" | "hash" => Ok(Method::Random),
-            _ => anyhow::bail!("unknown partition method '{s}'"),
+            _ => crate::bail!("unknown partition method '{s}'"),
         }
     }
 }

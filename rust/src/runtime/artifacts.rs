@@ -5,9 +5,14 @@
 //! positional input tensor specs (name/shape/dtype) and output names.  The
 //! engine validates every execute call against these specs — shape bugs
 //! surface as errors at the call site instead of garbage numerics.
+//!
+//! When no artifacts directory exists, [`Manifest::builtin`] reproduces the
+//! same schema from `aot.py`'s `DEFAULTS` in code, so the interpreter
+//! backend (which needs no HLO files) runs out of the box.
 
 use std::path::{Path, PathBuf};
 
+use crate::error::Result;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -17,11 +22,11 @@ pub enum Dtype {
 }
 
 impl Dtype {
-    pub fn parse(s: &str) -> anyhow::Result<Dtype> {
+    pub fn parse(s: &str) -> Result<Dtype> {
         match s {
             "float32" => Ok(Dtype::F32),
             "int32" => Ok(Dtype::I32),
-            _ => anyhow::bail!("unsupported dtype '{s}'"),
+            _ => Err(crate::err!("unsupported dtype '{s}'")),
         }
     }
 
@@ -66,6 +71,24 @@ pub struct ArtifactConfig {
     pub score_block: usize,
 }
 
+impl Default for ArtifactConfig {
+    /// `aot.py::DEFAULTS` — the canonical artifact shapes.
+    fn default() -> ArtifactConfig {
+        ArtifactConfig {
+            batch: 128,
+            fanout1: 10,
+            fanout2: 25,
+            feat_dim: 100,
+            hidden: 128,
+            classes: 32,
+            mlp_feats: 12,
+            mlp_hidden: 32,
+            mlp_batch: 64,
+            score_block: 4096,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub dir: PathBuf,
@@ -73,19 +96,27 @@ pub struct Manifest {
     pub entries: Vec<EntrySpec>,
 }
 
+fn spec(name: &str, shape: &[usize], dtype: Dtype) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype }
+}
+
 impl Manifest {
-    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+    pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let src = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let src = std::fs::read_to_string(&path).map_err(|e| {
+            crate::err!(
+                "reading {}: {e} (build artifacts with `python -m compile.aot`)",
+                path.display()
+            )
+        })?;
         let root = Json::parse(&src)?;
         let cfg = root
             .get("config")
-            .ok_or_else(|| anyhow::anyhow!("manifest missing 'config'"))?;
-        let get = |k: &str| -> anyhow::Result<usize> {
+            .ok_or_else(|| crate::err!("manifest missing 'config'"))?;
+        let get = |k: &str| -> Result<usize> {
             cfg.get(k)
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow::anyhow!("manifest config missing '{k}'"))
+                .ok_or_else(|| crate::err!("manifest config missing '{k}'"))
         };
         let config = ArtifactConfig {
             batch: get("batch")?,
@@ -103,17 +134,17 @@ impl Manifest {
         let entry_map = root
             .get("entries")
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow::anyhow!("manifest missing 'entries'"))?;
+            .ok_or_else(|| crate::err!("manifest missing 'entries'"))?;
         for (name, e) in entry_map {
             let file = e
                 .get("file")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow::anyhow!("entry '{name}' missing file"))?;
+                .ok_or_else(|| crate::err!("entry '{name}' missing file"))?;
             let mut inputs = Vec::new();
             for inp in e
                 .get("inputs")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow::anyhow!("entry '{name}' missing inputs"))?
+                .ok_or_else(|| crate::err!("entry '{name}' missing inputs"))?
             {
                 let iname = inp.get("name").and_then(Json::as_str).unwrap_or("?");
                 let dtype = Dtype::parse(
@@ -144,6 +175,83 @@ impl Manifest {
             });
         }
         Ok(Manifest { dir: dir.to_path_buf(), config, entries })
+    }
+
+    /// Reproduce `aot.py::build_entries` in code: the same entry names,
+    /// positional input specs, and output names, for any shape config.
+    /// Backends that do not read HLO files (the interpreter) run from this
+    /// alone; `file` points into `dir` for backends that do.
+    pub fn builtin(dir: &Path, config: ArtifactConfig) -> Manifest {
+        let c = &config;
+        let (b, k1, k2) = (c.batch, c.fanout1, c.fanout2);
+        let (d, h, cls) = (c.feat_dim, c.hidden, c.classes);
+        let (f, hm, mb, sb) = (c.mlp_feats, c.mlp_hidden, c.mlp_batch, c.score_block);
+        let sage_params = vec![
+            spec("w1_self", &[d, h], Dtype::F32),
+            spec("w1_neigh", &[d, h], Dtype::F32),
+            spec("b1", &[h], Dtype::F32),
+            spec("w2_self", &[h, cls], Dtype::F32),
+            spec("w2_neigh", &[h, cls], Dtype::F32),
+            spec("b2", &[cls], Dtype::F32),
+        ];
+        let sage_batch = vec![
+            spec("x_self", &[b, d], Dtype::F32),
+            spec("x_h1", &[b, k1, d], Dtype::F32),
+            spec("x_h2", &[b, k1, k2, d], Dtype::F32),
+        ];
+        let mlp_params = vec![
+            spec("w1", &[f, hm], Dtype::F32),
+            spec("b1", &[hm], Dtype::F32),
+            spec("w2", &[hm, 2], Dtype::F32),
+            spec("b2", &[2], Dtype::F32),
+        ];
+        let entry = |name: &str, inputs: Vec<TensorSpec>, outputs: &[&str]| EntrySpec {
+            name: name.to_string(),
+            file: dir.join(format!("{name}.hlo.txt")),
+            inputs,
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+        };
+        let mut train_inputs = sage_params.clone();
+        train_inputs.extend(sage_batch.clone());
+        train_inputs.push(spec("labels", &[b], Dtype::I32));
+        train_inputs.push(spec("mask", &[b], Dtype::F32));
+        train_inputs.push(spec("lr", &[], Dtype::F32));
+        let mut fwd_inputs = sage_params;
+        fwd_inputs.extend(sage_batch);
+        let mut infer_inputs = mlp_params.clone();
+        infer_inputs.push(spec("feats", &[1, f], Dtype::F32));
+        let mut mlp_train_inputs = mlp_params;
+        mlp_train_inputs.push(spec("feats", &[mb, f], Dtype::F32));
+        mlp_train_inputs.push(spec("labels", &[mb], Dtype::I32));
+        mlp_train_inputs.push(spec("lr", &[], Dtype::F32));
+        const SAGE_TRAIN_OUTPUTS: &[&str] = &[
+            "new_w1_self",
+            "new_w1_neigh",
+            "new_b1",
+            "new_w2_self",
+            "new_w2_neigh",
+            "new_b2",
+            "loss",
+        ];
+        let entries = vec![
+            entry("sage_train_step", train_inputs, SAGE_TRAIN_OUTPUTS),
+            entry("sage_fwd", fwd_inputs, &["logits"]),
+            entry("mlp_infer", infer_inputs, &["replace_prob"]),
+            entry(
+                "mlp_train_step",
+                mlp_train_inputs,
+                &["new_w1", "new_b1", "new_w2", "new_b2", "loss"],
+            ),
+            entry(
+                "score_update",
+                vec![
+                    spec("scores", &[sb], Dtype::F32),
+                    spec("accessed", &[sb], Dtype::F32),
+                ],
+                &["new_scores", "stale_mask"],
+            ),
+        ];
+        Manifest { dir: dir.to_path_buf(), config, entries }
     }
 
     pub fn entry(&self, name: &str) -> Option<&EntrySpec> {
@@ -208,7 +316,7 @@ mod tests {
     #[test]
     fn missing_dir_errors_helpfully() {
         let err = Manifest::load(Path::new("/nonexistent-xyz")).unwrap_err();
-        assert!(err.to_string().contains("make artifacts"));
+        assert!(err.to_string().contains("compile.aot"));
     }
 
     #[test]
@@ -226,5 +334,22 @@ mod tests {
         assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
         assert_eq!(Dtype::parse("int32").unwrap(), Dtype::I32);
         assert!(Dtype::parse("bfloat16").is_err());
+        assert_eq!(Dtype::F32.size(), 4);
+    }
+
+    #[test]
+    fn builtin_mirrors_aot_schema() {
+        let m = Manifest::builtin(Path::new("artifacts"), ArtifactConfig::default());
+        assert_eq!(m.entries.len(), 5);
+        let train = m.entry("sage_train_step").unwrap();
+        assert_eq!(train.inputs.len(), 12);
+        assert_eq!(train.inputs[8].shape, vec![128, 10, 25, 100]);
+        assert_eq!(train.inputs[9].dtype, Dtype::I32);
+        assert_eq!(train.inputs[11].shape, Vec::<usize>::new());
+        assert_eq!(train.outputs.len(), 7);
+        let infer = m.entry("mlp_infer").unwrap();
+        assert_eq!(infer.inputs.len(), 5);
+        assert_eq!(infer.inputs[4].shape, vec![1, 12]);
+        assert_eq!(m.entry("score_update").unwrap().inputs[0].shape, vec![4096]);
     }
 }

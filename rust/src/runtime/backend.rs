@@ -1,0 +1,38 @@
+//! [`RuntimeBackend`]: the seam between the coordinator and whatever
+//! actually executes the AOT compute entries.
+//!
+//! The [`Engine`](super::Engine) owns a manifest plus one backend and does
+//! all ABI validation/timing; a backend only has to run a *validated* call.
+//! Two implementations ship:
+//!
+//! * [`interp::InterpreterBackend`](super::interp::InterpreterBackend) —
+//!   the default: pure-Rust execution of the entry semantics, mirroring
+//!   `python/compile/kernels/ref.py` / `model.py`.  Zero dependencies.
+//! * `pjrt::PjrtBackend` (behind the `pjrt` cargo feature) — loads the HLO
+//!   text artifacts through the PJRT C API (`xla` crate).
+
+use super::artifacts::EntrySpec;
+use super::tensor::Tensor;
+use crate::error::Result;
+
+/// Executes manifest entries.  Implementations must be shareable across
+/// the sim's trainers (`&self` execution, `Send + Sync`).
+pub trait RuntimeBackend: Send + Sync {
+    /// Short backend identifier ("interpreter", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform string (`rudder calibrate` reports it);
+    /// device-backed backends override with the real platform name.
+    fn platform(&self) -> String {
+        self.name().to_string()
+    }
+
+    /// Prepare `entry` for execution (compile/warm caches).  Optional.
+    fn warm(&self, _entry: &EntrySpec) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute one entry.  `inputs` are already validated against the
+    /// entry's ABI (arity, shapes, dtypes) by the engine.
+    fn execute(&self, entry: &EntrySpec, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}

@@ -1,0 +1,607 @@
+//! Pure-Rust interpreter backend: executes the AOT manifest entries with
+//! the reference semantics of `python/compile/kernels/ref.py` and
+//! `python/compile/model.py`, no external runtime required.
+//!
+//! This is the default [`RuntimeBackend`]: the coordinator's compute calls
+//! (`sage_train_step`, `sage_fwd`, `mlp_infer`, `mlp_train_step`,
+//! `score_update`) run as plain f32 loops.  Dimensions come from the
+//! (engine-validated) input shapes, so the same code serves any artifact
+//! configuration.  The scoring constants are shared with
+//! [`crate::buffer::scoring`] — one definition for host policy, kernel
+//! oracle, and interpreter.
+
+use super::artifacts::EntrySpec;
+use super::backend::RuntimeBackend;
+use super::tensor::{lit_f32, lit_scalar_f32, Tensor};
+use crate::buffer::scoring::{DECAY, STALE_THRESHOLD};
+use crate::error::Result;
+
+/// Stateless interpreter over manifest entries.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct InterpreterBackend;
+
+impl InterpreterBackend {
+    pub fn new() -> InterpreterBackend {
+        InterpreterBackend
+    }
+}
+
+impl RuntimeBackend for InterpreterBackend {
+    fn name(&self) -> &'static str {
+        "interpreter"
+    }
+
+    fn execute(&self, entry: &EntrySpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match entry.name.as_str() {
+            "sage_train_step" => sage_train_step(inputs),
+            "sage_fwd" => sage_fwd(inputs),
+            "mlp_infer" => mlp_infer(inputs),
+            "mlp_train_step" => mlp_train_step(inputs),
+            "score_update" => score_update(inputs),
+            other => Err(crate::err!(
+                "interpreter: no implementation for entry '{other}'"
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dense helpers (all row-major f32)
+
+/// `(m, k) @ (k, n)` — ikj loop order keeps the inner loop streaming.
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Gradient product `x^T @ dy`: `(rows, d)^T @ (rows, h)` accumulated into
+/// `out` of shape `(d, h)`.
+fn acc_xt_dy(x: &[f32], dy: &[f32], rows: usize, d: usize, h: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), d * h);
+    for r in 0..rows {
+        let xrow = &x[r * d..(r + 1) * d];
+        let dyrow = &dy[r * h..(r + 1) * h];
+        for (dd, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let orow = &mut out[dd * h..(dd + 1) * h];
+            for (o, &g) in orow.iter_mut().zip(dyrow) {
+                *o += xv * g;
+            }
+        }
+    }
+}
+
+/// `dy @ w^T`: `(rows, c) @ (h, c)^T` → `(rows, h)`.
+fn dy_wt(dy: &[f32], w: &[f32], rows: usize, c: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * h];
+    for r in 0..rows {
+        let dyrow = &dy[r * c..(r + 1) * c];
+        let orow = &mut out[r * h..(r + 1) * h];
+        for (hh, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[hh * c..(hh + 1) * c];
+            let mut acc = 0.0f32;
+            for (&g, &wv) in dyrow.iter().zip(wrow) {
+                acc += g * wv;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// Mean over the middle axis: `(rows, groups, d)` → `(rows, d)` where the
+/// input is flat `rows*groups*d`.
+fn group_mean(x: &[f32], rows: usize, groups: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    let inv = 1.0 / groups as f32;
+    for r in 0..rows {
+        let orow = &mut out[r * d..(r + 1) * d];
+        for g in 0..groups {
+            let xrow = &x[(r * groups + g) * d..(r * groups + g + 1) * d];
+            for (o, &v) in orow.iter_mut().zip(xrow) {
+                *o += v;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Add bias + optional ReLU in place.  Post-activation values are what
+/// backprop needs here: with ReLU, `z > 0` is exactly the pre-activation
+/// positivity mask.
+fn add_bias_relu(z: &mut [f32], bias: &[f32], rows: usize, h: usize, relu: bool) {
+    for r in 0..rows {
+        let row = &mut z[r * h..(r + 1) * h];
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+            if relu && *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Row-wise log-softmax probabilities: returns (softmax, log_softmax).
+fn softmax_rows(logits: &[f32], rows: usize, c: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut p = vec![0.0f32; rows * c];
+    let mut logp = vec![0.0f32; rows * c];
+    for r in 0..rows {
+        let row = &logits[r * c..(r + 1) * c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for &v in row {
+            z += (v - m).exp();
+        }
+        let lnz = z.ln();
+        for i in 0..c {
+            logp[r * c + i] = row[i] - m - lnz;
+            p[r * c + i] = (row[i] - m).exp() / z;
+        }
+    }
+    (p, logp)
+}
+
+fn col_sums(x: &[f32], rows: usize, c: usize, out: &mut [f32]) {
+    for r in 0..rows {
+        let row = &x[r * c..(r + 1) * c];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+fn sgd(p: &[f32], g: &[f32], lr: f32) -> Vec<f32> {
+    p.iter().zip(g).map(|(&pv, &gv)| pv - lr * gv).collect()
+}
+
+// ---------------------------------------------------------------------------
+// SAGE forward shared by fwd / train entries
+
+struct SageActs {
+    b: usize,
+    k1: usize,
+    d: usize,
+    h: usize,
+    c: usize,
+    agg2: Vec<f32>,   // (B*K1, D)
+    z1f: Vec<f32>,    // (B*K1, H) post-ReLU (ReLU mask == z > 0)
+    agg1: Vec<f32>,   // (B, D)
+    z1s: Vec<f32>,    // (B, H) post-ReLU
+    aggh: Vec<f32>,   // (B, H)
+    logits: Vec<f32>, // (B, C)
+}
+
+fn sage_forward_acts(inputs: &[Tensor]) -> Result<SageActs> {
+    let w1s = inputs[0].as_f32()?;
+    let w1n = inputs[1].as_f32()?;
+    let b1 = inputs[2].as_f32()?;
+    let w2s = inputs[3].as_f32()?;
+    let w2n = inputs[4].as_f32()?;
+    let b2 = inputs[5].as_f32()?;
+    let x_self = inputs[6].as_f32()?;
+    let x_h1 = inputs[7].as_f32()?;
+    let x_h2 = inputs[8].as_f32()?;
+    let (d, h) = (inputs[0].shape[0], inputs[0].shape[1]);
+    let c = inputs[3].shape[1];
+    let (b, k1, k2) = (inputs[8].shape[0], inputs[8].shape[1], inputs[8].shape[2]);
+
+    // Layer 1 on the hop-1 frontier: each hop-1 node aggregates its K2 set.
+    let agg2 = group_mean(x_h2, b * k1, k2, d);
+    let mut z1f = mm(x_h1, w1s, b * k1, d, h);
+    let t = mm(&agg2, w1n, b * k1, d, h);
+    for (z, &v) in z1f.iter_mut().zip(&t) {
+        *z += v;
+    }
+    add_bias_relu(&mut z1f, b1, b * k1, h, true);
+
+    // Layer 1 on the targets: aggregate the hop-1 sample.
+    let agg1 = group_mean(x_h1, b, k1, d);
+    let mut z1s = mm(x_self, w1s, b, d, h);
+    let t = mm(&agg1, w1n, b, d, h);
+    for (z, &v) in z1s.iter_mut().zip(&t) {
+        *z += v;
+    }
+    add_bias_relu(&mut z1s, b1, b, h, true);
+
+    // Layer 2: targets aggregate their hidden-space hop-1 frontier.
+    let aggh = group_mean(&z1f, b, k1, h);
+    let mut logits = mm(&z1s, w2s, b, h, c);
+    let t = mm(&aggh, w2n, b, h, c);
+    for (z, &v) in logits.iter_mut().zip(&t) {
+        *z += v;
+    }
+    add_bias_relu(&mut logits, b2, b, c, false);
+
+    Ok(SageActs { b, k1, d, h, c, agg2, z1f, agg1, z1s, aggh, logits })
+}
+
+fn sage_fwd(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let acts = sage_forward_acts(inputs)?;
+    Ok(vec![lit_f32(&[acts.b, acts.c], &acts.logits)?])
+}
+
+fn sage_train_step(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let acts = sage_forward_acts(inputs)?;
+    let labels = inputs[9].as_i32()?;
+    let mask = inputs[10].as_f32()?;
+    let lr = inputs[11].as_f32()?[0];
+    let (b, k1, d, h, c) = (acts.b, acts.k1, acts.d, acts.h, acts.c);
+
+    // Masked mean cross-entropy (model.py::sage_loss).
+    let (p, logp) = softmax_rows(&acts.logits, b, c);
+    let denom = mask.iter().sum::<f32>().max(1.0);
+    let mut loss = 0.0f32;
+    let mut dlogits = vec![0.0f32; b * c];
+    for r in 0..b {
+        let y = labels[r] as usize;
+        crate::ensure!(y < c, "sage_train_step: label {y} out of range (C={c})");
+        loss -= logp[r * c + y] * mask[r] / denom;
+        let scale = mask[r] / denom;
+        for i in 0..c {
+            let target = if i == y { 1.0 } else { 0.0 };
+            dlogits[r * c + i] = (p[r * c + i] - target) * scale;
+        }
+    }
+
+    // Layer-2 gradients.
+    let mut gw2s = vec![0.0f32; h * c];
+    let mut gw2n = vec![0.0f32; h * c];
+    let mut gb2 = vec![0.0f32; c];
+    acc_xt_dy(&acts.z1s, &dlogits, b, h, c, &mut gw2s);
+    acc_xt_dy(&acts.aggh, &dlogits, b, h, c, &mut gw2n);
+    col_sums(&dlogits, b, c, &mut gb2);
+
+    // Into layer 1 (targets branch + frontier branch through the mean).
+    let w2s = inputs[3].as_f32()?;
+    let w2n = inputs[4].as_f32()?;
+    let mut dz1s = dy_wt(&dlogits, w2s, b, c, h);
+    for (dz, &z) in dz1s.iter_mut().zip(&acts.z1s) {
+        if z <= 0.0 {
+            *dz = 0.0;
+        }
+    }
+    let daggh = dy_wt(&dlogits, w2n, b, c, h);
+    let inv_k1 = 1.0 / k1 as f32;
+    let mut dz1f = vec![0.0f32; b * k1 * h];
+    for r in 0..b * k1 {
+        let src = &daggh[(r / k1) * h..(r / k1 + 1) * h];
+        let dst = &mut dz1f[r * h..(r + 1) * h];
+        let zrow = &acts.z1f[r * h..(r + 1) * h];
+        for i in 0..h {
+            dst[i] = if zrow[i] > 0.0 { src[i] * inv_k1 } else { 0.0 };
+        }
+    }
+
+    // Layer-1 gradients from both branches.
+    let x_self = inputs[6].as_f32()?;
+    let x_h1 = inputs[7].as_f32()?;
+    let mut gw1s = vec![0.0f32; d * h];
+    let mut gw1n = vec![0.0f32; d * h];
+    let mut gb1 = vec![0.0f32; h];
+    acc_xt_dy(x_self, &dz1s, b, d, h, &mut gw1s);
+    acc_xt_dy(&acts.agg1, &dz1s, b, d, h, &mut gw1n);
+    col_sums(&dz1s, b, h, &mut gb1);
+    acc_xt_dy(x_h1, &dz1f, b * k1, d, h, &mut gw1s);
+    acc_xt_dy(&acts.agg2, &dz1f, b * k1, d, h, &mut gw1n);
+    col_sums(&dz1f, b * k1, h, &mut gb1);
+
+    Ok(vec![
+        lit_f32(&[d, h], &sgd(inputs[0].as_f32()?, &gw1s, lr))?,
+        lit_f32(&[d, h], &sgd(inputs[1].as_f32()?, &gw1n, lr))?,
+        lit_f32(&[h], &sgd(inputs[2].as_f32()?, &gb1, lr))?,
+        lit_f32(&[h, c], &sgd(inputs[3].as_f32()?, &gw2s, lr))?,
+        lit_f32(&[h, c], &sgd(inputs[4].as_f32()?, &gw2n, lr))?,
+        lit_f32(&[c], &sgd(inputs[5].as_f32()?, &gb2, lr))?,
+        lit_scalar_f32(loss)?,
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// MLP decision classifier
+
+struct MlpActs {
+    n: usize,
+    f: usize,
+    hm: usize,
+    z1: Vec<f32>,     // (N, HM) post-ReLU
+    logits: Vec<f32>, // (N, 2)
+}
+
+fn mlp_forward_acts(inputs: &[Tensor]) -> Result<MlpActs> {
+    let w1 = inputs[0].as_f32()?;
+    let b1 = inputs[1].as_f32()?;
+    let w2 = inputs[2].as_f32()?;
+    let b2 = inputs[3].as_f32()?;
+    let x = inputs[4].as_f32()?;
+    let (f, hm) = (inputs[0].shape[0], inputs[0].shape[1]);
+    let n = inputs[4].shape[0];
+    let mut z1 = mm(x, w1, n, f, hm);
+    add_bias_relu(&mut z1, b1, n, hm, true);
+    let mut logits = mm(&z1, w2, n, hm, 2);
+    add_bias_relu(&mut logits, b2, n, 2, false);
+    Ok(MlpActs { n, f, hm, z1, logits })
+}
+
+fn mlp_infer(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let acts = mlp_forward_acts(inputs)?;
+    let (p, _) = softmax_rows(&acts.logits, acts.n, 2);
+    let probs: Vec<f32> = (0..acts.n).map(|r| p[r * 2 + 1]).collect();
+    Ok(vec![lit_f32(&[acts.n], &probs)?])
+}
+
+fn mlp_train_step(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let acts = mlp_forward_acts(inputs)?;
+    let labels = inputs[5].as_i32()?;
+    let lr = inputs[6].as_f32()?[0];
+    let (n, f, hm) = (acts.n, acts.f, acts.hm);
+
+    let (p, logp) = softmax_rows(&acts.logits, n, 2);
+    let inv_n = 1.0 / n.max(1) as f32;
+    let mut loss = 0.0f32;
+    let mut dlogits = vec![0.0f32; n * 2];
+    for r in 0..n {
+        let y = labels[r] as usize;
+        crate::ensure!(y < 2, "mlp_train_step: label {y} out of range");
+        loss -= logp[r * 2 + y] * inv_n;
+        for i in 0..2 {
+            let target = if i == y { 1.0 } else { 0.0 };
+            dlogits[r * 2 + i] = (p[r * 2 + i] - target) * inv_n;
+        }
+    }
+
+    let w2 = inputs[2].as_f32()?;
+    let mut gw2 = vec![0.0f32; hm * 2];
+    let mut gb2 = vec![0.0f32; 2];
+    acc_xt_dy(&acts.z1, &dlogits, n, hm, 2, &mut gw2);
+    col_sums(&dlogits, n, 2, &mut gb2);
+
+    let mut dz1 = dy_wt(&dlogits, w2, n, 2, hm);
+    for (dz, &z) in dz1.iter_mut().zip(&acts.z1) {
+        if z <= 0.0 {
+            *dz = 0.0;
+        }
+    }
+    let x = inputs[4].as_f32()?;
+    let mut gw1 = vec![0.0f32; f * hm];
+    let mut gb1 = vec![0.0f32; hm];
+    acc_xt_dy(x, &dz1, n, f, hm, &mut gw1);
+    col_sums(&dz1, n, hm, &mut gb1);
+
+    Ok(vec![
+        lit_f32(&[f, hm], &sgd(inputs[0].as_f32()?, &gw1, lr))?,
+        lit_f32(&[hm], &sgd(inputs[1].as_f32()?, &gb1, lr))?,
+        lit_f32(&[hm, 2], &sgd(inputs[2].as_f32()?, &gw2, lr))?,
+        lit_f32(&[2], &sgd(inputs[3].as_f32()?, &gb2, lr))?,
+        lit_scalar_f32(loss)?,
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// buffer score update (ref.py::score_update_ref)
+
+fn score_update(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let scores = inputs[0].as_f32()?;
+    let accessed = inputs[1].as_f32()?;
+    let n = scores.len();
+    let mut new = vec![0.0f32; n];
+    let mut stale = vec![0.0f32; n];
+    for i in 0..n {
+        new[i] = if accessed[i] > 0.0 { scores[i] + 1.0 } else { scores[i] * DECAY };
+        stale[i] = if new[i] < STALE_THRESHOLD { 1.0 } else { 0.0 };
+    }
+    Ok(vec![
+        lit_f32(&inputs[0].shape, &new)?,
+        lit_f32(&inputs[0].shape, &stale)?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::EntrySpec;
+    use crate::runtime::tensor::{lit_i32, to_f32};
+    use crate::util::rng::Pcg32;
+
+    fn entry(name: &str) -> EntrySpec {
+        EntrySpec {
+            name: name.to_string(),
+            file: std::path::PathBuf::new(),
+            inputs: vec![],
+            outputs: vec![],
+        }
+    }
+
+    fn randn(rng: &mut Pcg32, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    /// Tiny SAGE problem: B=3, K1=2, K2=2, D=4, H=5, C=3.
+    fn sage_inputs(lr: f32) -> Vec<Tensor> {
+        let (b, k1, k2, d, h, c) = (3usize, 2usize, 2usize, 4usize, 5usize, 3usize);
+        let mut rng = Pcg32::new(42);
+        vec![
+            lit_f32(&[d, h], &randn(&mut rng, d * h, 0.5)).unwrap(),
+            lit_f32(&[d, h], &randn(&mut rng, d * h, 0.5)).unwrap(),
+            lit_f32(&[h], &randn(&mut rng, h, 0.1)).unwrap(),
+            lit_f32(&[h, c], &randn(&mut rng, h * c, 0.5)).unwrap(),
+            lit_f32(&[h, c], &randn(&mut rng, h * c, 0.5)).unwrap(),
+            lit_f32(&[c], &randn(&mut rng, c, 0.1)).unwrap(),
+            lit_f32(&[b, d], &randn(&mut rng, b * d, 1.0)).unwrap(),
+            lit_f32(&[b, k1, d], &randn(&mut rng, b * k1 * d, 1.0)).unwrap(),
+            lit_f32(&[b, k1, k2, d], &randn(&mut rng, b * k1 * k2 * d, 1.0)).unwrap(),
+            lit_i32(&[b], &[0, 2, 1]).unwrap(),
+            lit_f32(&[b], &[1.0, 1.0, 0.0]).unwrap(),
+            lit_scalar_f32(lr).unwrap(),
+        ]
+    }
+
+    fn sage_loss_of(inputs: &[Tensor]) -> f32 {
+        let mut zero_lr = inputs.to_vec();
+        zero_lr[11] = lit_scalar_f32(0.0).unwrap();
+        let out = sage_train_step(&zero_lr).unwrap();
+        to_f32(&out[6]).unwrap()[0]
+    }
+
+    #[test]
+    fn mm_matches_hand_product() {
+        // (2,3) @ (3,2)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let out = mm(&a, &b, 2, 3, 2);
+        assert_eq!(out, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn group_mean_averages_middle_axis() {
+        // rows=1, groups=2, d=2: mean of [1,2] and [3,4] = [2,3].
+        let out = group_mean(&[1.0, 2.0, 3.0, 4.0], 1, 2, 2);
+        assert_eq!(out, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn score_update_matches_host_policy() {
+        let scores = vec![1.0f32, 1.0, 0.99, 10.0];
+        let accessed = vec![1.0f32, 0.0, 0.0, 0.0];
+        let out = score_update(&[
+            lit_f32(&[4], &scores).unwrap(),
+            lit_f32(&[4], &accessed).unwrap(),
+        ])
+        .unwrap();
+        let new = to_f32(&out[0]).unwrap();
+        let stale = to_f32(&out[1]).unwrap();
+        // Mirror the host-side policy.
+        let mut rs = scores.clone();
+        let mut ra: Vec<bool> = accessed.iter().map(|&a| a > 0.0).collect();
+        let live = vec![true; 4];
+        let n_stale = crate::buffer::scoring::apply_round(&mut rs, &mut ra, &live);
+        for i in 0..4 {
+            assert!((new[i] - rs[i]).abs() < 1e-6, "slot {i}");
+        }
+        assert_eq!(stale.iter().filter(|&&s| s > 0.5).count(), n_stale);
+    }
+
+    #[test]
+    fn mlp_infer_matches_host_mlp() {
+        use crate::classifier::mlp::MlpWeights;
+        use crate::classifier::F;
+        let w = MlpWeights::init(3);
+        let x: [f32; F] = std::array::from_fn(|i| (i as f32 * 0.37).sin());
+        let inputs = vec![
+            lit_f32(&[F, 32], &w.w1).unwrap(),
+            lit_f32(&[32], &w.b1).unwrap(),
+            lit_f32(&[32, 2], &w.w2).unwrap(),
+            lit_f32(&[2], &w.b2).unwrap(),
+            lit_f32(&[1, F], &x).unwrap(),
+        ];
+        let out = mlp_infer(&inputs).unwrap();
+        let p = to_f32(&out[0]).unwrap()[0] as f64;
+        let want = w.replace_prob(&x);
+        assert!((p - want).abs() < 1e-5, "interp {p} host {want}");
+    }
+
+    #[test]
+    fn mlp_train_reduces_loss() {
+        let (n, f, hm) = (8usize, 4usize, 6usize);
+        let mut rng = Pcg32::new(7);
+        let zeros_hm = vec![0.0f32; hm];
+        let mut params = vec![
+            lit_f32(&[f, hm], &randn(&mut rng, f * hm, 0.5)).unwrap(),
+            lit_f32(&[hm], &zeros_hm).unwrap(),
+            lit_f32(&[hm, 2], &randn(&mut rng, hm * 2, 0.5)).unwrap(),
+            lit_f32(&[2], &[0.0, 0.0]).unwrap(),
+        ];
+        let x = randn(&mut rng, n * f, 1.0);
+        let labels: Vec<i32> = (0..n as i32).map(|i| i % 2).collect();
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..200 {
+            let mut inputs = params.clone();
+            inputs.push(lit_f32(&[n, f], &x).unwrap());
+            inputs.push(lit_i32(&[n], &labels).unwrap());
+            inputs.push(lit_scalar_f32(0.5).unwrap());
+            let out = mlp_train_step(&inputs).unwrap();
+            last = to_f32(&out[4]).unwrap()[0];
+            first.get_or_insert(last);
+            params = out[..4].to_vec();
+        }
+        let first = first.unwrap();
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn sage_train_reduces_loss_and_masks_padding() {
+        let inputs = sage_inputs(0.1);
+        let l0 = sage_loss_of(&inputs);
+        assert!(l0 > 0.0 && l0.is_finite());
+        // Take repeated steps on the same batch: must overfit.
+        let mut params: Vec<Tensor> = inputs[..6].to_vec();
+        let mut last = l0;
+        for _ in 0..200 {
+            let mut step_in = params.clone();
+            step_in.extend_from_slice(&inputs[6..]);
+            let out = sage_train_step(&step_in).unwrap();
+            last = to_f32(&out[6]).unwrap()[0];
+            params = out[..6].to_vec();
+        }
+        assert!(last < l0 * 0.5, "loss {l0} -> {last}");
+        // Masked row: flipping its label must not change the loss.
+        let mut flipped = inputs.clone();
+        flipped[9] = lit_i32(&[3], &[0, 2, 2]).unwrap();
+        assert!((sage_loss_of(&flipped) - l0).abs() < 1e-6, "mask leaks");
+    }
+
+    #[test]
+    fn sage_gradients_match_finite_differences() {
+        let lr = 0.05f32;
+        let base = sage_inputs(lr);
+        let out = sage_train_step(&base).unwrap();
+        // g = (old - new) / lr for every parameter tensor.
+        let param_names = ["w1_self", "w1_neigh", "b1", "w2_self", "w2_neigh", "b2"];
+        for (pi, &pname) in param_names.iter().enumerate() {
+            let old = base[pi].as_f32().unwrap().to_vec();
+            let new = to_f32(&out[pi]).unwrap();
+            // Probe a few coordinates with central differences.
+            for probe in [0usize, old.len() / 2, old.len() - 1] {
+                let eps = 1e-2f32;
+                let mut plus = base.clone();
+                let mut minus = base.clone();
+                let mut pv = old.clone();
+                pv[probe] += eps;
+                plus[pi] = lit_f32(&base[pi].shape, &pv).unwrap();
+                let mut mv = old.clone();
+                mv[probe] -= eps;
+                minus[pi] = lit_f32(&base[pi].shape, &mv).unwrap();
+                let numeric = (sage_loss_of(&plus) - sage_loss_of(&minus)) / (2.0 * eps);
+                let analytic = (old[probe] - new[probe]) / lr;
+                assert!(
+                    (numeric - analytic).abs() < 2e-2 + 0.05 * numeric.abs().max(1.0),
+                    "{pname}[{probe}]: numeric {numeric} analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_entry_rejected() {
+        let b = InterpreterBackend::new();
+        assert!(b.execute(&entry("not_an_entry"), &[]).is_err());
+    }
+}

@@ -1,12 +1,25 @@
-//! Runtime layer: PJRT client wrapper over the AOT artifacts.
+//! Runtime layer: pluggable execution of the AOT artifact entries.
 //!
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute`, per /opt/xla-example/load_hlo.  HLO *text*
-//! is the interchange format (DESIGN.md §3).
+//! [`Engine`] validates every call against the [`artifacts`] manifest ABI
+//! and delegates to a [`backend::RuntimeBackend`]:
+//!
+//! * [`interp::InterpreterBackend`] (default) — pure-Rust execution of the
+//!   reference semantics (`python/compile/kernels/ref.py`, `model.py`);
+//!   zero external dependencies, no artifact files needed.
+//! * `pjrt::PjrtBackend` (cargo feature `pjrt`) — compiles the HLO *text*
+//!   artifacts through the PJRT C API (`xla` crate), per
+//!   /opt/xla-example/load_hlo.  HLO text is the interchange format.
 
 pub mod artifacts;
+pub mod backend;
 pub mod engine;
-pub mod literal;
+pub mod interp;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod tensor;
 
 pub use artifacts::{ArtifactConfig, Dtype, EntrySpec, Manifest, TensorSpec};
+pub use backend::RuntimeBackend;
 pub use engine::Engine;
+pub use interp::InterpreterBackend;
+pub use tensor::{Tensor, TensorData};

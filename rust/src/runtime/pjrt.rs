@@ -1,0 +1,146 @@
+//! PJRT backend (cargo feature `pjrt`): loads AOT HLO-text artifacts and
+//! runs them through the XLA PJRT C API.
+//!
+//! The pattern (from /opt/xla-example/load_hlo):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! One backend owns the client plus a compiled-executable cache keyed by
+//! entry name; compilation happens once on first use and the request path
+//! is pure execute — Python never runs at runtime.  In this repo the `xla`
+//! crate resolves to the vendored `xla-stub` shim so this path type-checks
+//! offline; swap in the real xla-rs crate (README.md) for actual PJRT.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::EntrySpec;
+use super::backend::RuntimeBackend;
+use super::tensor::{Tensor, TensorData};
+use crate::error::Result;
+
+pub struct PjrtBackend {
+    client: PjRtClient,
+    /// Lazily compiled executables (interior mutability: callers hold
+    /// `&self` from multiple sim components).
+    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+}
+
+impl PjrtBackend {
+    /// Create the PJRT CPU client.  Executables are compiled lazily on
+    /// first use (keeps startup fast for sims that only touch one entry).
+    pub fn new() -> Result<PjrtBackend> {
+        let client = PjRtClient::cpu().map_err(|e| crate::err!("pjrt client: {e}"))?;
+        Ok(PjrtBackend { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    fn compile_entry(&self, entry: &EntrySpec) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .map_err(|e| crate::err!("parsing {}: {e}", entry.file.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| crate::err!("compiling '{}': {e}", entry.name))
+    }
+}
+
+/// Pack a host tensor into an XLA literal.
+fn to_literal(t: &Tensor) -> Result<Literal> {
+    let (ty, bytes): (ElementType, Vec<u8>) = match &t.data {
+        TensorData::F32(v) => (
+            ElementType::F32,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        TensorData::I32(v) => (
+            ElementType::S32,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+    };
+    Literal::create_from_shape_and_untyped_data(ty, &t.shape, &bytes)
+        .map_err(|e| crate::err!("literal pack: {e}"))
+}
+
+/// Unpack an XLA literal into a host tensor.
+fn from_literal(lit: &Literal) -> Result<Tensor> {
+    let shape = lit.dims().to_vec();
+    let data = match lit.element_type() {
+        ElementType::F32 => TensorData::F32(
+            lit.to_vec::<f32>().map_err(|e| crate::err!("literal unpack: {e}"))?,
+        ),
+        ElementType::S32 => TensorData::I32(
+            lit.to_vec::<i32>().map_err(|e| crate::err!("literal unpack: {e}"))?,
+        ),
+    };
+    Ok(Tensor { shape, data })
+}
+
+impl RuntimeBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        format!("pjrt:{}", self.client.platform_name())
+    }
+
+    fn warm(&self, entry: &EntrySpec) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(&entry.name) {
+            let exe = self.compile_entry(entry)?;
+            cache.insert(entry.name.clone(), exe);
+        }
+        Ok(())
+    }
+
+    fn execute(&self, entry: &EntrySpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.warm(entry)?;
+        let literals: Vec<Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = {
+            let cache = self.cache.lock().unwrap();
+            let exe = cache.get(&entry.name).unwrap();
+            let mut bufs = exe
+                .execute::<Literal>(&literals)
+                .map_err(|e| crate::err!("executing '{}': {e}", entry.name))?;
+            bufs.pop()
+                .and_then(|mut row| if row.is_empty() { None } else { Some(row.remove(0)) })
+                .ok_or_else(|| crate::err!("entry '{}': empty result", entry.name))?
+                .to_literal_sync()
+                .map_err(|e| crate::err!("fetching '{}' result: {e}", entry.name))?
+        };
+        let parts = result
+            .to_tuple()
+            .map_err(|e| crate::err!("untupling '{}': {e}", entry.name))?;
+        parts.iter().map(from_literal).collect()
+    }
+}
+
+// PJRT CPU client usage here is externally synchronized via the Mutex-held
+// executable cache; literals are host buffers.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = crate::runtime::tensor::lit_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn backend_reports_unavailable_without_real_pjrt() {
+        // Against the vendored stub, client construction fails loudly; with
+        // the real crate patched in, it succeeds — both are acceptable here.
+        match PjrtBackend::new() {
+            Ok(b) => assert!(b.platform().starts_with("pjrt:")),
+            Err(e) => assert!(e.to_string().contains("pjrt client")),
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Host tensors: the runtime ABI type shared by every backend.
+//!
+//! All artifact tensors are f32 or i32 (see `python/compile/aot.py`); a
+//! [`Tensor`] is a shape plus a flat row-major buffer.  The packing helpers
+//! (`lit_f32`, `lit_padded_f32`, …) keep the call-site idiom of the old
+//! XLA-literal layer, so swapping backends never touches the compute
+//! call sites in `gnn/` and `classifier/`.
+
+use super::artifacts::{Dtype, TensorSpec};
+use crate::error::Result;
+
+/// Flat element storage for one tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A shaped host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    /// Borrow as f32 elements; errors on dtype mismatch.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(crate::err!("tensor: expected f32, got i32")),
+        }
+    }
+
+    /// Borrow as i32 elements; errors on dtype mismatch.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(crate::err!("tensor: expected i32, got f32")),
+        }
+    }
+}
+
+/// Pack an f32 slice into a tensor of `shape` (row-major).
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Tensor> {
+    let n: usize = shape.iter().product();
+    crate::ensure!(
+        data.len() == n,
+        "lit_f32: {} elements for shape {shape:?} (want {n})",
+        data.len()
+    );
+    Ok(Tensor { shape: shape.to_vec(), data: TensorData::F32(data.to_vec()) })
+}
+
+/// Pack an i32 slice into a tensor of `shape`.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Tensor> {
+    let n: usize = shape.iter().product();
+    crate::ensure!(
+        data.len() == n,
+        "lit_i32: {} elements for shape {shape:?} (want {n})",
+        data.len()
+    );
+    Ok(Tensor { shape: shape.to_vec(), data: TensorData::I32(data.to_vec()) })
+}
+
+/// Scalar f32 tensor (shape `()`).
+pub fn lit_scalar_f32(v: f32) -> Result<Tensor> {
+    lit_f32(&[], std::slice::from_ref(&v))
+}
+
+/// Pack `data` into `spec`'s shape, zero-padding the tail if `data` covers
+/// only the leading rows (short minibatches).
+pub fn lit_padded_f32(spec: &TensorSpec, data: &[f32]) -> Result<Tensor> {
+    crate::ensure!(spec.dtype == Dtype::F32, "{}: expected f32", spec.name);
+    let n = spec.num_elements();
+    crate::ensure!(
+        data.len() <= n,
+        "{}: {} elements exceed shape {:?}",
+        spec.name,
+        data.len(),
+        spec.shape
+    );
+    if data.len() == n {
+        return lit_f32(&spec.shape, data);
+    }
+    let mut padded = vec![0.0f32; n];
+    padded[..data.len()].copy_from_slice(data);
+    lit_f32(&spec.shape, &padded)
+}
+
+/// Unpack a tensor to `Vec<f32>`.
+pub fn to_f32(t: &Tensor) -> Result<Vec<f32>> {
+    Ok(t.as_f32()?.to_vec())
+}
+
+/// Unpack a tensor to `Vec<i32>`.
+pub fn to_i32(t: &Tensor) -> Result<Vec<i32>> {
+    Ok(t.as_i32()?.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        let lit = lit_f32(&[3, 4], &data).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data);
+        assert_eq!(lit.num_elements(), 12);
+        assert_eq!(lit.dtype(), Dtype::F32);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data: Vec<i32> = vec![-1, 0, 7, 42];
+        let lit = lit_i32(&[4], &data).unwrap();
+        assert_eq!(to_i32(&lit).unwrap(), data);
+        assert!(to_f32(&lit).is_err());
+    }
+
+    #[test]
+    fn scalar() {
+        let lit = lit_scalar_f32(2.5).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), vec![2.5]);
+        assert_eq!(lit.shape, Vec::<usize>::new());
+        assert_eq!(lit.num_elements(), 1);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0; 3]).is_err());
+        assert!(lit_i32(&[5], &[1; 4]).is_err());
+    }
+
+    #[test]
+    fn padded_fills_zeros() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![4, 2],
+            dtype: Dtype::F32,
+        };
+        let lit = lit_padded_f32(&spec, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let v = to_f32(&lit).unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn padded_rejects_overflow() {
+        let spec = TensorSpec { name: "x".into(), shape: vec![2], dtype: Dtype::F32 };
+        assert!(lit_padded_f32(&spec, &[0.0; 3]).is_err());
+    }
+}

@@ -57,14 +57,14 @@ pub enum ControllerSpec {
 impl ControllerSpec {
     /// Parse e.g. "none", "fixed", "llm:gemma3-4b", "clf:mlp",
     /// "clf:mlp:finetune=25", "massivegnn:32", "random:0.5".
-    pub fn parse(s: &str) -> anyhow::Result<ControllerSpec> {
+    pub fn parse(s: &str) -> crate::error::Result<ControllerSpec> {
         let parts: Vec<&str> = s.split(':').collect();
         match parts[0] {
             "none" | "distdgl" => Ok(ControllerSpec::NoPrefetch),
             "fixed" => Ok(ControllerSpec::Fixed),
             "llm" => {
                 let model = parts.get(1).copied().unwrap_or("gemma3-4b").to_string();
-                anyhow::ensure!(
+                crate::ensure!(
                     profiles::by_name(&model).is_some(),
                     "unknown LLM '{model}' (try: {})",
                     profiles::names()
@@ -91,7 +91,7 @@ impl ControllerSpec {
                 let p = parts.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.5);
                 Ok(ControllerSpec::Random { p })
             }
-            other => anyhow::bail!("unknown controller '{other}'"),
+            other => crate::bail!("unknown controller '{other}'"),
         }
     }
 
@@ -138,7 +138,7 @@ impl ControllerSpec {
             }
             ControllerSpec::Classifier { kind, finetune_interval } => Controller::Classifier {
                 model: pretrained.unwrap_or_else(|| kind.build(seed)),
-                finetuner: finetune_interval.map(|i| OnlineFinetuner::new(i)),
+                finetuner: finetune_interval.map(OnlineFinetuner::new),
             },
             ControllerSpec::MassiveGnn { interval } => {
                 Controller::MassiveGnn { interval: *interval }

@@ -34,7 +34,7 @@ impl InferencePipe {
 
     /// Non-blocking poll: take the response if it is ready by `now`.
     pub fn poll(&mut self, now: f64) -> Option<Pending> {
-        if self.pending.as_ref().map_or(false, |p| p.ready_at <= now) {
+        if self.pending.as_ref().is_some_and(|p| p.ready_at <= now) {
             self.pending.take()
         } else {
             None

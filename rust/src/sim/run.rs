@@ -132,7 +132,7 @@ impl ExperimentResult {
 
 /// Build (or rebuild) the dataset + partition for a config.  Exposed so
 /// harnesses can share one graph across variant sweeps.
-pub fn build_cluster(cfg: &RunConfig) -> anyhow::Result<(Dataset, Partition)> {
+pub fn build_cluster(cfg: &RunConfig) -> crate::error::Result<(Dataset, Partition)> {
     let ds = Dataset::build_by_name(&cfg.dataset, cfg.scale, cfg.seed)?;
     let part = partition::partition(
         &ds.csr,
@@ -144,7 +144,7 @@ pub fn build_cluster(cfg: &RunConfig) -> anyhow::Result<(Dataset, Partition)> {
 }
 
 /// Run a full experiment (dataset built internally).
-pub fn run_experiment(cfg: &RunConfig) -> anyhow::Result<ExperimentResult> {
+pub fn run_experiment(cfg: &RunConfig) -> crate::error::Result<ExperimentResult> {
     let (ds, part) = build_cluster(cfg)?;
     Ok(run_on(&ds, &part, cfg, None))
 }

@@ -16,7 +16,7 @@ use crate::buffer::scoring::Policy;
 use crate::buffer::PersistentBuffer;
 use crate::classifier::labeling::TraceStep;
 use crate::classifier::{features, DecisionModel};
-use crate::gnn::{AnalyticModel, XlaRunner};
+use crate::gnn::{AnalyticModel, SageRunner};
 use crate::graph::features::feat_bytes;
 use crate::graph::Dataset;
 use crate::metrics::{DecisionRecord, MinibatchRecord, RunMetrics};
@@ -47,11 +47,11 @@ pub enum Mode {
 }
 
 impl Mode {
-    pub fn parse(s: &str) -> anyhow::Result<Mode> {
+    pub fn parse(s: &str) -> crate::error::Result<Mode> {
         match s {
             "async" => Ok(Mode::Async),
             "sync" => Ok(Mode::Sync),
-            _ => anyhow::bail!("unknown mode '{s}' (async|sync)"),
+            _ => crate::bail!("unknown mode '{s}' (async|sync)"),
         }
     }
 }
@@ -78,6 +78,12 @@ pub struct MetricsTracker {
     pub last_hits: f64,
     pub last_comm_nodes: u64,
     pub last_replaced_frac: f64,
+}
+
+impl Default for MetricsTracker {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl MetricsTracker {
@@ -162,7 +168,7 @@ pub struct Trainer {
     pub metrics: RunMetrics,
     pub train_nodes: Vec<u32>,
     /// Optional measured-compute runner (e2e example / calibration).
-    pub xla: Option<XlaRunner>,
+    pub runner: Option<SageRunner>,
     /// Optional trace-only recording (classifier offline data).
     pub trace: Option<Vec<TraceStep>>,
     pub halo2_len: usize,
@@ -194,7 +200,7 @@ impl Trainer {
             tracker: MetricsTracker::new(),
             metrics: RunMetrics::default(),
             train_nodes,
-            xla: None,
+            runner: None,
             trace: None,
             halo2_len,
             prev_t_ddp: 0.0,
@@ -369,11 +375,11 @@ impl Trainer {
         let comm_bytes = ctx.net.fetch_bytes(fetch_nodes, fb);
 
         // --- training (T_DDP) -------------------------------------------
-        let t_ddp = if let Some(xla) = self.xla.as_mut() {
-            match xla.train_step(&mbatch, ctx.ds.feature_seed, &ctx.ds.labels) {
+        let t_ddp = if let Some(runner) = self.runner.as_mut() {
+            match runner.train_step(&mbatch, ctx.ds.feature_seed, &ctx.ds.labels) {
                 Ok((_loss, dt)) => dt,
                 Err(e) => {
-                    eprintln!("xla train step failed ({e}); falling back to model");
+                    eprintln!("runtime train step failed ({e}); falling back to model");
                     ctx.compute.step_time(mbatch.targets.len())
                 }
             }

@@ -19,12 +19,19 @@ use std::collections::BTreeMap;
 
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml error at line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Parse into a [`Json`] object tree (sections become nested objects).
 pub fn parse(src: &str) -> Result<Json, TomlError> {
@@ -62,9 +69,9 @@ pub fn parse(src: &str) -> Result<Json, TomlError> {
 }
 
 /// Parse a file from disk.
-pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
+pub fn parse_file(path: &std::path::Path) -> crate::error::Result<Json> {
     let src = std::fs::read_to_string(path)
-        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
     Ok(parse(&src)?)
 }
 

@@ -1,0 +1,84 @@
+//! Smoke coverage for the documented entry points under `examples/`.
+//!
+//! `cargo test` already compiles every example (so they cannot rot at the
+//! type level); this suite additionally *runs* the quickstart flow — the
+//! same build_cluster → three-variant comparison — at micro scale, so the
+//! README's first command keeps working behaviorally.  CI runs the real
+//! `cargo run --release --example quickstart` on top.
+
+use rudder::sim::{build_cluster, run_on, ControllerSpec, RunConfig};
+
+/// Micro version of examples/quickstart.rs: same call sequence, tiny run.
+#[test]
+fn quickstart_flow_runs_all_three_variants() {
+    let mut cfg = RunConfig {
+        dataset: "products".into(),
+        scale: 0.05,
+        num_trainers: 2,
+        buffer_pct: 0.25,
+        epochs: 3,
+        batch_size: 16,
+        fanout1: 4,
+        fanout2: 4,
+        ..Default::default()
+    };
+    let (ds, part) = build_cluster(&cfg).expect("cluster build");
+    assert!(ds.csr.num_nodes() > 0);
+    let mut comms = Vec::new();
+    for spec in ["none", "fixed", "llm:gemma3-4b"] {
+        cfg.controller = ControllerSpec::parse(spec).expect("controller spec");
+        let r = run_on(&ds, &part, &cfg, None);
+        assert!(r.mean_epoch_time > 0.0, "{spec}: no epoch time");
+        assert!(
+            r.per_trainer.iter().any(|m| !m.minibatches.is_empty()),
+            "{spec}: no minibatches ran"
+        );
+        comms.push((spec, r.total_comm_nodes));
+    }
+    // The quickstart's headline row: buffered variants fetch fewer remote
+    // nodes than the no-prefetch baseline.
+    let base = comms[0].1;
+    for &(spec, comm) in &comms[1..] {
+        assert!(comm < base, "{spec}: comm {comm} !< baseline {base}");
+    }
+}
+
+/// The e2e example's core path: a real runtime train step composes with
+/// the sampler on the default engine (interpreter backend).
+#[test]
+fn e2e_train_core_path_composes() {
+    use rudder::gnn::SageRunner;
+    use rudder::runtime::{ArtifactConfig, Engine};
+    use std::sync::Arc;
+
+    let engine = Arc::new(Engine::builtin(ArtifactConfig {
+        batch: 8,
+        fanout1: 3,
+        fanout2: 3,
+        feat_dim: 10,
+        hidden: 12,
+        classes: 6,
+        ..Default::default()
+    }));
+    let cfg = RunConfig {
+        dataset: "ogbn-arxiv".into(),
+        scale: 0.1,
+        num_trainers: 2,
+        epochs: 1,
+        batch_size: 8,
+        fanout1: 3,
+        fanout2: 3,
+        ..Default::default()
+    };
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let art = engine.manifest.config.clone();
+    let sampler = rudder::sampler::Sampler::new(0, art.batch, art.fanout1, art.fanout2, 1234);
+    let train0 = part.train_nodes_of(0, &ds.train_nodes);
+    assert!(!train0.is_empty());
+    let order = sampler.epoch_order(&train0, 0);
+    let mut runner = SageRunner::new(engine, 7, 0.05);
+    let mb = sampler.sample(&ds.csr, &part, &order, 0, 0);
+    let (loss, dt) = runner.train_step(&mb, ds.feature_seed, &ds.labels).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(dt >= 0.0);
+}

@@ -1,0 +1,153 @@
+//! Round-trip and adversarial tests for the vendored parsers
+//! (`util::json`, `util::tomlite`) — these carry all config and
+//! artifact-manifest loading in the zero-dependency build, so they get
+//! their own integration suite beyond the in-module unit tests.
+
+use rudder::util::json::Json;
+use rudder::util::tomlite;
+
+// ---------------------------------------------------------------------------
+// JSON
+
+#[test]
+fn json_float_int_edge_cases() {
+    for (src, want) in [
+        ("0", 0.0),
+        ("-0", 0.0),
+        ("1e3", 1000.0),
+        ("1E3", 1000.0),
+        ("2.5e-2", 0.025),
+        ("-12.75", -12.75),
+        ("1e+2", 100.0),
+        ("900719925474099", 900719925474099.0),
+    ] {
+        let v = Json::parse(src).unwrap_or_else(|e| panic!("{src}: {e}"));
+        assert_eq!(v.as_f64(), Some(want), "{src}");
+        // Round-trip through the writer.
+        let back = Json::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(back.as_f64(), Some(want), "{src} round-trip");
+    }
+    // Integer-valued floats render without a fraction; true floats keep it.
+    assert_eq!(Json::num(5.0).to_string_compact(), "5");
+    assert_eq!(Json::num(5.25).to_string_compact(), "5.25");
+    assert_eq!(Json::parse("42").unwrap().as_i64(), Some(42));
+    assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
+    assert_eq!(Json::parse("-1").unwrap().as_usize(), None);
+}
+
+#[test]
+fn json_deep_nesting_roundtrip() {
+    let src = r#"{"a":{"b":{"c":{"d":[[1,2],[3,[4,{"e":"f"}]]]}}},"g":[{},[],""]}"#;
+    let v = Json::parse(src).unwrap();
+    for rendered in [v.to_string_compact(), v.to_string_pretty()] {
+        assert_eq!(Json::parse(&rendered).unwrap(), v);
+    }
+    assert!(v.at("a.b.c").and_then(|c| c.get("d")).is_some());
+}
+
+#[test]
+fn json_malformed_inputs_rejected_not_panicking() {
+    for src in [
+        "", "{", "}", "[", "]", "nul", "truth", "+1", ".5", "1e", "--1",
+        "\"unterminated", "\"bad\\escape\"q", "{\"k\"}", "{\"k\":}", "{\"k\":1,}",
+        "[1,]", "[1 2]", "{\"a\":1 \"b\":2}", "{1:2}", "\u{0}",
+    ] {
+        assert!(Json::parse(src).is_err(), "should reject: {src:?}");
+    }
+    // Trailing garbage after a valid value.
+    assert!(Json::parse("{} {}").is_err());
+    assert!(Json::parse("1 1").is_err());
+}
+
+#[test]
+fn json_string_escape_roundtrip() {
+    let ugly = "quote=\" backslash=\\ newline=\n tab=\t ctrl=\u{1} unicode=héllo☃";
+    let v = Json::Str(ugly.to_string());
+    let back = Json::parse(&v.to_string_compact()).unwrap();
+    assert_eq!(back.as_str(), Some(ugly));
+    // \uXXXX escapes decode.
+    assert_eq!(Json::parse(r#""Aé""#).unwrap().as_str(), Some("Aé"));
+}
+
+// ---------------------------------------------------------------------------
+// TOML subset
+
+#[test]
+fn toml_nested_tables_and_arrays() {
+    let src = r#"
+top = 1
+names = ["a", "b,c", "d"]   # comma inside string
+nums = [1, -2.5, 1e2]
+flags = [true, false]
+empty = []
+[outer]
+x = "y"
+[outer.inner]
+z = 3
+[outer.inner.deepest]
+w = "end"   # three levels
+"#;
+    let v = tomlite::parse(src).unwrap();
+    assert_eq!(v.get("top").unwrap().as_i64(), Some(1));
+    let names = v.get("names").unwrap().as_arr().unwrap();
+    assert_eq!(names[1].as_str(), Some("b,c"));
+    let nums = v.get("nums").unwrap().as_arr().unwrap();
+    assert_eq!(nums[1].as_f64(), Some(-2.5));
+    assert_eq!(nums[2].as_f64(), Some(100.0));
+    assert_eq!(v.get("empty").unwrap().as_arr().unwrap().len(), 0);
+    assert_eq!(v.at("outer.inner.z").unwrap().as_i64(), Some(3));
+    assert_eq!(v.at("outer.inner.deepest.w").unwrap().as_str(), Some("end"));
+}
+
+#[test]
+fn toml_float_int_edge_cases() {
+    let v = tomlite::parse("a = 0\nb = -0.0\nc = 3.14159\nd = 1e-3\ne = 1E6").unwrap();
+    assert_eq!(v.get("a").unwrap().as_i64(), Some(0));
+    assert_eq!(v.get("c").unwrap().as_f64(), Some(3.14159));
+    assert_eq!(v.get("d").unwrap().as_f64(), Some(0.001));
+    assert_eq!(v.get("e").unwrap().as_f64(), Some(1_000_000.0));
+}
+
+#[test]
+fn toml_malformed_inputs_rejected() {
+    for src in [
+        "[unterminated",
+        "[]",
+        "[ ]",
+        "justakey",
+        "k = ",
+        "k = [1, 2",
+        "k = \"unterminated",
+        "k = maybe",
+        "= 1",
+        "k = 1\nk = 2",
+        "[a]\nx = 1\n[a.x]\ny = 2", // x is a value, not a section
+    ] {
+        assert!(tomlite::parse(src).is_err(), "should reject: {src:?}");
+    }
+}
+
+#[test]
+fn toml_duplicate_keys_scoped_per_section() {
+    // The same key in *different* sections is fine.
+    let v = tomlite::parse("[a]\nk = 1\n[b]\nk = 2").unwrap();
+    assert_eq!(v.at("a.k").unwrap().as_i64(), Some(1));
+    assert_eq!(v.at("b.k").unwrap().as_i64(), Some(2));
+}
+
+#[test]
+fn toml_roundtrips_through_json_writer() {
+    // tomlite parses into Json, so config docs can be re-serialized and
+    // re-parsed as JSON losslessly (how traces/calibration get persisted).
+    let src = "name = \"fig12\"\n[net]\nalpha = 0.002\nbeta = 1.5e-8";
+    let v = tomlite::parse(src).unwrap();
+    let back = Json::parse(&v.to_string_pretty()).unwrap();
+    assert_eq!(back, v);
+    assert_eq!(back.at("net.beta").unwrap().as_f64(), Some(1.5e-8));
+}
+
+#[test]
+fn toml_file_api_errors_helpfully() {
+    let err = tomlite::parse_file(std::path::Path::new("/nonexistent-rudder.toml")).unwrap_err();
+    assert!(err.to_string().contains("reading"), "{err}");
+}

@@ -1,0 +1,236 @@
+//! Offline stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! Mirrors exactly the API surface `rudder`'s PJRT backend consumes:
+//! [`Literal`] packing/unpacking works for real (host buffers), while the
+//! device-side entry points ([`PjRtClient::cpu`],
+//! [`HloModuleProto::from_text_file`], compile/execute) return
+//! [`Error::Unavailable`] so the `--features pjrt` build type-checks and
+//! fails loudly — not mysteriously — at runtime.  Swap in the real crate
+//! with a `[patch]` entry to get actual PJRT execution.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: either a host-side usage error or "no PJRT linked".
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+    Invalid(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla-stub: {what} requires the real PJRT runtime; this build links the \
+                 offline shim (swap in xla-rs via [patch] — see README.md)"
+            ),
+            Error::Invalid(msg) => write!(f, "xla-stub: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes the Rudder artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn size(self) -> usize {
+        4
+    }
+}
+
+/// Types a [`Literal`] can be unpacked into.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+/// A host-side tensor literal (shape + raw bytes).  Fully functional in the
+/// stub — only device transfer/execution is unavailable.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    element_type: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        element_type: ElementType,
+        dims: &[usize],
+        untyped_data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if untyped_data.len() != n * element_type.size() {
+            return Err(Error::Invalid(format!(
+                "literal: {} bytes for shape {dims:?} (want {})",
+                untyped_data.len(),
+                n * element_type.size()
+            )));
+        }
+        Ok(Literal {
+            element_type,
+            dims: dims.to_vec(),
+            data: untyped_data.to_vec(),
+        })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.element_type
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty() && self.dims.iter().product::<usize>() == 0
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.element_type != T::ELEMENT_TYPE {
+            return Err(Error::Invalid(format!(
+                "literal: dtype mismatch ({:?} vs requested {:?})",
+                self.element_type,
+                T::ELEMENT_TYPE
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("tuple decomposition"))
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("device-to-host transfer"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("execution"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_works_hostside() {
+        let data: Vec<f32> = vec![1.0, -2.5, 3.0, 0.0, 7.5, 9.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &bytes)
+                .unwrap();
+        assert_eq!(lit.dims(), &[2, 3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[4], &[0u8; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn device_paths_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT"));
+    }
+}
