@@ -44,6 +44,9 @@ pub struct ReplaceOutcome {
     pub inserted: usize,
     /// Nodes newly admitted (their features must be fetched).
     pub fetched_nodes: Vec<u32>,
+    /// Nodes evicted this round (their cached features can be dropped —
+    /// the cluster runtime uses this to bound its feature store).
+    pub evicted_nodes: Vec<u32>,
     /// True when no stale node existed, so replacement was skipped.
     pub skipped: bool,
 }
@@ -179,6 +182,7 @@ impl PersistentBuffer {
             Policy::FreqDecay => {
                 for slot in 0..self.capacity {
                     if self.live[slot] && self.scores[slot] < STALE_THRESHOLD {
+                        out.evicted_nodes.push(self.ids[slot]);
                         self.evict_slot(slot as u32);
                         out.evicted += 1;
                     }
@@ -196,6 +200,7 @@ impl PersistentBuffer {
                 liveslots.sort_by_key(keyfn);
                 let evict_n = liveslots.len() / 4;
                 for &s in &liveslots[..evict_n] {
+                    out.evicted_nodes.push(self.ids[s as usize]);
                     self.evict_slot(s);
                     out.evicted += 1;
                 }
@@ -221,6 +226,14 @@ impl PersistentBuffer {
             self.miss_freq.remove(&v);
         }
         out
+    }
+
+    /// Sorted node ids currently resident (the cluster runtime warms its
+    /// feature store with this after a prepopulated start).
+    pub fn resident_nodes(&self) -> Vec<u32> {
+        let mut nodes: Vec<u32> = self.index.keys().copied().collect();
+        nodes.sort_unstable();
+        nodes
     }
 
     /// Pre-populate (MassiveGNN-style warm start); fills up to capacity.
@@ -357,6 +370,7 @@ mod tests {
         assert_eq!(b.stale_count(), 1);
         let out = b.replace();
         assert_eq!(out.evicted, 1);
+        assert_eq!(out.evicted_nodes, vec![2]);
         assert!(!b.contains(2));
         assert!(b.contains(7), "recent miss admitted");
         b.check_invariants().unwrap();
@@ -381,6 +395,7 @@ mod tests {
         assert_eq!(b.prepopulate(&[1, 2, 3, 4, 5]), 3);
         assert_eq!(b.len(), 3);
         assert!(b.contains(1) && b.contains(2) && b.contains(3));
+        assert_eq!(b.resident_nodes(), vec![1, 2, 3]);
         assert_eq!(b.prepopulate(&[9]), 0);
         b.check_invariants().unwrap();
     }

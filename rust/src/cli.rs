@@ -75,6 +75,16 @@ COMMANDS:
                --controller <none|fixed|llm:MODEL|clf:KIND[:finetune=N]|massivegnn[:r]>
                --mode <async|sync> --epochs <n> --batch <n> --scale <f>
                --seed <n> --config <file.toml>
+  cluster      run the in-process distributed cluster runtime: real
+               trainer/feature-server threads, wire-format RPC, async
+               prefetching.  Takes every `train` flag, plus:
+               --time-scale <f>   wall seconds slept per modelled virtual
+                                  second (default 0.02; 0 = no emulation,
+                                  as fast as the hardware allows)
+               --parity           also run the virtual-time sim and fail
+                                  unless traffic counters are identical
+               --compare-prefetch also run with prefetching disabled and
+                                  report the wall-clock delta
   experiment   regenerate a paper table/figure: rudder experiment <id> [--full]
                ids: fig01 fig03 fig06 fig12 fig13 fig14 fig15 fig16 fig17
                     table2 fig18 table4 fig20 fig21 | all

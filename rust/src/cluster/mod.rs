@@ -1,0 +1,43 @@
+//! In-process distributed cluster runtime: the paper's training cluster as
+//! *real* concurrency instead of virtual time.
+//!
+//! Where [`crate::sim`] steps trainers sequentially against the α–β clock,
+//! this subsystem runs one OS thread per trainer, one per partition
+//! feature-server, one async prefetcher per trainer, and a DDP allreduce
+//! hub — all communicating through a serialized, length-prefixed wire
+//! format ([`wire::Frame`]), so the RPC path pays honest encode/decode
+//! cost and request coalescing, in-flight dedup, server-side queuing, and
+//! prefetch/compute overlap are *exercised*, not assumed.
+//!
+//! The split of responsibilities is the design's core:
+//!
+//! * **What** to fetch — sampling, buffer lookups, controller decisions,
+//!   replacement rounds, and every traffic counter — is computed by the
+//!   embedded [`crate::sim::trainer::Trainer`] state machine, driven by
+//!   the same seeds as the sim.  This yields the traffic-parity guarantee
+//!   ([`run::parity_check`]): same config + seed ⇒ fetched-node, hit, and
+//!   byte counters identical to the virtual-time sim, for *every*
+//!   controller including LLM agents.
+//! * **How** the bytes move is real: feature payloads are synthesized by
+//!   the owner partition's server thread, serialized, routed, installed in
+//!   a [`prefetch::FeatureStore`], and waited on; gradients cross the
+//!   allreduce hub as frames.  Wall-clock and wire-level counters
+//!   ([`crate::metrics::WireStats`]) come from this layer — dedup and
+//!   coalescing make the wire counters *smaller* than the logical ones,
+//!   and they are timing-dependent, so parity never compares them.
+//!
+//! `time_scale` bridges the two clocks: servers, compute, and the hub
+//! sleep `time_scale × modelled seconds`, so prefetch overlap shows up in
+//! real wall time at any convenient speed (0 = no emulation).
+
+pub mod prefetch;
+pub mod run;
+pub mod server;
+pub mod trainer;
+pub mod wire;
+
+pub use prefetch::{FeatureStore, PrefetchMsg};
+pub use run::{parity_check, run_cluster, run_cluster_on, ClusterConfig, ClusterResult};
+pub use server::{ServerStats, WireDelay};
+pub use trainer::WallStats;
+pub use wire::Frame;

@@ -1,0 +1,294 @@
+//! The async prefetch engine: one prefetcher thread per trainer plus the
+//! [`FeatureStore`] it shares with its trainer thread.
+//!
+//! The prefetcher consumes fetch orders (replacement admissions decided by
+//! the controller, and the current minibatch's buffer misses), suppresses
+//! nodes whose features are already resident *or already in flight*
+//! (dedup), coalesces the remainder into one [`Frame::FetchReq`] per owner
+//! partition, and installs [`Frame::FetchResp`] payloads into the store —
+//! all concurrently with the trainer's sampler/compute loop, which only
+//! blocks in [`FeatureStore::wait_all`] when a feature it needs *now* has
+//! not landed yet.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::WireStats;
+use crate::partition::Partition;
+use crate::util::fasthash::{FastMap, FastSet};
+
+use super::wire::Frame;
+
+/// Commands and network input multiplexed onto the prefetcher's inbox
+/// (single-receiver design: no select needed on std channels).
+pub enum PrefetchMsg {
+    /// Fetch these nodes' features (deduped against resident + in-flight).
+    Fetch(Vec<u32>),
+    /// Drop these nodes' features from the store (buffer evictions and
+    /// end-of-minibatch transients).
+    Evict(Vec<u32>),
+    /// An encoded frame from a feature server (a `FetchResp`).
+    Wire(Vec<u8>),
+    /// Trainer finished: drain nothing further, exit.
+    Shutdown,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    feats: FastMap<u32, Box<[f32]>>,
+    /// Requested on the wire, response not yet installed.
+    inflight: FastSet<u32>,
+    /// Evicted while in flight: drop the payload on arrival.
+    discard: FastSet<u32>,
+}
+
+/// Feature cache shared between one trainer and its prefetcher.
+pub struct FeatureStore {
+    inner: Mutex<StoreInner>,
+    cv: Condvar,
+}
+
+impl Default for FeatureStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FeatureStore {
+    pub fn new() -> FeatureStore {
+        FeatureStore { inner: Mutex::new(StoreInner::default()), cv: Condvar::new() }
+    }
+
+    /// Number of resident feature rows.
+    pub fn resident(&self) -> usize {
+        self.inner.lock().unwrap().feats.len()
+    }
+
+    pub fn contains(&self, node: u32) -> bool {
+        self.inner.lock().unwrap().feats.contains_key(&node)
+    }
+
+    /// Copy of one node's feature row, if resident.
+    pub fn get(&self, node: u32) -> Option<Box<[f32]>> {
+        self.inner.lock().unwrap().feats.get(&node).cloned()
+    }
+
+    /// Block until every node in `nodes` is resident.  Errors (instead of
+    /// hanging) once `timeout` passes with features still outstanding —
+    /// callers size the timeout to their emulation scale, so expiry
+    /// indicates a wiring bug, not a slow fetch.
+    pub fn wait_all(&self, nodes: &[u32], timeout: Duration) -> crate::error::Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if nodes.iter().all(|n| g.feats.contains_key(n)) {
+                return Ok(());
+            }
+            crate::ensure!(
+                Instant::now() < deadline,
+                "feature wait timed out ({} of {} nodes outstanding)",
+                nodes.iter().filter(|n| !g.feats.contains_key(n)).count(),
+                nodes.len()
+            );
+            let (back, _) = self.cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+            g = back;
+        }
+    }
+
+    /// Filter a fetch order against resident + in-flight nodes, marking
+    /// the remainder in flight.  Returns the nodes that must go on the
+    /// wire.
+    fn begin_fetch(&self, nodes: &[u32], stats: &mut WireStats) -> Vec<u32> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for &n in nodes {
+            if g.discard.remove(&n) {
+                // Evicted while in flight, wanted again: the pending
+                // response satisfies this request — no new wire traffic.
+                debug_assert!(g.inflight.contains(&n));
+                stats.nodes_deduped += 1;
+            } else if g.feats.contains_key(&n) || g.inflight.contains(&n) {
+                stats.nodes_deduped += 1;
+            } else {
+                g.inflight.insert(n);
+                out.push(n);
+            }
+        }
+        out
+    }
+
+    /// Install a response's feature rows; returns how many were stored
+    /// (discarded-in-flight rows are dropped).
+    fn complete_fetch(&self, nodes: &[u32], feats: &[f32], dim: usize) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let mut stored = 0u64;
+        for (i, &n) in nodes.iter().enumerate() {
+            g.inflight.remove(&n);
+            if g.discard.remove(&n) {
+                continue;
+            }
+            let row = &feats[i * dim..(i + 1) * dim];
+            g.feats.insert(n, row.to_vec().into_boxed_slice());
+            stored += 1;
+        }
+        drop(g);
+        self.cv.notify_all();
+        stored
+    }
+
+    /// Drop features (deferred for nodes still in flight).
+    fn evict(&self, nodes: &[u32]) {
+        let mut g = self.inner.lock().unwrap();
+        for &n in nodes {
+            if g.inflight.contains(&n) {
+                g.discard.insert(n);
+            } else {
+                g.feats.remove(&n);
+            }
+        }
+    }
+}
+
+/// Spawn the prefetcher thread for `trainer_id`.  Exits on
+/// [`PrefetchMsg::Shutdown`], returning its wire counters.
+pub(crate) fn spawn_prefetcher(
+    trainer_id: usize,
+    store: Arc<FeatureStore>,
+    rx: Receiver<PrefetchMsg>,
+    servers: Vec<Sender<Vec<u8>>>,
+    part: Arc<Partition>,
+) -> JoinHandle<WireStats> {
+    std::thread::Builder::new()
+        .name(format!("rudder-prefetch-{trainer_id}"))
+        .spawn(move || {
+            let mut stats = WireStats::default();
+            let mut req_id: u64 = 0;
+            // Reused per-owner coalescing buckets.
+            let mut groups: Vec<Vec<u32>> = vec![Vec::new(); servers.len()];
+            for msg in rx.iter() {
+                match msg {
+                    PrefetchMsg::Fetch(nodes) => {
+                        let to_req = store.begin_fetch(&nodes, &mut stats);
+                        if to_req.is_empty() {
+                            continue;
+                        }
+                        for &n in &to_req {
+                            groups[part.owner_of(n)].push(n);
+                        }
+                        for (owner, group) in groups.iter_mut().enumerate() {
+                            if group.is_empty() {
+                                continue;
+                            }
+                            let batch = std::mem::take(group);
+                            stats.nodes_requested += batch.len() as u64;
+                            let bytes = Frame::FetchReq {
+                                req_id,
+                                from: trainer_id as u32,
+                                nodes: batch,
+                            }
+                            .encode();
+                            req_id += 1;
+                            stats.req_frames += 1;
+                            stats.req_bytes += bytes.len() as u64;
+                            // A dead server surfaces as a wait timeout in
+                            // the trainer; nothing useful to do here.
+                            let _ = servers[owner].send(bytes);
+                        }
+                    }
+                    PrefetchMsg::Wire(bytes) => {
+                        stats.resp_frames += 1;
+                        stats.resp_bytes += bytes.len() as u64;
+                        match Frame::decode(&bytes) {
+                            Ok((Frame::FetchResp { feat_dim, nodes, feats, .. }, _)) => {
+                                stats.nodes_received +=
+                                    store.complete_fetch(&nodes, &feats, feat_dim as usize);
+                            }
+                            // A lost response leaves its nodes marked
+                            // in-flight and will surface as a feature-wait
+                            // timeout — leave a trace of the real cause.
+                            Ok((other, _)) => {
+                                stats.bad_frames += 1;
+                                let kind = match other {
+                                    Frame::FetchReq { .. } => "FetchReq",
+                                    Frame::FetchResp { .. } => "FetchResp",
+                                    Frame::Allreduce { .. } => "Allreduce",
+                                };
+                                eprintln!("prefetcher {trainer_id}: unexpected {kind} frame");
+                            }
+                            Err(e) => {
+                                stats.bad_frames += 1;
+                                eprintln!("prefetcher {trainer_id}: bad frame: {e}");
+                            }
+                        }
+                    }
+                    PrefetchMsg::Evict(nodes) => store.evict(&nodes),
+                    PrefetchMsg::Shutdown => break,
+                }
+            }
+            stats
+        })
+        .expect("spawn prefetcher thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_fetch_dedups_resident_and_inflight() {
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        let first = store.begin_fetch(&[1, 2, 3], &mut stats);
+        assert_eq!(first, vec![1, 2, 3]);
+        // All three now in flight: nothing new to request.
+        assert!(store.begin_fetch(&[1, 2, 3], &mut stats).is_empty());
+        assert_eq!(stats.nodes_deduped, 3);
+        store.complete_fetch(&[1, 2, 3], &[0.0; 6], 2);
+        // Resident: still deduped.
+        assert!(store.begin_fetch(&[2], &mut stats).is_empty());
+        assert_eq!(store.resident(), 3);
+        assert_eq!(store.get(2).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn evict_while_inflight_discards_on_arrival() {
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        assert_eq!(store.begin_fetch(&[9], &mut stats), vec![9]);
+        store.evict(&[9]);
+        assert_eq!(store.complete_fetch(&[9], &[1.0], 1), 0, "discarded");
+        assert!(!store.contains(9));
+        // A fresh request goes back on the wire.
+        assert_eq!(store.begin_fetch(&[9], &mut stats), vec![9]);
+    }
+
+    #[test]
+    fn refetch_request_rescues_inflight_eviction() {
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        assert_eq!(store.begin_fetch(&[4], &mut stats), vec![4]);
+        store.evict(&[4]); // marked discard-on-arrival
+        // Re-requested before the response lands: the pending response
+        // must now be kept, with no duplicate wire request.
+        assert!(store.begin_fetch(&[4], &mut stats).is_empty());
+        assert_eq!(store.complete_fetch(&[4], &[2.5], 1), 1);
+        assert_eq!(store.get(4).unwrap()[0], 2.5);
+    }
+
+    #[test]
+    fn wait_all_returns_once_resident() {
+        let store = Arc::new(FeatureStore::new());
+        let mut stats = WireStats::default();
+        store.begin_fetch(&[1, 2], &mut stats);
+        let s2 = store.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.complete_fetch(&[1, 2], &[0.0, 0.0], 1);
+        });
+        store.wait_all(&[1, 2], Duration::from_secs(10)).unwrap();
+        h.join().unwrap();
+        assert_eq!(store.resident(), 2);
+    }
+}

@@ -1,0 +1,328 @@
+//! Cluster orchestration: spawn servers, prefetchers, the allreduce hub,
+//! and one thread per trainer; join everything and aggregate results.
+//!
+//! Thread/channel topology for `n` trainers (always `n` partitions):
+//!
+//! ```text
+//!  trainer t ──Fetch/Evict──▶ prefetcher t ──FetchReq──▶ server p (per owner)
+//!      ▲                          ▲                          │
+//!      │ wait_all()               └───────FetchResp──────────┘
+//!      ▼
+//!  FeatureStore t (shared trainer t ↔ prefetcher t)
+//!
+//!  trainer 0..n ──Allreduce──▶ hub ──reduced Allreduce──▶ trainer 0..n
+//! ```
+//!
+//! Shutdown is drop-driven: trainers send `Shutdown` to their prefetcher
+//! and drop their channel ends; prefetchers drop the server senders;
+//! servers and the hub exit when their receivers disconnect.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::classifier::trainer::TrainingSet;
+use crate::error::Result;
+use crate::gnn::SageShape;
+use crate::graph::Dataset;
+use crate::metrics::{RunMetrics, WireStats};
+use crate::net::Network;
+use crate::partition::Partition;
+use crate::sim::{self, ExperimentResult, RunConfig};
+
+use super::prefetch::{spawn_prefetcher, FeatureStore, PrefetchMsg};
+use super::server::{spawn_server, ServerStats, WireDelay};
+use super::trainer::{run_trainer, TrainerArgs, WallStats};
+use super::wire::Frame;
+
+/// Cluster-runtime configuration: the shared [`RunConfig`] plus how much
+/// wall time to spend emulating the modelled network/compute costs.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub run: RunConfig,
+    /// Wall seconds slept per virtual second of modelled cost (server
+    /// transfer delay, T_DDP compute, allreduce).  `0.0` disables all
+    /// emulation — the cluster runs as fast as the hardware allows.
+    pub time_scale: f64,
+}
+
+impl ClusterConfig {
+    pub fn new(run: RunConfig) -> ClusterConfig {
+        ClusterConfig { run, time_scale: 0.0 }
+    }
+}
+
+/// Outcome of one cluster run: the sim-shaped experiment summary (virtual
+/// time + traffic counters, parity-comparable) plus the real-runtime
+/// measurements the sim cannot produce.
+#[derive(Debug, Clone)]
+pub struct ClusterResult {
+    pub experiment: ExperimentResult,
+    /// Wall seconds from first spawn to last trainer exit.
+    pub wall_total: f64,
+    pub walls: Vec<WallStats>,
+    pub wire: Vec<WireStats>,
+    pub servers: Vec<ServerStats>,
+    pub allreduce_rounds: u64,
+}
+
+impl ClusterResult {
+    /// Cluster-wide wire totals (sum over trainers' prefetchers).
+    pub fn wire_total(&self) -> WireStats {
+        let mut total = WireStats::default();
+        for w in &self.wire {
+            total.merge(w);
+        }
+        total
+    }
+
+    /// Mean wall seconds per epoch (max over trainers within an epoch).
+    pub fn mean_epoch_wall(&self) -> f64 {
+        let epochs = self.walls.iter().map(|w| w.epochs.len()).max().unwrap_or(0);
+        if epochs == 0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for e in 0..epochs {
+            total += self
+                .walls
+                .iter()
+                .filter_map(|w| w.epochs.get(e))
+                .fold(0.0f64, |m, &v| m.max(v));
+        }
+        total / epochs as f64
+    }
+}
+
+/// Build the dataset + partition and run the cluster runtime.
+pub fn run_cluster(ccfg: &ClusterConfig) -> Result<ClusterResult> {
+    let (ds, part) = sim::build_cluster(&ccfg.run)?;
+    run_cluster_on(Arc::new(ds), Arc::new(part), ccfg, None)
+}
+
+/// Run on a pre-built cluster (shared with parity tests so the sim and the
+/// cluster runtime see the same graph object).
+pub fn run_cluster_on(
+    ds: Arc<Dataset>,
+    part: Arc<Partition>,
+    ccfg: &ClusterConfig,
+    offline: Option<TrainingSet>,
+) -> Result<ClusterResult> {
+    let cfg = ccfg.run.clone();
+    let n = cfg.num_trainers;
+    crate::ensure!(n >= 1, "cluster: need at least one trainer");
+    crate::ensure!(
+        n == part.num_parts,
+        "cluster: {n} trainers but {} partitions",
+        part.num_parts
+    );
+
+    let shape = SageShape {
+        batch: cfg.batch_size,
+        fanout1: cfg.fanout1,
+        fanout2: cfg.fanout2,
+        feat_dim: ds.spec.feat_dim,
+        hidden: cfg.hidden,
+        classes: ds.spec.num_classes,
+    };
+    let net = Network::new(cfg.net.clone(), n);
+    let delay = WireDelay::from_net(&net, ccfg.time_scale);
+    let allreduce_sleep = ccfg.time_scale * net.allreduce_time(shape.param_bytes());
+    let max_mb = sim::max_minibatches_per_epoch(&cfg, &ds, &part);
+    let offline = Arc::new(offline);
+
+    // Channels: requests into each server, each prefetcher's inbox
+    // (commands from its trainer + responses from every server), the hub's
+    // inbox, and one reply channel per trainer.
+    let mut server_txs: Vec<Sender<Vec<u8>>> = Vec::with_capacity(n);
+    let mut server_rxs: Vec<Receiver<Vec<u8>>> = Vec::with_capacity(n);
+    let mut pf_txs: Vec<Sender<PrefetchMsg>> = Vec::with_capacity(n);
+    let mut pf_rxs: Vec<Receiver<PrefetchMsg>> = Vec::with_capacity(n);
+    let mut reply_txs: Vec<Sender<Vec<u8>>> = Vec::with_capacity(n);
+    let mut reply_rxs: Vec<Receiver<Vec<u8>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel();
+        server_txs.push(tx);
+        server_rxs.push(rx);
+        let (tx, rx) = mpsc::channel();
+        pf_txs.push(tx);
+        pf_rxs.push(rx);
+        let (tx, rx) = mpsc::channel();
+        reply_txs.push(tx);
+        reply_rxs.push(rx);
+    }
+    let (hub_tx, hub_rx) = mpsc::channel::<Vec<u8>>();
+    let stores: Vec<Arc<FeatureStore>> = (0..n).map(|_| Arc::new(FeatureStore::new())).collect();
+
+    let server_handles: Vec<JoinHandle<ServerStats>> = server_rxs
+        .into_iter()
+        .enumerate()
+        .map(|(p, rx)| {
+            let replies = pf_txs.clone();
+            spawn_server(p, ds.feature_seed, ds.spec.feat_dim, part.clone(), rx, replies, delay)
+        })
+        .collect();
+    let pf_handles: Vec<JoinHandle<WireStats>> = pf_rxs
+        .into_iter()
+        .enumerate()
+        .map(|(p, rx)| spawn_prefetcher(p, stores[p].clone(), rx, server_txs.clone(), part.clone()))
+        .collect();
+    let hub_handle = spawn_hub(n, hub_rx, reply_txs, allreduce_sleep);
+
+    let wall_start = Instant::now();
+    let trainer_handles: Vec<JoinHandle<super::trainer::TrainerOutput>> = reply_rxs
+        .into_iter()
+        .enumerate()
+        .map(|(p, hub_rx_p)| {
+            let args = TrainerArgs {
+                part_id: p,
+                cfg: cfg.clone(),
+                ds: ds.clone(),
+                part: part.clone(),
+                offline: offline.clone(),
+                store: stores[p].clone(),
+                prefetch_tx: pf_txs[p].clone(),
+                hub_tx: hub_tx.clone(),
+                hub_rx: hub_rx_p,
+                max_mb_per_epoch: max_mb,
+                time_scale: ccfg.time_scale,
+            };
+            std::thread::Builder::new()
+                .name(format!("rudder-trainer-{p}"))
+                .spawn(move || run_trainer(args))
+                .expect("spawn trainer thread")
+        })
+        .collect();
+
+    // Drop the orchestrator's channel ends so disconnect-driven shutdown
+    // can propagate once the workers drop theirs.
+    drop(hub_tx);
+    drop(pf_txs);
+    drop(server_txs);
+
+    let mut per_trainer: Vec<RunMetrics> = Vec::with_capacity(n);
+    let mut walls: Vec<WallStats> = Vec::with_capacity(n);
+    for h in trainer_handles {
+        let out = h
+            .join()
+            .map_err(|_| crate::err!("cluster trainer thread panicked"))?;
+        per_trainer.push(out.metrics);
+        walls.push(out.wall);
+    }
+    let wall_total = wall_start.elapsed().as_secs_f64();
+
+    let mut wire: Vec<WireStats> = Vec::with_capacity(n);
+    for h in pf_handles {
+        wire.push(h.join().map_err(|_| crate::err!("prefetcher thread panicked"))?);
+    }
+    let mut servers: Vec<ServerStats> = Vec::with_capacity(n);
+    for h in server_handles {
+        servers.push(h.join().map_err(|_| crate::err!("feature-server thread panicked"))?);
+    }
+    let allreduce_rounds = hub_handle
+        .join()
+        .map_err(|_| crate::err!("allreduce hub thread panicked"))?;
+
+    // Barrier-synchronized epochs: every trainer records identical virtual
+    // epoch times, so trainer 0's series is the run-level series (exactly
+    // as `sim::run_on` computes it).
+    let epoch_times = per_trainer
+        .first()
+        .map(|m| m.epoch_times.clone())
+        .unwrap_or_default();
+    let experiment = ExperimentResult::aggregate(cfg.controller.label(), per_trainer, epoch_times);
+    Ok(ClusterResult { experiment, wall_total, walls, wire, servers, allreduce_rounds })
+}
+
+/// The DDP allreduce hub: collects one `Allreduce` frame per trainer per
+/// round, element-wise-reduces the gradient payloads, takes the max
+/// virtual clock (the barrier), and broadcasts the reduced frame back.
+fn spawn_hub(
+    n: usize,
+    rx: Receiver<Vec<u8>>,
+    replies: Vec<Sender<Vec<u8>>>,
+    round_sleep: f64,
+) -> JoinHandle<u64> {
+    std::thread::Builder::new()
+        .name("rudder-allreduce-hub".into())
+        .spawn(move || {
+            let mut rounds = 0u64;
+            let mut acc: Vec<f32> = Vec::new();
+            let mut max_vclock = f64::NEG_INFINITY;
+            let mut got = 0usize;
+            for bytes in rx.iter() {
+                let Ok((Frame::Allreduce { vclock, grads, .. }, _)) = Frame::decode(&bytes)
+                else {
+                    continue; // tolerate garbage; trainers would time out loudly
+                };
+                if got == 0 {
+                    acc = grads;
+                } else {
+                    for (a, g) in acc.iter_mut().zip(&grads) {
+                        *a += g;
+                    }
+                }
+                max_vclock = max_vclock.max(vclock);
+                got += 1;
+                if got == n {
+                    if round_sleep > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(round_sleep));
+                    }
+                    let reduced = Frame::Allreduce {
+                        part: u32::MAX,
+                        round: rounds,
+                        vclock: max_vclock,
+                        grads: std::mem::take(&mut acc),
+                    }
+                    .encode();
+                    for tx in &replies {
+                        let _ = tx.send(reduced.clone());
+                    }
+                    rounds += 1;
+                    got = 0;
+                    max_vclock = f64::NEG_INFINITY;
+                }
+            }
+            rounds
+        })
+        .expect("spawn allreduce hub thread")
+}
+
+/// Traffic parity between the virtual-time sim and the cluster runtime:
+/// for the same config + seed the per-trainer fetched-node, buffer-hit,
+/// and payload-byte counters (and the virtual schedule built from them)
+/// must be *identical*.  Returns a human-readable diagnosis on mismatch.
+pub fn parity_check(
+    sim_r: &ExperimentResult,
+    cluster_r: &ExperimentResult,
+) -> std::result::Result<(), String> {
+    if sim_r.per_trainer.len() != cluster_r.per_trainer.len() {
+        return Err(format!(
+            "trainer count: sim {} vs cluster {}",
+            sim_r.per_trainer.len(),
+            cluster_r.per_trainer.len()
+        ));
+    }
+    for (i, (a, b)) in sim_r.per_trainer.iter().zip(&cluster_r.per_trainer).enumerate() {
+        let checks: [(&str, u64, u64); 5] = [
+            ("minibatches", a.minibatches.len() as u64, b.minibatches.len() as u64),
+            ("decisions", a.decisions.len() as u64, b.decisions.len() as u64),
+            ("fetched nodes", a.total_comm_nodes(), b.total_comm_nodes()),
+            ("buffer hits", a.total_hits(), b.total_hits()),
+            ("payload bytes", a.total_comm_bytes(), b.total_comm_bytes()),
+        ];
+        for (what, va, vb) in checks {
+            if va != vb {
+                return Err(format!("trainer {i} {what}: sim {va} vs cluster {vb}"));
+            }
+        }
+    }
+    if sim_r.mean_epoch_time != cluster_r.mean_epoch_time {
+        return Err(format!(
+            "mean virtual epoch time: sim {} vs cluster {}",
+            sim_r.mean_epoch_time, cluster_r.mean_epoch_time
+        ));
+    }
+    Ok(())
+}

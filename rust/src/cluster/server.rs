@@ -1,0 +1,170 @@
+//! Per-partition feature servers: the remote end of the fetch RPC.
+//!
+//! Each partition gets one OS thread owning its (synthesized) feature
+//! shard.  It decodes [`Frame::FetchReq`] frames, materializes the
+//! requested rows, optionally emulates the fabric's α–β transfer time at a
+//! configurable wall-clock scale, and replies with a serialized
+//! [`Frame::FetchResp`] routed to the requesting trainer's prefetcher.
+//! The thread exits when every request sender has hung up.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::graph::features::fill_features;
+use crate::net::Network;
+use crate::partition::Partition;
+
+use super::prefetch::PrefetchMsg;
+use super::wire::Frame;
+
+/// Traffic served by one feature server.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub part: usize,
+    pub requests: u64,
+    pub nodes_served: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Frames that failed to decode or had an unexpected kind.
+    pub bad_frames: u64,
+}
+
+/// Wall-clock emulation of the RPC fabric, derived from the same α–β
+/// [`crate::net::NetParams`] the virtual-time sim charges: each reply is
+/// delayed by `scale × (α + β·bytes·contention)`.  `scale = 0` disables
+/// emulation (as fast as the hardware allows).
+#[derive(Debug, Clone, Copy)]
+pub struct WireDelay {
+    pub alpha: f64,
+    pub beta_contended: f64,
+    pub scale: f64,
+}
+
+impl WireDelay {
+    pub fn from_net(net: &Network, scale: f64) -> WireDelay {
+        WireDelay {
+            alpha: net.params.alpha,
+            beta_contended: net.params.beta * net.contention_factor(),
+            scale,
+        }
+    }
+
+    /// Sleep for the emulated transfer time of a `bytes`-sized payload.
+    pub fn emulate(&self, bytes: usize) {
+        if self.scale <= 0.0 {
+            return;
+        }
+        let secs = self.scale * (self.alpha + self.beta_contended * bytes as f64);
+        if secs > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+    }
+}
+
+/// Spawn the feature server for partition `part_id`.  `replies[t]` routes
+/// responses to trainer `t`'s prefetcher inbox.
+pub(crate) fn spawn_server(
+    part_id: usize,
+    feature_seed: u64,
+    feat_dim: usize,
+    part: Arc<Partition>,
+    rx: Receiver<Vec<u8>>,
+    replies: Vec<Sender<PrefetchMsg>>,
+    delay: WireDelay,
+) -> JoinHandle<ServerStats> {
+    std::thread::Builder::new()
+        .name(format!("rudder-server-{part_id}"))
+        .spawn(move || {
+            let mut stats = ServerStats { part: part_id, ..ServerStats::default() };
+            for bytes in rx.iter() {
+                stats.bytes_in += bytes.len() as u64;
+                let (frame, _) = match Frame::decode(&bytes) {
+                    Ok(ok) => ok,
+                    Err(_) => {
+                        stats.bad_frames += 1;
+                        continue;
+                    }
+                };
+                let Frame::FetchReq { req_id, from, nodes } = frame else {
+                    stats.bad_frames += 1;
+                    continue;
+                };
+                if from as usize >= replies.len() {
+                    stats.bad_frames += 1;
+                    continue;
+                }
+                debug_assert!(
+                    nodes.iter().all(|&n| part.owner_of(n) == part_id),
+                    "fetch routed to non-owner partition {part_id}"
+                );
+                let mut feats = vec![0.0f32; nodes.len() * feat_dim];
+                for (i, &n) in nodes.iter().enumerate() {
+                    fill_features(feature_seed, n, &mut feats[i * feat_dim..(i + 1) * feat_dim]);
+                }
+                stats.requests += 1;
+                stats.nodes_served += nodes.len() as u64;
+                let out =
+                    Frame::FetchResp { req_id, feat_dim: feat_dim as u32, nodes, feats }.encode();
+                stats.bytes_out += out.len() as u64;
+                delay.emulate(out.len());
+                // Prefetcher gone (trainer already finished): drop reply.
+                let _ = replies[from as usize].send(PrefetchMsg::Wire(out));
+            }
+            stats
+        })
+        .expect("spawn feature-server thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{generate, RmatParams};
+    use crate::net::NetParams;
+    use crate::partition::{partition, Method};
+    use crate::util::rng::Pcg32;
+    use std::sync::mpsc;
+
+    #[test]
+    fn serves_owned_nodes_with_correct_features() {
+        let csr = generate(
+            &RmatParams {
+                a: 0.57,
+                b: 0.19,
+                c: 0.19,
+                num_nodes: 400,
+                num_edges: 2400,
+                permute: true,
+            },
+            &mut Pcg32::new(5),
+        );
+        let part = Arc::new(partition(&csr, 2, Method::MetisLike, 1));
+        let (req_tx, req_rx) = mpsc::channel::<Vec<u8>>();
+        let (rep_tx, rep_rx) = mpsc::channel::<PrefetchMsg>();
+        let delay = WireDelay::from_net(&Network::new(NetParams::default(), 2), 0.0);
+        let owned: Vec<u32> = part.local_nodes[0][..3].to_vec();
+        let handle =
+            spawn_server(0, 42, 4, part.clone(), req_rx, vec![rep_tx.clone(), rep_tx], delay);
+        req_tx
+            .send(Frame::FetchReq { req_id: 9, from: 1, nodes: owned.clone() }.encode())
+            .unwrap();
+        let PrefetchMsg::Wire(resp) = rep_rx.recv().unwrap() else {
+            panic!("expected wire reply")
+        };
+        let (frame, _) = Frame::decode(&resp).unwrap();
+        let Frame::FetchResp { req_id, feat_dim, nodes, feats } = frame else {
+            panic!("expected FetchResp")
+        };
+        assert_eq!((req_id, feat_dim), (9, 4));
+        assert_eq!(nodes, owned);
+        let mut want = vec![0.0f32; 4];
+        fill_features(42, owned[1], &mut want);
+        assert_eq!(&feats[4..8], &want[..], "row 1 must be node {}'s features", owned[1]);
+        drop(req_tx);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.nodes_served, 3);
+        assert!(stats.bytes_out > stats.bytes_in);
+    }
+}

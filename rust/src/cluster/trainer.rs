@@ -1,0 +1,213 @@
+//! The cluster trainer thread: real concurrency around the sim trainer's
+//! deterministic core.
+//!
+//! Each trainer embeds a [`crate::sim::trainer::Trainer`] and drives it
+//! minibatch by minibatch: the virtual-time state machine remains the
+//! single source of truth for *what* happens (sampling, buffer lookups,
+//! controller decisions, replacement rounds, all traffic counters — which
+//! is what makes `same config + seed ⇒ identical counters` hold against
+//! the sim), while this thread executes the resulting I/O for real:
+//!
+//! 1. replacement admissions are handed to the prefetcher (async, overlaps
+//!    the compute phase),
+//! 2. the minibatch's buffer misses are fetched urgently,
+//! 3. the trainer blocks until every sampled remote feature is resident,
+//! 4. compute runs (emulated at `time_scale × T_DDP` wall seconds),
+//! 5. evictions + non-admitted transients leave the feature store,
+//! 6. the minibatch closes with a *real* DDP barrier: an `Allreduce` frame
+//!    to the hub, blocking on the reduced reply.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::classifier::trainer::TrainingSet;
+use crate::gnn::{AnalyticModel, SageShape};
+use crate::graph::Dataset;
+use crate::metrics::RunMetrics;
+use crate::net::Network;
+use crate::partition::Partition;
+use crate::sim::trainer::{FetchPlan, RunCtx};
+use crate::sim::{self, RunConfig};
+
+use super::prefetch::{FeatureStore, PrefetchMsg};
+use super::wire::Frame;
+
+/// Timeouts for feature waits and the allreduce barrier, bounded so that
+/// a dead thread fails the whole run with a diagnostic instead of
+/// deadlocking the remaining trainers (and the orchestrator's join)
+/// forever.  Emulation sleeps scale with the user-supplied `time_scale`,
+/// so the budgets do too: the base covers scheduling noise, the scaled
+/// term covers ~30 virtual seconds of emulated cost per round — far above
+/// any legitimate minibatch (T_DDP ≈ 0.1–0.3 virtual s, fetches less).
+fn io_timeout(time_scale: f64) -> Duration {
+    Duration::from_secs_f64(30.0 + 30.0 * time_scale.max(0.0))
+}
+
+/// Wall-clock accounting for one cluster trainer.
+#[derive(Debug, Clone, Default)]
+pub struct WallStats {
+    /// Total wall seconds inside the epoch loop.
+    pub total: f64,
+    /// Wall seconds per epoch.
+    pub epochs: Vec<f64>,
+    /// Wall seconds blocked waiting for remote features (the exposed,
+    /// un-overlapped part of communication).
+    pub fetch_wait: f64,
+    /// Wall seconds in (emulated) compute.
+    pub compute: f64,
+    /// Wall seconds blocked in the DDP barrier.
+    pub barrier: f64,
+    pub minibatches: u64,
+}
+
+/// Everything a trainer thread needs (moved into the thread at spawn).
+pub(crate) struct TrainerArgs {
+    pub part_id: usize,
+    pub cfg: RunConfig,
+    pub ds: Arc<Dataset>,
+    pub part: Arc<Partition>,
+    pub offline: Arc<Option<TrainingSet>>,
+    pub store: Arc<FeatureStore>,
+    pub prefetch_tx: Sender<PrefetchMsg>,
+    pub hub_tx: Sender<Vec<u8>>,
+    pub hub_rx: Receiver<Vec<u8>>,
+    pub max_mb_per_epoch: usize,
+    pub time_scale: f64,
+}
+
+pub(crate) struct TrainerOutput {
+    pub metrics: RunMetrics,
+    pub wall: WallStats,
+}
+
+pub(crate) fn run_trainer(a: TrainerArgs) -> TrainerOutput {
+    let cfg = &a.cfg;
+    let ds: &Dataset = &a.ds;
+    let part: &Partition = &a.part;
+    let offline = (*a.offline).as_ref();
+
+    // Identical model constants to `sim::run_on` (parity requirement).
+    let shape = SageShape {
+        batch: cfg.batch_size,
+        fanout1: cfg.fanout1,
+        fanout2: cfg.fanout2,
+        feat_dim: ds.spec.feat_dim,
+        hidden: cfg.hidden,
+        classes: ds.spec.num_classes,
+    };
+    let net = Network::new(cfg.net.clone(), cfg.num_trainers);
+    let compute = AnalyticModel::new(cfg.compute.clone(), shape);
+    let allreduce = net.allreduce_time(shape.param_bytes());
+    let grads_len = (shape.param_bytes() / 4) as usize;
+
+    let mut t = sim::build_trainer(cfg, ds, part, a.part_id, offline);
+    t.fetch_plan = Some(FetchPlan::default());
+
+    // Warm start (MassiveGNN): stream the prepopulated residents' features
+    // in the background; per-minibatch waits cover stragglers.
+    let warm = t.buffer.resident_nodes();
+    if !warm.is_empty() {
+        let _ = a.prefetch_tx.send(PrefetchMsg::Fetch(warm));
+    }
+
+    let total_minibatches = (a.max_mb_per_epoch * cfg.epochs) as u64;
+    let ctx = RunCtx {
+        ds,
+        part,
+        net,
+        compute,
+        mode: cfg.mode,
+        epochs_total: cfg.epochs,
+        total_minibatches,
+    };
+
+    let mut wall = WallStats::default();
+    let mut round: u64 = 0;
+    let wait_budget = io_timeout(a.time_scale);
+    // The barrier additionally waits on the *slowest* peer's whole round.
+    let barrier_budget = wait_budget * 2;
+    let run_start = Instant::now();
+    for epoch in 0..cfg.epochs {
+        let order = t.sampler.epoch_order(&t.train_nodes, epoch);
+        let epoch_vstart = t.clock;
+        let epoch_wstart = Instant::now();
+        for mb in 0..a.max_mb_per_epoch {
+            // Deterministic core: sampling, lookup, decision, counters.
+            let active = t.step_minibatch(&ctx, epoch, mb, &order);
+            if active {
+                let mut plan = t
+                    .fetch_plan
+                    .replace(FetchPlan::default())
+                    .expect("fetch plan armed");
+                // 1. Async prefetch of the replacement admissions — these
+                //    overlap compute; the sim charges them as hidden.
+                if !plan.admitted.is_empty() {
+                    let admitted = std::mem::take(&mut plan.admitted);
+                    let _ = a.prefetch_tx.send(PrefetchMsg::Fetch(admitted));
+                }
+                // 2. Urgent fetch of this minibatch's misses (in-flight
+                //    dedup merges them with any pending prefetch).  Cloned:
+                //    `missed` is re-read for the transient cleanup below.
+                if !plan.missed.is_empty() {
+                    let _ = a.prefetch_tx.send(PrefetchMsg::Fetch(plan.missed.clone()));
+                }
+                // 3. Assembly barrier: every sampled remote feature —
+                //    buffer hits and fetched misses — must be resident.
+                let w = Instant::now();
+                if let Err(e) = a.store.wait_all(&plan.unique_remote, wait_budget) {
+                    panic!("trainer {}: {e}", a.part_id);
+                }
+                wall.fetch_wait += w.elapsed().as_secs_f64();
+                // 4. Compute (scaled wall-time emulation of T_DDP).
+                if a.time_scale > 0.0 && plan.t_ddp > 0.0 {
+                    let w = Instant::now();
+                    std::thread::sleep(Duration::from_secs_f64(plan.t_ddp * a.time_scale));
+                    wall.compute += w.elapsed().as_secs_f64();
+                }
+                // 5. Bound the store: evictions plus transient misses that
+                //    were not admitted this round.
+                let mut drop_nodes = plan.evicted;
+                for &n in &plan.missed {
+                    if !t.buffer.contains(n) {
+                        drop_nodes.push(n);
+                    }
+                }
+                if !drop_nodes.is_empty() {
+                    let _ = a.prefetch_tx.send(PrefetchMsg::Evict(drop_nodes));
+                }
+                wall.minibatches += 1;
+            }
+            // 6. DDP barrier: every trainer joins every round (inactive
+            //    ones too), mirroring the sim's barrier arithmetic.
+            let frame = Frame::Allreduce {
+                part: a.part_id as u32,
+                round,
+                vclock: t.clock,
+                grads: vec![0.0; grads_len],
+            };
+            let w = Instant::now();
+            a.hub_tx.send(frame.encode()).expect("allreduce hub hung up");
+            let reply = match a.hub_rx.recv_timeout(barrier_budget) {
+                Ok(r) => r,
+                Err(e) => panic!(
+                    "trainer {}: allreduce barrier round {round} unresponsive ({e}); \
+                     a peer trainer thread likely died",
+                    a.part_id
+                ),
+            };
+            wall.barrier += w.elapsed().as_secs_f64();
+            let (reduced, _) = Frame::decode(&reply).expect("bad hub frame");
+            let Frame::Allreduce { vclock: max_vclock, .. } = reduced else {
+                panic!("unexpected hub frame kind");
+            };
+            t.clock = max_vclock + allreduce;
+            round += 1;
+        }
+        t.metrics.epoch_times.push(t.clock - epoch_vstart);
+        wall.epochs.push(epoch_wstart.elapsed().as_secs_f64());
+    }
+    wall.total = run_start.elapsed().as_secs_f64();
+    let _ = a.prefetch_tx.send(PrefetchMsg::Shutdown);
+    TrainerOutput { metrics: t.metrics, wall }
+}

@@ -1,0 +1,256 @@
+//! Wire format for the in-process cluster runtime.
+//!
+//! Every message between trainer, prefetcher, feature server, and the
+//! allreduce hub crosses its channel as a *serialized frame* — a
+//! length-prefixed byte buffer, never a shared reference — so the RPC path
+//! pays honest encode/decode cost and the protocol could move to a socket
+//! unchanged.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! [u32 body_len][u8 kind][kind-specific payload]
+//! ```
+//!
+//! Vectors are encoded as `[u32 count][elements...]`.  Decoding validates
+//! the kind byte, every length against the remaining bytes (truncated
+//! frames are rejected, never panicked on), cross-field consistency
+//! (`feats.len() == nodes.len() × feat_dim`), and that the body is fully
+//! consumed (no trailing bytes).
+
+use crate::error::Result;
+
+/// Frame kind tags (the `u8` after the length prefix).
+const KIND_FETCH_REQ: u8 = 1;
+const KIND_FETCH_RESP: u8 = 2;
+const KIND_ALLREDUCE: u8 = 3;
+
+/// Upper bound on a frame body; anything larger is rejected as malformed
+/// before any allocation happens.
+pub const MAX_FRAME_BYTES: usize = 1 << 28;
+
+/// One RPC message of the cluster protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Trainer `from` asks a feature server for `nodes`' features.
+    FetchReq { req_id: u64, from: u32, nodes: Vec<u32> },
+    /// Server reply: `feats` is row-major `[nodes.len() × feat_dim]`.
+    FetchResp { req_id: u64, feat_dim: u32, nodes: Vec<u32>, feats: Vec<f32> },
+    /// DDP gradient sync: trainer → hub carries the local gradient shard
+    /// and the trainer's virtual clock; hub → trainer carries the reduced
+    /// gradients and the barrier-wide max clock.
+    Allreduce { part: u32, round: u64, vclock: f64, grads: Vec<f32> },
+}
+
+impl Frame {
+    /// Serialize to a length-prefixed byte buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(64);
+        match self {
+            Frame::FetchReq { req_id, from, nodes } => {
+                body.push(KIND_FETCH_REQ);
+                put_u64(&mut body, *req_id);
+                put_u32(&mut body, *from);
+                put_u32(&mut body, nodes.len() as u32);
+                for &n in nodes {
+                    put_u32(&mut body, n);
+                }
+            }
+            Frame::FetchResp { req_id, feat_dim, nodes, feats } => {
+                body.push(KIND_FETCH_RESP);
+                put_u64(&mut body, *req_id);
+                put_u32(&mut body, *feat_dim);
+                put_u32(&mut body, nodes.len() as u32);
+                for &n in nodes {
+                    put_u32(&mut body, n);
+                }
+                put_u32(&mut body, feats.len() as u32);
+                for &f in feats {
+                    body.extend_from_slice(&f.to_le_bytes());
+                }
+            }
+            Frame::Allreduce { part, round, vclock, grads } => {
+                body.push(KIND_ALLREDUCE);
+                put_u32(&mut body, *part);
+                put_u64(&mut body, *round);
+                body.extend_from_slice(&vclock.to_le_bytes());
+                put_u32(&mut body, grads.len() as u32);
+                for &g in grads {
+                    body.extend_from_slice(&g.to_le_bytes());
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse one frame from the start of `buf`; returns the frame and the
+    /// total bytes consumed (prefix + body).  Rejects truncated input,
+    /// unknown kinds, inconsistent lengths, and trailing body bytes.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize)> {
+        crate::ensure!(buf.len() >= 4, "wire: truncated length prefix");
+        let body_len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        crate::ensure!(body_len >= 1, "wire: empty frame body");
+        crate::ensure!(body_len <= MAX_FRAME_BYTES, "wire: frame body {body_len} exceeds cap");
+        crate::ensure!(
+            buf.len() >= 4 + body_len,
+            "wire: truncated frame (need {body_len} body bytes, have {})",
+            buf.len() - 4
+        );
+        let mut r = Reader { b: &buf[4..4 + body_len], pos: 0 };
+        let kind = r.u8()?;
+        let frame = match kind {
+            KIND_FETCH_REQ => {
+                let req_id = r.u64()?;
+                let from = r.u32()?;
+                let nodes = r.vec_u32()?;
+                Frame::FetchReq { req_id, from, nodes }
+            }
+            KIND_FETCH_RESP => {
+                let req_id = r.u64()?;
+                let feat_dim = r.u32()?;
+                let nodes = r.vec_u32()?;
+                let feats = r.vec_f32()?;
+                crate::ensure!(
+                    feats.len() == nodes.len() * feat_dim as usize,
+                    "wire: FetchResp payload mismatch ({} feats for {} nodes × dim {feat_dim})",
+                    feats.len(),
+                    nodes.len()
+                );
+                Frame::FetchResp { req_id, feat_dim, nodes, feats }
+            }
+            KIND_ALLREDUCE => {
+                let part = r.u32()?;
+                let round = r.u64()?;
+                let vclock = r.f64()?;
+                let grads = r.vec_f32()?;
+                Frame::Allreduce { part, round, vclock, grads }
+            }
+            other => crate::bail!("wire: unknown frame kind {other}"),
+        };
+        crate::ensure!(
+            r.pos == body_len,
+            "wire: {} trailing bytes in frame body",
+            body_len - r.pos
+        );
+        Ok((frame, 4 + body_len))
+    }
+
+    /// Payload size on the wire (what the byte counters record).
+    pub fn encoded_len(&self) -> usize {
+        // Cheap arithmetic mirror of `encode` (no allocation).
+        4 + 1
+            + match self {
+                Frame::FetchReq { nodes, .. } => 8 + 4 + 4 + 4 * nodes.len(),
+                Frame::FetchResp { nodes, feats, .. } => {
+                    8 + 4 + 4 + 4 * nodes.len() + 4 + 4 * feats.len()
+                }
+                Frame::Allreduce { grads, .. } => 4 + 8 + 8 + 4 + 4 * grads.len(),
+            }
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked cursor over a frame body.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(
+            self.pos + n <= self.b.len(),
+            "wire: frame body truncated (need {n} bytes at offset {})",
+            self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let count = self.u32()? as usize;
+        // Validate before allocating: each element is 4 bytes.
+        crate::ensure!(
+            count <= (self.b.len() - self.pos) / 4,
+            "wire: u32 vector length {count} exceeds frame body"
+        );
+        let mut v = Vec::with_capacity(count);
+        for _ in 0..count {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let count = self.u32()? as usize;
+        crate::ensure!(
+            count <= (self.b.len() - self.pos) / 4,
+            "wire: f32 vector length {count} exceeds frame body"
+        );
+        let mut v = Vec::with_capacity(count);
+        for _ in 0..count {
+            let s = self.take(4)?;
+            v.push(f32::from_le_bytes([s[0], s[1], s[2], s[3]]));
+        }
+        Ok(v)
+    }
+}
+
+// The adversarial suite (truncation at every cut, unknown kinds, oversized
+// vector counts, payload mismatches) lives in `tests/wire.rs` — one place,
+// so codec changes update coverage once.  This module keeps only a
+// round-trip smoke for unit-test granularity.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        let frames = [
+            Frame::FetchReq { req_id: 7, from: 2, nodes: vec![1, 9, 1 << 30] },
+            Frame::FetchResp {
+                req_id: 7,
+                feat_dim: 2,
+                nodes: vec![1, 9],
+                feats: vec![0.5, -1.0, 3.25, f32::MIN],
+            },
+            Frame::Allreduce { part: 0, round: 41, vclock: 1.5e3, grads: vec![0.0; 5] },
+        ];
+        for f in frames {
+            let bytes = f.encode();
+            assert_eq!(bytes.len(), f.encoded_len());
+            let (back, used) = Frame::decode(&bytes).unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(back, f);
+        }
+    }
+}

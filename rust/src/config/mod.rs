@@ -93,10 +93,31 @@ pub fn load(path: &Path) -> crate::error::Result<RunConfig> {
     apply(&doc, RunConfig::default())
 }
 
-/// Load calibration constants (written by `rudder calibrate`) if present.
+/// Does a calibration document apply to the runtime backend this build
+/// would select?  Untagged (pre-tagging) files are accepted; a mismatched
+/// tag means the constants were measured on a different backend and must
+/// not be silently mixed in.
+pub fn calibration_matches_backend(doc: &Json, active: &str) -> bool {
+    match doc.get("backend").and_then(Json::as_str) {
+        Some(tag) => tag == active,
+        None => true,
+    }
+}
+
+/// Load calibration constants (written by `rudder calibrate`) if present
+/// and measured on the currently active runtime backend.
 pub fn load_calibration(cfg: &mut RunConfig) {
     let path = Path::new("configs/calibration.toml");
     if let Ok(doc) = tomlite::parse_file(path) {
+        let active = crate::runtime::active_backend_name();
+        if !calibration_matches_backend(&doc, active) {
+            eprintln!(
+                "warning: ignoring configs/calibration.toml — measured on backend '{}' \
+                 but this build runs '{active}'; re-run `rudder calibrate`",
+                doc.get("backend").and_then(Json::as_str).unwrap_or("?"),
+            );
+            return;
+        }
         if let Ok(updated) = apply(&doc, cfg.clone()) {
             *cfg = updated;
         }
@@ -149,5 +170,24 @@ base_overhead = 0.2
         let doc = tomlite::parse("").unwrap();
         let cfg = apply(&doc, RunConfig::default()).unwrap();
         assert_eq!(cfg.dataset, "products");
+    }
+
+    #[test]
+    fn calibration_backend_tag_gates_application() {
+        let doc = tomlite::parse(
+            "backend = \"pjrt\"\n[compute]\nbase_overhead = 0.5",
+        )
+        .unwrap();
+        assert!(calibration_matches_backend(&doc, "pjrt"));
+        assert!(!calibration_matches_backend(&doc, "interpreter"));
+        // Untagged legacy files still apply.
+        let legacy = tomlite::parse("[compute]\nbase_overhead = 0.5").unwrap();
+        assert!(calibration_matches_backend(&legacy, "interpreter"));
+        // The tag itself is ignored by `apply` (unknown keys pass through).
+        let cfg = apply(&doc, RunConfig::default()).unwrap();
+        assert_eq!(cfg.compute.base_overhead, 0.5);
+        // The default (zero-dep) build always resolves to the interpreter.
+        #[cfg(not(feature = "pjrt"))]
+        assert_eq!(crate::runtime::active_backend_name(), "interpreter");
     }
 }

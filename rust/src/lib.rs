@@ -9,8 +9,11 @@
 //!   model, DDP trainers), the persistent buffer with the paper's
 //!   frequency-decay scoring policy, the prefetcher/inference task pipeline
 //!   of Algorithm 1, the LLM-agent workflow (MetricsCollector →
-//!   ContextBuilder → DecisionMaker), the ML-classifier controllers, and
-//!   the full evaluation harness (every figure and table of §5).
+//!   ContextBuilder → DecisionMaker), the ML-classifier controllers, the
+//!   in-process distributed [`cluster`] runtime (real trainer/server
+//!   threads, wire-format RPC, async prefetching — traffic-parity-checked
+//!   against the sim), and the full evaluation harness (every figure and
+//!   table of §5).
 //! * **Layer 2** — `python/compile/model.py`: GraphSAGE fwd/bwd + the MLP
 //!   decision classifier, AOT-lowered to HLO text.
 //! * **Layer 1** — `python/compile/kernels/`: Pallas kernels (fused SAGE
@@ -30,6 +33,7 @@
 pub mod agent;
 pub mod cli;
 pub mod buffer;
+pub mod cluster;
 pub mod error;
 pub mod classifier;
 pub mod config;

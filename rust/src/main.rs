@@ -5,6 +5,7 @@
 use std::sync::Arc;
 
 use rudder::cli::{Args, USAGE};
+use rudder::cluster::{parity_check, run_cluster_on, ClusterConfig};
 use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, Table};
 use rudder::eval::{harness, pass_at_1, Quality};
 use rudder::gnn::SageRunner;
@@ -30,6 +31,7 @@ fn main() {
     };
     let result = match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "cluster" => cmd_cluster(&args),
         "experiment" => cmd_experiment(&args),
         "trace" => cmd_trace(&args),
         "calibrate" => cmd_calibrate(&args),
@@ -149,6 +151,141 @@ fn cmd_train(args: &Args) -> rudder::error::Result<()> {
     Ok(())
 }
 
+fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
+    let cfg = config_from_args(args)?;
+    let time_scale = args.opt_parse::<f64>("time-scale")?.unwrap_or(0.02);
+    let ccfg = ClusterConfig { run: cfg.clone(), time_scale };
+    println!(
+        "rudder cluster: {} scale={} trainers={} buffer={:.0}% epochs={} controller={} mode={:?} time-scale={}",
+        cfg.dataset,
+        cfg.scale,
+        cfg.num_trainers,
+        cfg.buffer_pct * 100.0,
+        cfg.epochs,
+        cfg.controller.label(),
+        cfg.mode,
+        time_scale,
+    );
+    let (ds, part) = build_cluster(&cfg)?;
+    println!(
+        "graph: {} nodes, {} edges; partition cut={}",
+        ds.csr.num_nodes(),
+        ds.csr.num_arcs() / 2,
+        part.edge_cut(&ds.csr)
+    );
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    // Classifier controllers need offline training data, exactly as in
+    // `cmd_train` — and the parity sim below must see the same set.
+    let offline = if matches!(cfg.controller, ControllerSpec::Classifier { .. }) {
+        println!("collecting offline classifier traces...");
+        Some(harness::offline_training_set(Quality::Quick))
+    } else {
+        None
+    };
+    let r = run_cluster_on(ds.clone(), part.clone(), &ccfg, offline.clone())?;
+    let e = &r.experiment;
+    let wire = r.wire_total();
+    let fetch_wait: f64 = r.walls.iter().map(|w| w.fetch_wait).sum();
+    let compute: f64 = r.walls.iter().map(|w| w.compute).sum();
+    let mut t = Table::new("cluster run summary", &["metric", "value"]);
+    t.row(vec!["variant".into(), e.label.clone()]);
+    t.row(vec!["wall-clock total".into(), fmt_secs(r.wall_total)]);
+    t.row(vec!["wall-clock / epoch".into(), fmt_secs(r.mean_epoch_wall())]);
+    t.row(vec!["virtual epoch time".into(), fmt_secs(e.mean_epoch_time)]);
+    t.row(vec!["steady %-hits".into(), fmt_pct(e.steady_hits_pct)]);
+    t.row(vec!["fetched nodes (logical)".into(), fmt_count(e.total_comm_nodes)]);
+    t.row(vec!["payload bytes (logical)".into(), fmt_count(e.total_comm_bytes)]);
+    t.row(vec![
+        "wire bytes req/resp".into(),
+        format!("{}/{}", fmt_count(wire.req_bytes), fmt_count(wire.resp_bytes)),
+    ]);
+    t.row(vec!["wire nodes requested".into(), fmt_count(wire.nodes_requested)]);
+    t.row(vec!["wire nodes deduped".into(), fmt_count(wire.nodes_deduped)]);
+    t.row(vec![
+        "RPC frames req/resp".into(),
+        format!("{}/{}", wire.req_frames, wire.resp_frames),
+    ]);
+    if wire.bad_frames > 0 {
+        t.row(vec!["wire BAD frames".into(), fmt_count(wire.bad_frames)]);
+    }
+    t.row(vec!["allreduce rounds".into(), fmt_count(r.allreduce_rounds)]);
+    t.row(vec![
+        "Σ fetch-wait / Σ compute".into(),
+        format!("{} / {}", fmt_secs(fetch_wait), fmt_secs(compute)),
+    ]);
+    t.emit("cluster_summary");
+
+    if args.flag("parity") {
+        println!("parity: re-running the virtual-time sim with the same config + seed...");
+        let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, offline.as_ref());
+        match parity_check(&sim_r, &r.experiment) {
+            Ok(()) => println!(
+                "parity OK: fetched-node / buffer-hit / payload-byte counters identical \
+                 across {} trainers",
+                cfg.num_trainers
+            ),
+            Err(diff) => rudder::bail!("traffic parity FAILED: {diff}"),
+        }
+    }
+
+    if args.flag("compare-prefetch") {
+        let mut off = ccfg.clone();
+        off.run.controller = ControllerSpec::NoPrefetch;
+        println!("compare: re-running with prefetching disabled (DistDGL baseline)...");
+        let r_off = run_cluster_on(ds, part, &off, None)?;
+        let on_fetch_wait: f64 = r.walls.iter().map(|w| w.fetch_wait).sum();
+        let off_fetch_wait: f64 = r_off.walls.iter().map(|w| w.fetch_wait).sum();
+        let mut t = Table::new(
+            "prefetch on vs off (wall-clock)",
+            &["variant", "wall total", "wall/epoch", "fetch-wait", "fetched nodes"],
+        );
+        t.row(vec![
+            e.label.clone(),
+            fmt_secs(r.wall_total),
+            fmt_secs(r.mean_epoch_wall()),
+            fmt_secs(on_fetch_wait),
+            fmt_count(e.total_comm_nodes),
+        ]);
+        t.row(vec![
+            r_off.experiment.label.clone(),
+            fmt_secs(r_off.wall_total),
+            fmt_secs(r_off.mean_epoch_wall()),
+            fmt_secs(off_fetch_wait),
+            fmt_count(r_off.experiment.total_comm_nodes),
+        ]);
+        t.emit("cluster_prefetch_compare");
+        if r.wall_total > 0.0 {
+            println!("prefetch speedup: {:.2}x (wall-clock)", r_off.wall_total / r.wall_total);
+        }
+        // With emulated costs the win is structural: the baseline blocks on
+        // every remote feature every minibatch, the prefetching run only on
+        // its misses.  Gate on the *blocking* component (fetch-wait), which
+        // isolates the overlap effect from the compute sleeps and scheduler
+        // jitter that dominate total wall on loaded CI machines; totals are
+        // reported above.  Without emulation (--time-scale 0) both runs are
+        // pure overhead noise, so only report.
+        if time_scale > 0.0
+            && cfg.controller != ControllerSpec::NoPrefetch
+            && on_fetch_wait >= off_fetch_wait
+        {
+            rudder::bail!(
+                "prefetching did not reduce fetch blocking ({} vs {} for the no-prefetch \
+                 baseline): prefetch/compute overlap regressed",
+                fmt_secs(on_fetch_wait),
+                fmt_secs(off_fetch_wait)
+            );
+        }
+        if r.wall_total >= r_off.wall_total {
+            println!(
+                "note: total wall-clock did not improve this run (margin below noise at \
+                 time-scale {time_scale}); fetch-wait above is the reliable overlap signal"
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> rudder::error::Result<()> {
     let id = args
         .positional
@@ -240,15 +377,23 @@ fn cmd_calibrate(_args: &Args) -> rudder::error::Result<()> {
         }
     }
     let mean = rudder::util::stats::mean(&times);
-    // Scale measured (artifact batch) step to the simulation batch.
+    // Scale measured (artifact batch) step to the simulation batch.  The
+    // backend tag keeps interpreter- and PJRT-derived constants from ever
+    // being silently mixed: `config::load_calibration` refuses a file
+    // whose tag does not match the backend the current build would run.
     let body = format!(
-        "# written by `rudder calibrate` — measured on {}\n[compute]\nbase_overhead = {:.6}\n",
+        "# written by `rudder calibrate` — measured on {}\nbackend = \"{}\"\n[compute]\nbase_overhead = {:.6}\n",
         engine.platform(),
+        engine.backend_name(),
         mean,
     );
     std::fs::create_dir_all("configs")?;
     std::fs::write("configs/calibration.toml", &body)?;
-    println!("wrote configs/calibration.toml (mean step {})", fmt_secs(mean));
+    println!(
+        "wrote configs/calibration.toml (mean step {}, backend {})",
+        fmt_secs(mean),
+        engine.backend_name()
+    );
     Ok(())
 }
 

@@ -16,6 +16,8 @@ pub struct MinibatchRecord {
     pub trainer: usize,
     /// %-Hits: sampled remote nodes found in the persistent buffer.
     pub hits_pct: f64,
+    /// Absolute buffer-hit count (traffic-parity checks compare this).
+    pub hits: u64,
     /// Remote nodes fetched this minibatch (misses + replacement fetches).
     pub comm_nodes: u64,
     pub comm_bytes: u64,
@@ -85,6 +87,47 @@ pub struct RunMetrics {
     pub epoch_times: Vec<f64>,
 }
 
+/// Wire-level traffic counters from the in-process cluster runtime
+/// ([`crate::cluster`]): what actually crossed the serialized RPC channels,
+/// as opposed to the *logical* per-minibatch fetch accounting in
+/// [`MinibatchRecord`].  Coalescing (one frame per owner partition) and
+/// in-flight dedup make these smaller than the logical counters; they are
+/// timing-dependent, so parity checks never compare them.
+#[derive(Debug, Clone, Default)]
+pub struct WireStats {
+    /// Request frames / bytes sent (trainer → feature server).
+    pub req_frames: u64,
+    pub req_bytes: u64,
+    /// Response frames / bytes received (feature server → trainer).
+    pub resp_frames: u64,
+    pub resp_bytes: u64,
+    /// Node fetches actually put on the wire.
+    pub nodes_requested: u64,
+    /// Node fetches suppressed because the feature was already cached or
+    /// already in flight (the prefetch engine's dedup).
+    pub nodes_deduped: u64,
+    /// Node features received and stored.
+    pub nodes_received: u64,
+    /// Frames that failed to decode or had an unexpected kind.  Non-zero
+    /// means a protocol bug: the nodes of a lost response would stay
+    /// "in flight" and eventually surface as a feature-wait timeout.
+    pub bad_frames: u64,
+}
+
+impl WireStats {
+    /// Accumulate another trainer's counters (cluster-level totals).
+    pub fn merge(&mut self, o: &WireStats) {
+        self.req_frames += o.req_frames;
+        self.req_bytes += o.req_bytes;
+        self.resp_frames += o.resp_frames;
+        self.resp_bytes += o.resp_bytes;
+        self.nodes_requested += o.nodes_requested;
+        self.nodes_deduped += o.nodes_deduped;
+        self.nodes_received += o.nodes_received;
+        self.bad_frames += o.bad_frames;
+    }
+}
+
 impl RunMetrics {
     pub fn mean_epoch_time(&self) -> f64 {
         stats::mean(&self.epoch_times)
@@ -106,6 +149,11 @@ impl RunMetrics {
 
     pub fn total_comm_nodes(&self) -> u64 {
         self.minibatches.iter().map(|m| m.comm_nodes).sum()
+    }
+
+    /// Total buffer hits across the run (traffic-parity counter).
+    pub fn total_hits(&self) -> u64 {
+        self.minibatches.iter().map(|m| m.hits).sum()
     }
 
     pub fn total_comm_bytes(&self) -> u64 {
@@ -169,6 +217,7 @@ mod tests {
             minibatch: mb,
             trainer: 0,
             hits_pct: hits,
+            hits: hits as u64,
             comm_nodes: comm,
             comm_bytes: comm * 400,
             unique_remote: comm,

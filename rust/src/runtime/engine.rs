@@ -109,6 +109,14 @@ impl Engine {
         self.backend.platform()
     }
 
+    /// Short backend identifier ("interpreter", "pjrt") — `rudder
+    /// calibrate` stamps this into `configs/calibration.toml` so
+    /// constants measured on one backend are never silently applied to
+    /// runs on another.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
     fn entry(&self, name: &str) -> Result<&EntrySpec> {
         self.manifest
             .entry(name)

@@ -48,21 +48,42 @@ impl RuntimeBackend for InterpreterBackend {
 // ---------------------------------------------------------------------------
 // dense helpers (all row-major f32)
 
-/// `(m, k) @ (k, n)` — ikj loop order keeps the inner loop streaming.
+/// Cache-block sizes for [`mm`]: a `TILE_K × TILE_N` panel of B is
+/// 64 KiB — it stays resident in L1/L2 while every row of A streams over
+/// it, instead of re-reading all of B per output row as the unblocked
+/// i-k-j loop did.  Summation order per output element is unchanged (k
+/// strictly ascending), so results are bit-identical to the naive loop —
+/// the finite-difference tests below hold without tolerance changes.
+const MM_TILE_K: usize = 64;
+const MM_TILE_N: usize = 256;
+
+/// `(m, k) @ (k, n)` — i-k-j loop order inside fixed-size (k, n) tiles;
+/// the inner loop streams, the zero-skip keeps ReLU-sparse activations
+/// cheap.
 fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + MM_TILE_K).min(k);
+        let mut n0 = 0;
+        while n0 < n {
+            let n1 = (n0 + MM_TILE_N).min(n);
+            for i in 0..m {
+                let arow = &a[i * k + k0..i * k + k1];
+                let orow = &mut out[i * n + n0..i * n + n1];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[(k0 + kk) * n + n0..(k0 + kk) * n + n1];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
             }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
+            n0 = n1;
         }
+        k0 = k1;
     }
     out
 }
@@ -467,6 +488,40 @@ mod tests {
         let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
         let out = mm(&a, &b, 2, 3, 2);
         assert_eq!(out, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn mm_blocked_bitwise_matches_naive_across_tile_edges() {
+        // Reference i-k-j loop without tiling; the blocked mm keeps k
+        // strictly ascending per output element, so results must be
+        // bit-identical, including at sizes that straddle tile borders.
+        fn mm_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    let av = a[i * k + kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        out[i * n + j] += av * b[kk * n + j];
+                    }
+                }
+            }
+            out
+        }
+        let mut rng = Pcg32::new(11);
+        for (m, k, n) in [
+            (3, MM_TILE_K - 1, MM_TILE_N + 3),
+            (2, MM_TILE_K + 1, 5),
+            (5, 2 * MM_TILE_K + 7, MM_TILE_N),
+            (1, 1, 1),
+        ] {
+            let mut a = randn(&mut rng, m * k, 1.0);
+            a[0] = 0.0; // exercise the zero-skip path
+            let b = randn(&mut rng, k * n, 1.0);
+            assert_eq!(mm(&a, &b, m, k, n), mm_naive(&a, &b, m, k, n), "{m}x{k}x{n}");
+        }
     }
 
     #[test]

@@ -23,3 +23,18 @@ pub use backend::RuntimeBackend;
 pub use engine::Engine;
 pub use interp::InterpreterBackend;
 pub use tensor::{Tensor, TensorData};
+
+/// The backend [`Engine::try_load_default`] would select in this build
+/// and environment, without loading anything: `pjrt` when the feature is
+/// on *and* on-disk artifacts exist (mirroring [`Engine::load`]), else
+/// the interpreter.  Used to validate that `configs/calibration.toml`
+/// constants were measured on the backend that is about to run.
+pub fn active_backend_name() -> &'static str {
+    #[cfg(feature = "pjrt")]
+    {
+        if Manifest::default_dir().join("manifest.json").exists() {
+            return "pjrt";
+        }
+    }
+    "interpreter"
+}

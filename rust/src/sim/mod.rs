@@ -12,5 +12,8 @@ pub mod run;
 pub mod trainer;
 
 pub use controller::{Controller, ControllerSpec};
-pub use run::{build_cluster, run_experiment, run_on, trace_only, ExperimentResult, RunConfig};
-pub use trainer::Mode;
+pub use run::{
+    build_cluster, build_trainer, max_minibatches_per_epoch, run_experiment, run_on, trace_only,
+    ExperimentResult, RunConfig,
+};
+pub use trainer::{FetchPlan, Mode};

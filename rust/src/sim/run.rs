@@ -81,7 +81,10 @@ pub struct ExperimentResult {
 }
 
 impl ExperimentResult {
-    fn aggregate(label: String, per_trainer: Vec<RunMetrics>, epoch_times: Vec<f64>) -> Self {
+    /// Aggregate per-trainer series into the run-level summary.  Public so
+    /// the cluster runtime ([`crate::cluster`]) reports through the same
+    /// shape as the virtual-time sim.
+    pub fn aggregate(label: String, per_trainer: Vec<RunMetrics>, epoch_times: Vec<f64>) -> Self {
         let mean_hits = stats::mean(
             &per_trainer.iter().map(RunMetrics::mean_hits_pct).collect::<Vec<_>>(),
         );
@@ -149,6 +152,70 @@ pub fn run_experiment(cfg: &RunConfig) -> crate::error::Result<ExperimentResult>
     Ok(run_on(&ds, &part, cfg, None))
 }
 
+/// Build one trainer exactly as [`run_on`] does.  Shared with the cluster
+/// runtime ([`crate::cluster`]) so both runtimes derive identical samplers,
+/// controllers, buffers, and per-trainer seeds — the foundation of the
+/// traffic-parity guarantee.
+pub fn build_trainer(
+    cfg: &RunConfig,
+    ds: &Dataset,
+    part: &Partition,
+    p: usize,
+    offline: Option<&TrainingSet>,
+) -> Trainer {
+    let train_nodes = part.train_nodes_of(p, &ds.train_nodes);
+    let halo2 = part.halo_k(&ds.csr, p, 2);
+    let capacity = if cfg.controller.uses_buffer() {
+        ((halo2.len() as f64 * cfg.buffer_pct) as usize).max(1)
+    } else {
+        0
+    };
+    let sampler = Sampler::new(
+        p,
+        cfg.batch_size,
+        cfg.fanout1,
+        cfg.fanout2,
+        derive_seed(cfg.seed, &[p as u64, 0x5A]),
+    );
+    let pretrained = offline.map(|set| {
+        if let ControllerSpec::Classifier { kind, .. } = &cfg.controller {
+            let mut model = kind.build(derive_seed(cfg.seed, &[p as u64, 0xC1]));
+            if !set.is_empty() {
+                model.fit(&set.xs, &set.ys);
+            }
+            model
+        } else {
+            crate::classifier::Kind::LogReg.build(0)
+        }
+    });
+    let mut controller = cfg
+        .controller
+        .build(derive_seed(cfg.seed, &[p as u64, 0xA6]), pretrained);
+    controller.set_eval_lag(if cfg.mode == Mode::Async { 1 } else { 0 });
+    let mut t = Trainer::new(p, capacity, halo2.len(), sampler, controller, train_nodes);
+    t.buffer = crate::buffer::PersistentBuffer::new(capacity, cfg.buffer_policy);
+    if cfg.controller.prepopulates() {
+        let order = massivegnn::prefetch_order(&ds.csr, part, p, capacity);
+        t.buffer.prepopulate(&order);
+    }
+    t
+}
+
+/// Max minibatches-per-epoch across trainers — the number of DDP barrier
+/// rounds per epoch.  Shared with the cluster runtime, whose allreduce hub
+/// must agree on the round count before spawning threads.
+pub fn max_minibatches_per_epoch(cfg: &RunConfig, ds: &Dataset, part: &Partition) -> usize {
+    (0..cfg.num_trainers)
+        .map(|p| {
+            part.train_nodes_of(p, &ds.train_nodes)
+                .len()
+                .div_ceil(cfg.batch_size)
+                .max(1)
+        })
+        .max()
+        .unwrap_or(1)
+}
+
 /// Run on a pre-built cluster.  `offline` supplies classifier training
 /// data (required for meaningful classifier controllers).
 pub fn run_on(
@@ -169,53 +236,12 @@ pub fn run_on(
     let compute = AnalyticModel::new(cfg.compute.clone(), shape);
     let allreduce = net.allreduce_time(shape.param_bytes());
 
-    // Build trainers.
+    // Build trainers (shared constructor — see the parity note on it).
     let mut trainers: Vec<Trainer> = (0..cfg.num_trainers)
-        .map(|p| {
-            let train_nodes = part.train_nodes_of(p, &ds.train_nodes);
-            let halo2 = part.halo_k(&ds.csr, p, 2);
-            let capacity = if cfg.controller.uses_buffer() {
-                ((halo2.len() as f64 * cfg.buffer_pct) as usize).max(1)
-            } else {
-                0
-            };
-            let sampler = Sampler::new(
-                p,
-                cfg.batch_size,
-                cfg.fanout1,
-                cfg.fanout2,
-                derive_seed(cfg.seed, &[p as u64, 0x5A]),
-            );
-            let pretrained = offline.map(|set| {
-                if let ControllerSpec::Classifier { kind, .. } = &cfg.controller {
-                    let mut model = kind.build(derive_seed(cfg.seed, &[p as u64, 0xC1]));
-                    if !set.is_empty() {
-                        model.fit(&set.xs, &set.ys);
-                    }
-                    model
-                } else {
-                    crate::classifier::Kind::LogReg.build(0)
-                }
-            });
-            let mut controller = cfg
-                .controller
-                .build(derive_seed(cfg.seed, &[p as u64, 0xA6]), pretrained);
-            controller.set_eval_lag(if cfg.mode == Mode::Async { 1 } else { 0 });
-            let mut t = Trainer::new(p, capacity, halo2.len(), sampler, controller, train_nodes);
-            t.buffer = crate::buffer::PersistentBuffer::new(capacity, cfg.buffer_policy);
-            if cfg.controller.prepopulates() {
-                let order = massivegnn::prefetch_order(&ds.csr, part, p, capacity);
-                t.buffer.prepopulate(&order);
-            }
-            t
-        })
+        .map(|p| build_trainer(cfg, ds, part, p, offline))
         .collect();
 
-    let max_mb_per_epoch = trainers
-        .iter()
-        .map(Trainer::minibatches_per_epoch)
-        .max()
-        .unwrap_or(1);
+    let max_mb_per_epoch = max_minibatches_per_epoch(cfg, ds, part);
     let total_minibatches = (max_mb_per_epoch * cfg.epochs) as u64;
     let ctx = RunCtx {
         ds,

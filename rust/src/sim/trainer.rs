@@ -13,7 +13,7 @@
 
 use crate::agent::{Action, Observation};
 use crate::buffer::scoring::Policy;
-use crate::buffer::PersistentBuffer;
+use crate::buffer::{PersistentBuffer, ReplaceOutcome};
 use crate::classifier::labeling::TraceStep;
 use crate::classifier::{features, DecisionModel};
 use crate::gnn::{AnalyticModel, SageRunner};
@@ -54,6 +54,27 @@ impl Mode {
             _ => crate::bail!("unknown mode '{s}' (async|sync)"),
         }
     }
+}
+
+/// What the in-process cluster runtime ([`crate::cluster`]) must do for one
+/// minibatch: the node sets to move over the real RPC path plus the compute
+/// time to emulate.  Filled by [`Trainer::step_minibatch`] when
+/// `fetch_plan` is armed (`Some`) — virtual-time accounting stays the
+/// single source of truth for *what* is fetched (traffic parity by
+/// construction); the cluster runtime decides *how* the bytes move.
+#[derive(Debug, Clone, Default)]
+pub struct FetchPlan {
+    /// Unique remote nodes sampled this minibatch (hits + misses): the
+    /// cluster trainer blocks until all their features are resident.
+    pub unique_remote: Vec<u32>,
+    /// Buffer misses — fetched urgently for this minibatch.
+    pub missed: Vec<u32>,
+    /// Replacement admissions — prefetched asynchronously (overlap).
+    pub admitted: Vec<u32>,
+    /// Replacement evictions — dropped from the feature store.
+    pub evicted: Vec<u32>,
+    /// Virtual T_DDP of this minibatch (scaled compute emulation).
+    pub t_ddp: f64,
 }
 
 /// Immutable per-run context shared by all trainers.
@@ -171,6 +192,9 @@ pub struct Trainer {
     pub runner: Option<SageRunner>,
     /// Optional trace-only recording (classifier offline data).
     pub trace: Option<Vec<TraceStep>>,
+    /// When armed (`Some`), each minibatch leaves its I/O choreography
+    /// here for the cluster runtime to execute ([`FetchPlan`]).
+    pub fetch_plan: Option<FetchPlan>,
     pub halo2_len: usize,
     prev_t_ddp: f64,
     global_mb: u64,
@@ -202,6 +226,7 @@ impl Trainer {
             train_nodes,
             runner: None,
             trace: None,
+            fetch_plan: None,
             halo2_len,
             prev_t_ddp: 0.0,
             global_mb: 0,
@@ -214,7 +239,7 @@ impl Trainer {
         self.sampler.minibatches_per_epoch(self.train_nodes.len())
     }
 
-    fn do_replace(&mut self) -> (bool, usize, f64) {
+    fn do_replace(&mut self) -> (bool, ReplaceOutcome, f64) {
         let out = self.buffer.replace();
         let effective = !out.skipped && (out.evicted + out.inserted) > 0;
         let frac = if self.buffer.capacity() > 0 {
@@ -222,7 +247,7 @@ impl Trainer {
         } else {
             0.0
         };
-        (effective, out.fetched_nodes.len(), frac)
+        (effective, out, frac)
     }
 
     /// Close the last *applied* decision record with the current smoothed
@@ -273,7 +298,7 @@ impl Trainer {
 
         // --- decision machinery -----------------------------------------
         let mut replaced = false;
-        let mut replace_fetch = 0usize;
+        let mut replace_out = ReplaceOutcome::default();
         let mut replaced_frac = 0.0;
         let mut sync_stall = 0.0;
         enum Kind {
@@ -295,16 +320,16 @@ impl Trainer {
         match kind {
             Kind::Inert => {}
             Kind::Fixed => {
-                let (r, f, fr) = self.do_replace();
+                let (r, out, fr) = self.do_replace();
                 replaced = r;
-                replace_fetch = f;
+                replace_out = out;
                 replaced_frac = fr;
             }
             Kind::MassiveGnn(interval) => {
                 if interval > 0 && self.global_mb % interval == 0 {
-                    let (r, f, fr) = self.do_replace();
+                    let (r, out, fr) = self.do_replace();
                     replaced = r;
-                    replace_fetch = f;
+                    replace_out = out;
                     replaced_frac = fr;
                 }
             }
@@ -320,9 +345,9 @@ impl Trainer {
                     sync_stall = pending.step.latency;
                     self.applied_decision = self.open_decision.take();
                     if pending.step.action == Action::Replace {
-                        let (r, f, fr) = self.do_replace();
+                        let (r, out, fr) = self.do_replace();
                         replaced = r;
-                        replace_fetch = f;
+                        replace_out = out;
                         replaced_frac = fr;
                     }
                 }
@@ -333,9 +358,9 @@ impl Trainer {
                         // poll point is now measurable.
                         self.close_applied();
                         if p.step.action == Action::Replace {
-                            let (r, f, fr) = self.do_replace();
+                            let (r, out, fr) = self.do_replace();
                             replaced = r;
-                            replace_fetch = f;
+                            replace_out = out;
                             replaced_frac = fr;
                         }
                         // The polled decision is now applied; measure its
@@ -361,6 +386,7 @@ impl Trainer {
         }
 
         // Unhidden replacement-processing cost (CPU contention).
+        let replace_fetch = replace_out.fetched_nodes.len();
         let t_replace = if replaced {
             REPLACE_BASE_COST
                 + replace_fetch as f64 * (REPLACE_NODE_COST + fb_cost)
@@ -386,6 +412,15 @@ impl Trainer {
         } else {
             ctx.compute.step_time(mbatch.targets.len())
         };
+
+        // --- cluster I/O choreography (real-runtime consumers) ----------
+        if let Some(plan) = self.fetch_plan.as_mut() {
+            plan.unique_remote.clone_from(&mbatch.unique_remote);
+            plan.missed.clone_from(&lookup.missed_nodes);
+            plan.admitted.clone_from(&replace_out.fetched_nodes);
+            plan.evicted.clone_from(&replace_out.evicted_nodes);
+            plan.t_ddp = t_ddp;
+        }
 
         // --- online finetuning (classifier option) ----------------------
         let mut finetune_overhead = 0.0;
@@ -454,6 +489,7 @@ impl Trainer {
             minibatch: self.global_mb as usize,
             trainer: self.part_id,
             hits_pct: hits,
+            hits: lookup.hits as u64,
             comm_nodes: fetch_nodes as u64,
             comm_bytes,
             unique_remote: mbatch.unique_remote.len() as u64,

@@ -1,0 +1,172 @@
+//! Integration tests for the in-process cluster runtime: determinism
+//! (same seed ⇒ byte-identical traffic counters across invocations) and
+//! traffic parity against the virtual-time sim (same config + seed ⇒
+//! identical fetched-node / buffer-hit / payload-byte counters).
+
+use std::sync::Arc;
+
+use rudder::cluster::{parity_check, run_cluster_on, ClusterConfig, ClusterResult};
+use rudder::sim::{build_cluster, run_on, ControllerSpec, RunConfig};
+
+/// Small 2-trainer config on the RMAT stand-in graph (0 time-scale: no
+/// emulation sleeps, as fast as the machine allows).
+fn quick(controller: &str) -> RunConfig {
+    RunConfig {
+        dataset: "ogbn-arxiv".into(),
+        scale: 0.1,
+        seed: 7,
+        num_trainers: 2,
+        batch_size: 32,
+        fanout1: 5,
+        fanout2: 5,
+        buffer_pct: 0.25,
+        epochs: 2,
+        controller: ControllerSpec::parse(controller).unwrap(),
+        ..Default::default()
+    }
+}
+
+fn run_both(cfg: &RunConfig) -> (rudder::sim::ExperimentResult, ClusterResult) {
+    let (ds, part) = build_cluster(cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let sim_r = run_on(ds.as_ref(), part.as_ref(), cfg, None);
+    let ccfg = ClusterConfig::new(cfg.clone());
+    let cluster_r = run_cluster_on(ds, part, &ccfg, None).unwrap();
+    (sim_r, cluster_r)
+}
+
+#[test]
+fn parity_fixed_controller() {
+    let (sim_r, cluster_r) = run_both(&quick("fixed"));
+    parity_check(&sim_r, &cluster_r.experiment).unwrap();
+    assert!(cluster_r.experiment.total_comm_nodes > 0);
+    assert!(cluster_r.experiment.mean_hits_pct > 0.0);
+}
+
+#[test]
+fn parity_no_prefetch_baseline() {
+    let (sim_r, cluster_r) = run_both(&quick("none"));
+    parity_check(&sim_r, &cluster_r.experiment).unwrap();
+    assert_eq!(cluster_r.experiment.mean_hits_pct, 0.0);
+}
+
+#[test]
+fn parity_llm_agent_async() {
+    // The async LLM agent is the hard case: its decision cadence depends
+    // on the virtual clock, which the cluster reproduces exactly through
+    // the allreduce hub's max-vclock barrier.
+    let (sim_r, cluster_r) = run_both(&quick("llm:gemma3-4b"));
+    parity_check(&sim_r, &cluster_r.experiment).unwrap();
+    // The decision *sequences* must replay identically, not just counts.
+    for (a, b) in sim_r.per_trainer.iter().zip(&cluster_r.experiment.per_trainer) {
+        assert_eq!(a.decisions.len(), b.decisions.len());
+        for (da, db) in a.decisions.iter().zip(&b.decisions) {
+            assert_eq!((da.minibatch, da.replace), (db.minibatch, db.replace));
+            assert_eq!(da.latency, db.latency);
+        }
+    }
+    let decisions: usize =
+        cluster_r.experiment.per_trainer.iter().map(|m| m.decisions.len()).sum();
+    assert!(decisions > 0, "agent must make decisions in the cluster too");
+}
+
+#[test]
+fn parity_massivegnn_prepopulated() {
+    let (sim_r, cluster_r) = run_both(&quick("massivegnn:8"));
+    parity_check(&sim_r, &cluster_r.experiment).unwrap();
+    // Warm-started buffer: first minibatch already hits, which means the
+    // cluster streamed the prepopulated features successfully.
+    let first = &cluster_r.experiment.per_trainer[0].minibatches[0];
+    assert!(first.hits > 0, "prepopulated features must serve hits");
+}
+
+#[test]
+fn deterministic_across_invocations() {
+    let cfg = quick("llm:qwen-1.5b");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let ccfg = ClusterConfig::new(cfg.clone());
+    let a = run_cluster_on(ds.clone(), part.clone(), &ccfg, None).unwrap();
+    let b = run_cluster_on(ds, part, &ccfg, None).unwrap();
+    // Byte-identical traffic counters, run to run.
+    parity_check(&a.experiment, &b.experiment).unwrap();
+    for (ma, mb) in a.experiment.per_trainer.iter().zip(&b.experiment.per_trainer) {
+        for (ra, rb) in ma.minibatches.iter().zip(&mb.minibatches) {
+            assert_eq!(ra.comm_nodes, rb.comm_nodes);
+            assert_eq!(ra.comm_bytes, rb.comm_bytes);
+            assert_eq!(ra.hits, rb.hits);
+            assert_eq!(ra.step_time.to_bits(), rb.step_time.to_bits());
+        }
+    }
+    assert_eq!(
+        a.experiment.mean_epoch_time.to_bits(),
+        b.experiment.mean_epoch_time.to_bits()
+    );
+}
+
+#[test]
+fn wire_traffic_is_deduped_and_served() {
+    let (_, cluster_r) = run_both(&quick("fixed"));
+    let wire = cluster_r.wire_total();
+    let logical = cluster_r.experiment.total_comm_nodes;
+    assert!(wire.nodes_requested > 0);
+    assert!(
+        wire.nodes_requested <= logical,
+        "wire {} must not exceed logical {} fetches",
+        wire.nodes_requested,
+        logical
+    );
+    assert!(wire.nodes_deduped > 0, "miss-then-admit must trigger in-flight dedup");
+    assert_eq!(wire.bad_frames, 0, "protocol must be clean");
+    // Every wire-requested node is served by exactly one owner server.
+    let served: u64 = cluster_r.servers.iter().map(|s| s.nodes_served).sum();
+    assert_eq!(served, wire.nodes_requested);
+    assert!(wire.resp_bytes > wire.req_bytes, "feature payloads dominate");
+    // Coalescing: with 2 partitions a trainer needs at most one request
+    // frame per fetch order, so frames must be far fewer than nodes.
+    assert!(wire.req_frames < wire.nodes_requested);
+    // The DDP barrier ran every round (epochs × max minibatches/epoch),
+    // and the longest trainer was active in every one of them.
+    let longest = cluster_r
+        .experiment
+        .per_trainer
+        .iter()
+        .map(|m| m.minibatches.len() as u64)
+        .max()
+        .unwrap();
+    assert_eq!(cluster_r.allreduce_rounds, longest);
+}
+
+#[test]
+fn single_trainer_cluster_runs() {
+    let mut cfg = quick("fixed");
+    cfg.num_trainers = 1;
+    let (sim_r, cluster_r) = run_both(&cfg);
+    parity_check(&sim_r, &cluster_r.experiment).unwrap();
+}
+
+/// Wall-clock overlap check: with emulated costs, prefetching must beat
+/// the no-prefetch baseline.  Timing-based, so ignored by default (CI
+/// runs it through the `cluster --compare-prefetch` smoke instead).
+#[test]
+#[ignore]
+fn prefetch_beats_no_prefetch_wall_clock() {
+    let cfg = quick("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let mut on = ClusterConfig::new(cfg.clone());
+    on.time_scale = 0.02;
+    let mut off = on.clone();
+    off.run.controller = ControllerSpec::NoPrefetch;
+    let r_on = run_cluster_on(ds.clone(), part.clone(), &on, None).unwrap();
+    let r_off = run_cluster_on(ds, part, &off, None).unwrap();
+    assert!(
+        r_on.wall_total < r_off.wall_total,
+        "prefetch on {}s vs off {}s",
+        r_on.wall_total,
+        r_off.wall_total
+    );
+}
