@@ -39,7 +39,8 @@ fn main() -> rudder::error::Result<()> {
     for spec in ["none", "fixed", "llm:gemma3-4b"] {
         let mut cfg = base.clone();
         cfg.controller = ControllerSpec::parse(spec)?;
-        let ccfg = ClusterConfig { run: cfg.clone(), time_scale: 0.02 };
+        let mut ccfg = ClusterConfig::new(cfg.clone());
+        ccfg.time_scale = 0.02;
         let r = run_cluster_on(ds.clone(), part.clone(), &ccfg, None)?;
         // Every variant stays counter-identical to the virtual-time sim.
         let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);

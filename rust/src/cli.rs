@@ -75,16 +75,27 @@ COMMANDS:
                --controller <none|fixed|llm:MODEL|clf:KIND[:finetune=N]|massivegnn[:r]>
                --mode <async|sync> --epochs <n> --batch <n> --scale <f>
                --seed <n> --config <file.toml>
-  cluster      run the in-process distributed cluster runtime: real
-               trainer/feature-server threads, wire-format RPC, async
-               prefetching.  Takes every `train` flag, plus:
+  cluster      run the distributed cluster runtime: real trainer /
+               feature-server / allreduce-hub workers, wire-format RPC,
+               async prefetching.  Takes every `train` flag, plus:
+               --transport <t>    channel = threads + in-process channels
+                                  (default); tcp = one OS process per role
+                                  over loopback TCP sockets
                --time-scale <f>   wall seconds slept per modelled virtual
                                   second (default 0.02; 0 = no emulation,
                                   as fast as the hardware allows)
-               --parity           also run the virtual-time sim and fail
+               --parity           also run the virtual-time sim (and, for
+                                  tcp, the channel transport) and fail
                                   unless traffic counters are identical
                --compare-prefetch also run with prefetching disabled and
                                   report the wall-clock delta
+               --fault <s[:dup[:delay[:chop]]]>  seeded fault injection on
+                                  response links (duplicate/reorder/chop)
+               worker mode (spawned by the tcp orchestrator; manual use
+               for debugging): --role trainer|server|hub --part <n>
+               --listen <addr> | --connect/--servers <a1,a2,..> --hub <a>
+               --run-config <toml> --out <blob>; listeners announce
+               "RUDDER_LISTEN <addr>" on stdout
   experiment   regenerate a paper table/figure: rudder experiment <id> [--full]
                ids: fig01 fig03 fig06 fig12 fig13 fig14 fig15 fig16 fig17
                     table2 fig18 table4 fig20 fig21 | all

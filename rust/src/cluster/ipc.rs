@@ -1,0 +1,433 @@
+//! Binary result blobs for the multi-process cluster runtime.
+//!
+//! `--role` worker processes hand their results back to the orchestrator
+//! through files: per-trainer `RunMetrics` + `WallStats` + `WireStats`,
+//! per-server `ServerStats`, and the hub's round count.  The encoding is
+//! the wire codec's style — little-endian, length-prefixed vectors — with
+//! every `f64` carried as raw bits, so parity-checked quantities (virtual
+//! clocks, epoch times) survive the process boundary *bit-exactly*, which
+//! text formats cannot guarantee.
+
+use crate::error::Result;
+use crate::metrics::{
+    DecisionRecord, HitsPrediction, LinkStats, MinibatchRecord, RunMetrics, WireStats,
+};
+
+use super::server::ServerStats;
+use super::trainer::WallStats;
+use super::wire::{put_u32, put_u64, Reader};
+
+/// Blob magics (format + version in four bytes).
+const MAGIC_TRAINER: &[u8; 4] = b"RTR1";
+const MAGIC_SERVER: &[u8; 4] = b"RSV1";
+const MAGIC_HUB: &[u8; 4] = b"RHB1";
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_bool(out: &mut Vec<u8>, b: bool) {
+    out.push(b as u8);
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_bool(r: &mut Reader) -> Result<bool> {
+    match r.u8()? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => crate::bail!("ipc: bad bool byte {other}"),
+    }
+}
+
+fn get_str(r: &mut Reader) -> Result<String> {
+    let len = r.u32()? as usize;
+    let bytes = r.take(len)?;
+    String::from_utf8(bytes.to_vec()).map_err(|_| crate::err!("ipc: non-utf8 string"))
+}
+
+fn check_magic(r: &mut Reader, magic: &[u8; 4], what: &str) -> Result<()> {
+    let got = r.take(4)?;
+    crate::ensure!(got == magic, "ipc: bad {what} blob magic {got:?}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// field-level codecs
+
+fn put_minibatch(out: &mut Vec<u8>, m: &MinibatchRecord) {
+    put_u32(out, m.epoch as u32);
+    put_u32(out, m.minibatch as u32);
+    put_u32(out, m.trainer as u32);
+    put_f64(out, m.hits_pct);
+    put_u64(out, m.hits);
+    put_u64(out, m.comm_nodes);
+    put_u64(out, m.comm_bytes);
+    put_u64(out, m.unique_remote);
+    put_f64(out, m.buffer_occupancy);
+    put_f64(out, m.step_time);
+    put_bool(out, m.replaced);
+    put_f64(out, m.replaced_frac);
+}
+
+fn get_minibatch(r: &mut Reader) -> Result<MinibatchRecord> {
+    Ok(MinibatchRecord {
+        epoch: r.u32()? as usize,
+        minibatch: r.u32()? as usize,
+        trainer: r.u32()? as usize,
+        hits_pct: r.f64()?,
+        hits: r.u64()?,
+        comm_nodes: r.u64()?,
+        comm_bytes: r.u64()?,
+        unique_remote: r.u64()?,
+        buffer_occupancy: r.f64()?,
+        step_time: r.f64()?,
+        replaced: get_bool(r)?,
+        replaced_frac: r.f64()?,
+    })
+}
+
+fn put_decision(out: &mut Vec<u8>, d: &DecisionRecord) {
+    put_u32(out, d.minibatch as u32);
+    put_bool(out, d.replace);
+    out.push(match d.prediction {
+        None => 0,
+        Some(HitsPrediction::Increase) => 1,
+        Some(HitsPrediction::Decrease) => 2,
+        Some(HitsPrediction::Unchanged) => 3,
+    });
+    put_bool(out, d.valid_response);
+    put_f64(out, d.hits_before);
+    match d.hits_after {
+        None => put_bool(out, false),
+        Some(v) => {
+            put_bool(out, true);
+            put_f64(out, v);
+        }
+    }
+    put_f64(out, d.latency);
+}
+
+fn get_decision(r: &mut Reader) -> Result<DecisionRecord> {
+    let minibatch = r.u32()? as usize;
+    let replace = get_bool(r)?;
+    let prediction = match r.u8()? {
+        0 => None,
+        1 => Some(HitsPrediction::Increase),
+        2 => Some(HitsPrediction::Decrease),
+        3 => Some(HitsPrediction::Unchanged),
+        other => crate::bail!("ipc: bad prediction tag {other}"),
+    };
+    let valid_response = get_bool(r)?;
+    let hits_before = r.f64()?;
+    let hits_after = if get_bool(r)? { Some(r.f64()?) } else { None };
+    let latency = r.f64()?;
+    Ok(DecisionRecord {
+        minibatch,
+        replace,
+        prediction,
+        valid_response,
+        hits_before,
+        hits_after,
+        latency,
+    })
+}
+
+fn put_metrics(out: &mut Vec<u8>, m: &RunMetrics) {
+    put_u32(out, m.minibatches.len() as u32);
+    for mb in &m.minibatches {
+        put_minibatch(out, mb);
+    }
+    put_u32(out, m.decisions.len() as u32);
+    for d in &m.decisions {
+        put_decision(out, d);
+    }
+    put_u32(out, m.epoch_times.len() as u32);
+    for &t in &m.epoch_times {
+        put_f64(out, t);
+    }
+}
+
+fn get_metrics(r: &mut Reader) -> Result<RunMetrics> {
+    let mut m = RunMetrics::default();
+    for _ in 0..r.u32()? {
+        m.minibatches.push(get_minibatch(r)?);
+    }
+    for _ in 0..r.u32()? {
+        m.decisions.push(get_decision(r)?);
+    }
+    for _ in 0..r.u32()? {
+        m.epoch_times.push(r.f64()?);
+    }
+    Ok(m)
+}
+
+fn put_wall(out: &mut Vec<u8>, w: &WallStats) {
+    put_f64(out, w.total);
+    put_u32(out, w.epochs.len() as u32);
+    for &e in &w.epochs {
+        put_f64(out, e);
+    }
+    put_f64(out, w.fetch_wait);
+    put_f64(out, w.compute);
+    put_f64(out, w.barrier);
+    put_u64(out, w.minibatches);
+}
+
+fn get_wall(r: &mut Reader) -> Result<WallStats> {
+    let mut w = WallStats { total: r.f64()?, ..WallStats::default() };
+    for _ in 0..r.u32()? {
+        w.epochs.push(r.f64()?);
+    }
+    w.fetch_wait = r.f64()?;
+    w.compute = r.f64()?;
+    w.barrier = r.f64()?;
+    w.minibatches = r.u64()?;
+    Ok(w)
+}
+
+fn put_link(out: &mut Vec<u8>, l: &LinkStats) {
+    put_str(out, &l.peer);
+    put_u64(out, l.frames_sent);
+    put_u64(out, l.bytes_sent);
+    put_u64(out, l.frames_recv);
+    put_u64(out, l.bytes_recv);
+    put_u64(out, l.reconnects);
+}
+
+fn get_link(r: &mut Reader) -> Result<LinkStats> {
+    Ok(LinkStats {
+        peer: get_str(r)?,
+        frames_sent: r.u64()?,
+        bytes_sent: r.u64()?,
+        frames_recv: r.u64()?,
+        bytes_recv: r.u64()?,
+        reconnects: r.u64()?,
+    })
+}
+
+fn put_wire(out: &mut Vec<u8>, w: &WireStats) {
+    put_u64(out, w.req_frames);
+    put_u64(out, w.req_bytes);
+    put_u64(out, w.resp_frames);
+    put_u64(out, w.resp_bytes);
+    put_u64(out, w.nodes_requested);
+    put_u64(out, w.nodes_deduped);
+    put_u64(out, w.nodes_received);
+    put_u64(out, w.dup_frames);
+    put_u64(out, w.bad_frames);
+    put_u32(out, w.links.len() as u32);
+    for l in &w.links {
+        put_link(out, l);
+    }
+}
+
+fn get_wire(r: &mut Reader) -> Result<WireStats> {
+    let mut w = WireStats {
+        req_frames: r.u64()?,
+        req_bytes: r.u64()?,
+        resp_frames: r.u64()?,
+        resp_bytes: r.u64()?,
+        nodes_requested: r.u64()?,
+        nodes_deduped: r.u64()?,
+        nodes_received: r.u64()?,
+        dup_frames: r.u64()?,
+        bad_frames: r.u64()?,
+        links: Vec::new(),
+    };
+    for _ in 0..r.u32()? {
+        w.links.push(get_link(r)?);
+    }
+    Ok(w)
+}
+
+// ---------------------------------------------------------------------------
+// blob-level API
+
+/// One trainer worker's full result.
+pub fn encode_trainer_result(metrics: &RunMetrics, wall: &WallStats, wire: &WireStats) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4096);
+    out.extend_from_slice(MAGIC_TRAINER);
+    put_metrics(&mut out, metrics);
+    put_wall(&mut out, wall);
+    put_wire(&mut out, wire);
+    out
+}
+
+pub fn decode_trainer_result(buf: &[u8]) -> Result<(RunMetrics, WallStats, WireStats)> {
+    let mut r = Reader { b: buf, pos: 0 };
+    check_magic(&mut r, MAGIC_TRAINER, "trainer")?;
+    let metrics = get_metrics(&mut r)?;
+    let wall = get_wall(&mut r)?;
+    let wire = get_wire(&mut r)?;
+    crate::ensure!(r.pos == buf.len(), "ipc: {} trailing bytes", buf.len() - r.pos);
+    Ok((metrics, wall, wire))
+}
+
+pub fn encode_server_stats(s: &ServerStats) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(MAGIC_SERVER);
+    put_u32(&mut out, s.part as u32);
+    put_u64(&mut out, s.requests);
+    put_u64(&mut out, s.nodes_served);
+    put_u64(&mut out, s.bytes_in);
+    put_u64(&mut out, s.bytes_out);
+    put_u64(&mut out, s.bad_frames);
+    out
+}
+
+pub fn decode_server_stats(buf: &[u8]) -> Result<ServerStats> {
+    let mut r = Reader { b: buf, pos: 0 };
+    check_magic(&mut r, MAGIC_SERVER, "server")?;
+    let s = ServerStats {
+        part: r.u32()? as usize,
+        requests: r.u64()?,
+        nodes_served: r.u64()?,
+        bytes_in: r.u64()?,
+        bytes_out: r.u64()?,
+        bad_frames: r.u64()?,
+    };
+    crate::ensure!(r.pos == buf.len(), "ipc: {} trailing bytes", buf.len() - r.pos);
+    Ok(s)
+}
+
+pub fn encode_hub_rounds(rounds: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12);
+    out.extend_from_slice(MAGIC_HUB);
+    put_u64(&mut out, rounds);
+    out
+}
+
+pub fn decode_hub_rounds(buf: &[u8]) -> Result<u64> {
+    let mut r = Reader { b: buf, pos: 0 };
+    check_magic(&mut r, MAGIC_HUB, "hub")?;
+    let rounds = r.u64()?;
+    crate::ensure!(r.pos == buf.len(), "ipc: {} trailing bytes", buf.len() - r.pos);
+    Ok(rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_metrics() -> RunMetrics {
+        let mut m = RunMetrics::default();
+        m.minibatches.push(MinibatchRecord {
+            epoch: 1,
+            minibatch: 5,
+            trainer: 2,
+            hits_pct: 37.25,
+            hits: 91,
+            comm_nodes: 120,
+            comm_bytes: 48_000,
+            unique_remote: 130,
+            buffer_occupancy: 0.75,
+            step_time: 0.1 + 0.2, // a value with a non-trivial bit pattern
+            replaced: true,
+            replaced_frac: 0.125,
+        });
+        m.decisions.push(DecisionRecord {
+            minibatch: 5,
+            replace: true,
+            prediction: Some(HitsPrediction::Increase),
+            valid_response: true,
+            hits_before: 31.5,
+            hits_after: Some(40.0),
+            latency: 1.75,
+        });
+        m.decisions.push(DecisionRecord {
+            minibatch: 9,
+            replace: false,
+            prediction: None,
+            valid_response: false,
+            hits_before: 0.0,
+            hits_after: None,
+            latency: f64::MIN_POSITIVE,
+        });
+        m.epoch_times.push(1.0 / 3.0);
+        m
+    }
+
+    #[test]
+    fn trainer_blob_round_trips_bit_exactly() {
+        let metrics = sample_metrics();
+        let wall = WallStats {
+            total: 2.5,
+            epochs: vec![1.25, 1.25],
+            fetch_wait: 0.1,
+            compute: 0.9,
+            barrier: 0.01,
+            minibatches: 40,
+        };
+        let wire = WireStats {
+            req_frames: 10,
+            req_bytes: 2000,
+            resp_frames: 10,
+            resp_bytes: 90_000,
+            nodes_requested: 500,
+            nodes_deduped: 70,
+            nodes_received: 500,
+            dup_frames: 3,
+            bad_frames: 0,
+            links: vec![LinkStats {
+                peer: "server:1".into(),
+                frames_sent: 11,
+                bytes_sent: 2100,
+                frames_recv: 10,
+                bytes_recv: 90_000,
+                reconnects: 2,
+            }],
+        };
+        let blob = encode_trainer_result(&metrics, &wall, &wire);
+        let (m2, w2, wire2) = decode_trainer_result(&blob).unwrap();
+        assert_eq!(m2.minibatches.len(), 1);
+        assert_eq!(
+            m2.minibatches[0].step_time.to_bits(),
+            metrics.minibatches[0].step_time.to_bits(),
+            "f64 must survive bit-exactly"
+        );
+        assert_eq!(m2.epoch_times[0].to_bits(), (1.0f64 / 3.0).to_bits());
+        assert_eq!(m2.decisions.len(), 2);
+        assert_eq!(m2.decisions[0].prediction, Some(HitsPrediction::Increase));
+        assert_eq!(m2.decisions[1].prediction, None);
+        assert_eq!(m2.decisions[1].hits_after, None);
+        assert_eq!(w2.minibatches, 40);
+        assert_eq!(w2.epochs, vec![1.25, 1.25]);
+        assert_eq!(wire2.nodes_requested, 500);
+        assert_eq!(wire2.dup_frames, 3);
+        assert_eq!(wire2.links, wire.links);
+    }
+
+    #[test]
+    fn server_and_hub_blobs_round_trip() {
+        let s = ServerStats {
+            part: 3,
+            requests: 44,
+            nodes_served: 1000,
+            bytes_in: 9000,
+            bytes_out: 400_000,
+            bad_frames: 1,
+        };
+        let back = decode_server_stats(&encode_server_stats(&s)).unwrap();
+        assert_eq!(back.part, 3);
+        assert_eq!(back.nodes_served, 1000);
+        assert_eq!(back.bad_frames, 1);
+        assert_eq!(decode_hub_rounds(&encode_hub_rounds(77)).unwrap(), 77);
+    }
+
+    #[test]
+    fn corrupt_blobs_error_cleanly() {
+        let blob = encode_hub_rounds(5);
+        assert!(decode_hub_rounds(&blob[..blob.len() - 1]).is_err(), "truncated");
+        let mut wrong = blob.clone();
+        wrong[0] = b'X';
+        assert!(decode_hub_rounds(&wrong).is_err(), "bad magic");
+        let mut trailing = blob;
+        trailing.push(0);
+        assert!(decode_hub_rounds(&trailing).is_err(), "trailing bytes");
+        assert!(decode_trainer_result(b"RTR1").is_err(), "short trainer blob");
+    }
+}

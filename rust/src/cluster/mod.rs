@@ -1,12 +1,13 @@
-//! In-process distributed cluster runtime: the paper's training cluster as
-//! *real* concurrency instead of virtual time.
+//! Distributed cluster runtime: the paper's training cluster as *real*
+//! concurrency — and, over TCP, as real processes — instead of virtual
+//! time.
 //!
 //! Where [`crate::sim`] steps trainers sequentially against the α–β clock,
 //! this subsystem runs one OS thread per trainer, one per partition
 //! feature-server, one async prefetcher per trainer, and a DDP allreduce
-//! hub — all communicating through a serialized, length-prefixed wire
+//! hub — all communicating through the serialized, length-prefixed wire
 //! format ([`wire::Frame`]), so the RPC path pays honest encode/decode
-//! cost and request coalescing, in-flight dedup, server-side queuing, and
+//! cost and request coalescing, response dedup, server-side queuing, and
 //! prefetch/compute overlap are *exercised*, not assumed.
 //!
 //! The split of responsibilities is the design's core:
@@ -18,26 +19,62 @@
 //!   ([`run::parity_check`]): same config + seed ⇒ fetched-node, hit, and
 //!   byte counters identical to the virtual-time sim, for *every*
 //!   controller including LLM agents.
-//! * **How** the bytes move is real: feature payloads are synthesized by
-//!   the owner partition's server thread, serialized, routed, installed in
-//!   a [`prefetch::FeatureStore`], and waited on; gradients cross the
-//!   allreduce hub as frames.  Wall-clock and wire-level counters
-//!   ([`crate::metrics::WireStats`]) come from this layer — dedup and
-//!   coalescing make the wire counters *smaller* than the logical ones,
-//!   and they are timing-dependent, so parity never compares them.
+//! * **How** the bytes move is a pluggable [`transport::Transport`] behind
+//!   [`transport::FrameSender`]/[`transport::FrameReceiver`]:
 //!
-//! `time_scale` bridges the two clocks: servers, compute, and the hub
-//! sleep `time_scale × modelled seconds`, so prefetch overlap shows up in
-//! real wall time at any convenient speed (0 = no emulation).
+//!   | transport | endpoints              | bytes path                         |
+//!   |-----------|------------------------|------------------------------------|
+//!   | `channel` | threads, one process   | in-process `mpsc`, whole frames    |
+//!   | `tcp`     | threads *or processes* | loopback/remote sockets, reassembled from arbitrary stream segments |
+//!
+//!   Wire-level counters ([`crate::metrics::WireStats`], including
+//!   per-link [`crate::metrics::LinkStats`]) come from this layer.  The
+//!   prefetcher's want-set dedup plus response req-id dedup make every
+//!   protocol counter a pure function of config + seed, so the *same*
+//!   counters are also identical across transports and under injected
+//!   faults ([`run::wire_parity`], [`transport::FaultSpec`]) — only
+//!   `dup_frames` records the faults themselves.
+//!
+//! Topology (one trainer process shown; `channel` collapses everything
+//! into one process):
+//!
+//! ```text
+//!            ┌── trainer process t ──────────────┐
+//!            │ trainer thread ⇄ FeatureStore     │     FetchReq ▶
+//!            │        │ Fetch/Evict              ├────────────────▶ server p
+//!            │        ▼                          │ ◀ FetchResp      (per owner
+//!            │ prefetcher thread ◀─ pump threads │                   partition)
+//!            └──────┬────────────────────────────┘
+//!                   │ Allreduce ⇄ reduced Allreduce
+//!                   ▼
+//!               allreduce hub (barrier: max vclock + summed grads)
+//! ```
+//!
+//! `rudder cluster --transport tcp` runs each role as a separate OS
+//! process via `--role trainer|server|hub --listen/--connect`
+//! sub-invocations of the same binary ([`multiproc`]); results return as
+//! bit-exact binary blobs ([`ipc`]) so parity survives the process
+//! boundary.
+//!
+//! `time_scale` bridges the virtual and wall clocks: servers, compute,
+//! and the hub sleep `time_scale × modelled seconds`, so prefetch overlap
+//! shows up in real wall time at any convenient speed (0 = no emulation).
 
+pub mod ipc;
+pub mod multiproc;
 pub mod prefetch;
 pub mod run;
 pub mod server;
 pub mod trainer;
+pub mod transport;
 pub mod wire;
 
+pub use multiproc::run_cluster_multiproc;
 pub use prefetch::{FeatureStore, PrefetchMsg};
-pub use run::{parity_check, run_cluster, run_cluster_on, ClusterConfig, ClusterResult};
+pub use run::{
+    parity_check, run_cluster, run_cluster_on, wire_parity, ClusterConfig, ClusterResult,
+};
 pub use server::{ServerStats, WireDelay};
 pub use trainer::WallStats;
+pub use transport::{FaultSpec, FrameAssembler, FrameReceiver, FrameSender, Transport};
 pub use wire::Frame;

@@ -1,0 +1,446 @@
+//! Multi-process cluster: trainers, feature servers, and the allreduce
+//! hub as genuinely separate OS processes connected by the TCP transport.
+//!
+//! `rudder cluster --transport tcp` runs the *orchestrator*
+//! ([`run_cluster_multiproc`]): it serializes the resolved [`RunConfig`]
+//! (`config::to_toml` — lossless, so every process derives identical
+//! graphs, partitions, and schedules from the same seeds), then re-invokes
+//! its own binary once per role:
+//!
+//! ```text
+//! rudder cluster --role hub     --listen 127.0.0.1:0 --trainers n ...
+//! rudder cluster --role server  --listen 127.0.0.1:0 --part p --run-config f ...
+//! rudder cluster --role trainer --part t --connect a1,a2 --hub ah --run-config f ...
+//! ```
+//!
+//! Listeners bind ephemeral loopback ports and announce them on stdout
+//! (`RUDDER_LISTEN <addr>`); the orchestrator collects the addresses and
+//! passes them to the trainer workers, so there is no port-picking race.
+//! Results come back as binary blobs ([`super::ipc`]) written to
+//! `--out` files — `f64`s as raw bits, so the parity check against the
+//! in-process sim stays bit-exact across the process boundary.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::eval::{harness, Quality};
+use crate::gnn::SageShape;
+use crate::graph::Dataset;
+use crate::metrics::{RunMetrics, WireStats};
+use crate::net::Network;
+use crate::partition::Partition;
+use crate::sim::{self, ControllerSpec, ExperimentResult};
+
+use super::ipc;
+use super::prefetch::{spawn_prefetcher, FeatureStore};
+use super::run::{hub_loop, ClusterConfig, ClusterResult};
+use super::server::{server_loop, ServerStats, WireDelay};
+use super::trainer::{io_timeout, run_trainer, TrainerArgs, WallStats};
+use super::transport::{self, FaultSpec};
+
+/// Announce a bound listener to the orchestrator (must be the first stdout
+/// line a listening worker emits).
+fn announce_listen(listener: &TcpListener) -> Result<()> {
+    println!("RUDDER_LISTEN {}", listener.local_addr()?);
+    std::io::stdout().flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// worker entry points (one per --role)
+
+pub struct ServerWorkerOpts {
+    pub part: usize,
+    pub listen: String,
+    pub config: PathBuf,
+    pub time_scale: f64,
+    pub fault: Option<FaultSpec>,
+    pub out: PathBuf,
+}
+
+/// `--role server`: rebuild the dataset/partition from the shared config,
+/// serve fetches on a TCP listener until every trainer hangs up, then
+/// write the stats blob.
+pub fn run_server_worker(o: &ServerWorkerOpts) -> Result<()> {
+    // Bind + announce *before* the (expensive) dataset rebuild, so the
+    // orchestrator can move on to spawning the next worker and the graph
+    // builds run in parallel across server processes; early dialers just
+    // sit in the accept backlog until serving starts.
+    let listener = TcpListener::bind(o.listen.as_str())?;
+    announce_listen(&listener)?;
+    let cfg = crate::config::load(&o.config)?;
+    let (ds, part) = sim::build_cluster(&cfg)?;
+    let part = Arc::new(part);
+    crate::ensure!(o.part < part.num_parts, "server worker: part {} out of range", o.part);
+    let n = cfg.num_trainers;
+    let net = Network::new(cfg.net.clone(), n);
+    let delay = WireDelay::from_net(&net, o.time_scale);
+    let chop = o.fault.map(|f| f.chop).unwrap_or(0);
+    let (tx, rx) = mpsc::channel();
+    let accept = transport::serve_listener(listener, n, tx, &format!("server{}", o.part), chop);
+    let stats = server_loop(
+        o.part,
+        ds.feature_seed,
+        ds.spec.feat_dim,
+        part,
+        rx,
+        Vec::new(),
+        delay,
+        o.fault,
+    );
+    let _ = accept.join();
+    std::fs::write(&o.out, ipc::encode_server_stats(&stats))?;
+    Ok(())
+}
+
+pub struct HubWorkerOpts {
+    pub listen: String,
+    pub trainers: usize,
+    pub round_sleep: f64,
+    pub out: PathBuf,
+}
+
+/// `--role hub`: run the allreduce barrier for `trainers` peers, then
+/// write the round count blob.
+pub fn run_hub_worker(o: &HubWorkerOpts) -> Result<()> {
+    let listener = TcpListener::bind(o.listen.as_str())?;
+    announce_listen(&listener)?;
+    let (tx, rx) = mpsc::channel();
+    let accept = transport::serve_listener(listener, o.trainers, tx, "hub", 0);
+    let rounds = hub_loop(o.trainers, rx, Vec::new(), o.round_sleep);
+    let _ = accept.join();
+    std::fs::write(&o.out, ipc::encode_hub_rounds(rounds))?;
+    Ok(())
+}
+
+pub struct TrainerWorkerOpts {
+    pub part: usize,
+    pub config: PathBuf,
+    pub servers: Vec<String>,
+    pub hub: String,
+    pub time_scale: f64,
+    pub out: PathBuf,
+}
+
+/// `--role trainer`: rebuild the dataset/partition, dial every feature
+/// server and the hub, run the trainer + prefetcher threads, and write
+/// the result blob.
+pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
+    let cfg = crate::config::load(&o.config)?;
+    let (ds, part) = sim::build_cluster(&cfg)?;
+    crate::ensure!(
+        o.servers.len() == cfg.num_trainers,
+        "trainer worker: {} server addrs for {} partitions",
+        o.servers.len(),
+        cfg.num_trainers
+    );
+    crate::ensure!(o.part < cfg.num_trainers, "trainer worker: part {} out of range", o.part);
+    // Classifier controllers pretrain on the deterministic offline trace
+    // set; every process derives the identical set from the same seeds.
+    let offline = if matches!(cfg.controller, ControllerSpec::Classifier { .. }) {
+        Some(harness::offline_training_set(Quality::Quick))
+    } else {
+        None
+    };
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let max_mb = sim::max_minibatches_per_epoch(&cfg, &ds, &part);
+    let store = Arc::new(FeatureStore::new());
+    let (pf_tx, pf_rx) = mpsc::channel();
+    let dial = transport::dial_trainer_links(&o.servers, &o.hub, o.part as u32, &pf_tx)?;
+    let pf_handle = spawn_prefetcher(
+        o.part,
+        store.clone(),
+        pf_rx,
+        dial.request_links,
+        part.clone(),
+        io_timeout(o.time_scale),
+    );
+    let args = TrainerArgs {
+        part_id: o.part,
+        cfg: cfg.clone(),
+        ds,
+        part,
+        offline: Arc::new(offline),
+        store,
+        prefetch_tx: pf_tx,
+        hub_tx: dial.hub_tx,
+        hub_rx: dial.hub_rx,
+        max_mb_per_epoch: max_mb,
+        time_scale: o.time_scale,
+    };
+    let out = run_trainer(args);
+    let mut wire = pf_handle
+        .join()
+        .map_err(|_| crate::err!("trainer worker {}: prefetcher panicked", o.part))?;
+    for p in dial.pumps {
+        let _ = p.join();
+    }
+    wire.links = dial.links.iter().map(transport::snapshot).collect();
+    std::fs::write(&o.out, ipc::encode_trainer_result(&out.metrics, &out.wall, &wire))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// orchestrator
+
+/// Spawn a worker with piped stdout (listener roles announce their port
+/// there).
+fn spawn_piped(exe: &Path, args: &[String]) -> Result<Child> {
+    Command::new(exe)
+        .arg("cluster")
+        .args(args)
+        .stdout(Stdio::piped())
+        .spawn()
+        .map_err(|e| crate::err!("spawn worker {args:?}: {e}"))
+}
+
+/// Read the `RUDDER_LISTEN <addr>` line from a worker's stdout, passing
+/// any other output through; keep draining the pipe in the background so
+/// the worker can never block on a full pipe.
+fn read_listen_addr(child: &mut Child, what: &str) -> Result<String> {
+    let stdout = child
+        .stdout
+        .take()
+        .ok_or_else(|| crate::err!("{what}: stdout not piped"))?;
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        crate::ensure!(n > 0, "{what}: exited before announcing its listen address");
+        if let Some(addr) = line.trim().strip_prefix("RUDDER_LISTEN ") {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let _ = std::io::copy(&mut reader, &mut std::io::sink());
+            });
+            return Ok(addr);
+        }
+        print!("{line}");
+    }
+}
+
+fn wait_worker(mut child: Child, what: &str) -> Result<()> {
+    let status = child.wait()?;
+    crate::ensure!(status.success(), "{what} exited with {status}");
+    Ok(())
+}
+
+fn kill_all(children: &mut [(String, Child)]) {
+    for (_, c) in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Run the cluster as separate OS processes (TCP transport on loopback)
+/// and aggregate the workers' result blobs into the same [`ClusterResult`]
+/// shape the in-process runtime produces, so `--parity` and the reporting
+/// path are transport-agnostic.
+pub fn run_cluster_multiproc(
+    ds: Arc<Dataset>,
+    part: Arc<Partition>,
+    ccfg: &ClusterConfig,
+) -> Result<ClusterResult> {
+    let cfg = &ccfg.run;
+    let n = cfg.num_trainers;
+    crate::ensure!(n >= 1, "cluster: need at least one trainer");
+    crate::ensure!(
+        n == part.num_parts,
+        "cluster: {n} trainers but {} partitions",
+        part.num_parts
+    );
+    let exe = std::env::current_exe()?;
+    let dir = std::env::temp_dir().join(format!("rudder-cluster-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let cfg_path = dir.join("run-config.toml");
+    std::fs::write(&cfg_path, crate::config::to_toml(cfg)?)?;
+    let cfg_arg = cfg_path.to_string_lossy().to_string();
+    let ts_arg = format!("{}", ccfg.time_scale);
+
+    let shape = SageShape {
+        batch: cfg.batch_size,
+        fanout1: cfg.fanout1,
+        fanout2: cfg.fanout2,
+        feat_dim: ds.spec.feat_dim,
+        hidden: cfg.hidden,
+        classes: ds.spec.num_classes,
+    };
+    let net = Network::new(cfg.net.clone(), n);
+    let round_sleep = ccfg.time_scale * net.allreduce_time(shape.param_bytes());
+
+    // Listener workers first; collect their announced addresses.
+    let mut listeners: Vec<(String, Child)> = Vec::new();
+    let hub_out = dir.join("hub.bin");
+    let mut hub_child = spawn_piped(
+        &exe,
+        &[
+            "--role".into(),
+            "hub".into(),
+            "--listen".into(),
+            "127.0.0.1:0".into(),
+            "--trainers".into(),
+            n.to_string(),
+            "--round-sleep".into(),
+            format!("{round_sleep}"),
+            "--out".into(),
+            hub_out.to_string_lossy().to_string(),
+        ],
+    )?;
+    let hub_addr = match read_listen_addr(&mut hub_child, "hub worker") {
+        Ok(a) => a,
+        Err(e) => {
+            let _ = hub_child.kill();
+            let _ = hub_child.wait();
+            let _ = std::fs::remove_dir_all(&dir);
+            return Err(e);
+        }
+    };
+    listeners.push(("hub worker".into(), hub_child));
+
+    let mut server_addrs: Vec<String> = Vec::new();
+    let mut server_outs: Vec<PathBuf> = Vec::new();
+    for p in 0..n {
+        let out = dir.join(format!("server-{p}.bin"));
+        let mut args = vec![
+            "--role".into(),
+            "server".into(),
+            "--part".into(),
+            p.to_string(),
+            "--listen".into(),
+            "127.0.0.1:0".into(),
+            "--run-config".into(),
+            cfg_arg.clone(),
+            "--time-scale".into(),
+            ts_arg.clone(),
+            "--out".into(),
+            out.to_string_lossy().to_string(),
+        ];
+        if let Some(f) = ccfg.fault {
+            args.push("--fault".into());
+            args.push(format!("{}:{}:{}:{}", f.seed, f.dup, f.delay, f.chop));
+        }
+        let mut child = spawn_piped(&exe, &args)?;
+        match read_listen_addr(&mut child, &format!("server worker {p}")) {
+            Ok(a) => server_addrs.push(a),
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                kill_all(&mut listeners);
+                let _ = std::fs::remove_dir_all(&dir);
+                return Err(e);
+            }
+        }
+        listeners.push((format!("server worker {p}"), child));
+        server_outs.push(out);
+    }
+
+    // Trainer workers (stdio inherited — their panics land on stderr).
+    let wall_start = Instant::now();
+    let mut trainers: Vec<(String, Child, PathBuf)> = Vec::new();
+    for t in 0..n {
+        let out = dir.join(format!("trainer-{t}.bin"));
+        let args: Vec<String> = vec![
+            "--role".into(),
+            "trainer".into(),
+            "--part".into(),
+            t.to_string(),
+            "--run-config".into(),
+            cfg_arg.clone(),
+            "--servers".into(),
+            server_addrs.join(","),
+            "--hub".into(),
+            hub_addr.clone(),
+            "--time-scale".into(),
+            ts_arg.clone(),
+            "--out".into(),
+            out.to_string_lossy().to_string(),
+        ];
+        let child = Command::new(&exe)
+            .arg("cluster")
+            .args(&args)
+            .spawn()
+            .map_err(|e| crate::err!("spawn trainer worker {t}: {e}"));
+        match child {
+            Ok(c) => trainers.push((format!("trainer worker {t}"), c, out)),
+            Err(e) => {
+                let mut started: Vec<(String, Child)> =
+                    trainers.drain(..).map(|(w, c, _)| (w, c)).collect();
+                kill_all(&mut started);
+                kill_all(&mut listeners);
+                let _ = std::fs::remove_dir_all(&dir);
+                return Err(e);
+            }
+        }
+    }
+
+    // Join everything: trainers first (they drive shutdown), then the
+    // listener roles, which exit once every trainer connection closes.
+    let mut failure: Option<crate::error::RudderError> = None;
+    let mut trainer_outs: Vec<PathBuf> = Vec::new();
+    let mut remaining: Vec<(String, Child)> = Vec::new();
+    for (what, child, out) in trainers {
+        remaining.push((what, child));
+        trainer_outs.push(out);
+    }
+    for (what, child) in remaining.drain(..) {
+        if let Err(e) = wait_worker(child, &what) {
+            failure.get_or_insert(e);
+        }
+    }
+    if let Some(e) = failure {
+        kill_all(&mut listeners);
+        let _ = std::fs::remove_dir_all(&dir);
+        return Err(e);
+    }
+    // All trainers succeeded, so every listener has seen its EOFs; a
+    // non-zero exit here still must not leak the remaining children or
+    // the blob directory.
+    for (what, child) in listeners.drain(..) {
+        if let Err(e) = wait_worker(child, &what) {
+            failure.get_or_insert(e);
+        }
+    }
+    if let Some(e) = failure {
+        let _ = std::fs::remove_dir_all(&dir);
+        return Err(e);
+    }
+    let wall_total = wall_start.elapsed().as_secs_f64();
+
+    // Collect the result blobs; the temp dir goes away whether or not a
+    // blob turns out unreadable.
+    type Collected = (Vec<RunMetrics>, Vec<WallStats>, Vec<WireStats>, Vec<ServerStats>, u64);
+    let collected: Result<Collected> = (|| {
+        let mut per_trainer: Vec<RunMetrics> = Vec::with_capacity(n);
+        let mut walls: Vec<WallStats> = Vec::with_capacity(n);
+        let mut wire: Vec<WireStats> = Vec::with_capacity(n);
+        for out in &trainer_outs {
+            let blob = std::fs::read(out)?;
+            let (m, w, ws) = ipc::decode_trainer_result(&blob)?;
+            per_trainer.push(m);
+            walls.push(w);
+            wire.push(ws);
+        }
+        let mut servers: Vec<ServerStats> = Vec::with_capacity(n);
+        for out in &server_outs {
+            servers.push(ipc::decode_server_stats(&std::fs::read(out)?)?);
+        }
+        let allreduce_rounds = ipc::decode_hub_rounds(&std::fs::read(&hub_out)?)?;
+        Ok((per_trainer, walls, wire, servers, allreduce_rounds))
+    })();
+    let _ = std::fs::remove_dir_all(&dir);
+    let (per_trainer, walls, wire, servers, allreduce_rounds) = collected?;
+
+    let epoch_times = per_trainer
+        .first()
+        .map(|m| m.epoch_times.clone())
+        .unwrap_or_default();
+    let experiment = ExperimentResult::aggregate(cfg.controller.label(), per_trainer, epoch_times);
+    Ok(ClusterResult { experiment, wall_total, walls, wire, servers, allreduce_rounds })
+}

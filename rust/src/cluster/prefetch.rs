@@ -3,14 +3,24 @@
 //!
 //! The prefetcher consumes fetch orders (replacement admissions decided by
 //! the controller, and the current minibatch's buffer misses), suppresses
-//! nodes whose features are already resident *or already in flight*
-//! (dedup), coalesces the remainder into one [`Frame::FetchReq`] per owner
-//! partition, and installs [`Frame::FetchResp`] payloads into the store —
-//! all concurrently with the trainer's sampler/compute loop, which only
-//! blocks in [`FeatureStore::wait_all`] when a feature it needs *now* has
-//! not landed yet.
+//! nodes that are already *wanted* (resident or expected from an earlier
+//! request — the dedup), coalesces the remainder into one
+//! [`Frame::FetchReq`] per owner partition, and installs
+//! [`Frame::FetchResp`] payloads into the store — all concurrently with
+//! the trainer's sampler/compute loop, which only blocks in
+//! [`FeatureStore::wait_all`] when a feature it needs *now* has not landed
+//! yet.
+//!
+//! **Determinism:** the dedup bookkeeping (the want-set) is driven purely
+//! by the trainer's `Fetch`/`Evict` command sequence — never by response
+//! arrival timing — and responses are deduplicated by request id, so every
+//! [`WireStats`] counter is a pure function of config + seed.  That is
+//! what makes cross-transport parity (`channel` vs `tcp`, and both vs the
+//! virtual-time sim) assertable down to exact frame and byte counts, and
+//! keeps counters bit-identical even under the fault-injection shim's
+//! duplicated/reordered responses.
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -19,29 +29,32 @@ use crate::metrics::WireStats;
 use crate::partition::Partition;
 use crate::util::fasthash::{FastMap, FastSet};
 
+use super::transport::FrameSender;
 use super::wire::Frame;
 
 /// Commands and network input multiplexed onto the prefetcher's inbox
 /// (single-receiver design: no select needed on std channels).
 pub enum PrefetchMsg {
-    /// Fetch these nodes' features (deduped against resident + in-flight).
+    /// Fetch these nodes' features (deduped against the want-set).
     Fetch(Vec<u32>),
     /// Drop these nodes' features from the store (buffer evictions and
     /// end-of-minibatch transients).
     Evict(Vec<u32>),
     /// An encoded frame from a feature server (a `FetchResp`).
     Wire(Vec<u8>),
-    /// Trainer finished: drain nothing further, exit.
+    /// Trainer finished: drain outstanding responses, then exit.
     Shutdown,
 }
 
 #[derive(Default)]
 struct StoreInner {
     feats: FastMap<u32, Box<[f32]>>,
-    /// Requested on the wire, response not yet installed.
-    inflight: FastSet<u32>,
-    /// Evicted while in flight: drop the payload on arrival.
-    discard: FastSet<u32>,
+    /// Nodes currently wanted: fetch-ordered and not evicted since.  Every
+    /// member either has its row in `feats` already or has a response
+    /// inbound.  Dedup tests membership here — never arrival state — so
+    /// the wire request sequence is a pure function of the trainer's
+    /// command sequence (see the module docs on determinism).
+    want: FastSet<u32>,
 }
 
 /// Feature cache shared between one trainer and its prefetcher.
@@ -97,74 +110,113 @@ impl FeatureStore {
         }
     }
 
-    /// Filter a fetch order against resident + in-flight nodes, marking
-    /// the remainder in flight.  Returns the nodes that must go on the
-    /// wire.
+    /// Filter a fetch order against the want-set, admitting the remainder.
+    /// Returns the nodes that must go on the wire.
     fn begin_fetch(&self, nodes: &[u32], stats: &mut WireStats) -> Vec<u32> {
         let mut g = self.inner.lock().unwrap();
         let mut out = Vec::new();
         for &n in nodes {
-            if g.discard.remove(&n) {
-                // Evicted while in flight, wanted again: the pending
-                // response satisfies this request — no new wire traffic.
-                debug_assert!(g.inflight.contains(&n));
-                stats.nodes_deduped += 1;
-            } else if g.feats.contains_key(&n) || g.inflight.contains(&n) {
+            if g.want.contains(&n) {
+                // Resident, or a response is already inbound: either way
+                // no new wire traffic.
                 stats.nodes_deduped += 1;
             } else {
-                g.inflight.insert(n);
+                g.want.insert(n);
                 out.push(n);
             }
         }
         out
     }
 
-    /// Install a response's feature rows; returns how many were stored
-    /// (discarded-in-flight rows are dropped).
+    /// Install a response's feature rows; returns how many were stored.
+    /// Rows for nodes evicted since their request (no longer wanted) are
+    /// dropped — a later re-request re-fetches them on the wire, never
+    /// rescues the stale payload, keeping traffic timing-independent.
     fn complete_fetch(&self, nodes: &[u32], feats: &[f32], dim: usize) -> u64 {
         let mut g = self.inner.lock().unwrap();
         let mut stored = 0u64;
         for (i, &n) in nodes.iter().enumerate() {
-            g.inflight.remove(&n);
-            if g.discard.remove(&n) {
-                continue;
+            if g.want.contains(&n) {
+                let row = &feats[i * dim..(i + 1) * dim];
+                g.feats.insert(n, row.to_vec().into_boxed_slice());
+                stored += 1;
             }
-            let row = &feats[i * dim..(i + 1) * dim];
-            g.feats.insert(n, row.to_vec().into_boxed_slice());
-            stored += 1;
         }
         drop(g);
         self.cv.notify_all();
         stored
     }
 
-    /// Drop features (deferred for nodes still in flight).
+    /// Drop nodes from the want-set (and their rows, if resident).  Rows
+    /// still inbound for them will be dropped on arrival.
     fn evict(&self, nodes: &[u32]) {
         let mut g = self.inner.lock().unwrap();
         for &n in nodes {
-            if g.inflight.contains(&n) {
-                g.discard.insert(n);
-            } else {
-                g.feats.remove(&n);
-            }
+            g.want.remove(&n);
+            g.feats.remove(&n);
         }
     }
 }
 
-/// Spawn the prefetcher thread for `trainer_id`.  Exits on
-/// [`PrefetchMsg::Shutdown`], returning its wire counters.
+/// Decode one server frame and apply it to the store + counters.
+/// `outstanding` holds the req-ids sent but not yet answered; responses
+/// with an unknown req-id are duplicates (fault shim) and are dropped
+/// without touching any other counter.
+fn handle_wire(
+    trainer_id: usize,
+    store: &FeatureStore,
+    bytes: &[u8],
+    stats: &mut WireStats,
+    outstanding: &mut FastSet<u64>,
+) {
+    match Frame::decode(bytes) {
+        Ok((Frame::FetchResp { req_id, feat_dim, nodes, feats }, _)) => {
+            if !outstanding.remove(&req_id) {
+                stats.dup_frames += 1;
+                return;
+            }
+            stats.resp_frames += 1;
+            stats.resp_bytes += bytes.len() as u64;
+            stats.nodes_received += nodes.len() as u64;
+            store.complete_fetch(&nodes, &feats, feat_dim as usize);
+        }
+        Ok((other, _)) => {
+            stats.bad_frames += 1;
+            let kind = match other {
+                Frame::FetchReq { .. } => "FetchReq",
+                Frame::FetchResp { .. } => "FetchResp",
+                Frame::Allreduce { .. } => "Allreduce",
+                Frame::Hello { .. } => "Hello",
+            };
+            eprintln!("prefetcher {trainer_id}: unexpected {kind} frame");
+        }
+        Err(e) => {
+            stats.bad_frames += 1;
+            eprintln!("prefetcher {trainer_id}: bad frame: {e}");
+        }
+    }
+}
+
+/// Spawn the prefetcher thread for `trainer_id`.  `servers[p]` is the
+/// request link to partition `p`'s feature server (any transport).  On
+/// [`PrefetchMsg::Shutdown`] it half-closes the request links, drains
+/// every outstanding response (bounded by `drain_timeout`), and returns
+/// its wire counters.
 pub(crate) fn spawn_prefetcher(
     trainer_id: usize,
     store: Arc<FeatureStore>,
     rx: Receiver<PrefetchMsg>,
-    servers: Vec<Sender<Vec<u8>>>,
+    servers: Vec<Box<dyn FrameSender>>,
     part: Arc<Partition>,
+    drain_timeout: Duration,
 ) -> JoinHandle<WireStats> {
     std::thread::Builder::new()
         .name(format!("rudder-prefetch-{trainer_id}"))
         .spawn(move || {
+            let mut servers = servers;
             let mut stats = WireStats::default();
             let mut req_id: u64 = 0;
+            let mut outstanding: FastSet<u64> = FastSet::default();
             // Reused per-owner coalescing buckets.
             let mut groups: Vec<Vec<u32>> = vec![Vec::new(); servers.len()];
             for msg in rx.iter() {
@@ -189,43 +241,55 @@ pub(crate) fn spawn_prefetcher(
                                 nodes: batch,
                             }
                             .encode();
+                            outstanding.insert(req_id);
                             req_id += 1;
                             stats.req_frames += 1;
                             stats.req_bytes += bytes.len() as u64;
                             // A dead server surfaces as a wait timeout in
                             // the trainer; nothing useful to do here.
-                            let _ = servers[owner].send(bytes);
+                            let _ = servers[owner].send_frame(&bytes);
                         }
                     }
                     PrefetchMsg::Wire(bytes) => {
-                        stats.resp_frames += 1;
-                        stats.resp_bytes += bytes.len() as u64;
-                        match Frame::decode(&bytes) {
-                            Ok((Frame::FetchResp { feat_dim, nodes, feats, .. }, _)) => {
-                                stats.nodes_received +=
-                                    store.complete_fetch(&nodes, &feats, feat_dim as usize);
-                            }
-                            // A lost response leaves its nodes marked
-                            // in-flight and will surface as a feature-wait
-                            // timeout — leave a trace of the real cause.
-                            Ok((other, _)) => {
-                                stats.bad_frames += 1;
-                                let kind = match other {
-                                    Frame::FetchReq { .. } => "FetchReq",
-                                    Frame::FetchResp { .. } => "FetchResp",
-                                    Frame::Allreduce { .. } => "Allreduce",
-                                };
-                                eprintln!("prefetcher {trainer_id}: unexpected {kind} frame");
-                            }
-                            Err(e) => {
-                                stats.bad_frames += 1;
-                                eprintln!("prefetcher {trainer_id}: bad frame: {e}");
-                            }
-                        }
+                        handle_wire(trainer_id, &store, &bytes, &mut stats, &mut outstanding);
                     }
                     PrefetchMsg::Evict(nodes) => store.evict(&nodes),
                     PrefetchMsg::Shutdown => break,
                 }
+            }
+            // Half-close the request links (servers finish our pending
+            // requests, then see EOF), then drain the inbox until every
+            // reply link has closed — not merely until the responses we
+            // are owed arrived, because a fault-shim duplicate of the
+            // *last* response may still be in flight behind it.  Draining
+            // to link-close makes every counter, `dup_frames` included, a
+            // pure function of config + seed.  Afterwards
+            // `nodes_received == nodes_requested` and
+            // `resp_frames == req_frames` hold deterministically.
+            for s in &mut servers {
+                s.close();
+            }
+            let deadline = Instant::now() + drain_timeout;
+            loop {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(remaining) {
+                    Ok(PrefetchMsg::Wire(bytes)) => {
+                        handle_wire(trainer_id, &store, &bytes, &mut stats, &mut outstanding);
+                    }
+                    Ok(_) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                    Err(RecvTimeoutError::Timeout) => {
+                        eprintln!("prefetcher {trainer_id}: drain timed out");
+                        break;
+                    }
+                }
+            }
+            if !outstanding.is_empty() {
+                stats.bad_frames += outstanding.len() as u64;
+                eprintln!(
+                    "prefetcher {trainer_id}: {} responses never arrived",
+                    outstanding.len()
+                );
             }
             stats
         })
@@ -237,12 +301,12 @@ mod tests {
     use super::*;
 
     #[test]
-    fn begin_fetch_dedups_resident_and_inflight() {
+    fn begin_fetch_dedups_resident_and_expected() {
         let store = FeatureStore::new();
         let mut stats = WireStats::default();
         let first = store.begin_fetch(&[1, 2, 3], &mut stats);
         assert_eq!(first, vec![1, 2, 3]);
-        // All three now in flight: nothing new to request.
+        // All three now expected: nothing new to request.
         assert!(store.begin_fetch(&[1, 2, 3], &mut stats).is_empty());
         assert_eq!(stats.nodes_deduped, 3);
         store.complete_fetch(&[1, 2, 3], &[0.0; 6], 2);
@@ -253,7 +317,7 @@ mod tests {
     }
 
     #[test]
-    fn evict_while_inflight_discards_on_arrival() {
+    fn evict_while_expected_discards_on_arrival() {
         let store = FeatureStore::new();
         let mut stats = WireStats::default();
         assert_eq!(store.begin_fetch(&[9], &mut stats), vec![9]);
@@ -265,16 +329,41 @@ mod tests {
     }
 
     #[test]
-    fn refetch_request_rescues_inflight_eviction() {
+    fn refetch_after_evict_goes_back_on_wire() {
+        // Re-requesting a node that was evicted while its response was
+        // still inbound must cost a *new* wire request (deterministic
+        // traffic), never rescue the stale payload.
         let store = FeatureStore::new();
         let mut stats = WireStats::default();
         assert_eq!(store.begin_fetch(&[4], &mut stats), vec![4]);
-        store.evict(&[4]); // marked discard-on-arrival
-        // Re-requested before the response lands: the pending response
-        // must now be kept, with no duplicate wire request.
-        assert!(store.begin_fetch(&[4], &mut stats).is_empty());
+        store.evict(&[4]);
+        assert_eq!(store.begin_fetch(&[4], &mut stats), vec![4], "refetch is a wire request");
+        // Both responses eventually land; payloads are identical by
+        // construction (features are a function of the node id), so
+        // whichever arrives first installs the row.
+        assert_eq!(store.complete_fetch(&[4], &[2.5], 1), 1);
         assert_eq!(store.complete_fetch(&[4], &[2.5], 1), 1);
         assert_eq!(store.get(4).unwrap()[0], 2.5);
+        assert_eq!(stats.nodes_deduped, 0);
+    }
+
+    #[test]
+    fn duplicate_responses_are_dropped_by_req_id() {
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        let mut outstanding: FastSet<u64> = FastSet::default();
+        outstanding.insert(7);
+        let resp =
+            Frame::FetchResp { req_id: 7, feat_dim: 1, nodes: vec![3], feats: vec![0.5] };
+        store.begin_fetch(&[3], &mut stats);
+        let bytes = resp.encode();
+        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding);
+        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding);
+        assert_eq!(stats.resp_frames, 1);
+        assert_eq!(stats.nodes_received, 1);
+        assert_eq!(stats.dup_frames, 1, "second copy is dropped by req-id dedup");
+        assert_eq!(stats.bad_frames, 0);
+        assert!(store.contains(3));
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Cluster orchestration: spawn servers, prefetchers, the allreduce hub,
 //! and one thread per trainer; join everything and aggregate results.
 //!
-//! Thread/channel topology for `n` trainers (always `n` partitions):
+//! Thread/link topology for `n` trainers (always `n` partitions):
 //!
 //! ```text
 //!  trainer t ──Fetch/Evict──▶ prefetcher t ──FetchReq──▶ server p (per owner)
@@ -13,9 +13,17 @@
 //!  trainer 0..n ──Allreduce──▶ hub ──reduced Allreduce──▶ trainer 0..n
 //! ```
 //!
-//! Shutdown is drop-driven: trainers send `Shutdown` to their prefetcher
-//! and drop their channel ends; prefetchers drop the server senders;
-//! servers and the hub exit when their receivers disconnect.
+//! The prefetcher↔server and trainer↔hub edges are *transport links*
+//! ([`super::transport`]): in-process `mpsc` channels by default, or
+//! loopback TCP sockets when [`ClusterConfig::transport`] is
+//! [`Transport::Tcp`] — same loops, same counters, different bytes path.
+//! (The `rudder cluster --transport tcp` CLI goes further and runs each
+//! role as a separate OS process; see [`super::multiproc`].)
+//!
+//! Shutdown is close-driven: trainers send `Shutdown` to their prefetcher
+//! and half-close the hub link; prefetchers half-close the server request
+//! links after draining the responses they are owed; servers and the hub
+//! exit when every inbound link has hung up.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -33,11 +41,15 @@ use crate::sim::{self, ExperimentResult, RunConfig};
 
 use super::prefetch::{spawn_prefetcher, FeatureStore, PrefetchMsg};
 use super::server::{spawn_server, ServerStats, WireDelay};
-use super::trainer::{run_trainer, TrainerArgs, WallStats};
+use super::trainer::{io_timeout, run_trainer, TrainerArgs, WallStats};
+use super::transport::{
+    self, ChannelReceiver, ChannelSender, FaultSpec, FrameReceiver, FrameSender,
+    LinkStatsHandle, NetMsg, Transport,
+};
 use super::wire::Frame;
 
-/// Cluster-runtime configuration: the shared [`RunConfig`] plus how much
-/// wall time to spend emulating the modelled network/compute costs.
+/// Cluster-runtime configuration: the shared [`RunConfig`] plus how the
+/// bytes move and how much wall time to spend emulating modelled costs.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     pub run: RunConfig,
@@ -45,11 +57,16 @@ pub struct ClusterConfig {
     /// transfer delay, T_DDP compute, allreduce).  `0.0` disables all
     /// emulation — the cluster runs as fast as the hardware allows.
     pub time_scale: f64,
+    /// Which transport carries the RPC frames (in-process runs).
+    pub transport: Transport,
+    /// Deterministic fault injection on the server→trainer response links
+    /// (duplicate / reorder / TCP write chop).
+    pub fault: Option<FaultSpec>,
 }
 
 impl ClusterConfig {
     pub fn new(run: RunConfig) -> ClusterConfig {
-        ClusterConfig { run, time_scale: 0.0 }
+        ClusterConfig { run, time_scale: 0.0, transport: Transport::Channel, fault: None }
     }
 }
 
@@ -101,6 +118,26 @@ pub fn run_cluster(ccfg: &ClusterConfig) -> Result<ClusterResult> {
     run_cluster_on(Arc::new(ds), Arc::new(part), ccfg, None)
 }
 
+/// Per-trainer wiring produced by a transport backend: the trainer's ends
+/// of its links plus the already-spawned prefetcher.
+struct TrainerWiring {
+    prefetch_tx: Sender<PrefetchMsg>,
+    hub_tx: Box<dyn FrameSender>,
+    hub_rx: Box<dyn FrameReceiver>,
+    store: Arc<FeatureStore>,
+    pf_handle: JoinHandle<WireStats>,
+    /// Server links in partition order, then the hub link.
+    links: Vec<LinkStatsHandle>,
+}
+
+/// Background machinery shared by both transports.
+struct Backstage {
+    server_handles: Vec<JoinHandle<ServerStats>>,
+    hub_handle: JoinHandle<u64>,
+    /// TCP-only: accept threads and trainer-side response pumps.
+    aux_handles: Vec<JoinHandle<()>>,
+}
+
 /// Run on a pre-built cluster (shared with parity tests so the sim and the
 /// cluster runtime see the same graph object).
 pub fn run_cluster_on(
@@ -132,74 +169,38 @@ pub fn run_cluster_on(
     let max_mb = sim::max_minibatches_per_epoch(&cfg, &ds, &part);
     let offline = Arc::new(offline);
 
-    // Channels: requests into each server, each prefetcher's inbox
-    // (commands from its trainer + responses from every server), the hub's
-    // inbox, and one reply channel per trainer.
-    let mut server_txs: Vec<Sender<Vec<u8>>> = Vec::with_capacity(n);
-    let mut server_rxs: Vec<Receiver<Vec<u8>>> = Vec::with_capacity(n);
-    let mut pf_txs: Vec<Sender<PrefetchMsg>> = Vec::with_capacity(n);
-    let mut pf_rxs: Vec<Receiver<PrefetchMsg>> = Vec::with_capacity(n);
-    let mut reply_txs: Vec<Sender<Vec<u8>>> = Vec::with_capacity(n);
-    let mut reply_rxs: Vec<Receiver<Vec<u8>>> = Vec::with_capacity(n);
-    for _ in 0..n {
-        let (tx, rx) = mpsc::channel();
-        server_txs.push(tx);
-        server_rxs.push(rx);
-        let (tx, rx) = mpsc::channel();
-        pf_txs.push(tx);
-        pf_rxs.push(rx);
-        let (tx, rx) = mpsc::channel();
-        reply_txs.push(tx);
-        reply_rxs.push(rx);
-    }
-    let (hub_tx, hub_rx) = mpsc::channel::<Vec<u8>>();
-    let stores: Vec<Arc<FeatureStore>> = (0..n).map(|_| Arc::new(FeatureStore::new())).collect();
-
-    let server_handles: Vec<JoinHandle<ServerStats>> = server_rxs
-        .into_iter()
-        .enumerate()
-        .map(|(p, rx)| {
-            let replies = pf_txs.clone();
-            spawn_server(p, ds.feature_seed, ds.spec.feat_dim, part.clone(), rx, replies, delay)
-        })
-        .collect();
-    let pf_handles: Vec<JoinHandle<WireStats>> = pf_rxs
-        .into_iter()
-        .enumerate()
-        .map(|(p, rx)| spawn_prefetcher(p, stores[p].clone(), rx, server_txs.clone(), part.clone()))
-        .collect();
-    let hub_handle = spawn_hub(n, hub_rx, reply_txs, allreduce_sleep);
+    let (wirings, backstage) = match ccfg.transport {
+        Transport::Channel => wire_channel(n, &ds, &part, ccfg, delay, allreduce_sleep),
+        Transport::Tcp => wire_tcp(n, &ds, &part, ccfg, delay, allreduce_sleep)?,
+    };
 
     let wall_start = Instant::now();
-    let trainer_handles: Vec<JoinHandle<super::trainer::TrainerOutput>> = reply_rxs
-        .into_iter()
-        .enumerate()
-        .map(|(p, hub_rx_p)| {
-            let args = TrainerArgs {
-                part_id: p,
-                cfg: cfg.clone(),
-                ds: ds.clone(),
-                part: part.clone(),
-                offline: offline.clone(),
-                store: stores[p].clone(),
-                prefetch_tx: pf_txs[p].clone(),
-                hub_tx: hub_tx.clone(),
-                hub_rx: hub_rx_p,
-                max_mb_per_epoch: max_mb,
-                time_scale: ccfg.time_scale,
-            };
+    let mut trainer_handles: Vec<JoinHandle<super::trainer::TrainerOutput>> = Vec::new();
+    let mut link_sets: Vec<Vec<LinkStatsHandle>> = Vec::new();
+    let mut pf_handles: Vec<JoinHandle<WireStats>> = Vec::new();
+    for (p, w) in wirings.into_iter().enumerate() {
+        link_sets.push(w.links);
+        pf_handles.push(w.pf_handle);
+        let args = TrainerArgs {
+            part_id: p,
+            cfg: cfg.clone(),
+            ds: ds.clone(),
+            part: part.clone(),
+            offline: offline.clone(),
+            store: w.store,
+            prefetch_tx: w.prefetch_tx,
+            hub_tx: w.hub_tx,
+            hub_rx: w.hub_rx,
+            max_mb_per_epoch: max_mb,
+            time_scale: ccfg.time_scale,
+        };
+        trainer_handles.push(
             std::thread::Builder::new()
                 .name(format!("rudder-trainer-{p}"))
                 .spawn(move || run_trainer(args))
-                .expect("spawn trainer thread")
-        })
-        .collect();
-
-    // Drop the orchestrator's channel ends so disconnect-driven shutdown
-    // can propagate once the workers drop theirs.
-    drop(hub_tx);
-    drop(pf_txs);
-    drop(server_txs);
+                .expect("spawn trainer thread"),
+        );
+    }
 
     let mut per_trainer: Vec<RunMetrics> = Vec::with_capacity(n);
     let mut walls: Vec<WallStats> = Vec::with_capacity(n);
@@ -213,16 +214,22 @@ pub fn run_cluster_on(
     let wall_total = wall_start.elapsed().as_secs_f64();
 
     let mut wire: Vec<WireStats> = Vec::with_capacity(n);
-    for h in pf_handles {
-        wire.push(h.join().map_err(|_| crate::err!("prefetcher thread panicked"))?);
+    for (h, links) in pf_handles.into_iter().zip(&link_sets) {
+        let mut w = h.join().map_err(|_| crate::err!("prefetcher thread panicked"))?;
+        w.links = links.iter().map(transport::snapshot).collect();
+        wire.push(w);
     }
     let mut servers: Vec<ServerStats> = Vec::with_capacity(n);
-    for h in server_handles {
+    for h in backstage.server_handles {
         servers.push(h.join().map_err(|_| crate::err!("feature-server thread panicked"))?);
     }
-    let allreduce_rounds = hub_handle
+    let allreduce_rounds = backstage
+        .hub_handle
         .join()
         .map_err(|_| crate::err!("allreduce hub thread panicked"))?;
+    for h in backstage.aux_handles {
+        let _ = h.join();
+    }
 
     // Barrier-synchronized epochs: every trainer records identical virtual
     // epoch times, so trainer 0's series is the run-level series (exactly
@@ -235,57 +242,262 @@ pub fn run_cluster_on(
     Ok(ClusterResult { experiment, wall_total, walls, wire, servers, allreduce_rounds })
 }
 
-/// The DDP allreduce hub: collects one `Allreduce` frame per trainer per
-/// round, element-wise-reduces the gradient payloads, takes the max
+/// Wire everything over in-process `mpsc` channels.
+fn wire_channel(
+    n: usize,
+    ds: &Arc<Dataset>,
+    part: &Arc<Partition>,
+    ccfg: &ClusterConfig,
+    delay: WireDelay,
+    allreduce_sleep: f64,
+) -> (Vec<TrainerWiring>, Backstage) {
+    let drain = io_timeout(ccfg.time_scale);
+    // Endpoint inboxes.
+    let mut server_txs: Vec<Sender<NetMsg>> = Vec::with_capacity(n);
+    let mut server_rxs: Vec<Receiver<NetMsg>> = Vec::with_capacity(n);
+    let mut pf_txs: Vec<Sender<PrefetchMsg>> = Vec::with_capacity(n);
+    let mut pf_rxs: Vec<Receiver<PrefetchMsg>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel();
+        server_txs.push(tx);
+        server_rxs.push(rx);
+        let (tx, rx) = mpsc::channel();
+        pf_txs.push(tx);
+        pf_rxs.push(rx);
+    }
+    let (hub_tx, hub_rx) = mpsc::channel::<NetMsg>();
+
+    // Per-trainer link cells: server links in partition order, then hub.
+    let link_sets: Vec<Vec<LinkStatsHandle>> = (0..n)
+        .map(|_| {
+            let mut v: Vec<LinkStatsHandle> =
+                (0..n).map(|p| transport::new_link(format!("server:{p}"))).collect();
+            v.push(transport::new_link("hub"));
+            v
+        })
+        .collect();
+
+    // Feature servers: reply routes pre-registered (trainer t's responses
+    // are delivered straight into prefetcher t's inbox).
+    let server_handles: Vec<JoinHandle<ServerStats>> = server_rxs
+        .into_iter()
+        .enumerate()
+        .map(|(p, rx)| {
+            let prereg: Vec<(u32, Box<dyn FrameSender>)> = (0..n)
+                .map(|t| {
+                    let s: Box<dyn FrameSender> = Box::new(ChannelSender::delivering(
+                        pf_txs[t].clone(),
+                        PrefetchMsg::Wire,
+                        link_sets[t][p].clone(),
+                    ));
+                    (t as u32, s)
+                })
+                .collect();
+            spawn_server(
+                p,
+                ds.feature_seed,
+                ds.spec.feat_dim,
+                part.clone(),
+                rx,
+                prereg,
+                delay,
+                ccfg.fault,
+            )
+        })
+        .collect();
+
+    // Allreduce hub: reduced frames delivered into per-trainer reply
+    // channels.
+    let mut reply_rxs: Vec<Receiver<Vec<u8>>> = Vec::with_capacity(n);
+    let mut hub_prereg: Vec<(u32, Box<dyn FrameSender>)> = Vec::with_capacity(n);
+    for (t, links) in link_sets.iter().enumerate() {
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        reply_rxs.push(rx);
+        hub_prereg.push((
+            t as u32,
+            Box::new(ChannelSender::delivering(tx, |v| v, links[n].clone())),
+        ));
+    }
+    let hub_handle = spawn_hub(n, hub_rx, hub_prereg, allreduce_sleep);
+
+    // Trainer wirings + prefetchers.
+    let mut wirings = Vec::with_capacity(n);
+    let stores: Vec<Arc<FeatureStore>> = (0..n).map(|_| Arc::new(FeatureStore::new())).collect();
+    for (t, ((pf_rx, reply_rx), links)) in pf_rxs
+        .into_iter()
+        .zip(reply_rxs)
+        .zip(link_sets)
+        .enumerate()
+    {
+        let request_links: Vec<Box<dyn FrameSender>> = (0..n)
+            .map(|p| {
+                let s: Box<dyn FrameSender> = Box::new(ChannelSender::new(
+                    server_txs[p].clone(),
+                    NetMsg::Frame,
+                    links[p].clone(),
+                ));
+                s
+            })
+            .collect();
+        let pf_handle = spawn_prefetcher(
+            t,
+            stores[t].clone(),
+            pf_rx,
+            request_links,
+            part.clone(),
+            drain,
+        );
+        wirings.push(TrainerWiring {
+            prefetch_tx: pf_txs[t].clone(),
+            hub_tx: Box::new(ChannelSender::new(hub_tx.clone(), NetMsg::Frame, links[n].clone())),
+            hub_rx: Box::new(ChannelReceiver::new(reply_rx)),
+            store: stores[t].clone(),
+            pf_handle,
+            links,
+        });
+    }
+    // The orchestrator's own channel ends drop here (server_txs, pf_txs,
+    // hub_tx), so close-driven shutdown propagates once the workers drop
+    // theirs.
+    (wirings, Backstage { server_handles, hub_handle, aux_handles: Vec::new() })
+}
+
+/// Wire everything over loopback TCP sockets (still in-process threads —
+/// the multi-process flavor lives in [`super::multiproc`], built from the same
+/// parts).
+fn wire_tcp(
+    n: usize,
+    ds: &Arc<Dataset>,
+    part: &Arc<Partition>,
+    ccfg: &ClusterConfig,
+    delay: WireDelay,
+    allreduce_sleep: f64,
+) -> Result<(Vec<TrainerWiring>, Backstage)> {
+    let drain = io_timeout(ccfg.time_scale);
+    let chop = ccfg.fault.map(|f| f.chop).unwrap_or(0);
+    let mut aux_handles: Vec<JoinHandle<()>> = Vec::new();
+
+    // Listeners first (ephemeral loopback ports), so dialing never races.
+    let mut server_addrs: Vec<String> = Vec::with_capacity(n);
+    let mut server_handles: Vec<JoinHandle<ServerStats>> = Vec::with_capacity(n);
+    for p in 0..n {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        server_addrs.push(listener.local_addr()?.to_string());
+        let (tx, rx) = mpsc::channel::<NetMsg>();
+        aux_handles.push(transport::serve_listener(listener, n, tx, &format!("server{p}"), chop));
+        server_handles.push(spawn_server(
+            p,
+            ds.feature_seed,
+            ds.spec.feat_dim,
+            part.clone(),
+            rx,
+            Vec::new(),
+            delay,
+            ccfg.fault,
+        ));
+    }
+    let hub_listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let hub_addr = hub_listener.local_addr()?.to_string();
+    let (hub_tx, hub_rx) = mpsc::channel::<NetMsg>();
+    aux_handles.push(transport::serve_listener(hub_listener, n, hub_tx, "hub", 0));
+    let hub_handle = spawn_hub(n, hub_rx, Vec::new(), allreduce_sleep);
+
+    let mut wirings = Vec::with_capacity(n);
+    for t in 0..n {
+        let (pf_tx, pf_rx) = mpsc::channel::<PrefetchMsg>();
+        let store = Arc::new(FeatureStore::new());
+        let mut dial = transport::dial_trainer_links(&server_addrs, &hub_addr, t as u32, &pf_tx)?;
+        aux_handles.append(&mut dial.pumps);
+        let pf_handle =
+            spawn_prefetcher(t, store.clone(), pf_rx, dial.request_links, part.clone(), drain);
+        wirings.push(TrainerWiring {
+            prefetch_tx: pf_tx,
+            hub_tx: dial.hub_tx,
+            hub_rx: dial.hub_rx,
+            store,
+            pf_handle,
+            links: dial.links,
+        });
+    }
+    Ok((wirings, Backstage { server_handles, hub_handle, aux_handles }))
+}
+
+/// The DDP allreduce hub loop: collects one `Allreduce` frame per trainer
+/// per round, element-wise-reduces the gradient payloads, takes the max
 /// virtual clock (the barrier), and broadcasts the reduced frame back.
+/// Transport-agnostic: reply routes arrive pre-registered or via
+/// [`NetMsg::Register`]; runs until every inbound link hangs up.  Used
+/// inline by the hub worker process and on a thread by [`spawn_hub`].
+pub(crate) fn hub_loop(
+    n: usize,
+    rx: Receiver<NetMsg>,
+    prereg: Vec<(u32, Box<dyn FrameSender>)>,
+    round_sleep: f64,
+) -> u64 {
+    let mut replies: Vec<Option<Box<dyn FrameSender>>> = (0..n).map(|_| None).collect();
+    for (id, s) in prereg {
+        if (id as usize) < n {
+            replies[id as usize] = Some(s);
+        }
+    }
+    let mut rounds = 0u64;
+    let mut acc: Vec<f32> = Vec::new();
+    let mut max_vclock = f64::NEG_INFINITY;
+    let mut got = 0usize;
+    for msg in rx.iter() {
+        let bytes = match msg {
+            NetMsg::Register(id, s) => {
+                if (id as usize) < n {
+                    replies[id as usize] = Some(s);
+                }
+                continue;
+            }
+            NetMsg::Frame(bytes) => bytes,
+        };
+        let Ok((Frame::Allreduce { vclock, grads, .. }, _)) = Frame::decode(&bytes) else {
+            continue; // tolerate garbage; trainers would time out loudly
+        };
+        if got == 0 {
+            acc = grads;
+        } else {
+            for (a, g) in acc.iter_mut().zip(&grads) {
+                *a += g;
+            }
+        }
+        max_vclock = max_vclock.max(vclock);
+        got += 1;
+        if got == n {
+            if round_sleep > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(round_sleep));
+            }
+            let reduced = Frame::Allreduce {
+                part: u32::MAX,
+                round: rounds,
+                vclock: max_vclock,
+                grads: std::mem::take(&mut acc),
+            }
+            .encode();
+            for r in replies.iter_mut().flatten() {
+                let _ = r.send_frame(&reduced);
+            }
+            rounds += 1;
+            got = 0;
+            max_vclock = f64::NEG_INFINITY;
+        }
+    }
+    rounds
+}
+
+/// Spawn [`hub_loop`] on its own OS thread.
 fn spawn_hub(
     n: usize,
-    rx: Receiver<Vec<u8>>,
-    replies: Vec<Sender<Vec<u8>>>,
+    rx: Receiver<NetMsg>,
+    prereg: Vec<(u32, Box<dyn FrameSender>)>,
     round_sleep: f64,
 ) -> JoinHandle<u64> {
     std::thread::Builder::new()
         .name("rudder-allreduce-hub".into())
-        .spawn(move || {
-            let mut rounds = 0u64;
-            let mut acc: Vec<f32> = Vec::new();
-            let mut max_vclock = f64::NEG_INFINITY;
-            let mut got = 0usize;
-            for bytes in rx.iter() {
-                let Ok((Frame::Allreduce { vclock, grads, .. }, _)) = Frame::decode(&bytes)
-                else {
-                    continue; // tolerate garbage; trainers would time out loudly
-                };
-                if got == 0 {
-                    acc = grads;
-                } else {
-                    for (a, g) in acc.iter_mut().zip(&grads) {
-                        *a += g;
-                    }
-                }
-                max_vclock = max_vclock.max(vclock);
-                got += 1;
-                if got == n {
-                    if round_sleep > 0.0 {
-                        std::thread::sleep(Duration::from_secs_f64(round_sleep));
-                    }
-                    let reduced = Frame::Allreduce {
-                        part: u32::MAX,
-                        round: rounds,
-                        vclock: max_vclock,
-                        grads: std::mem::take(&mut acc),
-                    }
-                    .encode();
-                    for tx in &replies {
-                        let _ = tx.send(reduced.clone());
-                    }
-                    rounds += 1;
-                    got = 0;
-                    max_vclock = f64::NEG_INFINITY;
-                }
-            }
-            rounds
-        })
+        .spawn(move || hub_loop(n, rx, prereg, round_sleep))
         .expect("spawn allreduce hub thread")
 }
 
@@ -323,6 +535,36 @@ pub fn parity_check(
             "mean virtual epoch time: sim {} vs cluster {}",
             sim_r.mean_epoch_time, cluster_r.mean_epoch_time
         ));
+    }
+    Ok(())
+}
+
+/// Wire-level parity across transports: the want-set dedup and req-id
+/// response dedup make every protocol counter a pure function of
+/// config + seed, so two runs of the same config — channel vs TCP,
+/// faulted vs clean — must agree *exactly* on everything except
+/// `dup_frames` (which counts the injected duplicates themselves) and the
+/// transport-layer `links` detail.  Returns a diagnosis on mismatch.
+pub fn wire_parity(a: &[WireStats], b: &[WireStats]) -> std::result::Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("trainer count: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let checks: [(&str, u64, u64); 8] = [
+            ("req_frames", x.req_frames, y.req_frames),
+            ("req_bytes", x.req_bytes, y.req_bytes),
+            ("resp_frames", x.resp_frames, y.resp_frames),
+            ("resp_bytes", x.resp_bytes, y.resp_bytes),
+            ("nodes_requested", x.nodes_requested, y.nodes_requested),
+            ("nodes_deduped", x.nodes_deduped, y.nodes_deduped),
+            ("nodes_received", x.nodes_received, y.nodes_received),
+            ("bad_frames", x.bad_frames, y.bad_frames),
+        ];
+        for (what, va, vb) in checks {
+            if va != vb {
+                return Err(format!("trainer {i} {what}: {va} vs {vb}"));
+            }
+        }
     }
     Ok(())
 }

@@ -1,13 +1,17 @@
 //! Per-partition feature servers: the remote end of the fetch RPC.
 //!
-//! Each partition gets one OS thread owning its (synthesized) feature
+//! Each partition gets one serving loop owning its (synthesized) feature
 //! shard.  It decodes [`Frame::FetchReq`] frames, materializes the
 //! requested rows, optionally emulates the fabric's α–β transfer time at a
 //! configurable wall-clock scale, and replies with a serialized
-//! [`Frame::FetchResp`] routed to the requesting trainer's prefetcher.
-//! The thread exits when every request sender has hung up.
+//! [`Frame::FetchResp`] on the requesting trainer's reply link.  The loop
+//! is transport-agnostic: its inbox is a [`NetMsg`] channel fed either
+//! directly by in-process prefetchers (channel transport) or by the
+//! accept/pump threads of a TCP listener, and reply routes arrive either
+//! pre-registered (channel) or via [`NetMsg::Register`] handshakes (TCP).
+//! The loop exits when every request source has hung up.
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -15,8 +19,9 @@ use std::time::Duration;
 use crate::graph::features::fill_features;
 use crate::net::Network;
 use crate::partition::Partition;
+use crate::util::fasthash::FastMap;
 
-use super::prefetch::PrefetchMsg;
+use super::transport::{FaultSender, FaultSpec, FrameSender, NetMsg};
 use super::wire::Frame;
 
 /// Traffic served by one feature server.
@@ -27,7 +32,8 @@ pub struct ServerStats {
     pub nodes_served: u64,
     pub bytes_in: u64,
     pub bytes_out: u64,
-    /// Frames that failed to decode or had an unexpected kind.
+    /// Frames that failed to decode, had an unexpected kind, or named an
+    /// unknown reply route.
     pub bad_frames: u64,
 }
 
@@ -63,57 +69,122 @@ impl WireDelay {
     }
 }
 
-/// Spawn the feature server for partition `part_id`.  `replies[t]` routes
-/// responses to trainer `t`'s prefetcher inbox.
+/// Wrap a reply link with the fault-injection shim when configured.  The
+/// schedule seed is derived per (server, trainer) link so every link draws
+/// an independent, reproducible fault sequence.
+fn wrap_fault(
+    sender: Box<dyn FrameSender>,
+    fault: &Option<FaultSpec>,
+    part_id: usize,
+    trainer_id: u32,
+) -> Box<dyn FrameSender> {
+    match fault {
+        Some(spec) => Box::new(FaultSender::new(
+            sender,
+            spec,
+            &[part_id as u64, trainer_id as u64],
+        )),
+        None => sender,
+    }
+}
+
+/// The serving loop for partition `part_id`.  `prereg` carries reply links
+/// known at spawn time (channel transport); socket transports register
+/// theirs through [`NetMsg::Register`] before any frame from that peer
+/// arrives.  Runs until `rx` disconnects; used inline by the TCP worker
+/// process and on a thread by [`spawn_server`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn server_loop(
+    part_id: usize,
+    feature_seed: u64,
+    feat_dim: usize,
+    part: Arc<Partition>,
+    rx: Receiver<NetMsg>,
+    prereg: Vec<(u32, Box<dyn FrameSender>)>,
+    delay: WireDelay,
+    fault: Option<FaultSpec>,
+) -> ServerStats {
+    let mut stats = ServerStats { part: part_id, ..ServerStats::default() };
+    let mut replies: FastMap<u32, Box<dyn FrameSender>> = FastMap::default();
+    for (id, s) in prereg {
+        replies.insert(id, wrap_fault(s, &fault, part_id, id));
+    }
+    loop {
+        // Drain eagerly; on an empty inbox flush fault-held replies before
+        // blocking, so an injected delay re-orders frames but can never
+        // stall a trainer that is blocked waiting on the held response.
+        let msg = match rx.try_recv() {
+            Ok(m) => m,
+            Err(TryRecvError::Disconnected) => break,
+            Err(TryRecvError::Empty) => {
+                for r in replies.values_mut() {
+                    r.flush_pending();
+                }
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            }
+        };
+        let bytes = match msg {
+            NetMsg::Register(id, s) => {
+                replies.insert(id, wrap_fault(s, &fault, part_id, id));
+                continue;
+            }
+            NetMsg::Frame(bytes) => bytes,
+        };
+        stats.bytes_in += bytes.len() as u64;
+        let (frame, _) = match Frame::decode(&bytes) {
+            Ok(ok) => ok,
+            Err(_) => {
+                stats.bad_frames += 1;
+                continue;
+            }
+        };
+        let Frame::FetchReq { req_id, from, nodes } = frame else {
+            stats.bad_frames += 1;
+            continue;
+        };
+        let Some(reply) = replies.get_mut(&from) else {
+            stats.bad_frames += 1;
+            continue;
+        };
+        debug_assert!(
+            nodes.iter().all(|&n| part.owner_of(n) == part_id),
+            "fetch routed to non-owner partition {part_id}"
+        );
+        let mut feats = vec![0.0f32; nodes.len() * feat_dim];
+        for (i, &n) in nodes.iter().enumerate() {
+            fill_features(feature_seed, n, &mut feats[i * feat_dim..(i + 1) * feat_dim]);
+        }
+        stats.requests += 1;
+        stats.nodes_served += nodes.len() as u64;
+        let out = Frame::FetchResp { req_id, feat_dim: feat_dim as u32, nodes, feats }.encode();
+        stats.bytes_out += out.len() as u64;
+        delay.emulate(out.len());
+        // Prefetcher gone (trainer already finished): drop reply.
+        let _ = reply.send_frame(&out);
+    }
+    // Reply links drop here, flushing any fault-shim-held frames while the
+    // peers' drain loops are still reading.
+    stats
+}
+
+/// Spawn [`server_loop`] on its own OS thread.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn spawn_server(
     part_id: usize,
     feature_seed: u64,
     feat_dim: usize,
     part: Arc<Partition>,
-    rx: Receiver<Vec<u8>>,
-    replies: Vec<Sender<PrefetchMsg>>,
+    rx: Receiver<NetMsg>,
+    prereg: Vec<(u32, Box<dyn FrameSender>)>,
     delay: WireDelay,
+    fault: Option<FaultSpec>,
 ) -> JoinHandle<ServerStats> {
     std::thread::Builder::new()
         .name(format!("rudder-server-{part_id}"))
-        .spawn(move || {
-            let mut stats = ServerStats { part: part_id, ..ServerStats::default() };
-            for bytes in rx.iter() {
-                stats.bytes_in += bytes.len() as u64;
-                let (frame, _) = match Frame::decode(&bytes) {
-                    Ok(ok) => ok,
-                    Err(_) => {
-                        stats.bad_frames += 1;
-                        continue;
-                    }
-                };
-                let Frame::FetchReq { req_id, from, nodes } = frame else {
-                    stats.bad_frames += 1;
-                    continue;
-                };
-                if from as usize >= replies.len() {
-                    stats.bad_frames += 1;
-                    continue;
-                }
-                debug_assert!(
-                    nodes.iter().all(|&n| part.owner_of(n) == part_id),
-                    "fetch routed to non-owner partition {part_id}"
-                );
-                let mut feats = vec![0.0f32; nodes.len() * feat_dim];
-                for (i, &n) in nodes.iter().enumerate() {
-                    fill_features(feature_seed, n, &mut feats[i * feat_dim..(i + 1) * feat_dim]);
-                }
-                stats.requests += 1;
-                stats.nodes_served += nodes.len() as u64;
-                let out =
-                    Frame::FetchResp { req_id, feat_dim: feat_dim as u32, nodes, feats }.encode();
-                stats.bytes_out += out.len() as u64;
-                delay.emulate(out.len());
-                // Prefetcher gone (trainer already finished): drop reply.
-                let _ = replies[from as usize].send(PrefetchMsg::Wire(out));
-            }
-            stats
-        })
+        .spawn(move || server_loop(part_id, feature_seed, feat_dim, part, rx, prereg, delay, fault))
         .expect("spawn feature-server thread")
 }
 
@@ -125,6 +196,9 @@ mod tests {
     use crate::partition::{partition, Method};
     use crate::util::rng::Pcg32;
     use std::sync::mpsc;
+
+    use crate::cluster::prefetch::PrefetchMsg;
+    use crate::cluster::transport::{new_link, ChannelSender};
 
     #[test]
     fn serves_owned_nodes_with_correct_features() {
@@ -140,14 +214,20 @@ mod tests {
             &mut Pcg32::new(5),
         );
         let part = Arc::new(partition(&csr, 2, Method::MetisLike, 1));
-        let (req_tx, req_rx) = mpsc::channel::<Vec<u8>>();
+        let (req_tx, req_rx) = mpsc::channel::<NetMsg>();
         let (rep_tx, rep_rx) = mpsc::channel::<PrefetchMsg>();
         let delay = WireDelay::from_net(&Network::new(NetParams::default(), 2), 0.0);
         let owned: Vec<u32> = part.local_nodes[0][..3].to_vec();
-        let handle =
-            spawn_server(0, 42, 4, part.clone(), req_rx, vec![rep_tx.clone(), rep_tx], delay);
+        let link = new_link("server:0");
+        let prereg: Vec<(u32, Box<dyn FrameSender>)> = vec![(
+            1,
+            Box::new(ChannelSender::delivering(rep_tx, PrefetchMsg::Wire, link.clone())),
+        )];
+        let handle = spawn_server(0, 42, 4, part.clone(), req_rx, prereg, delay, None);
         req_tx
-            .send(Frame::FetchReq { req_id: 9, from: 1, nodes: owned.clone() }.encode())
+            .send(NetMsg::Frame(
+                Frame::FetchReq { req_id: 9, from: 1, nodes: owned.clone() }.encode(),
+            ))
             .unwrap();
         let PrefetchMsg::Wire(resp) = rep_rx.recv().unwrap() else {
             panic!("expected wire reply")
@@ -159,12 +239,53 @@ mod tests {
         assert_eq!((req_id, feat_dim), (9, 4));
         assert_eq!(nodes, owned);
         let mut want = vec![0.0f32; 4];
-        fill_features(42, owned[1], &mut want);
+        crate::graph::features::fill_features(42, owned[1], &mut want);
         assert_eq!(&feats[4..8], &want[..], "row 1 must be node {}'s features", owned[1]);
         drop(req_tx);
         let stats = handle.join().unwrap();
         assert_eq!(stats.requests, 1);
         assert_eq!(stats.nodes_served, 3);
         assert!(stats.bytes_out > stats.bytes_in);
+        // Reply delivery counted as received on the trainer-side link.
+        let snap = crate::cluster::transport::snapshot(&link);
+        assert_eq!(snap.frames_recv, 1);
+    }
+
+    #[test]
+    fn faulted_reply_link_duplicates_responses() {
+        let csr = generate(
+            &RmatParams {
+                a: 0.57,
+                b: 0.19,
+                c: 0.19,
+                num_nodes: 200,
+                num_edges: 1200,
+                permute: true,
+            },
+            &mut Pcg32::new(6),
+        );
+        let part = Arc::new(partition(&csr, 1, Method::MetisLike, 1));
+        let (req_tx, req_rx) = mpsc::channel::<NetMsg>();
+        let (rep_tx, rep_rx) = mpsc::channel::<PrefetchMsg>();
+        let delay = WireDelay::from_net(&Network::new(NetParams::default(), 1), 0.0);
+        let fault = FaultSpec { seed: 5, dup: 1.0, delay: 0.0, chop: 0 };
+        let link = new_link("server:0");
+        let prereg: Vec<(u32, Box<dyn FrameSender>)> = vec![(
+            0,
+            Box::new(ChannelSender::delivering(rep_tx, PrefetchMsg::Wire, link)),
+        )];
+        let owned: Vec<u32> = part.local_nodes[0][..2].to_vec();
+        let handle = spawn_server(0, 1, 2, part, req_rx, prereg, delay, Some(fault));
+        req_tx
+            .send(NetMsg::Frame(Frame::FetchReq { req_id: 0, from: 0, nodes: owned }.encode()))
+            .unwrap();
+        drop(req_tx);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.requests, 1, "server serves each request once");
+        let mut replies = 0;
+        while let Ok(PrefetchMsg::Wire(_)) = rep_rx.recv() {
+            replies += 1;
+        }
+        assert_eq!(replies, 2, "dup=1.0 must deliver every response twice");
     }
 }

@@ -17,7 +17,7 @@
 //! 6. the minibatch closes with a *real* DDP barrier: an `Allreduce` frame
 //!    to the hub, blocking on the reduced reply.
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -31,6 +31,7 @@ use crate::sim::trainer::{FetchPlan, RunCtx};
 use crate::sim::{self, RunConfig};
 
 use super::prefetch::{FeatureStore, PrefetchMsg};
+use super::transport::{FrameReceiver, FrameSender};
 use super::wire::Frame;
 
 /// Timeouts for feature waits and the allreduce barrier, bounded so that
@@ -40,7 +41,7 @@ use super::wire::Frame;
 /// so the budgets do too: the base covers scheduling noise, the scaled
 /// term covers ~30 virtual seconds of emulated cost per round — far above
 /// any legitimate minibatch (T_DDP ≈ 0.1–0.3 virtual s, fetches less).
-fn io_timeout(time_scale: f64) -> Duration {
+pub(crate) fn io_timeout(time_scale: f64) -> Duration {
     Duration::from_secs_f64(30.0 + 30.0 * time_scale.max(0.0))
 }
 
@@ -62,6 +63,8 @@ pub struct WallStats {
 }
 
 /// Everything a trainer thread needs (moved into the thread at spawn).
+/// The hub link is a transport-abstract frame link, so the same loop runs
+/// over in-process channels or a TCP connection to a hub process.
 pub(crate) struct TrainerArgs {
     pub part_id: usize,
     pub cfg: RunConfig,
@@ -70,8 +73,8 @@ pub(crate) struct TrainerArgs {
     pub offline: Arc<Option<TrainingSet>>,
     pub store: Arc<FeatureStore>,
     pub prefetch_tx: Sender<PrefetchMsg>,
-    pub hub_tx: Sender<Vec<u8>>,
-    pub hub_rx: Receiver<Vec<u8>>,
+    pub hub_tx: Box<dyn FrameSender>,
+    pub hub_rx: Box<dyn FrameReceiver>,
     pub max_mb_per_epoch: usize,
     pub time_scale: f64,
 }
@@ -81,7 +84,7 @@ pub(crate) struct TrainerOutput {
     pub wall: WallStats,
 }
 
-pub(crate) fn run_trainer(a: TrainerArgs) -> TrainerOutput {
+pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
     let cfg = &a.cfg;
     let ds: &Dataset = &a.ds;
     let part: &Partition = &a.part;
@@ -187,12 +190,16 @@ pub(crate) fn run_trainer(a: TrainerArgs) -> TrainerOutput {
                 grads: vec![0.0; grads_len],
             };
             let w = Instant::now();
-            a.hub_tx.send(frame.encode()).expect("allreduce hub hung up");
-            let reply = match a.hub_rx.recv_timeout(barrier_budget) {
-                Ok(r) => r,
+            a.hub_tx.send_frame(&frame.encode()).expect("allreduce hub hung up");
+            let reply = match a.hub_rx.recv_frame_timeout(barrier_budget) {
+                Ok(Some(r)) => r,
+                Ok(None) => panic!(
+                    "trainer {}: allreduce hub closed mid-run at round {round}",
+                    a.part_id
+                ),
                 Err(e) => panic!(
                     "trainer {}: allreduce barrier round {round} unresponsive ({e}); \
-                     a peer trainer thread likely died",
+                     a peer trainer likely died",
                     a.part_id
                 ),
             };
@@ -209,5 +216,7 @@ pub(crate) fn run_trainer(a: TrainerArgs) -> TrainerOutput {
     }
     wall.total = run_start.elapsed().as_secs_f64();
     let _ = a.prefetch_tx.send(PrefetchMsg::Shutdown);
+    // Half-close the hub link so the hub (thread or process) sees EOF.
+    a.hub_tx.close();
     TrainerOutput { metrics: t.metrics, wall }
 }

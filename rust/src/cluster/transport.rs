@@ -1,0 +1,864 @@
+//! Pluggable cluster transport: how encoded [`Frame`]s move between
+//! trainers, feature servers, and the allreduce hub.
+//!
+//! The protocol layer ([`super::prefetch`], [`super::server`],
+//! [`super::run`]) speaks only [`FrameSender`] / [`FrameReceiver`] — one
+//! whole encoded frame per call — so the same trainer/server/hub loops run
+//! unchanged over either backend:
+//!
+//! * **Channel** — in-process `mpsc` channels carrying `Vec<u8>` frames
+//!   (PR 2's runtime).  Framing is trivially preserved by the channel.
+//! * **TCP** — `std::net` sockets (loopback or real network).  The byte
+//!   stream has no message boundaries, so the receive path runs every read
+//!   through a [`FrameAssembler`] that reassembles partial frames split at
+//!   arbitrary byte positions (short reads, chopped writes, coalesced
+//!   segments).  Fresh connections handshake with [`Frame::Hello`] so
+//!   listeners can index the reply route by trainer id.
+//!
+//! Each trainer-owned link carries a shared [`LinkStats`] cell counting
+//! frames/bytes in both directions plus connect retries; snapshots land in
+//! [`crate::metrics::WireStats::links`].
+//!
+//! [`FaultSender`] is the deterministic fault-injection shim: seeded
+//! duplicate/reorder of whole frames (any backend) and write chopping
+//! (TCP), so reassembly and response-dedup paths are testable without
+//! flaky sockets or sleeps.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::metrics::LinkStats;
+use crate::util::rng::{derive_seed, Pcg32};
+
+use super::prefetch::PrefetchMsg;
+use super::wire::{Frame, MAX_FRAME_BYTES, ROLE_TRAINER};
+
+/// Which backend moves the frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// In-process `mpsc` channels (single-process runtime).
+    #[default]
+    Channel,
+    /// TCP sockets behind the same wire codec (multi-process capable).
+    Tcp,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> Result<Transport> {
+        match s {
+            "channel" | "chan" => Ok(Transport::Channel),
+            "tcp" | "socket" => Ok(Transport::Tcp),
+            _ => crate::bail!("unknown transport '{s}' (channel|tcp)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Channel => "channel",
+            Transport::Tcp => "tcp",
+        }
+    }
+}
+
+/// Shared per-link counter cell (trainer-side view of one link).
+pub type LinkStatsHandle = Arc<Mutex<LinkStats>>;
+
+/// Fresh counter cell for a link to `peer`.
+pub fn new_link(peer: impl Into<String>) -> LinkStatsHandle {
+    Arc::new(Mutex::new(LinkStats { peer: peer.into(), ..LinkStats::default() }))
+}
+
+/// Copy of the current counters.
+pub fn snapshot(h: &LinkStatsHandle) -> LinkStats {
+    h.lock().unwrap().clone()
+}
+
+/// Sending half of a frame link.  One call = one whole encoded frame.
+pub trait FrameSender: Send {
+    fn send_frame(&mut self, frame: &[u8]) -> Result<()>;
+    /// Release any frame the link is allowed to be holding back (only the
+    /// fault shim holds frames).  Endpoints call this when going idle so
+    /// an injected delay reorders frames but can never stall a peer that
+    /// is blocked waiting on the held frame.
+    fn flush_pending(&mut self) {}
+    /// Half-close: signal end-of-stream to the peer (the peer's receiver
+    /// returns `Ok(None)` once drained).  Further sends error.
+    fn close(&mut self);
+}
+
+/// Receiving half of a frame link.  Yields whole frames in send order.
+pub trait FrameReceiver: Send {
+    /// Blocking next frame; `Ok(None)` once the peer closed cleanly at a
+    /// frame boundary; `Err` on mid-frame EOF or transport failure.
+    fn recv_frame(&mut self) -> Result<Option<Vec<u8>>>;
+    /// As [`FrameReceiver::recv_frame`], but errors once `timeout` passes
+    /// with no complete frame.
+    fn recv_frame_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>>;
+}
+
+/// Inbox protocol for listener-style endpoints (feature servers, the
+/// allreduce hub): connection registration plus decoded frames, already
+/// demultiplexed onto one `mpsc` receiver per endpoint.
+pub enum NetMsg {
+    /// A dialing peer announced itself: the reply route for trainer `id`.
+    Register(u32, Box<dyn FrameSender>),
+    /// One encoded frame from any registered peer (frames self-identify
+    /// their sender: `FetchReq.from`, `Allreduce.part`).
+    Frame(Vec<u8>),
+}
+
+// ---------------------------------------------------------------------------
+// channel backend
+
+/// Channel-backed [`FrameSender`]: wraps frames into the receiving
+/// endpoint's inbox message type via a plain `fn` constructor (e.g.
+/// `NetMsg::Frame`, `PrefetchMsg::Wire`).
+pub struct ChannelSender<T: Send + 'static> {
+    tx: Option<Sender<T>>,
+    wrap: fn(Vec<u8>) -> T,
+    stats: LinkStatsHandle,
+    /// Reply links count as *received* on the owning trainer's link cell
+    /// (delivery into the trainer-side inbox), mirroring what the TCP
+    /// receive path counts on read.
+    count_as_recv: bool,
+}
+
+impl<T: Send + 'static> ChannelSender<T> {
+    /// Request-direction sender: counts `frames_sent`/`bytes_sent`.
+    pub fn new(tx: Sender<T>, wrap: fn(Vec<u8>) -> T, stats: LinkStatsHandle) -> Self {
+        ChannelSender { tx: Some(tx), wrap, stats, count_as_recv: false }
+    }
+
+    /// Reply-direction sender: counts `frames_recv`/`bytes_recv` on the
+    /// destination trainer's link cell.
+    pub fn delivering(tx: Sender<T>, wrap: fn(Vec<u8>) -> T, stats: LinkStatsHandle) -> Self {
+        ChannelSender { tx: Some(tx), wrap, stats, count_as_recv: true }
+    }
+}
+
+impl<T: Send + 'static> FrameSender for ChannelSender<T> {
+    fn send_frame(&mut self, frame: &[u8]) -> Result<()> {
+        let Some(tx) = &self.tx else {
+            crate::bail!("transport: send on closed channel link");
+        };
+        tx.send((self.wrap)(frame.to_vec()))
+            .map_err(|_| crate::err!("transport: peer inbox hung up"))?;
+        let mut s = self.stats.lock().unwrap();
+        if self.count_as_recv {
+            s.frames_recv += 1;
+            s.bytes_recv += frame.len() as u64;
+        } else {
+            s.frames_sent += 1;
+            s.bytes_sent += frame.len() as u64;
+        }
+        Ok(())
+    }
+
+    fn close(&mut self) {
+        self.tx = None;
+    }
+}
+
+/// Channel-backed [`FrameReceiver`] over a raw `Vec<u8>` inbox (the
+/// trainer's hub-reply channel).  Counting happens at the paired
+/// [`ChannelSender::delivering`] end, so this side stays count-free.
+pub struct ChannelReceiver {
+    rx: Receiver<Vec<u8>>,
+}
+
+impl ChannelReceiver {
+    pub fn new(rx: Receiver<Vec<u8>>) -> Self {
+        ChannelReceiver { rx }
+    }
+}
+
+impl FrameReceiver for ChannelReceiver {
+    fn recv_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        Ok(self.rx.recv().ok())
+    }
+
+    fn recv_frame_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(b) => Ok(Some(b)),
+            Err(RecvTimeoutError::Disconnected) => Ok(None),
+            Err(RecvTimeoutError::Timeout) => {
+                crate::bail!("transport: link receive timed out after {timeout:?}")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frame reassembly (shared by every stream transport)
+
+/// Incremental length-prefixed frame reassembly over an arbitrary byte
+/// stream: bytes go in at whatever granularity the transport delivers
+/// (short reads, chopped writes, coalesced segments), whole frames come
+/// out.  Pure — no I/O — so the splitting/truncation behavior is
+/// property-testable (`tests/wire.rs`).
+#[derive(Default)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+}
+
+impl FrameAssembler {
+    pub fn new() -> FrameAssembler {
+        FrameAssembler::default()
+    }
+
+    /// Feed raw stream bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet returned as a frame.  Non-zero at EOF
+    /// means the stream died mid-frame.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Extract the next complete frame (prefix + body, ready for
+    /// [`Frame::decode`]).  `Ok(None)` = need more bytes.  Errors on a
+    /// malformed length prefix (empty or oversized body) — the stream is
+    /// unrecoverable past that point, never silently resynced.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let body_len =
+            u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        crate::ensure!(body_len >= 1, "transport: empty frame body in stream");
+        crate::ensure!(
+            body_len <= MAX_FRAME_BYTES,
+            "transport: frame body {body_len} exceeds cap"
+        );
+        let total = 4 + body_len;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let rest = self.buf.split_off(total);
+        let frame = std::mem::replace(&mut self.buf, rest);
+        Ok(Some(frame))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP backend
+
+/// TCP-backed [`FrameSender`]: one `write_all` per frame (or chopped into
+/// `chop`-byte writes under fault injection, forcing the peer through the
+/// partial-frame reassembly path).
+pub struct TcpFrameSender {
+    stream: Option<TcpStream>,
+    chop: usize,
+    stats: LinkStatsHandle,
+}
+
+impl TcpFrameSender {
+    pub fn new(stream: TcpStream, stats: LinkStatsHandle) -> TcpFrameSender {
+        let _ = stream.set_nodelay(true);
+        TcpFrameSender { stream: Some(stream), chop: 0, stats }
+    }
+
+    pub fn with_chop(mut self, chop: usize) -> TcpFrameSender {
+        self.chop = chop;
+        self
+    }
+}
+
+impl FrameSender for TcpFrameSender {
+    fn send_frame(&mut self, frame: &[u8]) -> Result<()> {
+        let Some(stream) = &mut self.stream else {
+            crate::bail!("transport: send on closed tcp link");
+        };
+        if self.chop == 0 {
+            stream.write_all(frame)?;
+        } else {
+            for piece in frame.chunks(self.chop) {
+                stream.write_all(piece)?;
+                stream.flush()?;
+            }
+        }
+        let mut s = self.stats.lock().unwrap();
+        s.frames_sent += 1;
+        s.bytes_sent += frame.len() as u64;
+        Ok(())
+    }
+
+    fn close(&mut self) {
+        if let Some(stream) = self.stream.take() {
+            // Half-close: EOF to the peer's read side; our paired read
+            // half (a separate clone of the fd) keeps working.
+            let _ = stream.shutdown(Shutdown::Write);
+        }
+    }
+}
+
+/// TCP-backed [`FrameReceiver`]: blocking reads through a
+/// [`FrameAssembler`].
+pub struct TcpFrameReceiver {
+    stream: TcpStream,
+    asm: FrameAssembler,
+    stats: LinkStatsHandle,
+}
+
+impl TcpFrameReceiver {
+    pub fn new(stream: TcpStream, stats: LinkStatsHandle) -> TcpFrameReceiver {
+        TcpFrameReceiver { stream, asm: FrameAssembler::new(), stats }
+    }
+
+    fn count(&self, frame: &[u8]) {
+        let mut s = self.stats.lock().unwrap();
+        s.frames_recv += 1;
+        s.bytes_recv += frame.len() as u64;
+    }
+
+    fn at_eof(&self) -> Result<Option<Vec<u8>>> {
+        crate::ensure!(
+            self.asm.pending() == 0,
+            "transport: EOF mid-frame ({} bytes pending)",
+            self.asm.pending()
+        );
+        Ok(None)
+    }
+}
+
+impl FrameReceiver for TcpFrameReceiver {
+    fn recv_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let _ = self.stream.set_read_timeout(None);
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if let Some(f) = self.asm.next_frame()? {
+                self.count(&f);
+                return Ok(Some(f));
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return self.at_eof();
+            }
+            self.asm.push(&chunk[..n]);
+        }
+    }
+
+    fn recv_frame_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        let deadline = Instant::now() + timeout;
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if let Some(f) = self.asm.next_frame()? {
+                self.count(&f);
+                return Ok(Some(f));
+            }
+            let now = Instant::now();
+            crate::ensure!(
+                now < deadline,
+                "transport: link receive timed out after {timeout:?}"
+            );
+            let _ = self.stream.set_read_timeout(Some(deadline - now));
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return self.at_eof(),
+                Ok(n) => self.asm.push(&chunk[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    crate::bail!("transport: link receive timed out after {timeout:?}")
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+/// Dial `addr` with bounded retries (a worker process may beat its peer's
+/// listener into existence), send the [`Frame::Hello`] handshake, and
+/// return the connected stream.  Retries are counted as `reconnects` on
+/// the link cell.
+pub fn connect_hello(addr: &str, trainer_id: u32, stats: &LinkStatsHandle) -> Result<TcpStream> {
+    let mut last_err = String::new();
+    for attempt in 0..100u64 {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                let _ = stream.set_nodelay(true);
+                let hello = Frame::Hello { role: ROLE_TRAINER, id: trainer_id }.encode();
+                (&stream).write_all(&hello)?;
+                let mut s = stats.lock().unwrap();
+                s.frames_sent += 1;
+                s.bytes_sent += hello.len() as u64;
+                s.reconnects += attempt;
+                return Ok(stream);
+            }
+            Err(e) => {
+                last_err = e.to_string();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    Err(crate::err!("transport: connect {addr} failed after retries: {last_err}"))
+}
+
+/// Accept exactly `expect` connections on `listener`.  Each must open with
+/// a [`Frame::Hello`]; its write half is handed to the owning loop as
+/// [`NetMsg::Register`] (wrapped with `chop`-byte fault chopping when
+/// non-zero), then every subsequent frame is pumped into `inbox` as
+/// [`NetMsg::Frame`].  The thread exits — dropping its `inbox` clones —
+/// once all peers disconnected.
+pub(crate) fn serve_listener(
+    listener: TcpListener,
+    expect: usize,
+    inbox: Sender<NetMsg>,
+    endpoint: &str,
+    chop: usize,
+) -> JoinHandle<()> {
+    let endpoint = endpoint.to_string();
+    std::thread::Builder::new()
+        .name(format!("rudder-accept-{endpoint}"))
+        .spawn(move || {
+            let mut pumps: Vec<JoinHandle<()>> = Vec::new();
+            let mut registered = 0usize;
+            while registered < expect {
+                let stream = match listener.accept() {
+                    Ok((s, _)) => s,
+                    Err(e) => {
+                        eprintln!("{endpoint}: accept failed: {e}");
+                        break;
+                    }
+                };
+                let _ = stream.set_nodelay(true);
+                let stats = new_link(format!("{endpoint}:peer"));
+                let read_half = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("{endpoint}: clone failed: {e}");
+                        continue;
+                    }
+                };
+                let mut rx = TcpFrameReceiver::new(read_half, stats.clone());
+                // Bounded handshake: a connection that never sends Hello
+                // (port scanner, miswired worker) must not stall the
+                // accept loop — and with it the whole cluster — forever.
+                let id = match rx.recv_frame_timeout(Duration::from_secs(30)) {
+                    Ok(Some(bytes)) => match Frame::decode(&bytes) {
+                        Ok((Frame::Hello { id, .. }, _)) => id,
+                        _ => {
+                            eprintln!("{endpoint}: bad handshake frame");
+                            continue;
+                        }
+                    },
+                    _ => {
+                        eprintln!("{endpoint}: peer closed or stalled before handshake");
+                        continue;
+                    }
+                };
+                stats.lock().unwrap().peer = format!("trainer:{id}");
+                let sender = TcpFrameSender::new(stream, stats).with_chop(chop);
+                if inbox.send(NetMsg::Register(id, Box::new(sender))).is_err() {
+                    break;
+                }
+                registered += 1;
+                pumps.push(pump_frames(
+                    rx,
+                    inbox.clone(),
+                    NetMsg::Frame,
+                    format!("{endpoint}-t{id}"),
+                ));
+            }
+            drop(inbox);
+            for p in pumps {
+                let _ = p.join();
+            }
+        })
+        .expect("spawn accept thread")
+}
+
+/// Pump every frame arriving on a TCP link into an `mpsc` inbox, wrapped
+/// into the destination's message type (`NetMsg::Frame` for listener
+/// endpoints, `PrefetchMsg::Wire` for prefetcher inboxes).  Exits on
+/// clean EOF, link error, or a dropped inbox.
+pub(crate) fn pump_frames<T: Send + 'static>(
+    mut rx: TcpFrameReceiver,
+    tx: Sender<T>,
+    wrap: fn(Vec<u8>) -> T,
+    label: String,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("rudder-pump-{label}"))
+        .spawn(move || loop {
+            match rx.recv_frame() {
+                Ok(Some(bytes)) => {
+                    if tx.send(wrap(bytes)).is_err() {
+                        break;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    eprintln!("{label}: link error: {e}");
+                    break;
+                }
+            }
+        })
+        .expect("spawn pump thread")
+}
+
+/// A trainer's fully-dialed TCP endpoint set: request links to every
+/// feature server (responses pumped into the prefetcher inbox) plus both
+/// halves of the hub link.
+pub(crate) struct TrainerDial {
+    /// Request senders, one per feature server, in partition order.
+    pub request_links: Vec<Box<dyn FrameSender>>,
+    pub hub_tx: Box<dyn FrameSender>,
+    pub hub_rx: Box<dyn FrameReceiver>,
+    /// Link cells: server links in partition order, then the hub link.
+    pub links: Vec<LinkStatsHandle>,
+    /// Response pump threads (exit when the servers close their ends).
+    pub pumps: Vec<JoinHandle<()>>,
+}
+
+/// Dial every feature server and the hub for trainer `trainer_id` —
+/// shared by the in-process TCP wiring and the `--role trainer` worker
+/// process, so the two runtimes can never drift apart.
+pub(crate) fn dial_trainer_links(
+    servers: &[String],
+    hub: &str,
+    trainer_id: u32,
+    pf_tx: &Sender<PrefetchMsg>,
+) -> Result<TrainerDial> {
+    let mut links: Vec<LinkStatsHandle> = Vec::with_capacity(servers.len() + 1);
+    let mut request_links: Vec<Box<dyn FrameSender>> = Vec::with_capacity(servers.len());
+    let mut pumps = Vec::with_capacity(servers.len());
+    for (p, addr) in servers.iter().enumerate() {
+        let link = new_link(format!("server:{p}"));
+        let stream = connect_hello(addr, trainer_id, &link)?;
+        let read_half = TcpFrameReceiver::new(stream.try_clone()?, link.clone());
+        pumps.push(pump_frames(
+            read_half,
+            pf_tx.clone(),
+            PrefetchMsg::Wire,
+            format!("trainer{trainer_id}-server{p}"),
+        ));
+        request_links.push(Box::new(TcpFrameSender::new(stream, link.clone())));
+        links.push(link);
+    }
+    let hub_link = new_link("hub");
+    let hub_stream = connect_hello(hub, trainer_id, &hub_link)?;
+    let hub_rx: Box<dyn FrameReceiver> =
+        Box::new(TcpFrameReceiver::new(hub_stream.try_clone()?, hub_link.clone()));
+    let hub_tx: Box<dyn FrameSender> = Box::new(TcpFrameSender::new(hub_stream, hub_link.clone()));
+    links.push(hub_link);
+    Ok(TrainerDial { request_links, hub_tx, hub_rx, links, pumps })
+}
+
+// ---------------------------------------------------------------------------
+// fault injection
+
+/// Deterministic fault schedule for the server→trainer response links.
+/// All randomness is a pure function of `seed` and the per-link frame
+/// index, so a faulted run is exactly reproducible.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub seed: u64,
+    /// Probability a frame is sent twice (exercises response dedup).
+    pub dup: f64,
+    /// Probability a frame is held back and re-ordered after the next
+    /// frame on the same link (exercises delayed-response handling; held
+    /// frames flush on the owner's idle turn and on close, never
+    /// dropped).
+    pub delay: f64,
+    /// TCP write chop in bytes (exercises partial-frame reassembly);
+    /// 0 disables; ignored by channel links, which are message-preserving.
+    pub chop: usize,
+}
+
+impl FaultSpec {
+    /// Parse `"seed[:dup[:delay[:chop]]]"`, e.g. `"7:0.25:0.25:9"`.
+    /// Seed and chop are exact integers (a lossy f64 detour would let a
+    /// worker's fault schedule silently diverge from the orchestrator's).
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let p: Vec<&str> = s.split(':').collect();
+        let rate = |i: usize, default: f64| -> Result<f64> {
+            match p.get(i) {
+                None => Ok(default),
+                Some(v) => v
+                    .parse::<f64>()
+                    .map_err(|_| crate::err!("bad --fault rate '{v}' in '{s}'")),
+            }
+        };
+        let seed = p[0]
+            .parse::<u64>()
+            .map_err(|_| crate::err!("bad --fault seed '{}' in '{s}'", p[0]))?;
+        let chop = match p.get(3) {
+            None => 0,
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| crate::err!("bad --fault chop '{v}' in '{s}'"))?,
+        };
+        Ok(FaultSpec { seed, dup: rate(1, 0.25)?, delay: rate(2, 0.25)?, chop })
+    }
+}
+
+/// Fault-injection wrapper around any [`FrameSender`]: seeded duplicate
+/// and hold-one-reorder of whole frames.  A held frame is flushed by the
+/// next send, by the owner's idle turn ([`FrameSender::flush_pending`]),
+/// or by [`FrameSender::close`]/drop — faults reorder and duplicate, they
+/// never lose frames.  Every frame's fate (held or not, duplicated or
+/// not) is decided by its own draw alone — never by whether an earlier
+/// held frame happens to still occupy the slot — so the fault schedule
+/// and all downstream counters stay pure functions of the seed even
+/// though *when* a held frame is released is timing-dependent.
+pub struct FaultSender {
+    inner: Box<dyn FrameSender>,
+    rng: Pcg32,
+    dup: f64,
+    delay: f64,
+    /// A delayed frame plus its (preserved) duplicate decision.
+    held: Option<(Vec<u8>, bool)>,
+}
+
+impl FaultSender {
+    /// `labels` identify the link (e.g. `[server_part, trainer_id]`) so
+    /// every link draws an independent, reproducible schedule.
+    pub fn new(inner: Box<dyn FrameSender>, spec: &FaultSpec, labels: &[u64]) -> FaultSender {
+        FaultSender {
+            inner,
+            rng: Pcg32::new(derive_seed(spec.seed, labels)),
+            dup: spec.dup,
+            delay: spec.delay,
+            held: None,
+        }
+    }
+
+    fn deliver(&mut self, frame: &[u8], dup: bool) -> Result<()> {
+        self.inner.send_frame(frame)?;
+        if dup {
+            self.inner.send_frame(frame)?;
+        }
+        Ok(())
+    }
+
+    fn flush_held(&mut self) {
+        if let Some((h, dup)) = self.held.take() {
+            let _ = self.deliver(&h, dup);
+        }
+    }
+}
+
+impl FrameSender for FaultSender {
+    fn send_frame(&mut self, frame: &[u8]) -> Result<()> {
+        // Fixed draw order: the fault schedule depends only on the frame
+        // index, not on which faults previously fired.
+        let dup = self.rng.chance(self.dup);
+        let hold = self.rng.chance(self.delay);
+        if hold {
+            // Make room first: an earlier held frame goes out now, its
+            // own dup decision intact.
+            self.flush_held();
+            self.held = Some((frame.to_vec(), dup));
+            return Ok(());
+        }
+        self.deliver(frame, dup)?;
+        self.flush_held();
+        Ok(())
+    }
+
+    fn flush_pending(&mut self) {
+        self.flush_held();
+        self.inner.flush_pending();
+    }
+
+    fn close(&mut self) {
+        self.flush_held();
+        self.inner.close();
+    }
+}
+
+impl Drop for FaultSender {
+    fn drop(&mut self) {
+        self.flush_held();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    /// Recording sink for fault-shim tests.
+    struct Rec(Arc<Mutex<Vec<Vec<u8>>>>);
+
+    impl FrameSender for Rec {
+        fn send_frame(&mut self, frame: &[u8]) -> Result<()> {
+            self.0.lock().unwrap().push(frame.to_vec());
+            Ok(())
+        }
+        fn close(&mut self) {}
+    }
+
+    #[test]
+    fn assembler_reassembles_byte_by_byte() {
+        let a = Frame::FetchReq { req_id: 1, from: 0, nodes: vec![7, 8, 9] }.encode();
+        let b = Frame::Hello { role: ROLE_TRAINER, id: 2 }.encode();
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        let mut asm = FrameAssembler::new();
+        let mut out = Vec::new();
+        for &byte in &stream {
+            asm.push(&[byte]);
+            while let Some(f) = asm.next_frame().unwrap() {
+                out.push(f);
+            }
+        }
+        assert_eq!(out, vec![a, b]);
+        assert_eq!(asm.pending(), 0);
+    }
+
+    #[test]
+    fn assembler_rejects_malformed_length() {
+        let mut asm = FrameAssembler::new();
+        asm.push(&0u32.to_le_bytes()); // empty body
+        assert!(asm.next_frame().is_err());
+        let mut asm = FrameAssembler::new();
+        asm.push(&u32::MAX.to_le_bytes()); // oversized body
+        assert!(asm.next_frame().is_err());
+    }
+
+    #[test]
+    fn channel_link_roundtrip_with_counters() {
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        let link = new_link("peer");
+        let mut s = ChannelSender::new(tx, |v| v, link.clone());
+        let frame = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
+        s.send_frame(&frame).unwrap();
+        let mut r = ChannelReceiver::new(rx);
+        assert_eq!(r.recv_frame().unwrap().unwrap(), frame);
+        s.close();
+        assert!(s.send_frame(&frame).is_err());
+        assert_eq!(r.recv_frame().unwrap(), None, "closed link yields None");
+        let snap = snapshot(&link);
+        assert_eq!((snap.frames_sent, snap.bytes_sent), (1, frame.len() as u64));
+    }
+
+    #[test]
+    fn tcp_link_roundtrip_with_chopped_writes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let frames: Vec<Vec<u8>> = vec![
+            Frame::FetchReq { req_id: 9, from: 1, nodes: (0..300).collect() }.encode(),
+            Frame::FetchResp {
+                req_id: 9,
+                feat_dim: 2,
+                nodes: vec![4, 5],
+                feats: vec![0.5, 1.5, 2.5, 3.5],
+            }
+            .encode(),
+        ];
+        let want = frames.clone();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let link = new_link("client");
+            let mut tx = TcpFrameSender::new(stream, link).with_chop(3);
+            for f in &frames {
+                tx.send_frame(f).unwrap();
+            }
+            tx.close();
+        });
+        let link = new_link("server");
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut rx = TcpFrameReceiver::new(stream, link.clone());
+        let mut got = Vec::new();
+        while let Some(f) = rx.recv_frame().unwrap() {
+            got.push(f);
+        }
+        server.join().unwrap();
+        assert_eq!(got, want, "3-byte chopped writes must reassemble exactly");
+        let snap = snapshot(&link);
+        assert_eq!(snap.frames_recv, 2);
+        assert_eq!(snap.bytes_recv, want.iter().map(|f| f.len() as u64).sum::<u64>());
+    }
+
+    #[test]
+    fn tcp_receive_timeout_errors_then_recovers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let (hold_tx, hold_rx) = mpsc::channel::<()>();
+        let frame = Frame::Hello { role: ROLE_TRAINER, id: 7 }.encode();
+        let sent = frame.clone();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            hold_rx.recv().unwrap(); // send nothing until released
+            let mut tx = TcpFrameSender::new(stream, new_link("client"));
+            tx.send_frame(&sent).unwrap();
+            tx.close();
+        });
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut rx = TcpFrameReceiver::new(stream, new_link("server"));
+        let err = rx.recv_frame_timeout(Duration::from_millis(30)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        hold_tx.send(()).unwrap();
+        assert_eq!(rx.recv_frame().unwrap().unwrap(), frame);
+        assert_eq!(rx.recv_frame().unwrap(), None);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn fault_sender_duplicates_deterministically() {
+        let spec = FaultSpec { seed: 11, dup: 1.0, delay: 0.0, chop: 0 };
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let mut s = FaultSender::new(Box::new(Rec(out.clone())), &spec, &[0, 1]);
+        let f1 = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
+        s.send_frame(&f1).unwrap();
+        assert_eq!(out.lock().unwrap().as_slice(), &[f1.clone(), f1.clone()]);
+    }
+
+    #[test]
+    fn fault_sender_holds_flushes_and_never_loses() {
+        // delay=1.0: every frame is held; each is released by the next
+        // send, an idle flush, or close — one-frame delays, zero loss.
+        let spec = FaultSpec { seed: 3, dup: 0.0, delay: 1.0, chop: 0 };
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let mut s = FaultSender::new(Box::new(Rec(out.clone())), &spec, &[0, 0]);
+        let f1 = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
+        let f2 = Frame::Hello { role: ROLE_TRAINER, id: 2 }.encode();
+        let f3 = Frame::Hello { role: ROLE_TRAINER, id: 3 }.encode();
+        s.send_frame(&f1).unwrap(); // held
+        assert!(out.lock().unwrap().is_empty());
+        s.send_frame(&f2).unwrap(); // f1 released to make room, f2 held
+        assert_eq!(out.lock().unwrap().as_slice(), &[f1.clone()]);
+        s.flush_pending(); // the owner's idle turn releases f2
+        assert_eq!(out.lock().unwrap().as_slice(), &[f1.clone(), f2.clone()]);
+        s.send_frame(&f3).unwrap(); // held again
+        s.close(); // flush on close: nothing is ever lost
+        assert_eq!(out.lock().unwrap().as_slice(), &[f1, f2, f3]);
+    }
+
+    #[test]
+    fn fault_sender_preserves_dup_decision_across_hold() {
+        // dup=1.0 + delay=1.0: the frame is held, and its duplicate
+        // decision must survive until the flush — dup_frames stays a pure
+        // function of the seed no matter when the release happens.
+        let spec = FaultSpec { seed: 5, dup: 1.0, delay: 1.0, chop: 0 };
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let mut s = FaultSender::new(Box::new(Rec(out.clone())), &spec, &[2, 2]);
+        let f1 = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
+        s.send_frame(&f1).unwrap(); // held, dup pending
+        assert!(out.lock().unwrap().is_empty());
+        s.close();
+        assert_eq!(out.lock().unwrap().as_slice(), &[f1.clone(), f1.clone()]);
+    }
+
+    #[test]
+    fn fault_schedule_is_seed_deterministic() {
+        let spec = FaultSpec { seed: 42, dup: 0.5, delay: 0.5, chop: 0 };
+        let run = || {
+            let out = Arc::new(Mutex::new(Vec::new()));
+            let mut s = FaultSender::new(Box::new(Rec(out.clone())), &spec, &[1, 2]);
+            for i in 0..50u32 {
+                s.send_frame(&Frame::Hello { role: ROLE_TRAINER, id: i }.encode()).unwrap();
+            }
+            s.close();
+            let sent = out.lock().unwrap();
+            sent.clone()
+        };
+        assert_eq!(run(), run(), "same seed, same fault schedule");
+    }
+}

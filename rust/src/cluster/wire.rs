@@ -24,6 +24,11 @@ use crate::error::Result;
 const KIND_FETCH_REQ: u8 = 1;
 const KIND_FETCH_RESP: u8 = 2;
 const KIND_ALLREDUCE: u8 = 3;
+const KIND_HELLO: u8 = 4;
+
+/// `Frame::Hello` role tags: who is announcing itself on a fresh
+/// transport connection.
+pub const ROLE_TRAINER: u8 = 1;
 
 /// Upper bound on a frame body; anything larger is rejected as malformed
 /// before any allocation happens.
@@ -40,6 +45,10 @@ pub enum Frame {
     /// and the trainer's virtual clock; hub → trainer carries the reduced
     /// gradients and the barrier-wide max clock.
     Allreduce { part: u32, round: u64, vclock: f64, grads: Vec<f32> },
+    /// Connection handshake (socket transports): the first frame on a
+    /// fresh connection announces who dialed, so listeners can index the
+    /// reply route.  The in-process channel transport never sends it.
+    Hello { role: u8, id: u32 },
 }
 
 impl Frame {
@@ -78,6 +87,11 @@ impl Frame {
                 for &g in grads {
                     body.extend_from_slice(&g.to_le_bytes());
                 }
+            }
+            Frame::Hello { role, id } => {
+                body.push(KIND_HELLO);
+                body.push(*role);
+                put_u32(&mut body, *id);
             }
         }
         let mut out = Vec::with_capacity(4 + body.len());
@@ -128,6 +142,11 @@ impl Frame {
                 let grads = r.vec_f32()?;
                 Frame::Allreduce { part, round, vclock, grads }
             }
+            KIND_HELLO => {
+                let role = r.u8()?;
+                let id = r.u32()?;
+                Frame::Hello { role, id }
+            }
             other => crate::bail!("wire: unknown frame kind {other}"),
         };
         crate::ensure!(
@@ -148,26 +167,28 @@ impl Frame {
                     8 + 4 + 4 + 4 * nodes.len() + 4 + 4 * feats.len()
                 }
                 Frame::Allreduce { grads, .. } => 4 + 8 + 8 + 4 + 4 * grads.len(),
+                Frame::Hello { .. } => 1 + 4,
             }
     }
 }
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-/// Bounds-checked cursor over a frame body.
-struct Reader<'a> {
-    b: &'a [u8],
-    pos: usize,
+/// Bounds-checked cursor over a frame body (shared with the result-blob
+/// codec in [`super::ipc`]).
+pub(crate) struct Reader<'a> {
+    pub(crate) b: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         crate::ensure!(
             self.pos + n <= self.b.len(),
             "wire: frame body truncated (need {n} bytes at offset {})",
@@ -178,21 +199,21 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let s = self.take(4)?;
         Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         let s = self.take(8)?;
         Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
     }
 
-    fn f64(&mut self) -> Result<f64> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_bits(self.u64()?))
     }
 
@@ -244,6 +265,7 @@ mod tests {
                 feats: vec![0.5, -1.0, 3.25, f32::MIN],
             },
             Frame::Allreduce { part: 0, round: 41, vclock: 1.5e3, grads: vec![0.0; 5] },
+            Frame::Hello { role: ROLE_TRAINER, id: 3 },
         ];
         for f in frames {
             let bytes = f.encode();

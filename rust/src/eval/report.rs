@@ -4,6 +4,8 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
+use crate::metrics::WireStats;
+
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
@@ -69,6 +71,72 @@ impl Table {
             let _ = std::fs::write(dir.join(format!("{name}.csv")), self.to_csv());
         }
     }
+}
+
+/// Per-trainer wire-level RPC counters ([`WireStats`]) as a report table,
+/// with a cluster-wide total row — the eval-harness surface for what the
+/// cluster runtime actually put on the transport (the sim only models
+/// logical traffic).
+pub fn wire_table(per_trainer: &[WireStats]) -> Table {
+    let mut t = Table::new(
+        "wire traffic per trainer (RPC frames/bytes on the transport)",
+        &[
+            "trainer",
+            "req_frames",
+            "req_bytes",
+            "resp_frames",
+            "resp_bytes",
+            "nodes_req",
+            "nodes_dedup",
+            "nodes_recv",
+            "dup_frames",
+            "bad_frames",
+        ],
+    );
+    let row = |label: String, w: &WireStats| -> Vec<String> {
+        vec![
+            label,
+            w.req_frames.to_string(),
+            fmt_count(w.req_bytes),
+            w.resp_frames.to_string(),
+            fmt_count(w.resp_bytes),
+            fmt_count(w.nodes_requested),
+            fmt_count(w.nodes_deduped),
+            fmt_count(w.nodes_received),
+            w.dup_frames.to_string(),
+            w.bad_frames.to_string(),
+        ]
+    };
+    let mut total = WireStats::default();
+    for (i, w) in per_trainer.iter().enumerate() {
+        total.merge(w);
+        t.row(row(i.to_string(), w));
+    }
+    t.row(row("total".into(), &total));
+    t
+}
+
+/// Per-link transport counters (one row per trainer×link: feature-server
+/// links and the hub link), including TCP connect retries.
+pub fn link_table(per_trainer: &[WireStats]) -> Table {
+    let mut t = Table::new(
+        "transport links per trainer",
+        &["trainer", "peer", "frames_out", "bytes_out", "frames_in", "bytes_in", "reconnects"],
+    );
+    for (i, w) in per_trainer.iter().enumerate() {
+        for l in &w.links {
+            t.row(vec![
+                i.to_string(),
+                l.peer.clone(),
+                l.frames_sent.to_string(),
+                fmt_count(l.bytes_sent),
+                l.frames_recv.to_string(),
+                fmt_count(l.bytes_recv),
+                l.reconnects.to_string(),
+            ]);
+        }
+    }
+    t
 }
 
 /// Format helpers shared by benches and the CLI.

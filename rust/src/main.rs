@@ -2,11 +2,19 @@
 //!
 //! See `rudder help` (or [`rudder::cli::USAGE`]) for the command surface.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use rudder::cli::{Args, USAGE};
-use rudder::cluster::{parity_check, run_cluster_on, ClusterConfig};
-use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, Table};
+use rudder::cluster::multiproc::{
+    run_hub_worker, run_server_worker, run_trainer_worker, HubWorkerOpts, ServerWorkerOpts,
+    TrainerWorkerOpts,
+};
+use rudder::cluster::{
+    parity_check, run_cluster_multiproc, run_cluster_on, wire_parity, ClusterConfig,
+    ClusterResult, FaultSpec, Transport,
+};
+use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, link_table, wire_table, Table};
 use rudder::eval::{harness, pass_at_1, Quality};
 use rudder::gnn::SageRunner;
 use rudder::graph::datasets;
@@ -151,12 +159,88 @@ fn cmd_train(args: &Args) -> rudder::error::Result<()> {
     Ok(())
 }
 
+/// `--role` sub-invocations: this process *is* one worker of a
+/// multi-process cluster (spawned by the orchestrator, or by hand for
+/// debugging).
+fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
+    let time_scale = args.opt_parse::<f64>("time-scale")?.unwrap_or(0.0);
+    let out = PathBuf::from(
+        args.opt("out")
+            .ok_or_else(|| rudder::err!("--out <file> required with --role"))?,
+    );
+    let config = || -> rudder::error::Result<PathBuf> {
+        Ok(PathBuf::from(args.opt("run-config").ok_or_else(|| {
+            rudder::err!("--run-config <file> required with --role {role}")
+        })?))
+    };
+    let part = || -> rudder::error::Result<usize> {
+        args.opt_parse::<usize>("part")?
+            .ok_or_else(|| rudder::err!("--part <n> required with --role {role}"))
+    };
+    let fault = match args.opt("fault") {
+        Some(s) => Some(FaultSpec::parse(s)?),
+        None => None,
+    };
+    // The shim lives on the server→trainer reply links, so only server
+    // workers take it; rejecting it elsewhere beats silently ignoring it.
+    if role != "server" && fault.is_some() {
+        rudder::bail!("--fault applies to server workers only, not --role {role}");
+    }
+    match role {
+        "server" => run_server_worker(&ServerWorkerOpts {
+            part: part()?,
+            listen: args.opt_or("listen", "127.0.0.1:0"),
+            config: config()?,
+            time_scale,
+            fault,
+            out,
+        }),
+        "hub" => run_hub_worker(&HubWorkerOpts {
+            listen: args.opt_or("listen", "127.0.0.1:0"),
+            trainers: args
+                .opt_parse::<usize>("trainers")?
+                .ok_or_else(|| rudder::err!("--trainers <n> required with --role hub"))?,
+            round_sleep: args.opt_parse::<f64>("round-sleep")?.unwrap_or(0.0),
+            out,
+        }),
+        "trainer" => run_trainer_worker(&TrainerWorkerOpts {
+            part: part()?,
+            config: config()?,
+            servers: args
+                .opt("servers")
+                .or_else(|| args.opt("connect"))
+                .ok_or_else(|| {
+                    rudder::err!("--servers/--connect <a1,a2,...> required with --role trainer")
+                })?
+                .split(',')
+                .map(str::to_string)
+                .collect(),
+            hub: args
+                .opt("hub")
+                .ok_or_else(|| rudder::err!("--hub <addr> required with --role trainer"))?
+                .to_string(),
+            time_scale,
+            out,
+        }),
+        other => rudder::bail!("unknown --role '{other}' (trainer|server|hub)"),
+    }
+}
+
 fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
+    if let Some(role) = args.opt("role") {
+        let role = role.to_string();
+        return cmd_cluster_worker(&role, args);
+    }
     let cfg = config_from_args(args)?;
     let time_scale = args.opt_parse::<f64>("time-scale")?.unwrap_or(0.02);
-    let ccfg = ClusterConfig { run: cfg.clone(), time_scale };
+    let transport = Transport::parse(&args.opt_or("transport", "channel"))?;
+    let fault = match args.opt("fault") {
+        Some(s) => Some(FaultSpec::parse(s)?),
+        None => None,
+    };
+    let ccfg = ClusterConfig { run: cfg.clone(), time_scale, transport, fault };
     println!(
-        "rudder cluster: {} scale={} trainers={} buffer={:.0}% epochs={} controller={} mode={:?} time-scale={}",
+        "rudder cluster: {} scale={} trainers={} buffer={:.0}% epochs={} controller={} mode={:?} transport={} time-scale={}",
         cfg.dataset,
         cfg.scale,
         cfg.num_trainers,
@@ -164,6 +248,7 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
         cfg.epochs,
         cfg.controller.label(),
         cfg.mode,
+        transport.name(),
         time_scale,
     );
     let (ds, part) = build_cluster(&cfg)?;
@@ -176,14 +261,25 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
     let ds = Arc::new(ds);
     let part = Arc::new(part);
     // Classifier controllers need offline training data, exactly as in
-    // `cmd_train` — and the parity sim below must see the same set.
-    let offline = if matches!(cfg.controller, ControllerSpec::Classifier { .. }) {
+    // `cmd_train` — for any in-process (channel) run and for the parity
+    // sim.  A pure TCP run computes nothing here: each trainer worker
+    // process re-derives the identical set from the seeds.
+    let offline = if matches!(cfg.controller, ControllerSpec::Classifier { .. })
+        && (transport == Transport::Channel || args.flag("parity"))
+    {
         println!("collecting offline classifier traces...");
         Some(harness::offline_training_set(Quality::Quick))
     } else {
         None
     };
-    let r = run_cluster_on(ds.clone(), part.clone(), &ccfg, offline.clone())?;
+    // Channel = threads in this process; TCP = one process per role.
+    let run_variant = |c: &ClusterConfig| -> rudder::error::Result<ClusterResult> {
+        match c.transport {
+            Transport::Channel => run_cluster_on(ds.clone(), part.clone(), c, offline.clone()),
+            Transport::Tcp => run_cluster_multiproc(ds.clone(), part.clone(), c),
+        }
+    };
+    let r = run_variant(&ccfg)?;
     let e = &r.experiment;
     let wire = r.wire_total();
     let fetch_wait: f64 = r.walls.iter().map(|w| w.fetch_wait).sum();
@@ -215,6 +311,8 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
         format!("{} / {}", fmt_secs(fetch_wait), fmt_secs(compute)),
     ]);
     t.emit("cluster_summary");
+    wire_table(&r.wire).emit("cluster_wire");
+    link_table(&r.wire).emit("cluster_links");
 
     if args.flag("parity") {
         println!("parity: re-running the virtual-time sim with the same config + seed...");
@@ -227,13 +325,29 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
             ),
             Err(diff) => rudder::bail!("traffic parity FAILED: {diff}"),
         }
+        if transport == Transport::Tcp {
+            // The multi-process TCP run must also match the in-process
+            // channel transport frame-for-frame and byte-for-byte.
+            println!("parity: re-running on the in-process channel transport...");
+            let chan = ClusterConfig { transport: Transport::Channel, ..ccfg.clone() };
+            let r_chan = run_cluster_on(ds.clone(), part.clone(), &chan, offline.clone())?;
+            parity_check(&r_chan.experiment, &r.experiment)
+                .map_err(|d| rudder::err!("cross-transport traffic parity FAILED: {d}"))?;
+            wire_parity(&r_chan.wire, &r.wire)
+                .map_err(|d| rudder::err!("cross-transport wire parity FAILED: {d}"))?;
+            println!(
+                "cross-transport parity OK: wire frame/byte counters identical \
+                 (channel threads vs {} TCP processes)",
+                cfg.num_trainers + cfg.num_trainers + 1
+            );
+        }
     }
 
     if args.flag("compare-prefetch") {
         let mut off = ccfg.clone();
         off.run.controller = ControllerSpec::NoPrefetch;
         println!("compare: re-running with prefetching disabled (DistDGL baseline)...");
-        let r_off = run_cluster_on(ds, part, &off, None)?;
+        let r_off = run_variant(&off)?;
         let on_fetch_wait: f64 = r.walls.iter().map(|w| w.fetch_wait).sum();
         let off_fetch_wait: f64 = r_off.walls.iter().map(|w| w.fetch_wait).sum();
         let mut t = Table::new(

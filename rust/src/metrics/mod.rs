@@ -87,12 +87,34 @@ pub struct RunMetrics {
     pub epoch_times: Vec<f64>,
 }
 
-/// Wire-level traffic counters from the in-process cluster runtime
-/// ([`crate::cluster`]): what actually crossed the serialized RPC channels,
-/// as opposed to the *logical* per-minibatch fetch accounting in
-/// [`MinibatchRecord`].  Coalescing (one frame per owner partition) and
-/// in-flight dedup make these smaller than the logical counters; they are
-/// timing-dependent, so parity checks never compare them.
+/// Per-transport-link traffic counters ([`crate::cluster::transport`]):
+/// one entry per point-to-point link a trainer owns (one per feature
+/// server, plus the allreduce-hub link).  Frames/bytes are counted at the
+/// transport layer, so TCP handshake frames and duplicated fault-shim
+/// frames appear here even though the protocol-level [`WireStats`]
+/// counters exclude them.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Human-readable remote endpoint ("server:2", "hub").
+    pub peer: String,
+    pub frames_sent: u64,
+    pub bytes_sent: u64,
+    pub frames_recv: u64,
+    pub bytes_recv: u64,
+    /// Connect retries this link needed before it came up (TCP only;
+    /// non-zero means the dialer raced the listener and backed off).
+    pub reconnects: u64,
+}
+
+/// Wire-level traffic counters from the cluster runtime
+/// ([`crate::cluster`]): what actually crossed the serialized RPC
+/// transport, as opposed to the *logical* per-minibatch fetch accounting
+/// in [`MinibatchRecord`].  Coalescing (one frame per owner partition) and
+/// want-set dedup make these smaller than the logical counters.  The
+/// dedup bookkeeping is driven purely by the trainer's deterministic
+/// command sequence, so for a fixed config + seed every counter here is
+/// identical across transports (channel vs TCP) and across runs —
+/// enforced by `cluster::wire_parity`.
 #[derive(Debug, Clone, Default)]
 pub struct WireStats {
     /// Request frames / bytes sent (trainer → feature server).
@@ -103,15 +125,22 @@ pub struct WireStats {
     pub resp_bytes: u64,
     /// Node fetches actually put on the wire.
     pub nodes_requested: u64,
-    /// Node fetches suppressed because the feature was already cached or
-    /// already in flight (the prefetch engine's dedup).
+    /// Node fetches suppressed because the feature was already resident or
+    /// already expected from an earlier request (the prefetch engine's
+    /// dedup).
     pub nodes_deduped: u64,
-    /// Node features received and stored.
+    /// Node features received on non-duplicate responses.
     pub nodes_received: u64,
+    /// Duplicate `FetchResp` frames dropped by req-id dedup (only the
+    /// fault-injection shim produces these).
+    pub dup_frames: u64,
     /// Frames that failed to decode or had an unexpected kind.  Non-zero
     /// means a protocol bug: the nodes of a lost response would stay
-    /// "in flight" and eventually surface as a feature-wait timeout.
+    /// outstanding and eventually surface as a feature-wait timeout.
     pub bad_frames: u64,
+    /// Per-link transport counters (feature-server links, then the hub
+    /// link).  Timing-independent except for `reconnects`.
+    pub links: Vec<LinkStats>,
 }
 
 impl WireStats {
@@ -124,7 +153,9 @@ impl WireStats {
         self.nodes_requested += o.nodes_requested;
         self.nodes_deduped += o.nodes_deduped;
         self.nodes_received += o.nodes_received;
+        self.dup_frames += o.dup_frames;
         self.bad_frames += o.bad_frames;
+        self.links.extend(o.links.iter().cloned());
     }
 }
 

@@ -95,6 +95,33 @@ impl ControllerSpec {
         }
     }
 
+    /// The canonical spec string: `parse(spec()) == self`.  Used to pass
+    /// configs to `--role` worker processes losslessly (labels are
+    /// display-only and do not round-trip).
+    pub fn spec(&self) -> String {
+        match self {
+            ControllerSpec::NoPrefetch => "none".into(),
+            ControllerSpec::Fixed => "fixed".into(),
+            ControllerSpec::Llm { model, cot } => {
+                if *cot {
+                    format!("llm:{model}:cot")
+                } else {
+                    format!("llm:{model}")
+                }
+            }
+            ControllerSpec::Classifier { kind, finetune_interval } => {
+                let base = format!("clf:{}", kind.name().to_ascii_lowercase());
+                match finetune_interval {
+                    Some(i) => format!("{base}:finetune={i}"),
+                    None => base,
+                }
+            }
+            ControllerSpec::MassiveGnn { interval } => format!("massivegnn:{interval}"),
+            ControllerSpec::Interval { interval } => format!("interval:{interval}"),
+            ControllerSpec::Random { p } => format!("random:{p}"),
+        }
+    }
+
     pub fn label(&self) -> String {
         match self {
             ControllerSpec::NoPrefetch => "DistDGL".into(),
@@ -235,6 +262,26 @@ mod tests {
         );
         assert!(ControllerSpec::parse("llm:gpt5").is_err());
         assert!(ControllerSpec::parse("banana").is_err());
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for s in [
+            "none",
+            "fixed",
+            "llm:gemma3-4b",
+            "llm:llama3.2-3b:cot",
+            "clf:mlp",
+            "clf:rf:finetune=25",
+            "clf:tabnet",
+            "massivegnn:16",
+            "interval:8",
+            "random:0.5",
+        ] {
+            let spec = ControllerSpec::parse(s).unwrap();
+            let back = ControllerSpec::parse(&spec.spec()).unwrap();
+            assert_eq!(spec, back, "spec '{s}' must round-trip through spec()");
+        }
     }
 
     #[test]

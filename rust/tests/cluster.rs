@@ -1,11 +1,18 @@
-//! Integration tests for the in-process cluster runtime: determinism
-//! (same seed ⇒ byte-identical traffic counters across invocations) and
-//! traffic parity against the virtual-time sim (same config + seed ⇒
-//! identical fetched-node / buffer-hit / payload-byte counters).
+//! Integration tests for the cluster runtime: determinism (same seed ⇒
+//! byte-identical traffic counters across invocations), traffic parity
+//! against the virtual-time sim (same config + seed ⇒ identical
+//! fetched-node / buffer-hit / payload-byte counters), cross-transport
+//! parity (channel vs loopback TCP, frame-for-frame), deterministic fault
+//! injection, and a multi-process smoke through the real binary.
 
 use std::sync::Arc;
 
-use rudder::cluster::{parity_check, run_cluster_on, ClusterConfig, ClusterResult};
+use rudder::cluster::{
+    parity_check, run_cluster_on, wire_parity, ClusterConfig, ClusterResult, FaultSpec,
+    Transport,
+};
+use rudder::graph::Dataset;
+use rudder::partition::Partition;
 use rudder::sim::{build_cluster, run_on, ControllerSpec, RunConfig};
 
 /// Small 2-trainer config on the RMAT stand-in graph (0 time-scale: no
@@ -34,6 +41,40 @@ fn run_both(cfg: &RunConfig) -> (rudder::sim::ExperimentResult, ClusterResult) {
     let ccfg = ClusterConfig::new(cfg.clone());
     let cluster_r = run_cluster_on(ds, part, &ccfg, None).unwrap();
     (sim_r, cluster_r)
+}
+
+/// Run one cluster on a shared graph with an explicit transport + faults.
+fn run_with(
+    cfg: &RunConfig,
+    ds: &Arc<Dataset>,
+    part: &Arc<Partition>,
+    transport: Transport,
+    fault: Option<FaultSpec>,
+) -> ClusterResult {
+    let mut ccfg = ClusterConfig::new(cfg.clone());
+    ccfg.transport = transport;
+    ccfg.fault = fault;
+    run_cluster_on(ds.clone(), part.clone(), &ccfg, None).unwrap()
+}
+
+/// Assert two runs produced bit-identical per-minibatch records.
+fn assert_minibatches_identical(a: &ClusterResult, b: &ClusterResult) {
+    assert_eq!(a.experiment.per_trainer.len(), b.experiment.per_trainer.len());
+    for (ma, mb) in a.experiment.per_trainer.iter().zip(&b.experiment.per_trainer) {
+        assert_eq!(ma.minibatches.len(), mb.minibatches.len());
+        for (ra, rb) in ma.minibatches.iter().zip(&mb.minibatches) {
+            assert_eq!(
+                (ra.epoch, ra.minibatch, ra.hits, ra.comm_nodes, ra.comm_bytes, ra.replaced),
+                (rb.epoch, rb.minibatch, rb.hits, rb.comm_nodes, rb.comm_bytes, rb.replaced)
+            );
+            assert_eq!(ra.step_time.to_bits(), rb.step_time.to_bits());
+        }
+        assert_eq!(ma.decisions.len(), mb.decisions.len());
+        for (da, db) in ma.decisions.iter().zip(&mb.decisions) {
+            assert_eq!((da.minibatch, da.replace), (db.minibatch, db.replace));
+            assert_eq!(da.latency.to_bits(), db.latency.to_bits());
+        }
+    }
 }
 
 #[test]
@@ -145,6 +186,146 @@ fn single_trainer_cluster_runs() {
     cfg.num_trainers = 1;
     let (sim_r, cluster_r) = run_both(&cfg);
     parity_check(&sim_r, &cluster_r.experiment).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// cross-transport parity: channel vs loopback TCP (ephemeral ports)
+
+#[test]
+fn cross_transport_parity_channel_vs_tcp() {
+    let cfg = quick("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);
+    let chan = run_with(&cfg, &ds, &part, Transport::Channel, None);
+    let tcp = run_with(&cfg, &ds, &part, Transport::Tcp, None);
+    // Both transports match the sim's logical counters...
+    parity_check(&sim_r, &chan.experiment).unwrap();
+    parity_check(&sim_r, &tcp.experiment).unwrap();
+    // ...and each other, down to per-minibatch records and exact wire
+    // frame/byte counts.
+    assert_minibatches_identical(&chan, &tcp);
+    wire_parity(&chan.wire, &tcp.wire).unwrap();
+    let wt = tcp.wire_total();
+    assert!(wt.nodes_requested > 0);
+    assert_eq!(wt.dup_frames, 0, "no faults injected");
+    assert_eq!(wt.bad_frames, 0, "protocol must be clean over TCP");
+    assert_eq!(
+        wt.nodes_received, wt.nodes_requested,
+        "every wire request is answered and drained"
+    );
+    // Every wire-requested node is served by exactly one owner server.
+    let served: u64 = tcp.servers.iter().map(|s| s.nodes_served).sum();
+    assert_eq!(served, wt.nodes_requested);
+    // The TCP links saw real traffic in both directions.
+    let first_links = &tcp.wire[0].links;
+    assert_eq!(first_links.len(), cfg.num_trainers + 1, "server links + hub link");
+    assert!(first_links.iter().any(|l| l.frames_sent > 0 && l.frames_recv > 0));
+}
+
+#[test]
+fn cross_transport_parity_llm_agent() {
+    // The async LLM agent is the decision-cadence-sensitive case; its
+    // schedule must survive the socket transport bit-for-bit.
+    let cfg = quick("llm:qwen-1.5b");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);
+    let tcp = run_with(&cfg, &ds, &part, Transport::Tcp, None);
+    parity_check(&sim_r, &tcp.experiment).unwrap();
+    let chan = run_with(&cfg, &ds, &part, Transport::Channel, None);
+    assert_minibatches_identical(&chan, &tcp);
+    wire_parity(&chan.wire, &tcp.wire).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// deterministic fault injection
+
+#[test]
+fn fault_injection_dup_delay_keeps_counters_bit_identical() {
+    let cfg = quick("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let clean = run_with(&cfg, &ds, &part, Transport::Channel, None);
+    let fault = FaultSpec { seed: 99, dup: 0.4, delay: 0.4, chop: 0 };
+    let faulted = run_with(&cfg, &ds, &part, Transport::Channel, Some(fault));
+    // Decisions and every protocol counter are unchanged by duplicated and
+    // reordered responses; only dup_frames records the injected copies.
+    parity_check(&clean.experiment, &faulted.experiment).unwrap();
+    assert_minibatches_identical(&clean, &faulted);
+    wire_parity(&clean.wire, &faulted.wire).unwrap();
+    assert_eq!(clean.wire_total().dup_frames, 0);
+    assert!(
+        faulted.wire_total().dup_frames > 0,
+        "dup=0.4 over {} response frames must fire",
+        faulted.wire_total().resp_frames
+    );
+    // Faulted runs replay exactly: same seed, same schedule, same counters.
+    let replay = run_with(&cfg, &ds, &part, Transport::Channel, Some(fault));
+    wire_parity(&faulted.wire, &replay.wire).unwrap();
+    assert_eq!(faulted.wire_total().dup_frames, replay.wire_total().dup_frames);
+}
+
+#[test]
+fn fault_injection_over_tcp_with_chopped_writes() {
+    // Chop forces the reassembly path on every response; dup/delay ride
+    // along.  Counters must still match a clean channel run exactly.
+    let cfg = quick("massivegnn:8");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let clean = run_with(&cfg, &ds, &part, Transport::Channel, None);
+    // 61-byte writes never align with frame boundaries, so every response
+    // crosses the reassembly path (without drowning loopback in syscalls).
+    let fault = FaultSpec { seed: 7, dup: 0.3, delay: 0.3, chop: 61 };
+    let faulted = run_with(&cfg, &ds, &part, Transport::Tcp, Some(fault));
+    parity_check(&clean.experiment, &faulted.experiment).unwrap();
+    assert_minibatches_identical(&clean, &faulted);
+    wire_parity(&clean.wire, &faulted.wire).unwrap();
+    assert!(faulted.wire_total().dup_frames > 0, "dup faults must fire");
+    assert_eq!(faulted.wire_total().bad_frames, 0, "chopped frames must reassemble");
+}
+
+// ---------------------------------------------------------------------------
+// multi-process smoke: the real binary, one OS process per role
+
+#[test]
+fn multiproc_tcp_parity_through_real_binary() {
+    let exe = env!("CARGO_BIN_EXE_rudder");
+    let out = std::process::Command::new(exe)
+        .args([
+            "cluster",
+            "--dataset",
+            "ogbn-arxiv",
+            "--scale",
+            "0.1",
+            "--trainers",
+            "2",
+            "--epochs",
+            "1",
+            "--seed",
+            "7",
+            "--controller",
+            "fixed",
+            "--transport",
+            "tcp",
+            "--time-scale",
+            "0",
+            "--parity",
+        ])
+        .output()
+        .expect("spawn rudder cluster --transport tcp");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exit {:?}\nstdout:\n{stdout}\nstderr:\n{stderr}", out.status);
+    assert!(stdout.contains("parity OK"), "missing sim parity:\n{stdout}");
+    assert!(
+        stdout.contains("cross-transport parity OK"),
+        "missing channel-vs-tcp parity:\n{stdout}"
+    );
 }
 
 /// Wall-clock overlap check: with emulated costs, prefetching must beat

@@ -3,6 +3,7 @@
 //! the full Quick-quality outputs; these tests guard against harness rot.)
 
 use rudder::eval::harness;
+use rudder::eval::report;
 use rudder::eval::Quality;
 
 /// Micro run of an experiment id; asserts well-formed tables.
@@ -59,6 +60,51 @@ fn fig17_sync_async() {
 #[test]
 fn fig20_trajectories() {
     check("fig20");
+}
+
+#[test]
+fn wire_stats_surface_in_eval_report() {
+    // The cluster runtime's wire counters must flow through the same
+    // report layer as every paper table: run a micro cluster, feed its
+    // WireStats into eval::report, and check the numbers land.
+    use rudder::cluster::{run_cluster_on, ClusterConfig};
+    use rudder::sim::{build_cluster, ControllerSpec, RunConfig};
+    use std::sync::Arc;
+    let cfg = RunConfig {
+        dataset: "ogbn-arxiv".into(),
+        scale: 0.1,
+        seed: 11,
+        num_trainers: 2,
+        batch_size: 32,
+        fanout1: 5,
+        fanout2: 5,
+        buffer_pct: 0.25,
+        epochs: 1,
+        controller: ControllerSpec::Fixed,
+        ..Default::default()
+    };
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let r = run_cluster_on(Arc::new(ds), Arc::new(part), &ClusterConfig::new(cfg), None)
+        .unwrap();
+    let wire = report::wire_table(&r.wire);
+    assert_eq!(wire.rows.len(), r.wire.len() + 1, "one row per trainer plus the total");
+    let rendered = wire.render();
+    for h in &wire.headers {
+        assert!(rendered.contains(h.as_str()), "header '{h}' missing");
+    }
+    let total = r.wire_total();
+    assert!(total.req_frames > 0, "micro cluster must produce wire traffic");
+    let total_row = wire.rows.last().unwrap();
+    assert_eq!(total_row[0], "total");
+    assert_eq!(total_row[1], total.req_frames.to_string());
+    assert_eq!(total_row[3], total.resp_frames.to_string());
+    let _ = wire.to_csv();
+    // Per-link table: every trainer contributes its server links + hub.
+    let links = report::link_table(&r.wire);
+    let expected: usize = r.wire.iter().map(|w| w.links.len()).sum();
+    assert_eq!(links.rows.len(), expected);
+    assert!(expected > 0, "links must be recorded");
+    assert!(links.render().contains("hub"));
 }
 
 #[test]

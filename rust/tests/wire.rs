@@ -1,9 +1,12 @@
-//! Round-trip and adversarial tests for the cluster wire codec
-//! (`cluster::wire`) — every byte between trainers, feature servers, and
-//! the allreduce hub crosses a channel through this format, so it gets
-//! its own integration suite in the style of `tests/parsers.rs`.
+//! Round-trip, adversarial, and property-based tests for the cluster wire
+//! codec (`cluster::wire`) and the stream reassembly layer
+//! (`cluster::transport::FrameAssembler`) — every byte between trainers,
+//! feature servers, and the allreduce hub crosses a transport through this
+//! format, so it gets its own integration suite in the style of
+//! `tests/parsers.rs`.
 
-use rudder::cluster::Frame;
+use rudder::cluster::{Frame, FrameAssembler};
+use rudder::util::prop::{prop_check, G};
 
 fn roundtrip(f: &Frame) -> Frame {
     let bytes = f.encode();
@@ -65,6 +68,14 @@ fn empty_payload_frames_roundtrip() {
 }
 
 #[test]
+fn hello_roundtrip() {
+    for id in [0, 1, u32::MAX] {
+        let f = Frame::Hello { role: 1, id };
+        assert_eq!(roundtrip(&f), f);
+    }
+}
+
+#[test]
 fn back_to_back_frames_decode_sequentially() {
     let a = Frame::FetchReq { req_id: 1, from: 0, nodes: vec![4, 5] };
     let b = Frame::Allreduce { part: 1, round: 2, vclock: 3.5, grads: vec![0.5] };
@@ -102,7 +113,7 @@ fn truncation_rejected_at_every_prefix_length() {
 #[test]
 fn unknown_kind_rejected() {
     let mut bytes = Frame::FetchReq { req_id: 0, from: 0, nodes: vec![] }.encode();
-    for kind in [0u8, 4, 200, 255] {
+    for kind in [0u8, 5, 200, 255] {
         bytes[4] = kind;
         assert!(Frame::decode(&bytes).is_err(), "kind {kind} accepted");
     }
@@ -153,4 +164,142 @@ fn oversized_body_length_rejected() {
     // Zero-length body (no kind byte) is also malformed.
     let bytes = 0u32.to_le_bytes().to_vec();
     assert!(Frame::decode(&bytes).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// property-based framing suite (util::prop): frames split at arbitrary
+// byte boundaries, concatenated, and truncated mid-header/mid-payload must
+// round-trip or error cleanly — no panic, no silent short read.
+
+/// Random protocol frame, size-biased by the prop framework's budget.
+fn gen_frame(g: &mut G) -> Frame {
+    match g.usize(0, 3) {
+        0 => Frame::FetchReq {
+            req_id: g.u64(0, 1 << 20),
+            from: g.u64(0, 64) as u32,
+            nodes: g.vec(48, |g| g.u64(0, 1 << 30) as u32),
+        },
+        1 => {
+            let dim = g.usize(0, 6);
+            let nodes: Vec<u32> = g.vec(24, |g| g.u64(0, 1 << 30) as u32);
+            let feats: Vec<f32> =
+                (0..nodes.len() * dim).map(|i| i as f32 * 0.5 - 3.25).collect();
+            Frame::FetchResp { req_id: g.u64(0, 1 << 20), feat_dim: dim as u32, nodes, feats }
+        }
+        2 => Frame::Allreduce {
+            part: g.u64(0, 64) as u32,
+            round: g.u64(0, 10_000),
+            vclock: g.f64(0.0, 1e6),
+            grads: g.vec(48, |g| g.f64(-2.0, 2.0) as f32),
+        },
+        _ => Frame::Hello { role: 1, id: g.u64(0, 1 << 16) as u32 },
+    }
+}
+
+#[test]
+fn prop_random_frames_roundtrip() {
+    prop_check("random frames encode/decode round-trip", 300, |g| {
+        let f = gen_frame(g);
+        let bytes = f.encode();
+        if bytes.len() != f.encoded_len() {
+            return Err(format!("encoded_len {} vs {} bytes", f.encoded_len(), bytes.len()));
+        }
+        let (back, used) = Frame::decode(&bytes).map_err(|e| e.to_string())?;
+        if used != bytes.len() {
+            return Err(format!("consumed {used} of {}", bytes.len()));
+        }
+        if back != f {
+            return Err(format!("{back:?} != {f:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reassembly_from_arbitrary_splits() {
+    prop_check("concatenated frames reassemble from arbitrary splits", 200, |g| {
+        let frames: Vec<Frame> = (0..g.usize(1, 6)).map(|_| gen_frame(g)).collect();
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&f.encode());
+        }
+        let mut asm = FrameAssembler::new();
+        let mut out: Vec<Frame> = Vec::new();
+        let mut pos = 0;
+        while pos < stream.len() {
+            let chunk = g.usize(1, 37).min(stream.len() - pos);
+            asm.push(&stream[pos..pos + chunk]);
+            pos += chunk;
+            loop {
+                match asm.next_frame() {
+                    Ok(Some(bytes)) => {
+                        let (f, used) = Frame::decode(&bytes).map_err(|e| e.to_string())?;
+                        if used != bytes.len() {
+                            return Err("assembler returned a partial frame".into());
+                        }
+                        out.push(f);
+                    }
+                    Ok(None) => break,
+                    Err(e) => return Err(format!("mid-stream error: {e}")),
+                }
+            }
+        }
+        if asm.pending() != 0 {
+            return Err(format!("{} bytes stuck in the assembler", asm.pending()));
+        }
+        if out != frames {
+            return Err(format!("got {} frames, sent {}", out.len(), frames.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_streams_pend_and_resume() {
+    prop_check("truncation mid-header/mid-payload pends, then resumes", 200, |g| {
+        let f = gen_frame(g);
+        let bytes = f.encode();
+        // Any strict prefix: cuts < 4 land mid-header, larger cuts
+        // mid-payload.
+        let cut = g.usize(0, bytes.len() - 1);
+        let mut asm = FrameAssembler::new();
+        asm.push(&bytes[..cut]);
+        match asm.next_frame() {
+            Ok(None) => {}
+            Ok(Some(_)) => return Err(format!("completed at cut {cut}/{}", bytes.len())),
+            Err(e) => return Err(format!("cut {cut}: spurious error {e}")),
+        }
+        if asm.pending() != cut {
+            return Err(format!("pending {} != cut {cut}", asm.pending()));
+        }
+        // Feeding the rest must recover the frame exactly — a short read
+        // is never a silent short frame.
+        asm.push(&bytes[cut..]);
+        match asm.next_frame() {
+            Ok(Some(whole)) if whole == bytes => Ok(()),
+            Ok(Some(_)) => Err("resumed to different bytes".into()),
+            Ok(None) => Err("complete frame still pending".into()),
+            Err(e) => Err(format!("resume error: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_corrupt_length_prefix_errors_cleanly() {
+    prop_check("corrupt length prefixes error, never panic or allocate", 200, |g| {
+        let f = gen_frame(g);
+        let mut bytes = f.encode();
+        // Invalid body length: zero, or far beyond the frame cap.
+        let bad: u32 = if g.bool() { 0 } else { u32::MAX - g.u64(0, 1000) as u32 };
+        bytes[..4].copy_from_slice(&bad.to_le_bytes());
+        let mut asm = FrameAssembler::new();
+        asm.push(&bytes);
+        if asm.next_frame().is_ok() {
+            return Err(format!("assembler accepted body_len {bad}"));
+        }
+        if Frame::decode(&bytes).is_ok() {
+            return Err(format!("decoder accepted body_len {bad}"));
+        }
+        Ok(())
+    });
 }
