@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use rudder::cluster::{parity_check, run_cluster_on, ClusterConfig};
+use rudder::cluster::{parity_check, run_cluster_on, ClusterConfig, ComputeMode};
 use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, Table};
 use rudder::sim::{build_cluster, run_on, ControllerSpec, RunConfig};
 
@@ -40,7 +40,7 @@ fn main() -> rudder::error::Result<()> {
         let mut cfg = base.clone();
         cfg.controller = ControllerSpec::parse(spec)?;
         let mut ccfg = ClusterConfig::new(cfg.clone());
-        ccfg.time_scale = 0.02;
+        ccfg.compute = ComputeMode::Emulated(0.02);
         let r = run_cluster_on(ds.clone(), part.clone(), &ccfg, None)?;
         // Every variant stays counter-identical to the virtual-time sim.
         let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);

@@ -1,0 +1,129 @@
+//! `cargo bench --bench measured_compute` — the measured-compute hot
+//! path: what one cluster trainer pays per minibatch when `--compute
+//! measured` replaces emulation sleeps with real work.
+//!
+//! Three stages, benchmarked separately so regressions localize:
+//!
+//! 1. minibatch → tensor packing with seeded feature synthesis (the sim /
+//!    e2e path),
+//! 2. the same packing gathering rows from a resident map (the cluster
+//!    trainer's FeatureStore-gather path),
+//! 3. the full `sage_train_step` through the interpreter backend (fwd +
+//!    bwd + update — the T_DDP the BENCH harness measures end to end).
+//!
+//! `-- --smoke` runs every stage once and exits: CI executes that so the
+//! bench code cannot silently rot (`cargo bench --no-run` only proves it
+//! compiles).
+
+use std::collections::HashMap;
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+use rudder::gnn::assemble::{pack_minibatch, pack_minibatch_with};
+use rudder::gnn::{SageRunner, SageShape};
+use rudder::graph::features::fill_features;
+use rudder::graph::Dataset;
+use rudder::runtime::{ArtifactConfig, Engine};
+use rudder::sampler::Sampler;
+
+struct Bench {
+    rows: Vec<(String, f64, u64)>,
+    iters: u64,
+}
+
+impl Bench {
+    fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        for _ in 0..(self.iters / 10).min(3) {
+            black_box(f()); // warmup
+        }
+        let t0 = Instant::now();
+        for _ in 0..self.iters {
+            black_box(f());
+        }
+        let per = t0.elapsed().as_secs_f64() / self.iters as f64;
+        self.rows.push((name.to_string(), per, self.iters));
+    }
+
+    fn report(&self) {
+        println!("\n== measured-compute microbenchmarks ==");
+        println!("{:<52} {:>12} {:>8}", "benchmark", "per-op", "iters");
+        println!("{}", "-".repeat(76));
+        for (name, per, iters) in &self.rows {
+            let t = if *per >= 1e-3 {
+                format!("{:.3} ms", per * 1e3)
+            } else {
+                format!("{:.2} µs", per * 1e6)
+            };
+            println!("{name:<52} {t:>12} {iters:>8}");
+        }
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = Bench { rows: Vec::new(), iters: if smoke { 1 } else { 20 } };
+
+    // The pinned BENCH_cluster shape: ogbn-arxiv features, small fanouts.
+    let ds = Dataset::build_by_name("ogbn-arxiv", 0.1, 7).expect("dataset");
+    let part = rudder::partition::partition(&ds.csr, 2, rudder::partition::Method::MetisLike, 1);
+    let shape = SageShape {
+        batch: 32,
+        fanout1: 5,
+        fanout2: 5,
+        feat_dim: ds.spec.feat_dim,
+        hidden: 128,
+        classes: ds.spec.num_classes,
+    };
+    let sampler = Sampler::new(0, shape.batch, shape.fanout1, shape.fanout2, 7);
+    let train = part.train_nodes_of(0, &ds.train_nodes);
+    let order = sampler.epoch_order(&train, 0);
+    let mb = sampler.sample(&ds.csr, &part, &order, 0, 0);
+    assert!(!mb.targets.is_empty(), "bench minibatch must have work");
+
+    // 1. Seeded synthesis packing.
+    b.run("pack_minibatch (seeded synthesis)", || {
+        pack_minibatch(&shape, &mb, ds.feature_seed, &ds.labels).expect("pack")
+    });
+
+    // 2. Resident-map gather packing (the FeatureStore path's cost shape:
+    //    hash lookup + row copy per node).
+    let mut resident: HashMap<u32, Box<[f32]>> = HashMap::new();
+    for &n in mb.targets.iter().chain(&mb.hop1).chain(&mb.hop2) {
+        resident.entry(n).or_insert_with(|| {
+            let mut row = vec![0.0f32; shape.feat_dim];
+            fill_features(ds.feature_seed, n, &mut row);
+            row.into_boxed_slice()
+        });
+    }
+    b.run("pack_minibatch_with (resident-map gather)", || {
+        pack_minibatch_with(&shape, &mb, &ds.labels, |n, dst| {
+            dst.copy_from_slice(&resident[&n]);
+        })
+        .expect("pack")
+    });
+
+    // 3. The real train step (interpreter backend), exactly as a measured
+    //    cluster trainer runs it.
+    let engine = Arc::new(Engine::builtin(ArtifactConfig {
+        batch: shape.batch,
+        fanout1: shape.fanout1,
+        fanout2: shape.fanout2,
+        feat_dim: shape.feat_dim,
+        hidden: shape.hidden,
+        classes: shape.classes,
+        ..ArtifactConfig::default()
+    }));
+    let mut runner = SageRunner::new(engine, 7, 0.05);
+    b.run("sage_train_step (interpreter fwd+bwd+update)", || {
+        let step = runner.train_step(&mb, ds.feature_seed, &ds.labels);
+        step.expect("train step")
+    });
+    let losses = &runner.losses;
+    assert!(losses.iter().all(|l| l.is_finite()), "measured step produced non-finite loss");
+
+    b.report();
+    if smoke {
+        println!("smoke OK: every measured-compute stage executed once");
+    }
+}

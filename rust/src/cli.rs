@@ -81,12 +81,17 @@ COMMANDS:
                --transport <t>    channel = threads + in-process channels
                                   (default); tcp = one OS process per role
                                   over loopback TCP sockets
+               --compute <m>      emulated = sleep time-scale × modelled
+                                  costs (default); measured = real
+                                  SageRunner fwd/bwd in every trainer +
+                                  real gradient allreduce (no sleeps)
                --time-scale <f>   wall seconds slept per modelled virtual
-                                  second (default 0.02; 0 = no emulation,
-                                  as fast as the hardware allows)
+                                  second (default 0.02; 0 = no emulation;
+                                  ignored by --compute measured)
                --parity           also run the virtual-time sim (and, for
                                   tcp, the channel transport) and fail
                                   unless traffic counters are identical
+                                  (holds in both compute modes)
                --compare-prefetch also run with prefetching disabled and
                                   report the wall-clock delta
                --fault <s[:dup[:delay[:chop]]]>  seeded fault injection on
@@ -94,8 +99,16 @@ COMMANDS:
                worker mode (spawned by the tcp orchestrator; manual use
                for debugging): --role trainer|server|hub --part <n>
                --listen <addr> | --connect/--servers <a1,a2,..> --hub <a>
-               --run-config <toml> --out <blob>; listeners announce
-               "RUDDER_LISTEN <addr>" on stdout
+               --run-config <toml> --results <addr> | --out <blob>;
+               listeners announce "RUDDER_LISTEN <addr>" on stdout and
+               results return over the --results link (no shared
+               filesystem needed; --out writes a local blob instead)
+  bench        pinned measured-compute benchmark: prefetch vs no-prefetch
+               baseline with real SageRunner compute; writes machine-
+               readable BENCH_cluster.json (--out <file>, default
+               ./BENCH_cluster.json) and exits non-zero if
+               --min-speedup <f> / --max-blocked-ratio <f> gates fail
+               (--scale/--epochs/--seed override the pinned config)
   experiment   regenerate a paper table/figure: rudder experiment <id> [--full]
                ids: fig01 fig03 fig06 fig12 fig13 fig14 fig15 fig16 fig17
                     table2 fig18 table4 fig20 fig21 | all

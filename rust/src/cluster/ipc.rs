@@ -1,16 +1,19 @@
 //! Binary result blobs for the multi-process cluster runtime.
 //!
 //! `--role` worker processes hand their results back to the orchestrator
-//! through files: per-trainer `RunMetrics` + `WallStats` + `WireStats`,
-//! per-server `ServerStats`, and the hub's round count.  The encoding is
-//! the wire codec's style — little-endian, length-prefixed vectors — with
-//! every `f64` carried as raw bits, so parity-checked quantities (virtual
+//! as [`super::wire::Frame::Result`] payloads over the results TCP link
+//! (or, as a manual-debugging fallback, `--out` files): per-trainer
+//! `RunMetrics` + `WallStats` + `WireStats` + `MeasuredStats`, per-server
+//! `ServerStats`, and the hub's round count.  The encoding is the wire
+//! codec's style — little-endian, length-prefixed vectors — with every
+//! `f64` carried as raw bits, so parity-checked quantities (virtual
 //! clocks, epoch times) survive the process boundary *bit-exactly*, which
 //! text formats cannot guarantee.
 
 use crate::error::Result;
 use crate::metrics::{
-    DecisionRecord, HitsPrediction, LinkStats, MinibatchRecord, RunMetrics, WireStats,
+    DecisionRecord, HitsPrediction, LinkStats, MeasuredStats, MinibatchRecord, RunMetrics,
+    WireStats,
 };
 
 use super::server::ServerStats;
@@ -18,7 +21,7 @@ use super::trainer::WallStats;
 use super::wire::{put_u32, put_u64, Reader};
 
 /// Blob magics (format + version in four bytes).
-const MAGIC_TRAINER: &[u8; 4] = b"RTR1";
+const MAGIC_TRAINER: &[u8; 4] = b"RTR2";
 const MAGIC_SERVER: &[u8; 4] = b"RSV1";
 const MAGIC_HUB: &[u8; 4] = b"RHB1";
 
@@ -189,6 +192,54 @@ fn get_wall(r: &mut Reader) -> Result<WallStats> {
     Ok(w)
 }
 
+fn put_f64_vec(out: &mut Vec<u8>, v: &[f64]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+fn get_f64_vec(r: &mut Reader) -> Result<Vec<f64>> {
+    let mut v = Vec::new();
+    for _ in 0..r.u32()? {
+        v.push(r.f64()?);
+    }
+    Ok(v)
+}
+
+fn put_measured(out: &mut Vec<u8>, m: &MeasuredStats) {
+    put_f64_vec(out, &m.compute_secs);
+    put_f64_vec(out, &m.fetch_wait_secs);
+    put_f64_vec(out, &m.barrier_secs);
+    put_u32(out, m.losses.len() as u32);
+    for &l in &m.losses {
+        put_u32(out, l.to_bits());
+    }
+    put_u64(out, m.rows_from_store);
+    put_u64(out, m.rows_local);
+    put_u64(out, m.rows_fallback);
+    put_u64(out, m.grad_bytes);
+    put_u64(out, m.param_hash);
+}
+
+fn get_measured(r: &mut Reader) -> Result<MeasuredStats> {
+    let mut m = MeasuredStats {
+        compute_secs: get_f64_vec(r)?,
+        fetch_wait_secs: get_f64_vec(r)?,
+        barrier_secs: get_f64_vec(r)?,
+        ..MeasuredStats::default()
+    };
+    for _ in 0..r.u32()? {
+        m.losses.push(f32::from_bits(r.u32()?));
+    }
+    m.rows_from_store = r.u64()?;
+    m.rows_local = r.u64()?;
+    m.rows_fallback = r.u64()?;
+    m.grad_bytes = r.u64()?;
+    m.param_hash = r.u64()?;
+    Ok(m)
+}
+
 fn put_link(out: &mut Vec<u8>, l: &LinkStats) {
     put_str(out, &l.peer);
     put_u64(out, l.frames_sent);
@@ -248,23 +299,32 @@ fn get_wire(r: &mut Reader) -> Result<WireStats> {
 // blob-level API
 
 /// One trainer worker's full result.
-pub fn encode_trainer_result(metrics: &RunMetrics, wall: &WallStats, wire: &WireStats) -> Vec<u8> {
+pub fn encode_trainer_result(
+    metrics: &RunMetrics,
+    wall: &WallStats,
+    wire: &WireStats,
+    measured: &MeasuredStats,
+) -> Vec<u8> {
     let mut out = Vec::with_capacity(4096);
     out.extend_from_slice(MAGIC_TRAINER);
     put_metrics(&mut out, metrics);
     put_wall(&mut out, wall);
     put_wire(&mut out, wire);
+    put_measured(&mut out, measured);
     out
 }
 
-pub fn decode_trainer_result(buf: &[u8]) -> Result<(RunMetrics, WallStats, WireStats)> {
+type TrainerResult = (RunMetrics, WallStats, WireStats, MeasuredStats);
+
+pub fn decode_trainer_result(buf: &[u8]) -> Result<TrainerResult> {
     let mut r = Reader { b: buf, pos: 0 };
     check_magic(&mut r, MAGIC_TRAINER, "trainer")?;
     let metrics = get_metrics(&mut r)?;
     let wall = get_wall(&mut r)?;
     let wire = get_wire(&mut r)?;
+    let measured = get_measured(&mut r)?;
     crate::ensure!(r.pos == buf.len(), "ipc: {} trailing bytes", buf.len() - r.pos);
-    Ok((metrics, wall, wire))
+    Ok((metrics, wall, wire, measured))
 }
 
 pub fn encode_server_stats(s: &ServerStats) -> Vec<u8> {
@@ -381,8 +441,19 @@ mod tests {
                 reconnects: 2,
             }],
         };
-        let blob = encode_trainer_result(&metrics, &wall, &wire);
-        let (m2, w2, wire2) = decode_trainer_result(&blob).unwrap();
+        let measured = MeasuredStats {
+            compute_secs: vec![0.1 + 0.2, 0.25],
+            fetch_wait_secs: vec![0.01],
+            barrier_secs: vec![0.002, 0.003, 0.004],
+            losses: vec![2.5, f32::MIN_POSITIVE],
+            rows_from_store: 321,
+            rows_local: 999,
+            rows_fallback: 0,
+            grad_bytes: 160_000,
+            param_hash: 0xDEAD_BEEF_1234_5678,
+        };
+        let blob = encode_trainer_result(&metrics, &wall, &wire, &measured);
+        let (m2, w2, wire2, meas2) = decode_trainer_result(&blob).unwrap();
         assert_eq!(m2.minibatches.len(), 1);
         assert_eq!(
             m2.minibatches[0].step_time.to_bits(),
@@ -399,6 +470,23 @@ mod tests {
         assert_eq!(wire2.nodes_requested, 500);
         assert_eq!(wire2.dup_frames, 3);
         assert_eq!(wire2.links, wire.links);
+        assert_eq!(meas2.compute_secs[0].to_bits(), (0.1f64 + 0.2).to_bits());
+        assert_eq!(meas2.losses[1].to_bits(), f32::MIN_POSITIVE.to_bits());
+        assert_eq!(meas2.barrier_secs.len(), 3);
+        assert_eq!(meas2.rows_from_store, 321);
+        assert_eq!(meas2.param_hash, 0xDEAD_BEEF_1234_5678);
+    }
+
+    #[test]
+    fn empty_measured_stats_round_trip() {
+        let blob = encode_trainer_result(
+            &RunMetrics::default(),
+            &WallStats::default(),
+            &WireStats::default(),
+            &MeasuredStats::default(),
+        );
+        let (_, _, _, meas) = decode_trainer_result(&blob).unwrap();
+        assert!(!meas.is_populated(), "emulated-mode blobs carry empty measured stats");
     }
 
     #[test]
@@ -428,6 +516,7 @@ mod tests {
         let mut trailing = blob;
         trailing.push(0);
         assert!(decode_hub_rounds(&trailing).is_err(), "trailing bytes");
-        assert!(decode_trainer_result(b"RTR1").is_err(), "short trainer blob");
+        assert!(decode_trainer_result(b"RTR2").is_err(), "short trainer blob");
+        assert!(decode_trainer_result(b"RTR1").is_err(), "stale blob version rejected");
     }
 }

@@ -52,13 +52,27 @@
 //!
 //! `rudder cluster --transport tcp` runs each role as a separate OS
 //! process via `--role trainer|server|hub --listen/--connect`
-//! sub-invocations of the same binary ([`multiproc`]); results return as
-//! bit-exact binary blobs ([`ipc`]) so parity survives the process
-//! boundary.
+//! sub-invocations of the same binary ([`multiproc`]); results return
+//! over the orchestrator's results listener as bit-exact binary blobs
+//! ([`wire::Frame::Result`] carrying [`ipc`] payloads) so parity survives
+//! the process boundary without a shared filesystem.
 //!
-//! `time_scale` bridges the virtual and wall clocks: servers, compute,
-//! and the hub sleep `time_scale × modelled seconds`, so prefetch overlap
-//! shows up in real wall time at any convenient speed (0 = no emulation).
+//! Compute wall time comes from [`run::ComputeMode`]:
+//!
+//! * `Emulated(time_scale)` bridges the virtual and wall clocks: servers,
+//!   compute, and the hub sleep `time_scale × modelled seconds`, so
+//!   prefetch overlap shows up in real wall time at any convenient speed
+//!   (0 = no emulation).
+//! * `Measured` spends real CPU cycles instead: every trainer owns an
+//!   interpreter-backend [`crate::gnn::SageRunner`] and runs actual sage
+//!   fwd/bwd on the features its prefetcher materialized, closing each
+//!   round with a *real* gradient allreduce (the hub element-wise-reduces
+//!   the replicas' deltas in trainer-id order — bit-deterministic — and
+//!   every replica applies the same mean update).  The virtual clock still
+//!   advances by the modelled costs, so decisions and traffic counters
+//!   stay a pure function of config + seed and every parity guarantee
+//!   above keeps holding; `rudder bench` gates CI on this mode's
+//!   prefetch-vs-baseline ratios (`BENCH_cluster.json`).
 
 pub mod ipc;
 pub mod multiproc;
@@ -73,6 +87,7 @@ pub use multiproc::run_cluster_multiproc;
 pub use prefetch::{FeatureStore, PrefetchMsg};
 pub use run::{
     parity_check, run_cluster, run_cluster_on, wire_parity, ClusterConfig, ClusterResult,
+    ComputeMode,
 };
 pub use server::{ServerStats, WireDelay};
 pub use trainer::WallStats;

@@ -16,33 +16,41 @@
 //! Listeners bind ephemeral loopback ports and announce them on stdout
 //! (`RUDDER_LISTEN <addr>`); the orchestrator collects the addresses and
 //! passes them to the trainer workers, so there is no port-picking race.
-//! Results come back as binary blobs ([`super::ipc`]) written to
-//! `--out` files — `f64`s as raw bits, so the parity check against the
-//! in-process sim stays bit-exact across the process boundary.
+//! Results come back over the wire: every worker dials the orchestrator's
+//! results listener (`--results <addr>`) and sends one
+//! [`Frame::Result`] carrying its binary blob ([`super::ipc`]) — `f64`s
+//! as raw bits, so the parity check against the in-process sim stays
+//! bit-exact across the process boundary, and no shared filesystem is
+//! needed for the return path (`--out <file>` remains as a
+//! manual-debugging fallback).
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpListener;
+use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::error::Result;
 use crate::eval::{harness, Quality};
 use crate::gnn::SageShape;
 use crate::graph::Dataset;
-use crate::metrics::{RunMetrics, WireStats};
+use crate::metrics::{MeasuredStats, RunMetrics, WireStats};
 use crate::net::Network;
 use crate::partition::Partition;
 use crate::sim::{self, ControllerSpec, ExperimentResult};
 
 use super::ipc;
 use super::prefetch::{spawn_prefetcher, FeatureStore};
-use super::run::{hub_loop, ClusterConfig, ClusterResult};
+use super::run::{hub_loop, ClusterConfig, ClusterResult, ComputeMode};
 use super::server::{server_loop, ServerStats, WireDelay};
 use super::trainer::{io_timeout, run_trainer, TrainerArgs, WallStats};
-use super::transport::{self, FaultSpec};
+use super::transport::{
+    self, FaultSpec, FrameReceiver, FrameSender, TcpFrameReceiver, TcpFrameSender,
+};
+use super::wire::{Frame, ROLE_HUB, ROLE_SERVER, ROLE_TRAINER};
 
 /// Announce a bound listener to the orchestrator (must be the first stdout
 /// line a listening worker emits).
@@ -50,6 +58,78 @@ fn announce_listen(listener: &TcpListener) -> Result<()> {
     println!("RUDDER_LISTEN {}", listener.local_addr()?);
     std::io::stdout().flush()?;
     Ok(())
+}
+
+/// Hand a worker's result blob back to the orchestrator: over the results
+/// TCP link when `--results` was given (one [`Frame::Result`] on a fresh
+/// connection — no shared filesystem needed), to an `--out` file
+/// otherwise.
+fn deliver_result(
+    role: u8,
+    id: u32,
+    blob: Vec<u8>,
+    results: &Option<String>,
+    out: &Option<PathBuf>,
+) -> Result<()> {
+    if let Some(addr) = results {
+        let stream = TcpStream::connect(addr.as_str())
+            .map_err(|e| crate::err!("worker: connect results listener {addr}: {e}"))?;
+        let mut tx = TcpFrameSender::new(stream, transport::new_link("results"));
+        tx.send_frame(&Frame::Result { role, id, blob }.encode())?;
+        tx.close();
+        return Ok(());
+    }
+    if let Some(path) = out {
+        std::fs::write(path, blob)?;
+        return Ok(());
+    }
+    crate::bail!("worker: need --results <addr> or --out <file> to return results")
+}
+
+/// `Frame::Result` role the orchestrator sends to its own collector to
+/// abort collection on a failure path.  Workers use the `ROLE_*` tags
+/// (all non-zero), so the marker can never collide with a real result.
+const RESULT_POISON_ROLE: u8 = 0;
+
+/// Accept worker result connections until `expect` [`Frame::Result`]s
+/// arrived; returns the collected `(role, id, blob)` triples.  Stray
+/// connections (port scanners, misdirected clients: close without data,
+/// stall into the read timeout, or send garbage) are dropped and
+/// collection continues — only the orchestrator's own poison frame
+/// ([`RESULT_POISON_ROLE`], sent when a failure path is unwinding) ends
+/// collection early.
+fn spawn_result_collector(
+    listener: TcpListener,
+    expect: usize,
+) -> JoinHandle<Vec<(u8, u32, Vec<u8>)>> {
+    std::thread::Builder::new()
+        .name("rudder-results".into())
+        .spawn(move || {
+            let mut results: Vec<(u8, u32, Vec<u8>)> = Vec::with_capacity(expect);
+            while results.len() < expect {
+                let stream = match listener.accept() {
+                    Ok((s, _)) => s,
+                    Err(e) => {
+                        eprintln!("results listener: accept failed: {e}");
+                        break;
+                    }
+                };
+                let mut rx = TcpFrameReceiver::new(stream, transport::new_link("worker"));
+                match rx.recv_frame_timeout(Duration::from_secs(60)) {
+                    Ok(Some(bytes)) => match Frame::decode(&bytes) {
+                        Ok((Frame::Result { role: RESULT_POISON_ROLE, .. }, _)) => break,
+                        Ok((Frame::Result { role, id, blob }, _)) => {
+                            results.push((role, id, blob));
+                        }
+                        Ok(_) | Err(_) => eprintln!("results listener: dropping garbage frame"),
+                    },
+                    Ok(None) => eprintln!("results listener: dropping dataless connection"),
+                    Err(e) => eprintln!("results listener: dropping stalled connection: {e}"),
+                }
+            }
+            results
+        })
+        .expect("spawn results collector")
 }
 
 // ---------------------------------------------------------------------------
@@ -61,7 +141,10 @@ pub struct ServerWorkerOpts {
     pub config: PathBuf,
     pub time_scale: f64,
     pub fault: Option<FaultSpec>,
-    pub out: PathBuf,
+    /// Results-listener address (`--results`): the normal return path.
+    pub results: Option<String>,
+    /// File fallback (`--out`) for manual debugging.
+    pub out: Option<PathBuf>,
 }
 
 /// `--role server`: rebuild the dataset/partition from the shared config,
@@ -95,15 +178,21 @@ pub fn run_server_worker(o: &ServerWorkerOpts) -> Result<()> {
         o.fault,
     );
     let _ = accept.join();
-    std::fs::write(&o.out, ipc::encode_server_stats(&stats))?;
-    Ok(())
+    deliver_result(
+        ROLE_SERVER,
+        o.part as u32,
+        ipc::encode_server_stats(&stats),
+        &o.results,
+        &o.out,
+    )
 }
 
 pub struct HubWorkerOpts {
     pub listen: String,
     pub trainers: usize,
     pub round_sleep: f64,
-    pub out: PathBuf,
+    pub results: Option<String>,
+    pub out: Option<PathBuf>,
 }
 
 /// `--role hub`: run the allreduce barrier for `trainers` peers, then
@@ -115,8 +204,7 @@ pub fn run_hub_worker(o: &HubWorkerOpts) -> Result<()> {
     let accept = transport::serve_listener(listener, o.trainers, tx, "hub", 0);
     let rounds = hub_loop(o.trainers, rx, Vec::new(), o.round_sleep);
     let _ = accept.join();
-    std::fs::write(&o.out, ipc::encode_hub_rounds(rounds))?;
-    Ok(())
+    deliver_result(ROLE_HUB, 0, ipc::encode_hub_rounds(rounds), &o.results, &o.out)
 }
 
 pub struct TrainerWorkerOpts {
@@ -124,8 +212,9 @@ pub struct TrainerWorkerOpts {
     pub config: PathBuf,
     pub servers: Vec<String>,
     pub hub: String,
-    pub time_scale: f64,
-    pub out: PathBuf,
+    pub compute: ComputeMode,
+    pub results: Option<String>,
+    pub out: Option<PathBuf>,
 }
 
 /// `--role trainer`: rebuild the dataset/partition, dial every feature
@@ -160,7 +249,7 @@ pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
         pf_rx,
         dial.request_links,
         part.clone(),
-        io_timeout(o.time_scale),
+        io_timeout(o.compute.time_scale()),
     );
     let args = TrainerArgs {
         part_id: o.part,
@@ -173,7 +262,7 @@ pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
         hub_tx: dial.hub_tx,
         hub_rx: dial.hub_rx,
         max_mb_per_epoch: max_mb,
-        time_scale: o.time_scale,
+        compute: o.compute,
     };
     let out = run_trainer(args);
     let mut wire = pf_handle
@@ -183,8 +272,8 @@ pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
         let _ = p.join();
     }
     wire.links = dial.links.iter().map(transport::snapshot).collect();
-    std::fs::write(&o.out, ipc::encode_trainer_result(&out.metrics, &out.wall, &wire))?;
-    Ok(())
+    let blob = ipc::encode_trainer_result(&out.metrics, &out.wall, &wire, &out.measured);
+    deliver_result(ROLE_TRAINER, o.part as u32, blob, &o.results, &o.out)
 }
 
 // ---------------------------------------------------------------------------
@@ -240,9 +329,11 @@ fn kill_all(children: &mut [(String, Child)]) {
 }
 
 /// Run the cluster as separate OS processes (TCP transport on loopback)
-/// and aggregate the workers' result blobs into the same [`ClusterResult`]
+/// and aggregate the workers' results into the same [`ClusterResult`]
 /// shape the in-process runtime produces, so `--parity` and the reporting
-/// path are transport-agnostic.
+/// path are transport-agnostic.  Results return over the orchestrator's
+/// results listener ([`Frame::Result`]); only the worker *config* still
+/// travels as a file.
 pub fn run_cluster_multiproc(
     ds: Arc<Dataset>,
     part: Arc<Partition>,
@@ -262,7 +353,24 @@ pub fn run_cluster_multiproc(
     let cfg_path = dir.join("run-config.toml");
     std::fs::write(&cfg_path, crate::config::to_toml(cfg)?)?;
     let cfg_arg = cfg_path.to_string_lossy().to_string();
-    let ts_arg = format!("{}", ccfg.time_scale);
+    let ts_arg = format!("{}", ccfg.compute.time_scale());
+
+    // Results return path: every worker dials this listener and sends one
+    // Result frame (2n + 1 results expected).
+    let results_listener = TcpListener::bind("127.0.0.1:0")?;
+    let results_addr = results_listener.local_addr()?.to_string();
+    let collector = spawn_result_collector(results_listener, 2 * n + 1);
+    // Poison the collector (explicit abort frame) so its accept loop ends
+    // on failure paths instead of leaking a blocked thread.
+    let poison = |collector: JoinHandle<Vec<(u8, u32, Vec<u8>)>>| {
+        if let Ok(stream) = TcpStream::connect(results_addr.as_str()) {
+            let mut tx = TcpFrameSender::new(stream, transport::new_link("poison"));
+            let frame = Frame::Result { role: RESULT_POISON_ROLE, id: 0, blob: Vec::new() };
+            let _ = tx.send_frame(&frame.encode());
+            tx.close();
+        }
+        let _ = collector.join();
+    };
 
     let shape = SageShape {
         batch: cfg.batch_size,
@@ -273,12 +381,11 @@ pub fn run_cluster_multiproc(
         classes: ds.spec.num_classes,
     };
     let net = Network::new(cfg.net.clone(), n);
-    let round_sleep = ccfg.time_scale * net.allreduce_time(shape.param_bytes());
+    let round_sleep = ccfg.compute.time_scale() * net.allreduce_time(shape.param_bytes());
 
     // Listener workers first; collect their announced addresses.
     let mut listeners: Vec<(String, Child)> = Vec::new();
-    let hub_out = dir.join("hub.bin");
-    let mut hub_child = spawn_piped(
+    let mut hub_child = match spawn_piped(
         &exe,
         &[
             "--role".into(),
@@ -289,15 +396,23 @@ pub fn run_cluster_multiproc(
             n.to_string(),
             "--round-sleep".into(),
             format!("{round_sleep}"),
-            "--out".into(),
-            hub_out.to_string_lossy().to_string(),
+            "--results".into(),
+            results_addr.clone(),
         ],
-    )?;
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            poison(collector);
+            let _ = std::fs::remove_dir_all(&dir);
+            return Err(e);
+        }
+    };
     let hub_addr = match read_listen_addr(&mut hub_child, "hub worker") {
         Ok(a) => a,
         Err(e) => {
             let _ = hub_child.kill();
             let _ = hub_child.wait();
+            poison(collector);
             let _ = std::fs::remove_dir_all(&dir);
             return Err(e);
         }
@@ -305,9 +420,7 @@ pub fn run_cluster_multiproc(
     listeners.push(("hub worker".into(), hub_child));
 
     let mut server_addrs: Vec<String> = Vec::new();
-    let mut server_outs: Vec<PathBuf> = Vec::new();
     for p in 0..n {
-        let out = dir.join(format!("server-{p}.bin"));
         let mut args = vec![
             "--role".into(),
             "server".into(),
@@ -319,33 +432,40 @@ pub fn run_cluster_multiproc(
             cfg_arg.clone(),
             "--time-scale".into(),
             ts_arg.clone(),
-            "--out".into(),
-            out.to_string_lossy().to_string(),
+            "--results".into(),
+            results_addr.clone(),
         ];
         if let Some(f) = ccfg.fault {
             args.push("--fault".into());
             args.push(format!("{}:{}:{}:{}", f.seed, f.dup, f.delay, f.chop));
         }
-        let mut child = spawn_piped(&exe, &args)?;
+        let mut child = match spawn_piped(&exe, &args) {
+            Ok(c) => c,
+            Err(e) => {
+                kill_all(&mut listeners);
+                poison(collector);
+                let _ = std::fs::remove_dir_all(&dir);
+                return Err(e);
+            }
+        };
         match read_listen_addr(&mut child, &format!("server worker {p}")) {
             Ok(a) => server_addrs.push(a),
             Err(e) => {
                 let _ = child.kill();
                 let _ = child.wait();
                 kill_all(&mut listeners);
+                poison(collector);
                 let _ = std::fs::remove_dir_all(&dir);
                 return Err(e);
             }
         }
         listeners.push((format!("server worker {p}"), child));
-        server_outs.push(out);
     }
 
     // Trainer workers (stdio inherited — their panics land on stderr).
     let wall_start = Instant::now();
-    let mut trainers: Vec<(String, Child, PathBuf)> = Vec::new();
+    let mut trainers: Vec<(String, Child)> = Vec::new();
     for t in 0..n {
-        let out = dir.join(format!("trainer-{t}.bin"));
         let args: Vec<String> = vec![
             "--role".into(),
             "trainer".into(),
@@ -357,10 +477,12 @@ pub fn run_cluster_multiproc(
             server_addrs.join(","),
             "--hub".into(),
             hub_addr.clone(),
+            "--compute".into(),
+            ccfg.compute.name().into(),
             "--time-scale".into(),
             ts_arg.clone(),
-            "--out".into(),
-            out.to_string_lossy().to_string(),
+            "--results".into(),
+            results_addr.clone(),
         ];
         let child = Command::new(&exe)
             .arg("cluster")
@@ -368,12 +490,11 @@ pub fn run_cluster_multiproc(
             .spawn()
             .map_err(|e| crate::err!("spawn trainer worker {t}: {e}"));
         match child {
-            Ok(c) => trainers.push((format!("trainer worker {t}"), c, out)),
+            Ok(c) => trainers.push((format!("trainer worker {t}"), c)),
             Err(e) => {
-                let mut started: Vec<(String, Child)> =
-                    trainers.drain(..).map(|(w, c, _)| (w, c)).collect();
-                kill_all(&mut started);
+                kill_all(&mut trainers);
                 kill_all(&mut listeners);
+                poison(collector);
                 let _ = std::fs::remove_dir_all(&dir);
                 return Err(e);
             }
@@ -383,64 +504,74 @@ pub fn run_cluster_multiproc(
     // Join everything: trainers first (they drive shutdown), then the
     // listener roles, which exit once every trainer connection closes.
     let mut failure: Option<crate::error::RudderError> = None;
-    let mut trainer_outs: Vec<PathBuf> = Vec::new();
-    let mut remaining: Vec<(String, Child)> = Vec::new();
-    for (what, child, out) in trainers {
-        remaining.push((what, child));
-        trainer_outs.push(out);
-    }
-    for (what, child) in remaining.drain(..) {
+    for (what, child) in trainers.drain(..) {
         if let Err(e) = wait_worker(child, &what) {
             failure.get_or_insert(e);
         }
     }
     if let Some(e) = failure {
         kill_all(&mut listeners);
+        poison(collector);
         let _ = std::fs::remove_dir_all(&dir);
         return Err(e);
     }
     // All trainers succeeded, so every listener has seen its EOFs; a
     // non-zero exit here still must not leak the remaining children or
-    // the blob directory.
+    // the config directory.
     for (what, child) in listeners.drain(..) {
         if let Err(e) = wait_worker(child, &what) {
             failure.get_or_insert(e);
         }
     }
     if let Some(e) = failure {
+        poison(collector);
         let _ = std::fs::remove_dir_all(&dir);
         return Err(e);
     }
     let wall_total = wall_start.elapsed().as_secs_f64();
-
-    // Collect the result blobs; the temp dir goes away whether or not a
-    // blob turns out unreadable.
-    type Collected = (Vec<RunMetrics>, Vec<WallStats>, Vec<WireStats>, Vec<ServerStats>, u64);
-    let collected: Result<Collected> = (|| {
-        let mut per_trainer: Vec<RunMetrics> = Vec::with_capacity(n);
-        let mut walls: Vec<WallStats> = Vec::with_capacity(n);
-        let mut wire: Vec<WireStats> = Vec::with_capacity(n);
-        for out in &trainer_outs {
-            let blob = std::fs::read(out)?;
-            let (m, w, ws) = ipc::decode_trainer_result(&blob)?;
-            per_trainer.push(m);
-            walls.push(w);
-            wire.push(ws);
-        }
-        let mut servers: Vec<ServerStats> = Vec::with_capacity(n);
-        for out in &server_outs {
-            servers.push(ipc::decode_server_stats(&std::fs::read(out)?)?);
-        }
-        let allreduce_rounds = ipc::decode_hub_rounds(&std::fs::read(&hub_out)?)?;
-        Ok((per_trainer, walls, wire, servers, allreduce_rounds))
-    })();
     let _ = std::fs::remove_dir_all(&dir);
-    let (per_trainer, walls, wire, servers, allreduce_rounds) = collected?;
+
+    // Every worker exited cleanly, so every result frame is already sent
+    // (workers deliver before exiting); the collector drains them.
+    let received = collector
+        .join()
+        .map_err(|_| crate::err!("results collector panicked"))?;
+    let mut trainer_blobs: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+    let mut server_blobs: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+    let mut hub_blob: Option<Vec<u8>> = None;
+    for (role, id, blob) in received {
+        match role {
+            ROLE_TRAINER if (id as usize) < n => trainer_blobs[id as usize] = Some(blob),
+            ROLE_SERVER if (id as usize) < n => server_blobs[id as usize] = Some(blob),
+            ROLE_HUB => hub_blob = Some(blob),
+            _ => eprintln!("results listener: unknown worker role {role} id {id}"),
+        }
+    }
+
+    let mut per_trainer: Vec<RunMetrics> = Vec::with_capacity(n);
+    let mut walls: Vec<WallStats> = Vec::with_capacity(n);
+    let mut wire: Vec<WireStats> = Vec::with_capacity(n);
+    let mut measured: Vec<MeasuredStats> = Vec::with_capacity(n);
+    for (t, blob) in trainer_blobs.into_iter().enumerate() {
+        let blob = blob.ok_or_else(|| crate::err!("trainer worker {t} returned no result"))?;
+        let (m, w, ws, me) = ipc::decode_trainer_result(&blob)?;
+        per_trainer.push(m);
+        walls.push(w);
+        wire.push(ws);
+        measured.push(me);
+    }
+    let mut servers: Vec<ServerStats> = Vec::with_capacity(n);
+    for (p, blob) in server_blobs.into_iter().enumerate() {
+        let blob = blob.ok_or_else(|| crate::err!("server worker {p} returned no result"))?;
+        servers.push(ipc::decode_server_stats(&blob)?);
+    }
+    let hub_blob = hub_blob.ok_or_else(|| crate::err!("hub worker returned no result"))?;
+    let allreduce_rounds = ipc::decode_hub_rounds(&hub_blob)?;
 
     let epoch_times = per_trainer
         .first()
         .map(|m| m.epoch_times.clone())
         .unwrap_or_default();
     let experiment = ExperimentResult::aggregate(cfg.controller.label(), per_trainer, epoch_times);
-    Ok(ClusterResult { experiment, wall_total, walls, wire, servers, allreduce_rounds })
+    Ok(ClusterResult { experiment, wall_total, walls, measured, wire, servers, allreduce_rounds })
 }

@@ -88,6 +88,20 @@ impl FeatureStore {
         self.inner.lock().unwrap().feats.get(&node).cloned()
     }
 
+    /// Copy one node's feature row straight into `dst` under the lock;
+    /// returns whether the row was resident.  The measured-compute gather
+    /// uses this instead of [`FeatureStore::get`] so the timed compute
+    /// region pays no per-row allocation.
+    pub fn copy_into(&self, node: u32, dst: &mut [f32]) -> bool {
+        match self.inner.lock().unwrap().feats.get(&node) {
+            Some(row) => {
+                dst.copy_from_slice(row);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Block until every node in `nodes` is resident.  Errors (instead of
     /// hanging) once `timeout` passes with features still outstanding —
     /// callers size the timeout to their emulation scale, so expiry
@@ -187,6 +201,7 @@ fn handle_wire(
                 Frame::FetchResp { .. } => "FetchResp",
                 Frame::Allreduce { .. } => "Allreduce",
                 Frame::Hello { .. } => "Hello",
+                Frame::Result { .. } => "Result",
             };
             eprintln!("prefetcher {trainer_id}: unexpected {kind} frame");
         }
@@ -314,6 +329,18 @@ mod tests {
         assert!(store.begin_fetch(&[2], &mut stats).is_empty());
         assert_eq!(store.resident(), 3);
         assert_eq!(store.get(2).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn copy_into_matches_get_without_allocating() {
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        store.begin_fetch(&[5], &mut stats);
+        store.complete_fetch(&[5], &[1.5, -2.5], 2);
+        let mut row = [0.0f32; 2];
+        assert!(store.copy_into(5, &mut row));
+        assert_eq!(&row[..], &store.get(5).unwrap()[..]);
+        assert!(!store.copy_into(6, &mut row), "absent row reports non-resident");
     }
 
     #[test]

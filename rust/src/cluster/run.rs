@@ -34,7 +34,7 @@ use crate::classifier::trainer::TrainingSet;
 use crate::error::Result;
 use crate::gnn::SageShape;
 use crate::graph::Dataset;
-use crate::metrics::{RunMetrics, WireStats};
+use crate::metrics::{MeasuredStats, RunMetrics, WireStats};
 use crate::net::Network;
 use crate::partition::Partition;
 use crate::sim::{self, ExperimentResult, RunConfig};
@@ -48,15 +48,64 @@ use super::transport::{
 };
 use super::wire::Frame;
 
+/// Where a cluster trainer's compute time comes from.
+///
+/// In *both* modes the embedded sim state machine keeps charging the
+/// modelled α–β costs to the virtual clock, so decisions and every traffic
+/// counter stay a pure function of config + seed — `--parity` holds either
+/// way.  The mode only selects the *wall-clock* source: sleeps scaled from
+/// the model, or the real interpreter-backend `SageRunner`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ComputeMode {
+    /// Sleep `time_scale ×` the modelled virtual seconds (server transfer
+    /// delay, T_DDP compute, allreduce).  `Emulated(0.0)` disables all
+    /// sleeps — the protocol runs as fast as the hardware allows.
+    Emulated(f64),
+    /// Spend real CPU cycles: every trainer owns a [`crate::gnn::SageRunner`]
+    /// (interpreter backend) and runs actual sage fwd/bwd on the features
+    /// materialized in its [`FeatureStore`], with real gradient blobs
+    /// reduced by the allreduce hub.  No emulation sleeps anywhere.
+    Measured,
+}
+
+impl ComputeMode {
+    pub fn parse(s: &str) -> Result<ComputeMode> {
+        match s {
+            "emulated" => Ok(ComputeMode::Emulated(0.0)),
+            "measured" => Ok(ComputeMode::Measured),
+            _ => crate::bail!("unknown compute mode '{s}' (emulated|measured)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeMode::Emulated(_) => "emulated",
+            ComputeMode::Measured => "measured",
+        }
+    }
+
+    /// Wall seconds slept per modelled virtual second (0 in measured mode:
+    /// real compute replaces every sleep).
+    pub fn time_scale(&self) -> f64 {
+        match self {
+            ComputeMode::Emulated(ts) => *ts,
+            ComputeMode::Measured => 0.0,
+        }
+    }
+
+    pub fn is_measured(&self) -> bool {
+        matches!(self, ComputeMode::Measured)
+    }
+}
+
 /// Cluster-runtime configuration: the shared [`RunConfig`] plus how the
-/// bytes move and how much wall time to spend emulating modelled costs.
+/// bytes move and where compute wall time comes from.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     pub run: RunConfig,
-    /// Wall seconds slept per virtual second of modelled cost (server
-    /// transfer delay, T_DDP compute, allreduce).  `0.0` disables all
-    /// emulation — the cluster runs as fast as the hardware allows.
-    pub time_scale: f64,
+    /// Emulated (sleep-scaled modelled costs) or measured (real SageRunner
+    /// fwd/bwd) compute.
+    pub compute: ComputeMode,
     /// Which transport carries the RPC frames (in-process runs).
     pub transport: Transport,
     /// Deterministic fault injection on the server→trainer response links
@@ -66,7 +115,12 @@ pub struct ClusterConfig {
 
 impl ClusterConfig {
     pub fn new(run: RunConfig) -> ClusterConfig {
-        ClusterConfig { run, time_scale: 0.0, transport: Transport::Channel, fault: None }
+        ClusterConfig {
+            run,
+            compute: ComputeMode::Emulated(0.0),
+            transport: Transport::Channel,
+            fault: None,
+        }
     }
 }
 
@@ -79,6 +133,9 @@ pub struct ClusterResult {
     /// Wall seconds from first spawn to last trainer exit.
     pub wall_total: f64,
     pub walls: Vec<WallStats>,
+    /// Real-compute accounting, one per trainer (empty structs in
+    /// emulated mode).
+    pub measured: Vec<MeasuredStats>,
     pub wire: Vec<WireStats>,
     pub servers: Vec<ServerStats>,
     pub allreduce_rounds: u64,
@@ -164,8 +221,9 @@ pub fn run_cluster_on(
         classes: ds.spec.num_classes,
     };
     let net = Network::new(cfg.net.clone(), n);
-    let delay = WireDelay::from_net(&net, ccfg.time_scale);
-    let allreduce_sleep = ccfg.time_scale * net.allreduce_time(shape.param_bytes());
+    let time_scale = ccfg.compute.time_scale();
+    let delay = WireDelay::from_net(&net, time_scale);
+    let allreduce_sleep = time_scale * net.allreduce_time(shape.param_bytes());
     let max_mb = sim::max_minibatches_per_epoch(&cfg, &ds, &part);
     let offline = Arc::new(offline);
 
@@ -192,7 +250,7 @@ pub fn run_cluster_on(
             hub_tx: w.hub_tx,
             hub_rx: w.hub_rx,
             max_mb_per_epoch: max_mb,
-            time_scale: ccfg.time_scale,
+            compute: ccfg.compute,
         };
         trainer_handles.push(
             std::thread::Builder::new()
@@ -204,12 +262,14 @@ pub fn run_cluster_on(
 
     let mut per_trainer: Vec<RunMetrics> = Vec::with_capacity(n);
     let mut walls: Vec<WallStats> = Vec::with_capacity(n);
+    let mut measured: Vec<MeasuredStats> = Vec::with_capacity(n);
     for h in trainer_handles {
         let out = h
             .join()
             .map_err(|_| crate::err!("cluster trainer thread panicked"))?;
         per_trainer.push(out.metrics);
         walls.push(out.wall);
+        measured.push(out.measured);
     }
     let wall_total = wall_start.elapsed().as_secs_f64();
 
@@ -239,7 +299,7 @@ pub fn run_cluster_on(
         .map(|m| m.epoch_times.clone())
         .unwrap_or_default();
     let experiment = ExperimentResult::aggregate(cfg.controller.label(), per_trainer, epoch_times);
-    Ok(ClusterResult { experiment, wall_total, walls, wire, servers, allreduce_rounds })
+    Ok(ClusterResult { experiment, wall_total, walls, measured, wire, servers, allreduce_rounds })
 }
 
 /// Wire everything over in-process `mpsc` channels.
@@ -251,7 +311,7 @@ fn wire_channel(
     delay: WireDelay,
     allreduce_sleep: f64,
 ) -> (Vec<TrainerWiring>, Backstage) {
-    let drain = io_timeout(ccfg.time_scale);
+    let drain = io_timeout(ccfg.compute.time_scale());
     // Endpoint inboxes.
     let mut server_txs: Vec<Sender<NetMsg>> = Vec::with_capacity(n);
     let mut server_rxs: Vec<Receiver<NetMsg>> = Vec::with_capacity(n);
@@ -373,7 +433,7 @@ fn wire_tcp(
     delay: WireDelay,
     allreduce_sleep: f64,
 ) -> Result<(Vec<TrainerWiring>, Backstage)> {
-    let drain = io_timeout(ccfg.time_scale);
+    let drain = io_timeout(ccfg.compute.time_scale());
     let chop = ccfg.fault.map(|f| f.chop).unwrap_or(0);
     let mut aux_handles: Vec<JoinHandle<()>> = Vec::new();
 
@@ -425,6 +485,14 @@ fn wire_tcp(
 /// The DDP allreduce hub loop: collects one `Allreduce` frame per trainer
 /// per round, element-wise-reduces the gradient payloads, takes the max
 /// virtual clock (the barrier), and broadcasts the reduced frame back.
+///
+/// Reduction runs in *trainer-id order*, not arrival order: f32 addition
+/// is not associative, so an arrival-order sum would make measured-mode
+/// gradients (and every model replica downstream of them) depend on
+/// thread scheduling.  Buffering one contribution per trainer and summing
+/// `0..n` keeps the reduced blob bit-deterministic for a fixed config +
+/// seed.
+///
 /// Transport-agnostic: reply routes arrive pre-registered or via
 /// [`NetMsg::Register`]; runs until every inbound link hangs up.  Used
 /// inline by the hub worker process and on a thread by [`spawn_hub`].
@@ -441,7 +509,7 @@ pub(crate) fn hub_loop(
         }
     }
     let mut rounds = 0u64;
-    let mut acc: Vec<f32> = Vec::new();
+    let mut contrib: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
     let mut max_vclock = f64::NEG_INFINITY;
     let mut got = 0usize;
     for msg in rx.iter() {
@@ -454,27 +522,37 @@ pub(crate) fn hub_loop(
             }
             NetMsg::Frame(bytes) => bytes,
         };
-        let Ok((Frame::Allreduce { vclock, grads, .. }, _)) = Frame::decode(&bytes) else {
+        let Ok((Frame::Allreduce { part, vclock, grads, .. }, _)) = Frame::decode(&bytes) else {
             continue; // tolerate garbage; trainers would time out loudly
         };
-        if got == 0 {
-            acc = grads;
-        } else {
-            for (a, g) in acc.iter_mut().zip(&grads) {
-                *a += g;
-            }
+        let Some(slot) = contrib.get_mut(part as usize) else {
+            continue; // out-of-range trainer id: ignore like garbage
+        };
+        if slot.is_none() {
+            got += 1;
         }
+        *slot = Some(grads);
         max_vclock = max_vclock.max(vclock);
-        got += 1;
         if got == n {
             if round_sleep > 0.0 {
                 std::thread::sleep(Duration::from_secs_f64(round_sleep));
+            }
+            let mut acc: Vec<f32> = Vec::new();
+            for slot in contrib.iter_mut() {
+                let g = slot.take().expect("all contributions present");
+                if acc.is_empty() {
+                    acc = g;
+                } else {
+                    for (a, v) in acc.iter_mut().zip(&g) {
+                        *a += v;
+                    }
+                }
             }
             let reduced = Frame::Allreduce {
                 part: u32::MAX,
                 round: rounds,
                 vclock: max_vclock,
-                grads: std::mem::take(&mut acc),
+                grads: acc,
             }
             .encode();
             for r in replies.iter_mut().flatten() {

@@ -1,7 +1,9 @@
 //! Per-partition feature servers: the remote end of the fetch RPC.
 //!
-//! Each partition gets one serving loop owning its (synthesized) feature
-//! shard.  It decodes [`Frame::FetchReq`] frames, materializes the
+//! Each partition gets one serving loop owning its feature shard — the
+//! partition's rows materialized once at spawn as a seeded, resident
+//! tensor ([`FeatureShard`]), so serving is a row copy, not a per-request
+//! re-synthesis.  It decodes [`Frame::FetchReq`] frames, gathers the
 //! requested rows, optionally emulates the fabric's α–β transfer time at a
 //! configurable wall-clock scale, and replies with a serialized
 //! [`Frame::FetchResp`] on the requesting trainer's reply link.  The loop
@@ -69,6 +71,50 @@ impl WireDelay {
     }
 }
 
+/// Partition-resident feature shard: every owned node's feature row
+/// materialized once (row-major block plus an id → row index), exactly as
+/// a real feature server would hold its partition's slice of the feature
+/// matrix in memory.  Values are identical to on-demand synthesis —
+/// features are a pure function of `(seed, node)` — so the wire payloads
+/// are unchanged; only the serving cost moves from hashing to a copy.
+pub(crate) struct FeatureShard {
+    feat_dim: usize,
+    feature_seed: u64,
+    index: FastMap<u32, u32>,
+    rows: Vec<f32>,
+}
+
+impl FeatureShard {
+    pub(crate) fn build(
+        part: &Partition,
+        part_id: usize,
+        feature_seed: u64,
+        feat_dim: usize,
+    ) -> FeatureShard {
+        let owned = &part.local_nodes[part_id];
+        let mut index = FastMap::default();
+        let mut rows = vec![0.0f32; owned.len() * feat_dim];
+        for (i, &n) in owned.iter().enumerate() {
+            index.insert(n, i as u32);
+            fill_features(feature_seed, n, &mut rows[i * feat_dim..(i + 1) * feat_dim]);
+        }
+        FeatureShard { feat_dim, feature_seed, index, rows }
+    }
+
+    /// Copy node `n`'s row into `dst`.  A non-resident node (impossible
+    /// under owner routing) falls back to synthesis so the payload stays
+    /// correct either way.
+    pub(crate) fn fill(&self, n: u32, dst: &mut [f32]) {
+        match self.index.get(&n) {
+            Some(&i) => {
+                let i = i as usize;
+                dst.copy_from_slice(&self.rows[i * self.feat_dim..(i + 1) * self.feat_dim]);
+            }
+            None => fill_features(self.feature_seed, n, dst),
+        }
+    }
+}
+
 /// Wrap a reply link with the fault-injection shim when configured.  The
 /// schedule seed is derived per (server, trainer) link so every link draws
 /// an independent, reproducible fault sequence.
@@ -105,6 +151,7 @@ pub(crate) fn server_loop(
     fault: Option<FaultSpec>,
 ) -> ServerStats {
     let mut stats = ServerStats { part: part_id, ..ServerStats::default() };
+    let shard = FeatureShard::build(&part, part_id, feature_seed, feat_dim);
     let mut replies: FastMap<u32, Box<dyn FrameSender>> = FastMap::default();
     for (id, s) in prereg {
         replies.insert(id, wrap_fault(s, &fault, part_id, id));
@@ -155,7 +202,7 @@ pub(crate) fn server_loop(
         );
         let mut feats = vec![0.0f32; nodes.len() * feat_dim];
         for (i, &n) in nodes.iter().enumerate() {
-            fill_features(feature_seed, n, &mut feats[i * feat_dim..(i + 1) * feat_dim]);
+            shard.fill(n, &mut feats[i * feat_dim..(i + 1) * feat_dim]);
         }
         stats.requests += 1;
         stats.nodes_served += nodes.len() as u64;
@@ -249,6 +296,37 @@ mod tests {
         // Reply delivery counted as received on the trainer-side link.
         let snap = crate::cluster::transport::snapshot(&link);
         assert_eq!(snap.frames_recv, 1);
+    }
+
+    #[test]
+    fn feature_shard_serves_resident_copies() {
+        let csr = generate(
+            &RmatParams {
+                a: 0.57,
+                b: 0.19,
+                c: 0.19,
+                num_nodes: 300,
+                num_edges: 1800,
+                permute: true,
+            },
+            &mut Pcg32::new(9),
+        );
+        let part = partition(&csr, 2, Method::MetisLike, 1);
+        let shard = FeatureShard::build(&part, 0, 11, 4);
+        assert_eq!(shard.index.len(), part.local_nodes[0].len());
+        let mut got = vec![0.0f32; 4];
+        let mut want = vec![0.0f32; 4];
+        // Resident row: a copy of the materialized tensor, bit-identical
+        // to synthesis.
+        let own = part.local_nodes[0][0];
+        shard.fill(own, &mut got);
+        fill_features(11, own, &mut want);
+        assert_eq!(got, want);
+        // Foreign node: synthesis fallback, same values.
+        let foreign = part.local_nodes[1][0];
+        shard.fill(foreign, &mut got);
+        fill_features(11, foreign, &mut want);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -12,27 +12,44 @@
 //!    the compute phase),
 //! 2. the minibatch's buffer misses are fetched urgently,
 //! 3. the trainer blocks until every sampled remote feature is resident,
-//! 4. compute runs (emulated at `time_scale × T_DDP` wall seconds),
+//! 4. compute runs — emulated (`time_scale × T_DDP` wall seconds of sleep)
+//!    or measured (real [`SageRunner`] fwd/bwd on the features gathered
+//!    from the [`FeatureStore`], [`ComputeMode::Measured`]),
 //! 5. evictions + non-admitted transients leave the feature store,
 //! 6. the minibatch closes with a *real* DDP barrier: an `Allreduce` frame
-//!    to the hub, blocking on the reduced reply.
+//!    to the hub — carrying the real local gradient delta in measured mode
+//!    — blocking on the reduced reply, which measured trainers apply to
+//!    their replica (`params ← pre + Σdeltas / n`).
+//!
+//! In both modes the virtual clock advances by the *modelled* costs, so
+//! decisions and traffic counters stay a pure function of config + seed
+//! (the parity guarantee); the compute mode only changes where wall time
+//! goes.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::classifier::trainer::TrainingSet;
-use crate::gnn::{AnalyticModel, SageShape};
+use crate::gnn::{AnalyticModel, SageRunner, SageShape};
+use crate::graph::features::fill_features;
 use crate::graph::Dataset;
-use crate::metrics::RunMetrics;
+use crate::metrics::{MeasuredStats, RunMetrics};
 use crate::net::Network;
 use crate::partition::Partition;
+use crate::runtime::{ArtifactConfig, Engine};
 use crate::sim::trainer::{FetchPlan, RunCtx};
 use crate::sim::{self, RunConfig};
+use crate::util::rng::derive_seed;
 
 use super::prefetch::{FeatureStore, PrefetchMsg};
+use super::run::ComputeMode;
 use super::transport::{FrameReceiver, FrameSender};
 use super::wire::Frame;
+
+/// Learning rate of the measured-mode runner (matches `rudder calibrate`
+/// and the e2e example).
+const MEASURED_LR: f32 = 0.05;
 
 /// Timeouts for feature waits and the allreduce barrier, bounded so that
 /// a dead thread fails the whole run with a diagnostic instead of
@@ -55,7 +72,8 @@ pub struct WallStats {
     /// Wall seconds blocked waiting for remote features (the exposed,
     /// un-overlapped part of communication).
     pub fetch_wait: f64,
-    /// Wall seconds in (emulated) compute.
+    /// Wall seconds in compute (emulation sleeps, or real fwd/bwd in
+    /// measured mode).
     pub compute: f64,
     /// Wall seconds blocked in the DDP barrier.
     pub barrier: f64,
@@ -76,12 +94,14 @@ pub(crate) struct TrainerArgs {
     pub hub_tx: Box<dyn FrameSender>,
     pub hub_rx: Box<dyn FrameReceiver>,
     pub max_mb_per_epoch: usize,
-    pub time_scale: f64,
+    pub compute: ComputeMode,
 }
 
 pub(crate) struct TrainerOutput {
     pub metrics: RunMetrics,
     pub wall: WallStats,
+    /// Real-compute accounting (default-empty in emulated mode).
+    pub measured: MeasuredStats,
 }
 
 pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
@@ -107,6 +127,26 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
     let mut t = sim::build_trainer(cfg, ds, part, a.part_id, offline);
     t.fetch_plan = Some(FetchPlan::default());
 
+    // Measured mode: a real interpreter-backend runner per trainer.  Every
+    // replica derives the same init seed from the run seed, so parameters
+    // start bit-identical — the invariant the gradient allreduce preserves.
+    let mut measured = MeasuredStats::default();
+    let mut runner = if a.compute.is_measured() {
+        let engine = Arc::new(Engine::builtin(ArtifactConfig {
+            batch: cfg.batch_size,
+            fanout1: cfg.fanout1,
+            fanout2: cfg.fanout2,
+            feat_dim: ds.spec.feat_dim,
+            hidden: cfg.hidden,
+            classes: ds.spec.num_classes,
+            ..ArtifactConfig::default()
+        }));
+        Some(SageRunner::new(engine, derive_seed(cfg.seed, &[0xDD]), MEASURED_LR))
+    } else {
+        None
+    };
+    t.capture_minibatch = runner.is_some();
+
     // Warm start (MassiveGNN): stream the prepopulated residents' features
     // in the background; per-minibatch waits cover stragglers.
     let warm = t.buffer.resident_nodes();
@@ -127,7 +167,8 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
 
     let mut wall = WallStats::default();
     let mut round: u64 = 0;
-    let wait_budget = io_timeout(a.time_scale);
+    let time_scale = a.compute.time_scale();
+    let wait_budget = io_timeout(time_scale);
     // The barrier additionally waits on the *slowest* peer's whole round.
     let barrier_budget = wait_budget * 2;
     let run_start = Instant::now();
@@ -136,6 +177,12 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
         let epoch_vstart = t.clock;
         let epoch_wstart = Instant::now();
         for mb in 0..a.max_mb_per_epoch {
+            // Measured mode: snapshot the replica at round start.  Local
+            // deltas are taken against it, and the reduced update is
+            // applied on top of it — on inactive rounds too, so replicas
+            // that skipped a minibatch still track their peers.
+            let params_pre: Option<Vec<f32>> = runner.as_ref().map(|r| r.state.flat());
+            let mut grads = vec![0.0f32; grads_len];
             // Deterministic core: sampling, lookup, decision, counters.
             let active = t.step_minibatch(&ctx, epoch, mb, &order);
             if active {
@@ -161,11 +208,55 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                 if let Err(e) = a.store.wait_all(&plan.unique_remote, wait_budget) {
                     panic!("trainer {}: {e}", a.part_id);
                 }
-                wall.fetch_wait += w.elapsed().as_secs_f64();
-                // 4. Compute (scaled wall-time emulation of T_DDP).
-                if a.time_scale > 0.0 && plan.t_ddp > 0.0 {
+                let waited = w.elapsed().as_secs_f64();
+                wall.fetch_wait += waited;
+                // 4. Compute: real fwd/bwd on the gathered features
+                //    (measured), or a scaled sleep of the modelled T_DDP
+                //    (emulated).
+                if let Some(r) = runner.as_mut() {
+                    measured.fetch_wait_secs.push(waited);
+                    let mbatch = plan
+                        .minibatch
+                        .take()
+                        .expect("measured mode captures the minibatch");
+                    let pre = params_pre.as_ref().expect("params snapshot");
+                    let store = &a.store;
+                    let (mut from_store, mut local, mut fallback) = (0u64, 0u64, 0u64);
                     let w = Instant::now();
-                    std::thread::sleep(Duration::from_secs_f64(plan.t_ddp * a.time_scale));
+                    let step = r.train_step_with(&mbatch, &ds.labels, |node, dst| {
+                        if part.owner_of(node) == a.part_id {
+                            // Partition-resident row: synthesized locally,
+                            // never on the wire.
+                            fill_features(ds.feature_seed, node, dst);
+                            local += 1;
+                        } else if store.copy_into(node, dst) {
+                            from_store += 1;
+                        } else {
+                            // Covered by the assembly barrier; keep the
+                            // numerics identical if it ever is not.
+                            fill_features(ds.feature_seed, node, dst);
+                            fallback += 1;
+                        }
+                    });
+                    let dt = w.elapsed().as_secs_f64();
+                    let loss = match step {
+                        Ok((loss, _)) => loss,
+                        Err(e) => panic!("trainer {}: measured train step: {e}", a.part_id),
+                    };
+                    wall.compute += dt;
+                    measured.compute_secs.push(dt);
+                    measured.losses.push(loss);
+                    measured.rows_from_store += from_store;
+                    measured.rows_local += local;
+                    measured.rows_fallback += fallback;
+                    // This round's real gradient blob: post − pre, i.e.
+                    // −lr · local gradient.
+                    for ((g, po), pr) in grads.iter_mut().zip(r.state.flat()).zip(pre) {
+                        *g = po - *pr;
+                    }
+                } else if time_scale > 0.0 && plan.t_ddp > 0.0 {
+                    let w = Instant::now();
+                    std::thread::sleep(Duration::from_secs_f64(plan.t_ddp * time_scale));
                     wall.compute += w.elapsed().as_secs_f64();
                 }
                 // 5. Bound the store: evictions plus transient misses that
@@ -182,13 +273,19 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                 wall.minibatches += 1;
             }
             // 6. DDP barrier: every trainer joins every round (inactive
-            //    ones too), mirroring the sim's barrier arithmetic.
+            //    ones too), mirroring the sim's barrier arithmetic.  In
+            //    measured mode `grads` carries the real local delta
+            //    (zeros on inactive rounds — the replica contributed no
+            //    step this round).
             let frame = Frame::Allreduce {
                 part: a.part_id as u32,
                 round,
                 vclock: t.clock,
-                grads: vec![0.0; grads_len],
+                grads,
             };
+            if runner.is_some() {
+                measured.grad_bytes += (grads_len * 4) as u64;
+            }
             let w = Instant::now();
             a.hub_tx.send_frame(&frame.encode()).expect("allreduce hub hung up");
             let reply = match a.hub_rx.recv_frame_timeout(barrier_budget) {
@@ -203,11 +300,25 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                     a.part_id
                 ),
             };
-            wall.barrier += w.elapsed().as_secs_f64();
+            let barrier_secs = w.elapsed().as_secs_f64();
+            wall.barrier += barrier_secs;
             let (reduced, _) = Frame::decode(&reply).expect("bad hub frame");
-            let Frame::Allreduce { vclock: max_vclock, .. } = reduced else {
+            let Frame::Allreduce { vclock: max_vclock, grads: sum, .. } = reduced else {
                 panic!("unexpected hub frame kind");
             };
+            if let Some(r) = runner.as_mut() {
+                measured.barrier_secs.push(barrier_secs);
+                // Apply the mean of every replica's delta on top of the
+                // round-start snapshot: all replicas end bit-identical
+                // (the hub reduces in trainer-id order, so the sum is
+                // deterministic too).
+                let mut next = params_pre.expect("params snapshot");
+                let inv_n = 1.0 / cfg.num_trainers as f32;
+                for (p, g) in next.iter_mut().zip(&sum) {
+                    *p += g * inv_n;
+                }
+                r.state.set_flat(&next).expect("param layout");
+            }
             t.clock = max_vclock + allreduce;
             round += 1;
         }
@@ -215,8 +326,11 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
         wall.epochs.push(epoch_wstart.elapsed().as_secs_f64());
     }
     wall.total = run_start.elapsed().as_secs_f64();
+    if let Some(r) = &runner {
+        measured.param_hash = r.state.fingerprint();
+    }
     let _ = a.prefetch_tx.send(PrefetchMsg::Shutdown);
     // Half-close the hub link so the hub (thread or process) sees EOF.
     a.hub_tx.close();
-    TrainerOutput { metrics: t.metrics, wall }
+    TrainerOutput { metrics: t.metrics, wall, measured }
 }

@@ -25,10 +25,13 @@ const KIND_FETCH_REQ: u8 = 1;
 const KIND_FETCH_RESP: u8 = 2;
 const KIND_ALLREDUCE: u8 = 3;
 const KIND_HELLO: u8 = 4;
+const KIND_RESULT: u8 = 5;
 
-/// `Frame::Hello` role tags: who is announcing itself on a fresh
-/// transport connection.
+/// `Frame::Hello` / `Frame::Result` role tags: who is announcing itself
+/// on a fresh transport connection, or whose result a blob carries.
 pub const ROLE_TRAINER: u8 = 1;
+pub const ROLE_SERVER: u8 = 2;
+pub const ROLE_HUB: u8 = 3;
 
 /// Upper bound on a frame body; anything larger is rejected as malformed
 /// before any allocation happens.
@@ -49,6 +52,12 @@ pub enum Frame {
     /// fresh connection announces who dialed, so listeners can index the
     /// reply route.  The in-process channel transport never sends it.
     Hello { role: u8, id: u32 },
+    /// A worker's final result returned over the wire: `blob` is an
+    /// [`super::ipc`] result blob, `role`/`id` identify the worker
+    /// (`ROLE_TRAINER`/`ROLE_SERVER` + part index, or `ROLE_HUB`).  Sent
+    /// once on a fresh connection to the orchestrator's results listener,
+    /// replacing the shared-filesystem `--out` blob files.
+    Result { role: u8, id: u32, blob: Vec<u8> },
 }
 
 impl Frame {
@@ -92,6 +101,13 @@ impl Frame {
                 body.push(KIND_HELLO);
                 body.push(*role);
                 put_u32(&mut body, *id);
+            }
+            Frame::Result { role, id, blob } => {
+                body.push(KIND_RESULT);
+                body.push(*role);
+                put_u32(&mut body, *id);
+                put_u32(&mut body, blob.len() as u32);
+                body.extend_from_slice(blob);
             }
         }
         let mut out = Vec::with_capacity(4 + body.len());
@@ -147,6 +163,13 @@ impl Frame {
                 let id = r.u32()?;
                 Frame::Hello { role, id }
             }
+            KIND_RESULT => {
+                let role = r.u8()?;
+                let id = r.u32()?;
+                let len = r.u32()? as usize;
+                let blob = r.take(len)?.to_vec();
+                Frame::Result { role, id, blob }
+            }
             other => crate::bail!("wire: unknown frame kind {other}"),
         };
         crate::ensure!(
@@ -168,6 +191,7 @@ impl Frame {
                 }
                 Frame::Allreduce { grads, .. } => 4 + 8 + 8 + 4 + 4 * grads.len(),
                 Frame::Hello { .. } => 1 + 4,
+                Frame::Result { blob, .. } => 1 + 4 + 4 + blob.len(),
             }
     }
 }
@@ -266,6 +290,7 @@ mod tests {
             },
             Frame::Allreduce { part: 0, round: 41, vclock: 1.5e3, grads: vec![0.0; 5] },
             Frame::Hello { role: ROLE_TRAINER, id: 3 },
+            Frame::Result { role: ROLE_SERVER, id: 2, blob: vec![0xAB, 0, 0xCD, 255] },
         ];
         for f in frames {
             let bytes = f.encode();

@@ -4,7 +4,7 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
-use crate::metrics::WireStats;
+use crate::metrics::{MeasuredStats, WireStats};
 
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
@@ -139,6 +139,44 @@ pub fn link_table(per_trainer: &[WireStats]) -> Table {
     t
 }
 
+/// Per-trainer measured-compute accounting ([`MeasuredStats`], cluster
+/// `--compute measured`): real per-minibatch fwd/bwd time, blocked-on-fetch
+/// time, allreduce barrier time, loss, feature-row provenance, and the
+/// replica fingerprint (identical across trainers ⇔ DDP kept the replicas
+/// in sync).
+pub fn measured_table(per_trainer: &[MeasuredStats]) -> Table {
+    let mut t = Table::new(
+        "measured compute per trainer (real SageRunner fwd/bwd)",
+        &[
+            "trainer",
+            "minibatches",
+            "compute",
+            "fetch_blocked",
+            "barrier",
+            "mean_loss",
+            "rows_store",
+            "rows_local",
+            "grad_bytes",
+            "param_hash",
+        ],
+    );
+    for (i, m) in per_trainer.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            m.compute_secs.len().to_string(),
+            fmt_secs(m.total_compute()),
+            fmt_secs(m.total_fetch_wait()),
+            fmt_secs(m.total_barrier()),
+            format!("{:.4}", m.mean_loss()),
+            fmt_count(m.rows_from_store),
+            fmt_count(m.rows_local),
+            fmt_count(m.grad_bytes),
+            format!("{:016x}", m.param_hash),
+        ]);
+    }
+    t
+}
+
 /// Format helpers shared by benches and the CLI.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -184,6 +222,20 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn measured_table_rows() {
+        let m = MeasuredStats {
+            compute_secs: vec![0.5, 0.5],
+            losses: vec![1.0],
+            param_hash: 0xAB,
+            ..MeasuredStats::default()
+        };
+        let t = measured_table(&[m]);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][1], "2", "two measured minibatches");
+        assert!(t.rows[0].contains(&"00000000000000ab".to_string()));
     }
 
     #[test]

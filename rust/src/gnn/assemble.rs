@@ -20,14 +20,30 @@ pub struct PackedBatch {
     pub mask: Tensor,
 }
 
-/// Pack one sampled minibatch.  `labels` is the dataset's full label vector
-/// (values are taken mod `shape.classes` — the canonical artifact class
-/// space, DESIGN.md §2).
+/// Pack one sampled minibatch, synthesizing every feature row from the
+/// dataset seed.  `labels` is the dataset's full label vector (values are
+/// taken mod `shape.classes` — the canonical artifact class space,
+/// DESIGN.md §2).
 pub fn pack_minibatch(
     shape: &SageShape,
     mb: &Minibatch,
     feature_seed: u64,
     labels: &[u16],
+) -> crate::error::Result<PackedBatch> {
+    pack_minibatch_with(shape, mb, labels, |node, dst| fill_features(feature_seed, node, dst))
+}
+
+/// Pack one sampled minibatch with an arbitrary feature source: `fill`
+/// writes node `n`'s feature row into `dst` (`shape.feat_dim` floats).
+/// The cluster runtime's measured-compute path uses this to gather remote
+/// rows from the trainer's [`crate::cluster::FeatureStore`] (what the
+/// prefetcher actually fetched) and local rows from the partition shard,
+/// instead of re-synthesizing everything.
+pub fn pack_minibatch_with<F: FnMut(u32, &mut [f32])>(
+    shape: &SageShape,
+    mb: &Minibatch,
+    labels: &[u16],
+    mut fill: F,
 ) -> crate::error::Result<PackedBatch> {
     let (b, k1, k2, d) = (shape.batch, shape.fanout1, shape.fanout2, shape.feat_dim);
     let rows = mb.targets.len();
@@ -43,15 +59,15 @@ pub fn pack_minibatch(
 
     let mut x_self = vec![0.0f32; b * d];
     for (i, &v) in mb.targets.iter().enumerate() {
-        fill_features(feature_seed, v, &mut x_self[i * d..(i + 1) * d]);
+        fill(v, &mut x_self[i * d..(i + 1) * d]);
     }
     let mut x_h1 = vec![0.0f32; b * k1 * d];
     for (i, &v) in mb.hop1.iter().enumerate() {
-        fill_features(feature_seed, v, &mut x_h1[i * d..(i + 1) * d]);
+        fill(v, &mut x_h1[i * d..(i + 1) * d]);
     }
     let mut x_h2 = vec![0.0f32; b * k1 * k2 * d];
     for (i, &v) in mb.hop2.iter().enumerate() {
-        fill_features(feature_seed, v, &mut x_h2[i * d..(i + 1) * d]);
+        fill(v, &mut x_h2[i * d..(i + 1) * d]);
     }
     let mut label_ids = vec![0i32; b];
     let mut mask = vec![0.0f32; b];
@@ -115,6 +131,17 @@ mod tests {
         let labels = vec![7u16; 64]; // 7 mod 3 = 1
         let p = pack_minibatch(&tiny_shape(), &mb(1), 7, &labels).unwrap();
         assert_eq!(lit::to_i32(&p.labels).unwrap()[0], 1);
+    }
+
+    #[test]
+    fn custom_fill_matches_seeded_fill() {
+        let labels = vec![1u16; 64];
+        let a = pack_minibatch(&tiny_shape(), &mb(3), 7, &labels).unwrap();
+        let b =
+            pack_minibatch_with(&tiny_shape(), &mb(3), &labels, |n, dst| fill_features(7, n, dst))
+                .unwrap();
+        assert_eq!(lit::to_f32(&a.x_self).unwrap(), lit::to_f32(&b.x_self).unwrap());
+        assert_eq!(lit::to_f32(&a.x_h2).unwrap(), lit::to_f32(&b.x_h2).unwrap());
     }
 
     #[test]

@@ -114,6 +114,57 @@ pub struct SageState {
 }
 
 impl SageState {
+    /// Flatten every parameter tensor into one vector, in the fixed order
+    /// `w1_self, w1_neigh, b1, w2_self, w2_neigh, b2` — the layout of the
+    /// DDP gradient blob (`param_bytes() / 4` floats).
+    pub fn flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity((self.shape.param_bytes() / 4) as usize);
+        out.extend_from_slice(&self.w1_self);
+        out.extend_from_slice(&self.w1_neigh);
+        out.extend_from_slice(&self.b1);
+        out.extend_from_slice(&self.w2_self);
+        out.extend_from_slice(&self.w2_neigh);
+        out.extend_from_slice(&self.b2);
+        out
+    }
+
+    /// Overwrite every parameter from a [`SageState::flat`]-layout vector.
+    pub fn set_flat(&mut self, flat: &[f32]) -> crate::error::Result<()> {
+        crate::ensure!(
+            flat.len() == (self.shape.param_bytes() / 4) as usize,
+            "sage state: flat vector has {} params, model has {}",
+            flat.len(),
+            self.shape.param_bytes() / 4
+        );
+        let mut pos = 0usize;
+        for dst in [
+            &mut self.w1_self,
+            &mut self.w1_neigh,
+            &mut self.b1,
+            &mut self.w2_self,
+            &mut self.w2_neigh,
+            &mut self.b2,
+        ] {
+            dst.copy_from_slice(&flat[pos..pos + dst.len()]);
+            pos += dst.len();
+        }
+        Ok(())
+    }
+
+    /// FNV-1a over the parameters' bit patterns: two replicas share a
+    /// fingerprint iff their parameters are bit-identical (the real-DDP
+    /// sync invariant the cluster's measured mode asserts).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in self.flat() {
+            for byte in v.to_bits().to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+
     /// Glorot-ish init (mirrors model.py `sage_init` statistics).
     pub fn init(shape: SageShape, seed: u64) -> SageState {
         let mut rng = Pcg32::new(seed);
@@ -157,7 +208,8 @@ impl SageRunner {
         SageRunner { engine, state, lr, losses: Vec::new() }
     }
 
-    /// Run one train step on a sampled minibatch.  Returns `(loss, seconds)`.
+    /// Run one train step on a sampled minibatch, synthesizing features
+    /// from the dataset seed.  Returns `(loss, seconds)`.
     pub fn train_step(
         &mut self,
         mb: &Minibatch,
@@ -165,6 +217,26 @@ impl SageRunner {
         labels: &[u16],
     ) -> crate::error::Result<(f32, f64)> {
         let batch = assemble::pack_minibatch(&self.state.shape, mb, feature_seed, labels)?;
+        self.train_step_packed(batch)
+    }
+
+    /// Run one train step with an arbitrary feature source (see
+    /// [`assemble::pack_minibatch_with`]) — the cluster runtime's
+    /// measured-compute entry point.
+    pub fn train_step_with<F: FnMut(u32, &mut [f32])>(
+        &mut self,
+        mb: &Minibatch,
+        labels: &[u16],
+        fill: F,
+    ) -> crate::error::Result<(f32, f64)> {
+        let batch = assemble::pack_minibatch_with(&self.state.shape, mb, labels, fill)?;
+        self.train_step_packed(batch)
+    }
+
+    fn train_step_packed(
+        &mut self,
+        batch: assemble::PackedBatch,
+    ) -> crate::error::Result<(f32, f64)> {
         let s = &self.state;
         let shp = s.shape;
         let inputs = vec![
@@ -270,6 +342,20 @@ mod tests {
         let s = shape();
         let n = 2 * 100 * 128 + 128 + 2 * 128 * 32 + 32;
         assert_eq!(s.param_bytes(), (n * 4) as u64);
+    }
+
+    #[test]
+    fn flat_roundtrip_and_fingerprint() {
+        let a = SageState::init(shape(), 5);
+        let f = a.flat();
+        assert_eq!(f.len(), (a.shape.param_bytes() / 4) as usize);
+        let b = SageState::init(shape(), 6);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "different params, different hash");
+        let mut c = SageState::init(shape(), 6);
+        c.set_flat(&f).unwrap();
+        assert_eq!(c.fingerprint(), a.fingerprint(), "set_flat(flat()) clones the params");
+        assert_eq!(c.w1_neigh, a.w1_neigh);
+        assert!(c.set_flat(&f[1..]).is_err(), "wrong length rejected");
     }
 
     #[test]

@@ -12,9 +12,11 @@ use rudder::cluster::multiproc::{
 };
 use rudder::cluster::{
     parity_check, run_cluster_multiproc, run_cluster_on, wire_parity, ClusterConfig,
-    ClusterResult, FaultSpec, Transport,
+    ClusterResult, ComputeMode, FaultSpec, Transport,
 };
-use rudder::eval::report::{fmt_count, fmt_pct, fmt_secs, link_table, wire_table, Table};
+use rudder::eval::report::{
+    fmt_count, fmt_pct, fmt_secs, link_table, measured_table, wire_table, Table,
+};
 use rudder::eval::{harness, pass_at_1, Quality};
 use rudder::gnn::SageRunner;
 use rudder::graph::datasets;
@@ -40,6 +42,7 @@ fn main() {
     let result = match args.subcommand.as_str() {
         "train" => cmd_train(&args),
         "cluster" => cmd_cluster(&args),
+        "bench" => cmd_bench(&args),
         "experiment" => cmd_experiment(&args),
         "trace" => cmd_trace(&args),
         "calibrate" => cmd_calibrate(&args),
@@ -164,10 +167,13 @@ fn cmd_train(args: &Args) -> rudder::error::Result<()> {
 /// debugging).
 fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
     let time_scale = args.opt_parse::<f64>("time-scale")?.unwrap_or(0.0);
-    let out = PathBuf::from(
-        args.opt("out")
-            .ok_or_else(|| rudder::err!("--out <file> required with --role"))?,
-    );
+    // Results go back over the orchestrator's results link (`--results`)
+    // or, for manual runs, into a blob file (`--out`).
+    let results = args.opt("results").map(str::to_string);
+    let out = args.opt("out").map(PathBuf::from);
+    if results.is_none() && out.is_none() {
+        rudder::bail!("--results <addr> or --out <file> required with --role");
+    }
     let config = || -> rudder::error::Result<PathBuf> {
         Ok(PathBuf::from(args.opt("run-config").ok_or_else(|| {
             rudder::err!("--run-config <file> required with --role {role}")
@@ -193,6 +199,7 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
             config: config()?,
             time_scale,
             fault,
+            results,
             out,
         }),
         "hub" => run_hub_worker(&HubWorkerOpts {
@@ -201,6 +208,7 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
                 .opt_parse::<usize>("trainers")?
                 .ok_or_else(|| rudder::err!("--trainers <n> required with --role hub"))?,
             round_sleep: args.opt_parse::<f64>("round-sleep")?.unwrap_or(0.0),
+            results,
             out,
         }),
         "trainer" => run_trainer_worker(&TrainerWorkerOpts {
@@ -219,10 +227,21 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
                 .opt("hub")
                 .ok_or_else(|| rudder::err!("--hub <addr> required with --role trainer"))?
                 .to_string(),
-            time_scale,
+            compute: worker_compute_mode(args, time_scale)?,
+            results,
             out,
         }),
         other => rudder::bail!("unknown --role '{other}' (trainer|server|hub)"),
+    }
+}
+
+/// Resolve a worker/orchestrator `--compute` flag plus `--time-scale`
+/// into a [`ComputeMode`]: measured ignores the time scale (real compute
+/// replaces every sleep), emulated carries it.
+fn worker_compute_mode(args: &Args, time_scale: f64) -> rudder::error::Result<ComputeMode> {
+    match ComputeMode::parse(&args.opt_or("compute", "emulated"))? {
+        ComputeMode::Measured => Ok(ComputeMode::Measured),
+        ComputeMode::Emulated(_) => Ok(ComputeMode::Emulated(time_scale)),
     }
 }
 
@@ -233,14 +252,15 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
     }
     let cfg = config_from_args(args)?;
     let time_scale = args.opt_parse::<f64>("time-scale")?.unwrap_or(0.02);
+    let compute = worker_compute_mode(args, time_scale)?;
     let transport = Transport::parse(&args.opt_or("transport", "channel"))?;
     let fault = match args.opt("fault") {
         Some(s) => Some(FaultSpec::parse(s)?),
         None => None,
     };
-    let ccfg = ClusterConfig { run: cfg.clone(), time_scale, transport, fault };
+    let ccfg = ClusterConfig { run: cfg.clone(), compute, transport, fault };
     println!(
-        "rudder cluster: {} scale={} trainers={} buffer={:.0}% epochs={} controller={} mode={:?} transport={} time-scale={}",
+        "rudder cluster: {} scale={} trainers={} buffer={:.0}% epochs={} controller={} mode={:?} transport={} compute={} time-scale={}",
         cfg.dataset,
         cfg.scale,
         cfg.num_trainers,
@@ -249,7 +269,8 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
         cfg.controller.label(),
         cfg.mode,
         transport.name(),
-        time_scale,
+        compute.name(),
+        compute.time_scale(),
     );
     let (ds, part) = build_cluster(&cfg)?;
     println!(
@@ -283,7 +304,7 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
     let e = &r.experiment;
     let wire = r.wire_total();
     let fetch_wait: f64 = r.walls.iter().map(|w| w.fetch_wait).sum();
-    let compute: f64 = r.walls.iter().map(|w| w.compute).sum();
+    let compute_wall: f64 = r.walls.iter().map(|w| w.compute).sum();
     let mut t = Table::new("cluster run summary", &["metric", "value"]);
     t.row(vec!["variant".into(), e.label.clone()]);
     t.row(vec!["wall-clock total".into(), fmt_secs(r.wall_total)]);
@@ -308,11 +329,15 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
     t.row(vec!["allreduce rounds".into(), fmt_count(r.allreduce_rounds)]);
     t.row(vec![
         "Σ fetch-wait / Σ compute".into(),
-        format!("{} / {}", fmt_secs(fetch_wait), fmt_secs(compute)),
+        format!("{} / {}", fmt_secs(fetch_wait), fmt_secs(compute_wall)),
     ]);
     t.emit("cluster_summary");
     wire_table(&r.wire).emit("cluster_wire");
     link_table(&r.wire).emit("cluster_links");
+    if compute.is_measured() {
+        measured_table(&r.measured).emit("cluster_measured");
+        check_replicas_synced(&r)?;
+    }
 
     if args.flag("parity") {
         println!("parity: re-running the virtual-time sim with the same config + seed...");
@@ -377,9 +402,10 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
         // its misses.  Gate on the *blocking* component (fetch-wait), which
         // isolates the overlap effect from the compute sleeps and scheduler
         // jitter that dominate total wall on loaded CI machines; totals are
-        // reported above.  Without emulation (--time-scale 0) both runs are
-        // pure overhead noise, so only report.
-        if time_scale > 0.0
+        // reported above.  Without emulation (--time-scale 0), and in
+        // measured mode (where `rudder bench` owns the tolerance-gated
+        // comparison), only report.
+        if compute.time_scale() > 0.0
             && cfg.controller != ControllerSpec::NoPrefetch
             && on_fetch_wait >= off_fetch_wait
         {
@@ -393,10 +419,143 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
         if r.wall_total >= r_off.wall_total {
             println!(
                 "note: total wall-clock did not improve this run (margin below noise at \
-                 time-scale {time_scale}); fetch-wait above is the reliable overlap signal"
+                 time-scale {}); fetch-wait above is the reliable overlap signal",
+                compute.time_scale()
             );
         }
     }
+    Ok(())
+}
+
+/// Measured-mode invariant: after the final allreduce every replica's
+/// parameters must be bit-identical (the hub reduces in trainer-id order,
+/// trainers apply the same mean delta to the same snapshot).
+fn check_replicas_synced(r: &ClusterResult) -> rudder::error::Result<()> {
+    let hashes: Vec<u64> = r.measured.iter().map(|m| m.param_hash).collect();
+    if let Some(&first) = hashes.first() {
+        rudder::ensure!(
+            hashes.iter().all(|&h| h == first),
+            "measured replicas diverged after DDP: param hashes {hashes:?}"
+        );
+    }
+    Ok(())
+}
+
+/// `rudder bench` — the pinned measured-compute cluster benchmark.
+///
+/// Runs the prefetching cluster and the no-prefetch baseline with real
+/// SageRunner compute in every trainer, then writes a schema-stable,
+/// machine-readable `BENCH_cluster.json`: wall/epoch times, fetch-blocked
+/// time, bytes on the wire, and the prefetch-vs-baseline ratios CI gates
+/// on (`--min-speedup`, `--max-blocked-ratio`; ratios, not absolute
+/// seconds, so the gate tolerates slow shared runners).
+fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
+    // Pinned configuration: small enough for CI, real compute throughout.
+    // Only seed/scale/epochs are overridable (local experiments); the CI
+    // artifact stays comparable run to run.
+    let cfg = RunConfig {
+        dataset: "ogbn-arxiv".into(),
+        scale: args.opt_parse::<f64>("scale")?.unwrap_or(0.15),
+        seed: args.opt_parse::<u64>("seed")?.unwrap_or(7),
+        num_trainers: 2,
+        batch_size: 32,
+        fanout1: 5,
+        fanout2: 5,
+        buffer_pct: 0.25,
+        epochs: args.opt_parse::<usize>("epochs")?.unwrap_or(2),
+        controller: ControllerSpec::parse("massivegnn:8")?,
+        ..RunConfig::default()
+    };
+    let out_path = args.opt_or("out", "BENCH_cluster.json");
+    let min_speedup = args.opt_parse::<f64>("min-speedup")?.unwrap_or(0.0);
+    let max_blocked_ratio = args.opt_parse::<f64>("max-blocked-ratio")?.unwrap_or(f64::INFINITY);
+    println!(
+        "rudder bench: measured-compute cluster, {} scale={} trainers={} epochs={} controller={}",
+        cfg.dataset,
+        cfg.scale,
+        cfg.num_trainers,
+        cfg.epochs,
+        cfg.controller.label(),
+    );
+    let (ds, part) = build_cluster(&cfg)?;
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let ccfg = ClusterConfig {
+        run: cfg.clone(),
+        compute: ComputeMode::Measured,
+        transport: Transport::Channel,
+        fault: None,
+    };
+    let on = run_cluster_on(ds.clone(), part.clone(), &ccfg, None)?;
+    check_replicas_synced(&on)?;
+    println!("bench: re-running with prefetching disabled (baseline)...");
+    let mut off_ccfg = ccfg.clone();
+    off_ccfg.run.controller = ControllerSpec::NoPrefetch;
+    let off = run_cluster_on(ds, part, &off_ccfg, None)?;
+    check_replicas_synced(&off)?;
+
+    let fetch_blocked = |r: &ClusterResult| -> f64 { r.walls.iter().map(|w| w.fetch_wait).sum() };
+    let variant_json = |r: &ClusterResult| -> Json {
+        let wire = r.wire_total();
+        let losses: Vec<f64> = r.measured.iter().map(|m| m.mean_loss()).collect();
+        let minibatches: u64 = r.walls.iter().map(|w| w.minibatches).sum();
+        Json::obj(vec![
+            ("label", Json::str(r.experiment.label.clone())),
+            ("wall_total_s", Json::num(r.wall_total)),
+            ("epoch_wall_s", Json::num(r.mean_epoch_wall())),
+            ("fetch_blocked_s", Json::num(fetch_blocked(r))),
+            ("compute_s", Json::num(r.walls.iter().map(|w| w.compute).sum::<f64>())),
+            ("barrier_s", Json::num(r.walls.iter().map(|w| w.barrier).sum::<f64>())),
+            ("minibatches", Json::num(minibatches as f64)),
+            ("nodes_fetched", Json::num(r.experiment.total_comm_nodes as f64)),
+            ("wire_req_bytes", Json::num(wire.req_bytes as f64)),
+            ("wire_resp_bytes", Json::num(wire.resp_bytes as f64)),
+            ("mean_loss", Json::num(rudder::util::stats::mean(&losses))),
+        ])
+    };
+    let speedup_wall = if on.wall_total > 0.0 { off.wall_total / on.wall_total } else { 1.0 };
+    let blocked_ratio = if fetch_blocked(&off) > 0.0 {
+        fetch_blocked(&on) / fetch_blocked(&off)
+    } else {
+        1.0
+    };
+    let doc = Json::obj(vec![
+        ("schema", Json::str("rudder-bench-cluster/v1")),
+        (
+            "config",
+            Json::obj(vec![
+                ("dataset", Json::str(cfg.dataset.clone())),
+                ("scale", Json::num(cfg.scale)),
+                ("seed", Json::num(cfg.seed as f64)),
+                ("trainers", Json::num(cfg.num_trainers as f64)),
+                ("batch_size", Json::num(cfg.batch_size as f64)),
+                ("epochs", Json::num(cfg.epochs as f64)),
+                ("controller", Json::str(cfg.controller.spec())),
+                ("compute", Json::str("measured")),
+                ("transport", Json::str("channel")),
+            ]),
+        ),
+        ("prefetch", variant_json(&on)),
+        ("baseline", variant_json(&off)),
+        ("speedup_wall", Json::num(speedup_wall)),
+        ("fetch_blocked_ratio", Json::num(blocked_ratio)),
+        ("replicas_synced", Json::Bool(true)),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty())?;
+    println!(
+        "bench: wall speedup {speedup_wall:.2}x, fetch-blocked ratio {blocked_ratio:.2} \
+         (prefetch / baseline); wrote {out_path}"
+    );
+    // Gates last: the artifact exists (and is uploadable) even on failure.
+    rudder::ensure!(
+        speedup_wall >= min_speedup,
+        "bench gate: wall speedup {speedup_wall:.3} below --min-speedup {min_speedup}"
+    );
+    rudder::ensure!(
+        blocked_ratio <= max_blocked_ratio,
+        "bench gate: fetch-blocked ratio {blocked_ratio:.3} above --max-blocked-ratio \
+         {max_blocked_ratio}"
+    );
     Ok(())
 }
 

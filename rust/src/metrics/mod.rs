@@ -143,6 +143,68 @@ pub struct WireStats {
     pub links: Vec<LinkStats>,
 }
 
+/// Measured-compute accounting from the cluster runtime's
+/// `ComputeMode::Measured` ([`crate::cluster`]): what the *real*
+/// `SageRunner` did on this trainer, as opposed to the modelled T_DDP the
+/// virtual clock charges.  Empty in emulated mode.
+///
+/// The per-minibatch vectors cover *active* minibatches (short partitions
+/// skip trailing indices); `barrier_secs` covers every DDP round, active
+/// or not, so its length can exceed the others'.
+#[derive(Debug, Clone, Default)]
+pub struct MeasuredStats {
+    /// Real fwd+bwd wall seconds per active minibatch.
+    pub compute_secs: Vec<f64>,
+    /// Wall seconds blocked waiting for remote features per active
+    /// minibatch (the exposed, un-overlapped part of communication).
+    pub fetch_wait_secs: Vec<f64>,
+    /// Wall seconds in the DDP allreduce barrier per round.
+    pub barrier_secs: Vec<f64>,
+    /// Training loss per active minibatch.
+    pub losses: Vec<f32>,
+    /// Feature rows gathered from the prefetched [`FeatureStore`] (remote
+    /// nodes) vs synthesized from the partition-resident shard (local).
+    ///
+    /// [`FeatureStore`]: crate::cluster::FeatureStore
+    pub rows_from_store: u64,
+    pub rows_local: u64,
+    /// Remote rows *not* found in the store at compute time (re-synthesized
+    /// as a fallback).  Non-zero means the assembly barrier has a hole.
+    pub rows_fallback: u64,
+    /// Gradient payload bytes this trainer sent to the allreduce hub.
+    pub grad_bytes: u64,
+    /// Fingerprint of the final model parameters
+    /// ([`crate::gnn::SageState::fingerprint`]): identical across trainers
+    /// iff the real gradient allreduce kept every replica in sync.
+    pub param_hash: u64,
+}
+
+impl MeasuredStats {
+    /// Is there anything here (i.e. did this run measure real compute)?
+    pub fn is_populated(&self) -> bool {
+        !self.compute_secs.is_empty() || self.param_hash != 0
+    }
+
+    pub fn total_compute(&self) -> f64 {
+        self.compute_secs.iter().sum()
+    }
+
+    pub fn total_fetch_wait(&self) -> f64 {
+        self.fetch_wait_secs.iter().sum()
+    }
+
+    pub fn total_barrier(&self) -> f64 {
+        self.barrier_secs.iter().sum()
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.losses.is_empty() {
+            return 0.0;
+        }
+        self.losses.iter().map(|&l| l as f64).sum::<f64>() / self.losses.len() as f64
+    }
+}
+
 impl WireStats {
     /// Accumulate another trainer's counters (cluster-level totals).
     pub fn merge(&mut self, o: &WireStats) {
@@ -305,6 +367,21 @@ mod tests {
         }
         assert!(rm.comm_nodes_percentile(99.0) >= 97.0);
         assert_eq!(rm.total_comm_nodes(), (0..100).sum::<u64>());
+    }
+
+    #[test]
+    fn measured_stats_aggregates() {
+        let mut m = MeasuredStats::default();
+        assert!(!m.is_populated());
+        m.compute_secs = vec![0.1, 0.3];
+        m.fetch_wait_secs = vec![0.01, 0.02];
+        m.barrier_secs = vec![0.001, 0.001, 0.001];
+        m.losses = vec![2.0, 1.0];
+        assert!(m.is_populated());
+        assert!((m.total_compute() - 0.4).abs() < 1e-12);
+        assert!((m.total_fetch_wait() - 0.03).abs() < 1e-12);
+        assert!((m.total_barrier() - 0.003).abs() < 1e-12);
+        assert!((m.mean_loss() - 1.5).abs() < 1e-12);
     }
 
     #[test]

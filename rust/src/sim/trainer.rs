@@ -73,8 +73,15 @@ pub struct FetchPlan {
     pub admitted: Vec<u32>,
     /// Replacement evictions — dropped from the feature store.
     pub evicted: Vec<u32>,
-    /// Virtual T_DDP of this minibatch (scaled compute emulation).
+    /// Virtual T_DDP of this minibatch.  This stays the *modelled* cost in
+    /// every compute mode — the virtual clock (and with it every decision
+    /// and traffic counter) must remain a pure function of config + seed;
+    /// measured compute only changes what happens on the wall clock.
     pub t_ddp: f64,
+    /// The sampled minibatch itself, captured only when
+    /// [`Trainer::capture_minibatch`] is set: the cluster runtime's
+    /// measured mode replays it through the real [`SageRunner`].
+    pub minibatch: Option<crate::sampler::Minibatch>,
 }
 
 /// Immutable per-run context shared by all trainers.
@@ -195,6 +202,9 @@ pub struct Trainer {
     /// When armed (`Some`), each minibatch leaves its I/O choreography
     /// here for the cluster runtime to execute ([`FetchPlan`]).
     pub fetch_plan: Option<FetchPlan>,
+    /// Also leave the sampled minibatch in the fetch plan (measured-compute
+    /// consumers).  Off by default: the clone is pure overhead otherwise.
+    pub capture_minibatch: bool,
     pub halo2_len: usize,
     prev_t_ddp: f64,
     global_mb: u64,
@@ -227,6 +237,7 @@ impl Trainer {
             runner: None,
             trace: None,
             fetch_plan: None,
+            capture_minibatch: false,
             halo2_len,
             prev_t_ddp: 0.0,
             global_mb: 0,
@@ -420,6 +431,9 @@ impl Trainer {
             plan.admitted.clone_from(&replace_out.fetched_nodes);
             plan.evicted.clone_from(&replace_out.evicted_nodes);
             plan.t_ddp = t_ddp;
+            if self.capture_minibatch {
+                plan.minibatch = Some(mbatch.clone());
+            }
         }
 
         // --- online finetuning (classifier option) ----------------------

@@ -8,8 +8,8 @@
 use std::sync::Arc;
 
 use rudder::cluster::{
-    parity_check, run_cluster_on, wire_parity, ClusterConfig, ClusterResult, FaultSpec,
-    Transport,
+    parity_check, run_cluster_on, wire_parity, ClusterConfig, ClusterResult, ComputeMode,
+    FaultSpec, Transport,
 };
 use rudder::graph::Dataset;
 use rudder::partition::Partition;
@@ -290,6 +290,116 @@ fn fault_injection_over_tcp_with_chopped_writes() {
 }
 
 // ---------------------------------------------------------------------------
+// measured compute: real SageRunner fwd/bwd behind the same state machine
+
+/// Run one cluster on a shared graph with an explicit compute mode.
+fn run_compute(
+    cfg: &RunConfig,
+    ds: &Arc<Dataset>,
+    part: &Arc<Partition>,
+    compute: ComputeMode,
+    transport: Transport,
+) -> ClusterResult {
+    let mut ccfg = ClusterConfig::new(cfg.clone());
+    ccfg.compute = compute;
+    ccfg.transport = transport;
+    run_cluster_on(ds.clone(), part.clone(), &ccfg, None).unwrap()
+}
+
+#[test]
+fn measured_mode_counters_bit_identical_to_emulated() {
+    // The tentpole guarantee: swapping sleeps for real SageRunner compute
+    // must not move a single decision or traffic counter — only the clock
+    // source changes.  Counters must also match the virtual-time sim.
+    let cfg = quick("massivegnn:8");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);
+    let emulated = run_compute(&cfg, &ds, &part, ComputeMode::Emulated(0.0), Transport::Channel);
+    let measured = run_compute(&cfg, &ds, &part, ComputeMode::Measured, Transport::Channel);
+    parity_check(&sim_r, &measured.experiment).unwrap();
+    parity_check(&emulated.experiment, &measured.experiment).unwrap();
+    assert_minibatches_identical(&emulated, &measured);
+    wire_parity(&emulated.wire, &measured.wire).unwrap();
+    // Emulated runs carry no measured stats; measured runs must.
+    assert!(emulated.measured.iter().all(|m| !m.is_populated()));
+    for m in &measured.measured {
+        assert!(m.is_populated());
+        assert_eq!(m.compute_secs.len(), m.losses.len());
+        assert!(m.total_compute() > 0.0, "real fwd/bwd must cost wall time");
+        assert_eq!(m.rows_fallback, 0, "assembly barrier must cover every remote row");
+        assert!(m.rows_local > 0, "partition-resident rows are gathered locally");
+        assert!(m.grad_bytes > 0, "gradient blobs must cross the hub link");
+    }
+    // The buffer serves hits, so some sampled remote rows must have been
+    // gathered from the prefetched feature store.
+    let store_rows: u64 = measured.measured.iter().map(|m| m.rows_from_store).sum();
+    assert!(store_rows > 0, "measured compute must consume prefetched features");
+}
+
+#[test]
+fn measured_gradient_allreduce_is_deterministic_and_synced() {
+    let cfg = quick("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let a = run_compute(&cfg, &ds, &part, ComputeMode::Measured, Transport::Channel);
+    let b = run_compute(&cfg, &ds, &part, ComputeMode::Measured, Transport::Channel);
+    // Replicas end bit-identical within a run (real DDP sync)...
+    let first = a.measured[0].param_hash;
+    assert_ne!(first, 0, "measured mode must fingerprint the final params");
+    assert!(a.measured.iter().all(|m| m.param_hash == first), "replicas diverged");
+    // ...and across runs (ordered hub reduction ⇒ deterministic blobs).
+    for (ma, mb) in a.measured.iter().zip(&b.measured) {
+        assert_eq!(ma.param_hash, mb.param_hash, "gradient reduction must be deterministic");
+        assert_eq!(ma.losses.len(), mb.losses.len());
+        for (la, lb) in ma.losses.iter().zip(&mb.losses) {
+            assert_eq!(la.to_bits(), lb.to_bits(), "losses must replay bit-identically");
+        }
+        assert_eq!(ma.rows_from_store, mb.rows_from_store);
+        assert_eq!(ma.rows_local, mb.rows_local);
+    }
+    // Training moves the parameters away from their shared init: a
+    // regression that zeroes every gradient delta would leave the
+    // replicas bit-identical *at init*, which hash-equality alone cannot
+    // catch — compare against the init fingerprint directly.
+    let shape = rudder::gnn::SageShape {
+        batch: cfg.batch_size,
+        fanout1: cfg.fanout1,
+        fanout2: cfg.fanout2,
+        feat_dim: ds.spec.feat_dim,
+        hidden: cfg.hidden,
+        classes: ds.spec.num_classes,
+    };
+    let init = rudder::gnn::SageState::init(
+        shape,
+        rudder::util::rng::derive_seed(cfg.seed, &[0xDD]),
+    );
+    assert_ne!(first, init.fingerprint(), "real gradients must move the replicas off init");
+    let losses = &a.measured[0].losses;
+    assert!(!losses.is_empty() && losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn measured_mode_parity_over_tcp() {
+    // The acceptance bar: measured compute with the TCP transport keeps
+    // both sim parity and exact cross-transport wire parity.
+    let cfg = quick("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);
+    let chan = run_compute(&cfg, &ds, &part, ComputeMode::Measured, Transport::Channel);
+    let tcp = run_compute(&cfg, &ds, &part, ComputeMode::Measured, Transport::Tcp);
+    parity_check(&sim_r, &tcp.experiment).unwrap();
+    assert_minibatches_identical(&chan, &tcp);
+    wire_parity(&chan.wire, &tcp.wire).unwrap();
+    // The real allreduce is transport-independent too.
+    assert_eq!(chan.measured[0].param_hash, tcp.measured[0].param_hash);
+}
+
+// ---------------------------------------------------------------------------
 // multi-process smoke: the real binary, one OS process per role
 
 #[test]
@@ -328,6 +438,49 @@ fn multiproc_tcp_parity_through_real_binary() {
     );
 }
 
+#[test]
+fn multiproc_tcp_measured_results_over_wire() {
+    // Measured compute through the real binary: one OS process per role,
+    // results returned over the orchestrator's results listener (no --out
+    // files), parity against both the sim and the channel transport.
+    let exe = env!("CARGO_BIN_EXE_rudder");
+    let out = std::process::Command::new(exe)
+        .args([
+            "cluster",
+            "--dataset",
+            "ogbn-arxiv",
+            "--scale",
+            "0.1",
+            "--trainers",
+            "2",
+            "--epochs",
+            "1",
+            "--seed",
+            "7",
+            "--controller",
+            "fixed",
+            "--transport",
+            "tcp",
+            "--compute",
+            "measured",
+            "--parity",
+        ])
+        .output()
+        .expect("spawn rudder cluster --compute measured");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "exit {:?}\nstdout:\n{stdout}\nstderr:\n{stderr}", out.status);
+    assert!(stdout.contains("parity OK"), "missing sim parity:\n{stdout}");
+    assert!(
+        stdout.contains("cross-transport parity OK"),
+        "missing channel-vs-tcp parity:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("measured compute per trainer"),
+        "missing measured-compute table:\n{stdout}"
+    );
+}
+
 /// Wall-clock overlap check: with emulated costs, prefetching must beat
 /// the no-prefetch baseline.  Timing-based, so ignored by default (CI
 /// runs it through the `cluster --compare-prefetch` smoke instead).
@@ -339,7 +492,7 @@ fn prefetch_beats_no_prefetch_wall_clock() {
     let ds = Arc::new(ds);
     let part = Arc::new(part);
     let mut on = ClusterConfig::new(cfg.clone());
-    on.time_scale = 0.02;
+    on.compute = ComputeMode::Emulated(0.02);
     let mut off = on.clone();
     off.run.controller = ControllerSpec::NoPrefetch;
     let r_on = run_cluster_on(ds.clone(), part.clone(), &on, None).unwrap();

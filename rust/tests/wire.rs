@@ -113,7 +113,7 @@ fn truncation_rejected_at_every_prefix_length() {
 #[test]
 fn unknown_kind_rejected() {
     let mut bytes = Frame::FetchReq { req_id: 0, from: 0, nodes: vec![] }.encode();
-    for kind in [0u8, 5, 200, 255] {
+    for kind in [0u8, 6, 200, 255] {
         bytes[4] = kind;
         assert!(Frame::decode(&bytes).is_err(), "kind {kind} accepted");
     }
@@ -173,7 +173,7 @@ fn oversized_body_length_rejected() {
 
 /// Random protocol frame, size-biased by the prop framework's budget.
 fn gen_frame(g: &mut G) -> Frame {
-    match g.usize(0, 3) {
+    match g.usize(0, 4) {
         0 => Frame::FetchReq {
             req_id: g.u64(0, 1 << 20),
             from: g.u64(0, 64) as u32,
@@ -191,6 +191,11 @@ fn gen_frame(g: &mut G) -> Frame {
             round: g.u64(0, 10_000),
             vclock: g.f64(0.0, 1e6),
             grads: g.vec(48, |g| g.f64(-2.0, 2.0) as f32),
+        },
+        3 => Frame::Result {
+            role: g.u64(1, 3) as u8,
+            id: g.u64(0, 64) as u32,
+            blob: g.vec(64, |g| g.u64(0, 255) as u8),
         },
         _ => Frame::Hello { role: 1, id: g.u64(0, 1 << 16) as u32 },
     }
