@@ -49,13 +49,21 @@ impl Args {
         self.opt(key).unwrap_or(default).to_string()
     }
 
-    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> crate::error::Result<Option<T>> {
+    /// Parse `--key value` through the value type's [`std::str::FromStr`].
+    /// Every typed option — numbers, [`Transport`](crate::cluster::Transport),
+    /// compute modes, fault specs — funnels through here, so a bad value
+    /// reports the type's own error (which enumerates the valid values for
+    /// the enum-like options).
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> crate::error::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
         match self.opt(key) {
             None => Ok(None),
             Some(v) => v
                 .parse::<T>()
                 .map(Some)
-                .map_err(|_| crate::err!("cannot parse --{key} value '{v}'")),
+                .map_err(|e| crate::err!("cannot parse --{key} value '{v}': {e}")),
         }
     }
 
@@ -80,7 +88,10 @@ COMMANDS:
                async prefetching.  Takes every `train` flag, plus:
                --transport <t>    channel = threads + in-process channels
                                   (default); tcp = one OS process per role
-                                  over loopback TCP sockets
+                                  over loopback TCP sockets; event = one
+                                  readiness-polled event-loop thread over
+                                  nonblocking sockets, all of a trainer's
+                                  links multiplexed on one connection
                --compute <m>      emulated = sleep time-scale × modelled
                                   costs (default); measured = real
                                   SageRunner fwd/bwd in every trainer +
@@ -99,12 +110,16 @@ COMMANDS:
                worker mode (spawned by the tcp orchestrator; manual use
                for debugging): --role trainer|server|hub --part <n>
                --listen <addr> | --connect/--servers <a1,a2,..> --hub <a>
-               --run-config <toml> --results <addr> | --out <blob>;
-               listeners announce "RUDDER_LISTEN <addr>" on stdout and
-               results return over the --results link (no shared
-               filesystem needed; --out writes a local blob instead)
+               --results <addr> | --out <blob>; listeners announce
+               "RUDDER_LISTEN <addr>" on stdout, the run config arrives
+               inline over the --results control link (Hello -> Config;
+               --run-config <toml> overrides with a local file) and
+               results return over the same link (no shared filesystem
+               needed; --out writes a local blob instead)
   bench        pinned measured-compute benchmark: prefetch vs no-prefetch
-               baseline with real SageRunner compute; writes machine-
+               baseline with real SageRunner compute, plus a transport
+               scale matrix (tcp vs event across trainer counts × buffer
+               sizes; --skip-scale-matrix to omit); writes machine-
                readable BENCH_cluster.json (--out <file>, default
                ./BENCH_cluster.json) and exits non-zero if
                --min-speedup <f> / --max-blocked-ratio <f> gates fail

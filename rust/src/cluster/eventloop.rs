@@ -1,0 +1,881 @@
+//! Readiness-polled event-loop transport ([`Transport::Event`]).
+//!
+//! The threaded TCP backend spends one blocking pump thread per link —
+//! `n` trainers × (`n` servers + hub) links means O(n²) parked threads,
+//! which caps the cluster at dozens of roles.  This backend replaces all
+//! of them with **one** I/O thread:
+//!
+//! * every logical link a trainer owns (one per feature server, one for
+//!   the allreduce hub) is *multiplexed* over a single physical
+//!   connection, tagged per frame with a `u32` channel id
+//!   ([`MuxAssembler`] is the framing codec);
+//! * sockets are nonblocking; the loop sweeps them for readiness
+//!   (`WouldBlock` = not ready — the zero-dependency stand-in for
+//!   `epoll`), reassembling partial frames per connection and routing
+//!   complete frames to the owning endpoint's inbox;
+//! * each connection has a write-side [`WriteQueue`] with a byte cap:
+//!   senders enqueue whole tagged frames and *block* once the cap is
+//!   exceeded (backpressure), while the loop drains queues into
+//!   syscall-sized coalesced writes — many small `FetchReq`/`FetchResp`
+//!   frames leave in one `write` call.
+//!
+//! The protocol layer is unchanged: endpoints still speak
+//! [`FrameSender`]/[`FrameReceiver`], servers and the hub still consume
+//! [`NetMsg`] inboxes, and every [`crate::metrics::WireStats`] counter
+//! stays a pure function of config + seed (`wire_parity` holds bit-exact
+//! against the channel and threaded-TCP backends).
+//!
+//! Lifecycle is close-driven, like the other backends: a logical link's
+//! [`FrameSender::close`] enqueues an 8-byte *close marker*
+//! (`[channel][len=0]`) behind everything already queued; the receiving
+//! side drops that channel's route (disconnecting the endpoint's inbox
+//! clone).  Once every channel on a connection is closed and flushed the
+//! loop half-closes the socket, and it exits when all connections are
+//! drained in both directions.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::Result;
+
+use super::prefetch::PrefetchMsg;
+use super::transport::{
+    ChannelReceiver, FrameReceiver, FrameSender, LinkStatsHandle, NetMsg,
+};
+use super::wire::MAX_FRAME_BYTES;
+
+/// Default per-connection write-queue capacity before senders block.
+pub const WRITE_QUEUE_CAP: usize = 1 << 20;
+
+/// Coalescing bound: the loop packs at most this many queued bytes into
+/// one `write` syscall.
+const WRITE_BATCH_BYTES: usize = 256 * 1024;
+
+/// Consecutive idle sweeps before the loop parks on its waker instead of
+/// yielding (keeps hot-path latency competitive with blocking threads
+/// while not burning a core when the cluster is computing).
+const IDLE_SWEEPS_BEFORE_PARK: u32 = 64;
+
+// ---------------------------------------------------------------------------
+// mux framing
+
+/// One decoded event from a multiplexed byte stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MuxEvent {
+    /// A whole standard frame (length prefix + body, ready for
+    /// [`super::wire::Frame::decode`]) on logical channel `.0`.
+    Frame(u32, Vec<u8>),
+    /// Channel `.0` was half-closed by the peer (no more frames follow on
+    /// that channel).
+    Close(u32),
+}
+
+/// Incremental reassembly of the multiplexed stream format:
+///
+/// ```text
+/// [u32 channel][u32 body_len][u8 kind][payload]   — a tagged frame
+/// [u32 channel][u32 0]                            — a channel-close marker
+/// ```
+///
+/// i.e. a 4-byte channel id in front of every standard wire frame, with a
+/// zero body length (invalid for real frames) reserved as the close
+/// marker.  Bytes go in at whatever granularity readiness delivers them —
+/// a frame may need many wakeups to complete — whole events come out.
+/// Pure (no I/O), so splitting behavior is property-testable.
+#[derive(Default)]
+pub struct MuxAssembler {
+    buf: Vec<u8>,
+}
+
+/// Tag `frame` (a standard encoded frame) with `channel` for the wire.
+pub fn encode_tagged(channel: u32, frame: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + frame.len());
+    out.extend_from_slice(&channel.to_le_bytes());
+    out.extend_from_slice(frame);
+    out
+}
+
+/// The 8-byte close marker for `channel`.
+pub fn close_marker(channel: u32) -> [u8; 8] {
+    let mut out = [0u8; 8];
+    out[..4].copy_from_slice(&channel.to_le_bytes());
+    out
+}
+
+impl MuxAssembler {
+    pub fn new() -> MuxAssembler {
+        MuxAssembler::default()
+    }
+
+    /// Feed raw stream bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet returned as an event.  Non-zero at EOF
+    /// means the stream died mid-frame.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Extract the next complete event.  `Ok(None)` = need more bytes.
+    /// Errors on an oversized body length — the stream is unrecoverable
+    /// past that point, never silently resynced.
+    pub fn next_event(&mut self) -> Result<Option<MuxEvent>> {
+        if self.buf.len() < 8 {
+            return Ok(None);
+        }
+        let channel = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]);
+        let body_len =
+            u32::from_le_bytes([self.buf[4], self.buf[5], self.buf[6], self.buf[7]]) as usize;
+        if body_len == 0 {
+            self.consume(8);
+            return Ok(Some(MuxEvent::Close(channel)));
+        }
+        crate::ensure!(
+            body_len <= MAX_FRAME_BYTES,
+            "eventloop: frame body {body_len} on channel {channel} exceeds cap"
+        );
+        let total = 4 + 4 + body_len;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let frame = self.buf[4..total].to_vec();
+        self.consume(total);
+        Ok(Some(MuxEvent::Frame(channel, frame)))
+    }
+
+    fn consume(&mut self, n: usize) {
+        let rest = self.buf.split_off(n);
+        self.buf = rest;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// waker + write queue
+
+/// Wakes the parked loop thread after an enqueue.  The atomic flag
+/// deduplicates wakes so a burst of sends posts at most one token.
+#[derive(Clone)]
+pub(crate) struct Waker {
+    tx: Sender<()>,
+    flagged: Arc<AtomicBool>,
+}
+
+impl Waker {
+    fn wake(&self) {
+        if !self.flagged.swap(true, Ordering::AcqRel) {
+            let _ = self.tx.send(());
+        }
+    }
+}
+
+struct QueueInner {
+    /// Whole tagged frames (or close markers) awaiting the loop.
+    chunks: Vec<Vec<u8>>,
+    queued_bytes: usize,
+    /// Close markers enqueued so far (one per logical out-channel).
+    closes: usize,
+    /// Loop died or the connection errored: senders fail fast instead of
+    /// blocking on a queue nobody will ever drain.
+    wedged: bool,
+}
+
+/// Write-side queue of one physical connection, shared between the
+/// endpoint threads that enqueue tagged frames and the loop that drains
+/// them.  Enqueues block while more than `cap` bytes are queued — the
+/// backpressure half of the nonblocking-sender contract.
+pub(crate) struct WriteQueue {
+    inner: Mutex<QueueInner>,
+    can_send: Condvar,
+    cap: usize,
+    /// Logical out-channels this connection carries; the loop half-closes
+    /// the socket once this many close markers have been flushed.
+    expected_closes: usize,
+    waker: Waker,
+}
+
+impl WriteQueue {
+    fn new(cap: usize, expected_closes: usize, waker: Waker) -> Arc<WriteQueue> {
+        Arc::new(WriteQueue {
+            inner: Mutex::new(QueueInner {
+                chunks: Vec::new(),
+                queued_bytes: 0,
+                closes: 0,
+                wedged: false,
+            }),
+            can_send: Condvar::new(),
+            cap,
+            expected_closes,
+            waker,
+        })
+    }
+
+    /// Queue one chunk of tagged bytes, blocking while the queue is over
+    /// capacity.
+    fn enqueue(&self, bytes: Vec<u8>) -> Result<()> {
+        let mut q = self.inner.lock().unwrap();
+        while q.queued_bytes >= self.cap && !q.wedged {
+            q = self.can_send.wait(q).unwrap();
+        }
+        crate::ensure!(!q.wedged, "eventloop: send on a dead connection");
+        q.queued_bytes += bytes.len();
+        q.chunks.push(bytes);
+        drop(q);
+        self.waker.wake();
+        Ok(())
+    }
+
+    /// Queue a channel-close marker.  Never blocks on capacity — close
+    /// paths must always make progress — and is a no-op once wedged.
+    fn enqueue_close(&self, channel: u32) {
+        let mut q = self.inner.lock().unwrap();
+        if !q.wedged {
+            let m = close_marker(channel);
+            q.queued_bytes += m.len();
+            q.chunks.push(m.to_vec());
+            q.closes += 1;
+        }
+        drop(q);
+        self.waker.wake();
+    }
+
+    /// Loop side: take up to `max` queued bytes as one coalesced buffer
+    /// (always at least one whole chunk), releasing blocked senders.
+    fn take_batch(&self, max: usize) -> Vec<u8> {
+        let mut q = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        let mut taken = 0usize;
+        while taken < q.chunks.len() {
+            let len = q.chunks[taken].len();
+            if !out.is_empty() && out.len() + len > max {
+                break;
+            }
+            out.extend_from_slice(&q.chunks[taken]);
+            taken += 1;
+        }
+        q.chunks.drain(..taken);
+        q.queued_bytes -= out.len();
+        drop(q);
+        if !out.is_empty() {
+            self.can_send.notify_all();
+        }
+        out
+    }
+
+    /// Every out-channel closed and nothing left to drain?
+    fn fully_closed(&self) -> bool {
+        let q = self.inner.lock().unwrap();
+        q.closes >= self.expected_closes && q.chunks.is_empty()
+    }
+
+    /// Kill the queue: senders unblock and error from now on.
+    fn wedge(&self) {
+        self.inner.lock().unwrap().wedged = true;
+        self.can_send.notify_all();
+    }
+
+    #[cfg(test)]
+    fn queued_bytes(&self) -> usize {
+        self.inner.lock().unwrap().queued_bytes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sender endpoint
+
+/// [`FrameSender`] for one logical channel of an event-loop connection:
+/// tags each frame with the channel id and enqueues it (blocking only on
+/// queue backpressure — delivery continues asynchronously in the loop).
+pub struct EventFrameSender {
+    queue: Arc<WriteQueue>,
+    channel: u32,
+    /// Trainer-owned directions count `frames_sent` here; reply
+    /// directions count nothing (the demux on the receiving side counts
+    /// `frames_recv`, mirroring the TCP receive path).
+    stats: Option<LinkStatsHandle>,
+    closed: bool,
+}
+
+impl EventFrameSender {
+    fn new(queue: Arc<WriteQueue>, channel: u32, stats: Option<LinkStatsHandle>) -> Self {
+        EventFrameSender { queue, channel, stats, closed: false }
+    }
+}
+
+impl FrameSender for EventFrameSender {
+    fn send_frame(&mut self, frame: &[u8]) -> Result<()> {
+        crate::ensure!(!self.closed, "eventloop: send on closed channel {}", self.channel);
+        self.queue.enqueue(encode_tagged(self.channel, frame))?;
+        if let Some(s) = &self.stats {
+            s.count_sent(frame.len());
+        }
+        Ok(())
+    }
+
+    /// Pack the whole batch into a single queue chunk: the loop writes it
+    /// with one syscall (up to the coalescing bound).
+    fn send_frames(&mut self, frames: &[Vec<u8>]) -> Result<()> {
+        crate::ensure!(!self.closed, "eventloop: send on closed channel {}", self.channel);
+        if frames.is_empty() {
+            return Ok(());
+        }
+        let total: usize = frames.iter().map(|f| 4 + f.len()).sum();
+        let mut buf = Vec::with_capacity(total);
+        for f in frames {
+            buf.extend_from_slice(&self.channel.to_le_bytes());
+            buf.extend_from_slice(f);
+        }
+        self.queue.enqueue(buf)?;
+        if let Some(s) = &self.stats {
+            for f in frames {
+                s.count_sent(f.len());
+            }
+        }
+        Ok(())
+    }
+
+    fn close(&mut self) {
+        if !self.closed {
+            self.closed = true;
+            self.queue.enqueue_close(self.channel);
+        }
+    }
+}
+
+impl Drop for EventFrameSender {
+    fn drop(&mut self) {
+        // A dropped sender (e.g. the hub loop returning) still owes the
+        // peer its end-of-stream marker.
+        self.close();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the loop
+
+/// Inbound route for one logical channel of a connection: delivery into
+/// the owning endpoint's inbox, plus the trainer link cell to count
+/// received frames on (trainer-side routes only).
+struct Route {
+    deliver: Box<dyn FnMut(Vec<u8>) -> bool + Send>,
+    stats: Option<LinkStatsHandle>,
+}
+
+/// One registered nonblocking connection (the loop owns both directions).
+struct Conn {
+    stream: TcpStream,
+    mux: MuxAssembler,
+    wq: Arc<WriteQueue>,
+    /// Partially-written coalesced batch ([`WriteQueue::take_batch`]
+    /// output that hit `WouldBlock` mid-write).
+    pending: Vec<u8>,
+    pending_off: usize,
+    routes: Vec<Option<Route>>,
+    write_shut: bool,
+    read_eof: bool,
+    label: String,
+}
+
+impl Conn {
+    fn done(&self) -> bool {
+        self.write_shut && self.read_eof
+    }
+
+    /// Flush queued writes (nonblocking).  Returns whether bytes moved.
+    fn sweep_write(&mut self) -> Result<bool> {
+        if self.write_shut {
+            return Ok(false);
+        }
+        let mut progress = false;
+        loop {
+            if self.pending_off == self.pending.len() {
+                self.pending = self.wq.take_batch(WRITE_BATCH_BYTES);
+                self.pending_off = 0;
+                if self.pending.is_empty() {
+                    break;
+                }
+            }
+            match self.stream.write(&self.pending[self.pending_off..]) {
+                Ok(0) => crate::bail!("eventloop: {}: write returned 0", self.label),
+                Ok(k) => {
+                    self.pending_off += k;
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(progress),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => crate::bail!("eventloop: {}: write failed: {e}", self.label),
+            }
+        }
+        // Everything queued so far is on the wire; if every logical
+        // channel has closed, the connection itself can half-close.
+        if self.wq.fully_closed() {
+            let _ = self.stream.shutdown(Shutdown::Write);
+            self.write_shut = true;
+        }
+        Ok(progress)
+    }
+
+    /// Read available bytes and route complete events.  Returns whether
+    /// bytes moved.
+    fn sweep_read(&mut self) -> Result<bool> {
+        if self.read_eof {
+            return Ok(false);
+        }
+        let mut chunk = [0u8; 64 * 1024];
+        let mut progress = false;
+        // Bounded reads per sweep so one firehose connection cannot starve
+        // the others' writes.
+        for _ in 0..4 {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    crate::ensure!(
+                        self.mux.pending() == 0,
+                        "eventloop: {}: EOF mid-frame ({} bytes pending)",
+                        self.label,
+                        self.mux.pending()
+                    );
+                    self.read_eof = true;
+                    // EOF is the backstop teardown: any route the peer did
+                    // not explicitly close drops here.
+                    for r in self.routes.iter_mut() {
+                        *r = None;
+                    }
+                    return Ok(true);
+                }
+                Ok(k) => {
+                    progress = true;
+                    self.mux.push(&chunk[..k]);
+                    while let Some(ev) = self.mux.next_event()? {
+                        self.route(ev);
+                    }
+                    if k < chunk.len() {
+                        return Ok(progress);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(progress),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => crate::bail!("eventloop: {}: read failed: {e}", self.label),
+            }
+        }
+        Ok(progress)
+    }
+
+    fn route(&mut self, ev: MuxEvent) {
+        match ev {
+            MuxEvent::Frame(c, frame) => {
+                let Some(slot) = self.routes.get_mut(c as usize) else {
+                    eprintln!("{}: frame on unknown channel {c}", self.label);
+                    return;
+                };
+                let Some(r) = slot else {
+                    eprintln!("{}: frame on closed channel {c}", self.label);
+                    return;
+                };
+                if let Some(s) = &r.stats {
+                    s.count_recv(frame.len());
+                }
+                if !(r.deliver)(frame) {
+                    // Inbox hung up: stop delivering on this channel.
+                    *slot = None;
+                }
+            }
+            MuxEvent::Close(c) => {
+                if let Some(slot) = self.routes.get_mut(c as usize) {
+                    // Dropping the route drops the inbox clone — the
+                    // endpoint sees the disconnect once every clone is
+                    // gone, exactly like the channel backend.
+                    *slot = None;
+                }
+            }
+        }
+    }
+
+    fn fail(&mut self, err: &crate::error::RudderError) {
+        eprintln!("{}: connection failed: {err}", self.label);
+        self.wq.wedge();
+        for r in self.routes.iter_mut() {
+            *r = None;
+        }
+        let _ = self.stream.shutdown(Shutdown::Both);
+        self.write_shut = true;
+        self.read_eof = true;
+    }
+}
+
+/// The loop body: sweep every connection for read/write readiness until
+/// all are drained and closed in both directions.  Adaptive idling: spin
+/// with `yield_now` while traffic flows, park on the waker once idle.
+fn event_loop(mut conns: Vec<Conn>, cmd_rx: Receiver<()>, flagged: Arc<AtomicBool>) {
+    let mut idle_sweeps = 0u32;
+    loop {
+        flagged.store(false, Ordering::Release);
+        while cmd_rx.try_recv().is_ok() {}
+        let mut progress = false;
+        let mut all_done = true;
+        for conn in conns.iter_mut() {
+            if conn.done() {
+                continue;
+            }
+            match conn.sweep_write() {
+                Ok(p) => progress |= p,
+                Err(e) => conn.fail(&e),
+            }
+            match conn.sweep_read() {
+                Ok(p) => progress |= p,
+                Err(e) => conn.fail(&e),
+            }
+            all_done &= conn.done();
+        }
+        if all_done {
+            break;
+        }
+        if progress {
+            idle_sweeps = 0;
+            continue;
+        }
+        idle_sweeps += 1;
+        if idle_sweeps < IDLE_SWEEPS_BEFORE_PARK {
+            std::thread::yield_now();
+        } else {
+            // Park until a sender wakes us; the timeout is a safety net
+            // (all traffic originates from our own enqueues, which wake).
+            let _ = cmd_rx.recv_timeout(Duration::from_millis(2));
+        }
+    }
+    for conn in &conns {
+        conn.wq.wedge();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cluster wiring
+
+/// A trainer's endpoint set over the event transport — the multiplexed
+/// equivalent of [`super::transport::TrainerDial`].
+pub(crate) struct EventTrainerEnd {
+    /// Request senders, one per feature server, in channel (= partition)
+    /// order.
+    pub request_links: Vec<Box<dyn FrameSender>>,
+    pub hub_tx: Box<dyn FrameSender>,
+    pub hub_rx: Box<dyn FrameReceiver>,
+    /// Link cells: server channels in partition order, then the hub
+    /// channel.
+    pub links: Vec<LinkStatsHandle>,
+}
+
+/// Everything [`super::run`] needs to run a cluster over the event
+/// transport: per-trainer endpoints, pre-registered reply routes for the
+/// servers and the hub, and the single I/O thread's handle.
+pub(crate) struct EventCluster {
+    pub trainers: Vec<EventTrainerEnd>,
+    /// `server_prereg[p]` = reply senders for feature server `p`, one per
+    /// trainer.
+    pub server_prereg: Vec<Vec<(u32, Box<dyn FrameSender>)>>,
+    pub hub_prereg: Vec<(u32, Box<dyn FrameSender>)>,
+    pub loop_handle: JoinHandle<()>,
+}
+
+/// Build the full event-loop topology for `n` trainers: one loopback
+/// "switch" listener, one physical connection per trainer carrying `n+1`
+/// logical channels (channel `p` → server `p`, channel `n` → hub), and
+/// one loop thread owning both ends of every connection.
+pub(crate) fn wire_event_cluster(
+    n: usize,
+    server_txs: &[Sender<NetMsg>],
+    hub_tx: &Sender<NetMsg>,
+    pf_txs: &[Sender<PrefetchMsg>],
+) -> Result<EventCluster> {
+    crate::ensure!(server_txs.len() == n && pf_txs.len() == n, "eventloop: wiring arity");
+    let (cmd_tx, cmd_rx) = mpsc::channel::<()>();
+    let flagged = Arc::new(AtomicBool::new(false));
+    let waker = Waker { tx: cmd_tx, flagged: flagged.clone() };
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+
+    let hub_channel = n as u32;
+    let mut conns: Vec<Conn> = Vec::with_capacity(2 * n);
+    let mut trainers: Vec<EventTrainerEnd> = Vec::with_capacity(n);
+    let mut server_prereg: Vec<Vec<(u32, Box<dyn FrameSender>)>> =
+        (0..n).map(|_| Vec::with_capacity(n)).collect();
+    let mut hub_prereg: Vec<(u32, Box<dyn FrameSender>)> = Vec::with_capacity(n);
+
+    for t in 0..n {
+        // Loopback accept order is FIFO, so connect-then-accept pairs the
+        // two ends of the same connection deterministically.
+        let dial = TcpStream::connect(addr)?;
+        let (accept, _) = listener.accept()?;
+        for s in [&dial, &accept] {
+            s.set_nodelay(true)?;
+            s.set_nonblocking(true)?;
+        }
+
+        let links: Vec<LinkStatsHandle> = (0..n)
+            .map(|p| LinkStatsHandle::on_channel(format!("server:{p}"), p as u32))
+            .chain([LinkStatsHandle::on_channel("hub", hub_channel)])
+            .collect();
+        let (hub_reply_tx, hub_reply_rx) = mpsc::channel::<Vec<u8>>();
+
+        // Trainer-side (dial) demux: responses into the prefetcher inbox,
+        // reduced gradients into the hub reply channel.
+        let dial_wq = WriteQueue::new(WRITE_QUEUE_CAP, n + 1, waker.clone());
+        let dial_routes: Vec<Option<Route>> = (0..n)
+            .map(|p| {
+                let tx = pf_txs[t].clone();
+                Some(Route {
+                    deliver: Box::new(move |b| tx.send(PrefetchMsg::Wire(b)).is_ok()),
+                    stats: Some(links[p].clone()),
+                })
+            })
+            .chain([Some(Route {
+                deliver: Box::new(move |b| hub_reply_tx.send(b).is_ok()),
+                stats: Some(links[n].clone()),
+            })])
+            .collect();
+        conns.push(Conn {
+            stream: dial,
+            mux: MuxAssembler::new(),
+            wq: dial_wq.clone(),
+            pending: Vec::new(),
+            pending_off: 0,
+            routes: dial_routes,
+            write_shut: false,
+            read_eof: false,
+            label: format!("event-dial-t{t}"),
+        });
+
+        // Switch-side (accept) demux: requests into the owning server's
+        // inbox, gradient contributions into the hub's.
+        let accept_wq = WriteQueue::new(WRITE_QUEUE_CAP, n + 1, waker.clone());
+        let accept_routes: Vec<Option<Route>> = (0..n)
+            .map(|p| {
+                let tx = server_txs[p].clone();
+                Some(Route {
+                    deliver: Box::new(move |b| tx.send(NetMsg::Frame(b)).is_ok()),
+                    stats: None,
+                })
+            })
+            .chain([{
+                let tx = hub_tx.clone();
+                Some(Route {
+                    deliver: Box::new(move |b| tx.send(NetMsg::Frame(b)).is_ok()),
+                    stats: None,
+                })
+            }])
+            .collect();
+        conns.push(Conn {
+            stream: accept,
+            mux: MuxAssembler::new(),
+            wq: accept_wq.clone(),
+            pending: Vec::new(),
+            pending_off: 0,
+            routes: accept_routes,
+            write_shut: false,
+            read_eof: false,
+            label: format!("event-switch-t{t}"),
+        });
+
+        // Reply senders ride the switch-side queue, tagged per channel.
+        for (p, prereg) in server_prereg.iter_mut().enumerate() {
+            prereg.push((
+                t as u32,
+                Box::new(EventFrameSender::new(accept_wq.clone(), p as u32, None))
+                    as Box<dyn FrameSender>,
+            ));
+        }
+        hub_prereg.push((
+            t as u32,
+            Box::new(EventFrameSender::new(accept_wq.clone(), hub_channel, None)),
+        ));
+
+        let request_links: Vec<Box<dyn FrameSender>> = (0..n)
+            .map(|p| {
+                Box::new(EventFrameSender::new(
+                    dial_wq.clone(),
+                    p as u32,
+                    Some(links[p].clone()),
+                )) as Box<dyn FrameSender>
+            })
+            .collect();
+        trainers.push(EventTrainerEnd {
+            request_links,
+            hub_tx: Box::new(EventFrameSender::new(
+                dial_wq.clone(),
+                hub_channel,
+                Some(links[n].clone()),
+            )),
+            hub_rx: Box::new(ChannelReceiver::new(hub_reply_rx)),
+            links,
+        });
+    }
+
+    let loop_handle = std::thread::Builder::new()
+        .name("rudder-eventloop".into())
+        .spawn(move || event_loop(conns, cmd_rx, flagged))
+        .expect("spawn event loop thread");
+
+    Ok(EventCluster { trainers, server_prereg, hub_prereg, loop_handle })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::wire::{Frame, ROLE_TRAINER};
+
+    #[test]
+    fn mux_reassembles_interleaved_channels_byte_by_byte() {
+        // A frame split across many "readiness wakeups" (here: one byte
+        // per push) must come out whole, channels and markers intact.
+        let a = Frame::FetchReq { req_id: 1, from: 0, nodes: vec![7, 8, 9] }.encode();
+        let b = Frame::Hello { role: ROLE_TRAINER, id: 2 }.encode();
+        let mut stream = encode_tagged(3, &a);
+        stream.extend_from_slice(&close_marker(3));
+        stream.extend_from_slice(&encode_tagged(0, &b));
+        stream.extend_from_slice(&close_marker(0));
+        let mut mux = MuxAssembler::new();
+        let mut out = Vec::new();
+        for &byte in &stream {
+            mux.push(&[byte]);
+            while let Some(ev) = mux.next_event().unwrap() {
+                out.push(ev);
+            }
+        }
+        assert_eq!(
+            out,
+            vec![
+                MuxEvent::Frame(3, a),
+                MuxEvent::Close(3),
+                MuxEvent::Frame(0, b),
+                MuxEvent::Close(0),
+            ]
+        );
+        assert_eq!(mux.pending(), 0);
+    }
+
+    #[test]
+    fn mux_rejects_oversized_body() {
+        let mut mux = MuxAssembler::new();
+        mux.push(&encode_tagged(1, &u32::MAX.to_le_bytes()));
+        assert!(mux.next_event().is_err());
+    }
+
+    #[test]
+    fn write_queue_backpressure_blocks_until_drained() {
+        let (tx, _rx) = mpsc::channel();
+        let waker = Waker { tx, flagged: Arc::new(AtomicBool::new(false)) };
+        // Cap of 64 bytes: the second large frame must block the sender
+        // until the loop side drains the queue.
+        let wq = WriteQueue::new(64, 1, waker);
+        let mut sender = EventFrameSender::new(wq.clone(), 0, None);
+        let frame = Frame::FetchReq { req_id: 1, from: 0, nodes: (0..32).collect() }.encode();
+        sender.send_frame(&frame).unwrap(); // fills past the cap
+        assert!(wq.queued_bytes() > 64);
+        let (done_tx, done_rx) = mpsc::channel();
+        let f2 = frame.clone();
+        let blocked = std::thread::spawn(move || {
+            sender.send_frame(&f2).unwrap(); // blocks on backpressure
+            done_tx.send(()).unwrap();
+            sender.close();
+        });
+        assert!(
+            done_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "second send must block while the queue is over capacity"
+        );
+        let batch = wq.take_batch(usize::MAX);
+        assert_eq!(batch.len(), 4 + frame.len(), "first tagged frame drained");
+        done_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("drain must unblock the sender");
+        blocked.join().unwrap();
+        // Second frame + close marker are now queued; after draining them
+        // the queue reports fully closed.
+        assert!(!wq.fully_closed());
+        let rest = wq.take_batch(usize::MAX);
+        assert_eq!(rest.len(), 4 + frame.len() + 8);
+        assert!(wq.fully_closed());
+    }
+
+    #[test]
+    fn wedged_queue_fails_senders_fast() {
+        let (tx, _rx) = mpsc::channel();
+        let waker = Waker { tx, flagged: Arc::new(AtomicBool::new(false)) };
+        let wq = WriteQueue::new(16, 1, waker);
+        let mut sender = EventFrameSender::new(wq.clone(), 0, None);
+        let frame = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
+        sender.send_frame(&frame).unwrap();
+        wq.wedge();
+        let err = sender.send_frame(&frame).unwrap_err();
+        assert!(err.to_string().contains("dead connection"), "{err}");
+    }
+
+    #[test]
+    fn event_cluster_roundtrip_with_counters() {
+        // n=1 micro-cluster with hand-held inboxes: request up through the
+        // switch, reply back down through the demux, then close-driven
+        // teardown all the way to loop exit.
+        let (server_tx, server_rx) = mpsc::channel::<NetMsg>();
+        let (hub_tx, hub_rx) = mpsc::channel::<NetMsg>();
+        let (pf_tx, pf_rx) = mpsc::channel::<PrefetchMsg>();
+        let mut ec = wire_event_cluster(1, &[server_tx], &hub_tx, &[pf_tx]).unwrap();
+        drop(hub_tx);
+
+        let req = Frame::FetchReq { req_id: 7, from: 0, nodes: vec![1, 2, 3] }.encode();
+        let mut end = ec.trainers.pop().unwrap();
+        end.request_links[0].send_frame(&req).unwrap();
+        let got = match server_rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            NetMsg::Frame(b) => b,
+            NetMsg::Register(..) => panic!("unexpected register"),
+        };
+        assert_eq!(got, req);
+
+        let resp =
+            Frame::FetchResp { req_id: 7, feat_dim: 1, nodes: vec![1], feats: vec![0.5] }.encode();
+        let (_, mut reply) = ec.server_prereg.remove(0).remove(0);
+        reply.send_frame(&resp).unwrap();
+        match pf_rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            PrefetchMsg::Wire(b) => assert_eq!(b, resp),
+            _ => panic!("expected wire frame"),
+        }
+
+        let grad = Frame::Allreduce { part: 0, round: 0, vclock: 1.0, grads: vec![1.0] }.encode();
+        end.hub_tx.send_frame(&grad).unwrap();
+        match hub_rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            NetMsg::Frame(b) => assert_eq!(b, grad),
+            NetMsg::Register(..) => panic!("unexpected register"),
+        }
+        let reduced = grad.clone();
+        let (_, mut hub_reply) = ec.hub_prereg.remove(0);
+        hub_reply.send_frame(&reduced).unwrap();
+        assert_eq!(end.hub_rx.recv_frame().unwrap().unwrap(), reduced);
+
+        // Counters: trainer link cells saw one frame each way per link.
+        let server_link = end.links[0].snapshot();
+        assert_eq!((server_link.frames_sent, server_link.bytes_sent), (1, req.len() as u64));
+        assert_eq!((server_link.frames_recv, server_link.bytes_recv), (1, resp.len() as u64));
+        assert_eq!(server_link.channel, 0);
+        let hub_link = end.links[1].snapshot();
+        assert_eq!(hub_link.frames_recv, 1);
+        assert_eq!(hub_link.channel, 1);
+
+        // Close everything; the loop must drain and exit on its own.
+        for l in end.request_links.iter_mut() {
+            l.close();
+        }
+        end.hub_tx.close();
+        reply.close();
+        hub_reply.close();
+        drop(end);
+        drop(reply);
+        drop(hub_reply);
+        ec.loop_handle.join().unwrap();
+        // Close markers propagated: the server/pf inboxes are disconnected.
+        assert!(server_rx.recv_timeout(Duration::from_millis(200)).is_err());
+        assert!(pf_rx.recv_timeout(Duration::from_millis(200)).is_err());
+    }
+}

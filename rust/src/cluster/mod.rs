@@ -25,7 +25,8 @@
 //!   | transport | endpoints              | bytes path                         |
 //!   |-----------|------------------------|------------------------------------|
 //!   | `channel` | threads, one process   | in-process `mpsc`, whole frames    |
-//!   | `tcp`     | threads *or processes* | loopback/remote sockets, reassembled from arbitrary stream segments |
+//!   | `tcp`     | threads *or processes* | loopback/remote sockets, one blocking pump thread per link, reassembled from arbitrary stream segments |
+//!   | `event`   | threads, one process   | nonblocking loopback sockets behind **one** readiness-polled I/O thread ([`eventloop`]); all of a trainer's logical links multiplexed over a single connection |
 //!
 //!   Wire-level counters ([`crate::metrics::WireStats`], including
 //!   per-link [`crate::metrics::LinkStats`]) come from this layer.  The
@@ -49,6 +50,20 @@
 //!                   ▼
 //!               allreduce hub (barrier: max vclock + summed grads)
 //! ```
+//!
+//! Under `--transport event` the per-link pipes and pump threads collapse
+//! into a channel-id-multiplexed stream: trainer `t` holds **one**
+//! physical connection whose logical channel `p` carries the
+//! trainer↔server-`p` link (`p < n`) and channel `n` carries the hub
+//! link.  Each frame travels as `[u32 channel][frame]`; a zero-length
+//! marker half-closes one channel.  A single event-loop thread sweeps
+//! every connection for readiness (nonblocking reads through a
+//! per-connection assembler, queued writes coalesced into syscall-sized
+//! batches with a byte-capped backpressure queue) and routes inbound
+//! frames to the owning endpoint's inbox.  Senders see the explicit
+//! nonblocking contract of [`transport::FrameSender`]: `send_frame`
+//! enqueues (blocking only on backpressure), `send_frames` batches, and
+//! `close` flushes everything queued before the end-of-stream marker.
 //!
 //! `rudder cluster --transport tcp` runs each role as a separate OS
 //! process via `--role trainer|server|hub --listen/--connect`
@@ -74,6 +89,7 @@
 //!   above keeps holding; `rudder bench` gates CI on this mode's
 //!   prefetch-vs-baseline ratios (`BENCH_cluster.json`).
 
+pub mod eventloop;
 pub mod ipc;
 pub mod multiproc;
 pub mod prefetch;
@@ -83,6 +99,7 @@ pub mod trainer;
 pub mod transport;
 pub mod wire;
 
+pub use eventloop::{MuxAssembler, MuxEvent};
 pub use multiproc::run_cluster_multiproc;
 pub use prefetch::{FeatureStore, PrefetchMsg};
 pub use run::{
@@ -91,5 +108,7 @@ pub use run::{
 };
 pub use server::{ServerStats, WireDelay};
 pub use trainer::WallStats;
-pub use transport::{FaultSpec, FrameAssembler, FrameReceiver, FrameSender, Transport};
+pub use transport::{
+    FaultSpec, FrameAssembler, FrameReceiver, FrameSender, LinkStatsHandle, Transport,
+};
 pub use wire::Frame;

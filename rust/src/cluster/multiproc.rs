@@ -16,13 +16,17 @@
 //! Listeners bind ephemeral loopback ports and announce them on stdout
 //! (`RUDDER_LISTEN <addr>`); the orchestrator collects the addresses and
 //! passes them to the trainer workers, so there is no port-picking race.
-//! Results come back over the wire: every worker dials the orchestrator's
-//! results listener (`--results <addr>`) and sends one
+//! The orchestrator's results listener doubles as a *control* link: a
+//! worker that needs the run config dials it, sends [`Frame::Hello`], and
+//! receives the resolved TOML inline as [`Frame::Config`]
+//! (`config::to_toml` — lossless, so every process derives identical
+//! graphs, partitions, and schedules from the same seeds).  Results come
+//! back over the same wire: every worker dials the listener and sends one
 //! [`Frame::Result`] carrying its binary blob ([`super::ipc`]) — `f64`s
 //! as raw bits, so the parity check against the in-process sim stays
-//! bit-exact across the process boundary, and no shared filesystem is
-//! needed for the return path (`--out <file>` remains as a
-//! manual-debugging fallback).
+//! bit-exact across the process boundary.  No shared filesystem is needed
+//! in either direction; `--run-config <file>` / `--out <file>` remain as
+//! manual-debugging fallbacks.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -48,7 +52,7 @@ use super::run::{hub_loop, ClusterConfig, ClusterResult, ComputeMode};
 use super::server::{server_loop, ServerStats, WireDelay};
 use super::trainer::{io_timeout, run_trainer, TrainerArgs, WallStats};
 use super::transport::{
-    self, FaultSpec, FrameReceiver, FrameSender, TcpFrameReceiver, TcpFrameSender,
+    self, FaultSpec, FrameReceiver, FrameSender, LinkStatsHandle, TcpFrameReceiver, TcpFrameSender,
 };
 use super::wire::{Frame, ROLE_HUB, ROLE_SERVER, ROLE_TRAINER};
 
@@ -74,7 +78,7 @@ fn deliver_result(
     if let Some(addr) = results {
         let stream = TcpStream::connect(addr.as_str())
             .map_err(|e| crate::err!("worker: connect results listener {addr}: {e}"))?;
-        let mut tx = TcpFrameSender::new(stream, transport::new_link("results"));
+        let mut tx = TcpFrameSender::new(stream, LinkStatsHandle::new("results"));
         tx.send_frame(&Frame::Result { role, id, blob }.encode())?;
         tx.close();
         return Ok(());
@@ -91,16 +95,20 @@ fn deliver_result(
 /// (all non-zero), so the marker can never collide with a real result.
 const RESULT_POISON_ROLE: u8 = 0;
 
-/// Accept worker result connections until `expect` [`Frame::Result`]s
-/// arrived; returns the collected `(role, id, blob)` triples.  Stray
-/// connections (port scanners, misdirected clients: close without data,
-/// stall into the read timeout, or send garbage) are dropped and
-/// collection continues — only the orchestrator's own poison frame
-/// ([`RESULT_POISON_ROLE`], sent when a failure path is unwinding) ends
-/// collection early.
+/// Accept worker connections on the control/results listener until
+/// `expect` [`Frame::Result`]s arrived; returns the collected
+/// `(role, id, blob)` triples.  A connection that opens with
+/// [`Frame::Hello`] is a *control* handshake: the collector replies with
+/// the resolved run config as one inline [`Frame::Config`] and moves on —
+/// config fetches never count toward `expect`.  Stray connections (port
+/// scanners, misdirected clients: close without data, stall into the read
+/// timeout, or send garbage) are dropped and collection continues — only
+/// the orchestrator's own poison frame ([`RESULT_POISON_ROLE`], sent when
+/// a failure path is unwinding) ends collection early.
 fn spawn_result_collector(
     listener: TcpListener,
     expect: usize,
+    config_toml: Arc<Vec<u8>>,
 ) -> JoinHandle<Vec<(u8, u32, Vec<u8>)>> {
     std::thread::Builder::new()
         .name("rudder-results".into())
@@ -114,13 +122,24 @@ fn spawn_result_collector(
                         break;
                     }
                 };
-                let mut rx = TcpFrameReceiver::new(stream, transport::new_link("worker"));
+                let reply = stream.try_clone();
+                let mut rx = TcpFrameReceiver::new(stream, LinkStatsHandle::new("worker"));
                 match rx.recv_frame_timeout(Duration::from_secs(60)) {
                     Ok(Some(bytes)) => match Frame::decode(&bytes) {
                         Ok((Frame::Result { role: RESULT_POISON_ROLE, .. }, _)) => break,
                         Ok((Frame::Result { role, id, blob }, _)) => {
                             results.push((role, id, blob));
                         }
+                        Ok((Frame::Hello { .. }, _)) => match reply {
+                            Ok(stream) => {
+                                let mut tx =
+                                    TcpFrameSender::new(stream, LinkStatsHandle::new("config"));
+                                let frame = Frame::Config { toml: (*config_toml).clone() };
+                                let _ = tx.send_frame(&frame.encode());
+                                tx.close();
+                            }
+                            Err(e) => eprintln!("results listener: clone for config reply: {e}"),
+                        },
                         Ok(_) | Err(_) => eprintln!("results listener: dropping garbage frame"),
                     },
                     Ok(None) => eprintln!("results listener: dropping dataless connection"),
@@ -132,16 +151,55 @@ fn spawn_result_collector(
         .expect("spawn results collector")
 }
 
+/// Resolve a worker's run config: from `--run-config <file>` when given
+/// (manual-debugging fallback), otherwise by dialing the orchestrator's
+/// control/results listener and exchanging [`Frame::Hello`] for the
+/// inline TOML ([`Frame::Config`]) — no shared filesystem needed.
+fn fetch_config(
+    role: u8,
+    id: u32,
+    config: &Option<PathBuf>,
+    control: &Option<String>,
+) -> Result<crate::config::RunConfig> {
+    if let Some(path) = config {
+        return crate::config::load(path);
+    }
+    let Some(addr) = control else {
+        crate::bail!("worker: need --run-config <file> or --results <addr> for the run config")
+    };
+    let stream = TcpStream::connect(addr.as_str())
+        .map_err(|e| crate::err!("worker: connect control listener {addr}: {e}"))?;
+    let read_half = stream.try_clone()?;
+    let mut tx = TcpFrameSender::new(stream, LinkStatsHandle::new("control"));
+    tx.send_frame(&Frame::Hello { role, id }.encode())?;
+    tx.close();
+    let mut rx = TcpFrameReceiver::new(read_half, LinkStatsHandle::new("control"));
+    let bytes = rx
+        .recv_frame_timeout(Duration::from_secs(60))?
+        .ok_or_else(|| crate::err!("worker: control listener closed before sending the config"))?;
+    match Frame::decode(&bytes)? {
+        (Frame::Config { toml }, _) => {
+            let s = String::from_utf8(toml)
+                .map_err(|_| crate::err!("worker: config frame is not valid UTF-8"))?;
+            crate::config::from_toml_str(&s)
+        }
+        _ => crate::bail!("worker: control listener sent an unexpected frame"),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // worker entry points (one per --role)
 
 pub struct ServerWorkerOpts {
     pub part: usize,
     pub listen: String,
-    pub config: PathBuf,
+    /// File fallback (`--run-config`) for manual debugging; workers
+    /// normally fetch the config inline over the control link.
+    pub config: Option<PathBuf>,
     pub time_scale: f64,
     pub fault: Option<FaultSpec>,
-    /// Results-listener address (`--results`): the normal return path.
+    /// Control/results-listener address (`--results`): the normal config
+    /// fetch + result return path.
     pub results: Option<String>,
     /// File fallback (`--out`) for manual debugging.
     pub out: Option<PathBuf>,
@@ -157,7 +215,7 @@ pub fn run_server_worker(o: &ServerWorkerOpts) -> Result<()> {
     // sit in the accept backlog until serving starts.
     let listener = TcpListener::bind(o.listen.as_str())?;
     announce_listen(&listener)?;
-    let cfg = crate::config::load(&o.config)?;
+    let cfg = fetch_config(ROLE_SERVER, o.part as u32, &o.config, &o.results)?;
     let (ds, part) = sim::build_cluster(&cfg)?;
     let part = Arc::new(part);
     crate::ensure!(o.part < part.num_parts, "server worker: part {} out of range", o.part);
@@ -209,7 +267,9 @@ pub fn run_hub_worker(o: &HubWorkerOpts) -> Result<()> {
 
 pub struct TrainerWorkerOpts {
     pub part: usize,
-    pub config: PathBuf,
+    /// File fallback (`--run-config`); normally fetched over the control
+    /// link at Hello time.
+    pub config: Option<PathBuf>,
     pub servers: Vec<String>,
     pub hub: String,
     pub compute: ComputeMode,
@@ -221,7 +281,7 @@ pub struct TrainerWorkerOpts {
 /// server and the hub, run the trainer + prefetcher threads, and write
 /// the result blob.
 pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
-    let cfg = crate::config::load(&o.config)?;
+    let cfg = fetch_config(ROLE_TRAINER, o.part as u32, &o.config, &o.results)?;
     let (ds, part) = sim::build_cluster(&cfg)?;
     crate::ensure!(
         o.servers.len() == cfg.num_trainers,
@@ -271,7 +331,7 @@ pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
     for p in dial.pumps {
         let _ = p.join();
     }
-    wire.links = dial.links.iter().map(transport::snapshot).collect();
+    wire.links = dial.links.iter().map(LinkStatsHandle::snapshot).collect();
     let blob = ipc::encode_trainer_result(&out.metrics, &out.wall, &wire, &out.measured);
     deliver_result(ROLE_TRAINER, o.part as u32, blob, &o.results, &o.out)
 }
@@ -331,9 +391,10 @@ fn kill_all(children: &mut [(String, Child)]) {
 /// Run the cluster as separate OS processes (TCP transport on loopback)
 /// and aggregate the workers' results into the same [`ClusterResult`]
 /// shape the in-process runtime produces, so `--parity` and the reporting
-/// path are transport-agnostic.  Results return over the orchestrator's
-/// results listener ([`Frame::Result`]); only the worker *config* still
-/// travels as a file.
+/// path are transport-agnostic.  The run config ships inline over the
+/// control link ([`Frame::Config`] in reply to a worker's Hello) and
+/// results return over the same listener ([`Frame::Result`]) — no shared
+/// filesystem in either direction.
 pub fn run_cluster_multiproc(
     ds: Arc<Dataset>,
     part: Arc<Partition>,
@@ -348,23 +409,21 @@ pub fn run_cluster_multiproc(
         part.num_parts
     );
     let exe = std::env::current_exe()?;
-    let dir = std::env::temp_dir().join(format!("rudder-cluster-{}", std::process::id()));
-    std::fs::create_dir_all(&dir)?;
-    let cfg_path = dir.join("run-config.toml");
-    std::fs::write(&cfg_path, crate::config::to_toml(cfg)?)?;
-    let cfg_arg = cfg_path.to_string_lossy().to_string();
+    let config_toml = Arc::new(crate::config::to_toml(cfg)?.into_bytes());
     let ts_arg = format!("{}", ccfg.compute.time_scale());
 
-    // Results return path: every worker dials this listener and sends one
-    // Result frame (2n + 1 results expected).
+    // Control + results path: every worker that needs the run config
+    // dials this listener and trades a Hello for the inline TOML; every
+    // worker dials it again to send one Result frame (2n + 1 results
+    // expected).
     let results_listener = TcpListener::bind("127.0.0.1:0")?;
     let results_addr = results_listener.local_addr()?.to_string();
-    let collector = spawn_result_collector(results_listener, 2 * n + 1);
+    let collector = spawn_result_collector(results_listener, 2 * n + 1, config_toml);
     // Poison the collector (explicit abort frame) so its accept loop ends
     // on failure paths instead of leaking a blocked thread.
     let poison = |collector: JoinHandle<Vec<(u8, u32, Vec<u8>)>>| {
         if let Ok(stream) = TcpStream::connect(results_addr.as_str()) {
-            let mut tx = TcpFrameSender::new(stream, transport::new_link("poison"));
+            let mut tx = TcpFrameSender::new(stream, LinkStatsHandle::new("poison"));
             let frame = Frame::Result { role: RESULT_POISON_ROLE, id: 0, blob: Vec::new() };
             let _ = tx.send_frame(&frame.encode());
             tx.close();
@@ -403,7 +462,6 @@ pub fn run_cluster_multiproc(
         Ok(c) => c,
         Err(e) => {
             poison(collector);
-            let _ = std::fs::remove_dir_all(&dir);
             return Err(e);
         }
     };
@@ -413,7 +471,6 @@ pub fn run_cluster_multiproc(
             let _ = hub_child.kill();
             let _ = hub_child.wait();
             poison(collector);
-            let _ = std::fs::remove_dir_all(&dir);
             return Err(e);
         }
     };
@@ -428,8 +485,6 @@ pub fn run_cluster_multiproc(
             p.to_string(),
             "--listen".into(),
             "127.0.0.1:0".into(),
-            "--run-config".into(),
-            cfg_arg.clone(),
             "--time-scale".into(),
             ts_arg.clone(),
             "--results".into(),
@@ -444,7 +499,6 @@ pub fn run_cluster_multiproc(
             Err(e) => {
                 kill_all(&mut listeners);
                 poison(collector);
-                let _ = std::fs::remove_dir_all(&dir);
                 return Err(e);
             }
         };
@@ -455,7 +509,6 @@ pub fn run_cluster_multiproc(
                 let _ = child.wait();
                 kill_all(&mut listeners);
                 poison(collector);
-                let _ = std::fs::remove_dir_all(&dir);
                 return Err(e);
             }
         }
@@ -471,8 +524,6 @@ pub fn run_cluster_multiproc(
             "trainer".into(),
             "--part".into(),
             t.to_string(),
-            "--run-config".into(),
-            cfg_arg.clone(),
             "--servers".into(),
             server_addrs.join(","),
             "--hub".into(),
@@ -495,7 +546,6 @@ pub fn run_cluster_multiproc(
                 kill_all(&mut trainers);
                 kill_all(&mut listeners);
                 poison(collector);
-                let _ = std::fs::remove_dir_all(&dir);
                 return Err(e);
             }
         }
@@ -512,12 +562,10 @@ pub fn run_cluster_multiproc(
     if let Some(e) = failure {
         kill_all(&mut listeners);
         poison(collector);
-        let _ = std::fs::remove_dir_all(&dir);
         return Err(e);
     }
     // All trainers succeeded, so every listener has seen its EOFs; a
-    // non-zero exit here still must not leak the remaining children or
-    // the config directory.
+    // non-zero exit here still must not leak the remaining children.
     for (what, child) in listeners.drain(..) {
         if let Err(e) = wait_worker(child, &what) {
             failure.get_or_insert(e);
@@ -525,11 +573,9 @@ pub fn run_cluster_multiproc(
     }
     if let Some(e) = failure {
         poison(collector);
-        let _ = std::fs::remove_dir_all(&dir);
         return Err(e);
     }
     let wall_total = wall_start.elapsed().as_secs_f64();
-    let _ = std::fs::remove_dir_all(&dir);
 
     // Every worker exited cleanly, so every result frame is already sent
     // (workers deliver before exiting); the collector drains them.

@@ -20,7 +20,7 @@
 //! keeps counters bit-identical even under the fault-injection shim's
 //! duplicated/reordered responses.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -202,6 +202,7 @@ fn handle_wire(
                 Frame::Allreduce { .. } => "Allreduce",
                 Frame::Hello { .. } => "Hello",
                 Frame::Result { .. } => "Result",
+                Frame::Config { .. } => "Config",
             };
             eprintln!("prefetcher {trainer_id}: unexpected {kind} frame");
         }
@@ -232,44 +233,74 @@ pub(crate) fn spawn_prefetcher(
             let mut stats = WireStats::default();
             let mut req_id: u64 = 0;
             let mut outstanding: FastSet<u64> = FastSet::default();
-            // Reused per-owner coalescing buckets.
+            // Reused per-owner coalescing buckets (nodes within one fetch
+            // order) and per-owner encoded-frame batches (across a burst).
             let mut groups: Vec<Vec<u32>> = vec![Vec::new(); servers.len()];
-            for msg in rx.iter() {
-                match msg {
-                    PrefetchMsg::Fetch(nodes) => {
-                        let to_req = store.begin_fetch(&nodes, &mut stats);
-                        if to_req.is_empty() {
-                            continue;
-                        }
-                        for &n in &to_req {
-                            groups[part.owner_of(n)].push(n);
-                        }
-                        for (owner, group) in groups.iter_mut().enumerate() {
-                            if group.is_empty() {
-                                continue;
-                            }
-                            let batch = std::mem::take(group);
-                            stats.nodes_requested += batch.len() as u64;
-                            let bytes = Frame::FetchReq {
-                                req_id,
-                                from: trainer_id as u32,
-                                nodes: batch,
-                            }
-                            .encode();
-                            outstanding.insert(req_id);
-                            req_id += 1;
-                            stats.req_frames += 1;
-                            stats.req_bytes += bytes.len() as u64;
-                            // A dead server surfaces as a wait timeout in
-                            // the trainer; nothing useful to do here.
-                            let _ = servers[owner].send_frame(&bytes);
-                        }
+            let mut batches: Vec<Vec<Vec<u8>>> = vec![Vec::new(); servers.len()];
+            let mut burst: Vec<PrefetchMsg> = Vec::new();
+            let mut shutdown = false;
+            while !shutdown {
+                // Burst-drain the inbox: take everything immediately
+                // available (bounded) and flush each owner's accumulated
+                // requests as ONE coalesced `send_frames` batch — the hot
+                // fetch path's many small `FetchReq` frames leave in
+                // syscall-sized writes.  Frame contents, req-id order, and
+                // every counter are driven by message order alone, so the
+                // wire stays bit-identical to the unbatched path.
+                match rx.recv() {
+                    Ok(m) => burst.push(m),
+                    Err(_) => break,
+                }
+                while burst.len() < 64 {
+                    match rx.try_recv() {
+                        Ok(m) => burst.push(m),
+                        Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
                     }
-                    PrefetchMsg::Wire(bytes) => {
-                        handle_wire(trainer_id, &store, &bytes, &mut stats, &mut outstanding);
+                }
+                for msg in burst.drain(..) {
+                    match msg {
+                        PrefetchMsg::Fetch(nodes) => {
+                            let to_req = store.begin_fetch(&nodes, &mut stats);
+                            for &n in &to_req {
+                                groups[part.owner_of(n)].push(n);
+                            }
+                            for (owner, group) in groups.iter_mut().enumerate() {
+                                if group.is_empty() {
+                                    continue;
+                                }
+                                let batch = std::mem::take(group);
+                                stats.nodes_requested += batch.len() as u64;
+                                let bytes = Frame::FetchReq {
+                                    req_id,
+                                    from: trainer_id as u32,
+                                    nodes: batch,
+                                }
+                                .encode();
+                                outstanding.insert(req_id);
+                                req_id += 1;
+                                stats.req_frames += 1;
+                                stats.req_bytes += bytes.len() as u64;
+                                batches[owner].push(bytes);
+                            }
+                        }
+                        PrefetchMsg::Wire(bytes) => {
+                            handle_wire(trainer_id, &store, &bytes, &mut stats, &mut outstanding);
+                        }
+                        PrefetchMsg::Evict(nodes) => store.evict(&nodes),
+                        // The trainer sends Shutdown last, so only `Wire`
+                        // can trail it within a burst — keep processing so
+                        // no response is dropped before the drain phase.
+                        PrefetchMsg::Shutdown => shutdown = true,
                     }
-                    PrefetchMsg::Evict(nodes) => store.evict(&nodes),
-                    PrefetchMsg::Shutdown => break,
+                }
+                for (owner, batch) in batches.iter_mut().enumerate() {
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    let frames = std::mem::take(batch);
+                    // A dead server surfaces as a wait timeout in the
+                    // trainer; nothing useful to do here.
+                    let _ = servers[owner].send_frames(&frames);
                 }
             }
             // Half-close the request links (servers finish our pending

@@ -68,15 +68,19 @@ pub enum ComputeMode {
     Measured,
 }
 
-impl ComputeMode {
-    pub fn parse(s: &str) -> Result<ComputeMode> {
+impl std::str::FromStr for ComputeMode {
+    type Err = crate::error::RudderError;
+
+    fn from_str(s: &str) -> Result<ComputeMode> {
         match s {
             "emulated" => Ok(ComputeMode::Emulated(0.0)),
             "measured" => Ok(ComputeMode::Measured),
-            _ => crate::bail!("unknown compute mode '{s}' (emulated|measured)"),
+            _ => crate::bail!("unknown compute mode '{s}' (valid: emulated | measured)"),
         }
     }
+}
 
+impl ComputeMode {
     pub fn name(&self) -> &'static str {
         match self {
             ComputeMode::Emulated(_) => "emulated",
@@ -230,6 +234,7 @@ pub fn run_cluster_on(
     let (wirings, backstage) = match ccfg.transport {
         Transport::Channel => wire_channel(n, &ds, &part, ccfg, delay, allreduce_sleep),
         Transport::Tcp => wire_tcp(n, &ds, &part, ccfg, delay, allreduce_sleep)?,
+        Transport::Event => wire_event(n, &ds, &part, ccfg, delay, allreduce_sleep)?,
     };
 
     let wall_start = Instant::now();
@@ -276,7 +281,7 @@ pub fn run_cluster_on(
     let mut wire: Vec<WireStats> = Vec::with_capacity(n);
     for (h, links) in pf_handles.into_iter().zip(&link_sets) {
         let mut w = h.join().map_err(|_| crate::err!("prefetcher thread panicked"))?;
-        w.links = links.iter().map(transport::snapshot).collect();
+        w.links = links.iter().map(LinkStatsHandle::snapshot).collect();
         wire.push(w);
     }
     let mut servers: Vec<ServerStats> = Vec::with_capacity(n);
@@ -330,9 +335,10 @@ fn wire_channel(
     // Per-trainer link cells: server links in partition order, then hub.
     let link_sets: Vec<Vec<LinkStatsHandle>> = (0..n)
         .map(|_| {
-            let mut v: Vec<LinkStatsHandle> =
-                (0..n).map(|p| transport::new_link(format!("server:{p}"))).collect();
-            v.push(transport::new_link("hub"));
+            let mut v: Vec<LinkStatsHandle> = (0..n)
+                .map(|p| LinkStatsHandle::on_channel(format!("server:{p}"), p as u32))
+                .collect();
+            v.push(LinkStatsHandle::on_channel("hub", n as u32));
             v
         })
         .collect();
@@ -480,6 +486,80 @@ fn wire_tcp(
         });
     }
     Ok((wirings, Backstage { server_handles, hub_handle, aux_handles }))
+}
+
+/// Wire everything over the readiness-polled event-loop transport
+/// ([`super::eventloop`]): real nonblocking loopback sockets, but all of a
+/// trainer's logical links multiplexed over one physical connection and
+/// one I/O thread total — no per-link pump threads.
+fn wire_event(
+    n: usize,
+    ds: &Arc<Dataset>,
+    part: &Arc<Partition>,
+    ccfg: &ClusterConfig,
+    delay: WireDelay,
+    allreduce_sleep: f64,
+) -> Result<(Vec<TrainerWiring>, Backstage)> {
+    let drain = io_timeout(ccfg.compute.time_scale());
+    // Endpoint inboxes, exactly as in the channel backend.
+    let mut server_txs: Vec<Sender<NetMsg>> = Vec::with_capacity(n);
+    let mut server_rxs: Vec<Receiver<NetMsg>> = Vec::with_capacity(n);
+    let mut pf_txs: Vec<Sender<PrefetchMsg>> = Vec::with_capacity(n);
+    let mut pf_rxs: Vec<Receiver<PrefetchMsg>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel();
+        server_txs.push(tx);
+        server_rxs.push(rx);
+        let (tx, rx) = mpsc::channel();
+        pf_txs.push(tx);
+        pf_rxs.push(rx);
+    }
+    let (hub_inbox_tx, hub_inbox_rx) = mpsc::channel::<NetMsg>();
+
+    let ec = super::eventloop::wire_event_cluster(n, &server_txs, &hub_inbox_tx, &pf_txs)?;
+    // Master inbox clones drop here; close-driven shutdown then hinges on
+    // the per-connection route clones the loop releases on close markers.
+    drop(server_txs);
+    drop(hub_inbox_tx);
+
+    let mut server_prereg = ec.server_prereg;
+    let server_handles: Vec<JoinHandle<ServerStats>> = server_rxs
+        .into_iter()
+        .enumerate()
+        .map(|(p, rx)| {
+            spawn_server(
+                p,
+                ds.feature_seed,
+                ds.spec.feat_dim,
+                part.clone(),
+                rx,
+                std::mem::take(&mut server_prereg[p]),
+                delay,
+                ccfg.fault,
+            )
+        })
+        .collect();
+    let hub_handle = spawn_hub(n, hub_inbox_rx, ec.hub_prereg, allreduce_sleep);
+
+    let mut wirings = Vec::with_capacity(n);
+    for (t, (end, pf_rx)) in ec.trainers.into_iter().zip(pf_rxs).enumerate() {
+        let store = Arc::new(FeatureStore::new());
+        let pf_handle =
+            spawn_prefetcher(t, store.clone(), pf_rx, end.request_links, part.clone(), drain);
+        wirings.push(TrainerWiring {
+            prefetch_tx: pf_txs[t].clone(),
+            hub_tx: end.hub_tx,
+            hub_rx: end.hub_rx,
+            store,
+            pf_handle,
+            links: end.links,
+        });
+    }
+    drop(pf_txs);
+    Ok((
+        wirings,
+        Backstage { server_handles, hub_handle, aux_handles: vec![ec.loop_handle] },
+    ))
 }
 
 /// The DDP allreduce hub loop: collects one `Allreduce` frame per trainer

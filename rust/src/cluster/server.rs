@@ -245,7 +245,7 @@ mod tests {
     use std::sync::mpsc;
 
     use crate::cluster::prefetch::PrefetchMsg;
-    use crate::cluster::transport::{new_link, ChannelSender};
+    use crate::cluster::transport::{ChannelSender, LinkStatsHandle};
 
     #[test]
     fn serves_owned_nodes_with_correct_features() {
@@ -265,7 +265,7 @@ mod tests {
         let (rep_tx, rep_rx) = mpsc::channel::<PrefetchMsg>();
         let delay = WireDelay::from_net(&Network::new(NetParams::default(), 2), 0.0);
         let owned: Vec<u32> = part.local_nodes[0][..3].to_vec();
-        let link = new_link("server:0");
+        let link = LinkStatsHandle::new("server:0");
         let prereg: Vec<(u32, Box<dyn FrameSender>)> = vec![(
             1,
             Box::new(ChannelSender::delivering(rep_tx, PrefetchMsg::Wire, link.clone())),
@@ -294,7 +294,7 @@ mod tests {
         assert_eq!(stats.nodes_served, 3);
         assert!(stats.bytes_out > stats.bytes_in);
         // Reply delivery counted as received on the trainer-side link.
-        let snap = crate::cluster::transport::snapshot(&link);
+        let snap = link.snapshot();
         assert_eq!(snap.frames_recv, 1);
     }
 
@@ -347,7 +347,7 @@ mod tests {
         let (rep_tx, rep_rx) = mpsc::channel::<PrefetchMsg>();
         let delay = WireDelay::from_net(&Network::new(NetParams::default(), 1), 0.0);
         let fault = FaultSpec { seed: 5, dup: 1.0, delay: 0.0, chop: 0 };
-        let link = new_link("server:0");
+        let link = LinkStatsHandle::new("server:0");
         let prereg: Vec<(u32, Box<dyn FrameSender>)> = vec![(
             0,
             Box::new(ChannelSender::delivering(rep_tx, PrefetchMsg::Wire, link)),

@@ -44,43 +44,112 @@ pub enum Transport {
     /// In-process `mpsc` channels (single-process runtime).
     #[default]
     Channel,
-    /// TCP sockets behind the same wire codec (multi-process capable).
+    /// TCP sockets behind the same wire codec (multi-process capable),
+    /// one blocking pump thread per link.
     Tcp,
+    /// Nonblocking sockets behind one readiness-polled event loop
+    /// ([`super::eventloop`]): every logical link a trainer owns is
+    /// multiplexed over a single physical connection via a channel-id
+    /// field, and queued frames coalesce into syscall-sized writes.
+    Event,
 }
 
-impl Transport {
-    pub fn parse(s: &str) -> Result<Transport> {
+impl std::str::FromStr for Transport {
+    type Err = crate::error::RudderError;
+
+    fn from_str(s: &str) -> Result<Transport> {
         match s {
             "channel" | "chan" => Ok(Transport::Channel),
             "tcp" | "socket" => Ok(Transport::Tcp),
-            _ => crate::bail!("unknown transport '{s}' (channel|tcp)"),
+            "event" | "eventloop" => Ok(Transport::Event),
+            _ => crate::bail!("unknown transport '{s}' (valid: channel | tcp | event)"),
         }
     }
+}
 
+impl Transport {
     pub fn name(&self) -> &'static str {
         match self {
             Transport::Channel => "channel",
             Transport::Tcp => "tcp",
+            Transport::Event => "event",
         }
     }
 }
 
-/// Shared per-link counter cell (trainer-side view of one link).
-pub type LinkStatsHandle = Arc<Mutex<LinkStats>>;
+/// Shared per-link counter cell (trainer-side view of one link): a cheap
+/// clonable handle whose snapshots land in
+/// [`crate::metrics::WireStats::links`].
+#[derive(Clone, Default)]
+pub struct LinkStatsHandle(Arc<Mutex<LinkStats>>);
 
-/// Fresh counter cell for a link to `peer`.
-pub fn new_link(peer: impl Into<String>) -> LinkStatsHandle {
-    Arc::new(Mutex::new(LinkStats { peer: peer.into(), ..LinkStats::default() }))
-}
+impl LinkStatsHandle {
+    /// Fresh counter cell for a link to `peer` (channel id 0 — the
+    /// per-connection backends overwrite it with the link index).
+    pub fn new(peer: impl Into<String>) -> LinkStatsHandle {
+        LinkStatsHandle::on_channel(peer, 0)
+    }
 
-/// Copy of the current counters.
-pub fn snapshot(h: &LinkStatsHandle) -> LinkStats {
-    h.lock().unwrap().clone()
+    /// Fresh counter cell for a link to `peer` riding logical channel
+    /// `channel` (the mux tag under the event-loop transport, the link
+    /// index elsewhere).
+    pub fn on_channel(peer: impl Into<String>, channel: u32) -> LinkStatsHandle {
+        LinkStatsHandle(Arc::new(Mutex::new(LinkStats {
+            peer: peer.into(),
+            channel,
+            ..LinkStats::default()
+        })))
+    }
+
+    /// Copy of the current counters.
+    pub fn snapshot(&self) -> LinkStats {
+        self.lock().clone()
+    }
+
+    /// Count `bytes` sent as one frame.
+    pub fn count_sent(&self, bytes: usize) {
+        let mut s = self.lock();
+        s.frames_sent += 1;
+        s.bytes_sent += bytes as u64;
+    }
+
+    /// Count `bytes` received as one frame.
+    pub fn count_recv(&self, bytes: usize) {
+        let mut s = self.lock();
+        s.frames_recv += 1;
+        s.bytes_recv += bytes as u64;
+    }
+
+    pub(crate) fn lock(&self) -> std::sync::MutexGuard<'_, LinkStats> {
+        self.0.lock().unwrap()
+    }
 }
 
 /// Sending half of a frame link.  One call = one whole encoded frame.
+///
+/// Contract: `send_frame`/`send_frames` may block on transport
+/// backpressure (a full kernel buffer, a full event-loop write queue) but
+/// must never drop or reorder frames; per-link FIFO order is what the
+/// protocol layer's req-id bookkeeping assumes.  Implementations built on
+/// *nonblocking* I/O (the event-loop backend) enqueue the frame and
+/// return once it is queued — delivery continues asynchronously, and
+/// [`FrameSender::close`] guarantees everything already queued is flushed
+/// before the end-of-stream marker.
 pub trait FrameSender: Send {
     fn send_frame(&mut self, frame: &[u8]) -> Result<()>;
+
+    /// Send a batch of frames, preserving order — the coalescing entry
+    /// point of the contract.  Stream backends pack the batch into one
+    /// syscall-sized write; the default just loops [`Self::send_frame`]
+    /// (which is also what the fault shim needs: one fault draw per
+    /// frame, batched or not).
+    fn send_frames(&mut self, frames: &[Vec<u8>]) -> Result<()> {
+        for f in frames {
+            self.send_frame(f)?;
+        }
+        Ok(())
+    }
+
     /// Release any frame the link is allowed to be holding back (only the
     /// fault shim holds frames).  Endpoints call this when going idle so
     /// an injected delay reorders frames but can never stall a peer that
@@ -92,6 +161,11 @@ pub trait FrameSender: Send {
 }
 
 /// Receiving half of a frame link.  Yields whole frames in send order.
+///
+/// Contract: receivers are *pull*-style and blocking; readiness-driven
+/// backends (the event loop) bridge to this interface by demultiplexing
+/// inbound frames onto a per-link inbox that the receiver blocks on, so
+/// the protocol layer never sees partial frames or `WouldBlock`.
 pub trait FrameReceiver: Send {
     /// Blocking next frame; `Ok(None)` once the peer closed cleanly at a
     /// frame boundary; `Err` on mid-frame EOF or transport failure.
@@ -148,13 +222,10 @@ impl<T: Send + 'static> FrameSender for ChannelSender<T> {
         };
         tx.send((self.wrap)(frame.to_vec()))
             .map_err(|_| crate::err!("transport: peer inbox hung up"))?;
-        let mut s = self.stats.lock().unwrap();
         if self.count_as_recv {
-            s.frames_recv += 1;
-            s.bytes_recv += frame.len() as u64;
+            self.stats.count_recv(frame.len());
         } else {
-            s.frames_sent += 1;
-            s.bytes_sent += frame.len() as u64;
+            self.stats.count_sent(frame.len());
         }
         Ok(())
     }
@@ -284,9 +355,32 @@ impl FrameSender for TcpFrameSender {
                 stream.flush()?;
             }
         }
-        let mut s = self.stats.lock().unwrap();
-        s.frames_sent += 1;
-        s.bytes_sent += frame.len() as u64;
+        self.stats.count_sent(frame.len());
+        Ok(())
+    }
+
+    /// Coalesce the batch into one buffer and one `write_all` (one
+    /// syscall for typical batch sizes).  Chopped mode keeps the per-frame
+    /// path so fault chopping stays byte-identical batched or not.
+    fn send_frames(&mut self, frames: &[Vec<u8>]) -> Result<()> {
+        if self.chop != 0 || frames.len() < 2 {
+            for f in frames {
+                self.send_frame(f)?;
+            }
+            return Ok(());
+        }
+        let Some(stream) = &mut self.stream else {
+            crate::bail!("transport: send on closed tcp link");
+        };
+        let total: usize = frames.iter().map(Vec::len).sum();
+        let mut buf = Vec::with_capacity(total);
+        for f in frames {
+            buf.extend_from_slice(f);
+        }
+        stream.write_all(&buf)?;
+        for f in frames {
+            self.stats.count_sent(f.len());
+        }
         Ok(())
     }
 
@@ -313,9 +407,7 @@ impl TcpFrameReceiver {
     }
 
     fn count(&self, frame: &[u8]) {
-        let mut s = self.stats.lock().unwrap();
-        s.frames_recv += 1;
-        s.bytes_recv += frame.len() as u64;
+        self.stats.count_recv(frame.len());
     }
 
     fn at_eof(&self) -> Result<Option<Vec<u8>>> {
@@ -383,7 +475,7 @@ pub fn connect_hello(addr: &str, trainer_id: u32, stats: &LinkStatsHandle) -> Re
                 let _ = stream.set_nodelay(true);
                 let hello = Frame::Hello { role: ROLE_TRAINER, id: trainer_id }.encode();
                 (&stream).write_all(&hello)?;
-                let mut s = stats.lock().unwrap();
+                let mut s = stats.lock();
                 s.frames_sent += 1;
                 s.bytes_sent += hello.len() as u64;
                 s.reconnects += attempt;
@@ -426,7 +518,7 @@ pub(crate) fn serve_listener(
                     }
                 };
                 let _ = stream.set_nodelay(true);
-                let stats = new_link(format!("{endpoint}:peer"));
+                let stats = LinkStatsHandle::new(format!("{endpoint}:peer"));
                 let read_half = match stream.try_clone() {
                     Ok(s) => s,
                     Err(e) => {
@@ -451,7 +543,7 @@ pub(crate) fn serve_listener(
                         continue;
                     }
                 };
-                stats.lock().unwrap().peer = format!("trainer:{id}");
+                stats.lock().peer = format!("trainer:{id}");
                 let sender = TcpFrameSender::new(stream, stats).with_chop(chop);
                 if inbox.send(NetMsg::Register(id, Box::new(sender))).is_err() {
                     break;
@@ -528,7 +620,7 @@ pub(crate) fn dial_trainer_links(
     let mut request_links: Vec<Box<dyn FrameSender>> = Vec::with_capacity(servers.len());
     let mut pumps = Vec::with_capacity(servers.len());
     for (p, addr) in servers.iter().enumerate() {
-        let link = new_link(format!("server:{p}"));
+        let link = LinkStatsHandle::on_channel(format!("server:{p}"), p as u32);
         let stream = connect_hello(addr, trainer_id, &link)?;
         let read_half = TcpFrameReceiver::new(stream.try_clone()?, link.clone());
         pumps.push(pump_frames(
@@ -540,7 +632,7 @@ pub(crate) fn dial_trainer_links(
         request_links.push(Box::new(TcpFrameSender::new(stream, link.clone())));
         links.push(link);
     }
-    let hub_link = new_link("hub");
+    let hub_link = LinkStatsHandle::on_channel("hub", servers.len() as u32);
     let hub_stream = connect_hello(hub, trainer_id, &hub_link)?;
     let hub_rx: Box<dyn FrameReceiver> =
         Box::new(TcpFrameReceiver::new(hub_stream.try_clone()?, hub_link.clone()));
@@ -570,28 +662,32 @@ pub struct FaultSpec {
     pub chop: usize,
 }
 
-impl FaultSpec {
-    /// Parse `"seed[:dup[:delay[:chop]]]"`, e.g. `"7:0.25:0.25:9"`.
-    /// Seed and chop are exact integers (a lossy f64 detour would let a
-    /// worker's fault schedule silently diverge from the orchestrator's).
-    pub fn parse(s: &str) -> Result<FaultSpec> {
+/// Parse `"seed[:dup[:delay[:chop]]]"`, e.g. `"7:0.25:0.25:9"`.
+/// Seed and chop are exact integers (a lossy f64 detour would let a
+/// worker's fault schedule silently diverge from the orchestrator's).
+impl std::str::FromStr for FaultSpec {
+    type Err = crate::error::RudderError;
+
+    fn from_str(s: &str) -> Result<FaultSpec> {
+        const SHAPE: &str = "valid shape: seed[:dup[:delay[:chop]]], e.g. 7:0.25:0.25:9";
         let p: Vec<&str> = s.split(':').collect();
+        crate::ensure!(p.len() <= 4, "fault spec '{s}' has too many fields ({SHAPE})");
         let rate = |i: usize, default: f64| -> Result<f64> {
             match p.get(i) {
                 None => Ok(default),
                 Some(v) => v
                     .parse::<f64>()
-                    .map_err(|_| crate::err!("bad --fault rate '{v}' in '{s}'")),
+                    .map_err(|_| crate::err!("bad fault rate '{v}' in '{s}' ({SHAPE})")),
             }
         };
         let seed = p[0]
             .parse::<u64>()
-            .map_err(|_| crate::err!("bad --fault seed '{}' in '{s}'", p[0]))?;
+            .map_err(|_| crate::err!("bad fault seed '{}' in '{s}' ({SHAPE})", p[0]))?;
         let chop = match p.get(3) {
             None => 0,
             Some(v) => v
                 .parse::<usize>()
-                .map_err(|_| crate::err!("bad --fault chop '{v}' in '{s}'"))?,
+                .map_err(|_| crate::err!("bad fault chop '{v}' in '{s}' ({SHAPE})"))?,
         };
         Ok(FaultSpec { seed, dup: rate(1, 0.25)?, delay: rate(2, 0.25)?, chop })
     }
@@ -725,7 +821,7 @@ mod tests {
     #[test]
     fn channel_link_roundtrip_with_counters() {
         let (tx, rx) = mpsc::channel::<Vec<u8>>();
-        let link = new_link("peer");
+        let link = LinkStatsHandle::new("peer");
         let mut s = ChannelSender::new(tx, |v| v, link.clone());
         let frame = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
         s.send_frame(&frame).unwrap();
@@ -734,8 +830,53 @@ mod tests {
         s.close();
         assert!(s.send_frame(&frame).is_err());
         assert_eq!(r.recv_frame().unwrap(), None, "closed link yields None");
-        let snap = snapshot(&link);
+        let snap = link.snapshot();
         assert_eq!((snap.frames_sent, snap.bytes_sent), (1, frame.len() as u64));
+    }
+
+    #[test]
+    fn transport_and_fault_specs_parse_via_fromstr() {
+        assert_eq!("channel".parse::<Transport>().unwrap(), Transport::Channel);
+        assert_eq!("tcp".parse::<Transport>().unwrap(), Transport::Tcp);
+        assert_eq!("eventloop".parse::<Transport>().unwrap(), Transport::Event);
+        let err = "carrier-pigeon".parse::<Transport>().unwrap_err().to_string();
+        assert!(err.contains("channel | tcp | event"), "error enumerates values: {err}");
+        let f: FaultSpec = "7:0.5:0.25:9".parse().unwrap();
+        assert_eq!(f, FaultSpec { seed: 7, dup: 0.5, delay: 0.25, chop: 9 });
+        let f: FaultSpec = "3".parse().unwrap();
+        assert_eq!(f, FaultSpec { seed: 3, dup: 0.25, delay: 0.25, chop: 0 });
+        let err = "x".parse::<FaultSpec>().unwrap_err().to_string();
+        assert!(err.contains("seed[:dup[:delay[:chop]]]"), "error shows shape: {err}");
+        assert!("1:2:3:4:5".parse::<FaultSpec>().is_err(), "too many fields");
+    }
+
+    #[test]
+    fn tcp_send_frames_coalesces_into_one_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let frames: Vec<Vec<u8>> = (0..5u32)
+            .map(|i| Frame::FetchReq { req_id: i as u64, from: i, nodes: vec![i, i + 1] }.encode())
+            .collect();
+        let want = frames.clone();
+        let link = LinkStatsHandle::new("peer");
+        let batch_link = link.clone();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut tx = TcpFrameSender::new(stream, batch_link);
+            tx.send_frames(&frames).unwrap();
+            tx.close();
+        });
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut rx = TcpFrameReceiver::new(stream, LinkStatsHandle::new("server"));
+        let mut got = Vec::new();
+        while let Some(f) = rx.recv_frame().unwrap() {
+            got.push(f);
+        }
+        server.join().unwrap();
+        assert_eq!(got, want, "coalesced batch must reassemble frame-exact");
+        let snap = link.snapshot();
+        assert_eq!(snap.frames_sent, 5, "counters stay per-frame under coalescing");
+        assert_eq!(snap.bytes_sent, want.iter().map(|f| f.len() as u64).sum::<u64>());
     }
 
     #[test]
@@ -755,14 +896,14 @@ mod tests {
         let want = frames.clone();
         let server = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            let link = new_link("client");
+            let link = LinkStatsHandle::new("client");
             let mut tx = TcpFrameSender::new(stream, link).with_chop(3);
             for f in &frames {
                 tx.send_frame(f).unwrap();
             }
             tx.close();
         });
-        let link = new_link("server");
+        let link = LinkStatsHandle::new("server");
         let stream = TcpStream::connect(&addr).unwrap();
         let mut rx = TcpFrameReceiver::new(stream, link.clone());
         let mut got = Vec::new();
@@ -771,7 +912,7 @@ mod tests {
         }
         server.join().unwrap();
         assert_eq!(got, want, "3-byte chopped writes must reassemble exactly");
-        let snap = snapshot(&link);
+        let snap = link.snapshot();
         assert_eq!(snap.frames_recv, 2);
         assert_eq!(snap.bytes_recv, want.iter().map(|f| f.len() as u64).sum::<u64>());
     }
@@ -786,12 +927,12 @@ mod tests {
         let server = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
             hold_rx.recv().unwrap(); // send nothing until released
-            let mut tx = TcpFrameSender::new(stream, new_link("client"));
+            let mut tx = TcpFrameSender::new(stream, LinkStatsHandle::new("client"));
             tx.send_frame(&sent).unwrap();
             tx.close();
         });
         let stream = TcpStream::connect(&addr).unwrap();
-        let mut rx = TcpFrameReceiver::new(stream, new_link("server"));
+        let mut rx = TcpFrameReceiver::new(stream, LinkStatsHandle::new("server"));
         let err = rx.recv_frame_timeout(Duration::from_millis(30)).unwrap_err();
         assert!(err.to_string().contains("timed out"), "{err}");
         hold_tx.send(()).unwrap();

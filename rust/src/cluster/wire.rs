@@ -26,6 +26,7 @@ const KIND_FETCH_RESP: u8 = 2;
 const KIND_ALLREDUCE: u8 = 3;
 const KIND_HELLO: u8 = 4;
 const KIND_RESULT: u8 = 5;
+const KIND_CONFIG: u8 = 6;
 
 /// `Frame::Hello` / `Frame::Result` role tags: who is announcing itself
 /// on a fresh transport connection, or whose result a blob carries.
@@ -58,6 +59,10 @@ pub enum Frame {
     /// once on a fresh connection to the orchestrator's results listener,
     /// replacing the shared-filesystem `--out` blob files.
     Result { role: u8, id: u32, blob: Vec<u8> },
+    /// The orchestrator's fully-resolved run config as TOML bytes, served
+    /// over the control link in reply to a worker's `Hello` — so
+    /// multi-process workers need no shared filesystem for `--run-config`.
+    Config { toml: Vec<u8> },
 }
 
 impl Frame {
@@ -108,6 +113,11 @@ impl Frame {
                 put_u32(&mut body, *id);
                 put_u32(&mut body, blob.len() as u32);
                 body.extend_from_slice(blob);
+            }
+            Frame::Config { toml } => {
+                body.push(KIND_CONFIG);
+                put_u32(&mut body, toml.len() as u32);
+                body.extend_from_slice(toml);
             }
         }
         let mut out = Vec::with_capacity(4 + body.len());
@@ -170,6 +180,11 @@ impl Frame {
                 let blob = r.take(len)?.to_vec();
                 Frame::Result { role, id, blob }
             }
+            KIND_CONFIG => {
+                let len = r.u32()? as usize;
+                let toml = r.take(len)?.to_vec();
+                Frame::Config { toml }
+            }
             other => crate::bail!("wire: unknown frame kind {other}"),
         };
         crate::ensure!(
@@ -192,6 +207,7 @@ impl Frame {
                 Frame::Allreduce { grads, .. } => 4 + 8 + 8 + 4 + 4 * grads.len(),
                 Frame::Hello { .. } => 1 + 4,
                 Frame::Result { blob, .. } => 1 + 4 + 4 + blob.len(),
+                Frame::Config { toml } => 4 + toml.len(),
             }
     }
 }
@@ -291,6 +307,7 @@ mod tests {
             Frame::Allreduce { part: 0, round: 41, vclock: 1.5e3, grads: vec![0.0; 5] },
             Frame::Hello { role: ROLE_TRAINER, id: 3 },
             Frame::Result { role: ROLE_SERVER, id: 2, blob: vec![0xAB, 0, 0xCD, 255] },
+            Frame::Config { toml: b"dataset = \"products\"\n".to_vec() },
         ];
         for f in frames {
             let bytes = f.encode();

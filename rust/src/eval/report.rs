@@ -121,13 +121,14 @@ pub fn wire_table(per_trainer: &[WireStats]) -> Table {
 pub fn link_table(per_trainer: &[WireStats]) -> Table {
     let mut t = Table::new(
         "transport links per trainer",
-        &["trainer", "peer", "frames_out", "bytes_out", "frames_in", "bytes_in", "reconnects"],
+        &["trainer", "peer", "chan", "frames_out", "bytes_out", "frames_in", "bytes_in", "reconnects"],
     );
     for (i, w) in per_trainer.iter().enumerate() {
         for l in &w.links {
             t.row(vec![
                 i.to_string(),
                 l.peer.clone(),
+                l.channel.to_string(),
                 l.frames_sent.to_string(),
                 fmt_count(l.bytes_sent),
                 l.frames_recv.to_string(),

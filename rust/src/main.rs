@@ -174,19 +174,15 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
     if results.is_none() && out.is_none() {
         rudder::bail!("--results <addr> or --out <file> required with --role");
     }
-    let config = || -> rudder::error::Result<PathBuf> {
-        Ok(PathBuf::from(args.opt("run-config").ok_or_else(|| {
-            rudder::err!("--run-config <file> required with --role {role}")
-        })?))
-    };
+    // Workers normally pull the run config over the control link
+    // (`--results` address, Hello → Config); `--run-config <file>` is the
+    // manual-debugging override.
+    let config = args.opt("run-config").map(PathBuf::from);
     let part = || -> rudder::error::Result<usize> {
         args.opt_parse::<usize>("part")?
             .ok_or_else(|| rudder::err!("--part <n> required with --role {role}"))
     };
-    let fault = match args.opt("fault") {
-        Some(s) => Some(FaultSpec::parse(s)?),
-        None => None,
-    };
+    let fault = args.opt_parse::<FaultSpec>("fault")?;
     // The shim lives on the server→trainer reply links, so only server
     // workers take it; rejecting it elsewhere beats silently ignoring it.
     if role != "server" && fault.is_some() {
@@ -196,7 +192,7 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
         "server" => run_server_worker(&ServerWorkerOpts {
             part: part()?,
             listen: args.opt_or("listen", "127.0.0.1:0"),
-            config: config()?,
+            config,
             time_scale,
             fault,
             results,
@@ -213,7 +209,7 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
         }),
         "trainer" => run_trainer_worker(&TrainerWorkerOpts {
             part: part()?,
-            config: config()?,
+            config,
             servers: args
                 .opt("servers")
                 .or_else(|| args.opt("connect"))
@@ -239,7 +235,7 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
 /// into a [`ComputeMode`]: measured ignores the time scale (real compute
 /// replaces every sleep), emulated carries it.
 fn worker_compute_mode(args: &Args, time_scale: f64) -> rudder::error::Result<ComputeMode> {
-    match ComputeMode::parse(&args.opt_or("compute", "emulated"))? {
+    match args.opt_parse::<ComputeMode>("compute")?.unwrap_or(ComputeMode::Emulated(0.0)) {
         ComputeMode::Measured => Ok(ComputeMode::Measured),
         ComputeMode::Emulated(_) => Ok(ComputeMode::Emulated(time_scale)),
     }
@@ -253,11 +249,8 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
     let cfg = config_from_args(args)?;
     let time_scale = args.opt_parse::<f64>("time-scale")?.unwrap_or(0.02);
     let compute = worker_compute_mode(args, time_scale)?;
-    let transport = Transport::parse(&args.opt_or("transport", "channel"))?;
-    let fault = match args.opt("fault") {
-        Some(s) => Some(FaultSpec::parse(s)?),
-        None => None,
-    };
+    let transport = args.opt_parse::<Transport>("transport")?.unwrap_or_default();
+    let fault = args.opt_parse::<FaultSpec>("fault")?;
     let ccfg = ClusterConfig { run: cfg.clone(), compute, transport, fault };
     println!(
         "rudder cluster: {} scale={} trainers={} buffer={:.0}% epochs={} controller={} mode={:?} transport={} compute={} time-scale={}",
@@ -282,21 +275,23 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
     let ds = Arc::new(ds);
     let part = Arc::new(part);
     // Classifier controllers need offline training data, exactly as in
-    // `cmd_train` — for any in-process (channel) run and for the parity
-    // sim.  A pure TCP run computes nothing here: each trainer worker
-    // process re-derives the identical set from the seeds.
+    // `cmd_train` — for any in-process (channel/event) run and for the
+    // parity sim.  A pure TCP run computes nothing here: each trainer
+    // worker process re-derives the identical set from the seeds.
     let offline = if matches!(cfg.controller, ControllerSpec::Classifier { .. })
-        && (transport == Transport::Channel || args.flag("parity"))
+        && (transport != Transport::Tcp || args.flag("parity"))
     {
         println!("collecting offline classifier traces...");
         Some(harness::offline_training_set(Quality::Quick))
     } else {
         None
     };
-    // Channel = threads in this process; TCP = one process per role.
+    // Channel/event = threads in this process; TCP = one process per role.
     let run_variant = |c: &ClusterConfig| -> rudder::error::Result<ClusterResult> {
         match c.transport {
-            Transport::Channel => run_cluster_on(ds.clone(), part.clone(), c, offline.clone()),
+            Transport::Channel | Transport::Event => {
+                run_cluster_on(ds.clone(), part.clone(), c, offline.clone())
+            }
             Transport::Tcp => run_cluster_multiproc(ds.clone(), part.clone(), c),
         }
     };
@@ -350,9 +345,10 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
             ),
             Err(diff) => rudder::bail!("traffic parity FAILED: {diff}"),
         }
-        if transport == Transport::Tcp {
-            // The multi-process TCP run must also match the in-process
-            // channel transport frame-for-frame and byte-for-byte.
+        if transport != Transport::Channel {
+            // The multi-process TCP run / event-loop run must also match
+            // the in-process channel transport frame-for-frame and
+            // byte-for-byte.
             println!("parity: re-running on the in-process channel transport...");
             let chan = ClusterConfig { transport: Transport::Channel, ..ccfg.clone() };
             let r_chan = run_cluster_on(ds.clone(), part.clone(), &chan, offline.clone())?;
@@ -362,8 +358,12 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
                 .map_err(|d| rudder::err!("cross-transport wire parity FAILED: {d}"))?;
             println!(
                 "cross-transport parity OK: wire frame/byte counters identical \
-                 (channel threads vs {} TCP processes)",
-                cfg.num_trainers + cfg.num_trainers + 1
+                 (channel threads vs {})",
+                match transport {
+                    Transport::Tcp =>
+                        format!("{} TCP processes", cfg.num_trainers + cfg.num_trainers + 1),
+                    _ => "the event-loop transport".to_string(),
+                }
             );
         }
     }
@@ -441,14 +441,101 @@ fn check_replicas_synced(r: &ClusterResult) -> rudder::error::Result<()> {
     Ok(())
 }
 
+/// `rudder bench` scale matrix: protocol-bound cluster runs (emulated
+/// compute with no sleeps, so wall time is pure transport + protocol cost)
+/// across trainer counts × buffer sizes × the in-process stream
+/// transports (threaded `tcp` vs the readiness-polled `event` loop).
+/// Each point reports best-of-rep wall time and wire throughput; the
+/// `event_over_tcp` ratios show how the single event-loop thread scales
+/// against one-pump-thread-per-link as the link count grows.
+fn bench_scale_matrix(base_seed: u64) -> rudder::error::Result<Json> {
+    const TRAINERS: [usize; 3] = [2, 4, 8];
+    const BUFFERS: [f64; 2] = [0.15, 0.3];
+    const REPS: usize = 3;
+    let mut points: Vec<Json> = Vec::new();
+    let mut ratios: Vec<Json> = Vec::new();
+    for &n in &TRAINERS {
+        for &buf in &BUFFERS {
+            let cfg = RunConfig {
+                dataset: "ogbn-arxiv".into(),
+                scale: 0.05,
+                seed: base_seed,
+                num_trainers: n,
+                batch_size: 32,
+                fanout1: 5,
+                fanout2: 5,
+                buffer_pct: buf,
+                epochs: 1,
+                controller: ControllerSpec::parse("massivegnn:8")?,
+                ..RunConfig::default()
+            };
+            let (ds, part) = build_cluster(&cfg)?;
+            let ds = Arc::new(ds);
+            let part = Arc::new(part);
+            let mut tput = [0.0f64; 2];
+            for (i, transport) in [Transport::Tcp, Transport::Event].into_iter().enumerate() {
+                let ccfg = ClusterConfig {
+                    run: cfg.clone(),
+                    compute: ComputeMode::Emulated(0.0),
+                    transport,
+                    fault: None,
+                };
+                let mut best_wall = f64::INFINITY;
+                let mut wire_bytes = 0u64;
+                for _ in 0..REPS {
+                    let r = run_cluster_on(ds.clone(), part.clone(), &ccfg, None)?;
+                    let w = r.wire_total();
+                    wire_bytes = w.req_bytes + w.resp_bytes;
+                    best_wall = best_wall.min(r.wall_total);
+                }
+                tput[i] = if best_wall > 0.0 { wire_bytes as f64 / best_wall } else { 0.0 };
+                println!(
+                    "bench matrix: trainers={n} buffer={buf} transport={} wall={:.3}s \
+                     throughput={:.1} MB/s",
+                    transport.name(),
+                    best_wall,
+                    tput[i] / 1e6,
+                );
+                points.push(Json::obj(vec![
+                    ("trainers", Json::num(n as f64)),
+                    ("partitions", Json::num(n as f64)),
+                    ("buffer_pct", Json::num(buf)),
+                    ("transport", Json::str(transport.name())),
+                    ("wall_best_s", Json::num(best_wall)),
+                    ("wire_bytes", Json::num(wire_bytes as f64)),
+                    ("throughput_bytes_per_s", Json::num(tput[i])),
+                ]));
+            }
+            ratios.push(Json::obj(vec![
+                ("trainers", Json::num(n as f64)),
+                ("buffer_pct", Json::num(buf)),
+                (
+                    "event_over_tcp",
+                    Json::num(if tput[0] > 0.0 { tput[1] / tput[0] } else { 0.0 }),
+                ),
+            ]));
+        }
+    }
+    Ok(Json::obj(vec![
+        ("schema", Json::str("rudder-bench-scale/v1")),
+        ("compute", Json::str("emulated")),
+        ("time_scale", Json::num(0.0)),
+        ("epochs", Json::num(1.0)),
+        ("reps", Json::num(REPS as f64)),
+        ("points", Json::Arr(points)),
+        ("event_over_tcp", Json::Arr(ratios)),
+    ]))
+}
+
 /// `rudder bench` — the pinned measured-compute cluster benchmark.
 ///
 /// Runs the prefetching cluster and the no-prefetch baseline with real
 /// SageRunner compute in every trainer, then writes a schema-stable,
 /// machine-readable `BENCH_cluster.json`: wall/epoch times, fetch-blocked
-/// time, bytes on the wire, and the prefetch-vs-baseline ratios CI gates
+/// time, bytes on the wire, the prefetch-vs-baseline ratios CI gates
 /// on (`--min-speedup`, `--max-blocked-ratio`; ratios, not absolute
-/// seconds, so the gate tolerates slow shared runners).
+/// seconds, so the gate tolerates slow shared runners), and a transport
+/// scale matrix ([`bench_scale_matrix`]; `--skip-scale-matrix` to omit).
 fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
     // Pinned configuration: small enough for CI, real compute throughout.
     // Only seed/scale/epochs are overridable (local experiments); the CI
@@ -513,14 +600,20 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
             ("mean_loss", Json::num(rudder::util::stats::mean(&losses))),
         ])
     };
+    let scale_matrix = if args.flag("skip-scale-matrix") {
+        None
+    } else {
+        println!("bench: transport scale matrix (tcp vs event across trainer counts)...");
+        Some(bench_scale_matrix(cfg.seed)?)
+    };
     let speedup_wall = if on.wall_total > 0.0 { off.wall_total / on.wall_total } else { 1.0 };
     let blocked_ratio = if fetch_blocked(&off) > 0.0 {
         fetch_blocked(&on) / fetch_blocked(&off)
     } else {
         1.0
     };
-    let doc = Json::obj(vec![
-        ("schema", Json::str("rudder-bench-cluster/v1")),
+    let mut fields = vec![
+        ("schema", Json::str("rudder-bench-cluster/v2")),
         (
             "config",
             Json::obj(vec![
@@ -540,7 +633,11 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
         ("speedup_wall", Json::num(speedup_wall)),
         ("fetch_blocked_ratio", Json::num(blocked_ratio)),
         ("replicas_synced", Json::Bool(true)),
-    ]);
+    ];
+    if let Some(m) = scale_matrix {
+        fields.push(("scale_matrix", m));
+    }
+    let doc = Json::obj(fields);
     std::fs::write(&out_path, doc.to_string_pretty())?;
     println!(
         "bench: wall speedup {speedup_wall:.2}x, fetch-blocked ratio {blocked_ratio:.2} \

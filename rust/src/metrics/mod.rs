@@ -97,6 +97,12 @@ pub struct RunMetrics {
 pub struct LinkStats {
     /// Human-readable remote endpoint ("server:2", "hub").
     pub peer: String,
+    /// Logical channel id this link rides on.  For the per-connection
+    /// transports (channel, tcp) each link has its own physical pipe and
+    /// the id just mirrors the link index; the event-loop transport
+    /// multiplexes every logical link over one physical connection and
+    /// this is the channel tag each frame carries on the wire.
+    pub channel: u32,
     pub frames_sent: u64,
     pub bytes_sent: u64,
     pub frames_recv: u64,

@@ -2,8 +2,9 @@
 //! byte-identical traffic counters across invocations), traffic parity
 //! against the virtual-time sim (same config + seed ⇒ identical
 //! fetched-node / buffer-hit / payload-byte counters), cross-transport
-//! parity (channel vs loopback TCP, frame-for-frame), deterministic fault
-//! injection, and a multi-process smoke through the real binary.
+//! parity (channel vs loopback TCP vs the multiplexed event loop,
+//! frame-for-frame), deterministic fault injection, and a multi-process
+//! smoke through the real binary.
 
 use std::sync::Arc;
 
@@ -241,6 +242,81 @@ fn cross_transport_parity_llm_agent() {
 }
 
 // ---------------------------------------------------------------------------
+// cross-transport parity: the event-loop backend (one readiness-polled
+// thread, all of a trainer's links multiplexed over a single connection)
+
+#[test]
+fn cross_transport_parity_event_vs_channel_and_tcp() {
+    let cfg = quick("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);
+    let chan = run_with(&cfg, &ds, &part, Transport::Channel, None);
+    let tcp = run_with(&cfg, &ds, &part, Transport::Tcp, None);
+    let event = run_with(&cfg, &ds, &part, Transport::Event, None);
+    // The event loop matches the sim's logical counters...
+    parity_check(&sim_r, &event.experiment).unwrap();
+    // ...and both sibling transports, down to per-minibatch records and
+    // exact wire frame/byte counts.
+    assert_minibatches_identical(&chan, &event);
+    wire_parity(&chan.wire, &event.wire).unwrap();
+    wire_parity(&tcp.wire, &event.wire).unwrap();
+    let wt = event.wire_total();
+    assert!(wt.nodes_requested > 0);
+    assert_eq!(wt.bad_frames, 0, "protocol must be clean through the mux");
+    assert_eq!(wt.nodes_received, wt.nodes_requested, "every request answered and drained");
+    let served: u64 = event.servers.iter().map(|s| s.nodes_served).sum();
+    assert_eq!(served, wt.nodes_requested);
+    // All links ride one connection: per-link cells carry the mux channel
+    // ids (channel p = server p, channel n = hub), and every link moved
+    // real frames in both directions.
+    for w in &event.wire {
+        assert_eq!(w.links.len(), cfg.num_trainers + 1, "server links + hub link");
+        for (i, l) in w.links.iter().enumerate() {
+            assert_eq!(l.channel, i as u32, "link '{}' on wrong mux channel", l.peer);
+            assert!(l.frames_sent > 0 && l.frames_recv > 0, "idle link '{}'", l.peer);
+        }
+    }
+}
+
+#[test]
+fn cross_transport_parity_event_llm_agent() {
+    // The decision-cadence-sensitive case: the async LLM agent's schedule
+    // must survive frame coalescing and the mux bit-for-bit.
+    let cfg = quick("llm:qwen-1.5b");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);
+    let event = run_with(&cfg, &ds, &part, Transport::Event, None);
+    parity_check(&sim_r, &event.experiment).unwrap();
+    let chan = run_with(&cfg, &ds, &part, Transport::Channel, None);
+    assert_minibatches_identical(&chan, &event);
+    wire_parity(&chan.wire, &event.wire).unwrap();
+}
+
+#[test]
+fn fault_injection_over_event_loop_keeps_counters_bit_identical() {
+    // dup/delay faults wrap the servers' reply senders *above* the mux, so
+    // duplicated and reordered responses cross the shared connection; the
+    // req-id dedup must still keep every protocol counter bit-identical to
+    // a clean channel run.
+    let cfg = quick("massivegnn:8");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let clean = run_with(&cfg, &ds, &part, Transport::Channel, None);
+    let fault = FaultSpec { seed: 13, dup: 0.4, delay: 0.4, chop: 0 };
+    let faulted = run_with(&cfg, &ds, &part, Transport::Event, Some(fault));
+    parity_check(&clean.experiment, &faulted.experiment).unwrap();
+    assert_minibatches_identical(&clean, &faulted);
+    wire_parity(&clean.wire, &faulted.wire).unwrap();
+    assert!(faulted.wire_total().dup_frames > 0, "dup faults must fire");
+    assert_eq!(faulted.wire_total().bad_frames, 0, "dups must still parse");
+}
+
+// ---------------------------------------------------------------------------
 // deterministic fault injection
 
 #[test]
@@ -397,6 +473,25 @@ fn measured_mode_parity_over_tcp() {
     wire_parity(&chan.wire, &tcp.wire).unwrap();
     // The real allreduce is transport-independent too.
     assert_eq!(chan.measured[0].param_hash, tcp.measured[0].param_hash);
+}
+
+#[test]
+fn measured_mode_parity_over_event_loop() {
+    // The acceptance bar for the event backend: real SageRunner compute
+    // over the multiplexed connection keeps sim parity, exact wire parity
+    // against both sibling transports, and the deterministic allreduce.
+    let cfg = quick("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);
+    let chan = run_compute(&cfg, &ds, &part, ComputeMode::Measured, Transport::Channel);
+    let event = run_compute(&cfg, &ds, &part, ComputeMode::Measured, Transport::Event);
+    parity_check(&sim_r, &event.experiment).unwrap();
+    assert_minibatches_identical(&chan, &event);
+    wire_parity(&chan.wire, &event.wire).unwrap();
+    assert_eq!(chan.measured[0].param_hash, event.measured[0].param_hash);
+    assert!(event.measured.iter().all(|m| m.is_populated()));
 }
 
 // ---------------------------------------------------------------------------

@@ -5,7 +5,8 @@
 //! format, so it gets its own integration suite in the style of
 //! `tests/parsers.rs`.
 
-use rudder::cluster::{Frame, FrameAssembler};
+use rudder::cluster::eventloop::{close_marker, encode_tagged};
+use rudder::cluster::{Frame, FrameAssembler, MuxAssembler, MuxEvent};
 use rudder::util::prop::{prop_check, G};
 
 fn roundtrip(f: &Frame) -> Frame {
@@ -112,10 +113,19 @@ fn truncation_rejected_at_every_prefix_length() {
 
 #[test]
 fn unknown_kind_rejected() {
+    // Kind 6 is Config now, so the first truly-unknown kind is 7.
     let mut bytes = Frame::FetchReq { req_id: 0, from: 0, nodes: vec![] }.encode();
-    for kind in [0u8, 6, 200, 255] {
+    for kind in [0u8, 7, 200, 255] {
         bytes[4] = kind;
         assert!(Frame::decode(&bytes).is_err(), "kind {kind} accepted");
+    }
+}
+
+#[test]
+fn config_roundtrip() {
+    for toml in ["", "dataset = \"products\"\ntrainers = 8\n"] {
+        let f = Frame::Config { toml: toml.as_bytes().to_vec() };
+        assert_eq!(roundtrip(&f), f);
     }
 }
 
@@ -173,7 +183,7 @@ fn oversized_body_length_rejected() {
 
 /// Random protocol frame, size-biased by the prop framework's budget.
 fn gen_frame(g: &mut G) -> Frame {
-    match g.usize(0, 4) {
+    match g.usize(0, 5) {
         0 => Frame::FetchReq {
             req_id: g.u64(0, 1 << 20),
             from: g.u64(0, 64) as u32,
@@ -197,6 +207,7 @@ fn gen_frame(g: &mut G) -> Frame {
             id: g.u64(0, 64) as u32,
             blob: g.vec(64, |g| g.u64(0, 255) as u8),
         },
+        4 => Frame::Config { toml: g.vec(64, |g| g.u64(0, 255) as u8) },
         _ => Frame::Hello { role: 1, id: g.u64(0, 1 << 16) as u32 },
     }
 }
@@ -286,6 +297,128 @@ fn prop_truncated_streams_pend_and_resume() {
             Ok(None) => Err("complete frame still pending".into()),
             Err(e) => Err(format!("resume error: {e}")),
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// event-loop mux layer (cluster::eventloop): channel-tagged frames and
+// close markers must reassemble to the identical event sequence no matter
+// how the stream is split across readiness wakeups, and a coalesced
+// send_frames batch must be indistinguishable on the wire from per-frame
+// sends.
+
+#[test]
+fn prop_mux_events_reassemble_from_arbitrary_splits() {
+    prop_check("mux stream reassembles from arbitrary splits", 200, |g| {
+        // A mixed schedule of tagged frames and channel-close markers over
+        // a handful of logical channels, like one trainer connection under
+        // `--transport event`.
+        let mut events: Vec<MuxEvent> = Vec::new();
+        let mut stream: Vec<u8> = Vec::new();
+        for _ in 0..g.usize(1, 8) {
+            let channel = g.u64(0, 5) as u32;
+            if g.bool() {
+                stream.extend_from_slice(&close_marker(channel));
+                events.push(MuxEvent::Close(channel));
+            } else {
+                let frame = gen_frame(g).encode();
+                stream.extend_from_slice(&encode_tagged(channel, &frame));
+                events.push(MuxEvent::Frame(channel, frame));
+            }
+        }
+        let mut asm = MuxAssembler::new();
+        let mut out: Vec<MuxEvent> = Vec::new();
+        let mut pos = 0;
+        while pos < stream.len() {
+            let chunk = g.usize(1, 29).min(stream.len() - pos);
+            asm.push(&stream[pos..pos + chunk]);
+            pos += chunk;
+            while let Some(ev) = asm.next_event().map_err(|e| e.to_string())? {
+                out.push(ev);
+            }
+        }
+        if asm.pending() != 0 {
+            return Err(format!("{} bytes stuck in the mux assembler", asm.pending()));
+        }
+        if out != events {
+            return Err(format!("got {} events, sent {}", out.len(), events.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mux_partial_tag_or_body_pends() {
+    prop_check("truncated mux records pend, then resume exactly", 200, |g| {
+        let channel = g.u64(0, 1 << 16) as u32;
+        let frame = gen_frame(g).encode();
+        let bytes = encode_tagged(channel, &frame);
+        // Any strict prefix: cuts < 4 land mid-channel-tag, < 8 mid-length,
+        // larger cuts mid-body.
+        let cut = g.usize(0, bytes.len() - 1);
+        let mut asm = MuxAssembler::new();
+        asm.push(&bytes[..cut]);
+        match asm.next_event() {
+            Ok(None) => {}
+            Ok(Some(ev)) => return Err(format!("completed {ev:?} at cut {cut}/{}", bytes.len())),
+            Err(e) => return Err(format!("cut {cut}: spurious error {e}")),
+        }
+        asm.push(&bytes[cut..]);
+        match asm.next_event() {
+            Ok(Some(MuxEvent::Frame(c, f))) if c == channel && f == frame => Ok(()),
+            other => Err(format!("resumed to {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_coalesced_batches_match_per_frame_sends() {
+    use rudder::cluster::{FrameReceiver as _, FrameSender as _, LinkStatsHandle};
+    use rudder::cluster::transport::{TcpFrameReceiver, TcpFrameSender};
+    use std::net::{TcpListener, TcpStream};
+
+    prop_check("send_frames batch arrives identical to per-frame sends", 30, |g| {
+        let frames: Vec<Vec<u8>> = (0..g.usize(1, 6)).map(|_| gen_frame(g).encode()).collect();
+        let batched = g.bool();
+        let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let to_send = frames.clone();
+        let sender = std::thread::spawn(move || -> Result<rudder::metrics::LinkStats, String> {
+            let stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+            let link = LinkStatsHandle::new("batch-test");
+            let mut tx = TcpFrameSender::new(stream, link.clone());
+            if batched {
+                tx.send_frames(&to_send).map_err(|e| e.to_string())?;
+            } else {
+                for f in &to_send {
+                    tx.send_frame(f).map_err(|e| e.to_string())?;
+                }
+            }
+            tx.close();
+            Ok(link.snapshot())
+        });
+        let (stream, _) = listener.accept().map_err(|e| e.to_string())?;
+        let link = LinkStatsHandle::new("batch-test");
+        let mut rx = TcpFrameReceiver::new(stream, link.clone());
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        while let Some(f) = rx.recv_frame().map_err(|e| e.to_string())? {
+            got.push(f);
+        }
+        let sent = sender.join().map_err(|_| "sender panicked".to_string())??;
+        if got != frames {
+            return Err(format!("batched={batched}: {} frames back, {} sent", got.len(), frames.len()));
+        }
+        // Coalescing must be invisible to the counters too: one count per
+        // frame on both ends, batched or not.
+        let recvd = link.snapshot();
+        let total: u64 = frames.iter().map(|f| f.len() as u64).sum();
+        if sent.frames_sent != frames.len() as u64 || sent.bytes_sent != total {
+            return Err(format!("sender counted {}f/{}B", sent.frames_sent, sent.bytes_sent));
+        }
+        if recvd.frames_recv != frames.len() as u64 || recvd.bytes_recv != total {
+            return Err(format!("receiver counted {}f/{}B", recvd.frames_recv, recvd.bytes_recv));
+        }
+        Ok(())
     });
 }
 
