@@ -107,10 +107,15 @@ COMMANDS:
                                   report the wall-clock delta
                --fault <s[:dup[:delay[:chop]]]>  seeded fault injection on
                                   response links (duplicate/reorder/chop)
+               --trace <file>     record a flight-recorder trace in every
+                                  role and write the merged trace (.jsonl
+                                  extension = JSON lines, else RTRC
+                                  binary); inspect with `rudder trace`
                worker mode (spawned by the tcp orchestrator; manual use
                for debugging): --role trainer|server|hub --part <n>
                --listen <addr> | --connect/--servers <a1,a2,..> --hub <a>
-               --results <addr> | --out <blob>; listeners announce
+               --results <addr> | --out <blob> [--record-trace]; listeners
+               announce
                "RUDDER_LISTEN <addr>" on stdout, the run config arrives
                inline over the --results control link (Hello -> Config;
                --run-config <toml> overrides with a local file) and
@@ -123,17 +128,31 @@ COMMANDS:
                readable BENCH_cluster.json (--out <file>, default
                ./BENCH_cluster.json) and exits non-zero if
                --min-speedup <f> / --max-blocked-ratio <f> gates fail
-               (--scale/--epochs/--seed override the pinned config)
+               (--scale/--epochs/--seed override the pinned config);
+               --trace-dir <dir> records both variants' flight-recorder
+               traces to <dir>/prefetch.trace + <dir>/baseline.trace
   experiment   regenerate a paper table/figure: rudder experiment <id> [--full]
                ids: fig01 fig03 fig06 fig12 fig13 fig14 fig15 fig16 fig17
                     table2 fig18 table4 fig20 fig21 | all
-  trace        trace-only mode: collect labelled classifier training data
+  trace        flight-recorder tooling:
+               trace dump <file> [--out <file>]  convert binary <-> JSONL
+               trace stats <file>   per-phase p50/p95/p99, fetch-blocked
+                                    breakdown, per-link timelines
+               trace diff <a> <b>   compare virtual-time fields of two
+                                    same-seed traces; non-zero exit on any
+                                    mismatch (wall clocks excluded, so
+                                    channel/tcp/event runs diff clean)
+               with no subcommand: trace-only classifier data collection
                --dataset <name> --out <file.json>
   calibrate    measure real PJRT step latency, write configs/calibration.toml
   datasets     list dataset stand-ins (Table 1a)
   models       list LLM agent profiles (Table 1b)
   partition-stats  partition quality: --dataset <name> --trainers <n> [--method metis|ldg|random]
   help         this text
+
+ENVIRONMENT:
+  RUDDER_LOG=off|info|debug   role-prefixed runtime logging on stderr
+                              (default off; [trainer-3]-style prefixes)
 ";
 
 #[cfg(test)]

@@ -42,6 +42,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::error::Result;
+use crate::trace::{EventKind, Role, TraceEvent, Tracer};
 
 use super::prefetch::PrefetchMsg;
 use super::transport::{
@@ -388,7 +389,7 @@ impl Conn {
     }
 
     /// Flush queued writes (nonblocking).  Returns whether bytes moved.
-    fn sweep_write(&mut self) -> Result<bool> {
+    fn sweep_write(&mut self, conn_id: u32, tracer: &mut Tracer) -> Result<bool> {
         if self.write_shut {
             return Ok(false);
         }
@@ -399,6 +400,16 @@ impl Conn {
                 self.pending_off = 0;
                 if self.pending.is_empty() {
                     break;
+                }
+                if tracer.enabled() {
+                    tracer.emit(
+                        0.0,
+                        EventKind::LinkFlush {
+                            conn: conn_id,
+                            frames: count_tagged_entries(&self.pending),
+                            bytes: self.pending.len() as u64,
+                        },
+                    );
                 }
             }
             match self.stream.write(&self.pending[self.pending_off..]) {
@@ -423,7 +434,7 @@ impl Conn {
 
     /// Read available bytes and route complete events.  Returns whether
     /// bytes moved.
-    fn sweep_read(&mut self) -> Result<bool> {
+    fn sweep_read(&mut self, conn_id: u32, tracer: &mut Tracer) -> Result<bool> {
         if self.read_eof {
             return Ok(false);
         }
@@ -452,7 +463,7 @@ impl Conn {
                     progress = true;
                     self.mux.push(&chunk[..k]);
                     while let Some(ev) = self.mux.next_event()? {
-                        self.route(ev);
+                        self.route(ev, conn_id, tracer);
                     }
                     if k < chunk.len() {
                         return Ok(progress);
@@ -466,15 +477,15 @@ impl Conn {
         Ok(progress)
     }
 
-    fn route(&mut self, ev: MuxEvent) {
+    fn route(&mut self, ev: MuxEvent, conn_id: u32, tracer: &mut Tracer) {
         match ev {
             MuxEvent::Frame(c, frame) => {
                 let Some(slot) = self.routes.get_mut(c as usize) else {
-                    eprintln!("{}: frame on unknown channel {c}", self.label);
+                    crate::log_debug!("{}: frame on unknown channel {c}", self.label);
                     return;
                 };
                 let Some(r) = slot else {
-                    eprintln!("{}: frame on closed channel {c}", self.label);
+                    crate::log_debug!("{}: frame on closed channel {c}", self.label);
                     return;
                 };
                 if let Some(s) = &r.stats {
@@ -486,6 +497,7 @@ impl Conn {
                 }
             }
             MuxEvent::Close(c) => {
+                tracer.emit(0.0, EventKind::ChannelClose { conn: conn_id, channel: c });
                 if let Some(slot) = self.routes.get_mut(c as usize) {
                     // Dropping the route drops the inbox clone — the
                     // endpoint sees the disconnect once every clone is
@@ -497,7 +509,7 @@ impl Conn {
     }
 
     fn fail(&mut self, err: &crate::error::RudderError) {
-        eprintln!("{}: connection failed: {err}", self.label);
+        crate::log_info!("{}: connection failed: {err}", self.label);
         self.wq.wedge();
         for r in self.routes.iter_mut() {
             *r = None;
@@ -508,25 +520,49 @@ impl Conn {
     }
 }
 
+/// Count whole tagged entries (frames and close markers) in a coalesced
+/// write batch — `[u32 channel][u32 body_len][body]` repeated, a zero
+/// body length being a close marker.  Batches always hold whole chunks,
+/// so the walk lands exactly on the end.
+fn count_tagged_entries(batch: &[u8]) -> u64 {
+    let mut n = 0u64;
+    let mut pos = 0usize;
+    while pos + 8 <= batch.len() {
+        let body_len =
+            u32::from_le_bytes([batch[pos + 4], batch[pos + 5], batch[pos + 6], batch[pos + 7]])
+                as usize;
+        pos += 8 + body_len;
+        n += 1;
+    }
+    n
+}
+
 /// The loop body: sweep every connection for read/write readiness until
 /// all are drained and closed in both directions.  Adaptive idling: spin
 /// with `yield_now` while traffic flows, park on the waker once idle.
-fn event_loop(mut conns: Vec<Conn>, cmd_rx: Receiver<()>, flagged: Arc<AtomicBool>) {
+/// Returns the loop's trace buffer (empty unless `trace`).
+fn event_loop(
+    mut conns: Vec<Conn>,
+    cmd_rx: Receiver<()>,
+    flagged: Arc<AtomicBool>,
+    trace: bool,
+) -> Vec<TraceEvent> {
+    let mut tracer = Tracer::new(trace, Role::EventLoop, 0);
     let mut idle_sweeps = 0u32;
     loop {
         flagged.store(false, Ordering::Release);
         while cmd_rx.try_recv().is_ok() {}
         let mut progress = false;
         let mut all_done = true;
-        for conn in conns.iter_mut() {
+        for (i, conn) in conns.iter_mut().enumerate() {
             if conn.done() {
                 continue;
             }
-            match conn.sweep_write() {
+            match conn.sweep_write(i as u32, &mut tracer) {
                 Ok(p) => progress |= p,
                 Err(e) => conn.fail(&e),
             }
-            match conn.sweep_read() {
+            match conn.sweep_read(i as u32, &mut tracer) {
                 Ok(p) => progress |= p,
                 Err(e) => conn.fail(&e),
             }
@@ -551,6 +587,7 @@ fn event_loop(mut conns: Vec<Conn>, cmd_rx: Receiver<()>, flagged: Arc<AtomicBoo
     for conn in &conns {
         conn.wq.wedge();
     }
+    tracer.finish()
 }
 
 // ---------------------------------------------------------------------------
@@ -578,7 +615,8 @@ pub(crate) struct EventCluster {
     /// trainer.
     pub server_prereg: Vec<Vec<(u32, Box<dyn FrameSender>)>>,
     pub hub_prereg: Vec<(u32, Box<dyn FrameSender>)>,
-    pub loop_handle: JoinHandle<()>,
+    /// Joins to the loop's trace buffer (empty unless tracing).
+    pub loop_handle: JoinHandle<Vec<TraceEvent>>,
 }
 
 /// Build the full event-loop topology for `n` trainers: one loopback
@@ -590,6 +628,7 @@ pub(crate) fn wire_event_cluster(
     server_txs: &[Sender<NetMsg>],
     hub_tx: &Sender<NetMsg>,
     pf_txs: &[Sender<PrefetchMsg>],
+    trace: bool,
 ) -> Result<EventCluster> {
     crate::ensure!(server_txs.len() == n && pf_txs.len() == n, "eventloop: wiring arity");
     let (cmd_tx, cmd_rx) = mpsc::channel::<()>();
@@ -717,7 +756,7 @@ pub(crate) fn wire_event_cluster(
 
     let loop_handle = std::thread::Builder::new()
         .name("rudder-eventloop".into())
-        .spawn(move || event_loop(conns, cmd_rx, flagged))
+        .spawn(move || event_loop(conns, cmd_rx, flagged, trace))
         .expect("spawn event loop thread");
 
     Ok(EventCluster { trainers, server_prereg, hub_prereg, loop_handle })
@@ -822,7 +861,7 @@ mod tests {
         let (server_tx, server_rx) = mpsc::channel::<NetMsg>();
         let (hub_tx, hub_rx) = mpsc::channel::<NetMsg>();
         let (pf_tx, pf_rx) = mpsc::channel::<PrefetchMsg>();
-        let mut ec = wire_event_cluster(1, &[server_tx], &hub_tx, &[pf_tx]).unwrap();
+        let mut ec = wire_event_cluster(1, &[server_tx], &hub_tx, &[pf_tx], true).unwrap();
         drop(hub_tx);
 
         let req = Frame::FetchReq { req_id: 7, from: 0, nodes: vec![1, 2, 3] }.encode();
@@ -873,7 +912,12 @@ mod tests {
         drop(end);
         drop(reply);
         drop(hub_reply);
-        ec.loop_handle.join().unwrap();
+        let trace = ec.loop_handle.join().unwrap();
+        // Tracing was on: flush + close events with a terminal RoleEnd.
+        use crate::trace::EventKind;
+        assert!(trace.iter().any(|e| matches!(e.kind, EventKind::LinkFlush { .. })));
+        assert!(trace.iter().any(|e| matches!(e.kind, EventKind::ChannelClose { .. })));
+        assert!(matches!(trace.last().unwrap().kind, EventKind::RoleEnd { .. }));
         // Close markers propagated: the server/pf inboxes are disconnected.
         assert!(server_rx.recv_timeout(Duration::from_millis(200)).is_err());
         assert!(pf_rx.recv_timeout(Duration::from_millis(200)).is_err());

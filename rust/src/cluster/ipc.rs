@@ -15,15 +15,19 @@ use crate::metrics::{
     DecisionRecord, HitsPrediction, LinkStats, MeasuredStats, MinibatchRecord, RunMetrics,
     WireStats,
 };
+use crate::trace::{codec as trace_codec, TraceEvent};
+use crate::util::stats::LogHistogram;
 
 use super::server::ServerStats;
 use super::trainer::WallStats;
 use super::wire::{put_u32, put_u64, Reader};
 
-/// Blob magics (format + version in four bytes).
-const MAGIC_TRAINER: &[u8; 4] = b"RTR2";
-const MAGIC_SERVER: &[u8; 4] = b"RSV1";
-const MAGIC_HUB: &[u8; 4] = b"RHB1";
+/// Blob magics (format + version in four bytes).  v3/v2 added the trace
+/// sections, the per-owner fetch-latency histograms, and the link channel
+/// ids; stale magics are rejected, not best-effort parsed.
+const MAGIC_TRAINER: &[u8; 4] = b"RTR3";
+const MAGIC_SERVER: &[u8; 4] = b"RSV2";
+const MAGIC_HUB: &[u8; 4] = b"RHB2";
 
 fn put_f64(out: &mut Vec<u8>, v: f64) {
     put_u64(out, v.to_bits());
@@ -242,6 +246,7 @@ fn get_measured(r: &mut Reader) -> Result<MeasuredStats> {
 
 fn put_link(out: &mut Vec<u8>, l: &LinkStats) {
     put_str(out, &l.peer);
+    put_u32(out, l.channel);
     put_u64(out, l.frames_sent);
     put_u64(out, l.bytes_sent);
     put_u64(out, l.frames_recv);
@@ -252,12 +257,54 @@ fn put_link(out: &mut Vec<u8>, l: &LinkStats) {
 fn get_link(r: &mut Reader) -> Result<LinkStats> {
     Ok(LinkStats {
         peer: get_str(r)?,
+        channel: r.u32()?,
         frames_sent: r.u64()?,
         bytes_sent: r.u64()?,
         frames_recv: r.u64()?,
         bytes_recv: r.u64()?,
         reconnects: r.u64()?,
     })
+}
+
+/// Sparse bucket encoding: most of a log histogram's 128 buckets are
+/// empty, so ship `(index, count)` pairs for the occupied ones only.
+fn put_hist(out: &mut Vec<u8>, h: &LogHistogram) {
+    let counts = h.bucket_counts();
+    let nonzero = counts.iter().filter(|&&c| c != 0).count();
+    put_u32(out, nonzero as u32);
+    for (i, &c) in counts.iter().enumerate() {
+        if c != 0 {
+            put_u32(out, i as u32);
+            put_u64(out, c);
+        }
+    }
+}
+
+fn get_hist(r: &mut Reader) -> Result<LogHistogram> {
+    let mut counts = vec![0u64; LogHistogram::BUCKETS];
+    for _ in 0..r.u32()? {
+        let i = r.u32()? as usize;
+        crate::ensure!(i < counts.len(), "ipc: histogram bucket {i} out of range");
+        counts[i] = r.u64()?;
+    }
+    LogHistogram::from_bucket_counts(counts)
+}
+
+fn put_trace(out: &mut Vec<u8>, evs: &[TraceEvent]) -> Result<()> {
+    put_u32(out, evs.len() as u32);
+    for e in evs {
+        trace_codec::put_event(out, e)?;
+    }
+    Ok(())
+}
+
+fn get_trace(r: &mut Reader) -> Result<Vec<TraceEvent>> {
+    let n = r.u32()? as usize;
+    let mut evs = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        evs.push(trace_codec::get_event(r)?);
+    }
+    Ok(evs)
 }
 
 fn put_wire(out: &mut Vec<u8>, w: &WireStats) {
@@ -274,6 +321,10 @@ fn put_wire(out: &mut Vec<u8>, w: &WireStats) {
     for l in &w.links {
         put_link(out, l);
     }
+    put_u32(out, w.fetch_latency.len() as u32);
+    for h in &w.fetch_latency {
+        put_hist(out, h);
+    }
 }
 
 fn get_wire(r: &mut Reader) -> Result<WireStats> {
@@ -288,9 +339,13 @@ fn get_wire(r: &mut Reader) -> Result<WireStats> {
         dup_frames: r.u64()?,
         bad_frames: r.u64()?,
         links: Vec::new(),
+        fetch_latency: Vec::new(),
     };
     for _ in 0..r.u32()? {
         w.links.push(get_link(r)?);
+    }
+    for _ in 0..r.u32()? {
+        w.fetch_latency.push(get_hist(r)?);
     }
     Ok(w)
 }
@@ -298,23 +353,26 @@ fn get_wire(r: &mut Reader) -> Result<WireStats> {
 // ---------------------------------------------------------------------------
 // blob-level API
 
-/// One trainer worker's full result.
+/// One trainer worker's full result: metrics + stats + the trainer's and
+/// its prefetcher's trace events (empty when tracing is off).
 pub fn encode_trainer_result(
     metrics: &RunMetrics,
     wall: &WallStats,
     wire: &WireStats,
     measured: &MeasuredStats,
-) -> Vec<u8> {
+    trace: &[TraceEvent],
+) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(4096);
     out.extend_from_slice(MAGIC_TRAINER);
     put_metrics(&mut out, metrics);
     put_wall(&mut out, wall);
     put_wire(&mut out, wire);
     put_measured(&mut out, measured);
-    out
+    put_trace(&mut out, trace)?;
+    Ok(out)
 }
 
-type TrainerResult = (RunMetrics, WallStats, WireStats, MeasuredStats);
+type TrainerResult = (RunMetrics, WallStats, WireStats, MeasuredStats, Vec<TraceEvent>);
 
 pub fn decode_trainer_result(buf: &[u8]) -> Result<TrainerResult> {
     let mut r = Reader { b: buf, pos: 0 };
@@ -323,11 +381,12 @@ pub fn decode_trainer_result(buf: &[u8]) -> Result<TrainerResult> {
     let wall = get_wall(&mut r)?;
     let wire = get_wire(&mut r)?;
     let measured = get_measured(&mut r)?;
+    let trace = get_trace(&mut r)?;
     crate::ensure!(r.pos == buf.len(), "ipc: {} trailing bytes", buf.len() - r.pos);
-    Ok((metrics, wall, wire, measured))
+    Ok((metrics, wall, wire, measured, trace))
 }
 
-pub fn encode_server_stats(s: &ServerStats) -> Vec<u8> {
+pub fn encode_server_stats(s: &ServerStats, trace: &[TraceEvent]) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(64);
     out.extend_from_slice(MAGIC_SERVER);
     put_u32(&mut out, s.part as u32);
@@ -336,10 +395,11 @@ pub fn encode_server_stats(s: &ServerStats) -> Vec<u8> {
     put_u64(&mut out, s.bytes_in);
     put_u64(&mut out, s.bytes_out);
     put_u64(&mut out, s.bad_frames);
-    out
+    put_trace(&mut out, trace)?;
+    Ok(out)
 }
 
-pub fn decode_server_stats(buf: &[u8]) -> Result<ServerStats> {
+pub fn decode_server_stats(buf: &[u8]) -> Result<(ServerStats, Vec<TraceEvent>)> {
     let mut r = Reader { b: buf, pos: 0 };
     check_magic(&mut r, MAGIC_SERVER, "server")?;
     let s = ServerStats {
@@ -350,28 +410,53 @@ pub fn decode_server_stats(buf: &[u8]) -> Result<ServerStats> {
         bytes_out: r.u64()?,
         bad_frames: r.u64()?,
     };
+    let trace = get_trace(&mut r)?;
     crate::ensure!(r.pos == buf.len(), "ipc: {} trailing bytes", buf.len() - r.pos);
-    Ok(s)
+    Ok((s, trace))
 }
 
-pub fn encode_hub_rounds(rounds: u64) -> Vec<u8> {
-    let mut out = Vec::with_capacity(12);
+pub fn encode_hub_result(rounds: u64, trace: &[TraceEvent]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(16);
     out.extend_from_slice(MAGIC_HUB);
     put_u64(&mut out, rounds);
-    out
+    put_trace(&mut out, trace)?;
+    Ok(out)
 }
 
-pub fn decode_hub_rounds(buf: &[u8]) -> Result<u64> {
+pub fn decode_hub_result(buf: &[u8]) -> Result<(u64, Vec<TraceEvent>)> {
     let mut r = Reader { b: buf, pos: 0 };
     check_magic(&mut r, MAGIC_HUB, "hub")?;
     let rounds = r.u64()?;
+    let trace = get_trace(&mut r)?;
     crate::ensure!(r.pos == buf.len(), "ipc: {} trailing bytes", buf.len() - r.pos);
-    Ok(rounds)
+    Ok((rounds, trace))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::{EventKind, Role};
+
+    fn sample_trace() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                role: Role::Trainer,
+                id: 2,
+                seq: 0,
+                vclock: 0.1 + 0.2,
+                wall: 0.000321,
+                kind: EventKind::MinibatchBegin { epoch: 0, mb: 4 },
+            },
+            TraceEvent {
+                role: Role::Trainer,
+                id: 2,
+                seq: 1,
+                vclock: 0.0,
+                wall: 0.0005,
+                kind: EventKind::RoleEnd { emitted: 1 },
+            },
+        ]
+    }
 
     fn sample_metrics() -> RunMetrics {
         let mut m = RunMetrics::default();
@@ -422,6 +507,10 @@ mod tests {
             barrier: 0.01,
             minibatches: 40,
         };
+        let mut lat = LogHistogram::new();
+        lat.push(0.0011);
+        lat.push(0.0042);
+        lat.push(0.9);
         let wire = WireStats {
             req_frames: 10,
             req_bytes: 2000,
@@ -434,12 +523,14 @@ mod tests {
             bad_frames: 0,
             links: vec![LinkStats {
                 peer: "server:1".into(),
+                channel: 1,
                 frames_sent: 11,
                 bytes_sent: 2100,
                 frames_recv: 10,
                 bytes_recv: 90_000,
                 reconnects: 2,
             }],
+            fetch_latency: vec![LogHistogram::new(), lat],
         };
         let measured = MeasuredStats {
             compute_secs: vec![0.1 + 0.2, 0.25],
@@ -452,8 +543,9 @@ mod tests {
             grad_bytes: 160_000,
             param_hash: 0xDEAD_BEEF_1234_5678,
         };
-        let blob = encode_trainer_result(&metrics, &wall, &wire, &measured);
-        let (m2, w2, wire2, meas2) = decode_trainer_result(&blob).unwrap();
+        let trace = sample_trace();
+        let blob = encode_trainer_result(&metrics, &wall, &wire, &measured, &trace).unwrap();
+        let (m2, w2, wire2, meas2, trace2) = decode_trainer_result(&blob).unwrap();
         assert_eq!(m2.minibatches.len(), 1);
         assert_eq!(
             m2.minibatches[0].step_time.to_bits(),
@@ -470,6 +562,11 @@ mod tests {
         assert_eq!(wire2.nodes_requested, 500);
         assert_eq!(wire2.dup_frames, 3);
         assert_eq!(wire2.links, wire.links);
+        assert_eq!(wire2.links[0].channel, 1, "link channel id must survive");
+        assert_eq!(wire2.fetch_latency, wire.fetch_latency);
+        assert_eq!(wire2.fetch_latency[1].count(), 3);
+        assert_eq!(trace2, trace, "trace section must round-trip bit-exactly");
+        assert_eq!(trace2[0].vclock.to_bits(), (0.1f64 + 0.2).to_bits());
         assert_eq!(meas2.compute_secs[0].to_bits(), (0.1f64 + 0.2).to_bits());
         assert_eq!(meas2.losses[1].to_bits(), f32::MIN_POSITIVE.to_bits());
         assert_eq!(meas2.barrier_secs.len(), 3);
@@ -484,9 +581,12 @@ mod tests {
             &WallStats::default(),
             &WireStats::default(),
             &MeasuredStats::default(),
-        );
-        let (_, _, _, meas) = decode_trainer_result(&blob).unwrap();
+            &[],
+        )
+        .unwrap();
+        let (_, _, _, meas, trace) = decode_trainer_result(&blob).unwrap();
         assert!(!meas.is_populated(), "emulated-mode blobs carry empty measured stats");
+        assert!(trace.is_empty(), "tracing-off blobs carry an empty trace section");
     }
 
     #[test]
@@ -499,24 +599,29 @@ mod tests {
             bytes_out: 400_000,
             bad_frames: 1,
         };
-        let back = decode_server_stats(&encode_server_stats(&s)).unwrap();
+        let trace = sample_trace();
+        let (back, t2) = decode_server_stats(&encode_server_stats(&s, &trace).unwrap()).unwrap();
         assert_eq!(back.part, 3);
         assert_eq!(back.nodes_served, 1000);
         assert_eq!(back.bad_frames, 1);
-        assert_eq!(decode_hub_rounds(&encode_hub_rounds(77)).unwrap(), 77);
+        assert_eq!(t2, trace);
+        let (rounds, t3) = decode_hub_result(&encode_hub_result(77, &trace).unwrap()).unwrap();
+        assert_eq!(rounds, 77);
+        assert_eq!(t3, trace);
     }
 
     #[test]
     fn corrupt_blobs_error_cleanly() {
-        let blob = encode_hub_rounds(5);
-        assert!(decode_hub_rounds(&blob[..blob.len() - 1]).is_err(), "truncated");
+        let blob = encode_hub_result(5, &[]).unwrap();
+        assert!(decode_hub_result(&blob[..blob.len() - 1]).is_err(), "truncated");
         let mut wrong = blob.clone();
         wrong[0] = b'X';
-        assert!(decode_hub_rounds(&wrong).is_err(), "bad magic");
+        assert!(decode_hub_result(&wrong).is_err(), "bad magic");
         let mut trailing = blob;
         trailing.push(0);
-        assert!(decode_hub_rounds(&trailing).is_err(), "trailing bytes");
-        assert!(decode_trainer_result(b"RTR2").is_err(), "short trainer blob");
+        assert!(decode_hub_result(&trailing).is_err(), "trailing bytes");
+        assert!(decode_trainer_result(b"RTR3").is_err(), "short trainer blob");
         assert!(decode_trainer_result(b"RTR1").is_err(), "stale blob version rejected");
+        assert!(decode_trainer_result(b"RTR2").is_err(), "pre-trace blob version rejected");
     }
 }

@@ -88,6 +88,37 @@
 //!   stay a pure function of config + seed and every parity guarantee
 //!   above keeps holding; `rudder bench` gates CI on this mode's
 //!   prefetch-vs-baseline ratios (`BENCH_cluster.json`).
+//!
+//! # Flight recorder
+//!
+//! With tracing on ([`ClusterConfig::trace`], `rudder cluster --trace`),
+//! every role owns a [`crate::trace::Tracer`] and emits typed
+//! [`crate::trace::TraceEvent`]s — minibatch begin/end, fetch
+//! issue/response/serve, batch and link flushes, allreduce rounds,
+//! replacement, stalls — each carrying the virtual clock *and* a wall
+//! clock, tagged `(role, id, seq)`.  Buffers flow back to the
+//! orchestrator on the same paths as the stats they annotate:
+//!
+//! ```text
+//!  trainer thread ──┐
+//!  prefetcher ──────┤ per-role Vec<TraceEvent>
+//!  server p ────────┤   channel/event: returned by each thread's join
+//!  hub ─────────────┘   tcp: shipped in the ipc result blob
+//!                              (Frame::Result, magics RTR3/RSV2/RHB2)
+//!          ▼
+//!  merged + canonically sorted ⇒ ClusterResult::trace ⇒ Trace::write_file
+//!          ▼
+//!  rudder trace dump | stats | diff   (JSONL ⇄ RTRC binary, lossless)
+//! ```
+//!
+//! Virtual-time fields of the trace are a pure function of config + seed,
+//! so `rudder trace diff` extends the wire-parity guarantee to the whole
+//! timeline: same-seed runs on `channel`, `tcp`, and `event` transports
+//! must be bit-identical after wall clocks and arrival order are
+//! projected out ([`crate::trace::diff`]).  Every role stream ends with a
+//! `role_end { emitted }` record and gapless per-stream sequence numbers,
+//! so [`crate::trace::Trace::verify_complete`] detects any event silently
+//! dropped at shutdown.
 
 pub mod eventloop;
 pub mod ipc;

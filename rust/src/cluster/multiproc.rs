@@ -45,6 +45,7 @@ use crate::metrics::{MeasuredStats, RunMetrics, WireStats};
 use crate::net::Network;
 use crate::partition::Partition;
 use crate::sim::{self, ControllerSpec, ExperimentResult};
+use crate::trace::{Trace, TraceEvent, TraceMeta};
 
 use super::ipc;
 use super::prefetch::{spawn_prefetcher, FeatureStore};
@@ -118,7 +119,7 @@ fn spawn_result_collector(
                 let stream = match listener.accept() {
                     Ok((s, _)) => s,
                     Err(e) => {
-                        eprintln!("results listener: accept failed: {e}");
+                        crate::log_info!("results listener: accept failed: {e}");
                         break;
                     }
                 };
@@ -138,12 +139,18 @@ fn spawn_result_collector(
                                 let _ = tx.send_frame(&frame.encode());
                                 tx.close();
                             }
-                            Err(e) => eprintln!("results listener: clone for config reply: {e}"),
+                            Err(e) => {
+                                crate::log_info!("results listener: clone for config reply: {e}")
+                            }
                         },
-                        Ok(_) | Err(_) => eprintln!("results listener: dropping garbage frame"),
+                        Ok(_) | Err(_) => {
+                            crate::log_info!("results listener: dropping garbage frame")
+                        }
                     },
-                    Ok(None) => eprintln!("results listener: dropping dataless connection"),
-                    Err(e) => eprintln!("results listener: dropping stalled connection: {e}"),
+                    Ok(None) => crate::log_info!("results listener: dropping dataless connection"),
+                    Err(e) => {
+                        crate::log_info!("results listener: dropping stalled connection: {e}")
+                    }
                 }
             }
             results
@@ -203,12 +210,15 @@ pub struct ServerWorkerOpts {
     pub results: Option<String>,
     /// File fallback (`--out`) for manual debugging.
     pub out: Option<PathBuf>,
+    /// Record a flight-recorder trace and ship it in the result blob.
+    pub trace: bool,
 }
 
 /// `--role server`: rebuild the dataset/partition from the shared config,
 /// serve fetches on a TCP listener until every trainer hangs up, then
 /// write the stats blob.
 pub fn run_server_worker(o: &ServerWorkerOpts) -> Result<()> {
+    crate::util::log::set_role(&format!("server-{}", o.part));
     // Bind + announce *before* the (expensive) dataset rebuild, so the
     // orchestrator can move on to spawning the next worker and the graph
     // builds run in parallel across server processes; early dialers just
@@ -225,7 +235,7 @@ pub fn run_server_worker(o: &ServerWorkerOpts) -> Result<()> {
     let chop = o.fault.map(|f| f.chop).unwrap_or(0);
     let (tx, rx) = mpsc::channel();
     let accept = transport::serve_listener(listener, n, tx, &format!("server{}", o.part), chop);
-    let stats = server_loop(
+    let (stats, trace) = server_loop(
         o.part,
         ds.feature_seed,
         ds.spec.feat_dim,
@@ -234,12 +244,13 @@ pub fn run_server_worker(o: &ServerWorkerOpts) -> Result<()> {
         Vec::new(),
         delay,
         o.fault,
+        o.trace,
     );
     let _ = accept.join();
     deliver_result(
         ROLE_SERVER,
         o.part as u32,
-        ipc::encode_server_stats(&stats),
+        ipc::encode_server_stats(&stats, &trace)?,
         &o.results,
         &o.out,
     )
@@ -251,18 +262,21 @@ pub struct HubWorkerOpts {
     pub round_sleep: f64,
     pub results: Option<String>,
     pub out: Option<PathBuf>,
+    /// Record a flight-recorder trace and ship it in the result blob.
+    pub trace: bool,
 }
 
 /// `--role hub`: run the allreduce barrier for `trainers` peers, then
 /// write the round count blob.
 pub fn run_hub_worker(o: &HubWorkerOpts) -> Result<()> {
+    crate::util::log::set_role("hub");
     let listener = TcpListener::bind(o.listen.as_str())?;
     announce_listen(&listener)?;
     let (tx, rx) = mpsc::channel();
     let accept = transport::serve_listener(listener, o.trainers, tx, "hub", 0);
-    let rounds = hub_loop(o.trainers, rx, Vec::new(), o.round_sleep);
+    let (rounds, trace) = hub_loop(o.trainers, rx, Vec::new(), o.round_sleep, o.trace);
     let _ = accept.join();
-    deliver_result(ROLE_HUB, 0, ipc::encode_hub_rounds(rounds), &o.results, &o.out)
+    deliver_result(ROLE_HUB, 0, ipc::encode_hub_result(rounds, &trace)?, &o.results, &o.out)
 }
 
 pub struct TrainerWorkerOpts {
@@ -275,12 +289,15 @@ pub struct TrainerWorkerOpts {
     pub compute: ComputeMode,
     pub results: Option<String>,
     pub out: Option<PathBuf>,
+    /// Record a flight-recorder trace and ship it in the result blob.
+    pub trace: bool,
 }
 
 /// `--role trainer`: rebuild the dataset/partition, dial every feature
 /// server and the hub, run the trainer + prefetcher threads, and write
 /// the result blob.
 pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
+    crate::util::log::set_role(&format!("trainer-{}", o.part));
     let cfg = fetch_config(ROLE_TRAINER, o.part as u32, &o.config, &o.results)?;
     let (ds, part) = sim::build_cluster(&cfg)?;
     crate::ensure!(
@@ -310,6 +327,7 @@ pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
         dial.request_links,
         part.clone(),
         io_timeout(o.compute.time_scale()),
+        o.trace,
     );
     let args = TrainerArgs {
         part_id: o.part,
@@ -323,16 +341,19 @@ pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
         hub_rx: dial.hub_rx,
         max_mb_per_epoch: max_mb,
         compute: o.compute,
+        trace: o.trace,
     };
     let out = run_trainer(args);
-    let mut wire = pf_handle
+    let (mut wire, pf_trace) = pf_handle
         .join()
         .map_err(|_| crate::err!("trainer worker {}: prefetcher panicked", o.part))?;
     for p in dial.pumps {
         let _ = p.join();
     }
     wire.links = dial.links.iter().map(LinkStatsHandle::snapshot).collect();
-    let blob = ipc::encode_trainer_result(&out.metrics, &out.wall, &wire, &out.measured);
+    let mut trace = out.trace;
+    trace.extend(pf_trace);
+    let blob = ipc::encode_trainer_result(&out.metrics, &out.wall, &wire, &out.measured, &trace)?;
     deliver_result(ROLE_TRAINER, o.part as u32, blob, &o.results, &o.out)
 }
 
@@ -444,21 +465,22 @@ pub fn run_cluster_multiproc(
 
     // Listener workers first; collect their announced addresses.
     let mut listeners: Vec<(String, Child)> = Vec::new();
-    let mut hub_child = match spawn_piped(
-        &exe,
-        &[
-            "--role".into(),
-            "hub".into(),
-            "--listen".into(),
-            "127.0.0.1:0".into(),
-            "--trainers".into(),
-            n.to_string(),
-            "--round-sleep".into(),
-            format!("{round_sleep}"),
-            "--results".into(),
-            results_addr.clone(),
-        ],
-    ) {
+    let mut hub_args: Vec<String> = vec![
+        "--role".into(),
+        "hub".into(),
+        "--listen".into(),
+        "127.0.0.1:0".into(),
+        "--trainers".into(),
+        n.to_string(),
+        "--round-sleep".into(),
+        format!("{round_sleep}"),
+        "--results".into(),
+        results_addr.clone(),
+    ];
+    if ccfg.trace {
+        hub_args.push("--record-trace".into());
+    }
+    let mut hub_child = match spawn_piped(&exe, &hub_args) {
         Ok(c) => c,
         Err(e) => {
             poison(collector);
@@ -494,6 +516,9 @@ pub fn run_cluster_multiproc(
             args.push("--fault".into());
             args.push(format!("{}:{}:{}:{}", f.seed, f.dup, f.delay, f.chop));
         }
+        if ccfg.trace {
+            args.push("--record-trace".into());
+        }
         let mut child = match spawn_piped(&exe, &args) {
             Ok(c) => c,
             Err(e) => {
@@ -519,7 +544,7 @@ pub fn run_cluster_multiproc(
     let wall_start = Instant::now();
     let mut trainers: Vec<(String, Child)> = Vec::new();
     for t in 0..n {
-        let args: Vec<String> = vec![
+        let mut args: Vec<String> = vec![
             "--role".into(),
             "trainer".into(),
             "--part".into(),
@@ -535,6 +560,9 @@ pub fn run_cluster_multiproc(
             "--results".into(),
             results_addr.clone(),
         ];
+        if ccfg.trace {
+            args.push("--record-trace".into());
+        }
         let child = Command::new(&exe)
             .arg("cluster")
             .args(&args)
@@ -590,7 +618,7 @@ pub fn run_cluster_multiproc(
             ROLE_TRAINER if (id as usize) < n => trainer_blobs[id as usize] = Some(blob),
             ROLE_SERVER if (id as usize) < n => server_blobs[id as usize] = Some(blob),
             ROLE_HUB => hub_blob = Some(blob),
-            _ => eprintln!("results listener: unknown worker role {role} id {id}"),
+            _ => crate::log_info!("results listener: unknown worker role {role} id {id}"),
         }
     }
 
@@ -598,26 +626,54 @@ pub fn run_cluster_multiproc(
     let mut walls: Vec<WallStats> = Vec::with_capacity(n);
     let mut wire: Vec<WireStats> = Vec::with_capacity(n);
     let mut measured: Vec<MeasuredStats> = Vec::with_capacity(n);
+    let mut trace_events: Vec<TraceEvent> = Vec::new();
     for (t, blob) in trainer_blobs.into_iter().enumerate() {
         let blob = blob.ok_or_else(|| crate::err!("trainer worker {t} returned no result"))?;
-        let (m, w, ws, me) = ipc::decode_trainer_result(&blob)?;
+        let (m, w, ws, me, tr) = ipc::decode_trainer_result(&blob)?;
         per_trainer.push(m);
         walls.push(w);
         wire.push(ws);
         measured.push(me);
+        trace_events.extend(tr);
     }
     let mut servers: Vec<ServerStats> = Vec::with_capacity(n);
     for (p, blob) in server_blobs.into_iter().enumerate() {
         let blob = blob.ok_or_else(|| crate::err!("server worker {p} returned no result"))?;
-        servers.push(ipc::decode_server_stats(&blob)?);
+        let (s, tr) = ipc::decode_server_stats(&blob)?;
+        servers.push(s);
+        trace_events.extend(tr);
     }
     let hub_blob = hub_blob.ok_or_else(|| crate::err!("hub worker returned no result"))?;
-    let allreduce_rounds = ipc::decode_hub_rounds(&hub_blob)?;
+    let (allreduce_rounds, hub_trace) = ipc::decode_hub_result(&hub_blob)?;
+    trace_events.extend(hub_trace);
+
+    let trace = if ccfg.trace {
+        let mut t = Trace::new(TraceMeta {
+            label: cfg.controller.label(),
+            seed: cfg.seed,
+            transport: ccfg.transport.name().to_string(),
+            compute: ccfg.compute.name().to_string(),
+        });
+        t.events = trace_events;
+        t.sort_canonical();
+        Some(t)
+    } else {
+        None
+    };
 
     let epoch_times = per_trainer
         .first()
         .map(|m| m.epoch_times.clone())
         .unwrap_or_default();
     let experiment = ExperimentResult::aggregate(cfg.controller.label(), per_trainer, epoch_times);
-    Ok(ClusterResult { experiment, wall_total, walls, measured, wire, servers, allreduce_rounds })
+    Ok(ClusterResult {
+        experiment,
+        wall_total,
+        walls,
+        measured,
+        wire,
+        servers,
+        allreduce_rounds,
+        trace,
+    })
 }

@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::WireStats;
 use crate::partition::Partition;
+use crate::trace::{EventKind, Role, TraceEvent, Tracer};
 use crate::util::fasthash::{FastMap, FastSet};
 
 use super::transport::FrameSender;
@@ -173,25 +174,38 @@ impl FeatureStore {
 }
 
 /// Decode one server frame and apply it to the store + counters.
-/// `outstanding` holds the req-ids sent but not yet answered; responses
-/// with an unknown req-id are duplicates (fault shim) and are dropped
-/// without touching any other counter.
+/// `outstanding` maps req-ids sent but not yet answered to the owner
+/// partition and issue instant (for round-trip latency); responses with
+/// an unknown req-id are duplicates (fault shim) and are dropped without
+/// touching any other counter.
 fn handle_wire(
     trainer_id: usize,
     store: &FeatureStore,
     bytes: &[u8],
     stats: &mut WireStats,
-    outstanding: &mut FastSet<u64>,
+    outstanding: &mut FastMap<u64, (u32, Instant)>,
+    tracer: &mut Tracer,
 ) {
     match Frame::decode(bytes) {
         Ok((Frame::FetchResp { req_id, feat_dim, nodes, feats }, _)) => {
-            if !outstanding.remove(&req_id) {
+            let Some((owner, issued)) = outstanding.remove(&req_id) else {
                 stats.dup_frames += 1;
                 return;
-            }
+            };
             stats.resp_frames += 1;
             stats.resp_bytes += bytes.len() as u64;
             stats.nodes_received += nodes.len() as u64;
+            if let Some(h) = stats.fetch_latency.get_mut(owner as usize) {
+                h.push(issued.elapsed().as_secs_f64());
+            }
+            tracer.emit(
+                0.0,
+                EventKind::FetchResponse {
+                    req_id,
+                    nodes: nodes.len() as u64,
+                    bytes: bytes.len() as u64,
+                },
+            );
             store.complete_fetch(&nodes, &feats, feat_dim as usize);
         }
         Ok((other, _)) => {
@@ -204,11 +218,11 @@ fn handle_wire(
                 Frame::Result { .. } => "Result",
                 Frame::Config { .. } => "Config",
             };
-            eprintln!("prefetcher {trainer_id}: unexpected {kind} frame");
+            crate::log_info!("prefetcher {trainer_id}: unexpected {kind} frame");
         }
         Err(e) => {
             stats.bad_frames += 1;
-            eprintln!("prefetcher {trainer_id}: bad frame: {e}");
+            crate::log_info!("prefetcher {trainer_id}: bad frame: {e}");
         }
     }
 }
@@ -217,7 +231,7 @@ fn handle_wire(
 /// request link to partition `p`'s feature server (any transport).  On
 /// [`PrefetchMsg::Shutdown`] it half-closes the request links, drains
 /// every outstanding response (bounded by `drain_timeout`), and returns
-/// its wire counters.
+/// its wire counters plus its trace buffer (empty unless `trace`).
 pub(crate) fn spawn_prefetcher(
     trainer_id: usize,
     store: Arc<FeatureStore>,
@@ -225,14 +239,17 @@ pub(crate) fn spawn_prefetcher(
     servers: Vec<Box<dyn FrameSender>>,
     part: Arc<Partition>,
     drain_timeout: Duration,
-) -> JoinHandle<WireStats> {
+    trace: bool,
+) -> JoinHandle<(WireStats, Vec<TraceEvent>)> {
     std::thread::Builder::new()
         .name(format!("rudder-prefetch-{trainer_id}"))
         .spawn(move || {
             let mut servers = servers;
             let mut stats = WireStats::default();
+            stats.fetch_latency.resize_with(servers.len(), Default::default);
+            let mut tracer = Tracer::new(trace, Role::Prefetcher, trainer_id as u32);
             let mut req_id: u64 = 0;
-            let mut outstanding: FastSet<u64> = FastSet::default();
+            let mut outstanding: FastMap<u64, (u32, Instant)> = FastMap::default();
             // Reused per-owner coalescing buckets (nodes within one fetch
             // order) and per-owner encoded-frame batches (across a burst).
             let mut groups: Vec<Vec<u32>> = vec![Vec::new(); servers.len()];
@@ -269,14 +286,24 @@ pub(crate) fn spawn_prefetcher(
                                     continue;
                                 }
                                 let batch = std::mem::take(group);
-                                stats.nodes_requested += batch.len() as u64;
+                                let batch_nodes = batch.len() as u64;
+                                stats.nodes_requested += batch_nodes;
                                 let bytes = Frame::FetchReq {
                                     req_id,
                                     from: trainer_id as u32,
                                     nodes: batch,
                                 }
                                 .encode();
-                                outstanding.insert(req_id);
+                                tracer.emit(
+                                    0.0,
+                                    EventKind::FetchIssue {
+                                        req_id,
+                                        owner: owner as u32,
+                                        nodes: batch_nodes,
+                                        bytes: bytes.len() as u64,
+                                    },
+                                );
+                                outstanding.insert(req_id, (owner as u32, Instant::now()));
                                 req_id += 1;
                                 stats.req_frames += 1;
                                 stats.req_bytes += bytes.len() as u64;
@@ -284,9 +311,19 @@ pub(crate) fn spawn_prefetcher(
                             }
                         }
                         PrefetchMsg::Wire(bytes) => {
-                            handle_wire(trainer_id, &store, &bytes, &mut stats, &mut outstanding);
+                            handle_wire(
+                                trainer_id,
+                                &store,
+                                &bytes,
+                                &mut stats,
+                                &mut outstanding,
+                                &mut tracer,
+                            );
                         }
-                        PrefetchMsg::Evict(nodes) => store.evict(&nodes),
+                        PrefetchMsg::Evict(nodes) => {
+                            tracer.emit(0.0, EventKind::Evict { nodes: nodes.len() as u64 });
+                            store.evict(&nodes);
+                        }
                         // The trainer sends Shutdown last, so only `Wire`
                         // can trail it within a burst — keep processing so
                         // no response is dropped before the drain phase.
@@ -298,6 +335,14 @@ pub(crate) fn spawn_prefetcher(
                         continue;
                     }
                     let frames = std::mem::take(batch);
+                    tracer.emit(
+                        0.0,
+                        EventKind::BatchFlush {
+                            owner: owner as u32,
+                            frames: frames.len() as u64,
+                            bytes: frames.iter().map(|f| f.len() as u64).sum(),
+                        },
+                    );
                     // A dead server surfaces as a wait timeout in the
                     // trainer; nothing useful to do here.
                     let _ = servers[owner].send_frames(&frames);
@@ -320,24 +365,31 @@ pub(crate) fn spawn_prefetcher(
                 let remaining = deadline.saturating_duration_since(Instant::now());
                 match rx.recv_timeout(remaining) {
                     Ok(PrefetchMsg::Wire(bytes)) => {
-                        handle_wire(trainer_id, &store, &bytes, &mut stats, &mut outstanding);
+                        handle_wire(
+                            trainer_id,
+                            &store,
+                            &bytes,
+                            &mut stats,
+                            &mut outstanding,
+                            &mut tracer,
+                        );
                     }
                     Ok(_) => {}
                     Err(RecvTimeoutError::Disconnected) => break,
                     Err(RecvTimeoutError::Timeout) => {
-                        eprintln!("prefetcher {trainer_id}: drain timed out");
+                        crate::log_info!("prefetcher {trainer_id}: drain timed out");
                         break;
                     }
                 }
             }
             if !outstanding.is_empty() {
                 stats.bad_frames += outstanding.len() as u64;
-                eprintln!(
+                crate::log_info!(
                     "prefetcher {trainer_id}: {} responses never arrived",
                     outstanding.len()
                 );
             }
-            stats
+            (stats, tracer.finish())
         })
         .expect("spawn prefetcher thread")
 }
@@ -409,19 +461,25 @@ mod tests {
     fn duplicate_responses_are_dropped_by_req_id() {
         let store = FeatureStore::new();
         let mut stats = WireStats::default();
-        let mut outstanding: FastSet<u64> = FastSet::default();
-        outstanding.insert(7);
+        stats.fetch_latency.resize_with(1, Default::default);
+        let mut tracer = Tracer::new(true, Role::Prefetcher, 0);
+        let mut outstanding: FastMap<u64, (u32, Instant)> = FastMap::default();
+        outstanding.insert(7, (0, Instant::now()));
         let resp =
             Frame::FetchResp { req_id: 7, feat_dim: 1, nodes: vec![3], feats: vec![0.5] };
         store.begin_fetch(&[3], &mut stats);
         let bytes = resp.encode();
-        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding);
-        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding);
+        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding, &mut tracer);
+        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding, &mut tracer);
         assert_eq!(stats.resp_frames, 1);
         assert_eq!(stats.nodes_received, 1);
         assert_eq!(stats.dup_frames, 1, "second copy is dropped by req-id dedup");
         assert_eq!(stats.bad_frames, 0);
         assert!(store.contains(3));
+        assert_eq!(stats.fetch_latency[0].count(), 1, "latency recorded once");
+        let evs = tracer.finish();
+        assert_eq!(evs.len(), 2, "one FetchResponse + RoleEnd (dup is silent)");
+        assert!(matches!(evs[0].kind, EventKind::FetchResponse { req_id: 7, .. }));
     }
 
     #[test]

@@ -38,6 +38,7 @@ use crate::metrics::{MeasuredStats, RunMetrics, WireStats};
 use crate::net::Network;
 use crate::partition::Partition;
 use crate::sim::{self, ExperimentResult, RunConfig};
+use crate::trace::{EventKind, Role, Trace, TraceEvent, TraceMeta, Tracer};
 
 use super::prefetch::{spawn_prefetcher, FeatureStore, PrefetchMsg};
 use super::server::{spawn_server, ServerStats, WireDelay};
@@ -115,6 +116,9 @@ pub struct ClusterConfig {
     /// Deterministic fault injection on the server→trainer response links
     /// (duplicate / reorder / TCP write chop).
     pub fault: Option<FaultSpec>,
+    /// Record a structured [`Trace`] of every role's phases
+    /// ([`ClusterResult::trace`]).
+    pub trace: bool,
 }
 
 impl ClusterConfig {
@@ -124,6 +128,7 @@ impl ClusterConfig {
             compute: ComputeMode::Emulated(0.0),
             transport: Transport::Channel,
             fault: None,
+            trace: false,
         }
     }
 }
@@ -143,6 +148,9 @@ pub struct ClusterResult {
     pub wire: Vec<WireStats>,
     pub servers: Vec<ServerStats>,
     pub allreduce_rounds: u64,
+    /// Merged flight-recorder trace, canonically sorted
+    /// (`Some` iff [`ClusterConfig::trace`]).
+    pub trace: Option<Trace>,
 }
 
 impl ClusterResult {
@@ -186,17 +194,20 @@ struct TrainerWiring {
     hub_tx: Box<dyn FrameSender>,
     hub_rx: Box<dyn FrameReceiver>,
     store: Arc<FeatureStore>,
-    pf_handle: JoinHandle<WireStats>,
+    pf_handle: JoinHandle<(WireStats, Vec<TraceEvent>)>,
     /// Server links in partition order, then the hub link.
     links: Vec<LinkStatsHandle>,
 }
 
 /// Background machinery shared by both transports.
 struct Backstage {
-    server_handles: Vec<JoinHandle<ServerStats>>,
-    hub_handle: JoinHandle<u64>,
+    server_handles: Vec<JoinHandle<(ServerStats, Vec<TraceEvent>)>>,
+    hub_handle: JoinHandle<(u64, Vec<TraceEvent>)>,
     /// TCP-only: accept threads and trainer-side response pumps.
     aux_handles: Vec<JoinHandle<()>>,
+    /// Event transport only: the I/O loop thread, joining to its trace
+    /// buffer (empty unless tracing).
+    loop_handle: Option<JoinHandle<Vec<TraceEvent>>>,
 }
 
 /// Run on a pre-built cluster (shared with parity tests so the sim and the
@@ -240,7 +251,7 @@ pub fn run_cluster_on(
     let wall_start = Instant::now();
     let mut trainer_handles: Vec<JoinHandle<super::trainer::TrainerOutput>> = Vec::new();
     let mut link_sets: Vec<Vec<LinkStatsHandle>> = Vec::new();
-    let mut pf_handles: Vec<JoinHandle<WireStats>> = Vec::new();
+    let mut pf_handles: Vec<JoinHandle<(WireStats, Vec<TraceEvent>)>> = Vec::new();
     for (p, w) in wirings.into_iter().enumerate() {
         link_sets.push(w.links);
         pf_handles.push(w.pf_handle);
@@ -256,6 +267,7 @@ pub fn run_cluster_on(
             hub_rx: w.hub_rx,
             max_mb_per_epoch: max_mb,
             compute: ccfg.compute,
+            trace: ccfg.trace,
         };
         trainer_handles.push(
             std::thread::Builder::new()
@@ -268,6 +280,7 @@ pub fn run_cluster_on(
     let mut per_trainer: Vec<RunMetrics> = Vec::with_capacity(n);
     let mut walls: Vec<WallStats> = Vec::with_capacity(n);
     let mut measured: Vec<MeasuredStats> = Vec::with_capacity(n);
+    let mut trace_events: Vec<TraceEvent> = Vec::new();
     for h in trainer_handles {
         let out = h
             .join()
@@ -275,26 +288,50 @@ pub fn run_cluster_on(
         per_trainer.push(out.metrics);
         walls.push(out.wall);
         measured.push(out.measured);
+        trace_events.extend(out.trace);
     }
     let wall_total = wall_start.elapsed().as_secs_f64();
 
     let mut wire: Vec<WireStats> = Vec::with_capacity(n);
     for (h, links) in pf_handles.into_iter().zip(&link_sets) {
-        let mut w = h.join().map_err(|_| crate::err!("prefetcher thread panicked"))?;
+        let (mut w, pf_trace) =
+            h.join().map_err(|_| crate::err!("prefetcher thread panicked"))?;
         w.links = links.iter().map(LinkStatsHandle::snapshot).collect();
         wire.push(w);
+        trace_events.extend(pf_trace);
     }
     let mut servers: Vec<ServerStats> = Vec::with_capacity(n);
     for h in backstage.server_handles {
-        servers.push(h.join().map_err(|_| crate::err!("feature-server thread panicked"))?);
+        let (s, sv_trace) =
+            h.join().map_err(|_| crate::err!("feature-server thread panicked"))?;
+        servers.push(s);
+        trace_events.extend(sv_trace);
     }
-    let allreduce_rounds = backstage
+    let (allreduce_rounds, hub_trace) = backstage
         .hub_handle
         .join()
         .map_err(|_| crate::err!("allreduce hub thread panicked"))?;
+    trace_events.extend(hub_trace);
     for h in backstage.aux_handles {
         let _ = h.join();
     }
+    if let Some(h) = backstage.loop_handle {
+        trace_events.extend(h.join().map_err(|_| crate::err!("event loop thread panicked"))?);
+    }
+
+    let trace = if ccfg.trace {
+        let mut t = Trace::new(TraceMeta {
+            label: cfg.controller.label(),
+            seed: cfg.seed,
+            transport: ccfg.transport.name().to_string(),
+            compute: ccfg.compute.name().to_string(),
+        });
+        t.events = trace_events;
+        t.sort_canonical();
+        Some(t)
+    } else {
+        None
+    };
 
     // Barrier-synchronized epochs: every trainer records identical virtual
     // epoch times, so trainer 0's series is the run-level series (exactly
@@ -304,7 +341,16 @@ pub fn run_cluster_on(
         .map(|m| m.epoch_times.clone())
         .unwrap_or_default();
     let experiment = ExperimentResult::aggregate(cfg.controller.label(), per_trainer, epoch_times);
-    Ok(ClusterResult { experiment, wall_total, walls, measured, wire, servers, allreduce_rounds })
+    Ok(ClusterResult {
+        experiment,
+        wall_total,
+        walls,
+        measured,
+        wire,
+        servers,
+        allreduce_rounds,
+        trace,
+    })
 }
 
 /// Wire everything over in-process `mpsc` channels.
@@ -345,7 +391,7 @@ fn wire_channel(
 
     // Feature servers: reply routes pre-registered (trainer t's responses
     // are delivered straight into prefetcher t's inbox).
-    let server_handles: Vec<JoinHandle<ServerStats>> = server_rxs
+    let server_handles: Vec<JoinHandle<(ServerStats, Vec<TraceEvent>)>> = server_rxs
         .into_iter()
         .enumerate()
         .map(|(p, rx)| {
@@ -368,6 +414,7 @@ fn wire_channel(
                 prereg,
                 delay,
                 ccfg.fault,
+                ccfg.trace,
             )
         })
         .collect();
@@ -384,7 +431,7 @@ fn wire_channel(
             Box::new(ChannelSender::delivering(tx, |v| v, links[n].clone())),
         ));
     }
-    let hub_handle = spawn_hub(n, hub_rx, hub_prereg, allreduce_sleep);
+    let hub_handle = spawn_hub(n, hub_rx, hub_prereg, allreduce_sleep, ccfg.trace);
 
     // Trainer wirings + prefetchers.
     let mut wirings = Vec::with_capacity(n);
@@ -412,6 +459,7 @@ fn wire_channel(
             request_links,
             part.clone(),
             drain,
+            ccfg.trace,
         );
         wirings.push(TrainerWiring {
             prefetch_tx: pf_txs[t].clone(),
@@ -425,7 +473,10 @@ fn wire_channel(
     // The orchestrator's own channel ends drop here (server_txs, pf_txs,
     // hub_tx), so close-driven shutdown propagates once the workers drop
     // theirs.
-    (wirings, Backstage { server_handles, hub_handle, aux_handles: Vec::new() })
+    (
+        wirings,
+        Backstage { server_handles, hub_handle, aux_handles: Vec::new(), loop_handle: None },
+    )
 }
 
 /// Wire everything over loopback TCP sockets (still in-process threads —
@@ -445,7 +496,8 @@ fn wire_tcp(
 
     // Listeners first (ephemeral loopback ports), so dialing never races.
     let mut server_addrs: Vec<String> = Vec::with_capacity(n);
-    let mut server_handles: Vec<JoinHandle<ServerStats>> = Vec::with_capacity(n);
+    let mut server_handles: Vec<JoinHandle<(ServerStats, Vec<TraceEvent>)>> =
+        Vec::with_capacity(n);
     for p in 0..n {
         let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
         server_addrs.push(listener.local_addr()?.to_string());
@@ -460,13 +512,14 @@ fn wire_tcp(
             Vec::new(),
             delay,
             ccfg.fault,
+            ccfg.trace,
         ));
     }
     let hub_listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let hub_addr = hub_listener.local_addr()?.to_string();
     let (hub_tx, hub_rx) = mpsc::channel::<NetMsg>();
     aux_handles.push(transport::serve_listener(hub_listener, n, hub_tx, "hub", 0));
-    let hub_handle = spawn_hub(n, hub_rx, Vec::new(), allreduce_sleep);
+    let hub_handle = spawn_hub(n, hub_rx, Vec::new(), allreduce_sleep, ccfg.trace);
 
     let mut wirings = Vec::with_capacity(n);
     for t in 0..n {
@@ -474,8 +527,15 @@ fn wire_tcp(
         let store = Arc::new(FeatureStore::new());
         let mut dial = transport::dial_trainer_links(&server_addrs, &hub_addr, t as u32, &pf_tx)?;
         aux_handles.append(&mut dial.pumps);
-        let pf_handle =
-            spawn_prefetcher(t, store.clone(), pf_rx, dial.request_links, part.clone(), drain);
+        let pf_handle = spawn_prefetcher(
+            t,
+            store.clone(),
+            pf_rx,
+            dial.request_links,
+            part.clone(),
+            drain,
+            ccfg.trace,
+        );
         wirings.push(TrainerWiring {
             prefetch_tx: pf_tx,
             hub_tx: dial.hub_tx,
@@ -485,7 +545,7 @@ fn wire_tcp(
             links: dial.links,
         });
     }
-    Ok((wirings, Backstage { server_handles, hub_handle, aux_handles }))
+    Ok((wirings, Backstage { server_handles, hub_handle, aux_handles, loop_handle: None }))
 }
 
 /// Wire everything over the readiness-polled event-loop transport
@@ -516,14 +576,15 @@ fn wire_event(
     }
     let (hub_inbox_tx, hub_inbox_rx) = mpsc::channel::<NetMsg>();
 
-    let ec = super::eventloop::wire_event_cluster(n, &server_txs, &hub_inbox_tx, &pf_txs)?;
+    let ec =
+        super::eventloop::wire_event_cluster(n, &server_txs, &hub_inbox_tx, &pf_txs, ccfg.trace)?;
     // Master inbox clones drop here; close-driven shutdown then hinges on
     // the per-connection route clones the loop releases on close markers.
     drop(server_txs);
     drop(hub_inbox_tx);
 
     let mut server_prereg = ec.server_prereg;
-    let server_handles: Vec<JoinHandle<ServerStats>> = server_rxs
+    let server_handles: Vec<JoinHandle<(ServerStats, Vec<TraceEvent>)>> = server_rxs
         .into_iter()
         .enumerate()
         .map(|(p, rx)| {
@@ -536,16 +597,24 @@ fn wire_event(
                 std::mem::take(&mut server_prereg[p]),
                 delay,
                 ccfg.fault,
+                ccfg.trace,
             )
         })
         .collect();
-    let hub_handle = spawn_hub(n, hub_inbox_rx, ec.hub_prereg, allreduce_sleep);
+    let hub_handle = spawn_hub(n, hub_inbox_rx, ec.hub_prereg, allreduce_sleep, ccfg.trace);
 
     let mut wirings = Vec::with_capacity(n);
     for (t, (end, pf_rx)) in ec.trainers.into_iter().zip(pf_rxs).enumerate() {
         let store = Arc::new(FeatureStore::new());
-        let pf_handle =
-            spawn_prefetcher(t, store.clone(), pf_rx, end.request_links, part.clone(), drain);
+        let pf_handle = spawn_prefetcher(
+            t,
+            store.clone(),
+            pf_rx,
+            end.request_links,
+            part.clone(),
+            drain,
+            ccfg.trace,
+        );
         wirings.push(TrainerWiring {
             prefetch_tx: pf_txs[t].clone(),
             hub_tx: end.hub_tx,
@@ -558,7 +627,12 @@ fn wire_event(
     drop(pf_txs);
     Ok((
         wirings,
-        Backstage { server_handles, hub_handle, aux_handles: vec![ec.loop_handle] },
+        Backstage {
+            server_handles,
+            hub_handle,
+            aux_handles: Vec::new(),
+            loop_handle: Some(ec.loop_handle),
+        },
     ))
 }
 
@@ -581,7 +655,9 @@ pub(crate) fn hub_loop(
     rx: Receiver<NetMsg>,
     prereg: Vec<(u32, Box<dyn FrameSender>)>,
     round_sleep: f64,
-) -> u64 {
+    trace: bool,
+) -> (u64, Vec<TraceEvent>) {
+    let mut tracer = Tracer::new(trace, Role::Hub, 0);
     let mut replies: Vec<Option<Box<dyn FrameSender>>> = (0..n).map(|_| None).collect();
     for (id, s) in prereg {
         if (id as usize) < n {
@@ -635,6 +711,14 @@ pub(crate) fn hub_loop(
                 grads: acc,
             }
             .encode();
+            tracer.emit(
+                max_vclock,
+                EventKind::AllreduceRound {
+                    round: rounds,
+                    vclock_max: max_vclock,
+                    trainers: n as u32,
+                },
+            );
             for r in replies.iter_mut().flatten() {
                 let _ = r.send_frame(&reduced);
             }
@@ -643,7 +727,7 @@ pub(crate) fn hub_loop(
             max_vclock = f64::NEG_INFINITY;
         }
     }
-    rounds
+    (rounds, tracer.finish())
 }
 
 /// Spawn [`hub_loop`] on its own OS thread.
@@ -652,10 +736,11 @@ fn spawn_hub(
     rx: Receiver<NetMsg>,
     prereg: Vec<(u32, Box<dyn FrameSender>)>,
     round_sleep: f64,
-) -> JoinHandle<u64> {
+    trace: bool,
+) -> JoinHandle<(u64, Vec<TraceEvent>)> {
     std::thread::Builder::new()
         .name("rudder-allreduce-hub".into())
-        .spawn(move || hub_loop(n, rx, prereg, round_sleep))
+        .spawn(move || hub_loop(n, rx, prereg, round_sleep, trace))
         .expect("spawn allreduce hub thread")
 }
 

@@ -21,6 +21,7 @@ use std::time::Duration;
 use crate::graph::features::fill_features;
 use crate::net::Network;
 use crate::partition::Partition;
+use crate::trace::{EventKind, Role, TraceEvent, Tracer};
 use crate::util::fasthash::FastMap;
 
 use super::transport::{FaultSender, FaultSpec, FrameSender, NetMsg};
@@ -149,8 +150,10 @@ pub(crate) fn server_loop(
     prereg: Vec<(u32, Box<dyn FrameSender>)>,
     delay: WireDelay,
     fault: Option<FaultSpec>,
-) -> ServerStats {
+    trace: bool,
+) -> (ServerStats, Vec<TraceEvent>) {
     let mut stats = ServerStats { part: part_id, ..ServerStats::default() };
+    let mut tracer = Tracer::new(trace, Role::Server, part_id as u32);
     let shard = FeatureShard::build(&part, part_id, feature_seed, feat_dim);
     let mut replies: FastMap<u32, Box<dyn FrameSender>> = FastMap::default();
     for (id, s) in prereg {
@@ -206,15 +209,20 @@ pub(crate) fn server_loop(
         }
         stats.requests += 1;
         stats.nodes_served += nodes.len() as u64;
+        let served = nodes.len() as u64;
         let out = Frame::FetchResp { req_id, feat_dim: feat_dim as u32, nodes, feats }.encode();
         stats.bytes_out += out.len() as u64;
+        tracer.emit(
+            0.0,
+            EventKind::FetchServe { req_id, from, nodes: served, bytes: out.len() as u64 },
+        );
         delay.emulate(out.len());
         // Prefetcher gone (trainer already finished): drop reply.
         let _ = reply.send_frame(&out);
     }
     // Reply links drop here, flushing any fault-shim-held frames while the
     // peers' drain loops are still reading.
-    stats
+    (stats, tracer.finish())
 }
 
 /// Spawn [`server_loop`] on its own OS thread.
@@ -228,10 +236,13 @@ pub(crate) fn spawn_server(
     prereg: Vec<(u32, Box<dyn FrameSender>)>,
     delay: WireDelay,
     fault: Option<FaultSpec>,
-) -> JoinHandle<ServerStats> {
+    trace: bool,
+) -> JoinHandle<(ServerStats, Vec<TraceEvent>)> {
     std::thread::Builder::new()
         .name(format!("rudder-server-{part_id}"))
-        .spawn(move || server_loop(part_id, feature_seed, feat_dim, part, rx, prereg, delay, fault))
+        .spawn(move || {
+            server_loop(part_id, feature_seed, feat_dim, part, rx, prereg, delay, fault, trace)
+        })
         .expect("spawn feature-server thread")
 }
 
@@ -270,7 +281,7 @@ mod tests {
             1,
             Box::new(ChannelSender::delivering(rep_tx, PrefetchMsg::Wire, link.clone())),
         )];
-        let handle = spawn_server(0, 42, 4, part.clone(), req_rx, prereg, delay, None);
+        let handle = spawn_server(0, 42, 4, part.clone(), req_rx, prereg, delay, None, true);
         req_tx
             .send(NetMsg::Frame(
                 Frame::FetchReq { req_id: 9, from: 1, nodes: owned.clone() }.encode(),
@@ -289,10 +300,16 @@ mod tests {
         crate::graph::features::fill_features(42, owned[1], &mut want);
         assert_eq!(&feats[4..8], &want[..], "row 1 must be node {}'s features", owned[1]);
         drop(req_tx);
-        let stats = handle.join().unwrap();
+        let (stats, trace) = handle.join().unwrap();
         assert_eq!(stats.requests, 1);
         assert_eq!(stats.nodes_served, 3);
         assert!(stats.bytes_out > stats.bytes_in);
+        // One FetchServe event plus the terminal RoleEnd.
+        assert_eq!(trace.len(), 2);
+        assert!(matches!(
+            trace[0].kind,
+            EventKind::FetchServe { req_id: 9, from: 1, nodes: 3, .. }
+        ));
         // Reply delivery counted as received on the trainer-side link.
         let snap = link.snapshot();
         assert_eq!(snap.frames_recv, 1);
@@ -353,12 +370,13 @@ mod tests {
             Box::new(ChannelSender::delivering(rep_tx, PrefetchMsg::Wire, link)),
         )];
         let owned: Vec<u32> = part.local_nodes[0][..2].to_vec();
-        let handle = spawn_server(0, 1, 2, part, req_rx, prereg, delay, Some(fault));
+        let handle = spawn_server(0, 1, 2, part, req_rx, prereg, delay, Some(fault), false);
         req_tx
             .send(NetMsg::Frame(Frame::FetchReq { req_id: 0, from: 0, nodes: owned }.encode()))
             .unwrap();
         drop(req_tx);
-        let stats = handle.join().unwrap();
+        let (stats, trace) = handle.join().unwrap();
+        assert!(trace.is_empty(), "tracing disabled");
         assert_eq!(stats.requests, 1, "server serves each request once");
         let mut replies = 0;
         while let Ok(PrefetchMsg::Wire(_)) = rep_rx.recv() {

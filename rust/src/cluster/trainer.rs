@@ -40,6 +40,7 @@ use crate::partition::Partition;
 use crate::runtime::{ArtifactConfig, Engine};
 use crate::sim::trainer::{FetchPlan, RunCtx};
 use crate::sim::{self, RunConfig};
+use crate::trace::{EventKind, Role, TraceEvent, Tracer};
 use crate::util::rng::derive_seed;
 
 use super::prefetch::{FeatureStore, PrefetchMsg};
@@ -95,6 +96,8 @@ pub(crate) struct TrainerArgs {
     pub hub_rx: Box<dyn FrameReceiver>,
     pub max_mb_per_epoch: usize,
     pub compute: ComputeMode,
+    /// Record a structured trace of this trainer's phases.
+    pub trace: bool,
 }
 
 pub(crate) struct TrainerOutput {
@@ -102,6 +105,8 @@ pub(crate) struct TrainerOutput {
     pub wall: WallStats,
     /// Real-compute accounting (default-empty in emulated mode).
     pub measured: MeasuredStats,
+    /// This trainer's trace buffer (empty unless `TrainerArgs::trace`).
+    pub trace: Vec<TraceEvent>,
 }
 
 pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
@@ -166,6 +171,7 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
     };
 
     let mut wall = WallStats::default();
+    let mut tracer = Tracer::new(a.trace, Role::Trainer, a.part_id as u32);
     let mut round: u64 = 0;
     let time_scale = a.compute.time_scale();
     let wait_budget = io_timeout(time_scale);
@@ -183,6 +189,11 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
             // that skipped a minibatch still track their peers.
             let params_pre: Option<Vec<f32>> = runner.as_ref().map(|r| r.state.flat());
             let mut grads = vec![0.0f32; grads_len];
+            let mb_vstart = t.clock;
+            tracer.emit(
+                mb_vstart,
+                EventKind::MinibatchBegin { epoch: epoch as u32, mb: mb as u32 },
+            );
             // Deterministic core: sampling, lookup, decision, counters.
             let active = t.step_minibatch(&ctx, epoch, mb, &order);
             if active {
@@ -190,6 +201,14 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                     .fetch_plan
                     .replace(FetchPlan::default())
                     .expect("fetch plan armed");
+                let admitted_n = plan.admitted.len() as u64;
+                let evicted_n = plan.evicted.len() as u64;
+                if admitted_n + evicted_n > 0 {
+                    tracer.emit(
+                        t.clock,
+                        EventKind::Replacement { admitted: admitted_n, evicted: evicted_n },
+                    );
+                }
                 // 1. Async prefetch of the replacement admissions — these
                 //    overlap compute; the sim charges them as hidden.
                 if !plan.admitted.is_empty() {
@@ -210,6 +229,14 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                 }
                 let waited = w.elapsed().as_secs_f64();
                 wall.fetch_wait += waited;
+                tracer.emit(
+                    t.clock,
+                    EventKind::FetchWait {
+                        nodes: plan.unique_remote.len() as u64,
+                        wall_secs: waited,
+                    },
+                );
+                let mut compute_wall = 0.0f64;
                 // 4. Compute: real fwd/bwd on the gathered features
                 //    (measured), or a scaled sleep of the modelled T_DDP
                 //    (emulated).
@@ -244,6 +271,7 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                         Err(e) => panic!("trainer {}: measured train step: {e}", a.part_id),
                     };
                     wall.compute += dt;
+                    compute_wall = dt;
                     measured.compute_secs.push(dt);
                     measured.losses.push(loss);
                     measured.rows_from_store += from_store;
@@ -257,8 +285,13 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                 } else if time_scale > 0.0 && plan.t_ddp > 0.0 {
                     let w = Instant::now();
                     std::thread::sleep(Duration::from_secs_f64(plan.t_ddp * time_scale));
-                    wall.compute += w.elapsed().as_secs_f64();
+                    compute_wall = w.elapsed().as_secs_f64();
+                    wall.compute += compute_wall;
                 }
+                tracer.emit(
+                    t.clock,
+                    EventKind::Compute { virtual_secs: plan.t_ddp, wall_secs: compute_wall },
+                );
                 // 5. Bound the store: evictions plus transient misses that
                 //    were not admitted this round.
                 let mut drop_nodes = plan.evicted;
@@ -302,6 +335,7 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
             };
             let barrier_secs = w.elapsed().as_secs_f64();
             wall.barrier += barrier_secs;
+            tracer.emit(t.clock, EventKind::AllreduceWait { round, wall_secs: barrier_secs });
             let (reduced, _) = Frame::decode(&reply).expect("bad hub frame");
             let Frame::Allreduce { vclock: max_vclock, grads: sum, .. } = reduced else {
                 panic!("unexpected hub frame kind");
@@ -320,6 +354,14 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                 r.state.set_flat(&next).expect("param layout");
             }
             t.clock = max_vclock + allreduce;
+            tracer.emit(
+                t.clock,
+                EventKind::MinibatchEnd {
+                    epoch: epoch as u32,
+                    mb: mb as u32,
+                    step_vsecs: t.clock - mb_vstart,
+                },
+            );
             round += 1;
         }
         t.metrics.epoch_times.push(t.clock - epoch_vstart);
@@ -332,5 +374,5 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
     let _ = a.prefetch_tx.send(PrefetchMsg::Shutdown);
     // Half-close the hub link so the hub (thread or process) sees EOF.
     a.hub_tx.close();
-    TrainerOutput { metrics: t.metrics, wall, measured }
+    TrainerOutput { metrics: t.metrics, wall, measured, trace: tracer.finish() }
 }

@@ -513,7 +513,7 @@ pub(crate) fn serve_listener(
                 let stream = match listener.accept() {
                     Ok((s, _)) => s,
                     Err(e) => {
-                        eprintln!("{endpoint}: accept failed: {e}");
+                        crate::log_info!("{endpoint}: accept failed: {e}");
                         break;
                     }
                 };
@@ -522,7 +522,7 @@ pub(crate) fn serve_listener(
                 let read_half = match stream.try_clone() {
                     Ok(s) => s,
                     Err(e) => {
-                        eprintln!("{endpoint}: clone failed: {e}");
+                        crate::log_info!("{endpoint}: clone failed: {e}");
                         continue;
                     }
                 };
@@ -534,12 +534,12 @@ pub(crate) fn serve_listener(
                     Ok(Some(bytes)) => match Frame::decode(&bytes) {
                         Ok((Frame::Hello { id, .. }, _)) => id,
                         _ => {
-                            eprintln!("{endpoint}: bad handshake frame");
+                            crate::log_info!("{endpoint}: bad handshake frame");
                             continue;
                         }
                     },
                     _ => {
-                        eprintln!("{endpoint}: peer closed or stalled before handshake");
+                        crate::log_info!("{endpoint}: peer closed or stalled before handshake");
                         continue;
                     }
                 };
@@ -585,7 +585,7 @@ pub(crate) fn pump_frames<T: Send + 'static>(
                 }
                 Ok(None) => break,
                 Err(e) => {
-                    eprintln!("{label}: link error: {e}");
+                    crate::log_info!("{label}: link error: {e}");
                     break;
                 }
             }

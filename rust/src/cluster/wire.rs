@@ -228,6 +228,14 @@ pub(crate) struct Reader<'a> {
 }
 
 impl<'a> Reader<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
     pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         crate::ensure!(
             self.pos + n <= self.b.len(),

@@ -117,14 +117,37 @@ pub fn wire_table(per_trainer: &[WireStats]) -> Table {
 }
 
 /// Per-link transport counters (one row per trainer×link: feature-server
-/// links and the hub link), including TCP connect retries.
+/// links and the hub link), including TCP connect retries and, for server
+/// links, the wall-clock fetch round-trip p50/p99 (issue → admitted, from
+/// [`WireStats::fetch_latency`], keyed by the link's channel id = owner
+/// partition; the hub link carries no fetches, so it shows "-").
 pub fn link_table(per_trainer: &[WireStats]) -> Table {
     let mut t = Table::new(
         "transport links per trainer",
-        &["trainer", "peer", "chan", "frames_out", "bytes_out", "frames_in", "bytes_in", "reconnects"],
+        &[
+            "trainer",
+            "peer",
+            "chan",
+            "frames_out",
+            "bytes_out",
+            "frames_in",
+            "bytes_in",
+            "reconnects",
+            "fetch_p50",
+            "fetch_p99",
+        ],
     );
     for (i, w) in per_trainer.iter().enumerate() {
         for l in &w.links {
+            let lat = if l.peer.starts_with("server:") {
+                w.fetch_latency.get(l.channel as usize).filter(|h| !h.is_empty())
+            } else {
+                None
+            };
+            let (p50, p99) = match lat {
+                Some(h) => (fmt_secs(h.p50()), fmt_secs(h.p99())),
+                None => ("-".into(), "-".into()),
+            };
             t.row(vec![
                 i.to_string(),
                 l.peer.clone(),
@@ -134,6 +157,8 @@ pub fn link_table(per_trainer: &[WireStats]) -> Table {
                 l.frames_recv.to_string(),
                 fmt_count(l.bytes_recv),
                 l.reconnects.to_string(),
+                p50,
+                p99,
             ]);
         }
     }
@@ -153,6 +178,7 @@ pub fn measured_table(per_trainer: &[MeasuredStats]) -> Table {
             "minibatches",
             "compute",
             "fetch_blocked",
+            "fetch_p99",
             "barrier",
             "mean_loss",
             "rows_store",
@@ -167,6 +193,7 @@ pub fn measured_table(per_trainer: &[MeasuredStats]) -> Table {
             m.compute_secs.len().to_string(),
             fmt_secs(m.total_compute()),
             fmt_secs(m.total_fetch_wait()),
+            fmt_secs(crate::util::stats::percentile(&m.fetch_wait_secs, 99.0)),
             fmt_secs(m.total_barrier()),
             format!("{:.4}", m.mean_loss()),
             fmt_count(m.rows_from_store),

@@ -47,4 +47,5 @@ pub mod partition;
 pub mod runtime;
 pub mod sampler;
 pub mod sim;
+pub mod trace;
 pub mod util;

@@ -24,6 +24,7 @@ use rudder::partition::{self, Method};
 use rudder::runtime::Engine;
 use rudder::sampler::Sampler;
 use rudder::sim::{build_cluster, run_on, trace_only, ControllerSpec, Mode, RunConfig};
+use rudder::trace::Trace;
 use rudder::util::json::Json;
 
 fn main() {
@@ -197,6 +198,7 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
             fault,
             results,
             out,
+            trace: args.flag("record-trace"),
         }),
         "hub" => run_hub_worker(&HubWorkerOpts {
             listen: args.opt_or("listen", "127.0.0.1:0"),
@@ -206,6 +208,7 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
             round_sleep: args.opt_parse::<f64>("round-sleep")?.unwrap_or(0.0),
             results,
             out,
+            trace: args.flag("record-trace"),
         }),
         "trainer" => run_trainer_worker(&TrainerWorkerOpts {
             part: part()?,
@@ -226,6 +229,7 @@ fn cmd_cluster_worker(role: &str, args: &Args) -> rudder::error::Result<()> {
             compute: worker_compute_mode(args, time_scale)?,
             results,
             out,
+            trace: args.flag("record-trace"),
         }),
         other => rudder::bail!("unknown --role '{other}' (trainer|server|hub)"),
     }
@@ -251,7 +255,17 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
     let compute = worker_compute_mode(args, time_scale)?;
     let transport = args.opt_parse::<Transport>("transport")?.unwrap_or_default();
     let fault = args.opt_parse::<FaultSpec>("fault")?;
-    let ccfg = ClusterConfig { run: cfg.clone(), compute, transport, fault };
+    // `--trace <file>` turns the flight recorder on in every role and
+    // writes the merged trace after the run (`.jsonl` = JSON lines,
+    // anything else = RTRC binary framing).
+    let trace_out = args.opt("trace").map(PathBuf::from);
+    let ccfg = ClusterConfig {
+        run: cfg.clone(),
+        compute,
+        transport,
+        fault,
+        trace: trace_out.is_some(),
+    };
     println!(
         "rudder cluster: {} scale={} trainers={} buffer={:.0}% epochs={} controller={} mode={:?} transport={} compute={} time-scale={}",
         cfg.dataset,
@@ -332,6 +346,22 @@ fn cmd_cluster(args: &Args) -> rudder::error::Result<()> {
     if compute.is_measured() {
         measured_table(&r.measured).emit("cluster_measured");
         check_replicas_synced(&r)?;
+    }
+    if let Some(path) = &trace_out {
+        let trace = r
+            .trace
+            .as_ref()
+            .ok_or_else(|| rudder::err!("--trace was set but the run returned no trace"))?;
+        trace.verify_complete()?;
+        let streams: std::collections::BTreeSet<_> =
+            trace.events.iter().map(|e| (e.role.tag(), e.id)).collect();
+        trace.write_file(path)?;
+        println!(
+            "trace: {} events across {} role streams -> {}",
+            trace.events.len(),
+            streams.len(),
+            path.display()
+        );
     }
 
     if args.flag("parity") {
@@ -479,13 +509,16 @@ fn bench_scale_matrix(base_seed: u64) -> rudder::error::Result<Json> {
                     compute: ComputeMode::Emulated(0.0),
                     transport,
                     fault: None,
+                    trace: false,
                 };
                 let mut best_wall = f64::INFINITY;
                 let mut wire_bytes = 0u64;
+                let mut rtt = rudder::util::stats::LogHistogram::new();
                 for _ in 0..REPS {
                     let r = run_cluster_on(ds.clone(), part.clone(), &ccfg, None)?;
                     let w = r.wire_total();
                     wire_bytes = w.req_bytes + w.resp_bytes;
+                    rtt.merge(&w.fetch_latency_total());
                     best_wall = best_wall.min(r.wall_total);
                 }
                 tput[i] = if best_wall > 0.0 { wire_bytes as f64 / best_wall } else { 0.0 };
@@ -504,6 +537,8 @@ fn bench_scale_matrix(base_seed: u64) -> rudder::error::Result<Json> {
                     ("wall_best_s", Json::num(best_wall)),
                     ("wire_bytes", Json::num(wire_bytes as f64)),
                     ("throughput_bytes_per_s", Json::num(tput[i])),
+                    ("fetch_rtt_p50_s", Json::num(rtt.p50())),
+                    ("fetch_rtt_p99_s", Json::num(rtt.p99())),
                 ]));
             }
             ratios.push(Json::obj(vec![
@@ -556,6 +591,10 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
     let out_path = args.opt_or("out", "BENCH_cluster.json");
     let min_speedup = args.opt_parse::<f64>("min-speedup")?.unwrap_or(0.0);
     let max_blocked_ratio = args.opt_parse::<f64>("max-blocked-ratio")?.unwrap_or(f64::INFINITY);
+    // `--trace-dir <dir>` records a flight-recorder trace of both variants
+    // and writes `<dir>/prefetch.trace` + `<dir>/baseline.trace` (binary;
+    // `rudder trace dump` converts to JSONL).
+    let trace_dir = args.opt("trace-dir").map(PathBuf::from);
     println!(
         "rudder bench: measured-compute cluster, {} scale={} trainers={} epochs={} controller={}",
         cfg.dataset,
@@ -572,6 +611,7 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
         compute: ComputeMode::Measured,
         transport: Transport::Channel,
         fault: None,
+        trace: trace_dir.is_some(),
     };
     let on = run_cluster_on(ds.clone(), part.clone(), &ccfg, None)?;
     check_replicas_synced(&on)?;
@@ -580,12 +620,39 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
     off_ccfg.run.controller = ControllerSpec::NoPrefetch;
     let off = run_cluster_on(ds, part, &off_ccfg, None)?;
     check_replicas_synced(&off)?;
+    if let Some(dir) = &trace_dir {
+        std::fs::create_dir_all(dir)?;
+        for (name, r) in [("prefetch", &on), ("baseline", &off)] {
+            let trace = r
+                .trace
+                .as_ref()
+                .ok_or_else(|| rudder::err!("bench {name} run returned no trace"))?;
+            trace.verify_complete()?;
+            let path = dir.join(format!("{name}.trace"));
+            trace.write_file(&path)?;
+            println!("bench: wrote {} ({} events)", path.display(), trace.events.len());
+        }
+    }
 
     let fetch_blocked = |r: &ClusterResult| -> f64 { r.walls.iter().map(|w| w.fetch_wait).sum() };
+    // Per-phase percentile summary (schema v3): every measured minibatch
+    // contributes one wall-clock sample per phase, pooled across trainers.
+    let phase_json = |samples: &[f64]| -> Json {
+        Json::obj(vec![
+            ("count", Json::num(samples.len() as f64)),
+            ("p50_s", Json::num(rudder::util::stats::percentile(samples, 50.0))),
+            ("p95_s", Json::num(rudder::util::stats::percentile(samples, 95.0))),
+            ("p99_s", Json::num(rudder::util::stats::percentile(samples, 99.0))),
+        ])
+    };
     let variant_json = |r: &ClusterResult| -> Json {
         let wire = r.wire_total();
         let losses: Vec<f64> = r.measured.iter().map(|m| m.mean_loss()).collect();
         let minibatches: u64 = r.walls.iter().map(|w| w.minibatches).sum();
+        let pool = |pick: fn(&rudder::metrics::MeasuredStats) -> &[f64]| -> Vec<f64> {
+            r.measured.iter().flat_map(|m| pick(m).iter().copied()).collect()
+        };
+        let rtt = wire.fetch_latency_total();
         Json::obj(vec![
             ("label", Json::str(r.experiment.label.clone())),
             ("wall_total_s", Json::num(r.wall_total)),
@@ -598,6 +665,23 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
             ("wire_req_bytes", Json::num(wire.req_bytes as f64)),
             ("wire_resp_bytes", Json::num(wire.resp_bytes as f64)),
             ("mean_loss", Json::num(rudder::util::stats::mean(&losses))),
+            (
+                "phases",
+                Json::obj(vec![
+                    ("compute", phase_json(&pool(|m| &m.compute_secs))),
+                    ("fetch_wait", phase_json(&pool(|m| &m.fetch_wait_secs))),
+                    ("barrier", phase_json(&pool(|m| &m.barrier_secs))),
+                    (
+                        "fetch_rtt",
+                        Json::obj(vec![
+                            ("count", Json::num(rtt.count() as f64)),
+                            ("p50_s", Json::num(rtt.p50())),
+                            ("p95_s", Json::num(rtt.p95())),
+                            ("p99_s", Json::num(rtt.p99())),
+                        ]),
+                    ),
+                ]),
+            ),
         ])
     };
     let scale_matrix = if args.flag("skip-scale-matrix") {
@@ -613,7 +697,7 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
         1.0
     };
     let mut fields = vec![
-        ("schema", Json::str("rudder-bench-cluster/v2")),
+        ("schema", Json::str("rudder-bench-cluster/v3")),
         (
             "config",
             Json::obj(vec![
@@ -686,7 +770,18 @@ fn sanitize(s: &str) -> String {
         .collect()
 }
 
+/// `rudder trace <dump|stats|diff>` — flight-recorder tooling — or, with
+/// no subcommand, the legacy trace-only classifier data collection.
 fn cmd_trace(args: &Args) -> rudder::error::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("dump") => return cmd_trace_dump(args),
+        Some("stats") => return cmd_trace_stats(args),
+        Some("diff") => return cmd_trace_diff(args),
+        Some(other) => {
+            rudder::bail!("unknown trace subcommand '{other}' (dump|stats|diff)")
+        }
+        None => {}
+    }
     let cfg = config_from_args(args)?;
     let (ds, part) = build_cluster(&cfg)?;
     let set = trace_only(&ds, &part, &cfg);
@@ -714,6 +809,70 @@ fn cmd_trace(args: &Args) -> rudder::error::Result<()> {
         std::fs::write(out, Json::Arr(examples).to_string_pretty())?;
         println!("wrote {out}");
     }
+    Ok(())
+}
+
+fn trace_file_arg(args: &Args, idx: usize, what: &str) -> rudder::error::Result<PathBuf> {
+    args.positional
+        .get(idx)
+        .map(PathBuf::from)
+        .ok_or_else(|| rudder::err!("trace {}: missing {what} file", args.positional[0]))
+}
+
+/// `rudder trace dump <file> [--out <file>]` — convert a trace between
+/// the RTRC binary and JSONL forms (extension of `--out` picks the
+/// output codec; no `--out` prints JSONL to stdout).
+fn cmd_trace_dump(args: &Args) -> rudder::error::Result<()> {
+    let input = trace_file_arg(args, 1, "input trace")?;
+    let t = Trace::read_file(&input)?;
+    match args.opt("out") {
+        Some(out) => {
+            t.write_file(std::path::Path::new(out))?;
+            println!("wrote {out} ({} events)", t.events.len());
+        }
+        None => print!("{}", rudder::trace::codec::to_jsonl(&t)?),
+    }
+    Ok(())
+}
+
+/// `rudder trace stats <file>` — per-phase latency percentiles,
+/// fetch-blocked breakdown, and per-link timelines from one trace.
+fn cmd_trace_stats(args: &Args) -> rudder::error::Result<()> {
+    let input = trace_file_arg(args, 1, "input trace")?;
+    let t = Trace::read_file(&input)?;
+    t.verify_complete()?;
+    println!(
+        "trace: label={} seed={} transport={} compute={} events={}",
+        t.meta.label,
+        t.meta.seed,
+        t.meta.transport,
+        t.meta.compute,
+        t.events.len()
+    );
+    for table in rudder::trace::stats::render_all(&t) {
+        println!("{}", table.render());
+    }
+    Ok(())
+}
+
+/// `rudder trace diff <a> <b>` — compare the virtual-time fields of two
+/// same-seed traces; exits non-zero on any mismatch.  Wall-clock fields
+/// and arrival order are excluded, so same-seed runs on different
+/// transports (channel / tcp / event) must diff clean.
+fn cmd_trace_diff(args: &Args) -> rudder::error::Result<()> {
+    let a_path = trace_file_arg(args, 1, "left trace")?;
+    let b_path = trace_file_arg(args, 2, "right trace")?;
+    let a = Trace::read_file(&a_path)?;
+    let b = Trace::read_file(&b_path)?;
+    let report = rudder::trace::diff::diff(&a, &b);
+    println!("{}", report.render().trim_end());
+    rudder::ensure!(
+        report.identical(),
+        "trace diff: {} virtual-time mismatches between {} and {}",
+        report.mismatches.len(),
+        a_path.display(),
+        b_path.display()
+    );
     Ok(())
 }
 

@@ -147,6 +147,12 @@ pub struct WireStats {
     /// Per-link transport counters (feature-server links, then the hub
     /// link).  Timing-independent except for `reconnects`.
     pub links: Vec<LinkStats>,
+    /// Per-owner fetch round-trip latency (FetchReq issued → FetchResp
+    /// admitted), indexed by owner partition = the server link's channel
+    /// id.  Wall-clock data, so it lives here — NOT in [`LinkStats`],
+    /// whose `Eq` the cross-transport tests rely on — and is excluded
+    /// from `cluster::wire_parity`.
+    pub fetch_latency: Vec<crate::util::stats::LogHistogram>,
 }
 
 /// Measured-compute accounting from the cluster runtime's
@@ -224,6 +230,21 @@ impl WireStats {
         self.dup_frames += o.dup_frames;
         self.bad_frames += o.bad_frames;
         self.links.extend(o.links.iter().cloned());
+        if self.fetch_latency.len() < o.fetch_latency.len() {
+            self.fetch_latency.resize_with(o.fetch_latency.len(), Default::default);
+        }
+        for (mine, theirs) in self.fetch_latency.iter_mut().zip(&o.fetch_latency) {
+            mine.merge(theirs);
+        }
+    }
+
+    /// All owners' fetch latency pooled into one histogram.
+    pub fn fetch_latency_total(&self) -> crate::util::stats::LogHistogram {
+        let mut all = crate::util::stats::LogHistogram::new();
+        for h in &self.fetch_latency {
+            all.merge(h);
+        }
+        all
     }
 }
 

@@ -89,15 +89,12 @@ impl Engine {
             match Engine::load(&dir) {
                 Ok(e) => Some(e),
                 Err(err) => {
-                    eprintln!("warning: artifacts present but unloadable: {err}");
+                    crate::log_info!("warning: artifacts present but unloadable: {err}");
                     None
                 }
             }
         } else if std::env::var_os("RUDDER_ARTIFACTS").is_some() {
-            eprintln!(
-                "warning: $RUDDER_ARTIFACTS={} has no manifest.json",
-                dir.display()
-            );
+            crate::log_info!("warning: $RUDDER_ARTIFACTS={} has no manifest.json", dir.display());
             None
         } else {
             Some(Engine::builtin(ArtifactConfig::default()))

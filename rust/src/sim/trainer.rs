@@ -416,7 +416,7 @@ impl Trainer {
             match runner.train_step(&mbatch, ctx.ds.feature_seed, &ctx.ds.labels) {
                 Ok((_loss, dt)) => dt,
                 Err(e) => {
-                    eprintln!("runtime train step failed ({e}); falling back to model");
+                    crate::log_info!("runtime train step failed ({e}); falling back to model");
                     ctx.compute.step_time(mbatch.targets.len())
                 }
             }

@@ -1,0 +1,670 @@
+//! Trace serializations: compact binary framing ⇄ JSON lines.
+//!
+//! Both forms carry the identical information and convert losslessly in
+//! both directions (`rudder trace dump`):
+//!
+//! * **Binary** — `RTRC` magic, `u32` version, run metadata, `u64` event
+//!   count, then one `[u32 len][payload]` frame per event (the wire-format
+//!   pattern).  Floats travel as raw IEEE bits; truncated or corrupt
+//!   prefixes decode to a clean error, never a panic.
+//! * **JSONL** — one header object (`"format": "rudder-trace/v1"`) then
+//!   one flat object per event.  Integer fields are bounded to 2^53 and
+//!   floats are finite (enforced at encode), so JSON numbers — shortest
+//!   round-trip decimals — reproduce every bit.
+
+use crate::cluster::wire::{put_u32, put_u64, Reader};
+use crate::error::Result;
+use crate::util::json::Json;
+
+use super::{norm_f64, EventKind, Role, Trace, TraceEvent, TraceMeta};
+
+/// Binary trace magic (also the sniff key in [`Trace::read_file`]).
+pub const MAGIC: &[u8] = b"RTRC";
+/// Binary format version.
+pub const VERSION: u32 = 1;
+/// JSONL header `format` value.
+pub const JSONL_FORMAT: &str = "rudder-trace/v1";
+
+/// Sanity cap on one encoded event (a corrupt length prefix must not
+/// drive a huge allocation).
+const MAX_EVENT_BYTES: u32 = 1 << 16;
+/// Integer fields must fit in an IEEE double exactly.
+const MAX_SAFE_INT: u64 = 1 << 53;
+
+// ---------------------------------------------------------------- binary
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(r: &mut Reader<'_>) -> Result<String> {
+    let n = r.u32()? as usize;
+    crate::ensure!(n <= MAX_EVENT_BYTES as usize, "trace string length {n} too large");
+    let b = r.take(n)?;
+    Ok(std::str::from_utf8(b).map_err(|_| crate::err!("trace string not utf-8"))?.to_string())
+}
+
+fn encode_kind(out: &mut Vec<u8>, k: &EventKind) {
+    out.push(k.tag());
+    match *k {
+        EventKind::MinibatchBegin { epoch, mb } => {
+            put_u32(out, epoch);
+            put_u32(out, mb);
+        }
+        EventKind::MinibatchEnd { epoch, mb, step_vsecs } => {
+            put_u32(out, epoch);
+            put_u32(out, mb);
+            put_f64(out, step_vsecs);
+        }
+        EventKind::FetchWait { nodes, wall_secs } => {
+            put_u64(out, nodes);
+            put_f64(out, wall_secs);
+        }
+        EventKind::Compute { virtual_secs, wall_secs } => {
+            put_f64(out, virtual_secs);
+            put_f64(out, wall_secs);
+        }
+        EventKind::Replacement { admitted, evicted } => {
+            put_u64(out, admitted);
+            put_u64(out, evicted);
+        }
+        EventKind::AllreduceWait { round, wall_secs } => {
+            put_u64(out, round);
+            put_f64(out, wall_secs);
+        }
+        EventKind::FetchIssue { req_id, owner, nodes, bytes } => {
+            put_u64(out, req_id);
+            put_u32(out, owner);
+            put_u64(out, nodes);
+            put_u64(out, bytes);
+        }
+        EventKind::FetchResponse { req_id, nodes, bytes } => {
+            put_u64(out, req_id);
+            put_u64(out, nodes);
+            put_u64(out, bytes);
+        }
+        EventKind::Evict { nodes } => put_u64(out, nodes),
+        EventKind::BatchFlush { owner, frames, bytes } => {
+            put_u32(out, owner);
+            put_u64(out, frames);
+            put_u64(out, bytes);
+        }
+        EventKind::FetchServe { req_id, from, nodes, bytes } => {
+            put_u64(out, req_id);
+            put_u32(out, from);
+            put_u64(out, nodes);
+            put_u64(out, bytes);
+        }
+        EventKind::AllreduceRound { round, vclock_max, trainers } => {
+            put_u64(out, round);
+            put_f64(out, vclock_max);
+            put_u32(out, trainers);
+        }
+        EventKind::LinkFlush { conn, frames, bytes } => {
+            put_u32(out, conn);
+            put_u64(out, frames);
+            put_u64(out, bytes);
+        }
+        EventKind::ChannelClose { conn, channel } => {
+            put_u32(out, conn);
+            put_u32(out, channel);
+        }
+        EventKind::RoleEnd { emitted } => put_u64(out, emitted),
+    }
+}
+
+fn decode_kind(r: &mut Reader<'_>) -> Result<EventKind> {
+    let tag = r.u8()?;
+    Ok(match tag {
+        1 => EventKind::MinibatchBegin { epoch: r.u32()?, mb: r.u32()? },
+        2 => EventKind::MinibatchEnd { epoch: r.u32()?, mb: r.u32()?, step_vsecs: r.f64()? },
+        3 => EventKind::FetchWait { nodes: r.u64()?, wall_secs: r.f64()? },
+        4 => EventKind::Compute { virtual_secs: r.f64()?, wall_secs: r.f64()? },
+        5 => EventKind::Replacement { admitted: r.u64()?, evicted: r.u64()? },
+        6 => EventKind::AllreduceWait { round: r.u64()?, wall_secs: r.f64()? },
+        7 => EventKind::FetchIssue {
+            req_id: r.u64()?,
+            owner: r.u32()?,
+            nodes: r.u64()?,
+            bytes: r.u64()?,
+        },
+        8 => EventKind::FetchResponse { req_id: r.u64()?, nodes: r.u64()?, bytes: r.u64()? },
+        9 => EventKind::Evict { nodes: r.u64()? },
+        10 => EventKind::BatchFlush { owner: r.u32()?, frames: r.u64()?, bytes: r.u64()? },
+        11 => EventKind::FetchServe {
+            req_id: r.u64()?,
+            from: r.u32()?,
+            nodes: r.u64()?,
+            bytes: r.u64()?,
+        },
+        12 => EventKind::AllreduceRound {
+            round: r.u64()?,
+            vclock_max: r.f64()?,
+            trainers: r.u32()?,
+        },
+        13 => EventKind::LinkFlush { conn: r.u32()?, frames: r.u64()?, bytes: r.u64()? },
+        14 => EventKind::ChannelClose { conn: r.u32()?, channel: r.u32()? },
+        15 => EventKind::RoleEnd { emitted: r.u64()? },
+        t => crate::bail!("unknown trace event tag {t}"),
+    })
+}
+
+/// Encode one event as a binary `[u32 len][payload]` frame.  Shared by
+/// the full-trace form below and the multiproc result blobs
+/// ([`crate::cluster::ipc`]).  Errors outside the trace domain.
+pub(crate) fn put_event(out: &mut Vec<u8>, e: &TraceEvent) -> Result<()> {
+    check_domain(e)?;
+    let mut buf = Vec::with_capacity(64);
+    buf.push(e.role.tag());
+    put_u32(&mut buf, e.id);
+    put_u64(&mut buf, e.seq);
+    put_f64(&mut buf, e.vclock);
+    put_f64(&mut buf, e.wall);
+    encode_kind(&mut buf, &e.kind);
+    put_u32(out, buf.len() as u32);
+    out.extend_from_slice(&buf);
+    Ok(())
+}
+
+/// Decode one `[u32 len][payload]` event frame (inverse of
+/// [`put_event`]).
+pub(crate) fn get_event(r: &mut Reader<'_>) -> Result<TraceEvent> {
+    let len = r.u32()?;
+    crate::ensure!(len <= MAX_EVENT_BYTES, "trace event oversized ({len} bytes)");
+    let payload = r.take(len as usize)?;
+    event_from_payload(payload)
+}
+
+fn event_from_payload(payload: &[u8]) -> Result<TraceEvent> {
+    let mut er = Reader::new(payload);
+    let role_tag = er.u8()?;
+    let role = Role::from_tag(role_tag)
+        .ok_or_else(|| crate::err!("trace event: unknown role tag {role_tag}"))?;
+    let ev = TraceEvent {
+        role,
+        id: er.u32()?,
+        seq: er.u64()?,
+        vclock: er.f64()?,
+        wall: er.f64()?,
+        kind: decode_kind(&mut er)?,
+    };
+    crate::ensure!(er.remaining() == 0, "trace event: {} trailing bytes", er.remaining());
+    // Decode-side domain check too: corrupt payload bytes that still
+    // parse structurally (e.g. a mangled counter) must not produce an
+    // out-of-domain trace that the JSONL codec would then mangle.
+    check_domain(&ev)?;
+    Ok(ev)
+}
+
+/// Encode a full trace to the binary form.  Errors on non-finite floats
+/// or integers above 2^53 (outside the declared trace domain).
+pub fn encode_binary(t: &Trace) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(64 + t.events.len() * 48);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_str(&mut out, &t.meta.label);
+    put_u64(&mut out, t.meta.seed);
+    put_str(&mut out, &t.meta.transport);
+    put_str(&mut out, &t.meta.compute);
+    put_u64(&mut out, t.events.len() as u64);
+    for e in &t.events {
+        put_event(&mut out, e)?;
+    }
+    Ok(out)
+}
+
+/// Decode the binary form.  Truncated or corrupt input yields an error
+/// naming what broke — never a panic, never a silently partial trace.
+pub fn decode_binary(bytes: &[u8]) -> Result<Trace> {
+    crate::ensure!(bytes.len() >= 8, "trace blob too short for header");
+    crate::ensure!(&bytes[..4] == MAGIC, "bad trace magic (want RTRC)");
+    let mut r = Reader::new(&bytes[4..]);
+    let version = r.u32()?;
+    crate::ensure!(version == VERSION, "unsupported trace version {version} (have {VERSION})");
+    let meta = TraceMeta {
+        label: get_str(&mut r)?,
+        seed: r.u64()?,
+        transport: get_str(&mut r)?,
+        compute: get_str(&mut r)?,
+    };
+    let count = r.u64()?;
+    let mut events = Vec::new();
+    for i in 0..count {
+        let len = r
+            .u32()
+            .map_err(|_| crate::err!("trace truncated at event {i}/{count} (length prefix)"))?;
+        crate::ensure!(len <= MAX_EVENT_BYTES, "trace event {i} oversized ({len} bytes)");
+        let payload =
+            r.take(len as usize).map_err(|_| crate::err!("trace truncated at event {i}/{count}"))?;
+        let ev = event_from_payload(payload).map_err(|e| crate::err!("trace event {i}: {e}"))?;
+        events.push(ev);
+    }
+    crate::ensure!(r.remaining() == 0, "trace blob has {} trailing bytes", r.remaining());
+    Ok(Trace { meta, events })
+}
+
+fn check_domain(e: &TraceEvent) -> Result<()> {
+    let fin = |v: f64, what: &str| -> Result<()> {
+        crate::ensure!(v.is_finite(), "non-finite {what} in trace event (seq {})", e.seq);
+        Ok(())
+    };
+    let int = |v: u64, what: &str| -> Result<()> {
+        crate::ensure!(v <= MAX_SAFE_INT, "{what} {v} exceeds 2^53 trace integer domain");
+        Ok(())
+    };
+    fin(e.vclock, "vclock")?;
+    fin(e.wall, "wall")?;
+    int(e.seq, "seq")?;
+    match e.kind {
+        EventKind::MinibatchEnd { step_vsecs, .. } => fin(step_vsecs, "step_vsecs")?,
+        EventKind::FetchWait { nodes, wall_secs } => {
+            int(nodes, "nodes")?;
+            fin(wall_secs, "wall_secs")?;
+        }
+        EventKind::Compute { virtual_secs, wall_secs } => {
+            fin(virtual_secs, "virtual_secs")?;
+            fin(wall_secs, "wall_secs")?;
+        }
+        EventKind::Replacement { admitted, evicted } => {
+            int(admitted, "admitted")?;
+            int(evicted, "evicted")?;
+        }
+        EventKind::AllreduceWait { round, wall_secs } => {
+            int(round, "round")?;
+            fin(wall_secs, "wall_secs")?;
+        }
+        EventKind::FetchIssue { req_id, nodes, bytes, .. } => {
+            int(req_id, "req_id")?;
+            int(nodes, "nodes")?;
+            int(bytes, "bytes")?;
+        }
+        EventKind::FetchResponse { req_id, nodes, bytes } => {
+            int(req_id, "req_id")?;
+            int(nodes, "nodes")?;
+            int(bytes, "bytes")?;
+        }
+        EventKind::Evict { nodes } => int(nodes, "nodes")?,
+        EventKind::BatchFlush { frames, bytes, .. } => {
+            int(frames, "frames")?;
+            int(bytes, "bytes")?;
+        }
+        EventKind::FetchServe { req_id, nodes, bytes, .. } => {
+            int(req_id, "req_id")?;
+            int(nodes, "nodes")?;
+            int(bytes, "bytes")?;
+        }
+        EventKind::AllreduceRound { round, vclock_max, .. } => {
+            int(round, "round")?;
+            fin(vclock_max, "vclock_max")?;
+        }
+        EventKind::LinkFlush { frames, bytes, .. } => {
+            int(frames, "frames")?;
+            int(bytes, "bytes")?;
+        }
+        EventKind::RoleEnd { emitted } => int(emitted, "emitted")?,
+        EventKind::MinibatchBegin { .. } | EventKind::ChannelClose { .. } => {}
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- jsonl
+
+fn ju(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn jf(v: f64) -> Json {
+    Json::Num(norm_f64(v))
+}
+
+fn kind_fields(k: &EventKind) -> Vec<(&'static str, Json)> {
+    match *k {
+        EventKind::MinibatchBegin { epoch, mb } => {
+            vec![("epoch", ju(epoch as u64)), ("mb", ju(mb as u64))]
+        }
+        EventKind::MinibatchEnd { epoch, mb, step_vsecs } => vec![
+            ("epoch", ju(epoch as u64)),
+            ("mb", ju(mb as u64)),
+            ("step_vsecs", jf(step_vsecs)),
+        ],
+        EventKind::FetchWait { nodes, wall_secs } => {
+            vec![("nodes", ju(nodes)), ("wall_secs", jf(wall_secs))]
+        }
+        EventKind::Compute { virtual_secs, wall_secs } => {
+            vec![("virtual_secs", jf(virtual_secs)), ("wall_secs", jf(wall_secs))]
+        }
+        EventKind::Replacement { admitted, evicted } => {
+            vec![("admitted", ju(admitted)), ("evicted", ju(evicted))]
+        }
+        EventKind::AllreduceWait { round, wall_secs } => {
+            vec![("round", ju(round)), ("wall_secs", jf(wall_secs))]
+        }
+        EventKind::FetchIssue { req_id, owner, nodes, bytes } => vec![
+            ("req_id", ju(req_id)),
+            ("owner", ju(owner as u64)),
+            ("nodes", ju(nodes)),
+            ("bytes", ju(bytes)),
+        ],
+        EventKind::FetchResponse { req_id, nodes, bytes } => {
+            vec![("req_id", ju(req_id)), ("nodes", ju(nodes)), ("bytes", ju(bytes))]
+        }
+        EventKind::Evict { nodes } => vec![("nodes", ju(nodes))],
+        EventKind::BatchFlush { owner, frames, bytes } => {
+            vec![("owner", ju(owner as u64)), ("frames", ju(frames)), ("bytes", ju(bytes))]
+        }
+        EventKind::FetchServe { req_id, from, nodes, bytes } => vec![
+            ("req_id", ju(req_id)),
+            ("from", ju(from as u64)),
+            ("nodes", ju(nodes)),
+            ("bytes", ju(bytes)),
+        ],
+        EventKind::AllreduceRound { round, vclock_max, trainers } => vec![
+            ("round", ju(round)),
+            ("vclock_max", jf(vclock_max)),
+            ("trainers", ju(trainers as u64)),
+        ],
+        EventKind::LinkFlush { conn, frames, bytes } => {
+            vec![("conn", ju(conn as u64)), ("frames", ju(frames)), ("bytes", ju(bytes))]
+        }
+        EventKind::ChannelClose { conn, channel } => {
+            vec![("conn", ju(conn as u64)), ("channel", ju(channel as u64))]
+        }
+        EventKind::RoleEnd { emitted } => vec![("emitted", ju(emitted))],
+    }
+}
+
+/// Encode to JSON lines: one header object, then one object per event.
+pub fn to_jsonl(t: &Trace) -> Result<String> {
+    let mut out = String::new();
+    let header = Json::obj(vec![
+        ("format", Json::str(JSONL_FORMAT)),
+        ("label", Json::str(t.meta.label.clone())),
+        ("seed", ju(t.meta.seed)),
+        ("transport", Json::str(t.meta.transport.clone())),
+        ("compute", Json::str(t.meta.compute.clone())),
+        ("events", ju(t.events.len() as u64)),
+    ]);
+    out.push_str(&header.to_string_compact());
+    out.push('\n');
+    for e in &t.events {
+        check_domain(e)?;
+        let mut fields = vec![
+            ("role", Json::str(e.role.name())),
+            ("id", ju(e.id as u64)),
+            ("seq", ju(e.seq)),
+            ("vclock", jf(e.vclock)),
+            ("wall", jf(e.wall)),
+            ("kind", Json::str(e.kind.name())),
+        ];
+        fields.extend(kind_fields(&e.kind));
+        out.push_str(&Json::obj(fields).to_string_compact());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+fn want_u64(j: &Json, key: &str) -> Result<u64> {
+    let n = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| crate::err!("trace jsonl: missing numeric field '{key}'"))?;
+    crate::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n <= MAX_SAFE_INT as f64,
+        "trace jsonl: field '{key}' = {n} is not a trace integer"
+    );
+    Ok(n as u64)
+}
+
+fn want_u32(j: &Json, key: &str) -> Result<u32> {
+    let v = want_u64(j, key)?;
+    crate::ensure!(v <= u32::MAX as u64, "trace jsonl: field '{key}' = {v} exceeds u32");
+    Ok(v as u32)
+}
+
+fn want_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| crate::err!("trace jsonl: missing numeric field '{key}'"))
+}
+
+fn want_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| crate::err!("trace jsonl: missing string field '{key}'"))
+}
+
+fn kind_from_json(name: &str, j: &Json) -> Result<EventKind> {
+    Ok(match name {
+        "minibatch_begin" => {
+            EventKind::MinibatchBegin { epoch: want_u32(j, "epoch")?, mb: want_u32(j, "mb")? }
+        }
+        "minibatch_end" => EventKind::MinibatchEnd {
+            epoch: want_u32(j, "epoch")?,
+            mb: want_u32(j, "mb")?,
+            step_vsecs: want_f64(j, "step_vsecs")?,
+        },
+        "fetch_wait" => EventKind::FetchWait {
+            nodes: want_u64(j, "nodes")?,
+            wall_secs: want_f64(j, "wall_secs")?,
+        },
+        "compute" => EventKind::Compute {
+            virtual_secs: want_f64(j, "virtual_secs")?,
+            wall_secs: want_f64(j, "wall_secs")?,
+        },
+        "replacement" => EventKind::Replacement {
+            admitted: want_u64(j, "admitted")?,
+            evicted: want_u64(j, "evicted")?,
+        },
+        "allreduce_wait" => EventKind::AllreduceWait {
+            round: want_u64(j, "round")?,
+            wall_secs: want_f64(j, "wall_secs")?,
+        },
+        "fetch_issue" => EventKind::FetchIssue {
+            req_id: want_u64(j, "req_id")?,
+            owner: want_u32(j, "owner")?,
+            nodes: want_u64(j, "nodes")?,
+            bytes: want_u64(j, "bytes")?,
+        },
+        "fetch_response" => EventKind::FetchResponse {
+            req_id: want_u64(j, "req_id")?,
+            nodes: want_u64(j, "nodes")?,
+            bytes: want_u64(j, "bytes")?,
+        },
+        "evict" => EventKind::Evict { nodes: want_u64(j, "nodes")? },
+        "batch_flush" => EventKind::BatchFlush {
+            owner: want_u32(j, "owner")?,
+            frames: want_u64(j, "frames")?,
+            bytes: want_u64(j, "bytes")?,
+        },
+        "fetch_serve" => EventKind::FetchServe {
+            req_id: want_u64(j, "req_id")?,
+            from: want_u32(j, "from")?,
+            nodes: want_u64(j, "nodes")?,
+            bytes: want_u64(j, "bytes")?,
+        },
+        "allreduce_round" => EventKind::AllreduceRound {
+            round: want_u64(j, "round")?,
+            vclock_max: want_f64(j, "vclock_max")?,
+            trainers: want_u32(j, "trainers")?,
+        },
+        "link_flush" => EventKind::LinkFlush {
+            conn: want_u32(j, "conn")?,
+            frames: want_u64(j, "frames")?,
+            bytes: want_u64(j, "bytes")?,
+        },
+        "channel_close" => EventKind::ChannelClose {
+            conn: want_u32(j, "conn")?,
+            channel: want_u32(j, "channel")?,
+        },
+        "role_end" => EventKind::RoleEnd { emitted: want_u64(j, "emitted")? },
+        other => crate::bail!("trace jsonl: unknown event kind '{other}'"),
+    })
+}
+
+/// Parse the JSON-lines form back into a [`Trace`].
+pub fn from_jsonl(text: &str) -> Result<Trace> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, head) = lines.next().ok_or_else(|| crate::err!("trace jsonl: empty input"))?;
+    let h = Json::parse(head).map_err(|e| crate::err!("trace jsonl header: {e}"))?;
+    let format = want_str(&h, "format")?;
+    crate::ensure!(
+        format == JSONL_FORMAT,
+        "trace jsonl: unsupported format '{format}' (have {JSONL_FORMAT})"
+    );
+    let meta = TraceMeta {
+        label: want_str(&h, "label")?.to_string(),
+        seed: want_u64(&h, "seed")?,
+        transport: want_str(&h, "transport")?.to_string(),
+        compute: want_str(&h, "compute")?.to_string(),
+    };
+    let declared = want_u64(&h, "events")?;
+    let mut events = Vec::new();
+    for (lineno, line) in lines {
+        let j = Json::parse(line)
+            .map_err(|e| crate::err!("trace jsonl line {}: {e}", lineno + 1))?;
+        let kind_name = want_str(&j, "kind")?;
+        let role_name = want_str(&j, "role")?;
+        let role = Role::from_name(role_name).ok_or_else(|| {
+            crate::err!("trace jsonl line {}: unknown role '{role_name}'", lineno + 1)
+        })?;
+        events.push(TraceEvent {
+            role,
+            id: want_u32(&j, "id")?,
+            seq: want_u64(&j, "seq")?,
+            vclock: want_f64(&j, "vclock")?,
+            wall: want_f64(&j, "wall")?,
+            kind: kind_from_json(kind_name, &j)?,
+        });
+    }
+    crate::ensure!(
+        events.len() as u64 == declared,
+        "trace jsonl: header declares {declared} events, found {}",
+        events.len()
+    );
+    Ok(Trace { meta, events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let meta = TraceMeta {
+            label: "demo".into(),
+            seed: 7,
+            transport: "channel".into(),
+            compute: "emulated".into(),
+        };
+        let ev = |role, id, seq, vclock, kind| TraceEvent {
+            role,
+            id,
+            seq,
+            vclock,
+            wall: 0.000123,
+            kind,
+        };
+        Trace {
+            meta,
+            events: vec![
+                ev(Role::Trainer, 0, 0, 0.5, EventKind::MinibatchBegin { epoch: 0, mb: 0 }),
+                ev(Role::Trainer, 0, 1, 0.75, EventKind::FetchWait {
+                    nodes: 12,
+                    wall_secs: 0.001,
+                }),
+                ev(Role::Prefetcher, 0, 0, 0.0, EventKind::FetchIssue {
+                    req_id: 1,
+                    owner: 1,
+                    nodes: 12,
+                    bytes: 96,
+                }),
+                ev(Role::Hub, 0, 0, 1.25, EventKind::AllreduceRound {
+                    round: 0,
+                    vclock_max: 1.25,
+                    trainers: 2,
+                }),
+                ev(Role::Trainer, 0, 2, 0.0, EventKind::RoleEnd { emitted: 2 }),
+            ],
+        }
+    }
+
+    #[test]
+    fn binary_round_trips() {
+        let t = sample();
+        let bytes = encode_binary(&t).unwrap();
+        let t2 = decode_binary(&bytes).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let t = sample();
+        let text = to_jsonl(&t).unwrap();
+        assert!(text.starts_with("{\"compute\":"), "header first: {text}");
+        let t2 = from_jsonl(&text).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn binary_jsonl_binary_lossless() {
+        let t = sample();
+        let b1 = encode_binary(&t).unwrap();
+        let text = to_jsonl(&decode_binary(&b1).unwrap()).unwrap();
+        let b2 = encode_binary(&from_jsonl(&text).unwrap()).unwrap();
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn truncated_binary_errors_cleanly() {
+        let bytes = encode_binary(&sample()).unwrap();
+        for cut in [0, 3, 4, 7, bytes.len() / 2, bytes.len() - 1] {
+            let e = decode_binary(&bytes[..cut]);
+            assert!(e.is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn corrupt_binary_errors_cleanly() {
+        let mut bytes = encode_binary(&sample()).unwrap();
+        bytes[0] = b'X'; // magic
+        assert!(decode_binary(&bytes).is_err());
+        let mut bytes = encode_binary(&sample()).unwrap();
+        bytes[5] = 99; // version
+        assert!(decode_binary(&bytes).is_err());
+        let mut bytes = encode_binary(&sample()).unwrap();
+        let n = bytes.len();
+        bytes.truncate(n - 4);
+        bytes.extend_from_slice(&[0xFF; 4]); // trailing garbage via mangled tail
+        assert!(decode_binary(&bytes).is_err());
+    }
+
+    #[test]
+    fn jsonl_rejects_bad_input() {
+        assert!(from_jsonl("").is_err());
+        assert!(from_jsonl("{\"format\":\"nope\"}").is_err());
+        let t = sample();
+        let text = to_jsonl(&t).unwrap();
+        // Dropping an event line breaks the declared count.
+        let short: Vec<&str> = text.lines().take(t.events.len()).collect();
+        assert!(from_jsonl(&short.join("\n")).is_err());
+    }
+
+    #[test]
+    fn non_finite_rejected_at_encode() {
+        let mut t = sample();
+        t.events[0].vclock = f64::NAN;
+        assert!(encode_binary(&t).is_err());
+        assert!(to_jsonl(&t).is_err());
+    }
+
+    #[test]
+    fn oversized_int_rejected_at_encode() {
+        let mut t = sample();
+        t.events[0].seq = u64::MAX;
+        assert!(encode_binary(&t).is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! Deterministic trace comparison — the trace-level generalization of
+//! `wire_parity`.
+//!
+//! Same-seed runs must produce **bit-identical virtual-time data** on
+//! every transport.  Virtual events (see [`EventKind::is_virtual`]) are
+//! projected to a canonical string — kind, virtual clock as raw IEEE
+//! bits, and every seed-deterministic payload field; measured
+//! `wall_secs`-style fields are dropped — and compared as **multisets
+//! per (role, id) stream**.  Multisets, not sequences: response arrival
+//! order (prefetcher `fetch_response`, server `fetch_serve`) is
+//! scheduling-dependent even though each event's *content* is exact, and
+//! a per-role `seq` would encode that arrival order.  Wall-only kinds
+//! (batch/link flushes, closes, `RoleEnd`) are excluded entirely.
+
+use std::collections::BTreeMap;
+
+use super::{EventKind, Role, Trace, TraceEvent};
+
+/// How many concrete examples a mismatch report carries.
+const MAX_EXAMPLES: usize = 8;
+
+fn bits(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Canonical projection of one event: `None` for wall-only kinds, else a
+/// string whose byte equality ⇔ virtual-field bit equality.
+pub fn canonical(e: &TraceEvent) -> Option<String> {
+    if !e.kind.is_virtual() {
+        return None;
+    }
+    let payload = match e.kind {
+        EventKind::MinibatchBegin { epoch, mb } => format!("epoch={epoch} mb={mb}"),
+        EventKind::MinibatchEnd { epoch, mb, step_vsecs } => {
+            format!("epoch={epoch} mb={mb} step_vsecs={}", bits(step_vsecs))
+        }
+        EventKind::FetchWait { nodes, .. } => format!("nodes={nodes}"),
+        EventKind::Compute { virtual_secs, .. } => format!("virtual_secs={}", bits(virtual_secs)),
+        EventKind::Replacement { admitted, evicted } => {
+            format!("admitted={admitted} evicted={evicted}")
+        }
+        EventKind::AllreduceWait { round, .. } => format!("round={round}"),
+        EventKind::FetchIssue { req_id, owner, nodes, bytes } => {
+            format!("req_id={req_id} owner={owner} nodes={nodes} bytes={bytes}")
+        }
+        EventKind::FetchResponse { req_id, nodes, bytes } => {
+            format!("req_id={req_id} nodes={nodes} bytes={bytes}")
+        }
+        EventKind::Evict { nodes } => format!("nodes={nodes}"),
+        EventKind::FetchServe { req_id, from, nodes, bytes } => {
+            format!("req_id={req_id} from={from} nodes={nodes} bytes={bytes}")
+        }
+        EventKind::AllreduceRound { round, vclock_max, trainers } => {
+            format!("round={round} vclock_max={} trainers={trainers}", bits(vclock_max))
+        }
+        EventKind::BatchFlush { .. }
+        | EventKind::LinkFlush { .. }
+        | EventKind::ChannelClose { .. }
+        | EventKind::RoleEnd { .. } => unreachable!("wall-only kinds filtered above"),
+    };
+    Some(format!("{} vclock={} {payload}", e.kind.name(), bits(e.vclock)))
+}
+
+/// Outcome of a trace comparison.
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    /// (role, id) streams seen across both traces.
+    pub streams: usize,
+    /// Virtual events compared (max of the two sides).
+    pub events: usize,
+    /// Human-readable mismatch descriptions; empty ⇔ virtual-identical.
+    pub mismatches: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn identical(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        if self.identical() {
+            format!(
+                "traces identical in all virtual-time fields \
+                 ({} events across {} role streams)",
+                self.events, self.streams
+            )
+        } else {
+            let mut out = format!(
+                "traces DIFFER ({} mismatches across {} role streams):\n",
+                self.mismatches.len(),
+                self.streams
+            );
+            for m in &self.mismatches {
+                out.push_str("  ");
+                out.push_str(m);
+                out.push('\n');
+            }
+            out
+        }
+    }
+}
+
+type StreamKey = (u8, u32);
+
+fn multisets(t: &Trace) -> BTreeMap<StreamKey, BTreeMap<String, u64>> {
+    let mut by_stream: BTreeMap<StreamKey, BTreeMap<String, u64>> = BTreeMap::new();
+    for e in &t.events {
+        if let Some(c) = canonical(e) {
+            *by_stream.entry((e.role.tag(), e.id)).or_default().entry(c).or_insert(0) += 1;
+        }
+    }
+    by_stream
+}
+
+fn stream_name(k: StreamKey) -> String {
+    let role = Role::from_tag(k.0).map(Role::name).unwrap_or("?");
+    format!("{role}-{}", k.1)
+}
+
+/// Compare two traces over their virtual projections.  Metadata besides
+/// the seed (label, transport, compute) may legitimately differ — that is
+/// the point of cross-transport diffing — and is not compared.
+pub fn diff(a: &Trace, b: &Trace) -> DiffReport {
+    let mut report = DiffReport::default();
+    if a.meta.seed != b.meta.seed {
+        report
+            .mismatches
+            .push(format!("seed differs: {} vs {}", a.meta.seed, b.meta.seed));
+    }
+    let ma = multisets(a);
+    let mb = multisets(b);
+    let keys: std::collections::BTreeSet<StreamKey> =
+        ma.keys().chain(mb.keys()).copied().collect();
+    report.streams = keys.len();
+    let empty = BTreeMap::new();
+    for k in keys {
+        let sa = ma.get(&k).unwrap_or(&empty);
+        let sb = mb.get(&k).unwrap_or(&empty);
+        let ca: u64 = sa.values().sum();
+        let cb: u64 = sb.values().sum();
+        report.events += ca.max(cb) as usize;
+        if sa == sb {
+            continue;
+        }
+        let who = stream_name(k);
+        if ca != cb {
+            report.mismatches.push(format!("{who}: {ca} vs {cb} virtual events"));
+        }
+        let mut examples = 0usize;
+        let mut extra = 0usize;
+        for (ev, &na) in sa {
+            let nb = sb.get(ev).copied().unwrap_or(0);
+            if na != nb {
+                if examples < MAX_EXAMPLES {
+                    report.mismatches.push(format!("{who}: [{ev}] ×{na} vs ×{nb}"));
+                    examples += 1;
+                } else {
+                    extra += 1;
+                }
+            }
+        }
+        for (ev, &nb) in sb {
+            if !sa.contains_key(ev) {
+                if examples < MAX_EXAMPLES {
+                    report.mismatches.push(format!("{who}: [{ev}] ×0 vs ×{nb}"));
+                    examples += 1;
+                } else {
+                    extra += 1;
+                }
+            }
+        }
+        if extra > 0 {
+            report.mismatches.push(format!("{who}: ... and {extra} more differing events"));
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceMeta;
+
+    fn ev(role: Role, id: u32, seq: u64, vclock: f64, kind: EventKind) -> TraceEvent {
+        TraceEvent { role, id, seq, vclock, wall: seq as f64 * 0.01, kind }
+    }
+
+    fn base() -> Trace {
+        Trace {
+            meta: TraceMeta { seed: 7, ..TraceMeta::default() },
+            events: vec![
+                ev(Role::Trainer, 0, 0, 1.0, EventKind::MinibatchBegin { epoch: 0, mb: 0 }),
+                ev(Role::Prefetcher, 0, 0, 0.0, EventKind::FetchIssue {
+                    req_id: 1,
+                    owner: 1,
+                    nodes: 4,
+                    bytes: 32,
+                }),
+                ev(Role::Prefetcher, 0, 1, 0.0, EventKind::FetchResponse {
+                    req_id: 1,
+                    nodes: 4,
+                    bytes: 32,
+                }),
+                ev(Role::Prefetcher, 0, 2, 0.0, EventKind::RoleEnd { emitted: 2 }),
+            ],
+        }
+    }
+
+    #[test]
+    fn identical_traces_diff_clean() {
+        let r = diff(&base(), &base());
+        assert!(r.identical(), "{}", r.render());
+        assert!(r.events >= 3);
+        assert!(r.render().contains("identical"));
+    }
+
+    #[test]
+    fn wall_fields_ignored() {
+        let mut b = base();
+        for e in &mut b.events {
+            e.wall += 123.0;
+        }
+        // Wall-only kinds may differ arbitrarily.
+        b.events.push(ev(Role::Prefetcher, 0, 3, 0.0, EventKind::BatchFlush {
+            owner: 0,
+            frames: 9,
+            bytes: 9,
+        }));
+        assert!(diff(&base(), &b).identical());
+    }
+
+    #[test]
+    fn reordered_responses_still_identical() {
+        let mut b = base();
+        b.events.swap(1, 2);
+        // seqs re-assigned in arrival order, as a real prefetcher would.
+        b.events[1].seq = 0;
+        b.events[2].seq = 1;
+        assert!(diff(&base(), &b).identical());
+    }
+
+    #[test]
+    fn virtual_field_change_detected() {
+        let mut b = base();
+        b.events[1].kind =
+            EventKind::FetchIssue { req_id: 1, owner: 1, nodes: 5, bytes: 32 };
+        let r = diff(&base(), &b);
+        assert!(!r.identical());
+        assert!(r.render().contains("prefetcher-0"), "{}", r.render());
+    }
+
+    #[test]
+    fn vclock_bit_change_detected() {
+        let mut b = base();
+        b.events[0].vclock = f64::from_bits(b.events[0].vclock.to_bits() + 1);
+        assert!(!diff(&base(), &b).identical());
+    }
+
+    #[test]
+    fn missing_stream_detected() {
+        let mut b = base();
+        b.events.retain(|e| e.role != Role::Trainer);
+        let r = diff(&base(), &b);
+        assert!(!r.identical());
+        assert!(r.render().contains("trainer-0"));
+    }
+
+    #[test]
+    fn seed_mismatch_detected() {
+        let mut b = base();
+        b.meta.seed = 8;
+        assert!(!diff(&base(), &b).identical());
+    }
+}

@@ -1,0 +1,452 @@
+//! Flight recorder: cluster-wide structured tracing.
+//!
+//! Every role thread in the cluster runtime (trainer, prefetcher, feature
+//! server, allreduce hub, event loop) owns a [`Tracer`] and emits typed
+//! [`TraceEvent`] records — minibatch begin/end, fetch issue/response,
+//! batch flush, allreduce wait, replacement, stall — carrying both the
+//! **virtual clock** (the α–β modelled time the sim reasons in) and a
+//! **wall clock** (seconds since the role thread started).  Buffers are
+//! collected when each role exits and merged into one [`Trace`] per run;
+//! multiproc workers ship theirs back inside the existing `Frame::Result`
+//! blobs, so a TCP run still yields a single merged trace.
+//!
+//! Two serializations with lossless two-way conversion ([`codec`]):
+//! human-readable JSON lines and a compact length-prefixed binary framing
+//! (`RTRC` magic, `[u32 len][event]` frames — the same shape as the wire
+//! format).  `rudder trace dump|stats|diff` operate on either.
+//!
+//! Determinism contract ([`diff`]): every event kind is classified
+//! *virtual* or *wall-only*.  Virtual kinds carry only data derived from
+//! config + seed (request ids, node sets, modelled clocks), so same-seed
+//! runs must produce **bit-identical** virtual events across the channel,
+//! tcp, and event transports — the trace-level generalization of
+//! `wire_parity`.  Wall-only kinds (batch flushes, event-loop sweeps,
+//! `RoleEnd`) record scheduling reality and are excluded from the diff.
+//!
+//! Integer fields are bounded to 2^53 and floats are finite with `-0.0`
+//! normalized to `0.0`, so every field round-trips bit-exactly through
+//! both codecs (JSON numbers are IEEE doubles; the writer emits shortest
+//! round-trip decimals).
+
+pub mod codec;
+pub mod diff;
+pub mod stats;
+
+use std::time::Instant;
+
+use crate::error::Result;
+
+/// Which role thread emitted an event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Role {
+    Trainer,
+    Prefetcher,
+    Server,
+    Hub,
+    EventLoop,
+}
+
+impl Role {
+    pub const ALL: [Role; 5] =
+        [Role::Trainer, Role::Prefetcher, Role::Server, Role::Hub, Role::EventLoop];
+
+    pub fn tag(self) -> u8 {
+        match self {
+            Role::Trainer => 1,
+            Role::Prefetcher => 2,
+            Role::Server => 3,
+            Role::Hub => 4,
+            Role::EventLoop => 5,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<Role> {
+        Role::ALL.into_iter().find(|r| r.tag() == t)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Trainer => "trainer",
+            Role::Prefetcher => "prefetcher",
+            Role::Server => "server",
+            Role::Hub => "hub",
+            Role::EventLoop => "eventloop",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Role> {
+        Role::ALL.into_iter().find(|r| r.name() == s)
+    }
+}
+
+/// A typed trace record.  Fields under each variant are the *payload*;
+/// the envelope (role, id, seq, clocks) lives on [`TraceEvent`].
+///
+/// Kinds are classified by [`EventKind::is_virtual`]: virtual kinds carry
+/// only seed-deterministic data and participate in [`diff`]; wall-only
+/// kinds record scheduling/timing reality.  `wall_secs`-style fields
+/// inside virtual kinds are measured durations and are excluded from the
+/// canonical projection ([`diff::canonical`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Trainer: a minibatch step begins (before sampling + fetch wait).
+    MinibatchBegin { epoch: u32, mb: u32 },
+    /// Trainer: the step completed; `step_vsecs` is the virtual-clock
+    /// advance the step cost (deterministic).
+    MinibatchEnd { epoch: u32, mb: u32, step_vsecs: f64 },
+    /// Trainer: blocked on `nodes` remote features for `wall_secs`.
+    FetchWait { nodes: u64, wall_secs: f64 },
+    /// Trainer: forward/backward compute — `virtual_secs` modelled,
+    /// `wall_secs` measured (sleep or real SageRunner).
+    Compute { virtual_secs: f64, wall_secs: f64 },
+    /// Trainer: a buffer replacement round (admitted/evicted node counts).
+    Replacement { admitted: u64, evicted: u64 },
+    /// Trainer: blocked on the DDP allreduce barrier.
+    AllreduceWait { round: u64, wall_secs: f64 },
+    /// Prefetcher: one FetchReq frame created for `owner`'s server.
+    FetchIssue { req_id: u64, owner: u32, nodes: u64, bytes: u64 },
+    /// Prefetcher: a FetchResp frame arrived and was admitted.
+    FetchResponse { req_id: u64, nodes: u64, bytes: u64 },
+    /// Prefetcher: evicted `nodes` from the feature store.
+    Evict { nodes: u64 },
+    /// Prefetcher: one coalesced burst handed to the transport
+    /// (wall-only: burst boundaries depend on thread scheduling).
+    BatchFlush { owner: u32, frames: u64, bytes: u64 },
+    /// Server: served one FetchReq from trainer `from`.
+    FetchServe { req_id: u64, from: u32, nodes: u64, bytes: u64 },
+    /// Hub: one allreduce round reduced and broadcast.
+    AllreduceRound { round: u64, vclock_max: f64, trainers: u32 },
+    /// Event loop: one write sweep flushed a batch on connection `conn`
+    /// (wall-only).
+    LinkFlush { conn: u32, frames: u64, bytes: u64 },
+    /// Event loop: a multiplexed channel half-closed (wall-only).
+    ChannelClose { conn: u32, channel: u32 },
+    /// Final event of every role: `emitted` counts the events before it,
+    /// so a collector can prove nothing was dropped at shutdown.
+    RoleEnd { emitted: u64 },
+}
+
+impl EventKind {
+    pub fn tag(&self) -> u8 {
+        match self {
+            EventKind::MinibatchBegin { .. } => 1,
+            EventKind::MinibatchEnd { .. } => 2,
+            EventKind::FetchWait { .. } => 3,
+            EventKind::Compute { .. } => 4,
+            EventKind::Replacement { .. } => 5,
+            EventKind::AllreduceWait { .. } => 6,
+            EventKind::FetchIssue { .. } => 7,
+            EventKind::FetchResponse { .. } => 8,
+            EventKind::Evict { .. } => 9,
+            EventKind::BatchFlush { .. } => 10,
+            EventKind::FetchServe { .. } => 11,
+            EventKind::AllreduceRound { .. } => 12,
+            EventKind::LinkFlush { .. } => 13,
+            EventKind::ChannelClose { .. } => 14,
+            EventKind::RoleEnd { .. } => 15,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::MinibatchBegin { .. } => "minibatch_begin",
+            EventKind::MinibatchEnd { .. } => "minibatch_end",
+            EventKind::FetchWait { .. } => "fetch_wait",
+            EventKind::Compute { .. } => "compute",
+            EventKind::Replacement { .. } => "replacement",
+            EventKind::AllreduceWait { .. } => "allreduce_wait",
+            EventKind::FetchIssue { .. } => "fetch_issue",
+            EventKind::FetchResponse { .. } => "fetch_response",
+            EventKind::Evict { .. } => "evict",
+            EventKind::BatchFlush { .. } => "batch_flush",
+            EventKind::FetchServe { .. } => "fetch_serve",
+            EventKind::AllreduceRound { .. } => "allreduce_round",
+            EventKind::LinkFlush { .. } => "link_flush",
+            EventKind::ChannelClose { .. } => "channel_close",
+            EventKind::RoleEnd { .. } => "role_end",
+        }
+    }
+
+    /// Virtual kinds carry only config+seed-deterministic payloads and
+    /// must be bit-identical across transports; wall-only kinds depend on
+    /// scheduling and are excluded from [`diff`].
+    pub fn is_virtual(&self) -> bool {
+        !matches!(
+            self,
+            EventKind::BatchFlush { .. }
+                | EventKind::LinkFlush { .. }
+                | EventKind::ChannelClose { .. }
+                | EventKind::RoleEnd { .. }
+        )
+    }
+}
+
+/// One trace record: envelope + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub role: Role,
+    /// Role instance id: trainer/prefetcher/server partition id, 0 for
+    /// the hub, connection-set id for the event loop.
+    pub id: u32,
+    /// Per-(role, id) emission counter, assigned by the [`Tracer`].
+    pub seq: u64,
+    /// Virtual clock at emission (0.0 for roles without one).
+    pub vclock: f64,
+    /// Seconds since the emitting role thread started.
+    pub wall: f64,
+    pub kind: EventKind,
+}
+
+/// Normalize a float for the trace domain: `-0.0` becomes `0.0` so the
+/// JSONL codec (which writes shortest round-trip decimals through the
+/// integral fast path) stays bit-lossless.
+pub(crate) fn norm_f64(v: f64) -> f64 {
+    if v == 0.0 {
+        0.0
+    } else {
+        v
+    }
+}
+
+/// Per-role-thread event buffer.  Cheap no-op when disabled (one branch
+/// per emit); collects into a `Vec` otherwise — no locks, the buffer is
+/// handed over wholesale when the role exits ([`Tracer::finish`]).
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    role: Role,
+    id: u32,
+    start: Instant,
+    seq: u64,
+    events: Vec<TraceEvent>,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool, role: Role, id: u32) -> Tracer {
+        Tracer { enabled, role, id, start: Instant::now(), seq: 0, events: Vec::new() }
+    }
+
+    /// A disabled tracer (every emit is a no-op, `finish` yields nothing).
+    pub fn off() -> Tracer {
+        Tracer::new(false, Role::Trainer, 0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one event at virtual time `vclock`.
+    pub fn emit(&mut self, vclock: f64, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        self.events.push(TraceEvent {
+            role: self.role,
+            id: self.id,
+            seq: self.seq,
+            vclock: norm_f64(vclock),
+            wall: self.start.elapsed().as_secs_f64(),
+            kind,
+        });
+        self.seq += 1;
+    }
+
+    /// Close the buffer: emits the terminal [`EventKind::RoleEnd`] (whose
+    /// `emitted` payload counts every prior event, the drop-detection
+    /// anchor for [`Trace::verify_complete`]) and returns all events.
+    pub fn finish(mut self) -> Vec<TraceEvent> {
+        if !self.enabled {
+            return Vec::new();
+        }
+        let emitted = self.seq;
+        self.emit(0.0, EventKind::RoleEnd { emitted });
+        self.events
+    }
+}
+
+/// Run-level metadata stamped into every trace file.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceMeta {
+    pub label: String,
+    pub seed: u64,
+    pub transport: String,
+    pub compute: String,
+}
+
+/// A complete (possibly merged) run trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new(meta: TraceMeta) -> Trace {
+        Trace { meta, events: Vec::new() }
+    }
+
+    /// Canonical merged order: role tag, then instance id, then seq —
+    /// independent of collection/arrival order.
+    pub fn sort_canonical(&mut self) {
+        self.events.sort_by_key(|e| (e.role.tag(), e.id, e.seq));
+    }
+
+    /// Events of one role instance, in seq order (assumes
+    /// [`Trace::sort_canonical`] ran).
+    pub fn role_events(&self, role: Role, id: u32) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter().filter(move |e| e.role == role && e.id == id)
+    }
+
+    /// Drop-detection audit: every (role, id) stream must end with exactly
+    /// one `RoleEnd` whose `emitted` count matches the events collected
+    /// before it, and seqs must be gapless.
+    pub fn verify_complete(&self) -> Result<()> {
+        use std::collections::BTreeMap;
+        let mut streams: BTreeMap<(u8, u32), Vec<&TraceEvent>> = BTreeMap::new();
+        for e in &self.events {
+            streams.entry((e.role.tag(), e.id)).or_default().push(e);
+        }
+        for ((tag, id), mut evs) in streams {
+            let role = Role::from_tag(tag).expect("valid role tag");
+            let who = format!("{}-{id}", role.name());
+            evs.sort_by_key(|e| e.seq);
+            for (i, e) in evs.iter().enumerate() {
+                crate::ensure!(
+                    e.seq == i as u64,
+                    "trace stream {who}: seq gap at {} (expected {i}) — events dropped",
+                    e.seq
+                );
+            }
+            let last = evs.last().expect("non-empty stream");
+            match last.kind {
+                EventKind::RoleEnd { emitted } => {
+                    crate::ensure!(
+                        emitted == evs.len() as u64 - 1,
+                        "trace stream {who}: RoleEnd says {emitted} events emitted but {} \
+                         collected — events dropped at shutdown",
+                        evs.len() - 1
+                    );
+                }
+                _ => crate::bail!("trace stream {who}: missing terminal RoleEnd event"),
+            }
+            let ends = evs.iter().filter(|e| matches!(e.kind, EventKind::RoleEnd { .. })).count();
+            crate::ensure!(ends == 1, "trace stream {who}: {ends} RoleEnd events (want 1)");
+        }
+        Ok(())
+    }
+
+    /// Write to `path`: `.jsonl` extension selects the JSON-lines text
+    /// form, anything else the compact binary framing.
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        let bytes = if path.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+            codec::to_jsonl(self)?.into_bytes()
+        } else {
+            codec::encode_binary(self)?
+        };
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    /// Read either serialization back (sniffs the binary magic).
+    pub fn read_file(path: &std::path::Path) -> Result<Trace> {
+        let bytes = std::fs::read(path)?;
+        if bytes.starts_with(codec::MAGIC) {
+            codec::decode_binary(&bytes)
+        } else {
+            let text = String::from_utf8(bytes).map_err(|_| {
+                crate::err!("{}: neither RTRC binary nor utf-8 jsonl", path.display())
+            })?;
+            codec::from_jsonl(&text)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn role_tags_round_trip() {
+        for r in Role::ALL {
+            assert_eq!(Role::from_tag(r.tag()), Some(r));
+            assert_eq!(Role::from_name(r.name()), Some(r));
+        }
+        assert_eq!(Role::from_tag(0), None);
+        assert_eq!(Role::from_name("nope"), None);
+    }
+
+    #[test]
+    fn tracer_disabled_is_silent() {
+        let mut t = Tracer::off();
+        t.emit(1.0, EventKind::Evict { nodes: 3 });
+        assert!(t.finish().is_empty());
+    }
+
+    #[test]
+    fn tracer_seq_and_role_end() {
+        let mut t = Tracer::new(true, Role::Prefetcher, 2);
+        t.emit(0.5, EventKind::Evict { nodes: 1 });
+        t.emit(1.5, EventKind::Evict { nodes: 2 });
+        let evs = t.finish();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].seq, 0);
+        assert_eq!(evs[1].seq, 1);
+        assert_eq!(evs[2].kind, EventKind::RoleEnd { emitted: 2 });
+        assert_eq!(evs[2].role, Role::Prefetcher);
+        assert_eq!(evs[2].id, 2);
+        assert!(evs[1].wall >= evs[0].wall);
+    }
+
+    #[test]
+    fn verify_complete_accepts_finished_stream() {
+        let mut tr = Trace::default();
+        let mut t = Tracer::new(true, Role::Trainer, 0);
+        t.emit(0.0, EventKind::MinibatchBegin { epoch: 0, mb: 0 });
+        tr.events.extend(t.finish());
+        tr.verify_complete().unwrap();
+    }
+
+    #[test]
+    fn verify_complete_detects_drops() {
+        let mut t = Tracer::new(true, Role::Trainer, 0);
+        t.emit(0.0, EventKind::MinibatchBegin { epoch: 0, mb: 0 });
+        t.emit(0.0, EventKind::MinibatchEnd { epoch: 0, mb: 0, step_vsecs: 1.0 });
+        let mut evs = t.finish();
+        // Losing a mid-stream event must be caught (seq gap).
+        evs.remove(1);
+        let tr = Trace { meta: TraceMeta::default(), events: evs.clone() };
+        assert!(tr.verify_complete().is_err());
+        // Losing the tail (RoleEnd) must be caught too.
+        let mut t = Tracer::new(true, Role::Server, 1);
+        t.emit(0.0, EventKind::Evict { nodes: 1 });
+        let mut evs = t.finish();
+        evs.pop();
+        let tr = Trace { meta: TraceMeta::default(), events: evs };
+        assert!(tr.verify_complete().is_err());
+    }
+
+    #[test]
+    fn canonical_sort_is_role_major() {
+        let ev = |role: Role, id: u32, seq: u64| TraceEvent {
+            role,
+            id,
+            seq,
+            vclock: 0.0,
+            wall: 0.0,
+            kind: EventKind::Evict { nodes: 0 },
+        };
+        let mut tr = Trace::default();
+        tr.events = vec![ev(Role::Hub, 0, 0), ev(Role::Trainer, 1, 0), ev(Role::Trainer, 0, 1)];
+        tr.sort_canonical();
+        let order: Vec<(Role, u32)> = tr.events.iter().map(|e| (e.role, e.id)).collect();
+        assert_eq!(order, vec![(Role::Trainer, 0), (Role::Trainer, 1), (Role::Hub, 0)]);
+    }
+
+    #[test]
+    fn minus_zero_normalized() {
+        let mut t = Tracer::new(true, Role::Hub, 0);
+        t.emit(-0.0, EventKind::AllreduceRound { round: 0, vclock_max: 0.0, trainers: 2 });
+        let evs = t.finish();
+        assert_eq!(evs[0].vclock.to_bits(), 0.0f64.to_bits());
+    }
+}

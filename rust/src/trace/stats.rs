@@ -1,0 +1,326 @@
+//! Trace analytics behind `rudder trace stats`: per-phase wall-latency
+//! percentiles, the per-trainer fetch-blocked breakdown, and per-link
+//! fetch timelines reconstructed from issue→response pairs.
+
+use std::collections::HashMap;
+
+use crate::eval::report::{fmt_count, fmt_secs, Table};
+use crate::util::stats::percentile;
+
+use super::{EventKind, Role, Trace};
+
+/// Summary of one latency population.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseStats {
+    pub count: u64,
+    pub total: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl PhaseStats {
+    pub fn from_samples(xs: &[f64]) -> PhaseStats {
+        PhaseStats {
+            count: xs.len() as u64,
+            total: xs.iter().sum(),
+            p50: percentile(xs, 50.0),
+            p95: percentile(xs, 95.0),
+            p99: percentile(xs, 99.0),
+        }
+    }
+}
+
+/// Wall-time samples per phase, pooled across all role instances.
+///
+/// * `fetch_wait` / `compute` / `allreduce_wait` — the trainer's measured
+///   in-step durations.
+/// * `minibatch` — wall delta between each `minibatch_begin`/`_end` pair.
+/// * `fetch_rtt` — prefetcher `fetch_issue` → `fetch_response` wall delta
+///   per request id (the transport's round trip as the trainer's
+///   prefetcher saw it).
+/// * `serve` — per-request service marks on the feature servers (counted;
+///   durations are not spanned server-side).
+pub fn phase_samples(t: &Trace) -> Vec<(&'static str, Vec<f64>)> {
+    let mut fetch_wait = Vec::new();
+    let mut compute = Vec::new();
+    let mut allreduce = Vec::new();
+    let mut minibatch = Vec::new();
+    let mut rtt = Vec::new();
+    let mut begins: HashMap<(u32, u32, u32), f64> = HashMap::new();
+    let mut issues: HashMap<(u32, u64), f64> = HashMap::new();
+    for e in &t.events {
+        match e.kind {
+            EventKind::FetchWait { wall_secs, .. } => fetch_wait.push(wall_secs),
+            EventKind::Compute { wall_secs, .. } => compute.push(wall_secs),
+            EventKind::AllreduceWait { wall_secs, .. } => allreduce.push(wall_secs),
+            EventKind::MinibatchBegin { epoch, mb } => {
+                begins.insert((e.id, epoch, mb), e.wall);
+            }
+            EventKind::MinibatchEnd { epoch, mb, .. } => {
+                if let Some(w0) = begins.remove(&(e.id, epoch, mb)) {
+                    minibatch.push((e.wall - w0).max(0.0));
+                }
+            }
+            EventKind::FetchIssue { req_id, .. } if e.role == Role::Prefetcher => {
+                issues.insert((e.id, req_id), e.wall);
+            }
+            EventKind::FetchResponse { req_id, .. } if e.role == Role::Prefetcher => {
+                if let Some(w0) = issues.remove(&(e.id, req_id)) {
+                    rtt.push((e.wall - w0).max(0.0));
+                }
+            }
+            _ => {}
+        }
+    }
+    vec![
+        ("fetch_wait", fetch_wait),
+        ("compute", compute),
+        ("allreduce_wait", allreduce),
+        ("minibatch", minibatch),
+        ("fetch_rtt", rtt),
+    ]
+}
+
+/// Per-phase percentile summaries keyed by phase name.
+pub fn phase_stats(t: &Trace) -> Vec<(&'static str, PhaseStats)> {
+    phase_samples(t)
+        .into_iter()
+        .map(|(name, xs)| (name, PhaseStats::from_samples(&xs)))
+        .collect()
+}
+
+/// `rudder trace stats` table 1: wall-latency percentiles per phase.
+pub fn phase_table(t: &Trace) -> Table {
+    let mut tab = Table::new(
+        "per-phase wall latency (all role instances pooled)",
+        &["phase", "count", "total", "p50", "p95", "p99"],
+    );
+    for (name, s) in phase_stats(t) {
+        tab.row(vec![
+            name.to_string(),
+            s.count.to_string(),
+            fmt_secs(s.total),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            fmt_secs(s.p99),
+        ]);
+    }
+    tab
+}
+
+/// `rudder trace stats` table 2: where each trainer's wall time went,
+/// and what fraction of it was blocked on remote features.
+pub fn breakdown_table(t: &Trace) -> Table {
+    #[derive(Default)]
+    struct Acc {
+        minibatches: u64,
+        fetch: f64,
+        compute: f64,
+        barrier: f64,
+        stalls: u64,
+    }
+    let mut per: std::collections::BTreeMap<u32, Acc> = std::collections::BTreeMap::new();
+    for e in &t.events {
+        if e.role != Role::Trainer {
+            continue;
+        }
+        let a = per.entry(e.id).or_default();
+        match e.kind {
+            EventKind::MinibatchEnd { .. } => a.minibatches += 1,
+            EventKind::FetchWait { wall_secs, .. } => {
+                a.fetch += wall_secs;
+                a.stalls += 1;
+            }
+            EventKind::Compute { wall_secs, .. } => a.compute += wall_secs,
+            EventKind::AllreduceWait { wall_secs, .. } => a.barrier += wall_secs,
+            _ => {}
+        }
+    }
+    let mut tab = Table::new(
+        "fetch-blocked breakdown per trainer",
+        &["trainer", "minibatches", "stalls", "fetch_blocked", "compute", "barrier", "blocked%"],
+    );
+    for (id, a) in per {
+        let busy = a.fetch + a.compute + a.barrier;
+        let pct = if busy > 0.0 { 100.0 * a.fetch / busy } else { 0.0 };
+        tab.row(vec![
+            id.to_string(),
+            a.minibatches.to_string(),
+            a.stalls.to_string(),
+            fmt_secs(a.fetch),
+            fmt_secs(a.compute),
+            fmt_secs(a.barrier),
+            format!("{pct:.1}"),
+        ]);
+    }
+    tab
+}
+
+/// `rudder trace stats` table 3: one row per prefetcher×owner link —
+/// request/response traffic and the observed round-trip percentiles.
+pub fn link_timeline_table(t: &Trace) -> Table {
+    #[derive(Default)]
+    struct Link {
+        issues: u64,
+        nodes: u64,
+        req_bytes: u64,
+        responses: u64,
+        resp_bytes: u64,
+        rtts: Vec<f64>,
+        first: f64,
+        last: f64,
+    }
+    let mut links: std::collections::BTreeMap<(u32, u32), Link> = std::collections::BTreeMap::new();
+    let mut owner_of: HashMap<(u32, u64), u32> = HashMap::new();
+    let mut issue_wall: HashMap<(u32, u64), f64> = HashMap::new();
+    for e in &t.events {
+        if e.role != Role::Prefetcher {
+            continue;
+        }
+        match e.kind {
+            EventKind::FetchIssue { req_id, owner, nodes, bytes } => {
+                let l = links.entry((e.id, owner)).or_default();
+                if l.issues == 0 {
+                    l.first = e.wall;
+                }
+                l.issues += 1;
+                l.nodes += nodes;
+                l.req_bytes += bytes;
+                l.last = l.last.max(e.wall);
+                owner_of.insert((e.id, req_id), owner);
+                issue_wall.insert((e.id, req_id), e.wall);
+            }
+            EventKind::FetchResponse { req_id, bytes, .. } => {
+                if let Some(owner) = owner_of.remove(&(e.id, req_id)) {
+                    let l = links.entry((e.id, owner)).or_default();
+                    l.responses += 1;
+                    l.resp_bytes += bytes;
+                    l.last = l.last.max(e.wall);
+                    if let Some(w0) = issue_wall.remove(&(e.id, req_id)) {
+                        l.rtts.push((e.wall - w0).max(0.0));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut tab = Table::new(
+        "per-link fetch timeline (prefetcher -> owner server)",
+        &[
+            "trainer",
+            "owner",
+            "reqs",
+            "resps",
+            "nodes",
+            "req_bytes",
+            "resp_bytes",
+            "rtt_p50",
+            "rtt_p99",
+            "span",
+        ],
+    );
+    for ((id, owner), l) in links {
+        tab.row(vec![
+            id.to_string(),
+            owner.to_string(),
+            l.issues.to_string(),
+            l.responses.to_string(),
+            fmt_count(l.nodes),
+            fmt_count(l.req_bytes),
+            fmt_count(l.resp_bytes),
+            fmt_secs(percentile(&l.rtts, 50.0)),
+            fmt_secs(percentile(&l.rtts, 99.0)),
+            fmt_secs((l.last - l.first).max(0.0)),
+        ]);
+    }
+    tab
+}
+
+/// Everything `rudder trace stats` prints, in order.
+pub fn render_all(t: &Trace) -> Vec<Table> {
+    vec![phase_table(t), breakdown_table(t), link_timeline_table(t)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{TraceEvent, TraceMeta};
+
+    fn ev(role: Role, id: u32, seq: u64, wall: f64, kind: EventKind) -> TraceEvent {
+        TraceEvent { role, id, seq, vclock: 0.0, wall, kind }
+    }
+
+    fn sample() -> Trace {
+        Trace {
+            meta: TraceMeta::default(),
+            events: vec![
+                ev(Role::Trainer, 0, 0, 0.00, EventKind::MinibatchBegin { epoch: 0, mb: 0 }),
+                ev(Role::Trainer, 0, 1, 0.01, EventKind::FetchWait {
+                    nodes: 8,
+                    wall_secs: 0.004,
+                }),
+                ev(Role::Trainer, 0, 2, 0.02, EventKind::Compute {
+                    virtual_secs: 1.0,
+                    wall_secs: 0.010,
+                }),
+                ev(Role::Trainer, 0, 3, 0.03, EventKind::AllreduceWait {
+                    round: 0,
+                    wall_secs: 0.002,
+                }),
+                ev(Role::Trainer, 0, 4, 0.05, EventKind::MinibatchEnd {
+                    epoch: 0,
+                    mb: 0,
+                    step_vsecs: 1.5,
+                }),
+                ev(Role::Prefetcher, 0, 0, 0.001, EventKind::FetchIssue {
+                    req_id: 1,
+                    owner: 1,
+                    nodes: 8,
+                    bytes: 64,
+                }),
+                ev(Role::Prefetcher, 0, 1, 0.006, EventKind::FetchResponse {
+                    req_id: 1,
+                    nodes: 8,
+                    bytes: 640,
+                }),
+            ],
+        }
+    }
+
+    #[test]
+    fn phase_stats_extracts_all_phases() {
+        let stats = phase_stats(&sample());
+        let get = |name: &str| stats.iter().find(|(n, _)| *n == name).unwrap().1.clone();
+        assert_eq!(get("fetch_wait").count, 1);
+        assert!((get("fetch_wait").total - 0.004).abs() < 1e-12);
+        assert_eq!(get("compute").count, 1);
+        assert_eq!(get("minibatch").count, 1);
+        assert!((get("minibatch").p50 - 0.05).abs() < 1e-12);
+        assert_eq!(get("fetch_rtt").count, 1);
+        assert!((get("fetch_rtt").p99 - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_has_blocked_pct() {
+        let tab = breakdown_table(&sample());
+        assert_eq!(tab.rows.len(), 1);
+        // fetch 0.004 / (0.004 + 0.010 + 0.002) = 25%
+        assert_eq!(tab.rows[0].last().unwrap(), "25.0");
+    }
+
+    #[test]
+    fn link_timeline_pairs_requests() {
+        let tab = link_timeline_table(&sample());
+        assert_eq!(tab.rows.len(), 1);
+        assert_eq!(tab.rows[0][0], "0");
+        assert_eq!(tab.rows[0][1], "1");
+        assert_eq!(tab.rows[0][2], "1");
+        assert_eq!(tab.rows[0][3], "1");
+    }
+
+    #[test]
+    fn render_all_three_tables() {
+        assert_eq!(render_all(&sample()).len(), 3);
+    }
+}

@@ -1,0 +1,129 @@
+//! Role-prefixed, level-filtered diagnostic logging on stderr.
+//!
+//! `RUDDER_LOG=debug|info|off` (default `off` when unset; unknown values
+//! mean `info`) selects the level once per process.  Every line carries a
+//! `[trainer-3]`-style prefix: the role set via [`set_role`], else the
+//! current thread's name with its `rudder-` prefix stripped — so the
+//! in-process cluster threads label themselves for free and multiproc
+//! workers (whose role loops run on `main`) call [`set_role`] at startup.
+//! A hung TCP run is then debuggable from interleaved stderr alone:
+//! `RUDDER_LOG=debug rudder cluster --transport tcp ...`.
+//!
+//! Use through the crate-level macros:
+//!
+//! ```ignore
+//! crate::log_info!("drain timed out after {timeout:?}");
+//! crate::log_debug!("frame on closed channel {ch}");
+//! ```
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+/// Verbosity, ordered so `Level::Off < Level::Info < Level::Debug`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off,
+    Info,
+    Debug,
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+thread_local! {
+    static ROLE: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// The process-wide level, resolved from `RUDDER_LOG` on first use.
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| match std::env::var("RUDDER_LOG").ok().as_deref() {
+        None | Some("off") | Some("0") | Some("none") => Level::Off,
+        Some("debug") => Level::Debug,
+        Some(_) => Level::Info,
+    })
+}
+
+/// Would a message at `l` be printed?  (The macros check this before
+/// formatting, so disabled logging costs one comparison.)
+pub fn enabled(l: Level) -> bool {
+    l != Level::Off && l <= level()
+}
+
+/// Set this thread's log prefix (multiproc workers: the role loop runs on
+/// `main`, whose thread name says nothing useful).
+pub fn set_role(role: &str) {
+    ROLE.with(|r| *r.borrow_mut() = Some(role.to_string()));
+}
+
+fn prefix() -> String {
+    if let Some(r) = ROLE.with(|r| r.borrow().clone()) {
+        return r;
+    }
+    match std::thread::current().name() {
+        Some(n) => n.strip_prefix("rudder-").unwrap_or(n).to_string(),
+        None => "rudder".to_string(),
+    }
+}
+
+/// Emit one line (already level-checked by the macros).
+pub fn write(args: std::fmt::Arguments<'_>) {
+    eprintln!("[{}] {}", prefix(), args);
+}
+
+/// Info-level diagnostic: lifecycle milestones and recoverable anomalies
+/// (drain timeouts, unexpected frames) a user should see by default.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            $crate::util::log::write(format_args!($($arg)*));
+        }
+    };
+}
+
+/// Debug-level diagnostic: per-frame/per-connection chatter for hunting
+/// hangs (`RUDDER_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::write(format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_ordered() {
+        assert!(Level::Off < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn enabled_respects_off() {
+        // `enabled(Off)` is never true regardless of the env level.
+        assert!(!enabled(Level::Off));
+    }
+
+    #[test]
+    fn prefix_prefers_set_role() {
+        std::thread::Builder::new()
+            .name("rudder-server-7".into())
+            .spawn(|| {
+                assert_eq!(prefix(), "server-7");
+                set_role("trainer-3");
+                assert_eq!(prefix(), "trainer-3");
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+    }
+
+    #[test]
+    fn macros_compile_at_both_levels() {
+        crate::log_info!("info message {}", 1);
+        crate::log_debug!("debug message {}", 2);
+    }
+}

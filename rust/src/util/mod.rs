@@ -6,6 +6,7 @@
 
 pub mod fasthash;
 pub mod json;
+pub mod log;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -167,6 +167,123 @@ impl Histogram {
     }
 }
 
+/// Streaming log-bucketed latency histogram with percentile extraction.
+///
+/// Fixed log-spaced buckets from [`LogHistogram::MIN_SECS`] (1 µs), four
+/// buckets per octave (`2^(1/4)` ratio ⇒ ±~9% bucket resolution), 128
+/// buckets ⇒ ~4300 s of range.  Samples below range land in bucket 0,
+/// above range in the last bucket.  All state is integer counts, so the
+/// type derives `Eq`, merges exactly, and costs O(1) per sample — built
+/// for always-on latency recording (per-link fetch round trips) where
+/// keeping every sample would not fly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: vec![0; Self::BUCKETS], total: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub const BUCKETS: usize = 128;
+    /// Lower edge of bucket 0.
+    pub const MIN_SECS: f64 = 1e-6;
+    /// Buckets per octave (factor-of-two span).
+    pub const PER_OCTAVE: f64 = 4.0;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        if secs.is_nan() || secs <= Self::MIN_SECS {
+            return 0;
+        }
+        let idx = ((secs / Self::MIN_SECS).log2() * Self::PER_OCTAVE) as usize;
+        idx.min(Self::BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` — the representative value
+    /// percentile extraction reports.
+    fn bucket_mid(i: usize) -> f64 {
+        Self::MIN_SECS * ((i as f64 + 0.5) / Self::PER_OCTAVE).exp2()
+    }
+
+    pub fn push(&mut self, secs: f64) {
+        self.counts[Self::bucket_of(secs)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Raw bucket counts (serialization support; pairs with
+    /// [`LogHistogram::from_bucket_counts`]).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Rebuild from raw bucket counts (the serialization inverse of
+    /// [`LogHistogram::bucket_counts`]).
+    pub fn from_bucket_counts(counts: Vec<u64>) -> crate::error::Result<LogHistogram> {
+        crate::ensure!(
+            counts.len() == Self::BUCKETS,
+            "log histogram: {} buckets (want {})",
+            counts.len(),
+            Self::BUCKETS
+        );
+        let total = counts.iter().sum();
+        Ok(LogHistogram { counts, total })
+    }
+
+    /// Exact bucket-wise merge (histograms are additive).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Percentile in `[0, 100]`: the geometric midpoint of the first
+    /// bucket whose cumulative count reaches `p`% of the samples
+    /// (0.0 when empty).  Resolution is one bucket (±~9%).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 100.0) / 100.0 * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_mid(i);
+            }
+        }
+        Self::bucket_mid(Self::BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +358,67 @@ mod tests {
         assert!((acc.stddev() - stddev(&xs)).abs() < 1e-12);
         assert_eq!(acc.min, 1.0);
         assert_eq!(acc.max, 5.5);
+    }
+
+    #[test]
+    fn log_histogram_percentiles_track_distribution() {
+        let mut h = LogHistogram::new();
+        // 99 samples near 1 ms, one outlier at 1 s.
+        for _ in 0..99 {
+            h.push(1e-3);
+        }
+        h.push(1.0);
+        assert_eq!(h.count(), 100);
+        let p50 = h.p50();
+        assert!(p50 > 0.5e-3 && p50 < 2e-3, "p50 {p50}");
+        let p99 = h.p99();
+        assert!(p99 > 0.5e-3 && p99 < 2e-3, "p99 {p99} (99th sample is still ~1ms)");
+        let p100 = h.percentile(100.0);
+        assert!(p100 > 0.5 && p100 < 2.0, "max {p100}");
+    }
+
+    #[test]
+    fn log_histogram_merge_is_additive() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut all = LogHistogram::new();
+        for i in 1..=50 {
+            let x = i as f64 * 1e-4;
+            a.push(x);
+            all.push(x);
+        }
+        for i in 1..=50 {
+            let x = i as f64 * 1e-2;
+            b.push(x);
+            all.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+        assert_eq!(a.count(), 100);
+    }
+
+    #[test]
+    fn log_histogram_edge_samples() {
+        let mut h = LogHistogram::new();
+        h.push(0.0);
+        h.push(-1.0);
+        h.push(f64::NAN);
+        h.push(1e9); // beyond range clamps to last bucket
+        assert_eq!(h.count(), 4);
+        assert!(h.p50() > 0.0);
+        assert!(LogHistogram::new().is_empty());
+        assert_eq!(LogHistogram::new().percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn log_histogram_bucket_counts_round_trip() {
+        let mut h = LogHistogram::new();
+        for i in 1..=20 {
+            h.push(i as f64 * 3e-4);
+        }
+        let back = LogHistogram::from_bucket_counts(h.bucket_counts().to_vec()).unwrap();
+        assert_eq!(back, h);
+        assert!(LogHistogram::from_bucket_counts(vec![0; 3]).is_err(), "wrong bucket count");
     }
 
     #[test]

@@ -576,6 +576,194 @@ fn multiproc_tcp_measured_results_over_wire() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// flight recorder: completeness, wire cross-checks, cross-transport diff
+
+/// Run one traced cluster on a shared graph.
+fn run_traced(
+    cfg: &RunConfig,
+    ds: &Arc<Dataset>,
+    part: &Arc<Partition>,
+    transport: Transport,
+) -> ClusterResult {
+    let mut ccfg = ClusterConfig::new(cfg.clone());
+    ccfg.transport = transport;
+    ccfg.trace = true;
+    run_cluster_on(ds.clone(), part.clone(), &ccfg, None).unwrap()
+}
+
+#[test]
+fn trace_is_complete_and_consistent_with_wire_counters() {
+    use rudder::trace::{EventKind, Role};
+    let cfg = quick("massivegnn:8");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let (ds, part) = (Arc::new(ds), Arc::new(part));
+    let r = run_traced(&cfg, &ds, &part, Transport::Channel);
+    let t = r.trace.as_ref().expect("trace requested but not returned");
+
+    // The drain-path audit: gapless seqs, one terminal RoleEnd per stream,
+    // RoleEnd.emitted == events collected.  Any buffer dropped between a
+    // role thread and the orchestrator fails here.
+    t.verify_complete().unwrap();
+
+    // Every role that ran must have produced a stream.
+    for (role, want) in [
+        (Role::Trainer, cfg.num_trainers),
+        (Role::Prefetcher, cfg.num_trainers),
+        (Role::Server, cfg.num_trainers),
+        (Role::Hub, 1),
+    ] {
+        let ids: std::collections::BTreeSet<u32> = t
+            .events
+            .iter()
+            .filter(|e| e.role == role)
+            .map(|e| e.id)
+            .collect();
+        assert_eq!(ids.len(), want, "{} streams missing: {ids:?}", role.name());
+    }
+
+    // Emitted-vs-collected cross-checks against independently kept
+    // counters: the trace must agree with the wire layer event for event.
+    let count = |f: &dyn Fn(&EventKind) -> bool| -> u64 {
+        t.events.iter().filter(|e| f(&e.kind)).count() as u64
+    };
+    let wire = r.wire_total();
+    assert_eq!(
+        count(&|k| matches!(k, EventKind::FetchIssue { .. })),
+        wire.req_frames,
+        "one FetchIssue per request frame"
+    );
+    assert_eq!(
+        count(&|k| matches!(k, EventKind::FetchResponse { .. })),
+        wire.resp_frames,
+        "one FetchResponse per admitted response frame (duplicates are silent)"
+    );
+    let begins = count(&|k| matches!(k, EventKind::MinibatchBegin { .. }));
+    let ends = count(&|k| matches!(k, EventKind::MinibatchEnd { .. }));
+    assert!(begins > 0, "trainers must emit minibatch events");
+    assert_eq!(begins, ends, "every minibatch must close");
+    assert_eq!(
+        count(&|k| matches!(k, EventKind::AllreduceRound { .. })),
+        r.allreduce_rounds,
+        "one AllreduceRound trace event per hub round"
+    );
+}
+
+#[test]
+fn trace_verify_complete_detects_dropped_events() {
+    let cfg = quick("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let (ds, part) = (Arc::new(ds), Arc::new(part));
+    let r = run_traced(&cfg, &ds, &part, Transport::Channel);
+    let good = r.trace.unwrap();
+    good.verify_complete().unwrap();
+
+    // Dropping any single mid-stream event must be caught (seq gap or
+    // RoleEnd emitted-count mismatch) — the regression guard for silent
+    // drops at shutdown.
+    let mut truncated = good.clone();
+    let victim = truncated
+        .events
+        .iter()
+        .position(|e| !matches!(e.kind, rudder::trace::EventKind::RoleEnd { .. }))
+        .expect("some non-terminal event");
+    truncated.events.remove(victim);
+    let err = truncated.verify_complete().unwrap_err().to_string();
+    assert!(err.contains("dropped"), "unexpected error: {err}");
+}
+
+#[test]
+fn cross_transport_trace_diff_is_virtual_time_identical() {
+    // The trace-level generalization of `wire_parity`: same config + seed
+    // on the channel, in-process tcp, and event transports must agree on
+    // every virtual-time field once wall clocks and arrival order are
+    // projected out.
+    let cfg = quick("llm:gemma3-4b");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let (ds, part) = (Arc::new(ds), Arc::new(part));
+    let chan = run_traced(&cfg, &ds, &part, Transport::Channel);
+    let tcp = run_traced(&cfg, &ds, &part, Transport::Tcp);
+    let event = run_traced(&cfg, &ds, &part, Transport::Event);
+    let t_chan = chan.trace.unwrap();
+    for (name, other) in [("tcp", tcp.trace.unwrap()), ("event", event.trace.unwrap())] {
+        let report = rudder::trace::diff::diff(&t_chan, &other);
+        assert!(
+            report.identical(),
+            "channel vs {name} trace diverged:\n{}",
+            report.render()
+        );
+        assert!(report.events > 0, "diff must actually compare events");
+    }
+}
+
+#[test]
+fn untraced_run_returns_no_trace() {
+    let cfg = quick("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ccfg = ClusterConfig::new(cfg.clone());
+    let r = run_cluster_on(Arc::new(ds), Arc::new(part), &ccfg, None).unwrap();
+    assert!(r.trace.is_none(), "tracing is strictly opt-in");
+}
+
+#[test]
+fn multiproc_trace_ships_over_result_blobs() {
+    // TCP worker processes return their trace buffers inside the ipc
+    // result blobs; the orchestrator's merged trace must then be
+    // virtual-time identical to an in-process channel run of the same
+    // seed — through the real binary and `rudder trace diff`.
+    let exe = env!("CARGO_BIN_EXE_rudder");
+    let dir = std::env::temp_dir().join(format!("rudder-trace-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let record = |transport: &str| -> std::path::PathBuf {
+        let path = dir.join(format!("{transport}.trace"));
+        let out = std::process::Command::new(exe)
+            .args([
+                "cluster",
+                "--dataset",
+                "ogbn-arxiv",
+                "--scale",
+                "0.1",
+                "--trainers",
+                "2",
+                "--epochs",
+                "1",
+                "--seed",
+                "7",
+                "--controller",
+                "fixed",
+                "--transport",
+                transport,
+                "--time-scale",
+                "0",
+                "--trace",
+                path.to_str().unwrap(),
+            ])
+            .output()
+            .expect("spawn rudder cluster --trace");
+        assert!(
+            out.status.success(),
+            "{transport} run failed: {}\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        path
+    };
+    let chan = record("channel");
+    let tcp = record("tcp");
+    let out = std::process::Command::new(exe)
+        .args(["trace", "diff", chan.to_str().unwrap(), tcp.to_str().unwrap()])
+        .output()
+        .expect("spawn rudder trace diff");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "trace diff failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("traces identical"), "unexpected diff output:\n{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Wall-clock overlap check: with emulated costs, prefetching must beat
 /// the no-prefetch baseline.  Timing-based, so ignored by default (CI
 /// runs it through the `cluster --compare-prefetch` smoke instead).

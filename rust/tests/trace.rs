@@ -1,0 +1,261 @@
+//! Property-based tests for the flight-recorder trace codec
+//! (`trace::codec`), in the style of `tests/wire.rs`: arbitrary in-domain
+//! event sequences must survive binary → JSONL → binary bit-exactly, and
+//! truncated or corrupt prefixes must decode to clean errors, never
+//! panics or junk events.
+
+use rudder::trace::codec::{decode_binary, encode_binary, from_jsonl, to_jsonl};
+use rudder::trace::{EventKind, Role, Trace, TraceEvent, TraceMeta};
+use rudder::util::prop::{prop_check, G};
+
+/// The trace integer domain: exact in an IEEE double.
+const MAX_SAFE: u64 = 1 << 53;
+
+fn arb_kind(g: &mut G) -> EventKind {
+    // Biased spread over the full domain: mostly small values, sometimes
+    // the 2^53 boundary itself.
+    let int = |g: &mut G| -> u64 {
+        if g.bool() {
+            g.u64(0, 10_000)
+        } else {
+            *g.pick(&[0, 1, MAX_SAFE - 1, MAX_SAFE])
+        }
+    };
+    let sec = |g: &mut G| -> f64 { g.f64(0.0, 1e6) };
+    match g.usize(0, 14) {
+        0 => EventKind::MinibatchBegin { epoch: g.u64(0, 100) as u32, mb: g.u64(0, 5000) as u32 },
+        1 => EventKind::MinibatchEnd {
+            epoch: g.u64(0, 100) as u32,
+            mb: g.u64(0, 5000) as u32,
+            step_vsecs: sec(g),
+        },
+        2 => EventKind::FetchWait { nodes: int(g), wall_secs: sec(g) },
+        3 => EventKind::Compute { virtual_secs: sec(g), wall_secs: sec(g) },
+        4 => EventKind::Replacement { admitted: int(g), evicted: int(g) },
+        5 => EventKind::AllreduceWait { round: int(g), wall_secs: sec(g) },
+        6 => EventKind::FetchIssue {
+            req_id: int(g),
+            owner: g.u64(0, 64) as u32,
+            nodes: int(g),
+            bytes: int(g),
+        },
+        7 => EventKind::FetchResponse { req_id: int(g), nodes: int(g), bytes: int(g) },
+        8 => EventKind::Evict { nodes: int(g) },
+        9 => EventKind::BatchFlush { owner: g.u64(0, 64) as u32, frames: int(g), bytes: int(g) },
+        10 => EventKind::FetchServe {
+            req_id: int(g),
+            from: g.u64(0, 64) as u32,
+            nodes: int(g),
+            bytes: int(g),
+        },
+        11 => EventKind::AllreduceRound {
+            round: int(g),
+            vclock_max: sec(g),
+            trainers: g.u64(1, 64) as u32,
+        },
+        12 => EventKind::LinkFlush { conn: g.u64(0, 32) as u32, frames: int(g), bytes: int(g) },
+        13 => EventKind::ChannelClose { conn: g.u64(0, 32) as u32, channel: g.u64(0, 32) as u32 },
+        _ => EventKind::RoleEnd { emitted: int(g) },
+    }
+}
+
+fn arb_trace(g: &mut G) -> Trace {
+    let meta = TraceMeta {
+        label: format!("prop-{}", g.u64(0, 999)),
+        seed: g.u64(0, MAX_SAFE),
+        transport: g.pick(&["channel", "tcp", "event"]).to_string(),
+        compute: g.pick(&["emulated", "measured"]).to_string(),
+    };
+    let mut t = Trace::new(meta);
+    t.events = g.vec(64, |g| TraceEvent {
+        role: *g.pick(&Role::ALL),
+        id: g.u64(0, 64) as u32,
+        seq: g.u64(0, MAX_SAFE),
+        vclock: g.f64(0.0, 1e9),
+        wall: g.f64(0.0, 1e9),
+        kind: arb_kind(g),
+    });
+    t
+}
+
+fn assert_bit_identical(a: &Trace, b: &Trace, what: &str) -> Result<(), String> {
+    if a.meta != b.meta {
+        return Err(format!("{what}: meta diverged: {:?} vs {:?}", a.meta, b.meta));
+    }
+    if a.events.len() != b.events.len() {
+        return Err(format!("{what}: {} vs {} events", a.events.len(), b.events.len()));
+    }
+    for (i, (ea, eb)) in a.events.iter().zip(&b.events).enumerate() {
+        // PartialEq on f64 treats 0.0 == -0.0; compare through the binary
+        // codec's raw-bits lens instead for true bit-exactness.
+        let (ba, bb) = (
+            format!("{:?} {:x} {:x}", ea.kind, ea.vclock.to_bits(), ea.wall.to_bits()),
+            format!("{:?} {:x} {:x}", eb.kind, eb.vclock.to_bits(), eb.wall.to_bits()),
+        );
+        if (ea.role, ea.id, ea.seq) != (eb.role, eb.id, eb.seq) || ba != bb {
+            return Err(format!("{what}: event {i}: {ea:?} vs {eb:?}"));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// round-trips
+
+#[test]
+fn prop_binary_roundtrip_bit_exact() {
+    prop_check("trace binary round-trip", 150, |g| {
+        let t = arb_trace(g);
+        let bytes = encode_binary(&t).map_err(|e| format!("encode: {e}"))?;
+        let back = decode_binary(&bytes).map_err(|e| format!("decode: {e}"))?;
+        assert_bit_identical(&t, &back, "binary")
+    });
+}
+
+#[test]
+fn prop_jsonl_roundtrip_bit_exact() {
+    prop_check("trace jsonl round-trip", 150, |g| {
+        let t = arb_trace(g);
+        let text = to_jsonl(&t).map_err(|e| format!("to_jsonl: {e}"))?;
+        let back = from_jsonl(&text).map_err(|e| format!("from_jsonl: {e}"))?;
+        assert_bit_identical(&t, &back, "jsonl")
+    });
+}
+
+#[test]
+fn prop_binary_jsonl_binary_lossless() {
+    // The full conversion cycle `rudder trace dump` performs: binary →
+    // JSONL → binary must reproduce the original byte stream exactly.
+    prop_check("trace binary->jsonl->binary", 150, |g| {
+        let t = arb_trace(g);
+        let bin1 = encode_binary(&t).map_err(|e| format!("encode: {e}"))?;
+        let text = to_jsonl(&decode_binary(&bin1).map_err(|e| format!("decode: {e}"))?)
+            .map_err(|e| format!("to_jsonl: {e}"))?;
+        let bin2 = encode_binary(&from_jsonl(&text).map_err(|e| format!("from_jsonl: {e}"))?)
+            .map_err(|e| format!("re-encode: {e}"))?;
+        if bin1 != bin2 {
+            return Err(format!("byte streams diverged: {} vs {} bytes", bin1.len(), bin2.len()));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// adversarial inputs
+
+#[test]
+fn prop_truncated_binary_fails_cleanly() {
+    prop_check("truncated trace prefix", 150, |g| {
+        let mut t = arb_trace(g);
+        if t.events.is_empty() {
+            t.events.push(TraceEvent {
+                role: Role::Trainer,
+                id: 0,
+                seq: 0,
+                vclock: 0.0,
+                wall: 0.0,
+                kind: EventKind::RoleEnd { emitted: 0 },
+            });
+        }
+        let bytes = encode_binary(&t).map_err(|e| format!("encode: {e}"))?;
+        let cut = g.usize(0, bytes.len() - 1);
+        match decode_binary(&bytes[..cut]) {
+            Ok(back) => {
+                // A prefix that still parses must never invent events.
+                if back.events.len() >= t.events.len() && cut < bytes.len() {
+                    return Err(format!(
+                        "truncation at {cut}/{} still yielded all {} events",
+                        bytes.len(),
+                        t.events.len()
+                    ));
+                }
+                Ok(())
+            }
+            Err(_) => Ok(()), // clean error is the expected outcome
+        }
+    });
+}
+
+#[test]
+fn prop_corrupt_byte_never_panics() {
+    prop_check("corrupt trace byte", 200, |g| {
+        let t = arb_trace(g);
+        let mut bytes = encode_binary(&t).map_err(|e| format!("encode: {e}"))?;
+        let i = g.usize(0, bytes.len() - 1);
+        let flip = 1u8 << g.usize(0, 7);
+        bytes[i] ^= flip;
+        // Any outcome but a panic is acceptable; decode_binary returning
+        // Ok is fine when the flipped bit lands in a float payload.
+        let _ = decode_binary(&bytes);
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_jsonl_fails_cleanly() {
+    let meta = TraceMeta {
+        label: "x".into(),
+        seed: 7,
+        transport: "channel".into(),
+        compute: "emulated".into(),
+    };
+    let mut t = Trace::new(meta);
+    t.events.push(TraceEvent {
+        role: Role::Hub,
+        id: 0,
+        seq: 0,
+        vclock: 1.5,
+        wall: 2.5,
+        kind: EventKind::AllreduceRound { round: 1, vclock_max: 1.5, trainers: 2 },
+    });
+    let text = to_jsonl(&t).unwrap();
+    // Chop mid-line: the decoder must reject, not return partial data.
+    let cut = text.len() - 3;
+    assert!(from_jsonl(&text[..cut]).is_err(), "chopped jsonl must not parse");
+    // Missing header entirely.
+    let body_only = text.lines().nth(1).unwrap();
+    assert!(from_jsonl(body_only).is_err(), "jsonl without header must not parse");
+}
+
+#[test]
+fn out_of_domain_events_are_rejected_at_encode() {
+    let meta = TraceMeta {
+        label: "dom".into(),
+        seed: 1,
+        transport: "channel".into(),
+        compute: "emulated".into(),
+    };
+    let event = |kind: EventKind, vclock: f64| TraceEvent {
+        role: Role::Trainer,
+        id: 0,
+        seq: 0,
+        vclock,
+        wall: 0.0,
+        kind,
+    };
+    // Non-finite float.
+    let mut t = Trace::new(meta.clone());
+    t.events.push(event(EventKind::RoleEnd { emitted: 0 }, f64::NAN));
+    assert!(encode_binary(&t).is_err(), "NaN vclock must not encode");
+    assert!(to_jsonl(&t).is_err(), "NaN vclock must not encode to jsonl");
+    // Integer beyond 2^53.
+    let mut t = Trace::new(meta);
+    t.events.push(event(EventKind::Evict { nodes: (1 << 53) + 1 }, 0.0));
+    assert!(encode_binary(&t).is_err(), "2^53+1 must not encode");
+    assert!(to_jsonl(&t).is_err(), "2^53+1 must not encode to jsonl");
+}
+
+#[test]
+fn wrong_magic_and_version_are_rejected() {
+    let err = decode_binary(b"NOPE").unwrap_err().to_string();
+    assert!(err.contains("magic") || err.contains("trace"), "unexpected: {err}");
+    let t = Trace::new(TraceMeta {
+        label: String::new(),
+        seed: 0,
+        transport: "channel".into(),
+        compute: "emulated".into(),
+    });
+    let mut bytes = encode_binary(&t).unwrap();
+    bytes[4] = 0xFF; // version little-endian low byte
+    assert!(decode_binary(&bytes).is_err(), "future version must be rejected");
+}
