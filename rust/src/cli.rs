@@ -105,6 +105,13 @@ COMMANDS:
                                   (holds in both compute modes)
                --compare-prefetch also run with prefetching disabled and
                                   report the wall-clock delta
+               --chunk-cache <b>  per-link chunk-cache budget in bytes;
+                                  enables the content-addressed feature
+                                  plane (ChunkReq/ChunkResp, FNV-1a
+                                  digests, byte-budgeted LRU per server
+                                  link).  0 (default) keeps the plain
+                                  row protocol
+               --chunk-rows <n>   rows per feature chunk (default 32)
                --fault <s[:dup[:delay[:chop]]]>  seeded fault injection on
                                   response links (duplicate/reorder/chop)
                --trace <file>     record a flight-recorder trace in every
@@ -122,7 +129,11 @@ COMMANDS:
                results return over the same link (no shared filesystem
                needed; --out writes a local blob instead)
   bench        pinned measured-compute benchmark: prefetch vs no-prefetch
-               baseline with real SageRunner compute, plus a transport
+               baseline with real SageRunner compute, plus a chunk-cache
+               leg (prefetch re-run with the content-addressed feature
+               plane on; the artifact carries the cached-vs-uncached
+               wire-byte delta and fails unless the cache strictly
+               reduces response bytes), plus a transport
                scale matrix (tcp vs event across trainer counts × buffer
                sizes; --skip-scale-matrix to omit); writes machine-
                readable BENCH_cluster.json (--out <file>, default

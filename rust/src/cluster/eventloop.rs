@@ -771,8 +771,8 @@ mod tests {
     fn mux_reassembles_interleaved_channels_byte_by_byte() {
         // A frame split across many "readiness wakeups" (here: one byte
         // per push) must come out whole, channels and markers intact.
-        let a = Frame::FetchReq { req_id: 1, from: 0, nodes: vec![7, 8, 9] }.encode();
-        let b = Frame::Hello { role: ROLE_TRAINER, id: 2 }.encode();
+        let a = Frame::FetchReq { req_id: 1, from: 0, nodes: vec![7, 8, 9] }.encode().unwrap();
+        let b = Frame::Hello { role: ROLE_TRAINER, id: 2 }.encode().unwrap();
         let mut stream = encode_tagged(3, &a);
         stream.extend_from_slice(&close_marker(3));
         stream.extend_from_slice(&encode_tagged(0, &b));
@@ -812,7 +812,8 @@ mod tests {
         // until the loop side drains the queue.
         let wq = WriteQueue::new(64, 1, waker);
         let mut sender = EventFrameSender::new(wq.clone(), 0, None);
-        let frame = Frame::FetchReq { req_id: 1, from: 0, nodes: (0..32).collect() }.encode();
+        let frame =
+            Frame::FetchReq { req_id: 1, from: 0, nodes: (0..32).collect() }.encode().unwrap();
         sender.send_frame(&frame).unwrap(); // fills past the cap
         assert!(wq.queued_bytes() > 64);
         let (done_tx, done_rx) = mpsc::channel();
@@ -846,7 +847,7 @@ mod tests {
         let waker = Waker { tx, flagged: Arc::new(AtomicBool::new(false)) };
         let wq = WriteQueue::new(16, 1, waker);
         let mut sender = EventFrameSender::new(wq.clone(), 0, None);
-        let frame = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
+        let frame = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode().unwrap();
         sender.send_frame(&frame).unwrap();
         wq.wedge();
         let err = sender.send_frame(&frame).unwrap_err();
@@ -864,7 +865,7 @@ mod tests {
         let mut ec = wire_event_cluster(1, &[server_tx], &hub_tx, &[pf_tx], true).unwrap();
         drop(hub_tx);
 
-        let req = Frame::FetchReq { req_id: 7, from: 0, nodes: vec![1, 2, 3] }.encode();
+        let req = Frame::FetchReq { req_id: 7, from: 0, nodes: vec![1, 2, 3] }.encode().unwrap();
         let mut end = ec.trainers.pop().unwrap();
         end.request_links[0].send_frame(&req).unwrap();
         let got = match server_rx.recv_timeout(Duration::from_secs(10)).unwrap() {
@@ -873,8 +874,9 @@ mod tests {
         };
         assert_eq!(got, req);
 
-        let resp =
-            Frame::FetchResp { req_id: 7, feat_dim: 1, nodes: vec![1], feats: vec![0.5] }.encode();
+        let resp = Frame::FetchResp { req_id: 7, feat_dim: 1, nodes: vec![1], feats: vec![0.5] }
+            .encode()
+            .unwrap();
         let (_, mut reply) = ec.server_prereg.remove(0).remove(0);
         reply.send_frame(&resp).unwrap();
         match pf_rx.recv_timeout(Duration::from_secs(10)).unwrap() {
@@ -882,7 +884,9 @@ mod tests {
             _ => panic!("expected wire frame"),
         }
 
-        let grad = Frame::Allreduce { part: 0, round: 0, vclock: 1.0, grads: vec![1.0] }.encode();
+        let grad = Frame::Allreduce { part: 0, round: 0, vclock: 1.0, grads: vec![1.0] }
+            .encode()
+            .unwrap();
         end.hub_tx.send_frame(&grad).unwrap();
         match hub_rx.recv_timeout(Duration::from_secs(10)).unwrap() {
             NetMsg::Frame(b) => assert_eq!(b, grad),

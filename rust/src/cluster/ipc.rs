@@ -22,10 +22,11 @@ use super::server::ServerStats;
 use super::trainer::WallStats;
 use super::wire::{put_u32, put_u64, Reader};
 
-/// Blob magics (format + version in four bytes).  v3/v2 added the trace
-/// sections, the per-owner fetch-latency histograms, and the link channel
-/// ids; stale magics are rejected, not best-effort parsed.
-const MAGIC_TRAINER: &[u8; 4] = b"RTR3";
+/// Blob magics (format + version in four bytes).  v4 added the chunk-cache
+/// counters; v3/v2 added the trace sections, the per-owner fetch-latency
+/// histograms, and the link channel ids; stale magics are rejected, not
+/// best-effort parsed.
+const MAGIC_TRAINER: &[u8; 4] = b"RTR4";
 const MAGIC_SERVER: &[u8; 4] = b"RSV2";
 const MAGIC_HUB: &[u8; 4] = b"RHB2";
 
@@ -317,6 +318,9 @@ fn put_wire(out: &mut Vec<u8>, w: &WireStats) {
     put_u64(out, w.nodes_received);
     put_u64(out, w.dup_frames);
     put_u64(out, w.bad_frames);
+    put_u64(out, w.chunks_hit);
+    put_u64(out, w.chunks_fetched);
+    put_u64(out, w.bytes_saved_cache);
     put_u32(out, w.links.len() as u32);
     for l in &w.links {
         put_link(out, l);
@@ -338,6 +342,9 @@ fn get_wire(r: &mut Reader) -> Result<WireStats> {
         nodes_received: r.u64()?,
         dup_frames: r.u64()?,
         bad_frames: r.u64()?,
+        chunks_hit: r.u64()?,
+        chunks_fetched: r.u64()?,
+        bytes_saved_cache: r.u64()?,
         links: Vec::new(),
         fetch_latency: Vec::new(),
     };
@@ -521,6 +528,9 @@ mod tests {
             nodes_received: 500,
             dup_frames: 3,
             bad_frames: 0,
+            chunks_hit: 12,
+            chunks_fetched: 34,
+            bytes_saved_cache: 5600,
             links: vec![LinkStats {
                 peer: "server:1".into(),
                 channel: 1,
@@ -561,6 +571,11 @@ mod tests {
         assert_eq!(w2.epochs, vec![1.25, 1.25]);
         assert_eq!(wire2.nodes_requested, 500);
         assert_eq!(wire2.dup_frames, 3);
+        assert_eq!(
+            (wire2.chunks_hit, wire2.chunks_fetched, wire2.bytes_saved_cache),
+            (12, 34, 5600),
+            "chunk-cache counters must survive"
+        );
         assert_eq!(wire2.links, wire.links);
         assert_eq!(wire2.links[0].channel, 1, "link channel id must survive");
         assert_eq!(wire2.fetch_latency, wire.fetch_latency);
@@ -620,8 +635,8 @@ mod tests {
         let mut trailing = blob;
         trailing.push(0);
         assert!(decode_hub_result(&trailing).is_err(), "trailing bytes");
-        assert!(decode_trainer_result(b"RTR3").is_err(), "short trainer blob");
+        assert!(decode_trainer_result(b"RTR4").is_err(), "short trainer blob");
         assert!(decode_trainer_result(b"RTR1").is_err(), "stale blob version rejected");
-        assert!(decode_trainer_result(b"RTR2").is_err(), "pre-trace blob version rejected");
+        assert!(decode_trainer_result(b"RTR3").is_err(), "pre-chunk blob version rejected");
     }
 }

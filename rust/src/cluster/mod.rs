@@ -41,15 +41,30 @@
 //!
 //! ```text
 //!            ┌── trainer process t ──────────────┐
-//!            │ trainer thread ⇄ FeatureStore     │     FetchReq ▶
-//!            │        │ Fetch/Evict              ├────────────────▶ server p
-//!            │        ▼                          │ ◀ FetchResp      (per owner
-//!            │ prefetcher thread ◀─ pump threads │                   partition)
-//!            └──────┬────────────────────────────┘
+//!            │ trainer thread ⇄ FeatureStore     │   FetchReq |
+//!            │        │ Fetch/Evict              │   ChunkReq ▶
+//!            │        ▼                          ├────────────────▶ server p
+//!            │ prefetcher thread ◀─ pump threads │ ◀ FetchResp |    (per owner
+//!            │        │                          │   ChunkResp      partition,
+//!            │  [ChunkCache p]  (LRU, per link)  │                   FeatureShard
+//!            └──────┬────────────────────────────┘                   + digests)
 //!                   │ Allreduce ⇄ reduced Allreduce
 //!                   ▼
 //!               allreduce hub (barrier: max vclock + summed grads)
 //! ```
+//!
+//! With `chunk_cache_bytes > 0` ([`crate::sim::RunConfig`], `rudder
+//! cluster --chunk-cache`) the feature plane is **content-addressed**:
+//! each owner partition's rows are grouped into fixed `chunk_rows`-row
+//! chunks (in `local_nodes` order, so trainer and server agree on the
+//! layout without negotiation), keyed by an FNV-1a digest over the row
+//! bytes.  The prefetcher keeps one byte-budgeted LRU `ChunkCache`
+//! (shared-nothing) per server link; fetch orders consult it first, only
+//! missed chunks' nodes go on the wire as `ChunkReq`, and the server
+//! answers with whole digest-verified chunks (`ChunkResp`).  Admission
+//! and eviction happen at command time only, so hits and misses — and
+//! every wire counter — stay a pure function of config + seed, and all
+//! parity guarantees below hold with the cache on.
 //!
 //! Under `--transport event` the per-link pipes and pump threads collapse
 //! into a channel-id-multiplexed stream: trainer `t` holds **one**
@@ -94,7 +109,8 @@
 //! With tracing on ([`ClusterConfig::trace`], `rudder cluster --trace`),
 //! every role owns a [`crate::trace::Tracer`] and emits typed
 //! [`crate::trace::TraceEvent`]s — minibatch begin/end, fetch
-//! issue/response/serve, batch and link flushes, allreduce rounds,
+//! issue/response/serve, chunk-cache hits/misses, batch and link
+//! flushes, allreduce rounds,
 //! replacement, stalls — each carrying the virtual clock *and* a wall
 //! clock, tagged `(role, id, seq)`.  Buffers flow back to the
 //! orchestrator on the same paths as the stats they annotate:
@@ -104,7 +120,7 @@
 //!  prefetcher ──────┤ per-role Vec<TraceEvent>
 //!  server p ────────┤   channel/event: returned by each thread's join
 //!  hub ─────────────┘   tcp: shipped in the ipc result blob
-//!                              (Frame::Result, magics RTR3/RSV2/RHB2)
+//!                              (Frame::Result, magics RTR4/RSV2/RHB2)
 //!          ▼
 //!  merged + canonically sorted ⇒ ClusterResult::trace ⇒ Trace::write_file
 //!          ▼

@@ -48,7 +48,7 @@ use crate::sim::{self, ControllerSpec, ExperimentResult};
 use crate::trace::{Trace, TraceEvent, TraceMeta};
 
 use super::ipc;
-use super::prefetch::{spawn_prefetcher, FeatureStore};
+use super::prefetch::{spawn_prefetcher, FeatureStore, PrefetchConfig};
 use super::run::{hub_loop, ClusterConfig, ClusterResult, ComputeMode};
 use super::server::{server_loop, ServerStats, WireDelay};
 use super::trainer::{io_timeout, run_trainer, TrainerArgs, WallStats};
@@ -80,7 +80,7 @@ fn deliver_result(
         let stream = TcpStream::connect(addr.as_str())
             .map_err(|e| crate::err!("worker: connect results listener {addr}: {e}"))?;
         let mut tx = TcpFrameSender::new(stream, LinkStatsHandle::new("results"));
-        tx.send_frame(&Frame::Result { role, id, blob }.encode())?;
+        tx.send_frame(&Frame::Result { role, id, blob }.encode()?)?;
         tx.close();
         return Ok(());
     }
@@ -136,7 +136,14 @@ fn spawn_result_collector(
                                 let mut tx =
                                     TcpFrameSender::new(stream, LinkStatsHandle::new("config"));
                                 let frame = Frame::Config { toml: (*config_toml).clone() };
-                                let _ = tx.send_frame(&frame.encode());
+                                match frame.encode() {
+                                    Ok(bytes) => {
+                                        let _ = tx.send_frame(&bytes);
+                                    }
+                                    Err(e) => crate::log_info!(
+                                        "results listener: config frame encode: {e}"
+                                    ),
+                                }
                                 tx.close();
                             }
                             Err(e) => {
@@ -178,7 +185,7 @@ fn fetch_config(
         .map_err(|e| crate::err!("worker: connect control listener {addr}: {e}"))?;
     let read_half = stream.try_clone()?;
     let mut tx = TcpFrameSender::new(stream, LinkStatsHandle::new("control"));
-    tx.send_frame(&Frame::Hello { role, id }.encode())?;
+    tx.send_frame(&Frame::Hello { role, id }.encode()?)?;
     tx.close();
     let mut rx = TcpFrameReceiver::new(read_half, LinkStatsHandle::new("control"));
     let bytes = rx
@@ -239,6 +246,7 @@ pub fn run_server_worker(o: &ServerWorkerOpts) -> Result<()> {
         o.part,
         ds.feature_seed,
         ds.spec.feat_dim,
+        cfg.chunk_rows,
         part,
         rx,
         Vec::new(),
@@ -326,6 +334,11 @@ pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
         pf_rx,
         dial.request_links,
         part.clone(),
+        PrefetchConfig {
+            feat_dim: ds.spec.feat_dim,
+            chunk_rows: cfg.chunk_rows,
+            cache_bytes: cfg.chunk_cache_bytes,
+        },
         io_timeout(o.compute.time_scale()),
         o.trace,
     );
@@ -446,7 +459,9 @@ pub fn run_cluster_multiproc(
         if let Ok(stream) = TcpStream::connect(results_addr.as_str()) {
             let mut tx = TcpFrameSender::new(stream, LinkStatsHandle::new("poison"));
             let frame = Frame::Result { role: RESULT_POISON_ROLE, id: 0, blob: Vec::new() };
-            let _ = tx.send_frame(&frame.encode());
+            if let Ok(bytes) = frame.encode() {
+                let _ = tx.send_frame(&bytes);
+            }
             tx.close();
         }
         let _ = collector.join();

@@ -11,13 +11,29 @@
 //! [`FeatureStore::wait_all`] when a feature it needs *now* has not landed
 //! yet.
 //!
+//! **Content-addressed chunk mode** (`chunk_cache_bytes > 0`): feature
+//! rows are grouped into fixed chunks of `chunk_rows` consecutive rows in
+//! the owner partition's `local_nodes` order — the same canonical order
+//! the server's `FeatureShard` materializes, so both ends agree on chunk
+//! membership without negotiation.  Each server link gets a byte-budgeted
+//! LRU [`ChunkCache`]; a fetch order first consults the cache, and only
+//! nodes of absent chunks go on the wire (as [`Frame::ChunkReq`]).  The
+//! server answers with whole digest-keyed chunks ([`Frame::ChunkResp`]);
+//! the trainer verifies each FNV-1a digest, installs the wanted rows, and
+//! settles the cache entry — so chunks survive buffer replacement and
+//! epoch boundaries, and a re-touched transient costs zero wire bytes.
+//!
 //! **Determinism:** the dedup bookkeeping (the want-set) is driven purely
 //! by the trainer's `Fetch`/`Evict` command sequence — never by response
 //! arrival timing — and responses are deduplicated by request id, so every
-//! [`WireStats`] counter is a pure function of config + seed.  That is
-//! what makes cross-transport parity (`channel` vs `tcp`, and both vs the
-//! virtual-time sim) assertable down to exact frame and byte counts, and
-//! keeps counters bit-identical even under the fault-injection shim's
+//! [`WireStats`] counter is a pure function of config + seed.  The chunk
+//! cache preserves this: admission and LRU eviction happen at *command*
+//! time only (an entry for an in-flight chunk is admitted unsettled when
+//! its request is issued), so hit/miss decisions — and therefore every
+//! frame and byte on the wire — never depend on arrival order.  That is
+//! what makes cross-transport parity (`channel` vs `tcp` vs `event`, and
+//! all vs the virtual-time sim) assertable down to exact frame and byte
+//! counts, cache enabled or not, even under the fault-injection shim's
 //! duplicated/reordered responses.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
@@ -28,7 +44,7 @@ use std::time::{Duration, Instant};
 use crate::metrics::WireStats;
 use crate::partition::Partition;
 use crate::trace::{EventKind, Role, TraceEvent, Tracer};
-use crate::util::fasthash::{FastMap, FastSet};
+use crate::util::fasthash::{digest_f32, FastMap, FastSet};
 
 use super::transport::FrameSender;
 use super::wire::Frame;
@@ -45,6 +61,17 @@ pub enum PrefetchMsg {
     Wire(Vec<u8>),
     /// Trainer finished: drain outstanding responses, then exit.
     Shutdown,
+}
+
+/// Feature-plane knobs the prefetcher needs beyond its links: the run's
+/// feature width (used to validate response shapes before any row is
+/// installed) and the chunk-store geometry.  `cache_bytes == 0` disables
+/// the chunk protocol entirely — the v1 row protocol runs unchanged.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PrefetchConfig {
+    pub feat_dim: usize,
+    pub chunk_rows: usize,
+    pub cache_bytes: u64,
 }
 
 #[derive(Default)]
@@ -114,13 +141,18 @@ impl FeatureStore {
             if nodes.iter().all(|n| g.feats.contains_key(n)) {
                 return Ok(());
             }
+            let remaining = deadline.saturating_duration_since(Instant::now());
             crate::ensure!(
-                Instant::now() < deadline,
+                !remaining.is_zero(),
                 "feature wait timed out ({} of {} nodes outstanding)",
                 nodes.iter().filter(|n| !g.feats.contains_key(n)).count(),
                 nodes.len()
             );
-            let (back, _) = self.cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+            // Wake periodically even without a notify, but never sleep
+            // past the deadline: expiry must land within the caller's
+            // tolerance, not up to a full slice late.
+            let slice = remaining.min(Duration::from_millis(50));
+            let (back, _) = self.cv.wait_timeout(g, slice).unwrap();
             g = back;
         }
     }
@@ -147,7 +179,14 @@ impl FeatureStore {
     /// Rows for nodes evicted since their request (no longer wanted) are
     /// dropped — a later re-request re-fetches them on the wire, never
     /// rescues the stale payload, keeping traffic timing-independent.
+    ///
+    /// A payload whose shape disagrees with `nodes.len() × dim` is
+    /// rejected whole (returns 0): installing it would slice out of
+    /// bounds or store wrong-width rows that panic the consumer later.
     fn complete_fetch(&self, nodes: &[u32], feats: &[f32], dim: usize) -> u64 {
+        if feats.len() != nodes.len() * dim || (dim == 0 && !nodes.is_empty()) {
+            return 0;
+        }
         let mut g = self.inner.lock().unwrap();
         let mut stored = 0u64;
         for (i, &n) in nodes.iter().enumerate() {
@@ -173,11 +212,151 @@ impl FeatureStore {
     }
 }
 
+/// Chunk layout of one owner partition, derived from
+/// [`Partition::local_nodes`]: node → local row index, with chunk `c`
+/// covering local rows `[c·chunk_rows, (c+1)·chunk_rows)`.
+struct ChunkLayout {
+    chunk_rows: usize,
+    total: usize,
+    local_idx: FastMap<u32, u32>,
+}
+
+impl ChunkLayout {
+    fn build(owned: &[u32], chunk_rows: usize) -> ChunkLayout {
+        let mut local_idx = FastMap::default();
+        for (i, &n) in owned.iter().enumerate() {
+            local_idx.insert(n, i as u32);
+        }
+        ChunkLayout { chunk_rows, total: owned.len(), local_idx }
+    }
+
+    /// `(chunk id, row offset within the chunk)` of `node`, if owned.
+    fn slot_of(&self, node: u32) -> Option<(u32, usize)> {
+        let i = *self.local_idx.get(&node)? as usize;
+        Some(((i / self.chunk_rows) as u32, i % self.chunk_rows))
+    }
+
+    /// Rows in chunk `c` (the last chunk of a partition may be short).
+    fn rows_in(&self, chunk: u32) -> usize {
+        let start = chunk as usize * self.chunk_rows;
+        self.chunk_rows.min(self.total.saturating_sub(start))
+    }
+}
+
+/// Wire payload-byte estimate of one cached chunk: digest + per-row node
+/// id + row floats (what [`Frame::ChunkResp`] pays per chunk, and what a
+/// hit therefore saves).
+fn chunk_wire_bytes(rows: usize, dim: usize) -> u64 {
+    8 + rows as u64 * (4 + 4 * dim as u64)
+}
+
+struct ChunkEntry {
+    last_use: u64,
+    bytes: u64,
+    /// Settled payload: the chunk's node ids plus its row-major rows.
+    /// `None` while the chunk's response is still in flight.
+    payload: Option<(Vec<u32>, Box<[f32]>)>,
+}
+
+/// Byte-budgeted LRU over content-addressed chunks, one per server link
+/// (shared-nothing).  Admission and eviction happen at command time only;
+/// arrival merely settles a previously admitted entry (an entry evicted
+/// while in flight stays evicted) — so the resident set, and with it
+/// every hit/miss decision, is a pure function of the command sequence.
+struct ChunkCache {
+    budget: u64,
+    used: u64,
+    tick: u64,
+    entries: FastMap<u32, ChunkEntry>,
+}
+
+impl ChunkCache {
+    fn new(budget: u64) -> ChunkCache {
+        ChunkCache { budget, used: 0, tick: 0, entries: FastMap::default() }
+    }
+
+    /// Bump `chunk`'s LRU stamp if present; returns whether it was.
+    fn touch(&mut self, chunk: u32) -> bool {
+        self.tick += 1;
+        match self.entries.get_mut(&chunk) {
+            Some(e) => {
+                e.last_use = self.tick;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The cached row at `offset` within a settled chunk, or `None` while
+    /// the chunk is still in flight (its inbound response installs the
+    /// row instead).
+    fn row(&self, chunk: u32, offset: usize, dim: usize) -> Option<&[f32]> {
+        let (_, feats) = self.entries.get(&chunk)?.payload.as_ref()?;
+        feats.get(offset * dim..(offset + 1) * dim)
+    }
+
+    /// Admit `chunk` unsettled (its request goes on the wire now), then
+    /// evict least-recently-used entries until the budget holds again.
+    /// The newest entry is never evicted, so a chunk larger than the
+    /// whole budget still caches alone.
+    fn admit(&mut self, chunk: u32, bytes: u64) {
+        self.tick += 1;
+        if let Some(old) = self
+            .entries
+            .insert(chunk, ChunkEntry { last_use: self.tick, bytes, payload: None })
+        {
+            self.used -= old.bytes;
+        }
+        self.used += bytes;
+        while self.used > self.budget && self.entries.len() > 1 {
+            let lru = self
+                .entries
+                .iter()
+                .filter(|(&id, _)| id != chunk)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(&id, _)| id)
+                .expect("cache has an evictable entry");
+            let e = self.entries.remove(&lru).expect("lru entry present");
+            self.used -= e.bytes;
+        }
+    }
+
+    /// Settle a still-admitted, still-unsettled entry with its verified
+    /// payload.  No-op if the entry was evicted while in flight:
+    /// re-admission is a command-time decision only.
+    fn settle(&mut self, chunk: u32, nodes: Vec<u32>, feats: Box<[f32]>) {
+        if let Some(e) = self.entries.get_mut(&chunk) {
+            if e.payload.is_none() {
+                e.payload = Some((nodes, feats));
+            }
+        }
+    }
+}
+
+/// All chunk-mode state of one prefetcher: per-owner layouts (shared
+/// geometry with the servers) and per-link caches.
+struct ChunkState {
+    dim: usize,
+    layouts: Vec<ChunkLayout>,
+    caches: Vec<ChunkCache>,
+}
+
+impl ChunkState {
+    fn build(part: &Partition, dim: usize, chunk_rows: usize, cache_bytes: u64) -> ChunkState {
+        let layouts =
+            part.local_nodes.iter().map(|o| ChunkLayout::build(o, chunk_rows)).collect();
+        let caches = (0..part.num_parts).map(|_| ChunkCache::new(cache_bytes)).collect();
+        ChunkState { dim, layouts, caches }
+    }
+}
+
 /// Decode one server frame and apply it to the store + counters.
 /// `outstanding` maps req-ids sent but not yet answered to the owner
 /// partition and issue instant (for round-trip latency); responses with
 /// an unknown req-id are duplicates (fault shim) and are dropped without
-/// touching any other counter.
+/// touching any other counter.  `feat_dim` is the run's feature width:
+/// a response whose dim disagrees is counted in `bad_frames` and dropped
+/// whole, never installed.
 fn handle_wire(
     trainer_id: usize,
     store: &FeatureStore,
@@ -185,9 +364,18 @@ fn handle_wire(
     stats: &mut WireStats,
     outstanding: &mut FastMap<u64, (u32, Instant)>,
     tracer: &mut Tracer,
+    feat_dim: usize,
+    chunks: Option<&mut ChunkState>,
 ) {
     match Frame::decode(bytes) {
-        Ok((Frame::FetchResp { req_id, feat_dim, nodes, feats }, _)) => {
+        Ok((Frame::FetchResp { req_id, feat_dim: dim, nodes, feats }, _)) => {
+            if dim as usize != feat_dim || feats.len() != nodes.len() * feat_dim {
+                stats.bad_frames += 1;
+                crate::log_info!(
+                    "prefetcher {trainer_id}: FetchResp dim {dim} != run dim {feat_dim}, dropped"
+                );
+                return;
+            }
             let Some((owner, issued)) = outstanding.remove(&req_id) else {
                 stats.dup_frames += 1;
                 return;
@@ -206,7 +394,68 @@ fn handle_wire(
                     bytes: bytes.len() as u64,
                 },
             );
-            store.complete_fetch(&nodes, &feats, feat_dim as usize);
+            store.complete_fetch(&nodes, &feats, feat_dim);
+        }
+        Ok((Frame::ChunkResp { req_id, feat_dim: dim, refs, chunks: got }, _)) => {
+            let Some(cs) = chunks else {
+                stats.bad_frames += 1;
+                crate::log_info!(
+                    "prefetcher {trainer_id}: ChunkResp with the chunk cache disabled"
+                );
+                return;
+            };
+            if dim as usize != feat_dim {
+                stats.bad_frames += 1;
+                crate::log_info!(
+                    "prefetcher {trainer_id}: ChunkResp dim {dim} != run dim {feat_dim}, dropped"
+                );
+                return;
+            }
+            let Some((owner, issued)) = outstanding.remove(&req_id) else {
+                stats.dup_frames += 1;
+                return;
+            };
+            stats.resp_frames += 1;
+            stats.resp_bytes += bytes.len() as u64;
+            if let Some(h) = stats.fetch_latency.get_mut(owner as usize) {
+                h.push(issued.elapsed().as_secs_f64());
+            }
+            let mut total_nodes = 0u64;
+            for c in got {
+                // Decode guarantees shape vs the frame's dim; the digest
+                // check catches payload corruption end to end.
+                if digest_f32(&c.feats) != c.digest {
+                    stats.bad_frames += 1;
+                    crate::log_info!(
+                        "prefetcher {trainer_id}: chunk digest mismatch, dropped"
+                    );
+                    continue;
+                }
+                total_nodes += c.nodes.len() as u64;
+                stats.nodes_received += c.nodes.len() as u64;
+                store.complete_fetch(&c.nodes, &c.feats, feat_dim);
+                if let Some((chunk, _)) =
+                    c.nodes.first().and_then(|&n| cs.layouts[owner as usize].slot_of(n))
+                {
+                    cs.caches[owner as usize].settle(
+                        chunk,
+                        c.nodes,
+                        c.feats.into_boxed_slice(),
+                    );
+                }
+            }
+            // `refs` lists chunks the server elided because we declared
+            // them held: their rows were already cache-resident at
+            // request time, nothing to install.
+            let _ = refs;
+            tracer.emit(
+                0.0,
+                EventKind::FetchResponse {
+                    req_id,
+                    nodes: total_nodes,
+                    bytes: bytes.len() as u64,
+                },
+            );
         }
         Ok((other, _)) => {
             stats.bad_frames += 1;
@@ -217,6 +466,8 @@ fn handle_wire(
                 Frame::Hello { .. } => "Hello",
                 Frame::Result { .. } => "Result",
                 Frame::Config { .. } => "Config",
+                Frame::ChunkReq { .. } => "ChunkReq",
+                Frame::ChunkResp { .. } => "ChunkResp",
             };
             crate::log_info!("prefetcher {trainer_id}: unexpected {kind} frame");
         }
@@ -238,6 +489,7 @@ pub(crate) fn spawn_prefetcher(
     rx: Receiver<PrefetchMsg>,
     servers: Vec<Box<dyn FrameSender>>,
     part: Arc<Partition>,
+    pcfg: PrefetchConfig,
     drain_timeout: Duration,
     trace: bool,
 ) -> JoinHandle<(WireStats, Vec<TraceEvent>)> {
@@ -248,6 +500,9 @@ pub(crate) fn spawn_prefetcher(
             let mut stats = WireStats::default();
             stats.fetch_latency.resize_with(servers.len(), Default::default);
             let mut tracer = Tracer::new(trace, Role::Prefetcher, trainer_id as u32);
+            let mut chunk_state: Option<ChunkState> = (pcfg.cache_bytes > 0).then(|| {
+                ChunkState::build(&part, pcfg.feat_dim, pcfg.chunk_rows.max(1), pcfg.cache_bytes)
+            });
             let mut req_id: u64 = 0;
             let mut outstanding: FastMap<u64, (u32, Instant)> = FastMap::default();
             // Reused per-owner coalescing buckets (nodes within one fetch
@@ -278,8 +533,72 @@ pub(crate) fn spawn_prefetcher(
                     match msg {
                         PrefetchMsg::Fetch(nodes) => {
                             let to_req = store.begin_fetch(&nodes, &mut stats);
-                            for &n in &to_req {
-                                groups[part.owner_of(n)].push(n);
+                            match chunk_state.as_mut() {
+                                Some(cs) => {
+                                    let mut hit_nodes = vec![0u64; servers.len()];
+                                    let mut miss_chunks = vec![0u64; servers.len()];
+                                    for &n in &to_req {
+                                        let owner = part.owner_of(n);
+                                        let Some((chunk, offset)) =
+                                            cs.layouts[owner].slot_of(n)
+                                        else {
+                                            // Not in the owner's layout
+                                            // (impossible under owner
+                                            // routing): plain wire fetch.
+                                            groups[owner].push(n);
+                                            continue;
+                                        };
+                                        if cs.caches[owner].touch(chunk) {
+                                            hit_nodes[owner] += 1;
+                                            stats.chunks_hit += 1;
+                                            stats.bytes_saved_cache +=
+                                                4 + 4 * cs.dim as u64;
+                                            if let Some(row) =
+                                                cs.caches[owner].row(chunk, offset, cs.dim)
+                                            {
+                                                // Settled: install now.
+                                                // In flight: the inbound
+                                                // response installs it.
+                                                store.complete_fetch(&[n], row, cs.dim);
+                                            }
+                                        } else {
+                                            let bytes = chunk_wire_bytes(
+                                                cs.layouts[owner].rows_in(chunk),
+                                                cs.dim,
+                                            );
+                                            cs.caches[owner].admit(chunk, bytes);
+                                            miss_chunks[owner] += 1;
+                                            stats.chunks_fetched += 1;
+                                            groups[owner].push(n);
+                                        }
+                                    }
+                                    for owner in 0..servers.len() {
+                                        if hit_nodes[owner] > 0 {
+                                            tracer.emit(
+                                                0.0,
+                                                EventKind::CacheHit {
+                                                    owner: owner as u32,
+                                                    nodes: hit_nodes[owner],
+                                                },
+                                            );
+                                        }
+                                        if miss_chunks[owner] > 0 {
+                                            tracer.emit(
+                                                0.0,
+                                                EventKind::CacheMiss {
+                                                    owner: owner as u32,
+                                                    chunks: miss_chunks[owner],
+                                                    nodes: groups[owner].len() as u64,
+                                                },
+                                            );
+                                        }
+                                    }
+                                }
+                                None => {
+                                    for &n in &to_req {
+                                        groups[part.owner_of(n)].push(n);
+                                    }
+                                }
                             }
                             for (owner, group) in groups.iter_mut().enumerate() {
                                 if group.is_empty() {
@@ -287,13 +606,31 @@ pub(crate) fn spawn_prefetcher(
                                 }
                                 let batch = std::mem::take(group);
                                 let batch_nodes = batch.len() as u64;
+                                let frame = if chunk_state.is_some() {
+                                    Frame::ChunkReq {
+                                        req_id,
+                                        from: trainer_id as u32,
+                                        nodes: batch,
+                                        have: Vec::new(),
+                                    }
+                                } else {
+                                    Frame::FetchReq {
+                                        req_id,
+                                        from: trainer_id as u32,
+                                        nodes: batch,
+                                    }
+                                };
+                                let bytes = match frame.encode() {
+                                    Ok(b) => b,
+                                    Err(e) => {
+                                        stats.bad_frames += 1;
+                                        crate::log_info!(
+                                            "prefetcher {trainer_id}: encode failed: {e}"
+                                        );
+                                        continue;
+                                    }
+                                };
                                 stats.nodes_requested += batch_nodes;
-                                let bytes = Frame::FetchReq {
-                                    req_id,
-                                    from: trainer_id as u32,
-                                    nodes: batch,
-                                }
-                                .encode();
                                 tracer.emit(
                                     0.0,
                                     EventKind::FetchIssue {
@@ -318,6 +655,8 @@ pub(crate) fn spawn_prefetcher(
                                 &mut stats,
                                 &mut outstanding,
                                 &mut tracer,
+                                pcfg.feat_dim,
+                                chunk_state.as_mut(),
                             );
                         }
                         PrefetchMsg::Evict(nodes) => {
@@ -356,7 +695,9 @@ pub(crate) fn spawn_prefetcher(
             // to link-close makes every counter, `dup_frames` included, a
             // pure function of config + seed.  Afterwards
             // `nodes_received == nodes_requested` and
-            // `resp_frames == req_frames` hold deterministically.
+            // `resp_frames == req_frames` hold deterministically in v1
+            // mode (chunk mode receives whole chunks, so
+            // `nodes_received >= nodes_requested`).
             for s in &mut servers {
                 s.close();
             }
@@ -372,6 +713,8 @@ pub(crate) fn spawn_prefetcher(
                             &mut stats,
                             &mut outstanding,
                             &mut tracer,
+                            pcfg.feat_dim,
+                            chunk_state.as_mut(),
                         );
                     }
                     Ok(_) => {}
@@ -427,6 +770,66 @@ mod tests {
     }
 
     #[test]
+    fn complete_fetch_rejects_shape_mismatch() {
+        // Regression: an undersized payload used to slice
+        // `feats[i*dim..(i+1)*dim]` out of bounds and panic the
+        // prefetcher thread; now the malformed payload is dropped whole.
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        store.begin_fetch(&[1, 2], &mut stats);
+        assert_eq!(store.complete_fetch(&[1, 2], &[1.0], 1), 0, "chopped payload dropped");
+        assert!(!store.contains(1) && !store.contains(2));
+        // Zero-dim rows for real nodes would panic `copy_into` later.
+        assert_eq!(store.complete_fetch(&[1, 2], &[], 0), 0);
+        assert!(!store.contains(1));
+        // A well-formed payload still installs.
+        assert_eq!(store.complete_fetch(&[1, 2], &[1.0, 2.0], 1), 2);
+    }
+
+    #[test]
+    fn handle_wire_drops_dim_skewed_and_chopped_responses() {
+        // Regression: a `FetchResp` whose dim disagrees with the run's
+        // feature width passed straight into the store pre-fix (a
+        // zero-dim frame satisfies the decoder's shape identity
+        // `0 == n × 0`) and panicked the trainer's row copy later.
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        stats.fetch_latency.resize_with(1, Default::default);
+        let mut tracer = Tracer::new(false, Role::Prefetcher, 0);
+        let mut outstanding: FastMap<u64, (u32, Instant)> = FastMap::default();
+        outstanding.insert(1, (0, Instant::now()));
+        store.begin_fetch(&[3], &mut stats);
+        let skewed = Frame::FetchResp { req_id: 1, feat_dim: 0, nodes: vec![3], feats: vec![] }
+            .encode()
+            .unwrap();
+        handle_wire(0, &store, &skewed, &mut stats, &mut outstanding, &mut tracer, 2, None);
+        assert_eq!(stats.bad_frames, 1, "dim-skewed response dropped");
+        assert!(!store.contains(3), "no row installed from the skewed frame");
+        assert!(outstanding.contains_key(&1), "request still owed a real response");
+        // A chopped frame (fault shim cut mid-payload) fails decode.
+        let good =
+            Frame::FetchResp { req_id: 1, feat_dim: 2, nodes: vec![3], feats: vec![1.0, 2.0] }
+                .encode()
+                .unwrap();
+        handle_wire(
+            0,
+            &store,
+            &good[..good.len() - 3],
+            &mut stats,
+            &mut outstanding,
+            &mut tracer,
+            2,
+            None,
+        );
+        assert_eq!(stats.bad_frames, 2, "chopped payload counted and dropped");
+        assert!(!store.contains(3));
+        // The intact response still lands.
+        handle_wire(0, &store, &good, &mut stats, &mut outstanding, &mut tracer, 2, None);
+        assert_eq!(stats.resp_frames, 1);
+        assert!(store.contains(3));
+    }
+
+    #[test]
     fn evict_while_expected_discards_on_arrival() {
         let store = FeatureStore::new();
         let mut stats = WireStats::default();
@@ -468,9 +871,9 @@ mod tests {
         let resp =
             Frame::FetchResp { req_id: 7, feat_dim: 1, nodes: vec![3], feats: vec![0.5] };
         store.begin_fetch(&[3], &mut stats);
-        let bytes = resp.encode();
-        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding, &mut tracer);
-        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding, &mut tracer);
+        let bytes = resp.encode().unwrap();
+        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding, &mut tracer, 1, None);
+        handle_wire(0, &store, &bytes, &mut stats, &mut outstanding, &mut tracer, 1, None);
         assert_eq!(stats.resp_frames, 1);
         assert_eq!(stats.nodes_received, 1);
         assert_eq!(stats.dup_frames, 1, "second copy is dropped by req-id dedup");
@@ -495,5 +898,163 @@ mod tests {
         store.wait_all(&[1, 2], Duration::from_secs(10)).unwrap();
         h.join().unwrap();
         assert_eq!(store.resident(), 2);
+    }
+
+    #[test]
+    fn wait_all_expiry_lands_near_deadline() {
+        // Regression: the fixed 50 ms wake slice let a 60 ms deadline
+        // expire only at ~100 ms (the next slice boundary).  The slice is
+        // now capped at the remaining deadline.
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        store.begin_fetch(&[1], &mut stats);
+        let start = Instant::now();
+        let err = store.wait_all(&[1], Duration::from_millis(60));
+        let elapsed = start.elapsed();
+        assert!(err.is_err(), "absent node must time out");
+        assert!(elapsed >= Duration::from_millis(60), "no early expiry ({elapsed:?})");
+        assert!(elapsed < Duration::from_millis(90), "expiry overshot deadline ({elapsed:?})");
+    }
+
+    #[test]
+    fn chunk_layout_slots_follow_local_order() {
+        let owned = [40u32, 10, 77, 3, 8];
+        let l = ChunkLayout::build(&owned, 2);
+        assert_eq!(l.slot_of(40), Some((0, 0)));
+        assert_eq!(l.slot_of(10), Some((0, 1)));
+        assert_eq!(l.slot_of(77), Some((1, 0)));
+        assert_eq!(l.slot_of(8), Some((2, 0)), "short tail chunk");
+        assert_eq!(l.slot_of(999), None);
+        assert_eq!(l.rows_in(0), 2);
+        assert_eq!(l.rows_in(2), 1, "last chunk is short");
+    }
+
+    #[test]
+    fn chunk_cache_evicts_lru_within_budget() {
+        // Budget fits two 100-byte chunks; admitting a third evicts the
+        // least recently touched.
+        let mut c = ChunkCache::new(200);
+        c.admit(0, 100);
+        c.admit(1, 100);
+        assert!(c.touch(0), "refresh chunk 0");
+        c.admit(2, 100);
+        assert!(c.touch(0), "recently used survives");
+        assert!(c.touch(2), "newest survives");
+        assert!(!c.touch(1), "LRU chunk evicted");
+        assert_eq!(c.used, 200);
+        // An over-budget chunk still caches alone.
+        let mut big = ChunkCache::new(10);
+        big.admit(5, 1000);
+        assert!(big.touch(5));
+    }
+
+    #[test]
+    fn chunk_cache_settle_after_evict_is_noop() {
+        let mut c = ChunkCache::new(100);
+        c.admit(0, 80);
+        c.admit(1, 80); // evicts chunk 0 (LRU) while "in flight"
+        assert!(!c.touch(0));
+        c.settle(0, vec![1, 2], vec![0.0; 4].into_boxed_slice());
+        assert!(!c.touch(0), "arrival never re-admits an evicted chunk");
+        c.settle(1, vec![3, 4], vec![1.0, 2.0, 3.0, 4.0].into_boxed_slice());
+        assert_eq!(c.row(1, 1, 2), Some(&[3.0f32, 4.0][..]), "settled row served");
+        // A second settle (duplicate response) keeps the first payload.
+        c.settle(1, vec![3, 4], vec![9.0; 4].into_boxed_slice());
+        assert_eq!(c.row(1, 1, 2), Some(&[3.0f32, 4.0][..]));
+    }
+
+    #[test]
+    fn chunked_response_installs_rows_and_settles_cache() {
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        stats.fetch_latency.resize_with(1, Default::default);
+        let mut tracer = Tracer::new(false, Role::Prefetcher, 0);
+        let mut outstanding: FastMap<u64, (u32, Instant)> = FastMap::default();
+        let owned = [7u32, 9, 11];
+        let mut cs = ChunkState {
+            dim: 2,
+            layouts: vec![ChunkLayout::build(&owned, 2)],
+            caches: vec![ChunkCache::new(1 << 20)],
+        };
+        cs.caches[0].admit(0, chunk_wire_bytes(2, 2));
+        outstanding.insert(0, (0, Instant::now()));
+        store.begin_fetch(&[7], &mut stats);
+        let feats = vec![1.0f32, 2.0, 3.0, 4.0];
+        let resp = Frame::ChunkResp {
+            req_id: 0,
+            feat_dim: 2,
+            refs: vec![],
+            chunks: vec![super::super::wire::Chunk {
+                digest: digest_f32(&feats),
+                nodes: vec![7, 9],
+                feats,
+            }],
+        }
+        .encode()
+        .unwrap();
+        handle_wire(
+            0,
+            &store,
+            &resp,
+            &mut stats,
+            &mut outstanding,
+            &mut tracer,
+            2,
+            Some(&mut cs),
+        );
+        assert_eq!(stats.resp_frames, 1);
+        assert_eq!(stats.nodes_received, 2, "whole chunk counted");
+        assert!(store.contains(7), "wanted row installed");
+        assert!(!store.contains(9), "unwanted chunk row not installed");
+        assert_eq!(cs.caches[0].row(0, 1, 2), Some(&[3.0f32, 4.0][..]), "entry settled");
+        // A later fetch of node 9 is a settled hit: served from cache.
+        store.begin_fetch(&[9], &mut stats);
+        assert!(cs.caches[0].touch(0));
+        let row = cs.caches[0].row(0, 1, 2).unwrap().to_vec();
+        store.complete_fetch(&[9], &row, 2);
+        assert!(store.contains(9));
+    }
+
+    #[test]
+    fn digest_mismatch_drops_chunk() {
+        let store = FeatureStore::new();
+        let mut stats = WireStats::default();
+        stats.fetch_latency.resize_with(1, Default::default);
+        let mut tracer = Tracer::new(false, Role::Prefetcher, 0);
+        let mut outstanding: FastMap<u64, (u32, Instant)> = FastMap::default();
+        let owned = [5u32, 6];
+        let mut cs = ChunkState {
+            dim: 1,
+            layouts: vec![ChunkLayout::build(&owned, 2)],
+            caches: vec![ChunkCache::new(1 << 20)],
+        };
+        cs.caches[0].admit(0, chunk_wire_bytes(2, 1));
+        outstanding.insert(3, (0, Instant::now()));
+        store.begin_fetch(&[5], &mut stats);
+        let resp = Frame::ChunkResp {
+            req_id: 3,
+            feat_dim: 1,
+            refs: vec![],
+            chunks: vec![super::super::wire::Chunk {
+                digest: 0xBAD, // corrupt: does not match the payload
+                nodes: vec![5, 6],
+                feats: vec![1.0, 2.0],
+            }],
+        }
+        .encode()
+        .unwrap();
+        handle_wire(
+            0,
+            &store,
+            &resp,
+            &mut stats,
+            &mut outstanding,
+            &mut tracer,
+            1,
+            Some(&mut cs),
+        );
+        assert_eq!(stats.bad_frames, 1, "digest mismatch counted");
+        assert!(!store.contains(5), "corrupt payload never installed");
+        assert_eq!(cs.caches[0].row(0, 0, 1), None, "entry stays unsettled");
     }
 }

@@ -40,7 +40,7 @@ use crate::partition::Partition;
 use crate::sim::{self, ExperimentResult, RunConfig};
 use crate::trace::{EventKind, Role, Trace, TraceEvent, TraceMeta, Tracer};
 
-use super::prefetch::{spawn_prefetcher, FeatureStore, PrefetchMsg};
+use super::prefetch::{spawn_prefetcher, FeatureStore, PrefetchConfig, PrefetchMsg};
 use super::server::{spawn_server, ServerStats, WireDelay};
 use super::trainer::{io_timeout, run_trainer, TrainerArgs, WallStats};
 use super::transport::{
@@ -409,6 +409,7 @@ fn wire_channel(
                 p,
                 ds.feature_seed,
                 ds.spec.feat_dim,
+                ccfg.run.chunk_rows,
                 part.clone(),
                 rx,
                 prereg,
@@ -458,6 +459,11 @@ fn wire_channel(
             pf_rx,
             request_links,
             part.clone(),
+            PrefetchConfig {
+                feat_dim: ds.spec.feat_dim,
+                chunk_rows: ccfg.run.chunk_rows,
+                cache_bytes: ccfg.run.chunk_cache_bytes,
+            },
             drain,
             ccfg.trace,
         );
@@ -507,6 +513,7 @@ fn wire_tcp(
             p,
             ds.feature_seed,
             ds.spec.feat_dim,
+            ccfg.run.chunk_rows,
             part.clone(),
             rx,
             Vec::new(),
@@ -533,6 +540,11 @@ fn wire_tcp(
             pf_rx,
             dial.request_links,
             part.clone(),
+            PrefetchConfig {
+                feat_dim: ds.spec.feat_dim,
+                chunk_rows: ccfg.run.chunk_rows,
+                cache_bytes: ccfg.run.chunk_cache_bytes,
+            },
             drain,
             ccfg.trace,
         );
@@ -592,6 +604,7 @@ fn wire_event(
                 p,
                 ds.feature_seed,
                 ds.spec.feat_dim,
+                ccfg.run.chunk_rows,
                 part.clone(),
                 rx,
                 std::mem::take(&mut server_prereg[p]),
@@ -612,6 +625,11 @@ fn wire_event(
             pf_rx,
             end.request_links,
             part.clone(),
+            PrefetchConfig {
+                feat_dim: ds.spec.feat_dim,
+                chunk_rows: ccfg.run.chunk_rows,
+                cache_bytes: ccfg.run.chunk_cache_bytes,
+            },
             drain,
             ccfg.trace,
         );
@@ -704,13 +722,26 @@ pub(crate) fn hub_loop(
                     }
                 }
             }
-            let reduced = Frame::Allreduce {
+            let reduced = match (Frame::Allreduce {
                 part: u32::MAX,
                 round: rounds,
                 vclock: max_vclock,
                 grads: acc,
-            }
-            .encode();
+            })
+            .encode()
+            {
+                Ok(bytes) => bytes,
+                Err(e) => {
+                    // Unreachable with sane gradient sizes; dropping the
+                    // round (trainers time out loudly) beats panicking the
+                    // hub and hanging every link.
+                    crate::log_info!("hub: reduced frame encode failed: {e}");
+                    rounds += 1;
+                    got = 0;
+                    max_vclock = f64::NEG_INFINITY;
+                    continue;
+                }
+            };
             tracer.emit(
                 max_vclock,
                 EventKind::AllreduceRound {
@@ -793,7 +824,7 @@ pub fn wire_parity(a: &[WireStats], b: &[WireStats]) -> std::result::Result<(), 
         return Err(format!("trainer count: {} vs {}", a.len(), b.len()));
     }
     for (i, (x, y)) in a.iter().zip(b).enumerate() {
-        let checks: [(&str, u64, u64); 8] = [
+        let checks: [(&str, u64, u64); 11] = [
             ("req_frames", x.req_frames, y.req_frames),
             ("req_bytes", x.req_bytes, y.req_bytes),
             ("resp_frames", x.resp_frames, y.resp_frames),
@@ -802,6 +833,9 @@ pub fn wire_parity(a: &[WireStats], b: &[WireStats]) -> std::result::Result<(), 
             ("nodes_deduped", x.nodes_deduped, y.nodes_deduped),
             ("nodes_received", x.nodes_received, y.nodes_received),
             ("bad_frames", x.bad_frames, y.bad_frames),
+            ("chunks_hit", x.chunks_hit, y.chunks_hit),
+            ("chunks_fetched", x.chunks_fetched, y.chunks_fetched),
+            ("bytes_saved_cache", x.bytes_saved_cache, y.bytes_saved_cache),
         ];
         for (what, va, vb) in checks {
             if va != vb {

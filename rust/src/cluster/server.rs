@@ -22,10 +22,10 @@ use crate::graph::features::fill_features;
 use crate::net::Network;
 use crate::partition::Partition;
 use crate::trace::{EventKind, Role, TraceEvent, Tracer};
-use crate::util::fasthash::FastMap;
+use crate::util::fasthash::{digest_f32, FastMap, FastSet};
 
 use super::transport::{FaultSender, FaultSpec, FrameSender, NetMsg};
-use super::wire::Frame;
+use super::wire::{Chunk, Frame};
 
 /// Traffic served by one feature server.
 #[derive(Debug, Clone, Default)]
@@ -82,7 +82,15 @@ pub(crate) struct FeatureShard {
     feat_dim: usize,
     feature_seed: u64,
     index: FastMap<u32, u32>,
+    /// Owned node ids in local (row) order — the canonical chunk order
+    /// shared with the trainers' chunk layouts.
+    nodes: Vec<u32>,
     rows: Vec<f32>,
+    /// Content-addressed chunk table: chunk `c` covers local rows
+    /// `[c·chunk_rows, (c+1)·chunk_rows)`; `chunk_digests[c]` is the
+    /// FNV-1a digest of its row payload, computed once at build.
+    chunk_rows: usize,
+    chunk_digests: Vec<u64>,
 }
 
 impl FeatureShard {
@@ -91,15 +99,73 @@ impl FeatureShard {
         part_id: usize,
         feature_seed: u64,
         feat_dim: usize,
+        chunk_rows: usize,
     ) -> FeatureShard {
-        let owned = &part.local_nodes[part_id];
+        let owned = part.local_nodes[part_id].clone();
+        let chunk_rows = chunk_rows.max(1);
         let mut index = FastMap::default();
         let mut rows = vec![0.0f32; owned.len() * feat_dim];
         for (i, &n) in owned.iter().enumerate() {
             index.insert(n, i as u32);
             fill_features(feature_seed, n, &mut rows[i * feat_dim..(i + 1) * feat_dim]);
         }
-        FeatureShard { feat_dim, feature_seed, index, rows }
+        let n_chunks = owned.len().div_ceil(chunk_rows);
+        let mut chunk_digests = Vec::with_capacity(n_chunks);
+        for c in 0..n_chunks {
+            let start = c * chunk_rows;
+            let end = (start + chunk_rows).min(owned.len());
+            chunk_digests.push(digest_f32(&rows[start * feat_dim..end * feat_dim]));
+        }
+        FeatureShard {
+            feat_dim,
+            feature_seed,
+            index,
+            nodes: owned,
+            rows,
+            chunk_rows,
+            chunk_digests,
+        }
+    }
+
+    /// Materialize chunk `c` for the wire: its node ids + row payload.
+    fn chunk(&self, c: usize) -> Chunk {
+        let start = c * self.chunk_rows;
+        let end = (start + self.chunk_rows).min(self.nodes.len());
+        Chunk {
+            digest: self.chunk_digests[c],
+            nodes: self.nodes[start..end].to_vec(),
+            feats: self.rows[start * self.feat_dim..end * self.feat_dim].to_vec(),
+        }
+    }
+
+    /// Expand requested nodes to whole chunks (first-appearance order),
+    /// eliding any chunk whose digest the requester declared in `have`.
+    /// Returns `(elided digests, chunks to send, rows going on the wire)`.
+    pub(crate) fn gather_chunks(
+        &self,
+        nodes: &[u32],
+        have: &[u64],
+    ) -> (Vec<u64>, Vec<Chunk>, u64) {
+        let mut seen: FastSet<u32> = FastSet::default();
+        let mut refs = Vec::new();
+        let mut chunks = Vec::new();
+        let mut served = 0u64;
+        for &n in nodes {
+            let Some(&i) = self.index.get(&n) else { continue };
+            let c = i as usize / self.chunk_rows;
+            if !seen.insert(c as u32) {
+                continue;
+            }
+            let digest = self.chunk_digests[c];
+            if have.contains(&digest) {
+                refs.push(digest);
+                continue;
+            }
+            let chunk = self.chunk(c);
+            served += chunk.nodes.len() as u64;
+            chunks.push(chunk);
+        }
+        (refs, chunks, served)
     }
 
     /// Copy node `n`'s row into `dst`.  A non-resident node (impossible
@@ -145,6 +211,7 @@ pub(crate) fn server_loop(
     part_id: usize,
     feature_seed: u64,
     feat_dim: usize,
+    chunk_rows: usize,
     part: Arc<Partition>,
     rx: Receiver<NetMsg>,
     prereg: Vec<(u32, Box<dyn FrameSender>)>,
@@ -154,7 +221,7 @@ pub(crate) fn server_loop(
 ) -> (ServerStats, Vec<TraceEvent>) {
     let mut stats = ServerStats { part: part_id, ..ServerStats::default() };
     let mut tracer = Tracer::new(trace, Role::Server, part_id as u32);
-    let shard = FeatureShard::build(&part, part_id, feature_seed, feat_dim);
+    let shard = FeatureShard::build(&part, part_id, feature_seed, feat_dim, chunk_rows);
     let mut replies: FastMap<u32, Box<dyn FrameSender>> = FastMap::default();
     for (id, s) in prereg {
         replies.insert(id, wrap_fault(s, &fault, part_id, id));
@@ -191,26 +258,49 @@ pub(crate) fn server_loop(
                 continue;
             }
         };
-        let Frame::FetchReq { req_id, from, nodes } = frame else {
-            stats.bad_frames += 1;
-            continue;
+        let (req_id, from, served, encoded) = match frame {
+            Frame::FetchReq { req_id, from, nodes } => {
+                debug_assert!(
+                    nodes.iter().all(|&n| part.owner_of(n) == part_id),
+                    "fetch routed to non-owner partition {part_id}"
+                );
+                let mut feats = vec![0.0f32; nodes.len() * feat_dim];
+                for (i, &n) in nodes.iter().enumerate() {
+                    shard.fill(n, &mut feats[i * feat_dim..(i + 1) * feat_dim]);
+                }
+                let served = nodes.len() as u64;
+                let resp = Frame::FetchResp { req_id, feat_dim: feat_dim as u32, nodes, feats };
+                (req_id, from, served, resp.encode())
+            }
+            Frame::ChunkReq { req_id, from, nodes, have } => {
+                debug_assert!(
+                    nodes.iter().all(|&n| part.owner_of(n) == part_id),
+                    "chunk fetch routed to non-owner partition {part_id}"
+                );
+                let (refs, chunks, served) = shard.gather_chunks(&nodes, &have);
+                let resp =
+                    Frame::ChunkResp { req_id, feat_dim: feat_dim as u32, refs, chunks };
+                (req_id, from, served, resp.encode())
+            }
+            _ => {
+                stats.bad_frames += 1;
+                continue;
+            }
+        };
+        let out = match encoded {
+            Ok(o) => o,
+            Err(e) => {
+                stats.bad_frames += 1;
+                crate::log_info!("server {part_id}: reply encode failed: {e}");
+                continue;
+            }
         };
         let Some(reply) = replies.get_mut(&from) else {
             stats.bad_frames += 1;
             continue;
         };
-        debug_assert!(
-            nodes.iter().all(|&n| part.owner_of(n) == part_id),
-            "fetch routed to non-owner partition {part_id}"
-        );
-        let mut feats = vec![0.0f32; nodes.len() * feat_dim];
-        for (i, &n) in nodes.iter().enumerate() {
-            shard.fill(n, &mut feats[i * feat_dim..(i + 1) * feat_dim]);
-        }
         stats.requests += 1;
-        stats.nodes_served += nodes.len() as u64;
-        let served = nodes.len() as u64;
-        let out = Frame::FetchResp { req_id, feat_dim: feat_dim as u32, nodes, feats }.encode();
+        stats.nodes_served += served;
         stats.bytes_out += out.len() as u64;
         tracer.emit(
             0.0,
@@ -231,6 +321,7 @@ pub(crate) fn spawn_server(
     part_id: usize,
     feature_seed: u64,
     feat_dim: usize,
+    chunk_rows: usize,
     part: Arc<Partition>,
     rx: Receiver<NetMsg>,
     prereg: Vec<(u32, Box<dyn FrameSender>)>,
@@ -241,7 +332,18 @@ pub(crate) fn spawn_server(
     std::thread::Builder::new()
         .name(format!("rudder-server-{part_id}"))
         .spawn(move || {
-            server_loop(part_id, feature_seed, feat_dim, part, rx, prereg, delay, fault, trace)
+            server_loop(
+                part_id,
+                feature_seed,
+                feat_dim,
+                chunk_rows,
+                part,
+                rx,
+                prereg,
+                delay,
+                fault,
+                trace,
+            )
         })
         .expect("spawn feature-server thread")
 }
@@ -281,10 +383,10 @@ mod tests {
             1,
             Box::new(ChannelSender::delivering(rep_tx, PrefetchMsg::Wire, link.clone())),
         )];
-        let handle = spawn_server(0, 42, 4, part.clone(), req_rx, prereg, delay, None, true);
+        let handle = spawn_server(0, 42, 4, 8, part.clone(), req_rx, prereg, delay, None, true);
         req_tx
             .send(NetMsg::Frame(
-                Frame::FetchReq { req_id: 9, from: 1, nodes: owned.clone() }.encode(),
+                Frame::FetchReq { req_id: 9, from: 1, nodes: owned.clone() }.encode().unwrap(),
             ))
             .unwrap();
         let PrefetchMsg::Wire(resp) = rep_rx.recv().unwrap() else {
@@ -329,7 +431,7 @@ mod tests {
             &mut Pcg32::new(9),
         );
         let part = partition(&csr, 2, Method::MetisLike, 1);
-        let shard = FeatureShard::build(&part, 0, 11, 4);
+        let shard = FeatureShard::build(&part, 0, 11, 4, 8);
         assert_eq!(shard.index.len(), part.local_nodes[0].len());
         let mut got = vec![0.0f32; 4];
         let mut want = vec![0.0f32; 4];
@@ -344,6 +446,93 @@ mod tests {
         shard.fill(foreign, &mut got);
         fill_features(11, foreign, &mut want);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn chunk_requests_expand_and_elide_by_digest() {
+        let csr = generate(
+            &RmatParams {
+                a: 0.57,
+                b: 0.19,
+                c: 0.19,
+                num_nodes: 300,
+                num_edges: 1800,
+                permute: true,
+            },
+            &mut Pcg32::new(3),
+        );
+        let part = partition(&csr, 2, Method::MetisLike, 1);
+        let shard = FeatureShard::build(&part, 0, 11, 4, 2);
+        let owned = &part.local_nodes[0];
+        // owned[0], owned[1] share chunk 0; owned[2] lives in chunk 1.
+        let (refs, chunks, served) = shard.gather_chunks(&[owned[0], owned[1], owned[2]], &[]);
+        assert!(refs.is_empty());
+        assert_eq!(chunks.len(), 2, "three nodes expand to two whole chunks");
+        assert_eq!(served, 4);
+        assert_eq!(chunks[0].nodes, vec![owned[0], owned[1]]);
+        for c in &chunks {
+            assert_eq!(c.feats.len(), c.nodes.len() * 4);
+            assert_eq!(digest_f32(&c.feats), c.digest, "digest covers the row payload");
+        }
+        // Declaring chunk 0 held elides its payload: digest-only ref.
+        let held = chunks[0].digest;
+        let (refs2, chunks2, served2) =
+            shard.gather_chunks(&[owned[0], owned[2]], &[held]);
+        assert_eq!(refs2, vec![held]);
+        assert_eq!(chunks2.len(), 1);
+        assert_eq!(chunks2[0].nodes, vec![owned[2], owned[3]]);
+        assert_eq!(served2, 2);
+    }
+
+    #[test]
+    fn serves_chunk_requests_end_to_end() {
+        let csr = generate(
+            &RmatParams {
+                a: 0.57,
+                b: 0.19,
+                c: 0.19,
+                num_nodes: 200,
+                num_edges: 1200,
+                permute: true,
+            },
+            &mut Pcg32::new(8),
+        );
+        let part = Arc::new(partition(&csr, 1, Method::MetisLike, 1));
+        let (req_tx, req_rx) = mpsc::channel::<NetMsg>();
+        let (rep_tx, rep_rx) = mpsc::channel::<PrefetchMsg>();
+        let delay = WireDelay::from_net(&Network::new(NetParams::default(), 1), 0.0);
+        let link = LinkStatsHandle::new("server:0");
+        let prereg: Vec<(u32, Box<dyn FrameSender>)> =
+            vec![(0, Box::new(ChannelSender::delivering(rep_tx, PrefetchMsg::Wire, link)))];
+        let want_node = part.local_nodes[0][5];
+        let handle = spawn_server(0, 42, 4, 4, part.clone(), req_rx, prereg, delay, None, false);
+        req_tx
+            .send(NetMsg::Frame(
+                Frame::ChunkReq { req_id: 2, from: 0, nodes: vec![want_node], have: vec![] }
+                    .encode()
+                    .unwrap(),
+            ))
+            .unwrap();
+        drop(req_tx);
+        let PrefetchMsg::Wire(resp) = rep_rx.recv().unwrap() else {
+            panic!("expected wire reply")
+        };
+        let (frame, _) = Frame::decode(&resp).unwrap();
+        let Frame::ChunkResp { req_id, feat_dim, refs, chunks } = frame else {
+            panic!("expected ChunkResp")
+        };
+        assert_eq!((req_id, feat_dim), (2, 4));
+        assert!(refs.is_empty());
+        assert_eq!(chunks.len(), 1);
+        // The whole chunk comes back: rows 4..8 of the local order.
+        assert_eq!(chunks[0].nodes, part.local_nodes[0][4..8].to_vec());
+        assert_eq!(digest_f32(&chunks[0].feats), chunks[0].digest);
+        let mut want = vec![0.0f32; 4];
+        fill_features(42, want_node, &mut want);
+        assert_eq!(&chunks[0].feats[4..8], &want[..], "row 1 is the requested node");
+        let (stats, _) = handle.join().unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.nodes_served, 4, "whole chunk counted");
     }
 
     #[test]
@@ -370,9 +559,11 @@ mod tests {
             Box::new(ChannelSender::delivering(rep_tx, PrefetchMsg::Wire, link)),
         )];
         let owned: Vec<u32> = part.local_nodes[0][..2].to_vec();
-        let handle = spawn_server(0, 1, 2, part, req_rx, prereg, delay, Some(fault), false);
+        let handle = spawn_server(0, 1, 2, 8, part, req_rx, prereg, delay, Some(fault), false);
         req_tx
-            .send(NetMsg::Frame(Frame::FetchReq { req_id: 0, from: 0, nodes: owned }.encode()))
+            .send(NetMsg::Frame(
+                Frame::FetchReq { req_id: 0, from: 0, nodes: owned }.encode().unwrap(),
+            ))
             .unwrap();
         drop(req_tx);
         let (stats, trace) = handle.join().unwrap();

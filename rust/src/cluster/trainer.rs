@@ -320,7 +320,8 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                 measured.grad_bytes += (grads_len * 4) as u64;
             }
             let w = Instant::now();
-            a.hub_tx.send_frame(&frame.encode()).expect("allreduce hub hung up");
+            let encoded = frame.encode().expect("allreduce frame within wire limits");
+            a.hub_tx.send_frame(&encoded).expect("allreduce hub hung up");
             let reply = match a.hub_rx.recv_frame_timeout(barrier_budget) {
                 Ok(Some(r)) => r,
                 Ok(None) => panic!(

@@ -473,7 +473,7 @@ pub fn connect_hello(addr: &str, trainer_id: u32, stats: &LinkStatsHandle) -> Re
         match TcpStream::connect(addr) {
             Ok(stream) => {
                 let _ = stream.set_nodelay(true);
-                let hello = Frame::Hello { role: ROLE_TRAINER, id: trainer_id }.encode();
+                let hello = Frame::Hello { role: ROLE_TRAINER, id: trainer_id }.encode()?;
                 (&stream).write_all(&hello)?;
                 let mut s = stats.lock();
                 s.frames_sent += 1;
@@ -792,8 +792,8 @@ mod tests {
 
     #[test]
     fn assembler_reassembles_byte_by_byte() {
-        let a = Frame::FetchReq { req_id: 1, from: 0, nodes: vec![7, 8, 9] }.encode();
-        let b = Frame::Hello { role: ROLE_TRAINER, id: 2 }.encode();
+        let a = Frame::FetchReq { req_id: 1, from: 0, nodes: vec![7, 8, 9] }.encode().unwrap();
+        let b = Frame::Hello { role: ROLE_TRAINER, id: 2 }.encode().unwrap();
         let mut stream = a.clone();
         stream.extend_from_slice(&b);
         let mut asm = FrameAssembler::new();
@@ -823,7 +823,7 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Vec<u8>>();
         let link = LinkStatsHandle::new("peer");
         let mut s = ChannelSender::new(tx, |v| v, link.clone());
-        let frame = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
+        let frame = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode().unwrap();
         s.send_frame(&frame).unwrap();
         let mut r = ChannelReceiver::new(rx);
         assert_eq!(r.recv_frame().unwrap().unwrap(), frame);
@@ -855,7 +855,11 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let frames: Vec<Vec<u8>> = (0..5u32)
-            .map(|i| Frame::FetchReq { req_id: i as u64, from: i, nodes: vec![i, i + 1] }.encode())
+            .map(|i| {
+                Frame::FetchReq { req_id: i as u64, from: i, nodes: vec![i, i + 1] }
+                    .encode()
+                    .unwrap()
+            })
             .collect();
         let want = frames.clone();
         let link = LinkStatsHandle::new("peer");
@@ -884,14 +888,15 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let frames: Vec<Vec<u8>> = vec![
-            Frame::FetchReq { req_id: 9, from: 1, nodes: (0..300).collect() }.encode(),
+            Frame::FetchReq { req_id: 9, from: 1, nodes: (0..300).collect() }.encode().unwrap(),
             Frame::FetchResp {
                 req_id: 9,
                 feat_dim: 2,
                 nodes: vec![4, 5],
                 feats: vec![0.5, 1.5, 2.5, 3.5],
             }
-            .encode(),
+            .encode()
+            .unwrap(),
         ];
         let want = frames.clone();
         let server = std::thread::spawn(move || {
@@ -922,7 +927,7 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let (hold_tx, hold_rx) = mpsc::channel::<()>();
-        let frame = Frame::Hello { role: ROLE_TRAINER, id: 7 }.encode();
+        let frame = Frame::Hello { role: ROLE_TRAINER, id: 7 }.encode().unwrap();
         let sent = frame.clone();
         let server = std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
@@ -946,7 +951,7 @@ mod tests {
         let spec = FaultSpec { seed: 11, dup: 1.0, delay: 0.0, chop: 0 };
         let out = Arc::new(Mutex::new(Vec::new()));
         let mut s = FaultSender::new(Box::new(Rec(out.clone())), &spec, &[0, 1]);
-        let f1 = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
+        let f1 = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode().unwrap();
         s.send_frame(&f1).unwrap();
         assert_eq!(out.lock().unwrap().as_slice(), &[f1.clone(), f1.clone()]);
     }
@@ -958,9 +963,9 @@ mod tests {
         let spec = FaultSpec { seed: 3, dup: 0.0, delay: 1.0, chop: 0 };
         let out = Arc::new(Mutex::new(Vec::new()));
         let mut s = FaultSender::new(Box::new(Rec(out.clone())), &spec, &[0, 0]);
-        let f1 = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
-        let f2 = Frame::Hello { role: ROLE_TRAINER, id: 2 }.encode();
-        let f3 = Frame::Hello { role: ROLE_TRAINER, id: 3 }.encode();
+        let f1 = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode().unwrap();
+        let f2 = Frame::Hello { role: ROLE_TRAINER, id: 2 }.encode().unwrap();
+        let f3 = Frame::Hello { role: ROLE_TRAINER, id: 3 }.encode().unwrap();
         s.send_frame(&f1).unwrap(); // held
         assert!(out.lock().unwrap().is_empty());
         s.send_frame(&f2).unwrap(); // f1 released to make room, f2 held
@@ -980,7 +985,7 @@ mod tests {
         let spec = FaultSpec { seed: 5, dup: 1.0, delay: 1.0, chop: 0 };
         let out = Arc::new(Mutex::new(Vec::new()));
         let mut s = FaultSender::new(Box::new(Rec(out.clone())), &spec, &[2, 2]);
-        let f1 = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode();
+        let f1 = Frame::Hello { role: ROLE_TRAINER, id: 1 }.encode().unwrap();
         s.send_frame(&f1).unwrap(); // held, dup pending
         assert!(out.lock().unwrap().is_empty());
         s.close();
@@ -994,7 +999,8 @@ mod tests {
             let out = Arc::new(Mutex::new(Vec::new()));
             let mut s = FaultSender::new(Box::new(Rec(out.clone())), &spec, &[1, 2]);
             for i in 0..50u32 {
-                s.send_frame(&Frame::Hello { role: ROLE_TRAINER, id: i }.encode()).unwrap();
+                s.send_frame(&Frame::Hello { role: ROLE_TRAINER, id: i }.encode().unwrap())
+                    .unwrap();
             }
             s.close();
             let sent = out.lock().unwrap();

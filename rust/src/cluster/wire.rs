@@ -16,7 +16,14 @@
 //! the kind byte, every length against the remaining bytes (truncated
 //! frames are rejected, never panicked on), cross-field consistency
 //! (`feats.len() == nodes.len() × feat_dim`), and that the body is fully
-//! consumed (no trailing bytes).
+//! consumed (no trailing bytes).  Encoding is fallible for the same
+//! reason: a vector longer than `u32::MAX` elements or a body over
+//! [`MAX_FRAME_BYTES`] is rejected with an error instead of silently
+//! wrapping the length field.
+//!
+//! Kinds 1–6 are the v1 row protocol; kinds 7–8 carry the
+//! content-addressed chunk protocol ([`Frame::ChunkReq`] /
+//! [`Frame::ChunkResp`]) used when the per-link chunk cache is enabled.
 
 use crate::error::Result;
 
@@ -27,6 +34,8 @@ const KIND_ALLREDUCE: u8 = 3;
 const KIND_HELLO: u8 = 4;
 const KIND_RESULT: u8 = 5;
 const KIND_CONFIG: u8 = 6;
+const KIND_CHUNK_REQ: u8 = 7;
+const KIND_CHUNK_RESP: u8 = 8;
 
 /// `Frame::Hello` / `Frame::Result` role tags: who is announcing itself
 /// on a fresh transport connection, or whose result a blob carries.
@@ -35,8 +44,20 @@ pub const ROLE_SERVER: u8 = 2;
 pub const ROLE_HUB: u8 = 3;
 
 /// Upper bound on a frame body; anything larger is rejected as malformed
-/// before any allocation happens.
+/// before any allocation happens (and rejected at encode time before it
+/// can hit a link).
 pub const MAX_FRAME_BYTES: usize = 1 << 28;
+
+/// One content-addressed feature chunk on the wire: the FNV-1a digest of
+/// the row bytes, the global node ids of the rows (in owner-partition
+/// local order), and the row-major feature payload
+/// (`nodes.len() × feat_dim`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chunk {
+    pub digest: u64,
+    pub nodes: Vec<u32>,
+    pub feats: Vec<f32>,
+}
 
 /// One RPC message of the cluster protocol.
 #[derive(Debug, Clone, PartialEq)]
@@ -63,18 +84,35 @@ pub enum Frame {
     /// over the control link in reply to a worker's `Hello` — so
     /// multi-process workers need no shared filesystem for `--run-config`.
     Config { toml: Vec<u8> },
+    /// Digest-aware fetch (chunk protocol): trainer `from` asks for
+    /// `nodes`' features and declares the digests of chunks it already
+    /// holds, so the server can answer with only the chunks it lacks.
+    ChunkReq { req_id: u64, from: u32, nodes: Vec<u32>, have: Vec<u64> },
+    /// Chunked server reply: whole chunks covering the requested nodes.
+    /// `refs` lists the digests the server *elided* because the trainer
+    /// declared them in `have` — the idempotent re-fetch path.
+    ChunkResp { req_id: u64, feat_dim: u32, refs: Vec<u64>, chunks: Vec<Chunk> },
+}
+
+/// Checked `usize → u32` for vector length fields: a count that does not
+/// fit the wire's `u32` is an encode-time error, never a silent wrap.
+fn len_u32(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n).map_err(|_| crate::err!("wire: {what} length {n} exceeds u32 on encode"))
 }
 
 impl Frame {
     /// Serialize to a length-prefixed byte buffer.
-    pub fn encode(&self) -> Vec<u8> {
+    ///
+    /// Fails (instead of corrupting the stream) if any vector length
+    /// overflows its `u32` field or the body exceeds [`MAX_FRAME_BYTES`].
+    pub fn encode(&self) -> Result<Vec<u8>> {
         let mut body = Vec::with_capacity(64);
         match self {
             Frame::FetchReq { req_id, from, nodes } => {
                 body.push(KIND_FETCH_REQ);
                 put_u64(&mut body, *req_id);
                 put_u32(&mut body, *from);
-                put_u32(&mut body, nodes.len() as u32);
+                put_u32(&mut body, len_u32(nodes.len(), "FetchReq nodes")?);
                 for &n in nodes {
                     put_u32(&mut body, n);
                 }
@@ -83,11 +121,11 @@ impl Frame {
                 body.push(KIND_FETCH_RESP);
                 put_u64(&mut body, *req_id);
                 put_u32(&mut body, *feat_dim);
-                put_u32(&mut body, nodes.len() as u32);
+                put_u32(&mut body, len_u32(nodes.len(), "FetchResp nodes")?);
                 for &n in nodes {
                     put_u32(&mut body, n);
                 }
-                put_u32(&mut body, feats.len() as u32);
+                put_u32(&mut body, len_u32(feats.len(), "FetchResp feats")?);
                 for &f in feats {
                     body.extend_from_slice(&f.to_le_bytes());
                 }
@@ -97,7 +135,7 @@ impl Frame {
                 put_u32(&mut body, *part);
                 put_u64(&mut body, *round);
                 body.extend_from_slice(&vclock.to_le_bytes());
-                put_u32(&mut body, grads.len() as u32);
+                put_u32(&mut body, len_u32(grads.len(), "Allreduce grads")?);
                 for &g in grads {
                     body.extend_from_slice(&g.to_le_bytes());
                 }
@@ -111,19 +149,58 @@ impl Frame {
                 body.push(KIND_RESULT);
                 body.push(*role);
                 put_u32(&mut body, *id);
-                put_u32(&mut body, blob.len() as u32);
+                put_u32(&mut body, len_u32(blob.len(), "Result blob")?);
                 body.extend_from_slice(blob);
             }
             Frame::Config { toml } => {
                 body.push(KIND_CONFIG);
-                put_u32(&mut body, toml.len() as u32);
+                put_u32(&mut body, len_u32(toml.len(), "Config toml")?);
                 body.extend_from_slice(toml);
             }
+            Frame::ChunkReq { req_id, from, nodes, have } => {
+                body.push(KIND_CHUNK_REQ);
+                put_u64(&mut body, *req_id);
+                put_u32(&mut body, *from);
+                put_u32(&mut body, len_u32(nodes.len(), "ChunkReq nodes")?);
+                for &n in nodes {
+                    put_u32(&mut body, n);
+                }
+                put_u32(&mut body, len_u32(have.len(), "ChunkReq have")?);
+                for &d in have {
+                    put_u64(&mut body, d);
+                }
+            }
+            Frame::ChunkResp { req_id, feat_dim, refs, chunks } => {
+                body.push(KIND_CHUNK_RESP);
+                put_u64(&mut body, *req_id);
+                put_u32(&mut body, *feat_dim);
+                put_u32(&mut body, len_u32(refs.len(), "ChunkResp refs")?);
+                for &d in refs {
+                    put_u64(&mut body, d);
+                }
+                put_u32(&mut body, len_u32(chunks.len(), "ChunkResp chunks")?);
+                for c in chunks {
+                    put_u64(&mut body, c.digest);
+                    put_u32(&mut body, len_u32(c.nodes.len(), "Chunk nodes")?);
+                    for &n in &c.nodes {
+                        put_u32(&mut body, n);
+                    }
+                    put_u32(&mut body, len_u32(c.feats.len(), "Chunk feats")?);
+                    for &f in &c.feats {
+                        body.extend_from_slice(&f.to_le_bytes());
+                    }
+                }
+            }
         }
+        crate::ensure!(
+            body.len() <= MAX_FRAME_BYTES,
+            "wire: frame body {} exceeds cap {MAX_FRAME_BYTES} on encode",
+            body.len()
+        );
         let mut out = Vec::with_capacity(4 + body.len());
         out.extend_from_slice(&(body.len() as u32).to_le_bytes());
         out.extend_from_slice(&body);
-        out
+        Ok(out)
     }
 
     /// Parse one frame from the start of `buf`; returns the frame and the
@@ -185,6 +262,38 @@ impl Frame {
                 let toml = r.take(len)?.to_vec();
                 Frame::Config { toml }
             }
+            KIND_CHUNK_REQ => {
+                let req_id = r.u64()?;
+                let from = r.u32()?;
+                let nodes = r.vec_u32()?;
+                let have = r.vec_u64()?;
+                Frame::ChunkReq { req_id, from, nodes, have }
+            }
+            KIND_CHUNK_RESP => {
+                let req_id = r.u64()?;
+                let feat_dim = r.u32()?;
+                let refs = r.vec_u64()?;
+                let n_chunks = r.u32()? as usize;
+                // Each chunk carries at least digest + two counts.
+                crate::ensure!(
+                    n_chunks <= r.remaining() / 16,
+                    "wire: ChunkResp chunk count {n_chunks} exceeds frame body"
+                );
+                let mut chunks = Vec::with_capacity(n_chunks);
+                for _ in 0..n_chunks {
+                    let digest = r.u64()?;
+                    let nodes = r.vec_u32()?;
+                    let feats = r.vec_f32()?;
+                    crate::ensure!(
+                        feats.len() == nodes.len() * feat_dim as usize,
+                        "wire: Chunk payload mismatch ({} feats for {} nodes × dim {feat_dim})",
+                        feats.len(),
+                        nodes.len()
+                    );
+                    chunks.push(Chunk { digest, nodes, feats });
+                }
+                Frame::ChunkResp { req_id, feat_dim, refs, chunks }
+            }
             other => crate::bail!("wire: unknown frame kind {other}"),
         };
         crate::ensure!(
@@ -208,6 +317,19 @@ impl Frame {
                 Frame::Hello { .. } => 1 + 4,
                 Frame::Result { blob, .. } => 1 + 4 + 4 + blob.len(),
                 Frame::Config { toml } => 4 + toml.len(),
+                Frame::ChunkReq { nodes, have, .. } => {
+                    8 + 4 + 4 + 4 * nodes.len() + 4 + 8 * have.len()
+                }
+                Frame::ChunkResp { refs, chunks, .. } => {
+                    8 + 4
+                        + 4
+                        + 8 * refs.len()
+                        + 4
+                        + chunks
+                            .iter()
+                            .map(|c| 8 + 4 + 4 * c.nodes.len() + 4 + 4 * c.feats.len())
+                            .sum::<usize>()
+                }
             }
     }
 }
@@ -279,6 +401,19 @@ impl<'a> Reader<'a> {
         Ok(v)
     }
 
+    fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let count = self.u32()? as usize;
+        crate::ensure!(
+            count <= (self.b.len() - self.pos) / 8,
+            "wire: u64 vector length {count} exceeds frame body"
+        );
+        let mut v = Vec::with_capacity(count);
+        for _ in 0..count {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+
     fn vec_f32(&mut self) -> Result<Vec<f32>> {
         let count = self.u32()? as usize;
         crate::ensure!(
@@ -295,9 +430,9 @@ impl<'a> Reader<'a> {
 }
 
 // The adversarial suite (truncation at every cut, unknown kinds, oversized
-// vector counts, payload mismatches) lives in `tests/wire.rs` — one place,
-// so codec changes update coverage once.  This module keeps only a
-// round-trip smoke for unit-test granularity.
+// vector counts, payload mismatches, encode-rejects-oversize) lives in
+// `tests/wire.rs` — one place, so codec changes update coverage once.
+// This module keeps only a round-trip smoke for unit-test granularity.
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -316,9 +451,19 @@ mod tests {
             Frame::Hello { role: ROLE_TRAINER, id: 3 },
             Frame::Result { role: ROLE_SERVER, id: 2, blob: vec![0xAB, 0, 0xCD, 255] },
             Frame::Config { toml: b"dataset = \"products\"\n".to_vec() },
+            Frame::ChunkReq { req_id: 11, from: 1, nodes: vec![4, 6], have: vec![0, u64::MAX] },
+            Frame::ChunkResp {
+                req_id: 11,
+                feat_dim: 2,
+                refs: vec![0xDEAD_BEEF],
+                chunks: vec![
+                    Chunk { digest: 42, nodes: vec![4, 6], feats: vec![1.0, 2.0, 3.0, 4.0] },
+                    Chunk { digest: 7, nodes: vec![], feats: vec![] },
+                ],
+            },
         ];
         for f in frames {
-            let bytes = f.encode();
+            let bytes = f.encode().unwrap();
             assert_eq!(bytes.len(), f.encoded_len());
             let (back, used) = Frame::decode(&bytes).unwrap();
             assert_eq!(used, bytes.len());

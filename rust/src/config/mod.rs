@@ -74,6 +74,13 @@ pub fn apply(doc: &Json, mut cfg: RunConfig) -> crate::error::Result<RunConfig> 
     if let Some(v) = gets("buffer_policy") {
         cfg.buffer_policy = Policy::parse(v)?;
     }
+    if let Some(v) = getu("chunk_rows") {
+        crate::ensure!(v >= 1, "chunk_rows must be >= 1");
+        cfg.chunk_rows = v;
+    }
+    if let Some(v) = getu("chunk_cache_bytes") {
+        cfg.chunk_cache_bytes = v as u64;
+    }
     if let Some(net) = doc.get("net") {
         let f = |k: &str, d: f64| net.get(k).and_then(Json::as_f64).unwrap_or(d);
         cfg.net.alpha = f("alpha", cfg.net.alpha);
@@ -121,6 +128,11 @@ pub fn to_toml(cfg: &RunConfig) -> crate::error::Result<String> {
         "config: seed {} too large to serialize exactly",
         cfg.seed
     );
+    crate::ensure!(
+        cfg.chunk_cache_bytes <= (1u64 << 53),
+        "config: chunk_cache_bytes {} too large to serialize exactly",
+        cfg.chunk_cache_bytes
+    );
     let f = |v: f64| -> crate::error::Result<String> {
         crate::ensure!(v.is_finite(), "config: non-finite value {v} not serializable");
         Ok(format!("{v:?}"))
@@ -155,6 +167,8 @@ pub fn to_toml(cfg: &RunConfig) -> crate::error::Result<String> {
     let _ = writeln!(s, "mode = \"{mode}\"");
     let _ = writeln!(s, "partition = \"{partition}\"");
     let _ = writeln!(s, "buffer_policy = \"{policy}\"");
+    let _ = writeln!(s, "chunk_rows = {}", cfg.chunk_rows);
+    let _ = writeln!(s, "chunk_cache_bytes = {}", cfg.chunk_cache_bytes);
     let _ = writeln!(s, "[net]");
     let _ = writeln!(s, "alpha = {}", f(cfg.net.alpha)?);
     let _ = writeln!(s, "beta = {}", f(cfg.net.beta)?);
@@ -259,6 +273,8 @@ base_overhead = 0.2
             mode: Mode::Sync,
             partition_method: Method::Ldg,
             buffer_policy: Policy::Lru,
+            chunk_rows: 16,
+            chunk_cache_bytes: 4 * 1024 * 1024,
             net: NetParams {
                 alpha: 0.002,
                 beta: 1.0 / 15e6, // exercises exponent formatting

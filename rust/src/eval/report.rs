@@ -91,6 +91,9 @@ pub fn wire_table(per_trainer: &[WireStats]) -> Table {
             "nodes_recv",
             "dup_frames",
             "bad_frames",
+            "chunks_hit",
+            "chunks_fetched",
+            "bytes_saved",
         ],
     );
     let row = |label: String, w: &WireStats| -> Vec<String> {
@@ -105,6 +108,9 @@ pub fn wire_table(per_trainer: &[WireStats]) -> Table {
             fmt_count(w.nodes_received),
             w.dup_frames.to_string(),
             w.bad_frames.to_string(),
+            fmt_count(w.chunks_hit),
+            fmt_count(w.chunks_fetched),
+            fmt_count(w.bytes_saved_cache),
         ]
     };
     let mut total = WireStats::default();

@@ -98,6 +98,13 @@ fn config_from_args(args: &Args) -> rudder::error::Result<RunConfig> {
     if let Some(v) = args.opt("mode") {
         cfg.mode = Mode::parse(v)?;
     }
+    if let Some(v) = args.opt_parse::<usize>("chunk-rows")? {
+        rudder::ensure!(v >= 1, "--chunk-rows must be >= 1");
+        cfg.chunk_rows = v;
+    }
+    if let Some(v) = args.opt_parse::<u64>("chunk-cache")? {
+        cfg.chunk_cache_bytes = v;
+    }
     if let Some(v) = args.opt("partition") {
         cfg.partition_method = Method::parse(v)?;
     }
@@ -618,8 +625,23 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
     println!("bench: re-running with prefetching disabled (baseline)...");
     let mut off_ccfg = ccfg.clone();
     off_ccfg.run.controller = ControllerSpec::NoPrefetch;
-    let off = run_cluster_on(ds, part, &off_ccfg, None)?;
+    let off = run_cluster_on(ds.clone(), part.clone(), &off_ccfg, None)?;
     check_replicas_synced(&off)?;
+    // Third leg: the prefetching run again, with the content-addressed
+    // chunk cache enabled (pinned geometry: 32-row chunks, a 16 MiB
+    // per-link budget — generous enough that a partition's hot set never
+    // evicts at bench scale).  The v4 artifact carries the cached vs
+    // uncached wire-byte delta, and the gate below requires the cache to
+    // strictly reduce response traffic.
+    const BENCH_CHUNK_ROWS: usize = 32;
+    const BENCH_CACHE_BYTES: u64 = 16 * 1024 * 1024;
+    println!("bench: re-running prefetch with the chunk cache enabled...");
+    let mut cached_ccfg = ccfg.clone();
+    cached_ccfg.run.chunk_rows = BENCH_CHUNK_ROWS;
+    cached_ccfg.run.chunk_cache_bytes = BENCH_CACHE_BYTES;
+    cached_ccfg.trace = false;
+    let cached = run_cluster_on(ds, part, &cached_ccfg, None)?;
+    check_replicas_synced(&cached)?;
     if let Some(dir) = &trace_dir {
         std::fs::create_dir_all(dir)?;
         for (name, r) in [("prefetch", &on), ("baseline", &off)] {
@@ -696,8 +718,11 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
     } else {
         1.0
     };
+    let wire_on = on.wire_total();
+    let wire_cached = cached.wire_total();
+    let resp_delta = wire_on.resp_bytes as i64 - wire_cached.resp_bytes as i64;
     let mut fields = vec![
-        ("schema", Json::str("rudder-bench-cluster/v3")),
+        ("schema", Json::str("rudder-bench-cluster/v4")),
         (
             "config",
             Json::obj(vec![
@@ -714,6 +739,20 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
         ),
         ("prefetch", variant_json(&on)),
         ("baseline", variant_json(&off)),
+        ("prefetch_cached", variant_json(&cached)),
+        (
+            "cache",
+            Json::obj(vec![
+                ("chunk_rows", Json::num(BENCH_CHUNK_ROWS as f64)),
+                ("cache_bytes", Json::num(BENCH_CACHE_BYTES as f64)),
+                ("chunks_hit", Json::num(wire_cached.chunks_hit as f64)),
+                ("chunks_fetched", Json::num(wire_cached.chunks_fetched as f64)),
+                ("bytes_saved_cache", Json::num(wire_cached.bytes_saved_cache as f64)),
+                ("wire_resp_bytes_uncached", Json::num(wire_on.resp_bytes as f64)),
+                ("wire_resp_bytes_cached", Json::num(wire_cached.resp_bytes as f64)),
+                ("wire_resp_bytes_delta", Json::num(resp_delta as f64)),
+            ]),
+        ),
         ("speedup_wall", Json::num(speedup_wall)),
         ("fetch_blocked_ratio", Json::num(blocked_ratio)),
         ("replicas_synced", Json::Bool(true)),
@@ -725,9 +764,20 @@ fn cmd_bench(args: &Args) -> rudder::error::Result<()> {
     std::fs::write(&out_path, doc.to_string_pretty())?;
     println!(
         "bench: wall speedup {speedup_wall:.2}x, fetch-blocked ratio {blocked_ratio:.2} \
-         (prefetch / baseline); wrote {out_path}"
+         (prefetch / baseline); chunk cache saved {} resp bytes \
+         ({} uncached -> {} cached); wrote {out_path}",
+        fmt_count(resp_delta.max(0) as u64),
+        fmt_count(wire_on.resp_bytes),
+        fmt_count(wire_cached.resp_bytes),
     );
     // Gates last: the artifact exists (and is uploadable) even on failure.
+    rudder::ensure!(
+        wire_cached.resp_bytes < wire_on.resp_bytes,
+        "bench gate: chunk cache did not reduce wire response bytes \
+         ({} cached vs {} uncached)",
+        wire_cached.resp_bytes,
+        wire_on.resp_bytes
+    );
     rudder::ensure!(
         speedup_wall >= min_speedup,
         "bench gate: wall speedup {speedup_wall:.3} below --min-speedup {min_speedup}"

@@ -140,10 +140,21 @@ pub struct WireStats {
     /// Duplicate `FetchResp` frames dropped by req-id dedup (only the
     /// fault-injection shim produces these).
     pub dup_frames: u64,
-    /// Frames that failed to decode or had an unexpected kind.  Non-zero
+    /// Frames that failed to decode, had an unexpected kind, or carried a
+    /// malformed payload (shape/dim skew, digest mismatch).  Non-zero
     /// means a protocol bug: the nodes of a lost response would stay
     /// outstanding and eventually surface as a feature-wait timeout.
     pub bad_frames: u64,
+    /// Chunk-cache counters (content-addressed feature plane; all zero
+    /// unless `chunk_cache_bytes > 0`).  `chunks_hit` counts node fetches
+    /// served by the per-link chunk cache without a wire request;
+    /// `chunks_fetched` counts chunks admitted (their request went on the
+    /// wire); `bytes_saved_cache` estimates the response payload bytes
+    /// the hits kept off the wire.  All three are command-time counters —
+    /// pure functions of config + seed, covered by `wire_parity`.
+    pub chunks_hit: u64,
+    pub chunks_fetched: u64,
+    pub bytes_saved_cache: u64,
     /// Per-link transport counters (feature-server links, then the hub
     /// link).  Timing-independent except for `reconnects`.
     pub links: Vec<LinkStats>,
@@ -229,6 +240,9 @@ impl WireStats {
         self.nodes_received += o.nodes_received;
         self.dup_frames += o.dup_frames;
         self.bad_frames += o.bad_frames;
+        self.chunks_hit += o.chunks_hit;
+        self.chunks_fetched += o.chunks_fetched;
+        self.bytes_saved_cache += o.bytes_saved_cache;
         self.links.extend(o.links.iter().cloned());
         if self.fetch_latency.len() < o.fetch_latency.len() {
             self.fetch_latency.resize_with(o.fetch_latency.len(), Default::default);

@@ -39,6 +39,11 @@ pub struct RunConfig {
     /// Buffer scoring policy (FreqDecay = the paper's; Lfu/Lru = Fig 4
     /// ablation baselines).
     pub buffer_policy: Policy,
+    /// Rows per content-addressed feature chunk (cluster feature plane).
+    pub chunk_rows: usize,
+    /// Per-link chunk-cache budget in bytes; 0 disables the chunk protocol
+    /// entirely (trainers fall back to plain `FetchReq`/`FetchResp`).
+    pub chunk_cache_bytes: u64,
 }
 
 impl Default for RunConfig {
@@ -60,6 +65,8 @@ impl Default for RunConfig {
             compute: ComputeParams::default(),
             hidden: 128,
             buffer_policy: Policy::FreqDecay,
+            chunk_rows: 32,
+            chunk_cache_bytes: 0,
         }
     }
 }

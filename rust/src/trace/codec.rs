@@ -115,6 +115,15 @@ fn encode_kind(out: &mut Vec<u8>, k: &EventKind) {
             put_u32(out, channel);
         }
         EventKind::RoleEnd { emitted } => put_u64(out, emitted),
+        EventKind::CacheHit { owner, nodes } => {
+            put_u32(out, owner);
+            put_u64(out, nodes);
+        }
+        EventKind::CacheMiss { owner, chunks, nodes } => {
+            put_u32(out, owner);
+            put_u64(out, chunks);
+            put_u64(out, nodes);
+        }
     }
 }
 
@@ -150,6 +159,8 @@ fn decode_kind(r: &mut Reader<'_>) -> Result<EventKind> {
         13 => EventKind::LinkFlush { conn: r.u32()?, frames: r.u64()?, bytes: r.u64()? },
         14 => EventKind::ChannelClose { conn: r.u32()?, channel: r.u32()? },
         15 => EventKind::RoleEnd { emitted: r.u64()? },
+        16 => EventKind::CacheHit { owner: r.u32()?, nodes: r.u64()? },
+        17 => EventKind::CacheMiss { owner: r.u32()?, chunks: r.u64()?, nodes: r.u64()? },
         t => crate::bail!("unknown trace event tag {t}"),
     })
 }
@@ -307,6 +318,11 @@ fn check_domain(e: &TraceEvent) -> Result<()> {
             int(bytes, "bytes")?;
         }
         EventKind::RoleEnd { emitted } => int(emitted, "emitted")?,
+        EventKind::CacheHit { nodes, .. } => int(nodes, "nodes")?,
+        EventKind::CacheMiss { chunks, nodes, .. } => {
+            int(chunks, "chunks")?;
+            int(nodes, "nodes")?;
+        }
         EventKind::MinibatchBegin { .. } | EventKind::ChannelClose { .. } => {}
     }
     Ok(())
@@ -375,6 +391,12 @@ fn kind_fields(k: &EventKind) -> Vec<(&'static str, Json)> {
             vec![("conn", ju(conn as u64)), ("channel", ju(channel as u64))]
         }
         EventKind::RoleEnd { emitted } => vec![("emitted", ju(emitted))],
+        EventKind::CacheHit { owner, nodes } => {
+            vec![("owner", ju(owner as u64)), ("nodes", ju(nodes))]
+        }
+        EventKind::CacheMiss { owner, chunks, nodes } => {
+            vec![("owner", ju(owner as u64)), ("chunks", ju(chunks)), ("nodes", ju(nodes))]
+        }
     }
 }
 
@@ -502,6 +524,14 @@ fn kind_from_json(name: &str, j: &Json) -> Result<EventKind> {
             channel: want_u32(j, "channel")?,
         },
         "role_end" => EventKind::RoleEnd { emitted: want_u64(j, "emitted")? },
+        "cache_hit" => {
+            EventKind::CacheHit { owner: want_u32(j, "owner")?, nodes: want_u64(j, "nodes")? }
+        }
+        "cache_miss" => EventKind::CacheMiss {
+            owner: want_u32(j, "owner")?,
+            chunks: want_u64(j, "chunks")?,
+            nodes: want_u64(j, "nodes")?,
+        },
         other => crate::bail!("trace jsonl: unknown event kind '{other}'"),
     })
 }

@@ -53,6 +53,10 @@ pub fn canonical(e: &TraceEvent) -> Option<String> {
         EventKind::AllreduceRound { round, vclock_max, trainers } => {
             format!("round={round} vclock_max={} trainers={trainers}", bits(vclock_max))
         }
+        EventKind::CacheHit { owner, nodes } => format!("owner={owner} nodes={nodes}"),
+        EventKind::CacheMiss { owner, chunks, nodes } => {
+            format!("owner={owner} chunks={chunks} nodes={nodes}")
+        }
         EventKind::BatchFlush { .. }
         | EventKind::LinkFlush { .. }
         | EventKind::ChannelClose { .. }

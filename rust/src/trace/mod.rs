@@ -124,6 +124,13 @@ pub enum EventKind {
     /// Final event of every role: `emitted` counts the events before it,
     /// so a collector can prove nothing was dropped at shutdown.
     RoleEnd { emitted: u64 },
+    /// Prefetcher: `nodes` of one fetch command served straight from the
+    /// chunk cache for `owner` (no wire traffic).  Cache decisions are
+    /// command-time-only, so this is virtual and diff-gated.
+    CacheHit { owner: u32, nodes: u64 },
+    /// Prefetcher: `nodes` of one fetch command missed the chunk cache for
+    /// `owner`, admitting `chunks` new chunks (virtual, diff-gated).
+    CacheMiss { owner: u32, chunks: u64, nodes: u64 },
 }
 
 impl EventKind {
@@ -144,6 +151,8 @@ impl EventKind {
             EventKind::LinkFlush { .. } => 13,
             EventKind::ChannelClose { .. } => 14,
             EventKind::RoleEnd { .. } => 15,
+            EventKind::CacheHit { .. } => 16,
+            EventKind::CacheMiss { .. } => 17,
         }
     }
 
@@ -164,6 +173,8 @@ impl EventKind {
             EventKind::LinkFlush { .. } => "link_flush",
             EventKind::ChannelClose { .. } => "channel_close",
             EventKind::RoleEnd { .. } => "role_end",
+            EventKind::CacheHit { .. } => "cache_hit",
+            EventKind::CacheMiss { .. } => "cache_miss",
         }
     }
 

@@ -56,6 +56,33 @@ pub type FastBuild = BuildHasherDefault<FastHasher>;
 pub type FastMap<K, V> = std::collections::HashMap<K, V, FastBuild>;
 pub type FastSet<K> = std::collections::HashSet<K, FastBuild>;
 
+/// FNV-1a over a byte slice: the stable content digest of the
+/// content-addressed feature chunk store.  Unlike [`FastHasher`] this is a
+/// *published* wire value (trainers and servers must agree across
+/// processes and releases), so it uses the textbook FNV-1a constants and
+/// nothing host-dependent.
+pub fn digest_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// FNV-1a over an f32 slice (little-endian bytes), the row-payload form
+/// used for feature chunks.
+pub fn digest_f32(vals: &[f32]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for v in vals {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,6 +98,23 @@ mod tests {
             assert_eq!(m.get(&(i * 7 + 1)), Some(&i));
         }
         assert_eq!(m.get(&0), None);
+    }
+
+    #[test]
+    fn digest_is_stable_fnv1a() {
+        // Published FNV-1a test vectors: the digest is a wire value, so it
+        // must never drift.
+        assert_eq!(digest_bytes(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(digest_bytes(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(digest_bytes(b"foobar"), 0x85944171F73967E8);
+        // f32 form matches the byte form over the same little-endian bytes.
+        let vals = [1.5f32, -2.25, 0.0];
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(digest_f32(&vals), digest_bytes(&bytes));
+        assert_ne!(digest_f32(&[1.0, 2.0]), digest_f32(&[2.0, 1.0]));
     }
 
     #[test]

@@ -23,12 +23,16 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile in `[0, 100]` with linear interpolation (NIST method).
+///
+/// NaN samples are excluded before ranking (a NaN wall-clock delta must
+/// not poison the whole summary, and `partial_cmp`-based sorting would
+/// panic on one); an input that is all-NaN or empty yields 0.0.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     if v.len() == 1 {
         return v[0];
     }
@@ -304,6 +308,16 @@ mod tests {
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
         assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        // Mirrors `log_histogram_edge_samples`: a NaN wall-clock delta must
+        // not panic or poison the summary.  Pre-fix this panicked inside
+        // `sort_by(partial_cmp.unwrap())`.
+        assert!((percentile(&[1.0, f64::NAN, 3.0], 50.0) - 2.0).abs() < 1e-12);
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 99.0), 0.0);
+        assert!((median(&[f64::NAN, 5.0]) - 5.0).abs() < 1e-12);
     }
 
     #[test]

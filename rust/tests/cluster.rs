@@ -366,6 +366,96 @@ fn fault_injection_over_tcp_with_chopped_writes() {
 }
 
 // ---------------------------------------------------------------------------
+// content-addressed chunk cache: the feature plane with `chunk_cache_bytes`
+// set must keep every parity guarantee while strictly reducing response
+// traffic across repeated touches
+
+/// `quick` with the chunk protocol on: 32-row chunks, a budget generous
+/// enough that nothing evicts at this scale.
+fn quick_cached(controller: &str) -> RunConfig {
+    let mut cfg = quick(controller);
+    cfg.chunk_rows = 32;
+    cfg.chunk_cache_bytes = 8 * 1024 * 1024;
+    cfg
+}
+
+#[test]
+fn chunk_cache_cross_transport_wire_parity() {
+    // Cache admission/eviction is command-time-only, so hit/miss decisions
+    // — and every frame and byte on the wire — must stay bit-identical
+    // across channel, tcp, and the event loop, and the *logical* traffic
+    // counters must still match the virtual-time sim exactly.
+    let cfg = quick_cached("fixed");
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let sim_r = run_on(ds.as_ref(), part.as_ref(), &cfg, None);
+    let chan = run_with(&cfg, &ds, &part, Transport::Channel, None);
+    let tcp = run_with(&cfg, &ds, &part, Transport::Tcp, None);
+    let event = run_with(&cfg, &ds, &part, Transport::Event, None);
+    parity_check(&sim_r, &chan.experiment).unwrap();
+    assert_minibatches_identical(&chan, &tcp);
+    assert_minibatches_identical(&chan, &event);
+    wire_parity(&chan.wire, &tcp.wire).unwrap();
+    wire_parity(&chan.wire, &event.wire).unwrap();
+    let wt = chan.wire_total();
+    assert!(wt.chunks_fetched > 0, "misses must fetch chunks");
+    assert!(wt.chunks_hit > 0, "repeated touches must hit the cache");
+    assert!(wt.bytes_saved_cache > 0, "hits must account saved bytes");
+    assert_eq!(wt.bad_frames, 0, "chunk protocol must be clean");
+}
+
+#[test]
+fn chunk_cache_reduces_wire_bytes_over_two_epochs() {
+    // The point of the cache: over 2 epochs the same remote rows are
+    // re-fetched many times in the row protocol, but at most once per
+    // chunk with the cache on — response bytes must strictly drop.
+    let uncached = quick("massivegnn:8");
+    let cached = quick_cached("massivegnn:8");
+    let (ds, part) = build_cluster(&uncached).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let base = run_with(&uncached, &ds, &part, Transport::Channel, None);
+    let warm = run_with(&cached, &ds, &part, Transport::Channel, None);
+    // Logical traffic is identical — only the wire layer changes.
+    parity_check(&base.experiment, &warm.experiment).unwrap();
+    let wb = base.wire_total();
+    let ww = warm.wire_total();
+    assert!(
+        ww.resp_bytes < wb.resp_bytes,
+        "cache must reduce response bytes ({} cached vs {} uncached)",
+        ww.resp_bytes,
+        wb.resp_bytes
+    );
+    assert_eq!(wb.chunks_hit, 0, "row protocol never touches the cache");
+    assert!(ww.chunks_hit > 0 && ww.bytes_saved_cache > 0);
+    assert_eq!(ww.bad_frames, 0);
+}
+
+#[test]
+fn chunk_cache_eviction_under_faults_keeps_counters_bit_identical() {
+    // A tight budget forces real LRU eviction traffic, and the fault shim
+    // duplicates/reorders the chunked responses — the command-time cache
+    // discipline must keep every counter bit-identical to a clean channel
+    // run anyway.
+    let mut cfg = quick_cached("massivegnn:8");
+    cfg.chunk_cache_bytes = 256 * 1024;
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let clean = run_with(&cfg, &ds, &part, Transport::Channel, None);
+    let fault = FaultSpec { seed: 21, dup: 0.4, delay: 0.4, chop: 0 };
+    let faulted = run_with(&cfg, &ds, &part, Transport::Event, Some(fault));
+    parity_check(&clean.experiment, &faulted.experiment).unwrap();
+    assert_minibatches_identical(&clean, &faulted);
+    wire_parity(&clean.wire, &faulted.wire).unwrap();
+    assert!(faulted.wire_total().dup_frames > 0, "dup faults must fire");
+    assert_eq!(faulted.wire_total().bad_frames, 0, "dups must still parse");
+    let wt = clean.wire_total();
+    assert!(wt.chunks_fetched > 0 && wt.chunks_hit > 0, "cache must be exercised");
+}
+
+// ---------------------------------------------------------------------------
 // measured compute: real SageRunner fwd/bwd behind the same state machine
 
 /// Run one cluster on a shared graph with an explicit compute mode.
@@ -492,6 +582,33 @@ fn measured_mode_parity_over_event_loop() {
     wire_parity(&chan.wire, &event.wire).unwrap();
     assert_eq!(chan.measured[0].param_hash, event.measured[0].param_hash);
     assert!(event.measured.iter().all(|m| m.is_populated()));
+}
+
+#[test]
+fn measured_mode_parity_with_chunk_cache() {
+    // Real compute consuming cache-served rows: the gathered features are
+    // identical bytes whether they came off the wire or out of a chunk,
+    // so the trained replicas must end bit-identical to a cache-off
+    // measured run, and wire parity must hold across transports with the
+    // cache on.
+    let cfg = quick_cached("fixed");
+    let mut cfg_off = cfg.clone();
+    cfg_off.chunk_cache_bytes = 0;
+    let (ds, part) = build_cluster(&cfg).unwrap();
+    let ds = Arc::new(ds);
+    let part = Arc::new(part);
+    let plain = run_compute(&cfg_off, &ds, &part, ComputeMode::Measured, Transport::Channel);
+    let chan = run_compute(&cfg, &ds, &part, ComputeMode::Measured, Transport::Channel);
+    let event = run_compute(&cfg, &ds, &part, ComputeMode::Measured, Transport::Event);
+    assert_eq!(
+        plain.measured[0].param_hash, chan.measured[0].param_hash,
+        "cache-served rows must train to the same parameters"
+    );
+    parity_check(&plain.experiment, &chan.experiment).unwrap();
+    assert_minibatches_identical(&chan, &event);
+    wire_parity(&chan.wire, &event.wire).unwrap();
+    assert_eq!(chan.measured[0].param_hash, event.measured[0].param_hash);
+    assert!(chan.wire_total().chunks_hit > 0, "measured run must hit the cache");
 }
 
 // ---------------------------------------------------------------------------

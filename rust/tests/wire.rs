@@ -10,7 +10,7 @@ use rudder::cluster::{Frame, FrameAssembler, MuxAssembler, MuxEvent};
 use rudder::util::prop::{prop_check, G};
 
 fn roundtrip(f: &Frame) -> Frame {
-    let bytes = f.encode();
+    let bytes = f.encode().unwrap();
     assert_eq!(bytes.len(), f.encoded_len(), "encoded_len mirror out of sync");
     let (back, used) = Frame::decode(&bytes).unwrap_or_else(|e| panic!("{f:?}: {e}"));
     assert_eq!(used, bytes.len(), "must consume the whole frame");
@@ -80,8 +80,8 @@ fn hello_roundtrip() {
 fn back_to_back_frames_decode_sequentially() {
     let a = Frame::FetchReq { req_id: 1, from: 0, nodes: vec![4, 5] };
     let b = Frame::Allreduce { part: 1, round: 2, vclock: 3.5, grads: vec![0.5] };
-    let mut stream = a.encode();
-    stream.extend_from_slice(&b.encode());
+    let mut stream = a.encode().unwrap();
+    stream.extend_from_slice(&b.encode().unwrap());
     let (fa, used) = Frame::decode(&stream).unwrap();
     assert_eq!(fa, a);
     let (fb, used2) = Frame::decode(&stream[used..]).unwrap();
@@ -100,7 +100,7 @@ fn truncation_rejected_at_every_prefix_length() {
         Frame::Allreduce { part: 0, round: 1, vclock: 2.0, grads: vec![1.0, 2.0] },
     ];
     for f in frames {
-        let bytes = f.encode();
+        let bytes = f.encode().unwrap();
         for cut in 0..bytes.len() {
             assert!(
                 Frame::decode(&bytes[..cut]).is_err(),
@@ -113,9 +113,10 @@ fn truncation_rejected_at_every_prefix_length() {
 
 #[test]
 fn unknown_kind_rejected() {
-    // Kind 6 is Config now, so the first truly-unknown kind is 7.
-    let mut bytes = Frame::FetchReq { req_id: 0, from: 0, nodes: vec![] }.encode();
-    for kind in [0u8, 7, 200, 255] {
+    // Kinds 7/8 are the chunk protocol now, so the first truly-unknown
+    // kind is 9.
+    let mut bytes = Frame::FetchReq { req_id: 0, from: 0, nodes: vec![] }.encode().unwrap();
+    for kind in [0u8, 9, 200, 255] {
         bytes[4] = kind;
         assert!(Frame::decode(&bytes).is_err(), "kind {kind} accepted");
     }
@@ -133,7 +134,7 @@ fn config_roundtrip() {
 fn huge_vector_count_rejected_before_allocation() {
     // A count field claiming u32::MAX elements inside a tiny body must be
     // rejected by the length-vs-body check, not attempted.
-    let mut bytes = Frame::FetchReq { req_id: 0, from: 0, nodes: vec![1] }.encode();
+    let mut bytes = Frame::FetchReq { req_id: 0, from: 0, nodes: vec![1] }.encode().unwrap();
     let count_at = 4 + 1 + 8 + 4; // prefix + kind + req_id + from
     bytes[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
     assert!(Frame::decode(&bytes).is_err());
@@ -143,7 +144,7 @@ fn huge_vector_count_rejected_before_allocation() {
 fn trailing_garbage_inside_body_rejected() {
     // Extend the body (and its length prefix) past the last field: the
     // decoder must notice unconsumed bytes.
-    let mut bytes = Frame::FetchReq { req_id: 0, from: 0, nodes: vec![9] }.encode();
+    let mut bytes = Frame::FetchReq { req_id: 0, from: 0, nodes: vec![9] }.encode().unwrap();
     bytes.push(0xAB);
     let body_len = (bytes.len() - 4) as u32;
     bytes[..4].copy_from_slice(&body_len.to_le_bytes());
@@ -156,7 +157,7 @@ fn feats_nodes_dim_mismatch_rejected() {
     // nodes × feat_dim: encode a valid one, then surgically shrink the
     // feats vector count and the length prefix consistently.
     let good = Frame::FetchResp { req_id: 1, feat_dim: 3, nodes: vec![8], feats: vec![0.0; 3] };
-    let mut bytes = good.encode();
+    let mut bytes = good.encode().unwrap();
     // Drop the last f32 (4 bytes) and patch both counts.
     bytes.truncate(bytes.len() - 4);
     let feats_count_at = 4 + 1 + 8 + 4 + 4 + 4; // ... + nodes count + 1 node
@@ -176,6 +177,23 @@ fn oversized_body_length_rejected() {
     assert!(Frame::decode(&bytes).is_err());
 }
 
+#[test]
+fn encode_rejects_oversized_body() {
+    // Regression: `encode` used to cast lengths with `as u32` and write
+    // whatever body it built — a payload past the cap (or a vector count
+    // past u32::MAX) silently corrupted the length prefix and desynced
+    // the whole stream.  Oversize is now an encode-time error.
+    use rudder::cluster::wire::MAX_FRAME_BYTES;
+    let blob = vec![0u8; MAX_FRAME_BYTES];
+    let f = Frame::Result { role: 1, id: 0, blob };
+    assert!(f.encode().is_err(), "Result body past MAX_FRAME_BYTES must fail to encode");
+    let f = Frame::Config { toml: vec![0u8; MAX_FRAME_BYTES] };
+    assert!(f.encode().is_err(), "Config body past MAX_FRAME_BYTES must fail to encode");
+    // Just under the cap (body = kind + count + blob <= cap) still encodes.
+    let f = Frame::Config { toml: vec![0u8; MAX_FRAME_BYTES - 8] };
+    assert!(f.encode().is_ok(), "body within the cap must encode");
+}
+
 // ---------------------------------------------------------------------------
 // property-based framing suite (util::prop): frames split at arbitrary
 // byte boundaries, concatenated, and truncated mid-header/mid-payload must
@@ -183,7 +201,8 @@ fn oversized_body_length_rejected() {
 
 /// Random protocol frame, size-biased by the prop framework's budget.
 fn gen_frame(g: &mut G) -> Frame {
-    match g.usize(0, 5) {
+    use rudder::cluster::wire::Chunk;
+    match g.usize(0, 7) {
         0 => Frame::FetchReq {
             req_id: g.u64(0, 1 << 20),
             from: g.u64(0, 64) as u32,
@@ -208,6 +227,30 @@ fn gen_frame(g: &mut G) -> Frame {
             blob: g.vec(64, |g| g.u64(0, 255) as u8),
         },
         4 => Frame::Config { toml: g.vec(64, |g| g.u64(0, 255) as u8) },
+        5 => Frame::ChunkReq {
+            req_id: g.u64(0, 1 << 20),
+            from: g.u64(0, 64) as u32,
+            nodes: g.vec(32, |g| g.u64(0, 1 << 30) as u32),
+            have: g.vec(12, |g| g.u64(0, 1 << 40)),
+        },
+        6 => {
+            let dim = g.usize(1, 4);
+            let n_chunks = g.usize(0, 3);
+            let chunks: Vec<Chunk> = (0..n_chunks)
+                .map(|_| {
+                    let nodes: Vec<u32> = g.vec(8, |g| g.u64(0, 1 << 30) as u32);
+                    let feats: Vec<f32> =
+                        (0..nodes.len() * dim).map(|i| i as f32 * 0.25 - 1.0).collect();
+                    Chunk { digest: g.u64(0, 1 << 40), nodes, feats }
+                })
+                .collect();
+            Frame::ChunkResp {
+                req_id: g.u64(0, 1 << 20),
+                feat_dim: dim as u32,
+                refs: g.vec(8, |g| g.u64(0, 1 << 40)),
+                chunks,
+            }
+        }
         _ => Frame::Hello { role: 1, id: g.u64(0, 1 << 16) as u32 },
     }
 }
@@ -216,7 +259,7 @@ fn gen_frame(g: &mut G) -> Frame {
 fn prop_random_frames_roundtrip() {
     prop_check("random frames encode/decode round-trip", 300, |g| {
         let f = gen_frame(g);
-        let bytes = f.encode();
+        let bytes = f.encode().map_err(|e| e.to_string())?;
         if bytes.len() != f.encoded_len() {
             return Err(format!("encoded_len {} vs {} bytes", f.encoded_len(), bytes.len()));
         }
@@ -237,7 +280,7 @@ fn prop_reassembly_from_arbitrary_splits() {
         let frames: Vec<Frame> = (0..g.usize(1, 6)).map(|_| gen_frame(g)).collect();
         let mut stream = Vec::new();
         for f in &frames {
-            stream.extend_from_slice(&f.encode());
+            stream.extend_from_slice(&f.encode().map_err(|e| e.to_string())?);
         }
         let mut asm = FrameAssembler::new();
         let mut out: Vec<Frame> = Vec::new();
@@ -274,7 +317,7 @@ fn prop_reassembly_from_arbitrary_splits() {
 fn prop_truncated_streams_pend_and_resume() {
     prop_check("truncation mid-header/mid-payload pends, then resumes", 200, |g| {
         let f = gen_frame(g);
-        let bytes = f.encode();
+        let bytes = f.encode().map_err(|e| e.to_string())?;
         // Any strict prefix: cuts < 4 land mid-header, larger cuts
         // mid-payload.
         let cut = g.usize(0, bytes.len() - 1);
@@ -321,7 +364,7 @@ fn prop_mux_events_reassemble_from_arbitrary_splits() {
                 stream.extend_from_slice(&close_marker(channel));
                 events.push(MuxEvent::Close(channel));
             } else {
-                let frame = gen_frame(g).encode();
+                let frame = gen_frame(g).encode().map_err(|e| e.to_string())?;
                 stream.extend_from_slice(&encode_tagged(channel, &frame));
                 events.push(MuxEvent::Frame(channel, frame));
             }
@@ -351,7 +394,7 @@ fn prop_mux_events_reassemble_from_arbitrary_splits() {
 fn prop_mux_partial_tag_or_body_pends() {
     prop_check("truncated mux records pend, then resume exactly", 200, |g| {
         let channel = g.u64(0, 1 << 16) as u32;
-        let frame = gen_frame(g).encode();
+        let frame = gen_frame(g).encode().map_err(|e| e.to_string())?;
         let bytes = encode_tagged(channel, &frame);
         // Any strict prefix: cuts < 4 land mid-channel-tag, < 8 mid-length,
         // larger cuts mid-body.
@@ -378,7 +421,8 @@ fn prop_coalesced_batches_match_per_frame_sends() {
     use std::net::{TcpListener, TcpStream};
 
     prop_check("send_frames batch arrives identical to per-frame sends", 30, |g| {
-        let frames: Vec<Vec<u8>> = (0..g.usize(1, 6)).map(|_| gen_frame(g).encode()).collect();
+        let frames: Vec<Vec<u8>> =
+            (0..g.usize(1, 6)).map(|_| gen_frame(g).encode().unwrap()).collect();
         let batched = g.bool();
         let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
         let addr = listener.local_addr().map_err(|e| e.to_string())?;
@@ -426,7 +470,7 @@ fn prop_coalesced_batches_match_per_frame_sends() {
 fn prop_corrupt_length_prefix_errors_cleanly() {
     prop_check("corrupt length prefixes error, never panic or allocate", 200, |g| {
         let f = gen_frame(g);
-        let mut bytes = f.encode();
+        let mut bytes = f.encode().map_err(|e| e.to_string())?;
         // Invalid body length: zero, or far beyond the frame cap.
         let bad: u32 = if g.bool() { 0 } else { u32::MAX - g.u64(0, 1000) as u32 };
         bytes[..4].copy_from_slice(&bad.to_le_bytes());
