@@ -1,0 +1,406 @@
+//! A comment/string-aware lexical model of one Rust source file.
+//!
+//! This is deliberately *not* a parser (no `syn`, no AST): the audit rules
+//! only need to know (a) what the code looks like with comments and string
+//! literals blanked out, (b) which string/byte literals appear where,
+//! (c) where `// audit:allow(rule) reason` directives sit and which code
+//! line each one covers, and (d) which lines are test-only
+//! (`#[cfg(test)]` regions, or the whole file under `tests/`).  A single
+//! forward scan with a small state machine produces all four, handling
+//! nested block comments, raw strings (`r#"…"#`), byte strings, char
+//! literals vs. lifetimes, and escapes.
+
+/// One string or byte-string literal: its full contents and the line its
+/// opening quote sits on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StrLit {
+    pub line: usize,
+    pub value: String,
+}
+
+/// One `// audit:allow(rule) reason` directive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// Line the comment itself sits on (1-based).
+    pub line: usize,
+    /// Code line the directive covers: the comment's own line for a
+    /// trailing comment, else the next line carrying any code.
+    pub target: usize,
+    pub rule: String,
+    /// Justification text after the closing paren (may be empty — the
+    /// driver reports empty reasons as findings).
+    pub reason: String,
+}
+
+/// Lexical model of one source file.
+#[derive(Debug)]
+pub struct SourceModel {
+    /// The source with every comment and string-literal *content* replaced
+    /// by spaces (newlines kept), so byte offsets and line numbers match
+    /// the original and naive substring searches cannot be fooled by text
+    /// inside strings or comments.
+    pub code: String,
+    /// All string/byte literals in source order.
+    pub strings: Vec<StrLit>,
+    /// All `audit:allow` directives.
+    pub allows: Vec<Allow>,
+    /// `test_lines[l]` (1-based, index 0 unused) — line `l` is inside a
+    /// `#[cfg(test)]` region.
+    test_lines: Vec<bool>,
+}
+
+impl SourceModel {
+    /// Lex `src`.  `all_test` marks every line as test code (integration
+    /// test files under `tests/`).
+    pub fn lex(src: &str, all_test: bool) -> SourceModel {
+        let lexed = scan(src);
+        let n_lines = src.lines().count() + 2;
+        let mut test_lines = vec![all_test; n_lines];
+        if !all_test {
+            for (start, end) in cfg_test_regions(&lexed.code) {
+                let (l0, l1) = (line_of(&lexed.code, start), line_of(&lexed.code, end));
+                for flag in test_lines.iter_mut().take(l1.min(n_lines - 1) + 1).skip(l0) {
+                    *flag = true;
+                }
+            }
+        }
+        let allows = resolve_allows(&lexed.code, lexed.raw_allows);
+        SourceModel { code: lexed.code, strings: lexed.strings, allows, test_lines }
+    }
+
+    /// Is 1-based line `l` inside test-only code?
+    pub fn is_test_line(&self, l: usize) -> bool {
+        self.test_lines.get(l).copied().unwrap_or(false)
+    }
+
+    /// 1-based line number of byte offset `off` in the code view.
+    pub fn line_of(&self, off: usize) -> usize {
+        line_of(&self.code, off)
+    }
+}
+
+fn line_of(s: &str, off: usize) -> usize {
+    s.as_bytes()[..off.min(s.len())].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+struct Lexed {
+    code: String,
+    strings: Vec<StrLit>,
+    /// (line, comment text) for every `//` comment.
+    raw_allows: Vec<(usize, String)>,
+}
+
+/// The forward scan: blank comments and string contents, collect literals
+/// and `//` comment text.
+fn scan(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut code: Vec<u8> = Vec::with_capacity(b.len());
+    let mut strings = Vec::new();
+    let mut raw_allows = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Push `n` bytes of blank (preserving newlines) while advancing `line`.
+    macro_rules! blank {
+        ($from:expr, $to:expr) => {
+            for k in $from..$to {
+                if b[k] == b'\n' {
+                    code.push(b'\n');
+                    line += 1;
+                } else {
+                    code.push(b' ');
+                }
+            }
+        };
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.  Doc comments (`///`, `//!`) are documentation,
+        // not directives: a rendered `audit:allow` example must not
+        // register as a live (and then stale) allow.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let end = memchr_nl(b, i);
+            let text = String::from_utf8_lossy(&b[i + 2..end]).into_owned();
+            if !text.starts_with('/') && !text.starts_with('!') {
+                raw_allows.push((line, text));
+            }
+            blank!(i, end);
+            i = end;
+            continue;
+        }
+        // Block comment (nested).
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'/' && j + 1 < b.len() && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < b.len() && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank!(i, j);
+            i = j;
+            continue;
+        }
+        // Raw (byte) string: r"…", r#"…"#, br##"…"##.
+        if c == b'r' || (c == b'b' && i + 1 < b.len() && b[i + 1] == b'r') {
+            let r_at = if c == b'r' { i } else { i + 1 };
+            if !prev_is_ident(&code) {
+                let mut hashes = 0usize;
+                let mut j = r_at + 1;
+                while j < b.len() && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'"' {
+                    let open_line = line + count_nl(&b[i..j]);
+                    let (content_start, mut k) = (j + 1, j + 1);
+                    loop {
+                        match b[k..].iter().position(|&x| x == b'"') {
+                            Some(p) => {
+                                k += p;
+                                if b[k + 1..].len() >= hashes
+                                    && b[k + 1..k + 1 + hashes].iter().all(|&x| x == b'#')
+                                {
+                                    break;
+                                }
+                                k += 1;
+                            }
+                            None => {
+                                k = b.len().saturating_sub(hashes + 1);
+                                break;
+                            }
+                        }
+                    }
+                    let value = String::from_utf8_lossy(&b[content_start..k]).into_owned();
+                    strings.push(StrLit { line: open_line, value });
+                    let end = (k + 1 + hashes).min(b.len());
+                    blank!(i, end);
+                    i = end;
+                    continue;
+                }
+            }
+        }
+        // Plain (byte) string.
+        if c == b'"' || (c == b'b' && i + 1 < b.len() && b[i + 1] == b'"' && !prev_is_ident(&code))
+        {
+            let open = if c == b'"' { i } else { i + 1 };
+            let open_line = line;
+            let mut j = open + 1;
+            let start = j;
+            while j < b.len() {
+                match b[j] {
+                    b'\\' => j += 2,
+                    b'"' => break,
+                    _ => j += 1,
+                }
+            }
+            let value = String::from_utf8_lossy(&b[start..j.min(b.len())]).into_owned();
+            strings.push(StrLit { line: open_line, value });
+            let end = (j + 1).min(b.len());
+            blank!(i, end);
+            i = end;
+            continue;
+        }
+        // Char literal vs. lifetime: 'x' / '\n' are literals; 'a (no
+        // closing quote within two chars) is a lifetime.
+        if c == b'\'' {
+            let is_char = if i + 1 < b.len() && b[i + 1] == b'\\' {
+                true
+            } else {
+                i + 2 < b.len() && b[i + 2] == b'\'' && b[i + 1] != b'\''
+            };
+            if is_char {
+                let mut j = i + 1;
+                if j < b.len() && b[j] == b'\\' {
+                    j += 2;
+                    while j < b.len() && b[j] != b'\'' {
+                        j += 1;
+                    }
+                } else {
+                    j += 1;
+                }
+                let end = (j + 1).min(b.len());
+                blank!(i, end);
+                i = end;
+                continue;
+            }
+        }
+        if c == b'\n' {
+            line += 1;
+        }
+        code.push(c);
+        i += 1;
+    }
+    Lexed { code: String::from_utf8_lossy(&code).into_owned(), strings, raw_allows }
+}
+
+fn memchr_nl(b: &[u8], from: usize) -> usize {
+    b[from..].iter().position(|&x| x == b'\n').map_or(b.len(), |p| from + p)
+}
+
+fn count_nl(b: &[u8]) -> usize {
+    b.iter().filter(|&&x| x == b'\n').count()
+}
+
+/// Was the previous code byte part of an identifier (so `r`/`b` here is a
+/// suffix of a name like `ptr`, not a raw-string sigil)?
+fn prev_is_ident(code: &[u8]) -> bool {
+    code.last().is_some_and(|&c| c.is_ascii_alphanumeric() || c == b'_')
+}
+
+/// Parse `audit:allow(rule) reason` out of comment texts and resolve each
+/// directive's target line against the code view.
+fn resolve_allows(code: &str, raw: Vec<(usize, String)>) -> Vec<Allow> {
+    let lines: Vec<&str> = code.lines().collect();
+    let has_code = |l: usize| lines.get(l - 1).is_some_and(|s| !s.trim().is_empty());
+    let mut out = Vec::new();
+    for (line, text) in raw {
+        let Some(at) = text.find("audit:allow(") else { continue };
+        let rest = &text[at + "audit:allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            out.push(Allow { line, target: line, rule: String::new(), reason: String::new() });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let reason = rest[close + 1..].trim().trim_start_matches([':', '-']).trim().to_string();
+        // Trailing comment → covers its own line; otherwise the next line
+        // that carries code (skipping further comment-only lines).
+        let target = if has_code(line) {
+            line
+        } else {
+            (line + 1..=lines.len()).find(|&l| has_code(l)).unwrap_or(line)
+        };
+        out.push(Allow { line, target, rule, reason });
+    }
+    out
+}
+
+/// Byte ranges of `#[cfg(test)]`-gated items in the code view: from the
+/// attribute to the matching close brace of the item's body.
+fn cfg_test_regions(code: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find("#[cfg(test)]") {
+        let at = from + p;
+        let Some(open_rel) = code[at..].find('{') else { break };
+        let open = at + open_rel;
+        let mut depth = 0i32;
+        let mut end = code.len();
+        for (k, ch) in code[open..].char_indices() {
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = open + k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        out.push((at, end));
+        from = end.max(at + 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanks_comments_and_strings() {
+        let src = "let a = \"Instant::now()\"; // Instant::now()\nlet b = 1;\n";
+        let m = SourceModel::lex(src, false);
+        assert!(!m.code.contains("Instant"), "code view: {}", m.code);
+        assert_eq!(m.code.len(), src.len());
+        assert_eq!(m.strings.len(), 1);
+        assert_eq!(m.strings[0].value, "Instant::now()");
+        assert_eq!(m.strings[0].line, 1);
+    }
+
+    #[test]
+    fn raw_and_byte_strings_collected() {
+        let src = "let m = b\"RTR4\";\nlet r = r#\"he \"quoted\" re\"#;\nlet p = br\"RSV2\";\n";
+        let m = SourceModel::lex(src, false);
+        let vals: Vec<&str> = m.strings.iter().map(|s| s.value.as_str()).collect();
+        assert_eq!(vals, vec!["RTR4", "he \"quoted\" re", "RSV2"]);
+        assert_eq!(m.strings[1].line, 2);
+        assert!(!m.code.contains("RTR4"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = '\\n'; let q = '\"'; c }\nlet s = \"x\";\n";
+        let m = SourceModel::lex(src, false);
+        // The '"' char literal must not open a string: the real string on
+        // line 2 is still collected as its own literal.
+        assert_eq!(m.strings.len(), 1);
+        assert_eq!(m.strings[0].line, 2);
+        assert!(m.code.contains("fn f<'a>"), "lifetime kept: {}", m.code);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ let x = 1;\n";
+        let m = SourceModel::lex(src, false);
+        assert!(!m.code.contains("outer"));
+        assert!(m.code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn allow_directives_trailing_and_preceding() {
+        let src = "\
+let a = now(); // audit:allow(wall-clock-in-virtual-path) RTT is wall time
+// audit:allow(printing-outside-log) protocol announce
+println!(\"x\");
+";
+        let m = SourceModel::lex(src, false);
+        assert_eq!(m.allows.len(), 2);
+        assert_eq!(m.allows[0].target, 1);
+        assert_eq!(m.allows[0].rule, "wall-clock-in-virtual-path");
+        assert_eq!(m.allows[0].reason, "RTT is wall time");
+        assert_eq!(m.allows[1].target, 3, "own-line allow covers the next code line");
+    }
+
+    #[test]
+    fn doc_comments_do_not_carry_directives() {
+        let src = "\
+//! Example: // audit:allow(printing-outside-log) announce line
+/// Same here: // audit:allow(wall-clock-in-virtual-path) RTT
+fn f() {}
+";
+        let m = SourceModel::lex(src, false);
+        assert!(m.allows.is_empty(), "{:?}", m.allows);
+    }
+
+    #[test]
+    fn cfg_test_region_marks_lines() {
+        let src = "\
+fn real() {}
+#[cfg(test)]
+mod tests {
+    fn t() { x.lock().unwrap(); }
+}
+fn also_real() {}
+";
+        let m = SourceModel::lex(src, false);
+        assert!(!m.is_test_line(1));
+        assert!(m.is_test_line(4));
+        assert!(!m.is_test_line(6));
+    }
+
+    #[test]
+    fn all_test_flag_covers_everything() {
+        let m = SourceModel::lex("fn t() {}\n", true);
+        assert!(m.is_test_line(1));
+    }
+}

@@ -1,0 +1,284 @@
+//! `rudder audit` — a zero-dependency static-analysis pass over this
+//! crate's own sources.
+//!
+//! The repo's core guarantee — every wire/cache/trace counter is a pure
+//! function of config + seed — plus the cluster's shutdown-liveness and
+//! diagnosability invariants are enforced here as *named rules* (see
+//! [`rules::RULES`]) instead of reviewer discipline.  The pass lexes each
+//! file with a comment/string-aware tokenizer ([`lexer::SourceModel`] —
+//! no `syn`, no dependencies), runs every applicable rule, and reports
+//! `file:line: [rule] message` diagnostics.
+//!
+//! # Escape hatch
+//!
+//! A finding that is *intentional* is suppressed with an inline comment
+//! that must carry a justification:
+//!
+//! ```text
+//! let rtt_start = Instant::now(); // audit:allow(wall-clock-in-virtual-path) RTT is wall time
+//! // audit:allow(printing-outside-log) protocol announce parsed by the orchestrator
+//! println!("RUDDER_LISTEN {addr}");
+//! ```
+//!
+//! A trailing comment covers its own line; a comment alone on a line
+//! covers the next code line.  An allow with an empty reason, an unknown
+//! rule name, or one that suppresses nothing is itself a finding — stale
+//! escapes cannot accumulate.
+//!
+//! # Self-hosting
+//!
+//! `rudder audit` (CI job `audit`, blocking) runs the pass over
+//! `rust/src/` + `rust/tests/` and exits nonzero on any finding; the
+//! fixture suite in `rust/tests/audit.rs` pins each rule's fire/quiet/
+//! allow behavior.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+
+pub use lexer::SourceModel;
+pub use rules::{rule_names, Finding, Rule, RULES};
+
+/// Meta-rule names for directive hygiene (always on; reported alongside
+/// the real rules so `--rules`/`--skip-rules` filtering stays simple).
+pub const META_UNUSED_ALLOW: &str = "unused-allow";
+pub const META_MALFORMED_ALLOW: &str = "malformed-allow";
+
+/// Outcome of auditing one source file (or one fixture snippet).
+#[derive(Debug, Default)]
+pub struct FileAudit {
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by a justified `audit:allow`.
+    pub suppressed: usize,
+}
+
+/// Aggregate report over a tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+impl Report {
+    /// Human-readable diagnostics + per-rule summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule, f.message));
+        }
+        let mut by_rule: Vec<(&str, usize)> = Vec::new();
+        for f in &self.findings {
+            match by_rule.iter_mut().find(|(r, _)| *r == f.rule) {
+                Some((_, n)) => *n += 1,
+                None => by_rule.push((f.rule, 1)),
+            }
+        }
+        out.push_str(&format!(
+            "audit: {} file(s), {} finding(s), {} allowed\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressed
+        ));
+        for (rule, n) in by_rule {
+            out.push_str(&format!("  {n:4}  {rule}\n"));
+        }
+        out
+    }
+}
+
+/// Audit one file's source under the enabled rule set.  `path` is the
+/// repo-relative path with `/` separators (`src/cluster/wire.rs`,
+/// `tests/cluster.rs`) — it selects which rules apply and whether the
+/// whole file is test code.
+pub fn check_source(path: &str, src: &str, enabled: &BTreeSet<&str>) -> FileAudit {
+    let all_test = path.starts_with("tests/");
+    let m = SourceModel::lex(src, all_test);
+    let mut raw: Vec<Finding> = Vec::new();
+    for rule in RULES {
+        if enabled.contains(rule.name) && (rule.applies)(path) {
+            raw.extend((rule.check)(rule, path, &m));
+        }
+    }
+
+    let mut out = FileAudit::default();
+    let mut used = vec![false; m.allows.len()];
+    for f in raw {
+        let allow = m.allows.iter().enumerate().find(|(_, a)| {
+            a.rule == f.rule && a.target == f.line && !a.reason.is_empty()
+        });
+        match allow {
+            Some((i, _)) => {
+                used[i] = true;
+                out.suppressed += 1;
+            }
+            None => out.findings.push(f),
+        }
+    }
+
+    // Directive hygiene: every allow must be well-formed and, if its rule
+    // is enabled and applies to this file, must actually suppress
+    // something — otherwise it is stale and gets reported itself.
+    let known = rule_names();
+    for (i, a) in m.allows.iter().enumerate() {
+        if m.is_test_line(a.line) {
+            continue;
+        }
+        if a.rule.is_empty() || !known.contains(&a.rule.as_str()) {
+            out.findings.push(Finding {
+                rule: META_MALFORMED_ALLOW,
+                path: path.to_string(),
+                line: a.line,
+                message: format!("audit:allow names unknown rule '{}'", a.rule),
+            });
+            continue;
+        }
+        if a.reason.is_empty() {
+            out.findings.push(Finding {
+                rule: META_MALFORMED_ALLOW,
+                path: path.to_string(),
+                line: a.line,
+                message: format!(
+                    "audit:allow({}) has no justification — state why the pattern is safe here",
+                    a.rule
+                ),
+            });
+            continue;
+        }
+        let rule = RULES.iter().find(|r| r.name == a.rule.as_str());
+        let applicable = rule.is_some_and(|r| enabled.contains(r.name) && (r.applies)(path));
+        if applicable && !used[i] {
+            out.findings.push(Finding {
+                rule: META_UNUSED_ALLOW,
+                path: path.to_string(),
+                line: a.line,
+                message: format!("audit:allow({}) suppresses nothing — remove it", a.rule),
+            });
+        }
+    }
+    out.findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Run the pass over a crate tree: every `.rs` under `<root>/src` and
+/// `<root>/tests`, in deterministic (sorted) order.
+pub fn run_tree(root: &Path, enabled: &BTreeSet<&str>) -> Result<Report> {
+    let mut report = Report::default();
+    for dir in ["src", "tests"] {
+        let base = root.join(dir);
+        if !base.is_dir() {
+            continue;
+        }
+        for file in rs_files(&base)? {
+            let rel = file
+                .strip_prefix(root)
+                .unwrap_or(&file)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            let src = std::fs::read_to_string(&file)
+                .map_err(|e| crate::err!("audit: read {}: {e}", file.display()))?;
+            let fa = check_source(&rel, &src, enabled);
+            report.files_scanned += 1;
+            report.suppressed += fa.suppressed;
+            report.findings.extend(fa.findings);
+        }
+    }
+    Ok(report)
+}
+
+/// All `.rs` files under `dir`, recursively, sorted by path.
+fn rs_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&d).map_err(|e| crate::err!("audit: read dir {}: {e}", d.display()))?;
+        for entry in entries {
+            let path = entry.map_err(|e| crate::err!("audit: read dir entry: {e}"))?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Resolve the crate root to audit: `--root` wins; otherwise look for
+/// `rust/src` (repo root cwd) then `src` (crate cwd — how `cargo test`
+/// runs).
+pub fn default_root(explicit: Option<&str>) -> Result<PathBuf> {
+    if let Some(r) = explicit {
+        let p = PathBuf::from(r);
+        crate::ensure!(p.join("src").is_dir(), "audit: no src/ under --root {r}");
+        return Ok(p);
+    }
+    for cand in ["rust", "."] {
+        let p = PathBuf::from(cand);
+        if p.join("src").join("lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    crate::bail!("audit: cannot find the crate root (run from the repo root, or pass --root)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_rules() -> BTreeSet<&'static str> {
+        rule_names().into_iter().collect()
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses_and_is_not_stale() {
+        let src = "\
+fn f() {
+    let t = Instant::now(); // audit:allow(wall-clock-in-virtual-path) RTT is wall-domain
+}
+";
+        let fa = check_source("src/sim/run.rs", src, &all_rules());
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+        assert_eq!(fa.suppressed, 1);
+    }
+
+    #[test]
+    fn allow_without_reason_still_fires_plus_meta() {
+        let src = "fn f() { let t = Instant::now(); } // audit:allow(wall-clock-in-virtual-path)\n";
+        let fa = check_source("src/sim/run.rs", src, &all_rules());
+        let rules: Vec<&str> = fa.findings.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&"wall-clock-in-virtual-path"), "{rules:?}");
+        assert!(rules.contains(&META_MALFORMED_ALLOW), "{rules:?}");
+    }
+
+    #[test]
+    fn stale_allow_is_reported() {
+        let src = "// audit:allow(printing-outside-log) nothing prints here\nfn f() {}\n";
+        let fa = check_source("src/cluster/run.rs", src, &all_rules());
+        assert_eq!(fa.findings.len(), 1);
+        assert_eq!(fa.findings[0].rule, META_UNUSED_ALLOW);
+    }
+
+    #[test]
+    fn disabled_rule_does_not_fire_and_its_allows_are_not_stale() {
+        let src = "fn f() { println!(\"x\"); }\n";
+        let only_magic: BTreeSet<&str> = ["ipc-magic-registry"].into_iter().collect();
+        let fa = check_source("src/cluster/run.rs", src, &only_magic);
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+
+    #[test]
+    fn tests_tree_is_exempt() {
+        let src = "fn t() { x.lock().unwrap(); println!(\"y\"); }\n";
+        let fa = check_source("tests/cluster.rs", src, &all_rules());
+        assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    }
+}

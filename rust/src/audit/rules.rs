@@ -1,0 +1,353 @@
+//! The audit rule catalog: each repo invariant as a named, toggleable
+//! check over a [`SourceModel`].
+//!
+//! Rules see the *code view* (comments and string contents blanked), so a
+//! mention of `Instant::now()` in a doc comment or an error message never
+//! fires.  Test-only lines (`#[cfg(test)]` regions, files under `tests/`)
+//! are exempt from every rule: the invariants guard production paths, and
+//! tests legitimately unwrap, print, and forge stale magics.
+
+use super::lexer::SourceModel;
+
+/// One diagnostic: `path:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// A named rule: whether it applies to a file (by repo-relative path with
+/// `/` separators, e.g. `src/cluster/wire.rs`) and the check itself.
+pub struct Rule {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub applies: fn(&str) -> bool,
+    pub check: fn(&Rule, &str, &SourceModel) -> Vec<Finding>,
+}
+
+/// The registry, in reporting order.
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "wall-clock-in-virtual-path",
+        description: "no Instant::now()/SystemTime in virtual-time or prefetch-decision code \
+                      (sim/, trace/, buffer/, massivegnn/, cluster/prefetch.rs)",
+        applies: |p| {
+            p.starts_with("src/sim/")
+                || p.starts_with("src/trace/")
+                || p.starts_with("src/buffer/")
+                || p.starts_with("src/massivegnn/")
+                || p == "src/cluster/prefetch.rs"
+        },
+        check: check_wall_clock,
+    },
+    Rule {
+        name: "unchecked-narrowing-in-codec",
+        description: "no bare `as u32` / `as u16` casts in the wire/ipc/trace codecs \
+                      (use len_u32 / u32::try_from so truncation is an error, not silence)",
+        applies: |p| {
+            p == "src/cluster/wire.rs" || p == "src/cluster/ipc.rs" || p == "src/trace/codec.rs"
+        },
+        check: check_narrowing,
+    },
+    Rule {
+        name: "panicking-lock-in-cluster",
+        description: "no `.unwrap()` on lock/channel/join results in cluster/ runtime code \
+                      (poison-recover, propagate, or `.expect(\"why this cannot fail\")`)",
+        applies: |p| p.starts_with("src/cluster/"),
+        check: check_panicking_lock,
+    },
+    Rule {
+        name: "printing-outside-log",
+        description: "no println!/eprintln! outside util/log.rs, eval/report.rs, main.rs \
+                      (runtime roles must log through crate::log_* so output is gated + prefixed)",
+        applies: |p| {
+            p.starts_with("src/")
+                && p != "src/util/log.rs"
+                && p != "src/eval/report.rs"
+                && p != "src/main.rs"
+        },
+        check: check_printing,
+    },
+    Rule {
+        name: "untimed-condvar-wait",
+        description: "every Condvar wait uses wait_timeout (an untimed wait can hang shutdown \
+                      if the matching notify is lost to a panic or a wedged peer)",
+        applies: |p| p.starts_with("src/"),
+        check: check_condvar,
+    },
+    Rule {
+        name: "ipc-magic-registry",
+        description: "RTR*/RSV*/RHB* protocol magics must come from src/magic.rs, not inline \
+                      literals (so version bumps cannot drift between encoder and decoder)",
+        applies: |p| p.starts_with("src/") && p != "src/magic.rs",
+        check: check_magic,
+    },
+];
+
+pub fn rule_names() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.name).collect()
+}
+
+/// Byte offsets of every match of `needle` in the code view that starts at
+/// a token boundary (previous byte is not an identifier char).
+fn token_hits(code: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(needle) {
+        let at = from + p;
+        let boundary = at == 0
+            || !code.as_bytes()[at - 1].is_ascii_alphanumeric() && code.as_bytes()[at - 1] != b'_';
+        if boundary {
+            out.push(at);
+        }
+        from = at + needle.len();
+    }
+    out
+}
+
+fn non_test_hits(
+    rule: &Rule,
+    path: &str,
+    m: &SourceModel,
+    needle: &str,
+    msg: &str,
+) -> Vec<Finding> {
+    token_hits(&m.code, needle)
+        .into_iter()
+        .map(|at| m.line_of(at))
+        .filter(|&l| !m.is_test_line(l))
+        .map(|line| Finding {
+            rule: rule.name,
+            path: path.to_string(),
+            line,
+            message: msg.to_string(),
+        })
+        .collect()
+}
+
+fn check_wall_clock(rule: &Rule, path: &str, m: &SourceModel) -> Vec<Finding> {
+    let mut out = non_test_hits(
+        rule,
+        path,
+        m,
+        "Instant::now",
+        "wall-clock read in virtual-time/decision code",
+    );
+    out.extend(non_test_hits(rule, path, m, "SystemTime", "SystemTime in virtual-time code"));
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+fn check_narrowing(rule: &Rule, path: &str, m: &SourceModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for needle in ["as u32", "as u16"] {
+        for at in token_hits(&m.code, needle) {
+            // Only flag the cast operator: require the preceding
+            // non-space code to end an expression (`)`, identifier, digit,
+            // or `]`), which every `expr as u32` does.
+            let before = m.code[..at].trim_end();
+            let is_cast = before
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_ascii_alphanumeric() || c == ')' || c == ']' || c == '_');
+            let line = m.line_of(at);
+            if is_cast && !m.is_test_line(line) {
+                out.push(Finding {
+                    rule: rule.name,
+                    path: path.to_string(),
+                    line,
+                    message: format!("bare `{needle}` narrowing in codec code"),
+                });
+            }
+        }
+    }
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+/// Methods whose `Result`/`Option` carries a runtime condition (poisoned
+/// lock, hung-up channel, panicked thread) that cluster code must handle
+/// or justify — a bare `.unwrap()` turns a peer's failure into a cascade.
+const PANICKY_RECEIVERS: &[&str] =
+    &["lock", "recv", "try_recv", "recv_timeout", "send", "join", "wait", "wait_timeout"];
+
+fn check_panicking_lock(rule: &Rule, path: &str, m: &SourceModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for at in token_hits(&m.code, ".unwrap()") {
+        let line = m.line_of(at);
+        if m.is_test_line(line) {
+            continue;
+        }
+        if let Some(recv) = receiver_method(&m.code, at) {
+            if PANICKY_RECEIVERS.contains(&recv.as_str()) {
+                out.push(Finding {
+                    rule: rule.name,
+                    path: path.to_string(),
+                    line,
+                    message: format!(
+                        ".{recv}(..).unwrap() can panic on a peer failure — recover or expect"
+                    ),
+                });
+            }
+        }
+    }
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+/// For `X.method(args).unwrap()` with `.unwrap()` at `at`, walk back over
+/// the balanced `(args)` group and return `method`.
+fn receiver_method(code: &str, at: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut i = at;
+    // Skip whitespace between `)` and `.unwrap` (chained across lines).
+    while i > 0 && b[i - 1].is_ascii_whitespace() {
+        i -= 1;
+    }
+    if i == 0 || b[i - 1] != b')' {
+        return None;
+    }
+    let mut depth = 0i32;
+    while i > 0 {
+        i -= 1;
+        match b[i] {
+            b')' => depth += 1,
+            b'(' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 {
+        return None;
+    }
+    let end = i;
+    while i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_') {
+        i -= 1;
+    }
+    if i == end {
+        return None;
+    }
+    Some(code[i..end].to_string())
+}
+
+fn check_printing(rule: &Rule, path: &str, m: &SourceModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for mac in ["println!", "eprintln!", "print!", "eprint!"] {
+        out.extend(non_test_hits(
+            rule,
+            path,
+            m,
+            mac,
+            &format!("{mac} outside the logging/report/CLI modules"),
+        ));
+    }
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+fn check_condvar(rule: &Rule, path: &str, m: &SourceModel) -> Vec<Finding> {
+    // Only meaningful in files that actually use a Condvar; `.wait(` on
+    // other types (none today) would be noise elsewhere.
+    if !m.code.contains("Condvar") {
+        return Vec::new();
+    }
+    token_hits(&m.code, ".wait(")
+        .into_iter()
+        .map(|at| m.line_of(at))
+        .filter(|&l| !m.is_test_line(l))
+        .map(|line| Finding {
+            rule: rule.name,
+            path: path.to_string(),
+            line,
+            message: "untimed Condvar wait — use wait_timeout so shutdown cannot hang".to_string(),
+        })
+        .collect()
+}
+
+fn check_magic(rule: &Rule, path: &str, m: &SourceModel) -> Vec<Finding> {
+    m.strings
+        .iter()
+        .filter(|s| is_protocol_magic(&s.value))
+        .filter(|s| !m.is_test_line(s.line))
+        .map(|s| Finding {
+            rule: rule.name,
+            path: path.to_string(),
+            line: s.line,
+            message: format!(
+                "inline protocol magic \"{}\" — import it from crate::magic instead",
+                s.value
+            ),
+        })
+        .collect()
+}
+
+/// Exactly the 4-byte `RTR*`/`RSV*`/`RHB*` family (covers `RTRC` too).
+fn is_protocol_magic(s: &str) -> bool {
+    s.len() == 4
+        && (s.starts_with("RTR") || s.starts_with("RSV") || s.starts_with("RHB"))
+        && s.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(rule_name: &str, path: &str, src: &str) -> Vec<Finding> {
+        let rule = RULES.iter().find(|r| r.name == rule_name).unwrap();
+        assert!((rule.applies)(path), "{path} must be in scope for {rule_name}");
+        let m = SourceModel::lex(src, false);
+        (rule.check)(rule, path, &m)
+    }
+
+    #[test]
+    fn receiver_method_walks_back_over_args() {
+        assert_eq!(receiver_method("x.lock().unwrap()", 8).as_deref(), Some("lock"));
+        let multi = "q.recv_timeout(Duration::from_secs(1))\n    .unwrap()";
+        let at = multi.find(".unwrap").unwrap();
+        assert_eq!(receiver_method(multi, at).as_deref(), Some("recv_timeout"));
+        // Plain value unwrap: no call group before it.
+        assert_eq!(receiver_method("opt.unwrap()", 3), None);
+    }
+
+    #[test]
+    fn wall_clock_fires_in_scope_only() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(findings("wall-clock-in-virtual-path", "src/sim/run.rs", src).len(), 1);
+        let rule = RULES.iter().find(|r| r.name == "wall-clock-in-virtual-path").unwrap();
+        assert!(!(rule.applies)("src/cluster/trainer.rs"), "wall stats are wall-clock by design");
+    }
+
+    #[test]
+    fn narrowing_skips_turbofish_and_types() {
+        // `Vec<u32>` or `0u32` must not fire; a real cast must.
+        let ok = "fn f(v: Vec<u32>) -> u32 { 0u32 }\n";
+        assert!(findings("unchecked-narrowing-in-codec", "src/cluster/wire.rs", ok).is_empty());
+        let bad = "fn f(n: usize) -> u32 { n as u32 }\n";
+        assert_eq!(
+            findings("unchecked-narrowing-in-codec", "src/cluster/wire.rs", bad).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn magic_matches_whole_literal_only() {
+        let bad = "const M: &[u8; 4] = b\"RTR9\";\n";
+        assert_eq!(findings("ipc-magic-registry", "src/cluster/ipc.rs", bad).len(), 1);
+        let msg = "fn f() { err(\"bad trace magic (want RTRC)\"); }\n";
+        assert!(findings("ipc-magic-registry", "src/trace/codec.rs", msg).is_empty());
+    }
+
+    #[test]
+    fn condvar_rule_needs_a_condvar_in_scope() {
+        let no_cv = "fn f(rx: Receiver<u8>) { rx.wait(); }\n";
+        assert!(findings("untimed-condvar-wait", "src/cluster/eventloop.rs", no_cv).is_empty());
+        let cv = "use std::sync::Condvar;\nfn f(c: &Condvar, g: G) { let _ = c.wait(g); }\n";
+        assert_eq!(findings("untimed-condvar-wait", "src/cluster/eventloop.rs", cv).len(), 1);
+    }
+}

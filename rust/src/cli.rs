@@ -155,6 +155,18 @@ COMMANDS:
                                     channel/tcp/event runs diff clean)
                with no subcommand: trace-only classifier data collection
                --dataset <name> --out <file.json>
+  audit        self-hosted static analysis: lex rust/src + rust/tests and
+               enforce the repo invariants (wall-clock-free virtual-time
+               code, checked codec narrowing, non-panicking cluster locks,
+               gated logging, timed condvar waits, central magic registry)
+               as named rules with file:line diagnostics; exits non-zero
+               on any finding.  Suppress an intentional site inline with
+               `// audit:allow(rule) reason` (the reason is mandatory;
+               stale or unjustified allows are themselves findings)
+               --list-rules         print the rule catalog
+               --rules a,b          run only these rules
+               --skip-rules a,b     run all but these rules
+               --root <dir>         crate root (default: auto-detect)
   calibrate    measure real PJRT step latency, write configs/calibration.toml
   datasets     list dataset stand-ins (Table 1a)
   models       list LLM agent profiles (Table 1b)

@@ -37,7 +37,7 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -201,6 +201,12 @@ pub(crate) struct WriteQueue {
     waker: Waker,
 }
 
+/// How long a backpressured sender sleeps between re-checks of the queue.
+/// Bounded so a lost wakeup (the draining loop panicking without wedging
+/// the queue first) degrades to polling instead of hanging shutdown —
+/// the `untimed-condvar-wait` audit rule pins this property.
+const ENQUEUE_WAIT_SLICE: Duration = Duration::from_millis(50);
+
 impl WriteQueue {
     fn new(cap: usize, expected_closes: usize, waker: Waker) -> Arc<WriteQueue> {
         Arc::new(WriteQueue {
@@ -217,12 +223,26 @@ impl WriteQueue {
         })
     }
 
+    /// Lock the queue state, recovering from poisoning.  Every mutation
+    /// under this lock keeps `queued_bytes` / `chunks` / `closes`
+    /// consistent before any point that can panic, so the state a
+    /// panicking holder leaves behind is still safe to drain — recovering
+    /// (instead of cascading the panic into every sender and the loop)
+    /// is what lets the survivors flush and shut down cleanly.
+    fn locked(&self) -> MutexGuard<'_, QueueInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Queue one chunk of tagged bytes, blocking while the queue is over
     /// capacity.
     fn enqueue(&self, bytes: Vec<u8>) -> Result<()> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         while q.queued_bytes >= self.cap && !q.wedged {
-            q = self.can_send.wait(q).unwrap();
+            q = self
+                .can_send
+                .wait_timeout(q, ENQUEUE_WAIT_SLICE)
+                .unwrap_or_else(PoisonError::into_inner)
+                .0;
         }
         crate::ensure!(!q.wedged, "eventloop: send on a dead connection");
         q.queued_bytes += bytes.len();
@@ -235,7 +255,7 @@ impl WriteQueue {
     /// Queue a channel-close marker.  Never blocks on capacity — close
     /// paths must always make progress — and is a no-op once wedged.
     fn enqueue_close(&self, channel: u32) {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         if !q.wedged {
             let m = close_marker(channel);
             q.queued_bytes += m.len();
@@ -249,7 +269,7 @@ impl WriteQueue {
     /// Loop side: take up to `max` queued bytes as one coalesced buffer
     /// (always at least one whole chunk), releasing blocked senders.
     fn take_batch(&self, max: usize) -> Vec<u8> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.locked();
         let mut out = Vec::new();
         let mut taken = 0usize;
         while taken < q.chunks.len() {
@@ -271,19 +291,19 @@ impl WriteQueue {
 
     /// Every out-channel closed and nothing left to drain?
     fn fully_closed(&self) -> bool {
-        let q = self.inner.lock().unwrap();
+        let q = self.locked();
         q.closes >= self.expected_closes && q.chunks.is_empty()
     }
 
     /// Kill the queue: senders unblock and error from now on.
     fn wedge(&self) {
-        self.inner.lock().unwrap().wedged = true;
+        self.locked().wedged = true;
         self.can_send.notify_all();
     }
 
     #[cfg(test)]
     fn queued_bytes(&self) -> usize {
-        self.inner.lock().unwrap().queued_bytes
+        self.locked().queued_bytes
     }
 }
 
@@ -558,11 +578,11 @@ fn event_loop(
             if conn.done() {
                 continue;
             }
-            match conn.sweep_write(i as u32, &mut tracer) {
+            match conn.sweep_write(super::id_u32(i), &mut tracer) {
                 Ok(p) => progress |= p,
                 Err(e) => conn.fail(&e),
             }
-            match conn.sweep_read(i as u32, &mut tracer) {
+            match conn.sweep_read(super::id_u32(i), &mut tracer) {
                 Ok(p) => progress |= p,
                 Err(e) => conn.fail(&e),
             }
@@ -638,7 +658,7 @@ pub(crate) fn wire_event_cluster(
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
 
-    let hub_channel = n as u32;
+    let hub_channel = super::id_u32(n);
     let mut conns: Vec<Conn> = Vec::with_capacity(2 * n);
     let mut trainers: Vec<EventTrainerEnd> = Vec::with_capacity(n);
     let mut server_prereg: Vec<Vec<(u32, Box<dyn FrameSender>)>> =
@@ -656,7 +676,7 @@ pub(crate) fn wire_event_cluster(
         }
 
         let links: Vec<LinkStatsHandle> = (0..n)
-            .map(|p| LinkStatsHandle::on_channel(format!("server:{p}"), p as u32))
+            .map(|p| LinkStatsHandle::on_channel(format!("server:{p}"), super::id_u32(p)))
             .chain([LinkStatsHandle::on_channel("hub", hub_channel)])
             .collect();
         let (hub_reply_tx, hub_reply_rx) = mpsc::channel::<Vec<u8>>();
@@ -723,13 +743,13 @@ pub(crate) fn wire_event_cluster(
         // Reply senders ride the switch-side queue, tagged per channel.
         for (p, prereg) in server_prereg.iter_mut().enumerate() {
             prereg.push((
-                t as u32,
-                Box::new(EventFrameSender::new(accept_wq.clone(), p as u32, None))
+                super::id_u32(t),
+                Box::new(EventFrameSender::new(accept_wq.clone(), super::id_u32(p), None))
                     as Box<dyn FrameSender>,
             ));
         }
         hub_prereg.push((
-            t as u32,
+            super::id_u32(t),
             Box::new(EventFrameSender::new(accept_wq.clone(), hub_channel, None)),
         ));
 
@@ -737,7 +757,7 @@ pub(crate) fn wire_event_cluster(
             .map(|p| {
                 Box::new(EventFrameSender::new(
                     dial_wq.clone(),
-                    p as u32,
+                    super::id_u32(p),
                     Some(links[p].clone()),
                 )) as Box<dyn FrameSender>
             })
@@ -764,6 +784,8 @@ pub(crate) fn wire_event_cluster(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)] // test code: panics are the failure report
+
     use super::*;
     use crate::cluster::wire::{Frame, ROLE_TRAINER};
 

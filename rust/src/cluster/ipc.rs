@@ -18,29 +18,30 @@ use crate::metrics::{
 use crate::trace::{codec as trace_codec, TraceEvent};
 use crate::util::stats::LogHistogram;
 
+use super::id_u32;
 use super::server::ServerStats;
 use super::trainer::WallStats;
-use super::wire::{put_u32, put_u64, Reader};
+use super::wire::{len_u32, put_u32, put_u64, Reader};
 
-/// Blob magics (format + version in four bytes).  v4 added the chunk-cache
-/// counters; v3/v2 added the trace sections, the per-owner fetch-latency
-/// histograms, and the link channel ids; stale magics are rejected, not
-/// best-effort parsed.
-const MAGIC_TRAINER: &[u8; 4] = b"RTR4";
-const MAGIC_SERVER: &[u8; 4] = b"RSV2";
-const MAGIC_HUB: &[u8; 4] = b"RHB2";
+// Blob magics (format + version in four bytes) live in [`crate::magic`]
+// with every other protocol magic — `rudder audit` rejects stray magic
+// literals.  v4 added the chunk-cache counters; v3/v2 added the trace
+// sections, the per-owner fetch-latency histograms, and the link channel
+// ids; stale magics are rejected, not best-effort parsed.
+use crate::magic::{IPC_HUB as MAGIC_HUB, IPC_SERVER as MAGIC_SERVER, IPC_TRAINER as MAGIC_TRAINER};
 
 fn put_f64(out: &mut Vec<u8>, v: f64) {
     put_u64(out, v.to_bits());
 }
 
 fn put_bool(out: &mut Vec<u8>, b: bool) {
-    out.push(b as u8);
+    out.push(u8::from(b));
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
-    put_u32(out, s.len() as u32);
+fn put_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    put_u32(out, len_u32(s.len(), "ipc string")?);
     out.extend_from_slice(s.as_bytes());
+    Ok(())
 }
 
 fn get_bool(r: &mut Reader) -> Result<bool> {
@@ -67,9 +68,9 @@ fn check_magic(r: &mut Reader, magic: &[u8; 4], what: &str) -> Result<()> {
 // field-level codecs
 
 fn put_minibatch(out: &mut Vec<u8>, m: &MinibatchRecord) {
-    put_u32(out, m.epoch as u32);
-    put_u32(out, m.minibatch as u32);
-    put_u32(out, m.trainer as u32);
+    put_u32(out, id_u32(m.epoch));
+    put_u32(out, id_u32(m.minibatch));
+    put_u32(out, id_u32(m.trainer));
     put_f64(out, m.hits_pct);
     put_u64(out, m.hits);
     put_u64(out, m.comm_nodes);
@@ -99,7 +100,7 @@ fn get_minibatch(r: &mut Reader) -> Result<MinibatchRecord> {
 }
 
 fn put_decision(out: &mut Vec<u8>, d: &DecisionRecord) {
-    put_u32(out, d.minibatch as u32);
+    put_u32(out, id_u32(d.minibatch));
     put_bool(out, d.replace);
     out.push(match d.prediction {
         None => 0,
@@ -144,19 +145,20 @@ fn get_decision(r: &mut Reader) -> Result<DecisionRecord> {
     })
 }
 
-fn put_metrics(out: &mut Vec<u8>, m: &RunMetrics) {
-    put_u32(out, m.minibatches.len() as u32);
+fn put_metrics(out: &mut Vec<u8>, m: &RunMetrics) -> Result<()> {
+    put_u32(out, len_u32(m.minibatches.len(), "minibatch records")?);
     for mb in &m.minibatches {
         put_minibatch(out, mb);
     }
-    put_u32(out, m.decisions.len() as u32);
+    put_u32(out, len_u32(m.decisions.len(), "decision records")?);
     for d in &m.decisions {
         put_decision(out, d);
     }
-    put_u32(out, m.epoch_times.len() as u32);
+    put_u32(out, len_u32(m.epoch_times.len(), "epoch times")?);
     for &t in &m.epoch_times {
         put_f64(out, t);
     }
+    Ok(())
 }
 
 fn get_metrics(r: &mut Reader) -> Result<RunMetrics> {
@@ -173,9 +175,9 @@ fn get_metrics(r: &mut Reader) -> Result<RunMetrics> {
     Ok(m)
 }
 
-fn put_wall(out: &mut Vec<u8>, w: &WallStats) {
+fn put_wall(out: &mut Vec<u8>, w: &WallStats) -> Result<()> {
     put_f64(out, w.total);
-    put_u32(out, w.epochs.len() as u32);
+    put_u32(out, len_u32(w.epochs.len(), "epoch walls")?);
     for &e in &w.epochs {
         put_f64(out, e);
     }
@@ -183,6 +185,7 @@ fn put_wall(out: &mut Vec<u8>, w: &WallStats) {
     put_f64(out, w.compute);
     put_f64(out, w.barrier);
     put_u64(out, w.minibatches);
+    Ok(())
 }
 
 fn get_wall(r: &mut Reader) -> Result<WallStats> {
@@ -197,11 +200,12 @@ fn get_wall(r: &mut Reader) -> Result<WallStats> {
     Ok(w)
 }
 
-fn put_f64_vec(out: &mut Vec<u8>, v: &[f64]) {
-    put_u32(out, v.len() as u32);
+fn put_f64_vec(out: &mut Vec<u8>, v: &[f64]) -> Result<()> {
+    put_u32(out, len_u32(v.len(), "f64 vec")?);
     for &x in v {
         put_f64(out, x);
     }
+    Ok(())
 }
 
 fn get_f64_vec(r: &mut Reader) -> Result<Vec<f64>> {
@@ -212,11 +216,11 @@ fn get_f64_vec(r: &mut Reader) -> Result<Vec<f64>> {
     Ok(v)
 }
 
-fn put_measured(out: &mut Vec<u8>, m: &MeasuredStats) {
-    put_f64_vec(out, &m.compute_secs);
-    put_f64_vec(out, &m.fetch_wait_secs);
-    put_f64_vec(out, &m.barrier_secs);
-    put_u32(out, m.losses.len() as u32);
+fn put_measured(out: &mut Vec<u8>, m: &MeasuredStats) -> Result<()> {
+    put_f64_vec(out, &m.compute_secs)?;
+    put_f64_vec(out, &m.fetch_wait_secs)?;
+    put_f64_vec(out, &m.barrier_secs)?;
+    put_u32(out, len_u32(m.losses.len(), "losses")?);
     for &l in &m.losses {
         put_u32(out, l.to_bits());
     }
@@ -225,6 +229,7 @@ fn put_measured(out: &mut Vec<u8>, m: &MeasuredStats) {
     put_u64(out, m.rows_fallback);
     put_u64(out, m.grad_bytes);
     put_u64(out, m.param_hash);
+    Ok(())
 }
 
 fn get_measured(r: &mut Reader) -> Result<MeasuredStats> {
@@ -245,14 +250,15 @@ fn get_measured(r: &mut Reader) -> Result<MeasuredStats> {
     Ok(m)
 }
 
-fn put_link(out: &mut Vec<u8>, l: &LinkStats) {
-    put_str(out, &l.peer);
+fn put_link(out: &mut Vec<u8>, l: &LinkStats) -> Result<()> {
+    put_str(out, &l.peer)?;
     put_u32(out, l.channel);
     put_u64(out, l.frames_sent);
     put_u64(out, l.bytes_sent);
     put_u64(out, l.frames_recv);
     put_u64(out, l.bytes_recv);
     put_u64(out, l.reconnects);
+    Ok(())
 }
 
 fn get_link(r: &mut Reader) -> Result<LinkStats> {
@@ -269,16 +275,17 @@ fn get_link(r: &mut Reader) -> Result<LinkStats> {
 
 /// Sparse bucket encoding: most of a log histogram's 128 buckets are
 /// empty, so ship `(index, count)` pairs for the occupied ones only.
-fn put_hist(out: &mut Vec<u8>, h: &LogHistogram) {
+fn put_hist(out: &mut Vec<u8>, h: &LogHistogram) -> Result<()> {
     let counts = h.bucket_counts();
     let nonzero = counts.iter().filter(|&&c| c != 0).count();
-    put_u32(out, nonzero as u32);
+    put_u32(out, len_u32(nonzero, "histogram buckets")?);
     for (i, &c) in counts.iter().enumerate() {
         if c != 0 {
-            put_u32(out, i as u32);
+            put_u32(out, id_u32(i));
             put_u64(out, c);
         }
     }
+    Ok(())
 }
 
 fn get_hist(r: &mut Reader) -> Result<LogHistogram> {
@@ -292,7 +299,7 @@ fn get_hist(r: &mut Reader) -> Result<LogHistogram> {
 }
 
 fn put_trace(out: &mut Vec<u8>, evs: &[TraceEvent]) -> Result<()> {
-    put_u32(out, evs.len() as u32);
+    put_u32(out, len_u32(evs.len(), "trace events")?);
     for e in evs {
         trace_codec::put_event(out, e)?;
     }
@@ -308,7 +315,7 @@ fn get_trace(r: &mut Reader) -> Result<Vec<TraceEvent>> {
     Ok(evs)
 }
 
-fn put_wire(out: &mut Vec<u8>, w: &WireStats) {
+fn put_wire(out: &mut Vec<u8>, w: &WireStats) -> Result<()> {
     put_u64(out, w.req_frames);
     put_u64(out, w.req_bytes);
     put_u64(out, w.resp_frames);
@@ -321,14 +328,15 @@ fn put_wire(out: &mut Vec<u8>, w: &WireStats) {
     put_u64(out, w.chunks_hit);
     put_u64(out, w.chunks_fetched);
     put_u64(out, w.bytes_saved_cache);
-    put_u32(out, w.links.len() as u32);
+    put_u32(out, len_u32(w.links.len(), "links")?);
     for l in &w.links {
-        put_link(out, l);
+        put_link(out, l)?;
     }
-    put_u32(out, w.fetch_latency.len() as u32);
+    put_u32(out, len_u32(w.fetch_latency.len(), "latency histograms")?);
     for h in &w.fetch_latency {
-        put_hist(out, h);
+        put_hist(out, h)?;
     }
+    Ok(())
 }
 
 fn get_wire(r: &mut Reader) -> Result<WireStats> {
@@ -371,10 +379,10 @@ pub fn encode_trainer_result(
 ) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(4096);
     out.extend_from_slice(MAGIC_TRAINER);
-    put_metrics(&mut out, metrics);
-    put_wall(&mut out, wall);
-    put_wire(&mut out, wire);
-    put_measured(&mut out, measured);
+    put_metrics(&mut out, metrics)?;
+    put_wall(&mut out, wall)?;
+    put_wire(&mut out, wire)?;
+    put_measured(&mut out, measured)?;
     put_trace(&mut out, trace)?;
     Ok(out)
 }
@@ -396,7 +404,7 @@ pub fn decode_trainer_result(buf: &[u8]) -> Result<TrainerResult> {
 pub fn encode_server_stats(s: &ServerStats, trace: &[TraceEvent]) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(64);
     out.extend_from_slice(MAGIC_SERVER);
-    put_u32(&mut out, s.part as u32);
+    put_u32(&mut out, id_u32(s.part));
     put_u64(&mut out, s.requests);
     put_u64(&mut out, s.nodes_served);
     put_u64(&mut out, s.bytes_in);
@@ -441,6 +449,8 @@ pub fn decode_hub_result(buf: &[u8]) -> Result<(u64, Vec<TraceEvent>)> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)] // test code: panics are the failure report
+
     use super::*;
     use crate::trace::{EventKind, Role};
 

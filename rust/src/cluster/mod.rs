@@ -135,6 +135,22 @@
 //! `role_end { emitted }` record and gapless per-stream sequence numbers,
 //! so [`crate::trace::Trace::verify_complete`] detects any event silently
 //! dropped at shutdown.
+//!
+//! # Machine-enforced invariants
+//!
+//! The properties this module depends on are checked by `rudder audit`
+//! (see [`crate::audit`]) and by hardened clippy lints below, not by
+//! convention: codec narrowing is checked ([`wire::len_u32`]), cluster
+//! locks recover from poisoning instead of cascading panics, condvar
+//! waits are always timed, and the `RTR*`/`RSV*`/`RHB*` protocol magics
+//! resolve through [`crate::magic`].  A blocking `audit` CI job keeps
+//! these true for future changes.
+
+#![warn(
+    clippy::cast_possible_truncation,
+    clippy::cast_sign_loss,
+    clippy::unwrap_used
+)]
 
 pub mod eventloop;
 pub mod ipc;
@@ -159,3 +175,15 @@ pub use transport::{
     FaultSpec, FrameAssembler, FrameReceiver, FrameSender, LinkStatsHandle, Transport,
 };
 pub use wire::Frame;
+
+/// Narrow a small topology id/count (trainer, partition, channel —
+/// bounded by cluster configuration, far below 2^32) to its `u32` wire
+/// width.  Centralizing the one intentional narrowing keeps
+/// `clippy::cast_possible_truncation` deniable everywhere else; lengths
+/// that an adversarial peer could inflate go through the fallible
+/// [`wire::len_u32`] instead.
+#[allow(clippy::cast_possible_truncation)] // bounded by construction; debug-asserted
+pub(crate) fn id_u32(n: usize) -> u32 {
+    debug_assert!(n <= u32::MAX as usize, "topology id {n} exceeds u32");
+    n as u32
+}

@@ -60,6 +60,7 @@ use super::wire::{Frame, ROLE_HUB, ROLE_SERVER, ROLE_TRAINER};
 /// Announce a bound listener to the orchestrator (must be the first stdout
 /// line a listening worker emits).
 fn announce_listen(listener: &TcpListener) -> Result<()> {
+    // audit:allow(printing-outside-log) protocol line the orchestrator parses from worker stdout
     println!("RUDDER_LISTEN {}", listener.local_addr()?);
     std::io::stdout().flush()?;
     Ok(())
@@ -232,7 +233,7 @@ pub fn run_server_worker(o: &ServerWorkerOpts) -> Result<()> {
     // sit in the accept backlog until serving starts.
     let listener = TcpListener::bind(o.listen.as_str())?;
     announce_listen(&listener)?;
-    let cfg = fetch_config(ROLE_SERVER, o.part as u32, &o.config, &o.results)?;
+    let cfg = fetch_config(ROLE_SERVER, super::id_u32(o.part), &o.config, &o.results)?;
     let (ds, part) = sim::build_cluster(&cfg)?;
     let part = Arc::new(part);
     crate::ensure!(o.part < part.num_parts, "server worker: part {} out of range", o.part);
@@ -257,7 +258,7 @@ pub fn run_server_worker(o: &ServerWorkerOpts) -> Result<()> {
     let _ = accept.join();
     deliver_result(
         ROLE_SERVER,
-        o.part as u32,
+        super::id_u32(o.part),
         ipc::encode_server_stats(&stats, &trace)?,
         &o.results,
         &o.out,
@@ -306,7 +307,7 @@ pub struct TrainerWorkerOpts {
 /// the result blob.
 pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
     crate::util::log::set_role(&format!("trainer-{}", o.part));
-    let cfg = fetch_config(ROLE_TRAINER, o.part as u32, &o.config, &o.results)?;
+    let cfg = fetch_config(ROLE_TRAINER, super::id_u32(o.part), &o.config, &o.results)?;
     let (ds, part) = sim::build_cluster(&cfg)?;
     crate::ensure!(
         o.servers.len() == cfg.num_trainers,
@@ -327,7 +328,7 @@ pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
     let max_mb = sim::max_minibatches_per_epoch(&cfg, &ds, &part);
     let store = Arc::new(FeatureStore::new());
     let (pf_tx, pf_rx) = mpsc::channel();
-    let dial = transport::dial_trainer_links(&o.servers, &o.hub, o.part as u32, &pf_tx)?;
+    let dial = transport::dial_trainer_links(&o.servers, &o.hub, super::id_u32(o.part), &pf_tx)?;
     let pf_handle = spawn_prefetcher(
         o.part,
         store.clone(),
@@ -367,7 +368,7 @@ pub fn run_trainer_worker(o: &TrainerWorkerOpts) -> Result<()> {
     let mut trace = out.trace;
     trace.extend(pf_trace);
     let blob = ipc::encode_trainer_result(&out.metrics, &out.wall, &wire, &out.measured, &trace)?;
-    deliver_result(ROLE_TRAINER, o.part as u32, blob, &o.results, &o.out)
+    deliver_result(ROLE_TRAINER, super::id_u32(o.part), blob, &o.results, &o.out)
 }
 
 // ---------------------------------------------------------------------------
@@ -405,6 +406,7 @@ fn read_listen_addr(child: &mut Child, what: &str) -> Result<String> {
             });
             return Ok(addr);
         }
+        // audit:allow(printing-outside-log) passthrough of a worker's pre-announce stdout lines
         print!("{line}");
     }
 }

@@ -382,9 +382,9 @@ fn wire_channel(
     let link_sets: Vec<Vec<LinkStatsHandle>> = (0..n)
         .map(|_| {
             let mut v: Vec<LinkStatsHandle> = (0..n)
-                .map(|p| LinkStatsHandle::on_channel(format!("server:{p}"), p as u32))
+                .map(|p| LinkStatsHandle::on_channel(format!("server:{p}"), super::id_u32(p)))
                 .collect();
-            v.push(LinkStatsHandle::on_channel("hub", n as u32));
+            v.push(LinkStatsHandle::on_channel("hub", super::id_u32(n)));
             v
         })
         .collect();
@@ -402,7 +402,7 @@ fn wire_channel(
                         PrefetchMsg::Wire,
                         link_sets[t][p].clone(),
                     ));
-                    (t as u32, s)
+                    (super::id_u32(t), s)
                 })
                 .collect();
             spawn_server(
@@ -428,7 +428,7 @@ fn wire_channel(
         let (tx, rx) = mpsc::channel::<Vec<u8>>();
         reply_rxs.push(rx);
         hub_prereg.push((
-            t as u32,
+            super::id_u32(t),
             Box::new(ChannelSender::delivering(tx, |v| v, links[n].clone())),
         ));
     }
@@ -532,7 +532,8 @@ fn wire_tcp(
     for t in 0..n {
         let (pf_tx, pf_rx) = mpsc::channel::<PrefetchMsg>();
         let store = Arc::new(FeatureStore::new());
-        let mut dial = transport::dial_trainer_links(&server_addrs, &hub_addr, t as u32, &pf_tx)?;
+        let mut dial =
+            transport::dial_trainer_links(&server_addrs, &hub_addr, super::id_u32(t), &pf_tx)?;
         aux_handles.append(&mut dial.pumps);
         let pf_handle = spawn_prefetcher(
             t,
@@ -747,7 +748,7 @@ pub(crate) fn hub_loop(
                 EventKind::AllreduceRound {
                     round: rounds,
                     vclock_max: max_vclock,
-                    trainers: n as u32,
+                    trainers: super::id_u32(n),
                 },
             );
             for r in replies.iter_mut().flatten() {

@@ -106,7 +106,7 @@ impl FeatureShard {
         let mut index = FastMap::default();
         let mut rows = vec![0.0f32; owned.len() * feat_dim];
         for (i, &n) in owned.iter().enumerate() {
-            index.insert(n, i as u32);
+            index.insert(n, super::id_u32(i));
             fill_features(feature_seed, n, &mut rows[i * feat_dim..(i + 1) * feat_dim]);
         }
         let n_chunks = owned.len().div_ceil(chunk_rows);
@@ -153,7 +153,7 @@ impl FeatureShard {
         for &n in nodes {
             let Some(&i) = self.index.get(&n) else { continue };
             let c = i as usize / self.chunk_rows;
-            if !seen.insert(c as u32) {
+            if !seen.insert(super::id_u32(c)) {
                 continue;
             }
             let digest = self.chunk_digests[c];
@@ -220,7 +220,7 @@ pub(crate) fn server_loop(
     trace: bool,
 ) -> (ServerStats, Vec<TraceEvent>) {
     let mut stats = ServerStats { part: part_id, ..ServerStats::default() };
-    let mut tracer = Tracer::new(trace, Role::Server, part_id as u32);
+    let mut tracer = Tracer::new(trace, Role::Server, super::id_u32(part_id));
     let shard = FeatureShard::build(&part, part_id, feature_seed, feat_dim, chunk_rows);
     let mut replies: FastMap<u32, Box<dyn FrameSender>> = FastMap::default();
     for (id, s) in prereg {
@@ -269,7 +269,8 @@ pub(crate) fn server_loop(
                     shard.fill(n, &mut feats[i * feat_dim..(i + 1) * feat_dim]);
                 }
                 let served = nodes.len() as u64;
-                let resp = Frame::FetchResp { req_id, feat_dim: feat_dim as u32, nodes, feats };
+                let resp =
+                    Frame::FetchResp { req_id, feat_dim: super::id_u32(feat_dim), nodes, feats };
                 (req_id, from, served, resp.encode())
             }
             Frame::ChunkReq { req_id, from, nodes, have } => {
@@ -279,7 +280,7 @@ pub(crate) fn server_loop(
                 );
                 let (refs, chunks, served) = shard.gather_chunks(&nodes, &have);
                 let resp =
-                    Frame::ChunkResp { req_id, feat_dim: feat_dim as u32, refs, chunks };
+                    Frame::ChunkResp { req_id, feat_dim: super::id_u32(feat_dim), refs, chunks };
                 (req_id, from, served, resp.encode())
             }
             _ => {
@@ -350,6 +351,8 @@ pub(crate) fn spawn_server(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)] // test code: panics are the failure report
+
     use super::*;
     use crate::graph::rmat::{generate, RmatParams};
     use crate::net::NetParams;

@@ -127,7 +127,7 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
     let net = Network::new(cfg.net.clone(), cfg.num_trainers);
     let compute = AnalyticModel::new(cfg.compute.clone(), shape);
     let allreduce = net.allreduce_time(shape.param_bytes());
-    let grads_len = (shape.param_bytes() / 4) as usize;
+    let grads_len = usize::try_from(shape.param_bytes() / 4).expect("param count fits usize");
 
     let mut t = sim::build_trainer(cfg, ds, part, a.part_id, offline);
     t.fetch_plan = Some(FetchPlan::default());
@@ -171,7 +171,7 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
     };
 
     let mut wall = WallStats::default();
-    let mut tracer = Tracer::new(a.trace, Role::Trainer, a.part_id as u32);
+    let mut tracer = Tracer::new(a.trace, Role::Trainer, super::id_u32(a.part_id));
     let mut round: u64 = 0;
     let time_scale = a.compute.time_scale();
     let wait_budget = io_timeout(time_scale);
@@ -192,7 +192,7 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
             let mb_vstart = t.clock;
             tracer.emit(
                 mb_vstart,
-                EventKind::MinibatchBegin { epoch: epoch as u32, mb: mb as u32 },
+                EventKind::MinibatchBegin { epoch: super::id_u32(epoch), mb: super::id_u32(mb) },
             );
             // Deterministic core: sampling, lookup, decision, counters.
             let active = t.step_minibatch(&ctx, epoch, mb, &order);
@@ -311,7 +311,7 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
             //    (zeros on inactive rounds — the replica contributed no
             //    step this round).
             let frame = Frame::Allreduce {
-                part: a.part_id as u32,
+                part: super::id_u32(a.part_id),
                 round,
                 vclock: t.clock,
                 grads,
@@ -358,8 +358,8 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
             tracer.emit(
                 t.clock,
                 EventKind::MinibatchEnd {
-                    epoch: epoch as u32,
-                    mb: mb as u32,
+                    epoch: super::id_u32(epoch),
+                    mb: super::id_u32(mb),
                     step_vsecs: t.clock - mb_vstart,
                 },
             );

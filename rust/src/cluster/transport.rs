@@ -120,8 +120,12 @@ impl LinkStatsHandle {
         s.bytes_recv += bytes as u64;
     }
 
+    /// Lock the counters, recovering from poisoning: every update is a
+    /// few integer increments (no tear-able invariant), so a panic in a
+    /// pump thread must not turn every later stats read into a cascade
+    /// of poisoned-lock panics that hides the original failure.
     pub(crate) fn lock(&self) -> std::sync::MutexGuard<'_, LinkStats> {
-        self.0.lock().unwrap()
+        self.0.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 }
 
@@ -620,7 +624,7 @@ pub(crate) fn dial_trainer_links(
     let mut request_links: Vec<Box<dyn FrameSender>> = Vec::with_capacity(servers.len());
     let mut pumps = Vec::with_capacity(servers.len());
     for (p, addr) in servers.iter().enumerate() {
-        let link = LinkStatsHandle::on_channel(format!("server:{p}"), p as u32);
+        let link = LinkStatsHandle::on_channel(format!("server:{p}"), super::id_u32(p));
         let stream = connect_hello(addr, trainer_id, &link)?;
         let read_half = TcpFrameReceiver::new(stream.try_clone()?, link.clone());
         pumps.push(pump_frames(
@@ -632,7 +636,7 @@ pub(crate) fn dial_trainer_links(
         request_links.push(Box::new(TcpFrameSender::new(stream, link.clone())));
         links.push(link);
     }
-    let hub_link = LinkStatsHandle::on_channel("hub", servers.len() as u32);
+    let hub_link = LinkStatsHandle::on_channel("hub", super::id_u32(servers.len()));
     let hub_stream = connect_hello(hub, trainer_id, &hub_link)?;
     let hub_rx: Box<dyn FrameReceiver> =
         Box::new(TcpFrameReceiver::new(hub_stream.try_clone()?, hub_link.clone()));
@@ -776,6 +780,8 @@ impl Drop for FaultSender {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)] // test code: panics are the failure report
+
     use super::*;
     use std::sync::mpsc;
 

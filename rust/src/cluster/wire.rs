@@ -96,7 +96,10 @@ pub enum Frame {
 
 /// Checked `usize → u32` for vector length fields: a count that does not
 /// fit the wire's `u32` is an encode-time error, never a silent wrap.
-fn len_u32(n: usize, what: &str) -> Result<u32> {
+/// Shared with the [`super::ipc`] and [`crate::trace::codec`] encoders so
+/// every codec narrows through one checked path (the
+/// `unchecked-narrowing-in-codec` audit rule pins this).
+pub(crate) fn len_u32(n: usize, what: &str) -> Result<u32> {
     u32::try_from(n).map_err(|_| crate::err!("wire: {what} length {n} exceeds u32 on encode"))
 }
 
@@ -198,7 +201,7 @@ impl Frame {
             body.len()
         );
         let mut out = Vec::with_capacity(4 + body.len());
-        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&len_u32(body.len(), "frame body")?.to_le_bytes());
         out.extend_from_slice(&body);
         Ok(out)
     }
@@ -435,6 +438,8 @@ impl<'a> Reader<'a> {
 // This module keeps only a round-trip smoke for unit-test granularity.
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)] // test code: panics are the failure report
+
     use super::*;
 
     #[test]

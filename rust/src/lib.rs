@@ -31,10 +31,12 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod agent;
+pub mod audit;
 pub mod cli;
 pub mod buffer;
 pub mod cluster;
 pub mod error;
+pub mod magic;
 pub mod classifier;
 pub mod config;
 pub mod eval;

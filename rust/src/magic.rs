@@ -1,0 +1,23 @@
+//! Protocol magic registry: the single home of every 4-byte `RTR*` /
+//! `RSV*` / `RHB*` identification constant.
+//!
+//! Encoders and decoders must import these — never inline the literal —
+//! so a format version bump edits exactly one line and cannot drift
+//! between the two sides.  The `ipc-magic-registry` audit rule
+//! (`rudder audit`) machine-enforces this: any inline literal matching
+//! the family outside this module is a finding.  (Tests that forge stale
+//! magics to prove decoders reject them are exempt, as all test code is.)
+//!
+//! The trailing character is the format version: bump it whenever the
+//! payload layout changes so a stale peer fails loudly at the magic
+//! check instead of misparsing.
+
+/// Trainer result blob ([`crate::cluster::ipc`]), layout v4.
+pub const IPC_TRAINER: &[u8; 4] = b"RTR4";
+/// Feature-server result blob ([`crate::cluster::ipc`]), layout v2.
+pub const IPC_SERVER: &[u8; 4] = b"RSV2";
+/// Allreduce-hub result blob ([`crate::cluster::ipc`]), layout v2.
+pub const IPC_HUB: &[u8; 4] = b"RHB2";
+/// Binary flight-recorder trace ([`crate::trace::codec`]); versioned by
+/// the `u32` that follows it rather than by the magic itself.
+pub const TRACE: &[u8; 4] = b"RTRC";

@@ -41,6 +41,7 @@ fn main() {
         }
     };
     let result = match args.subcommand.as_str() {
+        "audit" => cmd_audit(&args),
         "train" => cmd_train(&args),
         "cluster" => cmd_cluster(&args),
         "bench" => cmd_bench(&args),
@@ -63,6 +64,48 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// `rudder audit`: self-hosted static analysis (see [`rudder::audit`]).
+/// Exits nonzero (via the `Err` return) on any finding.
+fn cmd_audit(args: &Args) -> rudder::error::Result<()> {
+    use rudder::audit;
+    if args.flag("list-rules") {
+        for r in audit::RULES {
+            println!("{:<28} {}", r.name, r.description);
+        }
+        return Ok(());
+    }
+    let all = audit::rule_names();
+    let mut enabled: std::collections::BTreeSet<&str> = all.iter().copied().collect();
+    let pick = |csv: &str| -> rudder::error::Result<Vec<String>> {
+        let names: Vec<String> = csv.split(',').map(|s| s.trim().to_string()).collect();
+        for n in &names {
+            rudder::ensure!(
+                all.contains(&n.as_str()),
+                "unknown audit rule '{n}' (see rudder audit --list-rules)"
+            );
+        }
+        Ok(names)
+    };
+    if let Some(csv) = args.opt("rules") {
+        let keep = pick(csv)?;
+        enabled.retain(|r| keep.iter().any(|k| k == r));
+    }
+    if let Some(csv) = args.opt("skip-rules") {
+        for n in pick(csv)? {
+            enabled.retain(|r| *r != n);
+        }
+    }
+    let root = audit::default_root(args.opt("root"))?;
+    let report = audit::run_tree(&root, &enabled)?;
+    print!("{}", report.render());
+    rudder::ensure!(
+        report.findings.is_empty(),
+        "audit failed: {} finding(s)",
+        report.findings.len()
+    );
+    Ok(())
 }
 
 fn config_from_args(args: &Args) -> rudder::error::Result<RunConfig> {

@@ -12,14 +12,15 @@
 //!   floats are finite (enforced at encode), so JSON numbers — shortest
 //!   round-trip decimals — reproduce every bit.
 
-use crate::cluster::wire::{put_u32, put_u64, Reader};
+use crate::cluster::wire::{len_u32, put_u32, put_u64, Reader};
 use crate::error::Result;
 use crate::util::json::Json;
 
 use super::{norm_f64, EventKind, Role, Trace, TraceEvent, TraceMeta};
 
-/// Binary trace magic (also the sniff key in [`Trace::read_file`]).
-pub const MAGIC: &[u8] = b"RTRC";
+/// Binary trace magic (also the sniff key in [`Trace::read_file`]),
+/// resolved through the central [`crate::magic`] registry.
+pub const MAGIC: &[u8] = crate::magic::TRACE;
 /// Binary format version.
 pub const VERSION: u32 = 1;
 /// JSONL header `format` value.
@@ -37,9 +38,10 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
     put_u64(out, v.to_bits());
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
-    put_u32(out, s.len() as u32);
+fn put_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    put_u32(out, len_u32(s.len(), "trace string")?);
     out.extend_from_slice(s.as_bytes());
+    Ok(())
 }
 
 fn get_str(r: &mut Reader<'_>) -> Result<String> {
@@ -177,7 +179,7 @@ pub(crate) fn put_event(out: &mut Vec<u8>, e: &TraceEvent) -> Result<()> {
     put_f64(&mut buf, e.vclock);
     put_f64(&mut buf, e.wall);
     encode_kind(&mut buf, &e.kind);
-    put_u32(out, buf.len() as u32);
+    put_u32(out, len_u32(buf.len(), "trace event")?);
     out.extend_from_slice(&buf);
     Ok(())
 }
@@ -218,10 +220,10 @@ pub fn encode_binary(t: &Trace) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(64 + t.events.len() * 48);
     out.extend_from_slice(MAGIC);
     put_u32(&mut out, VERSION);
-    put_str(&mut out, &t.meta.label);
+    put_str(&mut out, &t.meta.label)?;
     put_u64(&mut out, t.meta.seed);
-    put_str(&mut out, &t.meta.transport);
-    put_str(&mut out, &t.meta.compute);
+    put_str(&mut out, &t.meta.transport)?;
+    put_str(&mut out, &t.meta.compute)?;
     put_u64(&mut out, t.events.len() as u64);
     for e in &t.events {
         put_event(&mut out, e)?;
@@ -430,6 +432,9 @@ pub fn to_jsonl(t: &Trace) -> Result<String> {
     Ok(out)
 }
 
+// The one intentional float→int narrowing: the ensure above pins `n` to
+// a non-negative integral value ≤ 2^53, so the cast is exact.
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
 fn want_u64(j: &Json, key: &str) -> Result<u64> {
     let n = j
         .get(key)
@@ -444,8 +449,7 @@ fn want_u64(j: &Json, key: &str) -> Result<u64> {
 
 fn want_u32(j: &Json, key: &str) -> Result<u32> {
     let v = want_u64(j, key)?;
-    crate::ensure!(v <= u32::MAX as u64, "trace jsonl: field '{key}' = {v} exceeds u32");
-    Ok(v as u32)
+    u32::try_from(v).map_err(|_| crate::err!("trace jsonl: field '{key}' = {v} exceeds u32"))
 }
 
 fn want_f64(j: &Json, key: &str) -> Result<f64> {
@@ -581,6 +585,8 @@ pub fn from_jsonl(text: &str) -> Result<Trace> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)] // test code: panics are the failure report
+
     use super::*;
 
     fn sample() -> Trace {

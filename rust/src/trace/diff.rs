@@ -142,7 +142,7 @@ pub fn diff(a: &Trace, b: &Trace) -> DiffReport {
         let sb = mb.get(&k).unwrap_or(&empty);
         let ca: u64 = sa.values().sum();
         let cb: u64 = sb.values().sum();
-        report.events += ca.max(cb) as usize;
+        report.events += usize::try_from(ca.max(cb)).unwrap_or(usize::MAX);
         if sa == sb {
             continue;
         }
@@ -182,6 +182,8 @@ pub fn diff(a: &Trace, b: &Trace) -> DiffReport {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)] // test code: panics are the failure report
+
     use super::*;
     use crate::trace::TraceMeta;
 

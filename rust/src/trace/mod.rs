@@ -27,6 +27,17 @@
 //! normalized to `0.0`, so every field round-trips bit-exactly through
 //! both codecs (JSON numbers are IEEE doubles; the writer emits shortest
 //! round-trip decimals).
+//!
+//! These invariants are machine-enforced: `rudder audit`
+//! ([`crate::audit`]) rejects wall clocks feeding virtual fields, bare
+//! narrowing casts in [`codec`], and magic literals outside
+//! [`crate::magic`]; the clippy lints below harden the rest.
+
+#![warn(
+    clippy::cast_possible_truncation,
+    clippy::cast_sign_loss,
+    clippy::unwrap_used
+)]
 
 pub mod codec;
 pub mod diff;
@@ -234,6 +245,7 @@ pub struct Tracer {
 
 impl Tracer {
     pub fn new(enabled: bool, role: Role, id: u32) -> Tracer {
+        // audit:allow(wall-clock-in-virtual-path) anchors the wall field only; vclock stays virtual
         Tracer { enabled, role, id, start: Instant::now(), seq: 0, events: Vec::new() }
     }
 
@@ -374,6 +386,8 @@ impl Trace {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)] // test code: panics are the failure report
+
     use super::*;
 
     #[test]

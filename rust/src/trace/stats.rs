@@ -244,6 +244,8 @@ pub fn render_all(t: &Trace) -> Vec<Table> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)] // test code: panics are the failure report
+
     use super::*;
     use crate::trace::{TraceEvent, TraceMeta};
 

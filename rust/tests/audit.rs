@@ -1,0 +1,316 @@
+//! Fixture suite for `rudder audit` (`src/audit/`): every rule gets a
+//! bad snippet that fires (with the right rule tag and line), a good
+//! snippet that stays quiet, and an `audit:allow` that suppresses — plus
+//! the directive-hygiene meta rules and a self-hosting check that the
+//! shipped tree audits clean.
+//!
+//! This file lives under `tests/`, so the self-host run sees every bad
+//! fixture below as test code and (correctly) ignores it.
+
+use std::collections::BTreeSet;
+
+use rudder::audit::{
+    check_source, default_root, run_tree, rule_names, Finding, META_MALFORMED_ALLOW,
+    META_UNUSED_ALLOW,
+};
+
+fn all_rules() -> BTreeSet<&'static str> {
+    rule_names().into_iter().collect()
+}
+
+/// Audit `src` as if it were the file at `path`, with every rule on.
+fn audit(path: &str, src: &str) -> Vec<Finding> {
+    check_source(path, src, &all_rules()).findings
+}
+
+fn assert_fires(path: &str, src: &str, rule: &str, line: usize) {
+    let fs = audit(path, src);
+    assert!(
+        fs.iter().any(|f| f.rule == rule && f.line == line),
+        "expected [{rule}] at {path}:{line}, got {fs:?}"
+    );
+}
+
+fn assert_quiet(path: &str, src: &str) {
+    let fs = audit(path, src);
+    assert!(fs.is_empty(), "expected no findings for {path}, got {fs:?}");
+}
+
+// ---- rule 1: wall-clock-in-virtual-path --------------------------------
+
+#[test]
+fn wall_clock_bad_fires() {
+    let src = "fn step() {\n    let t = Instant::now();\n}\n";
+    assert_fires("src/sim/run.rs", src, "wall-clock-in-virtual-path", 2);
+    assert_fires("src/cluster/prefetch.rs", src, "wall-clock-in-virtual-path", 2);
+    let st = "fn f() { let t = SystemTime::now(); }\n";
+    assert_fires("src/trace/mod.rs", st, "wall-clock-in-virtual-path", 1);
+}
+
+#[test]
+fn wall_clock_good_is_quiet() {
+    // Virtual clocks and doc-comment mentions never fire.
+    let src = "/// Unlike Instant::now(), vclock ticks are deterministic.\n\
+               fn step(vclock: &mut u64) { *vclock += 1; }\n";
+    assert_quiet("src/sim/run.rs", src);
+    // Out-of-scope files may read the wall clock freely.
+    let wall = "fn f() { let t = Instant::now(); }\n";
+    assert_quiet("src/cluster/trainer.rs", wall);
+}
+
+#[test]
+fn wall_clock_allow_suppresses() {
+    let src = "fn f() {\n    let t = Instant::now(); \
+               // audit:allow(wall-clock-in-virtual-path) RTT is wall-domain by definition\n}\n";
+    let fa = check_source("src/sim/run.rs", src, &all_rules());
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    assert_eq!(fa.suppressed, 1);
+}
+
+// ---- rule 2: unchecked-narrowing-in-codec ------------------------------
+
+#[test]
+fn narrowing_bad_fires() {
+    let src = "fn put(out: &mut Vec<u8>, n: usize) {\n    \
+               out.extend_from_slice(&(n as u32).to_le_bytes());\n}\n";
+    assert_fires("src/cluster/wire.rs", src, "unchecked-narrowing-in-codec", 2);
+    assert_fires("src/cluster/ipc.rs", src, "unchecked-narrowing-in-codec", 2);
+    let u16src = "fn f(n: usize) -> u16 { n as u16 }\n";
+    assert_fires("src/trace/codec.rs", u16src, "unchecked-narrowing-in-codec", 1);
+}
+
+#[test]
+fn narrowing_good_is_quiet() {
+    // Checked conversions, type ascriptions, and literals are all fine.
+    let src = "fn put(out: &mut Vec<u8>, n: usize) -> Result<(), E> {\n    \
+               let len: u32 = u32::try_from(n).map_err(|_| E)?;\n    \
+               out.extend_from_slice(&len.to_le_bytes());\n    \
+               let _zero = 0u32;\n    Ok(())\n}\n";
+    assert_quiet("src/cluster/wire.rs", src);
+    // Out of the three codec files, `as u32` is clippy's business, not ours.
+    let cast = "fn f(n: usize) -> u32 { n as u32 }\n";
+    assert_quiet("src/cluster/server.rs", cast);
+}
+
+#[test]
+fn narrowing_allow_suppresses() {
+    let src = "fn f(n: usize) -> u32 {\n    n as u32 \
+               // audit:allow(unchecked-narrowing-in-codec) bounded by header validation above\n}\n";
+    let fa = check_source("src/cluster/wire.rs", src, &all_rules());
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    assert_eq!(fa.suppressed, 1);
+}
+
+// ---- rule 3: panicking-lock-in-cluster ---------------------------------
+
+#[test]
+fn panicking_lock_bad_fires() {
+    let src = "fn f(m: &Mutex<u32>) {\n    let g = m.lock().unwrap();\n}\n";
+    assert_fires("src/cluster/transport.rs", src, "panicking-lock-in-cluster", 2);
+    let recv = "fn f(rx: &Receiver<u8>) {\n    let v = rx\n        .recv_timeout(D)\n        .unwrap();\n}\n";
+    assert_fires("src/cluster/eventloop.rs", recv, "panicking-lock-in-cluster", 4);
+}
+
+#[test]
+fn panicking_lock_good_is_quiet() {
+    // Poison recovery, propagation, and justified expects all pass; so do
+    // unwraps of non-channel results (Option math, parse, etc.).
+    let src = "fn f(m: &Mutex<u32>, rx: &Receiver<u8>) -> Result<u8, E> {\n    \
+               let g = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);\n    \
+               let v = rx.recv().map_err(|_| E)?;\n    \
+               let n = \"7\".parse::<u8>().unwrap();\n    Ok(v + n)\n}\n";
+    assert_quiet("src/cluster/transport.rs", src);
+    // Outside cluster/, lock-unwrap style is not this rule's business.
+    let elsewhere = "fn f(m: &Mutex<u32>) { let g = m.lock().unwrap(); }\n";
+    assert_quiet("src/gnn/mod.rs", elsewhere);
+}
+
+#[test]
+fn panicking_lock_allow_suppresses() {
+    let src = "fn f(m: &Mutex<u32>) {\n    let g = m.lock().unwrap(); \
+               // audit:allow(panicking-lock-in-cluster) single-threaded setup, no poisoner exists\n}\n";
+    let fa = check_source("src/cluster/run.rs", src, &all_rules());
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    assert_eq!(fa.suppressed, 1);
+}
+
+// ---- rule 4: printing-outside-log --------------------------------------
+
+#[test]
+fn printing_bad_fires() {
+    let src = "fn f() {\n    println!(\"hello\");\n}\n";
+    assert_fires("src/cluster/server.rs", src, "printing-outside-log", 2);
+    let e = "fn f() { eprintln!(\"oops\"); }\n";
+    assert_fires("src/trace/mod.rs", e, "printing-outside-log", 1);
+}
+
+#[test]
+fn printing_good_is_quiet() {
+    // The logging macro itself and the allowlisted modules are exempt.
+    let src = "fn f() { crate::log_info!(\"hello\"); }\n";
+    assert_quiet("src/cluster/server.rs", src);
+    let in_main = "fn main() { println!(\"usage: ...\"); }\n";
+    assert_quiet("src/main.rs", in_main);
+    assert_quiet("src/util/log.rs", "fn f() { eprintln!(\"[rudder] x\"); }\n");
+}
+
+#[test]
+fn printing_allow_suppresses() {
+    let src = "// audit:allow(printing-outside-log) protocol line parsed by the orchestrator\n\
+               fn announce() { println!(\"RUDDER_LISTEN 1\"); }\n";
+    let fa = check_source("src/cluster/multiproc.rs", src, &all_rules());
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    assert_eq!(fa.suppressed, 1);
+}
+
+// ---- rule 5: untimed-condvar-wait --------------------------------------
+
+#[test]
+fn condvar_bad_fires() {
+    let src = "use std::sync::Condvar;\nfn f(cv: &Condvar, g: G) {\n    let g = cv.wait(g);\n}\n";
+    assert_fires("src/cluster/prefetch.rs", src, "untimed-condvar-wait", 3);
+}
+
+#[test]
+fn condvar_good_is_quiet() {
+    let src = "use std::sync::Condvar;\nfn f(cv: &Condvar, g: G) {\n    \
+               let (g, _) = cv.wait_timeout(g, D).unwrap_or_else(|p| p.into_inner());\n}\n";
+    assert_quiet("src/cluster/prefetch.rs", src);
+    // `.wait(` on a process handle in a Condvar-free file is not a Condvar wait.
+    let child = "fn f(mut c: Child) { let _ = c.wait(); }\n";
+    assert_quiet("src/cluster/multiproc.rs", child);
+}
+
+#[test]
+fn condvar_allow_suppresses() {
+    let src = "use std::sync::Condvar;\nfn f(cv: &Condvar, g: G) {\n    let g = cv.wait(g); \
+               // audit:allow(untimed-condvar-wait) notifier runs on this thread's panic path too\n}\n";
+    let fa = check_source("src/cluster/prefetch.rs", src, &all_rules());
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    assert_eq!(fa.suppressed, 1);
+}
+
+// ---- rule 6: ipc-magic-registry ----------------------------------------
+
+#[test]
+fn magic_bad_fires() {
+    let src = "fn encode(out: &mut Vec<u8>) {\n    out.extend_from_slice(b\"RTR4\");\n}\n";
+    assert_fires("src/cluster/ipc.rs", src, "ipc-magic-registry", 2);
+    let hub = "const M: &[u8; 4] = b\"RHB2\";\n";
+    assert_fires("src/cluster/eventloop.rs", hub, "ipc-magic-registry", 1);
+    let trace = "fn f() -> &'static str { \"RTRC\" }\n";
+    assert_fires("src/trace/codec.rs", trace, "ipc-magic-registry", 1);
+}
+
+#[test]
+fn magic_good_is_quiet() {
+    // Imports from the registry and longer human-readable strings pass.
+    let src = "use crate::magic::IPC_TRAINER;\n\
+               fn encode(out: &mut Vec<u8>) { out.extend_from_slice(IPC_TRAINER); }\n\
+               fn err() -> &'static str { \"bad trace magic (want RTRC)\" }\n";
+    assert_quiet("src/cluster/ipc.rs", src);
+    // src/magic.rs is the registry — its own literals are the definitions.
+    assert_quiet("src/magic.rs", "pub const IPC_TRAINER: &[u8; 4] = b\"RTR4\";\n");
+}
+
+#[test]
+fn magic_allow_suppresses() {
+    let src = "// audit:allow(ipc-magic-registry) forged stale magic for the version-skew probe\n\
+               const STALE: &[u8; 4] = b\"RTR1\";\n";
+    let fa = check_source("src/cluster/ipc.rs", src, &all_rules());
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    assert_eq!(fa.suppressed, 1);
+}
+
+// ---- directive hygiene (meta rules) ------------------------------------
+
+#[test]
+fn allow_without_reason_is_malformed_and_does_not_suppress() {
+    let src = "fn f() {\n    let t = Instant::now(); // audit:allow(wall-clock-in-virtual-path)\n}\n";
+    let fs = audit("src/sim/run.rs", src);
+    let rules: Vec<&str> = fs.iter().map(|f| f.rule).collect();
+    assert!(rules.contains(&"wall-clock-in-virtual-path"), "{rules:?}");
+    assert!(rules.contains(&META_MALFORMED_ALLOW), "{rules:?}");
+}
+
+#[test]
+fn allow_of_unknown_rule_is_malformed() {
+    let src = "// audit:allow(no-such-rule) misremembered the name\nfn f() {}\n";
+    let fs = audit("src/cluster/run.rs", src);
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, META_MALFORMED_ALLOW);
+}
+
+#[test]
+fn doc_comment_mention_is_not_a_directive() {
+    // A rendered `audit:allow` example in rustdoc must neither suppress
+    // anything nor count as a (stale) allow.
+    let src = "//! e.g. `// audit:allow(printing-outside-log) announce`\nfn f() {}\n";
+    let fa = check_source("src/cluster/run.rs", src, &all_rules());
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    assert_eq!(fa.suppressed, 0);
+}
+
+#[test]
+fn stale_allow_is_reported() {
+    let src = "// audit:allow(printing-outside-log) this used to print\nfn f() {}\n";
+    let fs = audit("src/cluster/run.rs", src);
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].rule, META_UNUSED_ALLOW);
+}
+
+#[test]
+fn own_line_allow_covers_next_code_line() {
+    let src = "fn f() {\n    // audit:allow(printing-outside-log) status line for the smoke driver\n    \
+               println!(\"x\");\n}\n";
+    let fa = check_source("src/cluster/server.rs", src, &all_rules());
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+    assert_eq!(fa.suppressed, 1);
+}
+
+// ---- rule selection and test exemption ---------------------------------
+
+#[test]
+fn disabled_rules_do_not_fire() {
+    let src = "fn f() { println!(\"x\"); let t = Instant::now(); }\n";
+    let only_magic: BTreeSet<&str> = ["ipc-magic-registry"].into_iter().collect();
+    let fa = check_source("src/sim/run.rs", src, &only_magic);
+    assert!(fa.findings.is_empty(), "{:?}", fa.findings);
+}
+
+#[test]
+fn cfg_test_region_is_exempt() {
+    let src = "fn prod() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n    fn t(m: &Mutex<u8>) { m.lock().unwrap(); println!(\"y\"); }\n}\n";
+    assert_quiet("src/cluster/transport.rs", src);
+}
+
+#[test]
+fn tests_tree_is_exempt() {
+    let src = "fn t(m: &Mutex<u8>) { m.lock().unwrap(); println!(\"y\"); let x = 1 as u32; }\n";
+    assert_quiet("tests/cluster.rs", src);
+}
+
+// ---- self-hosting ------------------------------------------------------
+
+/// The shipped tree must audit clean with every rule enabled: each
+/// remaining wall-clock read, print, or magic literal is either fixed or
+/// carries a justified `audit:allow`.  This is the same invariant the
+/// blocking `audit` CI job enforces via the CLI.
+#[test]
+fn shipped_tree_audits_clean() {
+    // `cargo test` runs with the crate as cwd; `default_root` also covers
+    // invocation from the repo root.  Fall back to CARGO_MANIFEST_DIR for
+    // harnesses that run the binary elsewhere.
+    let root = default_root(None)
+        .unwrap_or_else(|_| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let report = run_tree(&root, &all_rules()).expect("audit pass over the real tree");
+    assert!(report.files_scanned > 30, "suspiciously few files: {}", report.files_scanned);
+    assert!(
+        report.findings.is_empty(),
+        "the shipped tree must audit clean:\n{}",
+        report.render()
+    );
+    assert!(report.suppressed > 0, "the justified allows in cluster/ and trace/ should register");
+}
