@@ -32,10 +32,11 @@ pub const RULES: &[Rule] = &[
     Rule {
         name: "wall-clock-in-virtual-path",
         description: "no Instant::now()/SystemTime in virtual-time or prefetch-decision code \
-                      (sim/, trace/, buffer/, massivegnn/, cluster/prefetch.rs)",
+                      (sim/, trace/, replay/, buffer/, massivegnn/, cluster/prefetch.rs)",
         applies: |p| {
             p.starts_with("src/sim/")
                 || p.starts_with("src/trace/")
+                || p.starts_with("src/replay/")
                 || p.starts_with("src/buffer/")
                 || p.starts_with("src/massivegnn/")
                 || p == "src/cluster/prefetch.rs"

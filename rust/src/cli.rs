@@ -155,6 +155,27 @@ COMMANDS:
                                     channel/tcp/event runs diff clean)
                with no subcommand: trace-only classifier data collection
                --dataset <name> --out <file.json>
+  replay       re-drive a recorded trace through the sim state machine
+               offline (no cluster, no threads, no wall clocks):
+               --trace <file>       recorded trace (required; the run must
+                                    have been recorded by a build that
+                                    embeds the config + sample demand)
+               --check              replay under the recorded config and
+                                    fail unless the re-emitted virtual
+                                    streams are bit-identical to the
+                                    recording (emulated-compute traces
+                                    only; record with --time-scale 0)
+               --controller <s> --buffer <f> --chunk-rows <n>
+               --chunk-cache <b>    what-if overrides: re-evaluate the
+                                    recorded demand under a changed
+                                    policy; writes the schema-stable
+                                    rudder-replay-whatif/v1 report
+               --json <file>        report path (default
+                                    REPLAY_whatif.json when a what-if or
+                                    sweep runs)
+               replay sweep --trace <file> --controllers a,b,..
+               --buffers f1,f2,..   fan one trace across a controller ×
+                                    buffer grid in one process
   audit        self-hosted static analysis: lex rust/src + rust/tests and
                enforce the repo invariants (wall-clock-free virtual-time
                code, checked codec narrowing, non-panicking cluster locks,

@@ -670,6 +670,7 @@ pub fn run_cluster_multiproc(
             seed: cfg.seed,
             transport: ccfg.transport.name().to_string(),
             compute: ccfg.compute.name().to_string(),
+            config: crate::config::to_toml(cfg)?,
         });
         t.events = trace_events;
         t.sort_canonical();

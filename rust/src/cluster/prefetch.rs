@@ -229,14 +229,16 @@ impl FeatureStore {
 /// Chunk layout of one owner partition, derived from
 /// [`Partition::local_nodes`]: node → local row index, with chunk `c`
 /// covering local rows `[c·chunk_rows, (c+1)·chunk_rows)`.
-struct ChunkLayout {
+/// `pub(crate)` so [`crate::replay`] can model the same command-time
+/// hit/miss decisions offline.
+pub(crate) struct ChunkLayout {
     chunk_rows: usize,
     total: usize,
     local_idx: FastMap<u32, u32>,
 }
 
 impl ChunkLayout {
-    fn build(owned: &[u32], chunk_rows: usize) -> ChunkLayout {
+    pub(crate) fn build(owned: &[u32], chunk_rows: usize) -> ChunkLayout {
         let mut local_idx = FastMap::default();
         for (i, &n) in owned.iter().enumerate() {
             local_idx.insert(n, id_u32(i));
@@ -245,13 +247,13 @@ impl ChunkLayout {
     }
 
     /// `(chunk id, row offset within the chunk)` of `node`, if owned.
-    fn slot_of(&self, node: u32) -> Option<(u32, usize)> {
+    pub(crate) fn slot_of(&self, node: u32) -> Option<(u32, usize)> {
         let i = *self.local_idx.get(&node)? as usize;
         Some((id_u32(i / self.chunk_rows), i % self.chunk_rows))
     }
 
     /// Rows in chunk `c` (the last chunk of a partition may be short).
-    fn rows_in(&self, chunk: u32) -> usize {
+    pub(crate) fn rows_in(&self, chunk: u32) -> usize {
         let start = chunk as usize * self.chunk_rows;
         self.chunk_rows.min(self.total.saturating_sub(start))
     }
@@ -260,7 +262,7 @@ impl ChunkLayout {
 /// Wire payload-byte estimate of one cached chunk: digest + per-row node
 /// id + row floats (what [`Frame::ChunkResp`] pays per chunk, and what a
 /// hit therefore saves).
-fn chunk_wire_bytes(rows: usize, dim: usize) -> u64 {
+pub(crate) fn chunk_wire_bytes(rows: usize, dim: usize) -> u64 {
     8 + rows as u64 * (4 + 4 * dim as u64)
 }
 
@@ -277,7 +279,7 @@ struct ChunkEntry {
 /// arrival merely settles a previously admitted entry (an entry evicted
 /// while in flight stays evicted) — so the resident set, and with it
 /// every hit/miss decision, is a pure function of the command sequence.
-struct ChunkCache {
+pub(crate) struct ChunkCache {
     budget: u64,
     used: u64,
     tick: u64,
@@ -285,12 +287,12 @@ struct ChunkCache {
 }
 
 impl ChunkCache {
-    fn new(budget: u64) -> ChunkCache {
+    pub(crate) fn new(budget: u64) -> ChunkCache {
         ChunkCache { budget, used: 0, tick: 0, entries: FastMap::default() }
     }
 
     /// Bump `chunk`'s LRU stamp if present; returns whether it was.
-    fn touch(&mut self, chunk: u32) -> bool {
+    pub(crate) fn touch(&mut self, chunk: u32) -> bool {
         self.tick += 1;
         match self.entries.get_mut(&chunk) {
             Some(e) => {
@@ -313,7 +315,7 @@ impl ChunkCache {
     /// evict least-recently-used entries until the budget holds again.
     /// The newest entry is never evicted, so a chunk larger than the
     /// whole budget still caches alone.
-    fn admit(&mut self, chunk: u32, bytes: u64) {
+    pub(crate) fn admit(&mut self, chunk: u32, bytes: u64) {
         self.tick += 1;
         if let Some(old) = self
             .entries
@@ -349,14 +351,19 @@ impl ChunkCache {
 
 /// All chunk-mode state of one prefetcher: per-owner layouts (shared
 /// geometry with the servers) and per-link caches.
-struct ChunkState {
-    dim: usize,
-    layouts: Vec<ChunkLayout>,
-    caches: Vec<ChunkCache>,
+pub(crate) struct ChunkState {
+    pub(crate) dim: usize,
+    pub(crate) layouts: Vec<ChunkLayout>,
+    pub(crate) caches: Vec<ChunkCache>,
 }
 
 impl ChunkState {
-    fn build(part: &Partition, dim: usize, chunk_rows: usize, cache_bytes: u64) -> ChunkState {
+    pub(crate) fn build(
+        part: &Partition,
+        dim: usize,
+        chunk_rows: usize,
+        cache_bytes: u64,
+    ) -> ChunkState {
         let layouts =
             part.local_nodes.iter().map(|o| ChunkLayout::build(o, chunk_rows)).collect();
         let caches = (0..part.num_parts).map(|_| ChunkCache::new(cache_bytes)).collect();

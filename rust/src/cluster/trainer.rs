@@ -201,6 +201,20 @@ pub(crate) fn run_trainer(mut a: TrainerArgs) -> TrainerOutput {
                     .fetch_plan
                     .replace(FetchPlan::default())
                     .expect("fetch plan armed");
+                // The replay hook: record this minibatch's sampled demand
+                // so `rudder replay` can re-drive the state machine from
+                // the trace alone (sampling is seed-deterministic, so the
+                // event is virtual and diff-gated like every counter).
+                tracer.emit(
+                    t.clock,
+                    EventKind::SampleDemand {
+                        epoch: super::id_u32(epoch),
+                        mb: super::id_u32(mb),
+                        targets: plan.targets,
+                        sampled: plan.sampled,
+                        remote: plan.unique_remote.clone(),
+                    },
+                );
                 let admitted_n = plan.admitted.len() as u64;
                 let evicted_n = plan.evicted.len() as u64;
                 if admitted_n + evicted_n > 0 {

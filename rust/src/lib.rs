@@ -46,6 +46,7 @@ pub mod metrics;
 pub mod massivegnn;
 pub mod net;
 pub mod partition;
+pub mod replay;
 pub mod runtime;
 pub mod sampler;
 pub mod sim;

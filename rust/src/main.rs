@@ -21,6 +21,7 @@ use rudder::eval::{harness, pass_at_1, Quality};
 use rudder::gnn::SageRunner;
 use rudder::graph::datasets;
 use rudder::partition::{self, Method};
+use rudder::replay;
 use rudder::runtime::Engine;
 use rudder::sampler::Sampler;
 use rudder::sim::{build_cluster, run_on, trace_only, ControllerSpec, Mode, RunConfig};
@@ -47,6 +48,7 @@ fn main() {
         "bench" => cmd_bench(&args),
         "experiment" => cmd_experiment(&args),
         "trace" => cmd_trace(&args),
+        "replay" => cmd_replay(&args),
         "calibrate" => cmd_calibrate(&args),
         "datasets" => cmd_datasets(),
         "models" => cmd_models(),
@@ -967,6 +969,155 @@ fn cmd_trace_diff(args: &Args) -> rudder::error::Result<()> {
         b_path.display()
     );
     Ok(())
+}
+
+/// `rudder replay --trace <file>` — re-drive a recorded trace through the
+/// sim state machine offline.  `--check` proves the re-emitted virtual
+/// streams are bit-identical to the recording; override flags
+/// (`--controller`, `--buffer`, `--chunk-rows`, `--chunk-cache`) evaluate
+/// a what-if variant against the recorded demand.  `replay sweep` fans
+/// one trace across a controller × buffer grid in one process.
+fn cmd_replay(args: &Args) -> rudder::error::Result<()> {
+    if args.positional.first().map(String::as_str) == Some("sweep") {
+        return cmd_replay_sweep(args);
+    }
+    let (original, setup) = replay_setup(args)?;
+    let overrides = replay::Overrides {
+        controller: args.opt("controller").map(ControllerSpec::parse).transpose()?,
+        buffer_pct: args.opt_parse::<f64>("buffer")?,
+        chunk_rows: args.opt_parse::<usize>("chunk-rows")?,
+        chunk_cache_bytes: args.opt_parse::<u64>("chunk-cache")?,
+    };
+    let baseline = if args.flag("check") {
+        rudder::ensure!(
+            !setup.is_measured(),
+            "--check needs an emulated-compute trace: measured runs carry real step \
+             durations that replay deliberately re-models (record with --time-scale 0)"
+        );
+        let (run, report) = replay::check(&setup, &original)?;
+        println!("{}", report.render().trim_end());
+        rudder::ensure!(
+            report.identical(),
+            "replay check: {} virtual-time mismatches against the recording",
+            report.mismatches.len()
+        );
+        println!(
+            "replay check OK: {} re-emitted events bit-identical to the recording",
+            run.trace.events.len()
+        );
+        run
+    } else {
+        replay::replay(&setup, &replay::Overrides::default())?
+    };
+    let variants = if overrides.is_empty() {
+        Vec::new()
+    } else {
+        vec![replay::replay(&setup, &overrides)?]
+    };
+    replay_table(&baseline, &variants).emit("replay_whatif");
+    // A bare replay (no what-if) only writes the report when asked.
+    let json_path = args
+        .opt("json")
+        .map(str::to_string)
+        .or_else(|| (!variants.is_empty()).then(|| "REPLAY_whatif.json".to_string()));
+    if let Some(path) = json_path {
+        let doc = replay::whatif_json(&setup.meta, &baseline, &variants);
+        std::fs::write(&path, doc.to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `rudder replay sweep --trace <file> --controllers a,b --buffers f1,f2`.
+fn cmd_replay_sweep(args: &Args) -> rudder::error::Result<()> {
+    let (_, setup) = replay_setup(args)?;
+    let controllers = match args.opt("controllers") {
+        Some(csv) => csv
+            .split(',')
+            .map(|s| ControllerSpec::parse(s.trim()))
+            .collect::<rudder::error::Result<Vec<_>>>()?,
+        None => Vec::new(),
+    };
+    let buffers = match args.opt("buffers") {
+        Some(csv) => csv
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|e| rudder::err!("cannot parse --buffers value '{s}': {e}"))
+            })
+            .collect::<rudder::error::Result<Vec<_>>>()?,
+        None => Vec::new(),
+    };
+    rudder::ensure!(
+        !controllers.is_empty() || !buffers.is_empty(),
+        "replay sweep: give at least one axis (--controllers a,b and/or --buffers f1,f2)"
+    );
+    let spec = replay::SweepSpec {
+        controllers,
+        buffers,
+        chunk_rows: args.opt_parse::<usize>("chunk-rows")?,
+        chunk_cache_bytes: args.opt_parse::<u64>("chunk-cache")?,
+    };
+    let baseline = replay::replay(&setup, &replay::Overrides::default())?;
+    let runs = replay::sweep(&setup, &spec)?;
+    replay_table(&baseline, &runs).emit("replay_sweep");
+    let path = args.opt_or("json", "REPLAY_whatif.json");
+    let doc = replay::whatif_json(&setup.meta, &baseline, &runs);
+    std::fs::write(&path, doc.to_string_pretty())?;
+    println!("wrote {path} ({} variants)", runs.len());
+    Ok(())
+}
+
+/// Shared front half of both replay forms: read `--trace <file>`, load it,
+/// announce the source run.
+fn replay_setup(args: &Args) -> rudder::error::Result<(Trace, replay::ReplaySetup)> {
+    let path = args
+        .opt("trace")
+        .ok_or_else(|| rudder::err!("replay: --trace <file> required"))?;
+    let original = Trace::read_file(std::path::Path::new(path))?;
+    let setup = replay::load(&original)?;
+    println!(
+        "replay: {} — label={} seed={} transport={} compute={}; {} trainers, \
+         {} recorded minibatch demands",
+        path,
+        setup.meta.label,
+        setup.meta.seed,
+        setup.meta.transport,
+        setup.meta.compute,
+        setup.cfg.num_trainers,
+        setup.recorded_minibatches,
+    );
+    if setup.is_measured() {
+        println!(
+            "note: measured-compute trace; replayed virtual times re-model the \
+             recorded step durations (--check unavailable)"
+        );
+    }
+    Ok((original, setup))
+}
+
+fn replay_table(baseline: &replay::ReplayRun, variants: &[replay::ReplayRun]) -> Table {
+    let mut t = Table::new(
+        "replay what-if",
+        &["variant", "controller", "buffer", "virt epoch", "steady %-hits", "wire resp", "blocked"],
+    );
+    let row = |tag: String, r: &replay::ReplayRun| {
+        vec![
+            tag,
+            r.cfg.controller.spec(),
+            format!("{:.0}%", r.cfg.buffer_pct * 100.0),
+            fmt_secs(r.experiment.mean_epoch_time),
+            fmt_pct(r.experiment.steady_hits_pct),
+            fmt_count(r.wire.resp_bytes),
+            format!("{:.3}", r.fetch_blocked_ratio()),
+        ]
+    };
+    t.row(row("recorded".into(), baseline));
+    for (i, v) in variants.iter().enumerate() {
+        t.row(row(format!("what-if {}", i + 1), v));
+    }
+    t
 }
 
 fn cmd_calibrate(_args: &Args) -> rudder::error::Result<()> {

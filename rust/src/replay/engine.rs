@@ -1,0 +1,529 @@
+//! The replay drive: re-run the sim state machine from recorded demand
+//! and re-enact the cluster protocol synchronously, in one thread.
+//!
+//! Every counter and virtual event the live cluster produces is a
+//! *command-time* function of the message sequence — the want-set dedup,
+//! the chunk-cache hit/miss decisions, the per-owner request framing, and
+//! the barrier arithmetic all happen when a command is processed, never
+//! when a response arrives.  So a single-threaded re-drive that serves
+//! each request inline reproduces the live run's virtual streams
+//! bit-exactly (the `--check` guarantee), while wall-only events
+//! (`batch_flush`, link flushes) simply do not exist offline — the diff
+//! projection excludes them anyway.
+//!
+//! The three live roles map onto three offline models:
+//!
+//! * trainer thread → the drive loop itself, mirroring
+//!   [`crate::cluster::trainer::run_trainer`]'s emission choreography
+//!   around [`Trainer::step_minibatch`] with replayed demand;
+//! * prefetcher thread → [`PrefetchModel`], mirroring
+//!   `spawn_prefetcher`'s command loop (want-set, chunk caches, per-owner
+//!   coalescing, req-id counter);
+//! * feature server thread → [`ServerModel`], mirroring `server_loop`'s
+//!   request accounting and chunk expansion.  No feature rows are
+//!   materialized: frame byte lengths are shape-functions only, so
+//!   zero-filled payloads of the right dimensions price the wire exactly.
+
+use crate::classifier::trainer::TrainingSet;
+use crate::cluster::id_u32;
+use crate::cluster::prefetch::{chunk_wire_bytes, ChunkState};
+use crate::cluster::wire::{Chunk, Frame};
+use crate::cluster::ServerStats;
+use crate::error::Result;
+use crate::gnn::{AnalyticModel, SageShape};
+use crate::graph::Dataset;
+use crate::metrics::{RunMetrics, WireStats};
+use crate::net::Network;
+use crate::partition::Partition;
+use crate::sim::trainer::{DemandSource, FetchPlan, RunCtx};
+use crate::sim::{self, RunConfig};
+use crate::trace::{norm_f64, EventKind, Role, TraceEvent};
+use crate::util::fasthash::{FastMap, FastSet};
+
+/// Per-stream event buffer with the same seq/normalization discipline as
+/// [`crate::trace::Tracer`], minus its wall clock: replay has no
+/// meaningful wall time, so `wall` is recorded as 0 (the diff projection
+/// drops it regardless).
+struct Emitter {
+    role: Role,
+    id: u32,
+    seq: u64,
+    events: Vec<TraceEvent>,
+}
+
+impl Emitter {
+    fn new(role: Role, id: u32) -> Emitter {
+        Emitter { role, id, seq: 0, events: Vec::new() }
+    }
+
+    fn emit(&mut self, vclock: f64, kind: EventKind) {
+        self.events.push(TraceEvent {
+            role: self.role,
+            id: self.id,
+            seq: self.seq,
+            vclock: norm_f64(vclock),
+            wall: 0.0,
+            kind,
+        });
+        self.seq += 1;
+    }
+
+    /// Close the stream with its terminal `RoleEnd` (so re-emitted traces
+    /// pass [`crate::trace::Trace::verify_complete`]) and hand it over.
+    fn finish(mut self) -> Vec<TraceEvent> {
+        let emitted = self.seq;
+        self.emit(0.0, EventKind::RoleEnd { emitted });
+        self.events
+    }
+}
+
+/// Offline stand-in for one feature server: `server_loop`'s accounting
+/// and `fetch_serve` events without threads, sockets, or feature rows.
+struct ServerModel {
+    feat_dim: usize,
+    chunk_rows: usize,
+    /// Owned node ids in local (row) order — the chunk geometry shared
+    /// with `FeatureShard` and the prefetchers' `ChunkLayout`s.
+    owned: Vec<u32>,
+    local_idx: FastMap<u32, u32>,
+    stats: ServerStats,
+    ev: Emitter,
+}
+
+impl ServerModel {
+    fn new(part: &Partition, part_id: usize, feat_dim: usize, chunk_rows: usize) -> ServerModel {
+        let owned = part.local_nodes[part_id].clone();
+        let mut local_idx = FastMap::default();
+        for (i, &n) in owned.iter().enumerate() {
+            local_idx.insert(n, id_u32(i));
+        }
+        ServerModel {
+            feat_dim,
+            chunk_rows: chunk_rows.max(1),
+            owned,
+            local_idx,
+            stats: ServerStats { part: part_id, ..ServerStats::default() },
+            ev: Emitter::new(Role::Server, id_u32(part_id)),
+        }
+    }
+
+    /// Serve a `FetchReq`: the response echoes the nodes with a row-major
+    /// payload whose *shape* prices the wire (values never affect length).
+    /// Returns `(nodes in the response, response bytes)`.
+    fn serve_rows(&mut self, req_id: u64, from: u32, nodes: &[u32], req_len: u64) -> (u64, u64) {
+        let resp = Frame::FetchResp {
+            req_id,
+            feat_dim: id_u32(self.feat_dim),
+            nodes: nodes.to_vec(),
+            feats: vec![0.0; nodes.len() * self.feat_dim],
+        };
+        let served = nodes.len() as u64;
+        let out = resp.encoded_len() as u64;
+        self.finish_serve(req_id, from, served, out, req_len);
+        (served, out)
+    }
+
+    /// Serve a `ChunkReq`: expand requested nodes to whole chunks in
+    /// first-appearance order, exactly as `FeatureShard::gather_chunks`
+    /// (the prefetcher never declares held digests, so nothing is elided).
+    fn serve_chunks(&mut self, req_id: u64, from: u32, nodes: &[u32], req_len: u64) -> (u64, u64) {
+        let mut seen: FastSet<u32> = FastSet::default();
+        let mut chunks: Vec<Chunk> = Vec::new();
+        let mut served = 0u64;
+        for &n in nodes {
+            let Some(&i) = self.local_idx.get(&n) else { continue };
+            let c = i as usize / self.chunk_rows;
+            if !seen.insert(id_u32(c)) {
+                continue;
+            }
+            let start = c * self.chunk_rows;
+            let end = (start + self.chunk_rows).min(self.owned.len());
+            served += (end - start) as u64;
+            chunks.push(Chunk {
+                digest: 0,
+                nodes: self.owned[start..end].to_vec(),
+                feats: vec![0.0; (end - start) * self.feat_dim],
+            });
+        }
+        let resp = Frame::ChunkResp {
+            req_id,
+            feat_dim: id_u32(self.feat_dim),
+            refs: Vec::new(),
+            chunks,
+        };
+        let out = resp.encoded_len() as u64;
+        self.finish_serve(req_id, from, served, out, req_len);
+        (served, out)
+    }
+
+    fn finish_serve(&mut self, req_id: u64, from: u32, served: u64, out: u64, req_len: u64) {
+        self.stats.bytes_in += req_len;
+        self.stats.requests += 1;
+        self.stats.nodes_served += served;
+        self.stats.bytes_out += out;
+        self.ev.emit(0.0, EventKind::FetchServe { req_id, from, nodes: served, bytes: out });
+    }
+}
+
+/// Offline stand-in for one prefetcher: `spawn_prefetcher`'s command-time
+/// state — want-set, per-link chunk caches, per-owner coalescing buckets,
+/// the single req-id counter — with responses served inline.
+struct PrefetchModel {
+    trainer_id: usize,
+    /// Mirror of `FeatureStore`'s want-set: the only store state that
+    /// feeds counters (`begin_fetch` dedup / `evict` removal).
+    want: FastSet<u32>,
+    chunks: Option<ChunkState>,
+    req_id: u64,
+    groups: Vec<Vec<u32>>,
+    stats: WireStats,
+    ev: Emitter,
+}
+
+impl PrefetchModel {
+    fn new(
+        trainer_id: usize,
+        part: &Partition,
+        feat_dim: usize,
+        chunk_rows: usize,
+        cache_bytes: u64,
+    ) -> PrefetchModel {
+        let n = part.num_parts;
+        let mut stats = WireStats::default();
+        stats.fetch_latency.resize_with(n, Default::default);
+        let chunks = (cache_bytes > 0)
+            .then(|| ChunkState::build(part, feat_dim, chunk_rows.max(1), cache_bytes));
+        PrefetchModel {
+            trainer_id,
+            want: FastSet::default(),
+            chunks,
+            req_id: 0,
+            groups: vec![Vec::new(); n],
+            stats,
+            ev: Emitter::new(Role::Prefetcher, id_u32(trainer_id)),
+        }
+    }
+
+    /// Process one `PrefetchMsg::Fetch` command: dedup against the
+    /// want-set, consult the chunk caches, coalesce per owner, issue one
+    /// request frame per non-empty owner group, and take the response
+    /// round trip inline.
+    fn fetch(&mut self, nodes: &[u32], part: &Partition, servers: &mut [ServerModel]) {
+        let mut to_req = Vec::new();
+        for &n in nodes {
+            if self.want.contains(&n) {
+                self.stats.nodes_deduped += 1;
+            } else {
+                self.want.insert(n);
+                to_req.push(n);
+            }
+        }
+        match self.chunks.as_mut() {
+            Some(cs) => {
+                let mut hit_nodes = vec![0u64; servers.len()];
+                let mut miss_chunks = vec![0u64; servers.len()];
+                for &n in &to_req {
+                    let owner = part.owner_of(n);
+                    let Some((chunk, _)) = cs.layouts[owner].slot_of(n) else {
+                        self.groups[owner].push(n);
+                        continue;
+                    };
+                    if cs.caches[owner].touch(chunk) {
+                        hit_nodes[owner] += 1;
+                        self.stats.chunks_hit += 1;
+                        self.stats.bytes_saved_cache += 4 + 4 * cs.dim as u64;
+                    } else {
+                        let bytes = chunk_wire_bytes(cs.layouts[owner].rows_in(chunk), cs.dim);
+                        cs.caches[owner].admit(chunk, bytes);
+                        miss_chunks[owner] += 1;
+                        self.stats.chunks_fetched += 1;
+                        self.groups[owner].push(n);
+                    }
+                }
+                for owner in 0..servers.len() {
+                    if hit_nodes[owner] > 0 {
+                        self.ev.emit(0.0, EventKind::CacheHit {
+                            owner: id_u32(owner),
+                            nodes: hit_nodes[owner],
+                        });
+                    }
+                    if miss_chunks[owner] > 0 {
+                        self.ev.emit(0.0, EventKind::CacheMiss {
+                            owner: id_u32(owner),
+                            chunks: miss_chunks[owner],
+                            nodes: self.groups[owner].len() as u64,
+                        });
+                    }
+                }
+            }
+            None => {
+                for &n in &to_req {
+                    self.groups[part.owner_of(n)].push(n);
+                }
+            }
+        }
+        for owner in 0..servers.len() {
+            if self.groups[owner].is_empty() {
+                continue;
+            }
+            let batch = std::mem::take(&mut self.groups[owner]);
+            let batch_nodes = batch.len() as u64;
+            let from = id_u32(self.trainer_id);
+            let rid = self.req_id;
+            let frame = if self.chunks.is_some() {
+                Frame::ChunkReq { req_id: rid, from, nodes: batch, have: Vec::new() }
+            } else {
+                Frame::FetchReq { req_id: rid, from, nodes: batch }
+            };
+            let req_len = frame.encoded_len() as u64;
+            self.stats.nodes_requested += batch_nodes;
+            self.ev.emit(0.0, EventKind::FetchIssue {
+                req_id: rid,
+                owner: id_u32(owner),
+                nodes: batch_nodes,
+                bytes: req_len,
+            });
+            self.req_id += 1;
+            self.stats.req_frames += 1;
+            self.stats.req_bytes += req_len;
+            // Inline round trip: no decision downstream depends on when
+            // the response lands, only that it does.
+            let (got_nodes, resp_len) = match &frame {
+                Frame::ChunkReq { nodes, .. } => {
+                    servers[owner].serve_chunks(rid, from, nodes, req_len)
+                }
+                Frame::FetchReq { nodes, .. } => {
+                    servers[owner].serve_rows(rid, from, nodes, req_len)
+                }
+                _ => unreachable!("request frames only"),
+            };
+            self.stats.resp_frames += 1;
+            self.stats.resp_bytes += resp_len;
+            self.stats.nodes_received += got_nodes;
+            self.ev.emit(0.0, EventKind::FetchResponse {
+                req_id: rid,
+                nodes: got_nodes,
+                bytes: resp_len,
+            });
+        }
+    }
+
+    /// Process one `PrefetchMsg::Evict` command.
+    fn evict(&mut self, nodes: &[u32]) {
+        self.ev.emit(0.0, EventKind::Evict { nodes: nodes.len() as u64 });
+        for &n in nodes {
+            self.want.remove(&n);
+        }
+    }
+}
+
+/// Everything one re-drive produces: per-trainer sim metrics, the wire
+/// and server counters of the modelled protocol, the re-emitted virtual
+/// event streams, and the fetch-blocked accounting for the what-if
+/// report.
+pub(crate) struct DriveResult {
+    pub per_trainer: Vec<RunMetrics>,
+    pub wire: Vec<WireStats>,
+    pub servers: Vec<ServerStats>,
+    pub events: Vec<TraceEvent>,
+    /// Σ fetch-blocked virtual seconds over all trainers' active steps.
+    pub exposed_vsecs: f64,
+    /// Σ step virtual seconds over all recorded minibatches.
+    pub step_vsecs: f64,
+    pub rounds: u64,
+}
+
+/// Re-drive `cfg` over the recorded per-trainer demand, mirroring
+/// `run_trainer`'s choreography round for round.
+pub(crate) fn drive(
+    cfg: &RunConfig,
+    ds: &Dataset,
+    part: &Partition,
+    demands: &[DemandSource],
+    offline: Option<&TrainingSet>,
+) -> Result<DriveResult> {
+    let n = cfg.num_trainers;
+    crate::ensure!(n >= 1, "replay: need at least one trainer");
+    crate::ensure!(
+        n == part.num_parts,
+        "replay: {n} trainers but {} partitions",
+        part.num_parts
+    );
+    crate::ensure!(
+        demands.len() == n,
+        "replay: demand for {} trainers but config has {n}",
+        demands.len()
+    );
+
+    // Identical model constants to `run_trainer` (bit-identity requires it).
+    let shape = SageShape {
+        batch: cfg.batch_size,
+        fanout1: cfg.fanout1,
+        fanout2: cfg.fanout2,
+        feat_dim: ds.spec.feat_dim,
+        hidden: cfg.hidden,
+        classes: ds.spec.num_classes,
+    };
+    let net = Network::new(cfg.net.clone(), n);
+    let compute = AnalyticModel::new(cfg.compute.clone(), shape);
+    let allreduce = net.allreduce_time(shape.param_bytes());
+    let max_mb = sim::max_minibatches_per_epoch(cfg, ds, part);
+    let ctx = RunCtx {
+        ds,
+        part,
+        net,
+        compute,
+        mode: cfg.mode,
+        epochs_total: cfg.epochs,
+        total_minibatches: (max_mb * cfg.epochs) as u64,
+    };
+
+    let mut trainers = Vec::with_capacity(n);
+    let mut tev = Vec::with_capacity(n);
+    let mut pf = Vec::with_capacity(n);
+    let mut servers = Vec::with_capacity(n);
+    for p in 0..n {
+        let mut t = sim::build_trainer(cfg, ds, part, p, offline);
+        t.fetch_plan = Some(FetchPlan::default());
+        t.demand = Some(demands[p].clone());
+        trainers.push(t);
+        tev.push(Emitter::new(Role::Trainer, id_u32(p)));
+        pf.push(PrefetchModel::new(
+            p,
+            part,
+            ds.spec.feat_dim,
+            cfg.chunk_rows,
+            cfg.chunk_cache_bytes,
+        ));
+        servers.push(ServerModel::new(part, p, ds.spec.feat_dim, cfg.chunk_rows));
+    }
+    let mut hub = Emitter::new(Role::Hub, 0);
+
+    // Warm start (MassiveGNN prepopulation), exactly as `run_trainer`.
+    for p in 0..n {
+        let warm = trainers[p].buffer.resident_nodes();
+        if !warm.is_empty() {
+            pf[p].fetch(&warm, part, &mut servers);
+        }
+    }
+
+    let mut exposed = 0.0f64;
+    let mut round: u64 = 0;
+    let mut mb_vstarts = vec![0.0f64; n];
+    for epoch in 0..cfg.epochs {
+        let epoch_vstart: Vec<f64> = trainers.iter().map(|t| t.clock).collect();
+        for mb in 0..max_mb {
+            for p in 0..n {
+                let t = &mut trainers[p];
+                mb_vstarts[p] = t.clock;
+                tev[p].emit(t.clock, EventKind::MinibatchBegin {
+                    epoch: id_u32(epoch),
+                    mb: id_u32(mb),
+                });
+                // Replayed demand: the sampler is never consulted, so the
+                // epoch order is irrelevant here.
+                let active = t.step_minibatch(&ctx, epoch, mb, &[]);
+                if !active {
+                    continue;
+                }
+                let mut plan = t
+                    .fetch_plan
+                    .replace(FetchPlan::default())
+                    .expect("fetch plan armed");
+                tev[p].emit(t.clock, EventKind::SampleDemand {
+                    epoch: id_u32(epoch),
+                    mb: id_u32(mb),
+                    targets: plan.targets,
+                    sampled: plan.sampled,
+                    remote: plan.unique_remote.clone(),
+                });
+                let admitted_n = plan.admitted.len() as u64;
+                let evicted_n = plan.evicted.len() as u64;
+                if admitted_n + evicted_n > 0 {
+                    tev[p].emit(t.clock, EventKind::Replacement {
+                        admitted: admitted_n,
+                        evicted: evicted_n,
+                    });
+                }
+                if !plan.admitted.is_empty() {
+                    let admitted = std::mem::take(&mut plan.admitted);
+                    pf[p].fetch(&admitted, part, &mut servers);
+                }
+                if !plan.missed.is_empty() {
+                    pf[p].fetch(&plan.missed, part, &mut servers);
+                }
+                tev[p].emit(t.clock, EventKind::FetchWait {
+                    nodes: plan.unique_remote.len() as u64,
+                    wall_secs: 0.0,
+                });
+                tev[p].emit(t.clock, EventKind::Compute {
+                    virtual_secs: plan.t_ddp,
+                    wall_secs: 0.0,
+                });
+                let mut drop_nodes = plan.evicted;
+                for &miss in &plan.missed {
+                    if !t.buffer.contains(miss) {
+                        drop_nodes.push(miss);
+                    }
+                }
+                if !drop_nodes.is_empty() {
+                    pf[p].evict(&drop_nodes);
+                }
+                exposed += plan.t_exposed;
+            }
+            // DDP barrier: the hub takes the max clock over every
+            // trainer's Allreduce frame and broadcasts it back.
+            let max_vclock = trainers.iter().fold(f64::NEG_INFINITY, |m, t| m.max(t.clock));
+            hub.emit(max_vclock, EventKind::AllreduceRound {
+                round,
+                vclock_max: max_vclock,
+                trainers: id_u32(n),
+            });
+            for p in 0..n {
+                let t = &mut trainers[p];
+                tev[p].emit(t.clock, EventKind::AllreduceWait { round, wall_secs: 0.0 });
+                t.clock = max_vclock + allreduce;
+                tev[p].emit(t.clock, EventKind::MinibatchEnd {
+                    epoch: id_u32(epoch),
+                    mb: id_u32(mb),
+                    step_vsecs: t.clock - mb_vstarts[p],
+                });
+            }
+            round += 1;
+        }
+        for (p, t) in trainers.iter_mut().enumerate() {
+            t.metrics.epoch_times.push(t.clock - epoch_vstart[p]);
+        }
+    }
+
+    let step_vsecs: f64 = trainers
+        .iter()
+        .flat_map(|t| &t.metrics.minibatches)
+        .map(|m| m.step_time)
+        .sum();
+    let mut events: Vec<TraceEvent> = Vec::new();
+    for e in tev {
+        events.extend(e.finish());
+    }
+    let mut wire = Vec::with_capacity(n);
+    for m in pf {
+        events.extend(m.ev.finish());
+        wire.push(m.stats);
+    }
+    let mut server_stats = Vec::with_capacity(n);
+    for s in servers {
+        events.extend(s.ev.finish());
+        server_stats.push(s.stats);
+    }
+    events.extend(hub.finish());
+
+    Ok(DriveResult {
+        per_trainer: trainers.into_iter().map(|t| t.metrics).collect(),
+        wire,
+        servers: server_stats,
+        events,
+        exposed_vsecs: exposed,
+        step_vsecs,
+        rounds: round,
+    })
+}

@@ -1,0 +1,374 @@
+//! Trace-driven replay and what-if controller evaluation.
+//!
+//! A `rudder-trace/v1` trace records everything needed to re-drive a
+//! cluster run without a cluster: [`crate::trace::TraceMeta::config`]
+//! embeds the full run config, and each trainer stream carries one
+//! [`EventKind::SampleDemand`] per active minibatch — the sampled demand
+//! (target count, sampled-node count, deduplicated remote want-set) that
+//! the sim state machine consumed.  Replay feeds those records back
+//! through [`crate::sim::trainer::Trainer::step_minibatch`] (the sampler
+//! is never invoked) and re-enacts the cluster protocol offline
+//! ([`engine`]), in two modes:
+//!
+//! * **Check** ([`check`]): replay under the *same* config and require
+//!   the re-emitted virtual streams to be bit-identical to the original
+//!   via [`crate::trace::diff`] — the CI gate that the replay engine and
+//!   the live runtime never drift apart.  Only emulated-compute traces
+//!   can pass: a measured run's `compute`/`minibatch_end` events carry
+//!   real `t_ddp`, which replay deliberately re-models.
+//! * **What-if** ([`replay`] with [`Overrides`], [`sweep`] for a grid):
+//!   swap the controller, buffer fraction, or chunk-cache geometry and
+//!   re-drive the *recorded* demand under the new policy.  The sampled
+//!   demand is a pure function of dataset/seed/partition — none of the
+//!   overridable knobs feed it — so the counterfactual is exact, not
+//!   approximated.  Results land in a schema-stable JSON report
+//!   ([`whatif_json`], `rudder-replay-whatif/v1`).
+//!
+//! This module is virtual-time-only: no wall clocks anywhere (the
+//! `wall-clock-in-virtual-path` audit rule covers `src/replay/`), and no
+//! printing — rendering belongs to the CLI.
+
+mod engine;
+
+use crate::classifier::trainer::TrainingSet;
+use crate::error::Result;
+use crate::graph::Dataset;
+use crate::metrics::WireStats;
+use crate::partition::Partition;
+use crate::sim::trainer::{DemandRecord, DemandSource};
+use crate::sim::{self, ControllerSpec, ExperimentResult, RunConfig};
+use crate::trace::diff::{diff, DiffReport};
+use crate::trace::{EventKind, Role, Trace, TraceMeta};
+use crate::util::json::Json;
+
+pub use crate::cluster::ServerStats;
+
+/// Config knobs a what-if replay may swap.  Everything else (dataset,
+/// scale, seed, trainer count, batch geometry, epochs) is pinned to the
+/// recorded run — those knobs *shape the demand*, and the demand is what
+/// the trace recorded.
+#[derive(Debug, Clone, Default)]
+pub struct Overrides {
+    pub controller: Option<ControllerSpec>,
+    pub buffer_pct: Option<f64>,
+    pub chunk_rows: Option<usize>,
+    pub chunk_cache_bytes: Option<u64>,
+}
+
+impl Overrides {
+    pub fn is_empty(&self) -> bool {
+        self.controller.is_none()
+            && self.buffer_pct.is_none()
+            && self.chunk_rows.is_none()
+            && self.chunk_cache_bytes.is_none()
+    }
+
+    /// The recorded config with these overrides applied.
+    pub fn apply(&self, base: &RunConfig) -> RunConfig {
+        let mut cfg = base.clone();
+        if let Some(c) = &self.controller {
+            cfg.controller = c.clone();
+        }
+        if let Some(b) = self.buffer_pct {
+            cfg.buffer_pct = b;
+        }
+        if let Some(r) = self.chunk_rows {
+            cfg.chunk_rows = r;
+        }
+        if let Some(b) = self.chunk_cache_bytes {
+            cfg.chunk_cache_bytes = b;
+        }
+        cfg
+    }
+}
+
+/// A parsed trace ready to re-drive: the embedded config, the rebuilt
+/// dataset + partition, and the per-trainer demand records.  Build once
+/// ([`load`]), replay many times ([`replay`], [`sweep`]).
+pub struct ReplaySetup {
+    pub cfg: RunConfig,
+    pub meta: TraceMeta,
+    pub ds: Dataset,
+    pub part: Partition,
+    pub max_mb: usize,
+    pub demands: Vec<DemandSource>,
+    /// Recorded active minibatches (`sample_demand` events) across all
+    /// trainers.
+    pub recorded_minibatches: usize,
+    /// Lazily built offline training set for classifier controllers
+    /// (config-independent, exactly as the live cluster builds it).
+    offline: std::cell::OnceCell<TrainingSet>,
+}
+
+impl ReplaySetup {
+    /// Measured-compute traces carry real `t_ddp`; replay re-models it,
+    /// so `--check` cannot hold against them.
+    pub fn is_measured(&self) -> bool {
+        self.meta.compute == "measured"
+    }
+
+    fn offline_for(&self, cfg: &RunConfig) -> Option<&TrainingSet> {
+        matches!(cfg.controller, ControllerSpec::Classifier { .. }).then(|| {
+            self.offline
+                .get_or_init(|| crate::eval::harness::offline_training_set(crate::eval::Quality::Quick))
+        })
+    }
+}
+
+/// Parse + validate a trace into a [`ReplaySetup`].
+pub fn load(trace: &Trace) -> Result<ReplaySetup> {
+    trace.verify_complete()?;
+    crate::ensure!(
+        !trace.meta.config.is_empty(),
+        "trace embeds no run config — recorded by a pre-replay build?"
+    );
+    let cfg = crate::config::from_toml_str(&trace.meta.config)?;
+    crate::ensure!(
+        cfg.seed == trace.meta.seed,
+        "trace meta seed {} disagrees with embedded config seed {}",
+        trace.meta.seed,
+        cfg.seed
+    );
+    let (ds, part) = sim::build_cluster(&cfg)?;
+    let max_mb = sim::max_minibatches_per_epoch(&cfg, &ds, &part);
+    let (demands, recorded) = extract_demands(trace, &cfg, max_mb)?;
+    Ok(ReplaySetup {
+        cfg,
+        meta: trace.meta.clone(),
+        ds,
+        part,
+        max_mb,
+        demands,
+        recorded_minibatches: recorded,
+        offline: std::cell::OnceCell::new(),
+    })
+}
+
+/// Collect each trainer stream's `sample_demand` events into a
+/// [`DemandSource`] indexed `epoch * max_mb + mb`.
+fn extract_demands(
+    trace: &Trace,
+    cfg: &RunConfig,
+    max_mb: usize,
+) -> Result<(Vec<DemandSource>, usize)> {
+    let n = cfg.num_trainers;
+    let mut demands: Vec<DemandSource> = (0..n)
+        .map(|_| DemandSource {
+            max_mb_per_epoch: max_mb,
+            records: vec![None; cfg.epochs * max_mb],
+        })
+        .collect();
+    let mut found = 0usize;
+    for e in &trace.events {
+        if e.role != Role::Trainer {
+            continue;
+        }
+        let EventKind::SampleDemand { epoch, mb, targets, sampled, ref remote } = e.kind else {
+            continue;
+        };
+        let p = e.id as usize;
+        crate::ensure!(p < n, "trace demand from trainer {p} but config has {n} trainers");
+        let (epoch, mb) = (epoch as usize, mb as usize);
+        crate::ensure!(
+            epoch < cfg.epochs && mb < max_mb,
+            "trace demand at epoch {epoch} mb {mb} outside the config's \
+             {} epochs x {max_mb} minibatches",
+            cfg.epochs
+        );
+        let slot = &mut demands[p].records[epoch * max_mb + mb];
+        crate::ensure!(
+            slot.is_none(),
+            "duplicate sample_demand for trainer {p} epoch {epoch} mb {mb}"
+        );
+        *slot = Some(DemandRecord { targets, sampled, unique_remote: remote.clone() });
+        found += 1;
+    }
+    crate::ensure!(
+        found > 0,
+        "trace carries no sample_demand events — record one with \
+         `rudder cluster --trace <file>` on a replay-capable build"
+    );
+    Ok((demands, found))
+}
+
+/// Outcome of one re-drive: sim-shaped experiment summary, modelled wire
+/// and server counters, and the re-emitted trace.
+pub struct ReplayRun {
+    pub cfg: RunConfig,
+    pub experiment: ExperimentResult,
+    /// Merged wire counters (sum over the modelled prefetchers).
+    pub wire: WireStats,
+    pub servers: Vec<ServerStats>,
+    pub rounds: u64,
+    /// Σ fetch-blocked virtual seconds over all active steps.
+    pub fetch_blocked_vsecs: f64,
+    /// Σ step virtual seconds over all recorded minibatches.
+    pub step_vsecs: f64,
+    /// The re-emitted trace (meta `transport = "replay"`), canonically
+    /// sorted and `verify_complete`-clean.
+    pub trace: Trace,
+}
+
+impl ReplayRun {
+    /// Fraction of total step time spent blocked on remote features.
+    pub fn fetch_blocked_ratio(&self) -> f64 {
+        if self.step_vsecs > 0.0 {
+            self.fetch_blocked_vsecs / self.step_vsecs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Re-drive the recorded demand under the recorded config with
+/// `overrides` applied.
+pub fn replay(setup: &ReplaySetup, overrides: &Overrides) -> Result<ReplayRun> {
+    let cfg = overrides.apply(&setup.cfg);
+    let offline = setup.offline_for(&cfg);
+    let d = engine::drive(&cfg, &setup.ds, &setup.part, &setup.demands, offline)?;
+    let mut wire = WireStats::default();
+    for w in &d.wire {
+        wire.merge(w);
+    }
+    // Barrier-synchronized epochs: trainer 0's series is the run-level
+    // series, exactly as the cluster orchestrator aggregates it.
+    let epoch_times = d
+        .per_trainer
+        .first()
+        .map(|m| m.epoch_times.clone())
+        .unwrap_or_default();
+    let experiment = ExperimentResult::aggregate(cfg.controller.label(), d.per_trainer, epoch_times);
+    let mut trace = Trace::new(TraceMeta {
+        label: cfg.controller.label(),
+        seed: cfg.seed,
+        transport: "replay".to_string(),
+        compute: "emulated".to_string(),
+        config: crate::config::to_toml(&cfg)?,
+    });
+    trace.events = d.events;
+    trace.sort_canonical();
+    Ok(ReplayRun {
+        cfg,
+        experiment,
+        wire,
+        servers: d.servers,
+        rounds: d.rounds,
+        fetch_blocked_vsecs: d.exposed_vsecs,
+        step_vsecs: d.step_vsecs,
+        trace,
+    })
+}
+
+/// Bit-identity check: replay the same config and diff the re-emitted
+/// virtual streams against the original trace.
+pub fn check(setup: &ReplaySetup, original: &Trace) -> Result<(ReplayRun, DiffReport)> {
+    let run = replay(setup, &Overrides::default())?;
+    let report = diff(original, &run.trace);
+    Ok((run, report))
+}
+
+/// A controller × buffer grid for `rudder replay sweep`, with optional
+/// chunk-geometry overrides applied to every cell.  Empty axes mean
+/// "keep the recorded value".
+#[derive(Debug, Clone, Default)]
+pub struct SweepSpec {
+    pub controllers: Vec<ControllerSpec>,
+    pub buffers: Vec<f64>,
+    pub chunk_rows: Option<usize>,
+    pub chunk_cache_bytes: Option<u64>,
+}
+
+/// Replay every grid cell in one process (the dataset, partition, and
+/// demand extraction are shared across all cells).
+pub fn sweep(setup: &ReplaySetup, spec: &SweepSpec) -> Result<Vec<ReplayRun>> {
+    let controllers: Vec<Option<ControllerSpec>> = if spec.controllers.is_empty() {
+        vec![None]
+    } else {
+        spec.controllers.iter().cloned().map(Some).collect()
+    };
+    let buffers: Vec<Option<f64>> = if spec.buffers.is_empty() {
+        vec![None]
+    } else {
+        spec.buffers.iter().copied().map(Some).collect()
+    };
+    let mut out = Vec::with_capacity(controllers.len() * buffers.len());
+    for c in &controllers {
+        for b in &buffers {
+            let ov = Overrides {
+                controller: c.clone(),
+                buffer_pct: *b,
+                chunk_rows: spec.chunk_rows,
+                chunk_cache_bytes: spec.chunk_cache_bytes,
+            };
+            out.push(replay(setup, &ov)?);
+        }
+    }
+    Ok(out)
+}
+
+fn json_u64(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// One variant's row of the what-if report: the config knobs that
+/// identify it plus every replayed outcome metric.
+pub fn variant_json(run: &ReplayRun) -> Json {
+    let w = &run.wire;
+    let cache_lookups = w.chunks_hit + w.chunks_fetched;
+    let cache_hit_pct = if cache_lookups > 0 {
+        w.chunks_hit as f64 / cache_lookups as f64 * 100.0
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("controller", Json::str(run.cfg.controller.spec())),
+        ("label", Json::str(&run.experiment.label)),
+        ("buffer_pct", Json::num(run.cfg.buffer_pct)),
+        ("chunk_rows", json_u64(run.cfg.chunk_rows as u64)),
+        ("chunk_cache_bytes", json_u64(run.cfg.chunk_cache_bytes)),
+        ("virtual_epoch_secs", Json::num(run.experiment.mean_epoch_time)),
+        ("mean_hits_pct", Json::num(run.experiment.mean_hits_pct)),
+        ("steady_hits_pct", Json::num(run.experiment.steady_hits_pct)),
+        ("fetched_nodes", json_u64(run.experiment.total_comm_nodes)),
+        ("payload_bytes", json_u64(run.experiment.total_comm_bytes)),
+        ("fetch_blocked_ratio", Json::num(run.fetch_blocked_ratio())),
+        ("allreduce_rounds", json_u64(run.rounds)),
+        (
+            "wire",
+            Json::obj(vec![
+                ("req_frames", json_u64(w.req_frames)),
+                ("req_bytes", json_u64(w.req_bytes)),
+                ("resp_frames", json_u64(w.resp_frames)),
+                ("resp_bytes", json_u64(w.resp_bytes)),
+                ("nodes_requested", json_u64(w.nodes_requested)),
+                ("nodes_deduped", json_u64(w.nodes_deduped)),
+                ("nodes_received", json_u64(w.nodes_received)),
+                ("chunks_hit", json_u64(w.chunks_hit)),
+                ("chunks_fetched", json_u64(w.chunks_fetched)),
+                ("cache_hit_pct", Json::num(cache_hit_pct)),
+                ("bytes_saved_cache", json_u64(w.bytes_saved_cache)),
+            ]),
+        ),
+    ])
+}
+
+/// The full `rudder-replay-whatif/v1` document: trace provenance, the
+/// same-config baseline, and one entry per what-if variant.  Key order is
+/// deterministic (sorted maps) and every number is shortest-round-trip,
+/// so the same trace + grid yields byte-identical output.
+pub fn whatif_json(meta: &TraceMeta, baseline: &ReplayRun, variants: &[ReplayRun]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str("rudder-replay-whatif/v1")),
+        (
+            "source",
+            Json::obj(vec![
+                ("label", Json::str(&meta.label)),
+                ("seed", json_u64(meta.seed)),
+                ("transport", Json::str(&meta.transport)),
+                ("compute", Json::str(&meta.compute)),
+            ]),
+        ),
+        ("baseline", variant_json(baseline)),
+        ("variants", Json::Arr(variants.iter().map(variant_json).collect())),
+    ])
+}

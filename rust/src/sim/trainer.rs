@@ -82,6 +82,71 @@ pub struct FetchPlan {
     /// [`Trainer::capture_minibatch`] is set: the cluster runtime's
     /// measured mode replays it through the real [`SageRunner`].
     pub minibatch: Option<crate::sampler::Minibatch>,
+    /// Target-node count of this minibatch (trace capture / replay).
+    pub targets: u64,
+    /// Total sampled-node count of this minibatch (trace capture / replay).
+    pub sampled: u64,
+    /// Fetch-blocked time of this step: the part of the prefetch path
+    /// (`t_sample + t_comm`) the previous minibatch's compute could not
+    /// hide (the whole path for the no-prefetch baseline).
+    pub t_exposed: f64,
+}
+
+/// One recorded minibatch demand — the payload of a
+/// [`crate::trace::EventKind::SampleDemand`] event, fed back into
+/// [`Trainer::step_minibatch`] by [`crate::replay`] in place of live
+/// sampling.
+#[derive(Debug, Clone, Default)]
+pub struct DemandRecord {
+    pub targets: u64,
+    pub sampled: u64,
+    pub unique_remote: Vec<u32>,
+}
+
+/// Replay-sourced demand for one trainer: records indexed by
+/// `epoch * max_mb_per_epoch + mb`; `None` marks a round this trainer sat
+/// out (short partition).
+#[derive(Debug, Clone, Default)]
+pub struct DemandSource {
+    pub max_mb_per_epoch: usize,
+    pub records: Vec<Option<DemandRecord>>,
+}
+
+impl DemandSource {
+    pub fn get(&self, epoch: usize, mb: usize) -> Option<&DemandRecord> {
+        self.records.get(epoch * self.max_mb_per_epoch + mb).and_then(|r| r.as_ref())
+    }
+}
+
+/// Where one minibatch's demand came from: live seed-driven sampling, or
+/// a replayed [`DemandRecord`].  Both expose the same three quantities
+/// the state machine consumes.
+enum Demand {
+    Sampled(crate::sampler::Minibatch),
+    Replayed(DemandRecord),
+}
+
+impl Demand {
+    fn targets_len(&self) -> usize {
+        match self {
+            Demand::Sampled(m) => m.targets.len(),
+            Demand::Replayed(r) => usize::try_from(r.targets).unwrap_or(usize::MAX),
+        }
+    }
+
+    fn num_sampled(&self) -> u64 {
+        match self {
+            Demand::Sampled(m) => m.num_sampled() as u64,
+            Demand::Replayed(r) => r.sampled,
+        }
+    }
+
+    fn unique_remote(&self) -> &[u32] {
+        match self {
+            Demand::Sampled(m) => &m.unique_remote,
+            Demand::Replayed(r) => &r.unique_remote,
+        }
+    }
 }
 
 /// Immutable per-run context shared by all trainers.
@@ -205,6 +270,10 @@ pub struct Trainer {
     /// Also leave the sampled minibatch in the fetch plan (measured-compute
     /// consumers).  Off by default: the clone is pure overhead otherwise.
     pub capture_minibatch: bool,
+    /// When armed, minibatch demand comes from a recorded trace instead of
+    /// the live sampler ([`crate::replay`]).  The sampler is never invoked;
+    /// the controller/buffer/cost machinery runs unchanged.
+    pub demand: Option<DemandSource>,
     pub halo2_len: usize,
     prev_t_ddp: f64,
     global_mb: u64,
@@ -238,6 +307,7 @@ impl Trainer {
             trace: None,
             fetch_plan: None,
             capture_minibatch: false,
+            demand: None,
             halo2_len,
             prev_t_ddp: 0.0,
             global_mb: 0,
@@ -293,17 +363,25 @@ impl Trainer {
         mb: usize,
         epoch_order: &[u32],
     ) -> bool {
-        let mbatch = self.sampler.sample(&ctx.ds.csr, ctx.part, epoch_order, epoch, mb);
-        if mbatch.targets.is_empty() {
-            return false;
-        }
+        let demand = if self.demand.is_some() {
+            match self.demand.as_ref().and_then(|s| s.get(epoch, mb)).cloned() {
+                Some(rec) => Demand::Replayed(rec),
+                None => return false,
+            }
+        } else {
+            let mbatch = self.sampler.sample(&ctx.ds.csr, ctx.part, epoch_order, epoch, mb);
+            if mbatch.targets.is_empty() {
+                return false;
+            }
+            Demand::Sampled(mbatch)
+        };
         self.global_mb += 1;
         let fb = feat_bytes(ctx.ds.spec.feat_dim);
         let fb_cost = fb as f64 * REPLACE_BYTE_COST;
-        let t_sample = SAMPLE_COST_PER_NODE * mbatch.num_sampled() as f64;
+        let t_sample = SAMPLE_COST_PER_NODE * demand.num_sampled() as f64;
 
         // --- prefetcher: buffer lookup ---------------------------------
-        let lookup = self.buffer.lookup(&mbatch.unique_remote);
+        let lookup = self.buffer.lookup(demand.unique_remote());
         let hits = lookup.hits_pct();
         self.tracker.push_hits(hits);
 
@@ -412,27 +490,43 @@ impl Trainer {
         let comm_bytes = ctx.net.fetch_bytes(fetch_nodes, fb);
 
         // --- training (T_DDP) -------------------------------------------
-        let t_ddp = if let Some(runner) = self.runner.as_mut() {
-            match runner.train_step(&mbatch, ctx.ds.feature_seed, &ctx.ds.labels) {
-                Ok((_loss, dt)) => dt,
-                Err(e) => {
-                    crate::log_info!("runtime train step failed ({e}); falling back to model");
-                    ctx.compute.step_time(mbatch.targets.len())
+        // Replayed demand carries no node lists for the runner; replay
+        // never arms one, so the analytic model path is always taken.
+        let t_ddp = match (self.runner.as_mut(), &demand) {
+            (Some(runner), Demand::Sampled(mbatch)) => {
+                match runner.train_step(mbatch, ctx.ds.feature_seed, &ctx.ds.labels) {
+                    Ok((_loss, dt)) => dt,
+                    Err(e) => {
+                        crate::log_info!("runtime train step failed ({e}); falling back to model");
+                        ctx.compute.step_time(demand.targets_len())
+                    }
                 }
             }
-        } else {
-            ctx.compute.step_time(mbatch.targets.len())
+            _ => ctx.compute.step_time(demand.targets_len()),
+        };
+
+        // --- fetch-blocked exposure (§4.5.3) ----------------------------
+        let prefetch_path = t_sample + t_comm;
+        let t_exposed = match &self.controller {
+            Controller::NoPrefetch => prefetch_path,
+            _ => (prefetch_path - self.prev_t_ddp).max(0.0),
         };
 
         // --- cluster I/O choreography (real-runtime consumers) ----------
         if let Some(plan) = self.fetch_plan.as_mut() {
-            plan.unique_remote.clone_from(&mbatch.unique_remote);
+            plan.unique_remote.clear();
+            plan.unique_remote.extend_from_slice(demand.unique_remote());
             plan.missed.clone_from(&lookup.missed_nodes);
             plan.admitted.clone_from(&replace_out.fetched_nodes);
             plan.evicted.clone_from(&replace_out.evicted_nodes);
             plan.t_ddp = t_ddp;
+            plan.targets = demand.targets_len() as u64;
+            plan.sampled = demand.num_sampled();
+            plan.t_exposed = t_exposed;
             if self.capture_minibatch {
-                plan.minibatch = Some(mbatch.clone());
+                if let Demand::Sampled(mbatch) = &demand {
+                    plan.minibatch = Some(mbatch.clone());
+                }
             }
         }
 
@@ -483,13 +577,12 @@ impl Trainer {
         }
 
         // --- compose step time (§4.5.3) ---------------------------------
-        let prefetch_path = t_sample + t_comm;
+        // `t_exposed` above is the whole prefetch path for the no-prefetch
+        // baseline (fully serialized) and only the unhidden excess
+        // otherwise, so both arms compose the same way.
         let step_time = match &self.controller {
-            Controller::NoPrefetch => prefetch_path + t_ddp,
-            _ => {
-                let exposed = (prefetch_path - self.prev_t_ddp).max(0.0);
-                t_ddp + exposed + t_replace + sync_stall + finetune_overhead
-            }
+            Controller::NoPrefetch => t_exposed + t_ddp,
+            _ => t_ddp + t_exposed + t_replace + sync_stall + finetune_overhead,
         };
         self.prev_t_ddp = t_ddp;
         self.clock += step_time;
@@ -506,7 +599,7 @@ impl Trainer {
             hits: lookup.hits as u64,
             comm_nodes: fetch_nodes as u64,
             comm_bytes,
-            unique_remote: mbatch.unique_remote.len() as u64,
+            unique_remote: demand.unique_remote().len() as u64,
             buffer_occupancy: self.buffer.occupancy(),
             step_time,
             replaced,

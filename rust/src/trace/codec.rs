@@ -27,8 +27,9 @@ pub const VERSION: u32 = 1;
 pub const JSONL_FORMAT: &str = "rudder-trace/v1";
 
 /// Sanity cap on one encoded event (a corrupt length prefix must not
-/// drive a huge allocation).
-const MAX_EVENT_BYTES: u32 = 1 << 16;
+/// drive a huge allocation).  Large enough for a [`EventKind::SampleDemand`]
+/// want-set of ~4M node ids; still small enough to bound a bad alloc.
+const MAX_EVENT_BYTES: u32 = 1 << 24;
 /// Integer fields must fit in an IEEE double exactly.
 const MAX_SAFE_INT: u64 = 1 << 53;
 
@@ -51,7 +52,7 @@ fn get_str(r: &mut Reader<'_>) -> Result<String> {
     Ok(std::str::from_utf8(b).map_err(|_| crate::err!("trace string not utf-8"))?.to_string())
 }
 
-fn encode_kind(out: &mut Vec<u8>, k: &EventKind) {
+fn encode_kind(out: &mut Vec<u8>, k: &EventKind) -> Result<()> {
     out.push(k.tag());
     match *k {
         EventKind::MinibatchBegin { epoch, mb } => {
@@ -126,7 +127,18 @@ fn encode_kind(out: &mut Vec<u8>, k: &EventKind) {
             put_u64(out, chunks);
             put_u64(out, nodes);
         }
+        EventKind::SampleDemand { epoch, mb, targets, sampled, ref remote } => {
+            put_u32(out, epoch);
+            put_u32(out, mb);
+            put_u64(out, targets);
+            put_u64(out, sampled);
+            put_u32(out, len_u32(remote.len(), "sample_demand remote set")?);
+            for &n in remote {
+                put_u32(out, n);
+            }
+        }
     }
+    Ok(())
 }
 
 fn decode_kind(r: &mut Reader<'_>) -> Result<EventKind> {
@@ -163,6 +175,19 @@ fn decode_kind(r: &mut Reader<'_>) -> Result<EventKind> {
         15 => EventKind::RoleEnd { emitted: r.u64()? },
         16 => EventKind::CacheHit { owner: r.u32()?, nodes: r.u64()? },
         17 => EventKind::CacheMiss { owner: r.u32()?, chunks: r.u64()?, nodes: r.u64()? },
+        18 => {
+            let epoch = r.u32()?;
+            let mb = r.u32()?;
+            let targets = r.u64()?;
+            let sampled = r.u64()?;
+            let n = r.u32()?;
+            crate::ensure!(n <= MAX_EVENT_BYTES / 4, "sample_demand remote set too large ({n})");
+            let mut remote = Vec::with_capacity(n as usize);
+            for _ in 0..n {
+                remote.push(r.u32()?);
+            }
+            EventKind::SampleDemand { epoch, mb, targets, sampled, remote }
+        }
         t => crate::bail!("unknown trace event tag {t}"),
     })
 }
@@ -178,7 +203,7 @@ pub(crate) fn put_event(out: &mut Vec<u8>, e: &TraceEvent) -> Result<()> {
     put_u64(&mut buf, e.seq);
     put_f64(&mut buf, e.vclock);
     put_f64(&mut buf, e.wall);
-    encode_kind(&mut buf, &e.kind);
+    encode_kind(&mut buf, &e.kind)?;
     put_u32(out, len_u32(buf.len(), "trace event")?);
     out.extend_from_slice(&buf);
     Ok(())
@@ -224,6 +249,7 @@ pub fn encode_binary(t: &Trace) -> Result<Vec<u8>> {
     put_u64(&mut out, t.meta.seed);
     put_str(&mut out, &t.meta.transport)?;
     put_str(&mut out, &t.meta.compute)?;
+    put_str(&mut out, &t.meta.config)?;
     put_u64(&mut out, t.events.len() as u64);
     for e in &t.events {
         put_event(&mut out, e)?;
@@ -244,6 +270,7 @@ pub fn decode_binary(bytes: &[u8]) -> Result<Trace> {
         seed: r.u64()?,
         transport: get_str(&mut r)?,
         compute: get_str(&mut r)?,
+        config: get_str(&mut r)?,
     };
     let count = r.u64()?;
     let mut events = Vec::new();
@@ -325,6 +352,11 @@ fn check_domain(e: &TraceEvent) -> Result<()> {
             int(chunks, "chunks")?;
             int(nodes, "nodes")?;
         }
+        EventKind::SampleDemand { targets, sampled, ref remote, .. } => {
+            int(targets, "targets")?;
+            int(sampled, "sampled")?;
+            int(remote.len() as u64, "remote set size")?;
+        }
         EventKind::MinibatchBegin { .. } | EventKind::ChannelClose { .. } => {}
     }
     Ok(())
@@ -399,6 +431,13 @@ fn kind_fields(k: &EventKind) -> Vec<(&'static str, Json)> {
         EventKind::CacheMiss { owner, chunks, nodes } => {
             vec![("owner", ju(owner as u64)), ("chunks", ju(chunks)), ("nodes", ju(nodes))]
         }
+        EventKind::SampleDemand { epoch, mb, targets, sampled, ref remote } => vec![
+            ("epoch", ju(epoch as u64)),
+            ("mb", ju(mb as u64)),
+            ("targets", ju(targets)),
+            ("sampled", ju(sampled)),
+            ("remote", Json::Arr(remote.iter().map(|&n| ju(n as u64)).collect())),
+        ],
     }
 }
 
@@ -411,6 +450,7 @@ pub fn to_jsonl(t: &Trace) -> Result<String> {
         ("seed", ju(t.meta.seed)),
         ("transport", Json::str(t.meta.transport.clone())),
         ("compute", Json::str(t.meta.compute.clone())),
+        ("config", Json::str(t.meta.config.clone())),
         ("events", ju(t.events.len() as u64)),
     ]);
     out.push_str(&header.to_string_compact());
@@ -462,6 +502,27 @@ fn want_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
     j.get(key)
         .and_then(Json::as_str)
         .ok_or_else(|| crate::err!("trace jsonl: missing string field '{key}'"))
+}
+
+/// An array of trace integers that each fit in a `u32` (node ids).
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)] // ensure below pins the domain
+fn want_u32_arr(j: &Json, key: &str) -> Result<Vec<u32>> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| crate::err!("trace jsonl: missing array field '{key}'"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| crate::err!("trace jsonl: non-numeric entry in '{key}'"))?;
+        crate::ensure!(
+            n >= 0.0 && n.fract() == 0.0 && n <= f64::from(u32::MAX),
+            "trace jsonl: entry {n} in '{key}' is not a u32"
+        );
+        out.push(n as u32);
+    }
+    Ok(out)
 }
 
 fn kind_from_json(name: &str, j: &Json) -> Result<EventKind> {
@@ -536,6 +597,13 @@ fn kind_from_json(name: &str, j: &Json) -> Result<EventKind> {
             chunks: want_u64(j, "chunks")?,
             nodes: want_u64(j, "nodes")?,
         },
+        "sample_demand" => EventKind::SampleDemand {
+            epoch: want_u32(j, "epoch")?,
+            mb: want_u32(j, "mb")?,
+            targets: want_u64(j, "targets")?,
+            sampled: want_u64(j, "sampled")?,
+            remote: want_u32_arr(j, "remote")?,
+        },
         other => crate::bail!("trace jsonl: unknown event kind '{other}'"),
     })
 }
@@ -555,6 +623,7 @@ pub fn from_jsonl(text: &str) -> Result<Trace> {
         seed: want_u64(&h, "seed")?,
         transport: want_str(&h, "transport")?.to_string(),
         compute: want_str(&h, "compute")?.to_string(),
+        config: want_str(&h, "config")?.to_string(),
     };
     let declared = want_u64(&h, "events")?;
     let mut events = Vec::new();
@@ -595,6 +664,7 @@ mod tests {
             seed: 7,
             transport: "channel".into(),
             compute: "emulated".into(),
+            config: "seed = 7\n".into(),
         };
         let ev = |role, id, seq, vclock, kind| TraceEvent {
             role,

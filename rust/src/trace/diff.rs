@@ -57,6 +57,21 @@ pub fn canonical(e: &TraceEvent) -> Option<String> {
         EventKind::CacheMiss { owner, chunks, nodes } => {
             format!("owner={owner} chunks={chunks} nodes={nodes}")
         }
+        EventKind::SampleDemand { epoch, mb, targets, sampled, ref remote } => {
+            // The want-set itself can be thousands of ids; project it to
+            // its length + order-sensitive FNV-1a digest, which is still
+            // sensitive to any single-id or single-position change.
+            let mut bytes = Vec::with_capacity(remote.len() * 4);
+            for n in remote {
+                bytes.extend_from_slice(&n.to_le_bytes());
+            }
+            let digest = crate::util::fasthash::digest_bytes(&bytes);
+            format!(
+                "epoch={epoch} mb={mb} targets={targets} sampled={sampled} \
+                 remote_len={} remote_fnv={digest:016x}",
+                remote.len()
+            )
+        }
         EventKind::BatchFlush { .. }
         | EventKind::LinkFlush { .. }
         | EventKind::ChannelClose { .. }

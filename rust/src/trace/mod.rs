@@ -28,6 +28,16 @@
 //! both codecs (JSON numbers are IEEE doubles; the writer emits shortest
 //! round-trip decimals).
 //!
+//! Replay flow ([`crate::replay`]): traces are also the *input* of the
+//! offline policy evaluator.  [`TraceMeta::config`] embeds the full run
+//! config (TOML), and each trainer stream carries one
+//! [`EventKind::SampleDemand`] per active minibatch — the sampled demand
+//! (target count, sampled-node count, remote want-set) that
+//! `rudder replay` feeds back into the sim state machine to re-drive the
+//! run without a cluster, either under the same config (bit-identity
+//! check via [`diff`]) or a what-if variant (different controller /
+//! buffer / chunk-cache settings).
+//!
 //! These invariants are machine-enforced: `rudder audit`
 //! ([`crate::audit`]) rejects wall clocks feeding virtual fields, bare
 //! narrowing casts in [`codec`], and magic literals outside
@@ -142,6 +152,11 @@ pub enum EventKind {
     /// Prefetcher: `nodes` of one fetch command missed the chunk cache for
     /// `owner`, admitting `chunks` new chunks (virtual, diff-gated).
     CacheMiss { owner: u32, chunks: u64, nodes: u64 },
+    /// Trainer: the sampled demand of one active minibatch — target
+    /// count, total sampled nodes, and the deduplicated remote want-set.
+    /// This is the record [`crate::replay`] re-drives the sim from;
+    /// sampling is seed-deterministic, so it is virtual and diff-gated.
+    SampleDemand { epoch: u32, mb: u32, targets: u64, sampled: u64, remote: Vec<u32> },
 }
 
 impl EventKind {
@@ -164,6 +179,7 @@ impl EventKind {
             EventKind::RoleEnd { .. } => 15,
             EventKind::CacheHit { .. } => 16,
             EventKind::CacheMiss { .. } => 17,
+            EventKind::SampleDemand { .. } => 18,
         }
     }
 
@@ -186,6 +202,7 @@ impl EventKind {
             EventKind::RoleEnd { .. } => "role_end",
             EventKind::CacheHit { .. } => "cache_hit",
             EventKind::CacheMiss { .. } => "cache_miss",
+            EventKind::SampleDemand { .. } => "sample_demand",
         }
     }
 
@@ -294,6 +311,10 @@ pub struct TraceMeta {
     pub seed: u64,
     pub transport: String,
     pub compute: String,
+    /// The full run config as TOML ([`crate::config::to_toml`]), so a
+    /// trace is a self-contained replay input.  Empty when the recorder
+    /// predates replay or the producer had no config to stamp.
+    pub config: String,
 }
 
 /// A complete (possibly merged) run trace.

@@ -45,6 +45,10 @@ fn wall_clock_bad_fires() {
     assert_fires("src/cluster/prefetch.rs", src, "wall-clock-in-virtual-path", 2);
     let st = "fn f() { let t = SystemTime::now(); }\n";
     assert_fires("src/trace/mod.rs", st, "wall-clock-in-virtual-path", 1);
+    // The replay engine re-emits virtual streams and must never consult
+    // wall time (a wall-clocked emitter would break bit-identity).
+    assert_fires("src/replay/engine.rs", src, "wall-clock-in-virtual-path", 2);
+    assert_fires("src/replay/mod.rs", st, "wall-clock-in-virtual-path", 1);
 }
 
 #[test]

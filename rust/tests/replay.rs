@@ -1,0 +1,191 @@
+//! Trace-driven replay (`src/replay/`): same-config re-drives must be
+//! bit-identical to the recording on every in-process transport (with and
+//! without the chunk cache), what-if sweeps must be deterministic down to
+//! the JSON bytes, and malformed traces must be rejected cleanly.
+
+use std::sync::Arc;
+
+use rudder::cluster::{parity_check, run_cluster_on, ClusterConfig, ClusterResult, Transport};
+use rudder::replay::{self, Overrides, SweepSpec};
+use rudder::sim::{build_cluster, ControllerSpec, RunConfig};
+use rudder::trace::{EventKind, Role, Trace, TraceEvent, TraceMeta};
+
+/// Small 2-trainer config (0 time-scale: no emulation sleeps).
+fn quick(controller: &str, epochs: usize) -> RunConfig {
+    RunConfig {
+        dataset: "ogbn-arxiv".into(),
+        scale: 0.08,
+        seed: 7,
+        num_trainers: 2,
+        batch_size: 32,
+        fanout1: 5,
+        fanout2: 5,
+        buffer_pct: 0.25,
+        epochs,
+        controller: ControllerSpec::parse(controller).unwrap(),
+        ..Default::default()
+    }
+}
+
+/// Run the live cluster with the flight recorder on; return run + trace.
+fn record(cfg: &RunConfig, transport: Transport) -> (ClusterResult, Trace) {
+    let (ds, part) = build_cluster(cfg).unwrap();
+    let mut ccfg = ClusterConfig::new(cfg.clone());
+    ccfg.transport = transport;
+    ccfg.trace = true;
+    let r = run_cluster_on(Arc::new(ds), Arc::new(part), &ccfg, None).unwrap();
+    let trace = r.trace.clone().expect("trace requested");
+    (r, trace)
+}
+
+/// Record on `transport`, replay under the same config, and require the
+/// re-emitted virtual streams (and the experiment counters) to match the
+/// live run exactly.
+fn identity_roundtrip(cfg: &RunConfig, transport: Transport) {
+    let (live, trace) = record(cfg, transport);
+    assert!(!trace.meta.config.is_empty(), "recorder must embed the config");
+    let setup = replay::load(&trace).unwrap();
+    let (run, report) = replay::check(&setup, &trace).unwrap();
+    assert!(
+        report.identical(),
+        "replay diverged from the {} recording:\n{}",
+        transport.name(),
+        report.render()
+    );
+    run.trace.verify_complete().unwrap();
+    parity_check(&live.experiment, &run.experiment).unwrap();
+}
+
+#[test]
+fn check_bit_identity_channel() {
+    // Two epochs so the epoch-boundary bookkeeping is exercised too.
+    identity_roundtrip(&quick("massivegnn:8", 2), Transport::Channel);
+}
+
+#[test]
+fn check_bit_identity_tcp() {
+    identity_roundtrip(&quick("llm:qwen-1.5b", 1), Transport::Tcp);
+}
+
+#[test]
+fn check_bit_identity_event() {
+    identity_roundtrip(&quick("llm:qwen-1.5b", 1), Transport::Event);
+}
+
+#[test]
+fn check_bit_identity_with_chunk_cache() {
+    let mut cfg = quick("massivegnn:8", 1);
+    cfg.chunk_rows = 8;
+    cfg.chunk_cache_bytes = 1 << 20;
+    identity_roundtrip(&cfg, Transport::Channel);
+    identity_roundtrip(&cfg, Transport::Event);
+}
+
+#[test]
+fn sweep_is_deterministic_to_the_byte() {
+    let (_, trace) = record(&quick("massivegnn:8", 1), Transport::Channel);
+    let setup = replay::load(&trace).unwrap();
+    let spec = SweepSpec {
+        controllers: vec![
+            ControllerSpec::parse("fixed").unwrap(),
+            ControllerSpec::parse("none").unwrap(),
+        ],
+        buffers: vec![0.05, 0.25],
+        chunk_rows: None,
+        chunk_cache_bytes: None,
+    };
+    let render = || {
+        let baseline = replay::replay(&setup, &Overrides::default()).unwrap();
+        let runs = replay::sweep(&setup, &spec).unwrap();
+        assert_eq!(runs.len(), 4, "2 controllers x 2 buffers");
+        replay::whatif_json(&setup.meta, &baseline, &runs).to_string_pretty()
+    };
+    let a = render();
+    let b = render();
+    assert_eq!(a, b, "same trace + same grid must render byte-identical JSON");
+    assert!(a.contains("rudder-replay-whatif/v1"));
+}
+
+#[test]
+fn whatif_overrides_change_the_outcome() {
+    let (_, trace) = record(&quick("massivegnn:8", 1), Transport::Channel);
+    let setup = replay::load(&trace).unwrap();
+    let baseline = replay::replay(&setup, &Overrides::default()).unwrap();
+    // Disabling prefetch re-fetches every remote feature on demand.
+    let off = Overrides {
+        controller: Some(ControllerSpec::parse("none").unwrap()),
+        ..Overrides::default()
+    };
+    let off_run = replay::replay(&setup, &off).unwrap();
+    assert_ne!(
+        baseline.experiment.total_comm_nodes, off_run.experiment.total_comm_nodes,
+        "a controller swap must re-drive traffic, not echo the recording"
+    );
+    // Enabling the chunk cache rewrites the wire protocol.
+    let cached = Overrides {
+        chunk_rows: Some(8),
+        chunk_cache_bytes: Some(1 << 20),
+        ..Overrides::default()
+    };
+    let cached_run = replay::replay(&setup, &cached).unwrap();
+    assert!(cached_run.wire.chunks_fetched > 0, "chunk protocol must engage");
+    assert_ne!(baseline.wire.resp_bytes, cached_run.wire.resp_bytes);
+}
+
+#[test]
+fn truncated_and_corrupt_traces_rejected_cleanly() {
+    let (_, trace) = record(&quick("massivegnn:8", 1), Transport::Channel);
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("rudder_replay_trunc_{}.trace", std::process::id()));
+    trace.write_file(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // Chop the binary mid-stream: must error, never panic.
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(Trace::read_file(&path).is_err(), "truncated trace must not parse");
+    // Arbitrary garbage likewise.
+    std::fs::write(&path, b"definitely not a trace \x00\xff\x13").unwrap();
+    assert!(Trace::read_file(&path).is_err(), "garbage must not parse");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn configless_trace_rejected() {
+    let (_, trace) = record(&quick("massivegnn:8", 1), Transport::Channel);
+    let mut stripped = trace.clone();
+    stripped.meta.config.clear();
+    let err = replay::load(&stripped).unwrap_err().to_string();
+    assert!(err.contains("config"), "unexpected error: {err}");
+}
+
+#[test]
+fn demandless_trace_rejected() {
+    // A structurally complete trace (gapless stream, proper RoleEnd) that
+    // simply predates demand recording must fail with a pointed message.
+    let cfg = quick("massivegnn:8", 1);
+    let mut t = Trace::new(TraceMeta {
+        label: cfg.controller.label(),
+        seed: cfg.seed,
+        transport: "channel".into(),
+        compute: "emulated".into(),
+        config: rudder::config::to_toml(&cfg).unwrap(),
+    });
+    t.events.push(TraceEvent {
+        role: Role::Trainer,
+        id: 0,
+        seq: 0,
+        vclock: 0.0,
+        wall: 0.0,
+        kind: EventKind::RoleEnd { emitted: 0 },
+    });
+    let err = replay::load(&t).unwrap_err().to_string();
+    assert!(err.contains("sample_demand"), "unexpected error: {err}");
+}
+
+#[test]
+fn measured_trace_flagged() {
+    // Only the flag matters here: is_measured() keys off the meta stamp.
+    let (_, mut trace) = record(&quick("massivegnn:8", 1), Transport::Channel);
+    trace.meta.compute = "measured".into();
+    let setup = replay::load(&trace).unwrap();
+    assert!(setup.is_measured());
+}

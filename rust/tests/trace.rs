@@ -22,7 +22,7 @@ fn arb_kind(g: &mut G) -> EventKind {
         }
     };
     let sec = |g: &mut G| -> f64 { g.f64(0.0, 1e6) };
-    match g.usize(0, 14) {
+    match g.usize(0, 15) {
         0 => EventKind::MinibatchBegin { epoch: g.u64(0, 100) as u32, mb: g.u64(0, 5000) as u32 },
         1 => EventKind::MinibatchEnd {
             epoch: g.u64(0, 100) as u32,
@@ -55,6 +55,16 @@ fn arb_kind(g: &mut G) -> EventKind {
         },
         12 => EventKind::LinkFlush { conn: g.u64(0, 32) as u32, frames: int(g), bytes: int(g) },
         13 => EventKind::ChannelClose { conn: g.u64(0, 32) as u32, channel: g.u64(0, 32) as u32 },
+        14 => EventKind::SampleDemand {
+            epoch: g.u64(0, 100) as u32,
+            mb: g.u64(0, 5000) as u32,
+            targets: int(g),
+            sampled: int(g),
+            remote: {
+                let n = g.usize(0, 48);
+                (0..n).map(|_| g.u64(0, u32::MAX as u64) as u32).collect()
+            },
+        },
         _ => EventKind::RoleEnd { emitted: int(g) },
     }
 }
@@ -65,6 +75,7 @@ fn arb_trace(g: &mut G) -> Trace {
         seed: g.u64(0, MAX_SAFE),
         transport: g.pick(&["channel", "tcp", "event"]).to_string(),
         compute: g.pick(&["emulated", "measured"]).to_string(),
+        config: if g.bool() { format!("seed = {}\n", g.u64(0, 999)) } else { String::new() },
     };
     let mut t = Trace::new(meta);
     t.events = g.vec(64, |g| TraceEvent {
@@ -198,6 +209,7 @@ fn truncated_jsonl_fails_cleanly() {
         seed: 7,
         transport: "channel".into(),
         compute: "emulated".into(),
+        config: String::new(),
     };
     let mut t = Trace::new(meta);
     t.events.push(TraceEvent {
@@ -224,6 +236,7 @@ fn out_of_domain_events_are_rejected_at_encode() {
         seed: 1,
         transport: "channel".into(),
         compute: "emulated".into(),
+        config: String::new(),
     };
     let event = |kind: EventKind, vclock: f64| TraceEvent {
         role: Role::Trainer,
@@ -254,6 +267,7 @@ fn wrong_magic_and_version_are_rejected() {
         seed: 0,
         transport: "channel".into(),
         compute: "emulated".into(),
+        config: String::new(),
     });
     let mut bytes = encode_binary(&t).unwrap();
     bytes[4] = 0xFF; // version little-endian low byte
